@@ -1,0 +1,134 @@
+//! Figure 10: the pipelining effect for the fMRI workflow.
+//!
+//! The paper runs the 120-volume fMRI workflow (4 stages x 120 tasks)
+//! with and without pipelining: staged execution waits for each whole
+//! stage, so its makespan is sum_k(max_i t_ki); futures-driven pipelining
+//! overlaps stages, bounded by max_i(sum_k t_ki). With the per-task
+//! variance real shared clusters exhibit, the paper measured a 21%
+//! reduction.
+//!
+//! Part 1 reproduces the paper's regime in virtual time (120 volumes,
+//! seconds-scale tasks with realistic 0.7-1.5x variance, one processor
+//! per volume as on TeraGrid). Part 2 demonstrates the same effect live
+//! through the real engine (ms-scale sleeps).
+
+use std::sync::Arc;
+
+use gridswift::karajan::{Engine, EngineConfig, GridScheduler};
+use gridswift::metrics::plot::gantt;
+use gridswift::providers::{AppRunner, AppTask, LocalProvider, Provider};
+use gridswift::sim::driver::{Driver, Mode};
+use gridswift::sim::falkon_model::{DrpPolicy, FalkonConfig};
+use gridswift::sim::{Dag, SimTask};
+use gridswift::swiftscript::compile;
+use gridswift::util::time::secs;
+use gridswift::util::DetRng;
+
+/// fMRI-shaped DAG with realistic shared-cluster variance (0.7-1.5x).
+fn fmri_noisy(volumes: usize, seed: u64) -> Dag {
+    let mut rng = DetRng::new(seed);
+    let stages = ["reorient_y", "reorient_x", "alignlinear", "reslice"];
+    let base = [3.0, 3.0, 5.0, 4.0];
+    let mut dag = Dag::new();
+    let mut prev: Vec<Option<usize>> = vec![None; volumes];
+    for (k, stage) in stages.iter().enumerate() {
+        for slot in prev.iter_mut() {
+            // Shared-cluster service variance: broad jitter plus
+            // occasional stragglers (NFS contention, slow nodes).
+            let mut jitter = 0.7 + 0.8 * rng.f64();
+            if rng.f64() < 0.06 {
+                jitter *= 2.0;
+            }
+            let mut t = SimTask::new(stage, base[k] * jitter);
+            if let Some(p) = *slot {
+                t.deps = vec![p];
+            }
+            let id = dag.push(t);
+            *slot = Some(id);
+        }
+    }
+    dag
+}
+
+fn main() {
+    println!("== Figure 10: pipelining effect, fMRI workflow ==\n");
+
+    // ---- Part 1: paper regime (virtual time) ----
+    let volumes = 120;
+    let dag = fmri_noisy(volumes, 10);
+    let mut cfg = FalkonConfig::default();
+    cfg.drp = DrpPolicy::static_pool(volumes); // one processor per volume
+    cfg.drp.allocation_latency = 0;
+    let pipelined = Driver::new(dag.clone(), Mode::Falkon { cfg }, 10).run();
+    // Staged baseline: strict barriers between stages, same processors.
+    let staged = Driver::new(
+        dag,
+        Mode::Mpi { procs: volumes, stage_init: 0, stage_agg: 0 },
+        10,
+    )
+    .run();
+    println!("paper regime (120 volumes, 3-5s tasks, 0.7-1.5x variance):");
+    println!(
+        "  pipelined {:.1}s vs staged {:.1}s -> {:.0}% reduction (paper: 21%)",
+        pipelined.makespan_secs,
+        staged.makespan_secs,
+        (1.0 - pipelined.makespan_secs / staged.makespan_secs) * 100.0
+    );
+    println!("\nstaged stage windows (distinct start times, paper top panel):");
+    print!("{}", gantt("staged", &staged.timeline.stage_windows(), 48));
+    println!("\npipelined stage windows (overlapped, paper bottom panel):");
+    print!("{}", gantt("pipelined", &pipelined.timeline.stage_windows(), 48));
+
+    // ---- Part 2: live demonstration through the real engine ----
+    println!("\nlive engine demonstration (ms-scale):");
+    let runner: AppRunner = Arc::new(|task: &AppTask| {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in task.args.join(" ").bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10 + h % 50));
+        for f in &task.outputs {
+            if let Some(d) = f.parent() {
+                std::fs::create_dir_all(d).ok();
+            }
+            std::fs::write(f, "x").ok();
+        }
+        Ok(())
+    });
+    let wd = std::env::temp_dir().join("gridswift_fig10");
+    let _ = std::fs::remove_dir_all(&wd);
+    let input = wd.join("in");
+    std::fs::create_dir_all(&input).unwrap();
+    for i in 0..32 {
+        std::fs::write(input.join(format!("bold1_{i:04}.img")), "i").unwrap();
+        std::fs::write(input.join(format!("bold1_{i:04}.hdr")), "h").unwrap();
+    }
+    let src = gridswift::apps::fmri::workflow_source(&input, &wd.join("out"), "bold1");
+    let prog = compile(&src).unwrap();
+    let mut times = Vec::new();
+    for pipelining in [true, false] {
+        let p: Arc<dyn Provider> =
+            Arc::new(LocalProvider::new("site", 32, Arc::clone(&runner)));
+        let sched = GridScheduler::new(vec![p], None, 0, 5);
+        let engine = Engine::new(
+            EngineConfig {
+                workdir: wd.join(format!("work_{pipelining}")),
+                pipelining,
+                restart_log: None,
+            },
+            sched,
+        );
+        let t0 = std::time::Instant::now();
+        let report = engine.run(&prog).unwrap();
+        assert_eq!(report.executed, 128);
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "  real engine: pipelined {:.2}s vs staged {:.2}s ({:.0}% reduction)",
+        times[0],
+        times[1],
+        (1.0 - times[0] / times[1]) * 100.0
+    );
+    let _ = secs(0.0);
+}

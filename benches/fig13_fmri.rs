@@ -1,0 +1,124 @@
+//! Figure 13: fMRI workflow execution time for growing input sizes under
+//! GRAM+PBS per-task submission, GRAM+clustering, and Falkon (8 nodes).
+//!
+//! Task service times are calibrated from real kernel execution when
+//! artifacts are present (one reorient/alignlinear/reslice measured via
+//! PJRT); otherwise the paper's "a few seconds" defaults apply. The
+//! comparison itself runs in virtual time (a GRAM+PBS 480-volume run
+//! takes hours of simulated time).
+
+use gridswift::metrics::plot::bar_chart;
+use gridswift::metrics::Table;
+use gridswift::runtime::{self, Tensor};
+use gridswift::sim::driver::{Driver, Mode};
+use gridswift::sim::falkon_model::{DrpPolicy, FalkonConfig};
+use gridswift::sim::lrm::{GramConfig, LrmConfig};
+use gridswift::sim::Dag;
+use gridswift::util::time::secs;
+use gridswift::util::DetRng;
+
+/// Measure real per-stage kernel times (seconds) if artifacts exist.
+fn calibrate() -> [f64; 4] {
+    let dir = runtime::default_artifact_dir();
+    if !dir.join("manifest.txt").exists() || runtime::init(dir).is_err() {
+        println!("(artifacts missing: using paper-style 3-5s defaults)\n");
+        return [3.0, 3.0, 5.0, 4.0];
+    }
+    let vol = Tensor::new(
+        vec![64, 64, 24],
+        (0..64 * 64 * 24).map(|i| (i % 17) as f32).collect(),
+    );
+    let time_of = |name: &str, inputs: &[Tensor]| -> f64 {
+        runtime::execute(name, inputs).unwrap(); // warm (compile)
+        let t0 = std::time::Instant::now();
+        runtime::execute(name, inputs).unwrap();
+        t0.elapsed().as_secs_f64()
+    };
+    let r = time_of("reorient_y", std::slice::from_ref(&vol));
+    let a = time_of("alignlinear", &[vol.clone(), vol.clone()]);
+    let params = Tensor::vec(vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+    let s = time_of("reslice", &[vol, params]);
+    // The 2007 Itanium ran these in seconds; our kernels are faster, so
+    // report both and scale to the paper's regime for the queueing sim
+    // (the *ratios* between systems are overhead-dominated, not
+    // compute-dominated).
+    println!(
+        "calibrated kernel times: reorient {r:.3}s, alignlinear {a:.3}s, reslice {s:.3}s"
+    );
+    let scale = 3.0 / r.max(1e-4);
+    println!(
+        "scaling by {scale:.0}x to the paper's ANL_TG regime (reorient ~ 3s)\n"
+    );
+    [r * scale, r * scale, a * scale, s * scale]
+}
+
+fn main() {
+    println!("== Figure 13: fMRI workflow execution time ==\n");
+    let stage_secs = calibrate();
+    let volume_counts = [120usize, 240, 360, 480];
+    let mut t = Table::new(&[
+        "Volumes",
+        "Jobs",
+        "GRAM+PBS",
+        "GRAM+Clustering",
+        "Falkon(8 nodes)",
+        "reduction",
+    ]);
+    let mut bars = Vec::new();
+    for &v in &volume_counts {
+        let mk = || {
+            let mut rng = DetRng::new(13);
+            Dag::fmri(v, stage_secs, &mut rng)
+        };
+        let gram = Driver::new(
+            mk(),
+            Mode::GramLrm { lrm: LrmConfig::pbs(62), gram: GramConfig::gt2() },
+            1,
+        )
+        .run();
+        // Bundle into ~8 groups per stage wave (paper: jobs bundled into
+        // roughly 8 groups).
+        let cluster = Driver::new(
+            mk(),
+            Mode::GramCluster {
+                lrm: LrmConfig::pbs(62),
+                gram: GramConfig::gt2(),
+                bundle: v / 8,
+                window: secs(5.0),
+            },
+            1,
+        )
+        .run();
+        let mut fcfg = FalkonConfig::default();
+        fcfg.drp = DrpPolicy::static_pool(16); // 8 dual-proc nodes
+        fcfg.drp.allocation_latency = 0;
+        let falkon = Driver::new(mk(), Mode::Falkon { cfg: fcfg }, 1).run();
+        let red = (1.0 - falkon.makespan_secs / gram.makespan_secs) * 100.0;
+        t.row(&[
+            v.to_string(),
+            (4 * v).to_string(),
+            format!("{:.0}s", gram.makespan_secs),
+            format!("{:.0}s", cluster.makespan_secs),
+            format!("{:.0}s", falkon.makespan_secs),
+            format!("{red:.0}%"),
+        ]);
+        if v == 120 {
+            bars.push(("GRAM+PBS".to_string(), gram.makespan_secs));
+            bars.push(("GRAM+Clustering".to_string(), cluster.makespan_secs));
+            bars.push(("Falkon".to_string(), falkon.makespan_secs));
+        }
+    }
+    t.print();
+    println!();
+    print!("{}", bar_chart("120-volume makespan (s)", &bars, 44));
+    println!("\npaper shape checks:");
+    println!("  clustering improves GRAM by 2-4x; Falkon reduces GRAM time by up to 90%");
+    let g = bars[0].1;
+    let c = bars[1].1;
+    let f = bars[2].1;
+    println!(
+        "  ours @120 volumes: clustering {:.1}x, Falkon {:.0}% reduction",
+        g / c,
+        (1.0 - f / g) * 100.0
+    );
+}

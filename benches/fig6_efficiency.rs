@@ -1,0 +1,79 @@
+//! Figure 6: efficiency of resource usage for varying task lengths on 64
+//! processors — Falkon vs PBS vs Condor 6.7.2 vs Condor 6.9.3 (derived).
+//!
+//! Discrete-event simulation with models calibrated to the paper's
+//! measured throughputs (DESIGN.md §2). The paper's shape: Falkon ~95%
+//! at 1 s tasks and ~99% at 8 s; the LRMs are <1% at 1 s and need
+//! ~1200 s tasks for 90%.
+
+use gridswift::metrics::plot::line_chart;
+use gridswift::metrics::Table;
+use gridswift::sim::driver::fig6_point;
+
+fn main() {
+    println!("== Figure 6: resource-usage efficiency, 64 procs, 64 tasks ==\n");
+    let lengths = [
+        1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1200.0,
+        3600.0, 16384.0,
+    ];
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    let mut t = Table::new(&[
+        "Task len (s)",
+        "Falkon",
+        "PBS",
+        "Condor-6.7.2",
+        "Condor-6.9.3",
+    ]);
+    for &len in &lengths {
+        let eff = fig6_point(len, 64, 42);
+        let mut row = vec![format!("{len}")];
+        for (name, e) in &eff {
+            row.push(format!("{:.1}%", e * 100.0));
+            match series.iter_mut().find(|(n, _)| n == name) {
+                Some((_, pts)) => pts.push((len, *e)),
+                None => series.push((name.clone(), vec![(len, *e)])),
+            }
+        }
+        t.row(&row);
+    }
+    t.print();
+    let chart_series: Vec<(&str, Vec<(f64, f64)>)> = series
+        .iter()
+        .map(|(n, pts)| (n.as_str(), pts.clone()))
+        .collect();
+    println!();
+    print!(
+        "{}",
+        line_chart("efficiency vs task length (log x)", &chart_series, 60, 14, true)
+    );
+
+    // Paper checkpoints.
+    let get = |len: f64, name: &str| -> f64 {
+        fig6_point(len, 64, 42)
+            .into_iter()
+            .find(|(n, _)| n == name)
+            .unwrap()
+            .1
+    };
+    println!("\npaper checkpoints:");
+    println!(
+        "  Falkon @1s  = {:.1}%   (paper: 95%)",
+        get(1.0, "Falkon") * 100.0
+    );
+    println!(
+        "  Falkon @8s  = {:.1}%   (paper: 99%)",
+        get(8.0, "Falkon") * 100.0
+    );
+    println!(
+        "  PBS    @1s  = {:.1}%    (paper: <1%)",
+        get(1.0, "PBS") * 100.0
+    );
+    println!(
+        "  Condor @1200s = {:.1}%  (paper: ~90%)",
+        get(1200.0, "Condor-6.7.2") * 100.0
+    );
+    println!(
+        "  Condor-6.9.3 @50s = {:.1}%  (paper derived: ~90%)",
+        get(50.0, "Condor-6.9.3") * 100.0
+    );
+}

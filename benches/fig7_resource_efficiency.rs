@@ -1,0 +1,86 @@
+//! Figure 7: theoretical resource efficiency (1 M tasks) at three site
+//! scales for varying dispatcher throughputs — the analytic model the
+//! paper uses to motivate high dispatch rates.
+
+use gridswift::metrics::plot::line_chart;
+use gridswift::metrics::stats::dispatch_limited_efficiency;
+use gridswift::metrics::Table;
+
+fn main() {
+    println!("== Figure 7: resource efficiency vs task length & throughput ==\n");
+    let procs = [100.0, 1_000.0, 10_000.0];
+    let throughputs = [1.0, 10.0, 100.0, 500.0, 1_000.0, 10_000.0, 100_000.0, 1_000_000.0];
+    let lengths = [
+        0.1, 0.2, 0.5, 1.0, 1.9, 5.0, 20.0, 100.0, 900.0, 10_000.0, 100_000.0,
+    ];
+
+    for &p in &procs {
+        println!("--- {p:.0} processors ---");
+        let mut t = Table::new(&[
+            "Task len (s)",
+            "1/s",
+            "10/s",
+            "100/s",
+            "500/s",
+            "1K/s",
+            "10K/s",
+            "100K/s",
+            "1M/s",
+        ]);
+        for &len in &lengths {
+            let mut row = vec![format!("{len}")];
+            for &r in &throughputs {
+                let e = dispatch_limited_efficiency(1e6, len, p, r);
+                row.push(format!("{:.0}%", e * 100.0));
+            }
+            t.row(&row);
+        }
+        t.print();
+        println!();
+    }
+
+    // Paper's headline sentences.
+    let len_for_90 = |p: f64, r: f64| -> f64 {
+        let mut lo: f64 = 1e-3;
+        let mut hi = 1e6;
+        for _ in 0..60 {
+            let mid = (lo * hi).sqrt();
+            if dispatch_limited_efficiency(1e6, mid, p, r) < 0.9 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        hi
+    };
+    println!("task length needed for 90% efficiency:");
+    let mut t = Table::new(&["Procs", "@1 task/s", "@500 tasks/s"]);
+    for (p, paper_lrm, paper_falkon) in [
+        (100.0, "100 s", "0.2 s"),
+        (1_000.0, "900 s", "1.9 s"),
+        (10_000.0, "10000 s (~2.8 h)", "20 s"),
+    ] {
+        t.row(&[
+            format!("{p:.0}"),
+            format!("{:.1} s (paper: {paper_lrm})", len_for_90(p, 1.0)),
+            format!("{:.2} s (paper: {paper_falkon})", len_for_90(p, 500.0)),
+        ]);
+    }
+    t.print();
+
+    let series: Vec<(&str, Vec<(f64, f64)>)> = vec![(
+        "100 procs @1/s",
+        lengths
+            .iter()
+            .map(|&l| (l, dispatch_limited_efficiency(1e6, l, 100.0, 1.0)))
+            .collect(),
+    ), (
+        "100 procs @500/s",
+        lengths
+            .iter()
+            .map(|&l| (l, dispatch_limited_efficiency(1e6, l, 100.0, 500.0)))
+            .collect(),
+    )];
+    println!();
+    print!("{}", line_chart("efficiency vs task length", &series, 60, 12, true));
+}

@@ -1,0 +1,86 @@
+"""AOT lowering: JAX/Pallas models -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, NOT serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Every artifact is lowered with ``return_tuple=True``; the Rust side unwraps
+with ``to_tuple()``. A ``manifest.txt`` describing names, input and output
+shapes is emitted next to the artifacts so the Rust ArtifactRegistry can
+validate literals without parsing HLO.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only NAME]
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACTS
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_shape(s) -> str:
+    dims = ",".join(str(d) for d in s.shape)
+    return f"f32[{dims}]"
+
+
+def lower_artifact(name: str, out_dir: str) -> str:
+    """Lower one artifact; returns its manifest line."""
+    fn, specs = ARTIFACTS[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    # Evaluate output shapes from the jax signature (abstract eval).
+    out_shapes = jax.eval_shape(fn, *specs)
+    ins = ";".join(_fmt_shape(s) for s in specs)
+    outs = ";".join(_fmt_shape(s) for s in out_shapes)
+    print(f"  {name}: {len(text)} chars, in=[{ins}] out=[{outs}]")
+    return f"{name} inputs={ins} outputs={outs}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = [args.only] if args.only else sorted(ARTIFACTS)
+    lines = []
+    for name in names:
+        lines.append(lower_artifact(name, args.out_dir))
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    if args.only:
+        # Merge into an existing manifest if present.
+        old = {}
+        if os.path.exists(manifest):
+            with open(manifest) as f:
+                for ln in f:
+                    if ln.strip():
+                        old[ln.split()[0]] = ln.strip()
+        for ln in lines:
+            old[ln.split()[0]] = ln
+        lines = [old[k] for k in sorted(old)]
+    with open(manifest, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {len(lines)} artifact(s) + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

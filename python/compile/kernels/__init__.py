@@ -1,0 +1,27 @@
+"""Layer-1 Pallas kernels for the gridswift reproduction.
+
+One module per compute hot-spot of the paper's three evaluation
+applications (fMRI, Montage, MolDyn); ``ref`` holds the pure-jnp oracles.
+"""
+
+from .coadd import coadd
+from .common import matmul, resample_matrix
+from .difffit import difffit
+from .mdenergy import mdenergy
+from .moments import moments
+from .reorient import reorient
+from .resample import mproject, reslice
+from .wham import wham_iterate
+
+__all__ = [
+    "coadd",
+    "difffit",
+    "matmul",
+    "mdenergy",
+    "moments",
+    "mproject",
+    "reorient",
+    "resample_matrix",
+    "reslice",
+    "wham_iterate",
+]

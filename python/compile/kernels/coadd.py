@@ -1,0 +1,48 @@
+"""Montage ``mAdd`` kernel: weighted co-addition of background-corrected plates.
+
+Paper §3.6 image co-addition: co-add K corrected plates (optionally per
+sub-region) into a mosaic. The kernel streams one (k, row-slab) block per
+grid step — the K axis is the innermost grid dimension so each output slab
+stays VMEM-resident across the whole accumulation, exactly the schedule a
+TPU would use to stream K plates from HBM through a single VMEM tile.
+
+Each plate carries a scalar weight (its overlap-coverage weight); the
+normalization by total weight is a trailing elementwise step fused by XLA.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+
+def _coadd_kernel(stack_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += stack_ref[0] * w_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def coadd(stack, weights, *, br: int = 64):
+    """Weighted mean of ``stack`` f32[K,H,W] with ``weights`` f32[K]."""
+    k, h, w = stack.shape
+    br = pick_block(h, br)
+    wsum = jnp.sum(weights)
+    w2d = weights.reshape(k, 1)
+    acc = pl.pallas_call(
+        _coadd_kernel,
+        grid=(h // br, k),
+        in_specs=[
+            pl.BlockSpec((1, br, w), lambda i, kk: (kk, i, 0)),
+            pl.BlockSpec((1, 1), lambda i, kk: (kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, w), lambda i, kk: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=INTERPRET,
+    )(stack, w2d)
+    return acc / jnp.maximum(wsum, 1e-12)

@@ -1,0 +1,91 @@
+"""Shared Pallas helpers: the tiled-matmul primitive and tiling utilities.
+
+All kernels in this package are authored for TPU structure (VMEM block
+tiling via BlockSpec, MXU-shaped contractions) but are lowered with
+``interpret=True``: the CPU PJRT plugin cannot execute Mosaic custom-calls,
+so interpret mode is the correctness path and TPU efficiency is estimated
+from the BlockSpec footprint (see DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU-PJRT correctness path; see module docstring.
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (>=1)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Accumulating matmul tile: o[i,j] += x[i,k] @ y[k,j] over grid dim 2."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(x, y, *, bm: int = 64, bk: int = 64, bn: int = 64):
+    """Tiled Pallas matmul ``x @ y`` for f32 operands.
+
+    The grid iterates (M/bm, N/bn, K/bk) with the K axis innermost so the
+    output block stays resident in VMEM across the contraction — the
+    canonical MXU pipelining schedule.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {y.shape}"
+    bm = pick_block(m, bm)
+    bk = pick_block(k, bk)
+    bn = pick_block(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, y)
+
+
+def resample_matrix(n_out: int, n_in: int, scale: float, shift: float):
+    """Dense 1-D linear-interpolation resampling matrix W (n_out x n_in).
+
+    Row i holds the two bilinear weights for source coordinate
+    ``src = i * scale + shift``; out-of-range rows are zero. Expressing
+    gather-style resampling as a dense matmul is the TPU adaptation of the
+    paper's CPU-era per-pixel interpolation loops: the irregular gather
+    becomes an MXU contraction (see DESIGN.md §Hardware-Adaptation).
+    """
+    i = jnp.arange(n_out, dtype=jnp.float32)
+    src = i * scale + shift
+    lo = jnp.floor(src)
+    frac = src - lo
+    lo_i = lo.astype(jnp.int32)
+    cols = jnp.arange(n_in, dtype=jnp.int32)
+    lo_w = jnp.where((lo_i >= 0) & (lo_i < n_in), 1.0 - frac, 0.0)
+    hi_w = jnp.where((lo_i + 1 >= 0) & (lo_i + 1 < n_in), frac, 0.0)
+    w = (cols[None, :] == lo_i[:, None]) * lo_w[:, None] + (
+        cols[None, :] == (lo_i + 1)[:, None]
+    ) * hi_w[:, None]
+    return w.astype(jnp.float32)

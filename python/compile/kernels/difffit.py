@@ -1,0 +1,69 @@
+"""Montage ``mDiffFit`` kernel: image difference + plane-fit partials.
+
+Paper §3.6: in the background-rectification stage Montage computes the
+difference of every overlapping plate pair and fits a plane to each
+difference image. This kernel fuses the two: tiled over row slabs, it emits
+the difference image and accumulates the plane-fit normal-equation partials
+
+    [ Sd, Sd*x, Sd*y, Sd^2 ]          (x=row coord, y=col coord)
+
+in a VMEM-resident accumulator (the static design-matrix sums S1, Sx, Sy,
+Sxx, ... depend only on the image shape and are computed closed-form in the
+L2 model, which solves the 3x3 system for the plane coefficients).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+NSUM = 4
+_PAD = 16
+
+
+def _difffit_kernel(a_ref, b_ref, d_ref, s_ref, *, br: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    d = a_ref[...] - b_ref[...]
+    d_ref[...] = d
+    h, w = d.shape
+    r0 = (pl.program_id(0) * br).astype(jnp.float32)
+    ri = jax.lax.broadcasted_iota(jnp.float32, (h, w), 0) + r0
+    ci = jax.lax.broadcasted_iota(jnp.float32, (h, w), 1)
+    sums = jnp.stack(
+        [jnp.sum(d), jnp.sum(d * ri), jnp.sum(d * ci), jnp.sum(d * d)]
+    )
+    s_ref[...] += jnp.pad(sums, (0, _PAD - NSUM))[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def difffit(a, b, *, br: int = 64):
+    """Difference image and plane-fit partial sums of two plates.
+
+    Returns ``(diff f32[H,W], sums f32[NSUM])``.
+    """
+    h, w = a.shape
+    br = pick_block(h, br)
+    diff, sums = pl.pallas_call(
+        functools.partial(_difffit_kernel, br=br),
+        grid=(h // br,),
+        in_specs=[
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, _PAD), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w), jnp.float32),
+            jax.ShapeDtypeStruct((1, _PAD), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(a, b)
+    return diff, sums[0, :NSUM]

@@ -1,0 +1,91 @@
+"""MolDyn energy/force kernel: tiled Lennard-Jones with MXU distance trick.
+
+Paper §5.4.3: each MolDyn job runs CHARMM-style molecular mechanics
+(equilibration, free-energy perturbation). The numeric core is the pairwise
+nonbonded loop. TPU adaptation: the O(N^2) distance computation is
+restructured so its dominant term is a matmul —
+
+    |r_i - r_j|^2 = |r_i|^2 + |r_j|^2 - 2 r_i . r_j
+
+where ``r_i . r_j`` is pos @ pos^T, an MXU contraction. The kernel tiles
+rows of the force matrix: each grid step owns a (BR, 3) row block, loads
+the full (N, 3) position table (N<=128 fits VMEM trivially), and reduces
+its row slab of LJ forces and energy. Self-interaction is masked by index.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+_PAD = 16
+EPS = 1.0  # LJ well depth (reduced units)
+SIGMA = 1.0  # LJ diameter (reduced units)
+RCUT2 = 9.0  # squared cutoff (3 sigma)
+
+
+def _lj_terms(r2, mask):
+    """Pairwise LJ energy and dU/dr * 1/r factors, masked."""
+    r2s = jnp.where(mask, r2, 1.0)  # keep rsqrt finite off-pairs
+    inv2 = SIGMA * SIGMA / r2s
+    inv6 = inv2 * inv2 * inv2
+    e = 4.0 * EPS * (inv6 * inv6 - inv6)
+    # f(r)/r such that F_i = sum_j fac * (r_i - r_j)
+    fac = 24.0 * EPS * (2.0 * inv6 * inv6 - inv6) / r2s
+    keep = mask & (r2 < RCUT2)
+    return jnp.where(keep, e, 0.0), jnp.where(keep, fac, 0.0)
+
+
+def _mdenergy_kernel(rows_ref, all_ref, f_ref, e_ref, *, br: int):
+    i0 = pl.program_id(0) * br
+    rows = rows_ref[...]  # (br, 3)
+    allp = all_ref[...]  # (n, 3)
+    n = allp.shape[0]
+    # MXU term: rows @ allp^T
+    dots = jnp.dot(rows, allp.T, preferred_element_type=jnp.float32)
+    rn = jnp.sum(rows * rows, axis=1, keepdims=True)
+    an = jnp.sum(allp * allp, axis=1, keepdims=True)
+    r2 = rn + an.T - 2.0 * dots  # (br, n)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (br, n), 0) + i0
+    jj = jax.lax.broadcasted_iota(jnp.int32, (br, n), 1)
+    mask = ii != jj
+    e, fac = _lj_terms(r2, mask)
+    # F_i = sum_j fac_ij * (r_i - r_j)
+    fx = jnp.sum(fac, axis=1, keepdims=True) * rows - jnp.dot(
+        fac, allp, preferred_element_type=jnp.float32
+    )
+    f_ref[...] = fx
+    e_ref[...] = jnp.full_like(e_ref, 0.5 * jnp.sum(e))
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def mdenergy(pos, *, br: int = 32):
+    """LJ energy and forces for ``pos`` f32[N,3].
+
+    Returns ``(forces f32[N,3], energy f32[])``. Energy halves the double-
+    counted pair sum.
+    """
+    n = pos.shape[0]
+    br = pick_block(n, br)
+    grid = (n // br,)
+    forces, eparts = pl.pallas_call(
+        functools.partial(_mdenergy_kernel, br=br),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, 3), lambda i: (i, 0)),
+            pl.BlockSpec((n, 3), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, 3), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 3), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0], 1), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(pos, pos)
+    return forces, jnp.sum(eparts)

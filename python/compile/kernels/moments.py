@@ -1,0 +1,69 @@
+"""``alignlinear`` moment-accumulation kernel.
+
+Paper §3.3: ``alignlinear`` estimates the (12-parameter AIR-style) spatial
+adjustment between a volume and a reference. We reproduce it as intensity-
+weighted moment matching: this kernel computes the 10 weighted moments
+
+    [ Sw, Swx, Swy, Swz, Swxx, Swyy, Swzz, Swxy, Swxz, Swyz ]
+
+of a volume, tiled over Z slabs, accumulating partial sums in a VMEM-
+resident (1, 16) output block (padded to the 16-lane register width). The
+surrounding L2 model (model.alignlinear_params) solves the tiny 4x4 system
+from the moments of both volumes to produce the affine parameters — the
+classic partial-reduction-in-kernel / solve-outside split.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+NMOM = 10
+_PAD = 16  # lane-width padding for the accumulator block
+
+
+def _moments_kernel(x_ref, o_ref, *, bz: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = x_ref[...]
+    x, y, z = w.shape
+    z0 = (pl.program_id(0) * bz).astype(jnp.float32)
+    xi = jax.lax.broadcasted_iota(jnp.float32, (x, y, z), 0)
+    yi = jax.lax.broadcasted_iota(jnp.float32, (x, y, z), 1)
+    zi = jax.lax.broadcasted_iota(jnp.float32, (x, y, z), 2) + z0
+    mom = jnp.stack(
+        [
+            jnp.sum(w),
+            jnp.sum(w * xi),
+            jnp.sum(w * yi),
+            jnp.sum(w * zi),
+            jnp.sum(w * xi * xi),
+            jnp.sum(w * yi * yi),
+            jnp.sum(w * zi * zi),
+            jnp.sum(w * xi * yi),
+            jnp.sum(w * xi * zi),
+            jnp.sum(w * yi * zi),
+        ]
+    )
+    o_ref[...] += jnp.pad(mom, (0, _PAD - NMOM))[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bz",))
+def moments(vol, *, bz: int = 8):
+    """Weighted spatial moments of ``vol`` (X, Y, Z) -> (NMOM,) f32."""
+    x, y, z = vol.shape
+    bz = pick_block(z, bz)
+    out = pl.pallas_call(
+        functools.partial(_moments_kernel, bz=bz),
+        grid=(z // bz,),
+        in_specs=[pl.BlockSpec((x, y, bz), lambda i: (0, 0, i))],
+        out_specs=pl.BlockSpec((1, _PAD), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, _PAD), jnp.float32),
+        interpret=INTERPRET,
+    )(vol)
+    return out[0, :NMOM]

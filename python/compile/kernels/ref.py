@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function here is the straightforward (un-tiled, un-scheduled) jnp
+formulation of the corresponding kernel; pytest + hypothesis assert
+``allclose`` across shape/dtype sweeps. These are the CORE correctness
+signal for Layer 1 (see python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+from .common import resample_matrix
+from .mdenergy import EPS, RCUT2, SIGMA
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def reorient_ref(vol, axis: int):
+    return jnp.flip(vol, axis=axis)
+
+
+def moments_ref(vol):
+    x, y, z = vol.shape
+    xi, yi, zi = jnp.meshgrid(
+        jnp.arange(x, dtype=jnp.float32),
+        jnp.arange(y, dtype=jnp.float32),
+        jnp.arange(z, dtype=jnp.float32),
+        indexing="ij",
+    )
+    w = vol
+    return jnp.stack(
+        [
+            jnp.sum(w),
+            jnp.sum(w * xi),
+            jnp.sum(w * yi),
+            jnp.sum(w * zi),
+            jnp.sum(w * xi * xi),
+            jnp.sum(w * yi * yi),
+            jnp.sum(w * zi * zi),
+            jnp.sum(w * xi * yi),
+            jnp.sum(w * xi * zi),
+            jnp.sum(w * yi * zi),
+        ]
+    )
+
+
+def mproject_ref(img, params):
+    h, w = img.shape
+    wr = resample_matrix(h, h, params[0], params[1])
+    wc = resample_matrix(w, w, params[2], params[3])
+    return wr @ img @ wc.T
+
+
+def reslice_ref(vol, params):
+    x, y, z = vol.shape
+    wx = resample_matrix(x, x, params[0], params[1])
+    wy = resample_matrix(y, y, params[2], params[3])
+    wz = resample_matrix(z, z, params[4], params[5])
+    return jnp.einsum("ai,bj,ck,ijk->abc", wx, wy, wz, vol)
+
+
+def difffit_ref(a, b):
+    d = a - b
+    h, w = d.shape
+    ri, ci = jnp.meshgrid(
+        jnp.arange(h, dtype=jnp.float32),
+        jnp.arange(w, dtype=jnp.float32),
+        indexing="ij",
+    )
+    sums = jnp.stack(
+        [jnp.sum(d), jnp.sum(d * ri), jnp.sum(d * ci), jnp.sum(d * d)]
+    )
+    return d, sums
+
+
+def coadd_ref(stack, weights):
+    num = jnp.einsum("k,khw->hw", weights, stack)
+    return num / jnp.maximum(jnp.sum(weights), 1e-12)
+
+
+def mdenergy_ref(pos):
+    n = pos.shape[0]
+    diff = pos[:, None, :] - pos[None, :, :]  # (n, n, 3)
+    r2 = jnp.sum(diff * diff, axis=-1)
+    mask = ~jnp.eye(n, dtype=bool)
+    r2s = jnp.where(mask, r2, 1.0)
+    inv2 = SIGMA * SIGMA / r2s
+    inv6 = inv2 * inv2 * inv2
+    e = 4.0 * EPS * (inv6 * inv6 - inv6)
+    fac = 24.0 * EPS * (2.0 * inv6 * inv6 - inv6) / r2s
+    keep = mask & (r2 < RCUT2)
+    e = jnp.where(keep, e, 0.0)
+    fac = jnp.where(keep, fac, 0.0)
+    forces = jnp.sum(fac[:, :, None] * diff, axis=1)
+    return forces, 0.5 * jnp.sum(e)
+
+
+def wham_iterate_ref(counts, bias, nsamp, f):
+    denom = jnp.sum(nsamp * jnp.exp(f - bias), axis=0, keepdims=True)
+    p = counts / jnp.maximum(denom, 1e-30)
+    fout = -jnp.log(
+        jnp.maximum(jnp.sum(p * jnp.exp(-bias), axis=1, keepdims=True), 1e-30)
+    )
+    return fout - fout[0:1, :], p

@@ -1,0 +1,52 @@
+"""fMRI ``reorient`` kernel: flip a brain volume along one axis.
+
+Paper §3.3: the atomic procedure ``reorient`` rotates a brain image along a
+given axis; it is the fan-out stage of the fMRI workflow (one call per
+volume, hundreds per run). The kernel is a pure memory-layout operation —
+the interesting part is the BlockSpec: the output block at slab index ``i``
+reads the *mirrored* input slab, so the HBM<->VMEM schedule does the global
+reversal while the kernel body reverses within the block. Nothing is ever
+resident beyond one (X, Y, bz) slab per step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+
+def _flip0_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...][::-1, :, :]
+
+
+def _flip1_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...][:, ::-1, :]
+
+
+def _flip2_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...][:, :, ::-1]
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "bz"))
+def reorient(vol, *, axis: int = 1, bz: int = 8):
+    """Flip ``vol`` (X, Y, Z) along ``axis`` (0=x, 1=y, 2=z)."""
+    x, y, z = vol.shape
+    bz = pick_block(z, bz)
+    nz = z // bz
+    kernel = (_flip0_kernel, _flip1_kernel, _flip2_kernel)[axis]
+    if axis == 2:
+        # Mirrored slab schedule: output slab i <- input slab nz-1-i.
+        in_map = lambda i: (0, 0, nz - 1 - i)
+    else:
+        in_map = lambda i: (0, 0, i)
+    return pl.pallas_call(
+        kernel,
+        grid=(nz,),
+        in_specs=[pl.BlockSpec((x, y, bz), in_map)],
+        out_specs=pl.BlockSpec((x, y, bz), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((x, y, z), vol.dtype),
+        interpret=INTERPRET,
+    )(vol)

@@ -1,0 +1,63 @@
+"""Affine resampling kernels: fMRI ``reslice`` and Montage ``mProjectPP``.
+
+Both the fMRI reslice step (apply the affine estimated by ``alignlinear``)
+and the Montage plate reprojection (map a plate into the common mosaic
+coordinate frame) are, on the paper's CPU testbed, per-pixel interpolation
+loops. The TPU adaptation (DESIGN.md §Hardware-Adaptation): a separable
+affine resample is a chain of dense contractions with 1-D interpolation-
+weight matrices, so the whole operation becomes two/three tiled MXU matmuls
+(see ``common.resample_matrix``) instead of an irregular gather:
+
+    image' = W_rows @ image @ W_cols^T
+    vol'   = resample each axis in turn via a (flattened) matmul
+
+The matmuls run through the shared accumulating Pallas tile kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import matmul, resample_matrix
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mproject(img, params):
+    """Reproject a 2-D plate by the separable affine ``params``.
+
+    ``params`` = [scale_r, shift_r, scale_c, shift_c] (f32[4]): output pixel
+    (i, j) samples input at (i*scale_r + shift_r, j*scale_c + shift_c),
+    bilinearly. Out-of-plate samples are zero (the mosaic engine later
+    weights them out via the coverage map).
+    """
+    h, w = img.shape
+    wr = resample_matrix(h, h, params[0], params[1])
+    wc = resample_matrix(w, w, params[2], params[3])
+    tmp = matmul(wr, img)  # rows
+    return matmul(tmp, wc.T)  # cols
+
+
+@functools.partial(jax.jit, static_argnames=())
+def reslice(vol, params):
+    """Apply a separable affine to a volume (X, Y, Z).
+
+    ``params`` = [sx, tx, sy, ty, sz, tz]: per-axis scale+shift, the
+    separable core of the paper's 12-parameter AIR model (rotations are
+    handled upstream by ``reorient``'s axis flips/permutes in this
+    reproduction). Each axis is resampled by flattening the other two axes
+    and contracting with the axis' weight matrix on the MXU.
+    """
+    x, y, z = vol.shape
+    wx = resample_matrix(x, x, params[0], params[1])
+    wy = resample_matrix(y, y, params[2], params[3])
+    wz = resample_matrix(z, z, params[4], params[5])
+    # axis 0: (X,Y,Z) -> X x (Y*Z)
+    v = matmul(wx, vol.reshape(x, y * z)).reshape(x, y, z)
+    # axis 1: bring Y forward
+    v = jnp.transpose(v, (1, 0, 2)).reshape(y, x * z)
+    v = matmul(wy, v).reshape(y, x, z).transpose(1, 0, 2)
+    # axis 2: bring Z forward
+    v = jnp.transpose(v, (2, 0, 1)).reshape(z, x * y)
+    v = matmul(wz, v).reshape(z, x, y).transpose(1, 2, 0)
+    return v

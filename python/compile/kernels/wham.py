@@ -1,0 +1,54 @@
+"""WHAM iteration kernel (MolDyn stage 6).
+
+Paper §5.4.3 stage 6: the weighted-histogram analysis method combines the
+biased histograms from the three coupling stages into free energies. One
+WHAM self-consistency iteration:
+
+    denom_b = sum_s n_s * exp(f_s - u_{s,b})
+    p_b     = c_b / denom_b
+    f'_s    = -log( sum_b p_b * exp(-u_{s,b}) )
+
+with S states x B bins. The kernel keeps the whole (S, B) bias table in one
+VMEM block (S, B are tiny) and does the two contractions back to back; the
+exponentials are VPU work between the two MXU-shaped reductions.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+
+def _wham_kernel(counts_ref, bias_ref, nsamp_ref, f_ref, fout_ref, p_ref):
+    c = counts_ref[...]  # (1, B) total counts per bin
+    u = bias_ref[...]  # (S, B) bias energies
+    n = nsamp_ref[...]  # (S, 1) samples per state
+    f = f_ref[...]  # (S, 1) current free energies
+    denom = jnp.sum(n * jnp.exp(f - u), axis=0, keepdims=True)  # (1, B)
+    p = c / jnp.maximum(denom, 1e-30)
+    fout = -jnp.log(
+        jnp.maximum(jnp.sum(p * jnp.exp(-u), axis=1, keepdims=True), 1e-30)
+    )
+    p_ref[...] = p
+    fout_ref[...] = fout
+
+
+@jax.jit
+def wham_iterate(counts, bias, nsamp, f):
+    """One WHAM iteration.
+
+    counts f32[1,B], bias f32[S,B], nsamp f32[S,1], f f32[S,1]
+    -> (f' f32[S,1], p f32[1,B])
+    """
+    s, b = bias.shape
+    fout, p = pl.pallas_call(
+        _wham_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((s, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, b), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(counts, bias, nsamp, f)
+    # Gauge fix: anchor state 0 at zero free energy.
+    return fout - fout[0:1, :], p

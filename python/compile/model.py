@@ -1,0 +1,257 @@
+"""Layer-2 JAX models: the per-application compute graphs.
+
+Each public function here is one AOT artifact: it composes the Layer-1
+Pallas kernels with the surrounding (XLA-fused) glue math, is lowered once
+by ``aot.py`` to HLO text, and is executed from the Rust coordinator via
+PJRT. Nothing in this module runs on the request path.
+
+Applications (paper §5.4):
+- fMRI spatial normalization: reorient (axis flips), alignlinear (moment
+  matching -> separable affine), reslice (apply affine).
+- Montage: mProjectPP (plate reprojection), mDiffFit (difference + plane
+  fit), background correction, mAdd (co-addition).
+- MolDyn: CHARMM-style equilibration (steepest descent on the LJ surface),
+  single-point energy, WHAM free-energy solve.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import shapes
+from .kernels import (
+    coadd,
+    difffit,
+    mdenergy,
+    moments,
+    mproject,
+    reorient,
+    reslice,
+    wham_iterate,
+)
+
+# --------------------------------------------------------------------------
+# fMRI
+# --------------------------------------------------------------------------
+
+
+def fmri_reorient_x(vol):
+    """Atomic procedure ``reorient(v, "x")``: flip along the X axis."""
+    return (reorient(vol, axis=0),)
+
+
+def fmri_reorient_y(vol):
+    """Atomic procedure ``reorient(v, "y")``: flip along the Y axis."""
+    return (reorient(vol, axis=1),)
+
+
+def fmri_reorient_z(vol):
+    """Atomic procedure ``reorient(v, "z")``: flip along the Z axis."""
+    return (reorient(vol, axis=2),)
+
+
+def _axis_stats(mom):
+    """Per-axis (mean, var) from the 10-moment vector."""
+    sw = jnp.maximum(mom[0], 1e-12)
+    means = mom[1:4] / sw
+    vars_ = mom[4:7] / sw - means * means
+    return means, jnp.maximum(vars_, 1e-12)
+
+
+def fmri_alignlinear(vol, ref_vol):
+    """``alignlinear``: separable affine parameters matching vol -> ref.
+
+    Output params [sx, tx, sy, ty, sz, tz] such that resampling ``vol`` at
+    ``src_axis = i * s + t`` matches the reference's intensity-weighted
+    spatial moments (the moment-matching core of AIR's 12-parameter model;
+    rotations are handled by the reorient stages).
+    """
+    mv, vv = _axis_stats(moments(vol))
+    mr, vr = _axis_stats(moments(ref_vol))
+    s = jnp.sqrt(vv / vr)
+    t = mv - s * mr
+    params = jnp.stack([s[0], t[0], s[1], t[1], s[2], t[2]])
+    return (params,)
+
+
+def fmri_reslice(vol, params):
+    """``reslice``: apply the separable affine estimated by alignlinear."""
+    return (reslice(vol, params),)
+
+
+def fmri_volume_chain(vol, ref_vol):
+    """Fused single-volume pipeline: reorient_y . reorient_x . align . reslice.
+
+    Used by the Swift ``clustering`` optimization when all four stages of
+    one volume land in the same bundle — XLA fuses the whole chain so the
+    intermediate volumes never round-trip through host memory.
+    """
+    v = reorient(vol, axis=1)
+    v = reorient(v, axis=0)
+    r = reorient(ref_vol, axis=1)
+    r = reorient(r, axis=0)
+    (params,) = fmri_alignlinear(v, r)
+    return (reslice(v, params), params)
+
+
+# --------------------------------------------------------------------------
+# Montage
+# --------------------------------------------------------------------------
+
+
+def montage_project(img, params):
+    """``mProjectPP``: reproject a plate into the mosaic frame."""
+    return (mproject(img, params),)
+
+
+def _plane_static_sums(h: int, w: int):
+    """Closed-form design-matrix sums for the plane fit over an HxW grid."""
+    n = float(h * w)
+    sx = w * (h - 1) * h / 2.0
+    sy = h * (w - 1) * w / 2.0
+    sxx = w * (h - 1) * h * (2 * h - 1) / 6.0
+    syy = h * (w - 1) * w * (2 * w - 1) / 6.0
+    sxy = ((h - 1) * h / 2.0) * ((w - 1) * w / 2.0)
+    return jnp.array(
+        [[n, sx, sy], [sx, sxx, sxy], [sy, sxy, syy]], jnp.float32
+    )
+
+
+def montage_difffit(a, b):
+    """``mDiffFit``: difference image + fitted plane coefficients.
+
+    Returns (diff, coeffs[3]) with plane p(x, y) = c0 + c1*x + c2*y fitted
+    to ``a - b`` by least squares. Over a full HxW grid the normal
+    equations diagonalize exactly when coordinates are centered at the
+    grid centroid (sum(x - xbar) = 0, sum((x-xbar)(y-ybar)) = 0), so the
+    fit is three stable f32 divisions — no LAPACK solve, which matters
+    because ``jnp.linalg.solve`` lowers to a typed-FFI custom-call that
+    xla_extension 0.5.1 (the Rust runtime's XLA) cannot execute.
+    """
+    d, sums = difffit(a, b)
+    h, w = a.shape
+    n = float(h * w)
+    xbar = (h - 1) / 2.0
+    ybar = (w - 1) / 2.0
+    # Centered second moments of a full grid (closed form).
+    sxx_c = n * (h * h - 1) / 12.0
+    syy_c = n * (w * w - 1) / 12.0
+    sd, sdx, sdy = sums[0], sums[1], sums[2]
+    c1 = (sdx - xbar * sd) / sxx_c
+    c2 = (sdy - ybar * sd) / syy_c
+    c0 = sd / n - c1 * xbar - c2 * ybar
+    coeffs = jnp.stack([c0, c1, c2])
+    return (d, coeffs)
+
+
+def montage_bgcorrect(img, coeffs):
+    """``mBackground``: subtract the fitted plane from a plate."""
+    h, w = img.shape
+    ri = jnp.arange(h, dtype=jnp.float32)[:, None]
+    ci = jnp.arange(w, dtype=jnp.float32)[None, :]
+    plane = coeffs[0] + coeffs[1] * ri + coeffs[2] * ci
+    return (img - plane,)
+
+
+def montage_coadd(stack, weights):
+    """``mAdd``: weighted co-addition of K corrected plates."""
+    return (coadd(stack, weights),)
+
+
+# --------------------------------------------------------------------------
+# MolDyn
+# --------------------------------------------------------------------------
+
+EQUIL_STEPS = 20
+EQUIL_LR = 1e-3
+EQUIL_FMAX = 50.0  # force clamp: steepest descent stability
+
+
+def moldyn_energy(pos):
+    """Single-point LJ energy + forces (CHARMM energy call analogue)."""
+    f, e = mdenergy(pos)
+    return (f, e.reshape(1))
+
+
+def moldyn_equilibrate(pos):
+    """``CHARMM equilibration``: EQUIL_STEPS of clamped steepest descent.
+
+    The loop stays inside one executable (lax.fori_loop) so a single PJRT
+    dispatch performs the whole equilibration — the Rust side treats it as
+    one task, exactly like the paper's per-molecule CHARMM job.
+    """
+
+    def body(_, carry):
+        p, _e = carry
+        f, e = mdenergy(p)
+        f = jnp.clip(f, -EQUIL_FMAX, EQUIL_FMAX)
+        return (p + EQUIL_LR * f, e)
+
+    pos_out, e = jax.lax.fori_loop(
+        0, EQUIL_STEPS, body, (pos, jnp.float32(0.0))
+    )
+    return (pos_out, e.reshape(1))
+
+
+WHAM_ITERS = 50
+
+
+def moldyn_wham(counts, bias, nsamp):
+    """WHAM free-energy solve: WHAM_ITERS fixed-point iterations."""
+
+    def body(_, carry):
+        f, _p = carry
+        return wham_iterate(counts, bias, nsamp, f)
+
+    f0 = jnp.zeros((bias.shape[0], 1), jnp.float32)
+    p0 = jnp.zeros_like(counts)
+    f, p = jax.lax.fori_loop(0, WHAM_ITERS, body, (f0, p0))
+    return (f, p)
+
+
+# --------------------------------------------------------------------------
+# Artifact registry: name -> (fn, input ShapeDtypeStructs)
+# --------------------------------------------------------------------------
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+VOL = shapes.VOLUME
+IMG = shapes.IMAGE
+IMG_S = shapes.IMAGE_SMALL
+
+
+ARTIFACTS = {
+    "reorient_x": (fmri_reorient_x, [_f32(VOL)]),
+    "reorient_y": (fmri_reorient_y, [_f32(VOL)]),
+    "reorient_z": (fmri_reorient_z, [_f32(VOL)]),
+    "alignlinear": (fmri_alignlinear, [_f32(VOL), _f32(VOL)]),
+    "reslice": (fmri_reslice, [_f32(VOL), _f32((6,))]),
+    "fmri_chain": (fmri_volume_chain, [_f32(VOL), _f32(VOL)]),
+    "mproject": (montage_project, [_f32(IMG), _f32((4,))]),
+    "mproject_small": (montage_project, [_f32(IMG_S), _f32((4,))]),
+    "mdifffit": (montage_difffit, [_f32(IMG), _f32(IMG)]),
+    "mdifffit_small": (montage_difffit, [_f32(IMG_S), _f32(IMG_S)]),
+    "mbgcorrect": (montage_bgcorrect, [_f32(IMG), _f32((3,))]),
+    "madd": (
+        montage_coadd,
+        [_f32((shapes.COADD_K,) + IMG), _f32((shapes.COADD_K,))],
+    ),
+    "madd_small": (
+        montage_coadd,
+        [_f32((shapes.COADD_K,) + IMG_S), _f32((shapes.COADD_K,))],
+    ),
+    "mdenergy": (moldyn_energy, [_f32((shapes.ATOMS, 3))]),
+    "mdequil": (moldyn_equilibrate, [_f32((shapes.ATOMS, 3))]),
+    "wham": (
+        moldyn_wham,
+        [
+            _f32((1, shapes.WHAM_BINS)),
+            _f32((shapes.WHAM_STATES, shapes.WHAM_BINS)),
+            _f32((shapes.WHAM_STATES, 1)),
+        ],
+    ),
+}

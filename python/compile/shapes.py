@@ -1,0 +1,37 @@
+"""Canonical shapes for AOT-compiled artifacts.
+
+The Rust runtime loads fixed-shape HLO executables; these constants define
+the shapes baked into every artifact (and mirrored in rust/src/runtime/
+artifact metadata). They follow the paper's workload scales:
+
+- fMRI volume: the paper's volumes are ~200 KB image + small header. A
+  64x64x24 f32 voxel grid is 384 KiB raw / ~196 KB in the int16 on-disk
+  encoding the scanner uses; we keep f32 compute at 64x64x24.
+- Montage image: paper images are ~2 MB FITS; 512x512 f32 plates twinned
+  with a 256x256 "fast preview" shape used in tests.
+- MolDyn: ligands of up to 128 atoms (the NIST neutral-ligand library is
+  small molecules), CHARMM-style energy over 128-atom frames.
+- WHAM: 8 coupling states x 64 histogram bins (three coupling stages in
+  the paper; we keep a power-of-two padding for clean VMEM tiling).
+"""
+
+# fMRI
+VOLUME = (64, 64, 24)  # (X, Y, Z) voxels, f32
+
+# Montage
+IMAGE = (512, 512)  # full-size plate
+IMAGE_SMALL = (256, 256)  # test/preview plate
+COADD_K = 8  # images co-added per madd invocation
+
+# MolDyn
+ATOMS = 128  # atoms per ligand frame (padded)
+MD_ROW_BLOCK = 32  # row tile for the pairwise-energy kernel
+
+# WHAM
+WHAM_STATES = 8
+WHAM_BINS = 64
+
+# Pallas tiling defaults (TPU-friendly: multiples of (8, 128) where the
+# trailing dims allow; on the 64-wide fMRI volumes we fall back to the
+# largest divisor).
+MATMUL_BLOCK = (64, 64, 64)  # (bm, bk, bn)

@@ -1,0 +1,69 @@
+"""AOT path tests: lowering produces parseable HLO text + valid manifest."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_contains_entry():
+    lowered = jax.jit(lambda x: (x + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+
+
+def test_hlo_text_is_tupled():
+    """return_tuple=True: root instruction is a tuple (rust unwraps it)."""
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "tuple(" in text or "(f32[2,2]" in text
+
+
+def test_lower_artifact_writes_file_and_manifest_line(tmp_path):
+    line = aot.lower_artifact("reorient_y", str(tmp_path))
+    assert (tmp_path / "reorient_y.hlo.txt").exists()
+    assert line.startswith("reorient_y ")
+    assert "inputs=f32[64,64,24]" in line
+    assert "outputs=f32[64,64,24]" in line
+
+
+def test_manifest_format_roundtrip(tmp_path):
+    """Manifest lines parse into (name, inputs, outputs) triples the way
+    the Rust ArtifactRegistry parses them."""
+    line = aot.lower_artifact("wham", str(tmp_path))
+    name, ins, outs = line.split(" ")
+    assert name == "wham"
+    assert ins.removeprefix("inputs=").split(";") == [
+        "f32[1,64]",
+        "f32[8,64]",
+        "f32[8,1]",
+    ]
+    assert outs.removeprefix("outputs=").split(";") == [
+        "f32[8,1]",
+        "f32[1,64]",
+    ]
+
+
+def test_every_artifact_has_fixed_f32_shapes():
+    for name, (_fn, specs) in model.ARTIFACTS.items():
+        for s in specs:
+            assert s.dtype == jnp.float32, name
+            assert all(isinstance(d, int) for d in s.shape), name
+
+
+@pytest.mark.slow
+def test_full_artifact_build_matches_registry(tmp_path):
+    """Lower everything (as `make artifacts` does) and check the manifest
+    covers the registry exactly."""
+    for name in model.ARTIFACTS:
+        aot.lower_artifact(name, str(tmp_path))
+    files = {f.removesuffix(".hlo.txt") for f in os.listdir(tmp_path)}
+    assert files == set(model.ARTIFACTS)

@@ -1,0 +1,267 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and where meaningful, block sizes and parameter
+ranges); fixed-seed numpy data keeps runs deterministic. This is the core
+correctness signal for the kernels the Rust runtime executes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref as R
+
+SET = dict(max_examples=12, deadline=None)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- matmul
+@settings(**SET)
+@given(
+    m=st.sampled_from([8, 32, 64, 96]),
+    k=st.sampled_from([8, 32, 64, 128]),
+    n=st.sampled_from([8, 32, 64]),
+    bm=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, bm, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+    got = K.matmul(x, y, bm=bm, bk=bm, bn=bm)
+    want = R.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_mismatched_contraction():
+    x = jnp.zeros((4, 5), jnp.float32)
+    y = jnp.zeros((6, 4), jnp.float32)
+    with pytest.raises(AssertionError):
+        K.matmul(x, y)
+
+
+# -------------------------------------------------------------- reorient
+@settings(**SET)
+@given(
+    x=st.sampled_from([8, 16, 64]),
+    y=st.sampled_from([8, 16, 64]),
+    z=st.sampled_from([4, 8, 24]),
+    axis=st.sampled_from([0, 1, 2]),
+    bz=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_reorient_matches_flip(x, y, z, axis, bz, seed):
+    rng = np.random.default_rng(seed)
+    v = _rand(rng, x, y, z)
+    got = K.reorient(v, axis=axis, bz=bz)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(R.reorient_ref(v, axis)))
+
+
+def test_reorient_involution():
+    rng = np.random.default_rng(7)
+    v = _rand(rng, 16, 16, 8)
+    for axis in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(K.reorient(K.reorient(v, axis=axis), axis=axis)),
+            np.asarray(v),
+        )
+
+
+# --------------------------------------------------------------- moments
+@settings(**SET)
+@given(
+    x=st.sampled_from([8, 16, 64]),
+    z=st.sampled_from([4, 8, 24]),
+    bz=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moments_matches_ref(x, z, bz, seed):
+    rng = np.random.default_rng(seed)
+    # Non-negative weights, as in intensity images.
+    v = jnp.abs(_rand(rng, x, x, z))
+    got = K.moments(v, bz=bz)
+    want = R.moments_ref(v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-2)
+
+
+def test_moments_point_mass():
+    """A single bright voxel: moments are its coordinates exactly."""
+    v = np.zeros((8, 8, 8), np.float32)
+    v[3, 5, 6] = 2.0
+    m = np.asarray(K.moments(jnp.asarray(v)))
+    assert m[0] == pytest.approx(2.0)
+    np.testing.assert_allclose(m[1:4] / m[0], [3.0, 5.0, 6.0])
+
+
+# -------------------------------------------------- mproject / reslice
+@settings(**SET)
+@given(
+    h=st.sampled_from([32, 64, 128]),
+    sr=st.floats(0.5, 1.8),
+    tr=st.floats(-4.0, 4.0),
+    sc=st.floats(0.5, 1.8),
+    tc=st.floats(-4.0, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mproject_matches_ref(h, sr, tr, sc, tc, seed):
+    rng = np.random.default_rng(seed)
+    img = _rand(rng, h, h)
+    p = jnp.array([sr, tr, sc, tc], jnp.float32)
+    np.testing.assert_allclose(
+        K.mproject(img, p), R.mproject_ref(img, p), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_mproject_identity():
+    rng = np.random.default_rng(3)
+    img = _rand(rng, 64, 64)
+    p = jnp.array([1.0, 0.0, 1.0, 0.0], jnp.float32)
+    np.testing.assert_allclose(K.mproject(img, p), img, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SET)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    sx=st.floats(0.7, 1.4),
+    tx=st.floats(-2.0, 2.0),
+)
+def test_reslice_matches_ref(seed, sx, tx):
+    rng = np.random.default_rng(seed)
+    v = _rand(rng, 16, 16, 8)
+    p = jnp.array([sx, tx, 1.1, -0.5, 0.9, 0.25], jnp.float32)
+    np.testing.assert_allclose(
+        K.reslice(v, p), R.reslice_ref(v, p), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_reslice_identity():
+    rng = np.random.default_rng(4)
+    v = _rand(rng, 16, 16, 8)
+    p = jnp.array([1, 0, 1, 0, 1, 0], jnp.float32)
+    np.testing.assert_allclose(K.reslice(v, p), v, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- difffit
+@settings(**SET)
+@given(
+    h=st.sampled_from([32, 64, 128]),
+    br=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_difffit_matches_ref(h, br, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, h, h), _rand(rng, h, h)
+    d1, s1 = K.difffit(a, b, br=br)
+    d2, s2 = R.difffit_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=0.5)
+
+
+def test_difffit_zero_for_identical():
+    rng = np.random.default_rng(5)
+    a = _rand(rng, 32, 32)
+    d, s = K.difffit(a, a)
+    assert float(jnp.max(jnp.abs(d))) == 0.0
+    np.testing.assert_array_equal(np.asarray(s), np.zeros(4, np.float32))
+
+
+# ------------------------------------------------------------------ coadd
+@settings(**SET)
+@given(
+    k=st.sampled_from([2, 4, 8]),
+    h=st.sampled_from([32, 64]),
+    br=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_coadd_matches_ref(k, h, br, seed):
+    rng = np.random.default_rng(seed)
+    stack = _rand(rng, k, h, h)
+    w = jnp.abs(_rand(rng, k)) + 0.1
+    np.testing.assert_allclose(
+        K.coadd(stack, w, br=br), R.coadd_ref(stack, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_coadd_single_image_passthrough():
+    """With all weight on one image the coadd returns that image."""
+    rng = np.random.default_rng(6)
+    stack = _rand(rng, 4, 16, 16)
+    w = jnp.array([0.0, 0.0, 1.0, 0.0], jnp.float32)
+    np.testing.assert_allclose(K.coadd(stack, w), stack[2], rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------- mdenergy
+def _lattice(rng, n):
+    side = int(np.ceil(n ** (1 / 3)))
+    g = np.stack(
+        np.meshgrid(*[np.arange(side)] * 3, indexing="ij"), -1
+    ).reshape(-1, 3)[:n]
+    return jnp.asarray(
+        (g * 1.1 + rng.normal(scale=0.05, size=(n, 3))).astype(np.float32)
+    )
+
+
+@settings(**SET)
+@given(
+    n=st.sampled_from([32, 64, 128]),
+    br=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mdenergy_matches_ref(n, br, seed):
+    rng = np.random.default_rng(seed)
+    pos = _lattice(rng, n)
+    f1, e1 = K.mdenergy(pos, br=br)
+    f2, e2 = R.mdenergy_ref(pos)
+    fscale = float(jnp.max(jnp.abs(f2))) + 1.0
+    np.testing.assert_allclose(f1, f2, rtol=1e-3, atol=1e-4 * fscale)
+    np.testing.assert_allclose(e1, e2, rtol=1e-4)
+
+
+def test_mdenergy_forces_sum_to_zero():
+    """Newton's third law: internal forces cancel."""
+    rng = np.random.default_rng(8)
+    pos = _lattice(rng, 64)
+    f, _ = K.mdenergy(pos)
+    np.testing.assert_allclose(jnp.sum(f, axis=0), jnp.zeros(3), atol=5e-3)
+
+
+def test_mdenergy_two_atoms_at_minimum():
+    """At r = 2^(1/6) sigma the LJ force vanishes and e = -eps per pair."""
+    r0 = 2.0 ** (1.0 / 6.0)
+    pos = jnp.array([[0, 0, 0], [r0, 0, 0]], jnp.float32)
+    f, e = K.mdenergy(pos, br=1)
+    assert float(e) == pytest.approx(-1.0, rel=1e-4)
+    np.testing.assert_allclose(f, np.zeros((2, 3)), atol=1e-4)
+
+
+# ------------------------------------------------------------------- wham
+@settings(**SET)
+@given(
+    s=st.sampled_from([2, 4, 8]),
+    b=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_wham_matches_ref(s, b, seed):
+    rng = np.random.default_rng(seed)
+    counts = jnp.abs(_rand(rng, 1, b)) + 0.1
+    bias = _rand(rng, s, b)
+    nsamp = jnp.abs(_rand(rng, s, 1)) + 1.0
+    f = _rand(rng, s, 1)
+    f1, p1 = K.wham_iterate(counts, bias, nsamp, f)
+    f2, p2 = R.wham_iterate_ref(counts, bias, nsamp, f)
+    np.testing.assert_allclose(f1, f2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-6)
+
+
+def test_wham_gauge_anchor():
+    """Output free energies are anchored at f[0] == 0."""
+    rng = np.random.default_rng(9)
+    counts = jnp.abs(_rand(rng, 1, 16)) + 0.1
+    bias = _rand(rng, 4, 16)
+    nsamp = jnp.ones((4, 1), jnp.float32)
+    f, _ = K.wham_iterate(counts, bias, nsamp, jnp.zeros((4, 1), jnp.float32))
+    assert float(f[0, 0]) == 0.0

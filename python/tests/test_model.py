@@ -1,0 +1,167 @@
+"""Layer-2 semantic tests: the per-application model graphs do what the
+paper's programs do (shape contracts + domain invariants)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import shapes
+
+
+def _vol(rng):
+    return jnp.asarray(
+        np.abs(rng.normal(size=shapes.VOLUME)).astype(np.float32)
+    )
+
+
+def _gaussian_vol(center, sigma=6.0):
+    x, y, z = shapes.VOLUME
+    xi, yi, zi = np.meshgrid(
+        np.arange(x), np.arange(y), np.arange(z), indexing="ij"
+    )
+    r2 = (
+        (xi - center[0]) ** 2 + (yi - center[1]) ** 2 + (zi - center[2]) ** 2
+    )
+    return jnp.asarray(np.exp(-r2 / (2 * sigma**2)).astype(np.float32))
+
+
+# ----------------------------------------------------------------- fMRI
+def test_reorient_artifacts_shapes():
+    rng = np.random.default_rng(0)
+    v = _vol(rng)
+    for fn in (M.fmri_reorient_x, M.fmri_reorient_y, M.fmri_reorient_z):
+        (out,) = fn(v)
+        assert out.shape == shapes.VOLUME
+
+
+def test_alignlinear_identity_for_same_volume():
+    v = _gaussian_vol((32, 32, 12))
+    (p,) = M.fmri_alignlinear(v, v)
+    np.testing.assert_allclose(p, [1, 0, 1, 0, 1, 0], atol=1e-3)
+
+
+def test_alignlinear_recovers_known_shift():
+    """A volume shifted by +4 voxels in x must yield tx ~ 4, sx ~ 1."""
+    ref = _gaussian_vol((30, 32, 12))
+    moved = _gaussian_vol((34, 32, 12))
+    (p,) = M.fmri_alignlinear(moved, ref)
+    assert p[0] == pytest.approx(1.0, abs=0.05)  # sx
+    assert p[1] == pytest.approx(4.0, abs=0.3)  # tx
+    assert p[3] == pytest.approx(0.0, abs=0.3)  # ty
+
+
+def test_align_then_reslice_reduces_misalignment():
+    ref = _gaussian_vol((30, 32, 12))
+    moved = _gaussian_vol((35, 34, 12))
+    (p,) = M.fmri_alignlinear(moved, ref)
+    (resliced,) = M.fmri_reslice(moved, p)
+    before = float(jnp.sum((moved - ref) ** 2))
+    after = float(jnp.sum((resliced - ref) ** 2))
+    assert after < 0.25 * before
+
+
+def test_fmri_chain_matches_staged_pipeline():
+    """The fused clustering chain equals the four staged artifacts."""
+    rng = np.random.default_rng(1)
+    vol, ref = _vol(rng), _gaussian_vol((32, 32, 12))
+    chained, cp = M.fmri_volume_chain(vol, ref)
+    (v1,) = M.fmri_reorient_y(vol)
+    (v2,) = M.fmri_reorient_x(v1)
+    (r1,) = M.fmri_reorient_y(ref)
+    (r2,) = M.fmri_reorient_x(r1)
+    (p,) = M.fmri_alignlinear(v2, r2)
+    (staged,) = M.fmri_reslice(v2, p)
+    np.testing.assert_allclose(cp, p, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(chained, staged, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------- Montage
+def test_difffit_recovers_plane():
+    """If a - b is exactly a plane, the fit recovers its coefficients."""
+    h, w = shapes.IMAGE_SMALL
+    ri = np.arange(h, dtype=np.float32)[:, None]
+    ci = np.arange(w, dtype=np.float32)[None, :]
+    rng = np.random.default_rng(2)
+    b = jnp.asarray(rng.normal(size=(h, w)).astype(np.float32))
+    plane = 3.0 + 0.01 * ri - 0.02 * ci
+    a = b + jnp.asarray(plane)
+    _, coeffs = M.montage_difffit(a, b)
+    np.testing.assert_allclose(coeffs, [3.0, 0.01, -0.02], rtol=1e-2, atol=1e-3)
+
+
+def test_bgcorrect_removes_fitted_plane():
+    h, w = shapes.IMAGE_SMALL
+    rng = np.random.default_rng(3)
+    img = jnp.asarray(rng.normal(size=(h, w)).astype(np.float32))
+    ri = np.arange(h, dtype=np.float32)[:, None]
+    ci = np.arange(w, dtype=np.float32)[None, :]
+    tilted = img + jnp.asarray(5.0 + 0.02 * ri + 0.01 * ci)
+    _, coeffs = M.montage_difffit(tilted, img)
+    (fixed,) = M.montage_bgcorrect(tilted, coeffs)
+    np.testing.assert_allclose(fixed, img, rtol=1e-2, atol=1e-2)
+
+
+def test_project_coadd_roundtrip_mean():
+    """Co-adding K identical projections returns the projection."""
+    rng = np.random.default_rng(4)
+    h, w = shapes.IMAGE_SMALL
+    img = jnp.asarray(rng.normal(size=(h, w)).astype(np.float32))
+    p = jnp.array([1.0, 0.0, 1.0, 0.0], jnp.float32)
+    (proj,) = M.montage_project(img, p)
+    stack = jnp.stack([proj] * shapes.COADD_K)
+    weights = jnp.ones((shapes.COADD_K,), jnp.float32)
+    (mosaic,) = M.montage_coadd(stack, weights)
+    np.testing.assert_allclose(mosaic, proj, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- MolDyn
+def _ligand(rng, n=shapes.ATOMS):
+    side = int(np.ceil(n ** (1 / 3)))
+    g = np.stack(
+        np.meshgrid(*[np.arange(side)] * 3, indexing="ij"), -1
+    ).reshape(-1, 3)[:n]
+    return jnp.asarray(
+        (g * 1.15 + rng.normal(scale=0.04, size=(n, 3))).astype(np.float32)
+    )
+
+
+def test_equilibrate_reduces_energy():
+    rng = np.random.default_rng(5)
+    pos = _ligand(rng)
+    _, e0 = M.moldyn_energy(pos)
+    pos1, _ = M.moldyn_equilibrate(pos)
+    _, e1 = M.moldyn_energy(pos1)
+    assert float(e1[0]) < float(e0[0])
+
+
+def test_equilibrate_preserves_shape_and_finiteness():
+    rng = np.random.default_rng(6)
+    pos1, e = M.moldyn_equilibrate(_ligand(rng))
+    assert pos1.shape == (shapes.ATOMS, 3)
+    assert np.isfinite(np.asarray(pos1)).all()
+    assert np.isfinite(float(e[0]))
+
+
+def test_wham_converges_to_fixed_point():
+    rng = np.random.default_rng(7)
+    s, b = shapes.WHAM_STATES, shapes.WHAM_BINS
+    counts = jnp.abs(jnp.asarray(rng.normal(size=(1, b)).astype(np.float32))) + 1.0
+    bias = jnp.asarray((rng.normal(size=(s, b)) * 0.5).astype(np.float32))
+    nsamp = jnp.ones((s, 1), jnp.float32) * 100.0
+    f, p = M.moldyn_wham(counts, bias, nsamp)
+    # One more iteration barely moves the solution.
+    from compile.kernels import wham_iterate
+
+    f2, _ = wham_iterate(counts, bias, nsamp, f)
+    np.testing.assert_allclose(f, f2, atol=5e-3)
+    assert float(f[0, 0]) == 0.0
+
+
+def test_artifact_registry_is_complete_and_lowerable_shapes():
+    """Every artifact's fn accepts its declared specs (abstract eval)."""
+    import jax
+
+    for name, (fn, specs) in M.ARTIFACTS.items():
+        out = jax.eval_shape(fn, *specs)
+        assert isinstance(out, tuple) and len(out) >= 1, name

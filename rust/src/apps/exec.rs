@@ -1,0 +1,564 @@
+//! The application registry: logical executable name -> handler.
+//!
+//! Handlers read input tensors from the files named in the task's
+//! command-line arguments, execute the corresponding AOT artifact through
+//! the PJRT runtime (compiled once per executor thread), and write output
+//! tensors. Python never runs here — this *is* the request path.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::providers::{AppRunner, AppTask};
+use crate::runtime::{self, Tensor};
+
+/// fMRI volume shape (matches python/compile/shapes.py VOLUME).
+pub const VOLUME: [usize; 3] = [64, 64, 24];
+/// Montage plate shape (matches shapes.IMAGE).
+pub const IMAGE: [usize; 2] = [512, 512];
+/// Plates per coadd invocation (shapes.COADD_K).
+pub const COADD_K: usize = 8;
+/// Atoms per ligand (shapes.ATOMS).
+pub const ATOMS: usize = 128;
+/// WHAM states/bins (shapes.WHAM_*).
+pub const WHAM_STATES: usize = 8;
+pub const WHAM_BINS: usize = 64;
+
+type Handler = Box<dyn Fn(&AppTask) -> Result<()> + Send + Sync>;
+
+/// Registry of application executables.
+pub struct AppRegistry {
+    handlers: BTreeMap<String, Handler>,
+}
+
+impl Default for AppRegistry {
+    fn default() -> Self {
+        Self::standard()
+    }
+}
+
+impl AppRegistry {
+    /// All three applications' executables, plus utility apps used by
+    /// tests and examples (`sleep0`, `sleep_ms`).
+    pub fn standard() -> Self {
+        let mut r = Self { handlers: BTreeMap::new() };
+        // Utility.
+        r.register("sleep0", |_t| Ok(()));
+        r.register("sleep_ms", |t| {
+            let ms: u64 = t.args.first().map(|s| s.parse().unwrap_or(0)).unwrap_or(0);
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        });
+        // fMRI.
+        r.register("reorient", run_reorient);
+        r.register("alignlinear", run_alignlinear);
+        r.register("reslice", run_reslice);
+        // Montage.
+        r.register("mProjectPP", run_mproject);
+        r.register("mOverlaps", run_moverlaps);
+        r.register("mDiffFit", run_mdifffit);
+        r.register("mBgModel", run_mbgmodel);
+        r.register("mBackground", run_mbackground);
+        r.register("mAdd", run_madd);
+        // MolDyn.
+        r.register("annotate", run_annotate);
+        r.register("antechamber", run_antechamber);
+        r.register("charmm_setup", run_charmm_setup);
+        r.register("equilibrate", run_equilibrate);
+        r.register("charmm_fe", run_charmm_fe);
+        r.register("wham", run_wham);
+        r.register("extract", run_extract);
+        r.register("tabulate", run_tabulate);
+        r
+    }
+
+    pub fn register(
+        &mut self,
+        name: &str,
+        f: impl Fn(&AppTask) -> Result<()> + Send + Sync + 'static,
+    ) {
+        self.handlers.insert(name.to_string(), Box::new(f));
+    }
+
+    pub fn run(&self, task: &AppTask) -> Result<()> {
+        let h = self
+            .handlers
+            .get(&task.executable)
+            .with_context(|| format!("unknown executable {}", task.executable))?;
+        h(task).with_context(|| format!("app {} {:?}", task.executable, task.args))
+    }
+
+    /// Wrap as an [`AppRunner`] for providers.
+    pub fn runner(self: Arc<Self>) -> AppRunner {
+        Arc::new(move |task: &AppTask| self.run(task))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.handlers.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+fn arg<'a>(t: &'a AppTask, i: usize) -> Result<&'a str> {
+    t.args
+        .get(i)
+        .map(|s| s.as_str())
+        .with_context(|| format!("{}: missing arg {i}", t.executable))
+}
+
+fn read_vol(path: &str) -> Result<Tensor> {
+    Tensor::read_raw(Path::new(path), &VOLUME)
+}
+
+fn read_img(path: &str) -> Result<Tensor> {
+    Tensor::read_raw(Path::new(path), &IMAGE)
+}
+
+fn write_out(t: &Tensor, path: &str) -> Result<()> {
+    let p = Path::new(path);
+    if let Some(d) = p.parent() {
+        std::fs::create_dir_all(d).ok();
+    }
+    t.write_raw(p).with_context(|| format!("write {path}"))
+}
+
+// ---------------------------------------------------------------------
+// fMRI
+// ---------------------------------------------------------------------
+
+/// `reorient in.img in.hdr out.img out.hdr direction overwrite`
+fn run_reorient(t: &AppTask) -> Result<()> {
+    let vol = read_vol(arg(t, 0)?)?;
+    let direction = arg(t, 4)?;
+    let artifact = match direction {
+        "x" => "reorient_x",
+        "y" => "reorient_y",
+        "z" => "reorient_z",
+        other => bail!("reorient: bad direction {other}"),
+    };
+    let out = runtime::execute(artifact, &[vol])?.remove(0);
+    write_out(&out, arg(t, 2)?)?;
+    // Header travels unchanged.
+    std::fs::copy(arg(t, 1)?, arg(t, 3)?).context("copy hdr")?;
+    Ok(())
+}
+
+/// `alignlinear std.img in.img out.air model`
+fn run_alignlinear(t: &AppTask) -> Result<()> {
+    let std_vol = read_vol(arg(t, 0)?)?;
+    let vol = read_vol(arg(t, 1)?)?;
+    let params = runtime::execute("alignlinear", &[vol, std_vol])?.remove(0);
+    write_out(&params, arg(t, 2)?)
+}
+
+/// `reslice air in.img in.hdr out.img out.hdr`
+fn run_reslice(t: &AppTask) -> Result<()> {
+    let params = Tensor::read_raw(Path::new(arg(t, 0)?), &[6])?;
+    let vol = read_vol(arg(t, 1)?)?;
+    let out = runtime::execute("reslice", &[vol, params])?.remove(0);
+    write_out(&out, arg(t, 3)?)?;
+    std::fs::copy(arg(t, 2)?, arg(t, 4)?).context("copy hdr")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Montage
+// ---------------------------------------------------------------------
+
+/// Plate metadata: each line `idx row_off col_off` (sky position of the
+/// plate in mosaic pixel coordinates).
+fn parse_meta(path: &str) -> Result<Vec<(usize, f32, f32)>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+    let mut out = Vec::new();
+    for line in text.lines().skip(1) {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() >= 3 {
+            out.push((parts[0].parse()?, parts[1].parse()?, parts[2].parse()?));
+        }
+    }
+    Ok(out)
+}
+
+/// `mProjectPP plate.img plate_idx meta.tbl out.img`
+///
+/// Projects the plate into the common mosaic frame: the projection is the
+/// separable affine resample whose shifts come from the plate's sky
+/// position modulo the plate grid (sub-pixel registration).
+fn run_mproject(t: &AppTask) -> Result<()> {
+    let img = read_img(arg(t, 0)?)?;
+    let idx: usize = arg(t, 1)?.parse()?;
+    let meta = parse_meta(arg(t, 2)?)?;
+    let (_, row_off, col_off) = meta
+        .iter()
+        .find(|(i, _, _)| *i == idx)
+        .copied()
+        .with_context(|| format!("plate {idx} not in metadata"))?;
+    // Sub-pixel part of the offset is corrected by resampling.
+    let params = Tensor::vec(vec![
+        1.0,
+        row_off.fract(),
+        1.0,
+        col_off.fract(),
+    ]);
+    let out = runtime::execute("mproject", &[img, params])?.remove(0);
+    write_out(&out, arg(t, 3)?)
+}
+
+/// `mOverlaps meta.tbl out.tbl` — computes the overlapping-pair table
+/// (paper Figure 2 format: |-delimited, header + type row).
+fn run_moverlaps(t: &AppTask) -> Result<()> {
+    let meta = parse_meta(arg(t, 0)?)?;
+    let side = IMAGE[0] as f32;
+    let mut rows = String::from("| cntr1 | cntr2 | plus | minus | diff |\n");
+    rows.push_str("| int | int | char | char | char |\n");
+    let dir = Path::new(arg(t, 0)?)
+        .parent()
+        .unwrap_or(Path::new("."))
+        .to_path_buf();
+    let mut count = 0;
+    for (i, (ia, ra, ca)) in meta.iter().enumerate() {
+        for (ib, rb, cb) in meta.iter().skip(i + 1) {
+            if (ra - rb).abs() < side && (ca - cb).abs() < side {
+                let plus = dir.join(format!("plate_{ia:04}.img"));
+                let minus = dir.join(format!("plate_{ib:04}.img"));
+                rows.push_str(&format!(
+                    "| {} | {} | {} | {} | diff.{:06}.{:06}.img |\n",
+                    ia,
+                    ib,
+                    plus.display(),
+                    minus.display(),
+                    ia,
+                    ib
+                ));
+                count += 1;
+            }
+        }
+    }
+    let _ = count;
+    let out = arg(t, 1)?;
+    if let Some(d) = Path::new(out).parent() {
+        std::fs::create_dir_all(d).ok();
+    }
+    std::fs::write(out, rows).with_context(|| format!("write {out}"))
+}
+
+/// `mDiffFit a.img b.img out_diff.img out_fit.dat`
+fn run_mdifffit(t: &AppTask) -> Result<()> {
+    let a = read_img(arg(t, 0)?)?;
+    let b = read_img(arg(t, 1)?)?;
+    let mut outs = runtime::execute("mdifffit", &[a, b])?;
+    let coeffs = outs.remove(1);
+    let diff = outs.remove(0);
+    write_out(&diff, arg(t, 2)?)?;
+    write_out(&coeffs, arg(t, 3)?)
+}
+
+/// `mBgModel fit1.dat fit2.dat ... out.tbl` — global background model:
+/// averages the pairwise plane fits into one correction per plate (our
+/// simplified rectification: mean plane).
+fn run_mbgmodel(t: &AppTask) -> Result<()> {
+    if t.args.len() < 2 {
+        bail!("mBgModel: need fits + output");
+    }
+    let (fits, out) = t.args.split_at(t.args.len() - 1);
+    let mut acc = [0.0f64; 3];
+    for f in fits {
+        let c = Tensor::read_raw(Path::new(f), &[3])?;
+        for k in 0..3 {
+            acc[k] += c.data[k] as f64;
+        }
+    }
+    let n = fits.len().max(1) as f64;
+    let mut text = String::from("c0 c1 c2\n");
+    text.push_str(&format!(
+        "{} {} {}\n",
+        acc[0] / (2.0 * n),
+        acc[1] / (2.0 * n),
+        acc[2] / (2.0 * n)
+    ));
+    std::fs::write(&out[0], text).context("write bg model")
+}
+
+/// `mBackground in.img bg.tbl idx out.img`
+fn run_mbackground(t: &AppTask) -> Result<()> {
+    let img = read_img(arg(t, 0)?)?;
+    let text = std::fs::read_to_string(arg(t, 1)?)?;
+    let line = text.lines().nth(1).context("bg model empty")?;
+    let c: Vec<f32> = line
+        .split_whitespace()
+        .map(|s| s.parse().unwrap_or(0.0))
+        .collect();
+    let coeffs = Tensor::vec(vec![c[0], c[1], c[2]]);
+    let out = runtime::execute("mbgcorrect", &[img, coeffs])?.remove(0);
+    write_out(&out, arg(t, 3)?)
+}
+
+/// `mAdd img1 img2 ... out.img` — hierarchical co-addition in chunks of
+/// COADD_K through the madd artifact.
+fn run_madd(t: &AppTask) -> Result<()> {
+    if t.args.len() < 2 {
+        bail!("mAdd: need images + output");
+    }
+    let (imgs, out) = t.args.split_at(t.args.len() - 1);
+    let mut layer: Vec<Tensor> = imgs
+        .iter()
+        .map(|p| read_img(p))
+        .collect::<Result<_>>()?;
+    while layer.len() > 1 {
+        let mut next = Vec::with_capacity(layer.len().div_ceil(COADD_K));
+        for chunk in layer.chunks(COADD_K) {
+            let mut stack = Vec::with_capacity(COADD_K * IMAGE[0] * IMAGE[1]);
+            let mut weights = vec![0.0f32; COADD_K];
+            for (i, img) in chunk.iter().enumerate() {
+                stack.extend_from_slice(&img.data);
+                weights[i] = 1.0;
+            }
+            // Pad to K plates.
+            stack.resize(COADD_K * IMAGE[0] * IMAGE[1], 0.0);
+            let stack_t =
+                Tensor::new(vec![COADD_K, IMAGE[0], IMAGE[1]], stack);
+            let w = Tensor::vec(weights);
+            next.push(runtime::execute("madd", &[stack_t, w])?.remove(0));
+        }
+        layer = next;
+    }
+    write_out(&layer[0], &out[0])
+}
+
+// ---------------------------------------------------------------------
+// MolDyn
+// ---------------------------------------------------------------------
+
+/// `annotate lib.tbl out.chg` — study-wide charge annotation (stage 1).
+fn run_annotate(t: &AppTask) -> Result<()> {
+    let text = std::fs::read_to_string(arg(t, 0)?)?;
+    let n = text.lines().count();
+    std::fs::write(arg(t, 1)?, format!("charges for {n} molecules\n"))?;
+    Ok(())
+}
+
+/// `antechamber mol.pos out.par` — derive per-molecule parameters
+/// (atom/bond typing): summarizes the geometry into force-field scales.
+fn run_antechamber(t: &AppTask) -> Result<()> {
+    let pos = Tensor::read_raw(Path::new(arg(t, 0)?), &[ATOMS, 3])?;
+    // Parameter vector: per-axis extents + centroid (simple but real
+    // geometry analysis).
+    let mut mins = [f32::INFINITY; 3];
+    let mut maxs = [f32::NEG_INFINITY; 3];
+    let mut sums = [0.0f32; 3];
+    for a in pos.data.chunks(3) {
+        for d in 0..3 {
+            mins[d] = mins[d].min(a[d]);
+            maxs[d] = maxs[d].max(a[d]);
+            sums[d] += a[d];
+        }
+    }
+    let n = ATOMS as f32;
+    let par = Tensor::vec(vec![
+        maxs[0] - mins[0],
+        maxs[1] - mins[1],
+        maxs[2] - mins[2],
+        sums[0] / n,
+        sums[1] / n,
+        sums[2] / n,
+    ]);
+    write_out(&par, arg(t, 1)?)
+}
+
+/// `charmm_setup mol.pos par out.psf`
+fn run_charmm_setup(t: &AppTask) -> Result<()> {
+    let par = Tensor::read_raw(Path::new(arg(t, 1)?), &[6])?;
+    write_out(&par, arg(t, 2)?)
+}
+
+/// `equilibrate mol.pos psf out.pos out.ene` — CHARMM equilibration via
+/// the mdequil artifact (20 steepest-descent steps in one dispatch).
+fn run_equilibrate(t: &AppTask) -> Result<()> {
+    let pos = Tensor::read_raw(Path::new(arg(t, 0)?), &[ATOMS, 3])?;
+    let mut outs = runtime::execute("mdequil", &[pos])?;
+    let ene = outs.remove(1);
+    let eq = outs.remove(0);
+    write_out(&eq, arg(t, 2)?)?;
+    write_out(&ene, arg(t, 3)?)
+}
+
+/// `charmm_fe eq.pos stage out.hist` — free-energy-perturbation sampling
+/// at one coupling stage: perturb, single-point energies via mdenergy,
+/// histogram pair energies.
+fn run_charmm_fe(t: &AppTask) -> Result<()> {
+    let pos = Tensor::read_raw(Path::new(arg(t, 0)?), &[ATOMS, 3])?;
+    let stage: usize = arg(t, 1)?.parse()?;
+    // Coupling: scale coordinates slightly per stage (soft-core analogue).
+    let lambda = 1.0 + 0.004 * (stage as f32 + 1.0);
+    let scaled = Tensor::new(
+        vec![ATOMS, 3],
+        pos.data.iter().map(|v| v * lambda).collect(),
+    );
+    let outs = runtime::execute("mdenergy", &[scaled])?;
+    let forces = &outs[0];
+    // Histogram per-atom force magnitudes into WHAM_BINS.
+    let mut hist = vec![0.0f32; WHAM_BINS];
+    for f in forces.data.chunks(3) {
+        let mag = (f[0] * f[0] + f[1] * f[1] + f[2] * f[2]).sqrt();
+        let bin = ((mag / 4.0) as usize).min(WHAM_BINS - 1);
+        hist[bin] += 1.0;
+    }
+    write_out(&Tensor::vec(hist), arg(t, 2)?)
+}
+
+/// `wham hist1 hist2 ... out.fe` — combine stage histograms via the WHAM
+/// artifact (50 fixed-point iterations in one dispatch).
+fn run_wham(t: &AppTask) -> Result<()> {
+    if t.args.len() < 2 {
+        bail!("wham: need histograms + output");
+    }
+    let (hists, out) = t.args.split_at(t.args.len() - 1);
+    // Aggregate the (up to 68) stage histograms into WHAM_STATES groups.
+    let mut counts = vec![0.0f32; WHAM_BINS];
+    let mut nsamp = vec![0.0f32; WHAM_STATES];
+    for (i, h) in hists.iter().enumerate() {
+        let t = Tensor::read_raw(Path::new(h), &[WHAM_BINS])?;
+        let total: f32 = t.data.iter().sum();
+        nsamp[i % WHAM_STATES] += total;
+        for (c, v) in counts.iter_mut().zip(&t.data) {
+            *c += v;
+        }
+    }
+    // Bias energies: linear per-state ramp over bins (coupling schedule).
+    let mut bias = Vec::with_capacity(WHAM_STATES * WHAM_BINS);
+    for s in 0..WHAM_STATES {
+        for b in 0..WHAM_BINS {
+            bias.push(0.01 * s as f32 * (b as f32 - WHAM_BINS as f32 / 2.0));
+        }
+    }
+    let f = runtime::execute(
+        "wham",
+        &[
+            Tensor::new(vec![1, WHAM_BINS], counts),
+            Tensor::new(vec![WHAM_STATES, WHAM_BINS], bias),
+            Tensor::new(
+                vec![WHAM_STATES, 1],
+                nsamp.iter().map(|v| v.max(1.0)).collect(),
+            ),
+        ],
+    )?
+    .remove(0);
+    write_out(&f, &out[0])
+}
+
+/// `extract in.fe out.fe` — pull one free-energy value forward.
+fn run_extract(t: &AppTask) -> Result<()> {
+    let f = Tensor::read_raw(Path::new(arg(t, 0)?), &[WHAM_STATES, 1])?;
+    write_out(&f, arg(t, 1)?)
+}
+
+/// `tabulate in.fe out.txt` — final tabular form (stage 8).
+fn run_tabulate(t: &AppTask) -> Result<()> {
+    let f = Tensor::read_raw(Path::new(arg(t, 0)?), &[WHAM_STATES, 1])?;
+    let mut text = String::from("state\tfree_energy\n");
+    for (i, v) in f.data.iter().enumerate() {
+        text.push_str(&format!("{i}\t{v}\n"));
+    }
+    std::fs::write(arg(t, 1)?, text)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_paper_executables() {
+        let r = AppRegistry::standard();
+        for name in [
+            "reorient",
+            "alignlinear",
+            "reslice",
+            "mProjectPP",
+            "mOverlaps",
+            "mDiffFit",
+            "mBgModel",
+            "mBackground",
+            "mAdd",
+            "annotate",
+            "antechamber",
+            "equilibrate",
+            "charmm_fe",
+            "wham",
+        ] {
+            assert!(r.names().contains(&name), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_executable_is_an_error() {
+        let r = AppRegistry::standard();
+        let t = AppTask {
+            id: 1,
+            key: "k".into(),
+            executable: "nope".into(),
+            args: vec![],
+            inputs: vec![],
+            outputs: vec![],
+        };
+        assert!(r.run(&t).is_err());
+    }
+
+    #[test]
+    fn moverlaps_counts_pairs_on_grid() {
+        let d = std::env::temp_dir().join("gridswift_exec_mov");
+        std::fs::create_dir_all(&d).unwrap();
+        // 2x2 grid of plates, half-plate spacing: all pairs overlap.
+        let meta = d.join("plates.meta");
+        std::fs::write(
+            &meta,
+            "idx row col\n0 0 0\n1 0 256\n2 256 0\n3 256 256\n",
+        )
+        .unwrap();
+        let out = d.join("overlaps.tbl");
+        let t = AppTask {
+            id: 1,
+            key: "k".into(),
+            executable: "mOverlaps".into(),
+            args: vec![
+                meta.to_string_lossy().into_owned(),
+                out.to_string_lossy().into_owned(),
+            ],
+            inputs: vec![],
+            outputs: vec![],
+        };
+        run_moverlaps(&t).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        // header + type row + 6 pairs (all C(4,2) overlap).
+        assert_eq!(text.lines().count(), 2 + 6, "{text}");
+        assert!(text.contains("| 0 | 1 |"));
+    }
+
+    #[test]
+    fn bgmodel_averages_fits() {
+        let d = std::env::temp_dir().join("gridswift_exec_bg");
+        std::fs::create_dir_all(&d).unwrap();
+        let f1 = d.join("f1.dat");
+        let f2 = d.join("f2.dat");
+        Tensor::vec(vec![2.0, 0.02, -0.01]).write_raw(&f1).unwrap();
+        Tensor::vec(vec![4.0, 0.04, -0.03]).write_raw(&f2).unwrap();
+        let out = d.join("bg.tbl");
+        let t = AppTask {
+            id: 1,
+            key: "k".into(),
+            executable: "mBgModel".into(),
+            args: vec![
+                f1.to_string_lossy().into_owned(),
+                f2.to_string_lossy().into_owned(),
+                out.to_string_lossy().into_owned(),
+            ],
+            inputs: vec![],
+            outputs: vec![],
+        };
+        run_mbgmodel(&t).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        // mean/2: (3, 0.03, -0.02)/... -> c0 = 1.5
+        assert!(text.lines().nth(1).unwrap().starts_with("1.5 "), "{text}");
+    }
+}

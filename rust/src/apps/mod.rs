@@ -1,0 +1,20 @@
+//! The paper's evaluation applications (§5.4) as real workloads:
+//!
+//! - [`exec`] — the app registry: binds the logical executables that
+//!   SwiftScript `app` blocks invoke (reorient, alignlinear, mProjectPP,
+//!   mDiffFit, charmm_fe, ...) to AOT-compiled PJRT artifacts via the
+//!   runtime. This is what providers run on the hot path.
+//! - [`fmri`] — fMRI spatial-normalization study: synthetic volume
+//!   generator + the Figure 1 workflow source.
+//! - [`montage`] — astronomy mosaics: synthetic plate survey + the §3.6
+//!   *dynamic* workflow (overlap table computed at runtime, csv-mapped,
+//!   fanned out).
+//! - [`moldyn`] — MolDyn free-energy study: ligand library generator +
+//!   the 1+84N-job workflow.
+
+pub mod exec;
+pub mod fmri;
+pub mod moldyn;
+pub mod montage;
+
+pub use exec::AppRegistry;

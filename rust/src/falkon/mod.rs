@@ -1,0 +1,24 @@
+//! Falkon — the Fast and Light-weight tasK executiON framework (paper §4),
+//! real-clock implementation.
+//!
+//! Falkon separates *resource provisioning* (acquiring executors) from
+//! *task dispatch* (mapping queued tasks to acquired executors):
+//!
+//! - [`service`] — the execution service: service queue, streamlined
+//!   dispatcher, executor registry, DRP manager thread.
+//! - [`provider`] — the Karajan [`crate::providers::Provider`] adapter
+//!   ("the Falkon provider that we developed", §5.3).
+//! - [`protocol`] — the client-facing network endpoint (the paper's
+//!   WS-interface analogue): a line-oriented TCP protocol plus a client.
+//!
+//! The virtual-time Falkon *model* used for paper-scale experiments lives
+//! in [`crate::sim::falkon_model`]; this module is the real data path the
+//! end-to-end examples and throughput microbenchmarks exercise.
+
+pub mod protocol;
+pub mod provider;
+pub mod service;
+
+pub use protocol::{FalkonClient, FalkonTcpServer};
+pub use provider::FalkonProvider;
+pub use service::{FalkonService, FalkonServiceConfig, RealDrpPolicy, ServiceStats};

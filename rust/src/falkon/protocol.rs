@@ -1,0 +1,300 @@
+//! Falkon network endpoint: the client-facing interface (the paper's
+//! Web-Services interface analogue) as a line-oriented TCP protocol.
+//!
+//! Protocol (one request per line, UTF-8):
+//!
+//! ```text
+//! C->S:  SUBMIT <id> <executable> [args...]
+//! S->C:  RESULT <id> <ok|err> <exec_us> <wait_us> [error...]
+//! C->S:  STATS
+//! S->C:  STATS <submitted> <completed> <failed> <queue> <executors>
+//! C->S:  QUIT
+//! ```
+//!
+//! Executors remain in-process (this testbed is one host); the endpoint
+//! exists so remote clients — and the fig12 "submit from a different
+//! host" benchmark — exercise a real network hop on the submit path.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::providers::AppTask;
+
+use super::service::FalkonService;
+
+/// TCP front-end for a Falkon service.
+pub struct FalkonTcpServer {
+    addr: std::net::SocketAddr,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl FalkonTcpServer {
+    /// Bind and serve (background threads). Use port 0 for ephemeral.
+    pub fn start(service: Arc<FalkonService>, bind: &str) -> Result<Self> {
+        let listener = TcpListener::bind(bind).context("bind falkon endpoint")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let sd = Arc::clone(&shutdown);
+        let accept_thread = std::thread::Builder::new()
+            .name("falkon-accept".into())
+            .spawn(move || {
+                loop {
+                    if sd.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let svc = Arc::clone(&service);
+                            std::thread::spawn(move || {
+                                let _ = serve_conn(stream, svc);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => return,
+                    }
+                }
+            })?;
+        Ok(Self { addr, accept_thread: Some(accept_thread), shutdown })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for FalkonTcpServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_conn(stream: TcpStream, svc: Arc<FalkonService>) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let writer = Arc::new(std::sync::Mutex::new(stream));
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // peer closed
+        }
+        let parts: Vec<&str> = line.trim().split(' ').collect();
+        match parts.first().copied() {
+            Some("SUBMIT") if parts.len() >= 3 => {
+                let id: u64 = parts[1].parse().context("bad id")?;
+                let executable = parts[2].to_string();
+                let args: Vec<String> =
+                    parts[3..].iter().map(|s| s.to_string()).collect();
+                let task = AppTask {
+                    id,
+                    key: format!("tcp/{peer:?}/{id}"),
+                    executable,
+                    args,
+                    inputs: vec![],
+                    outputs: vec![],
+                };
+                let w = Arc::clone(&writer);
+                svc.submit(
+                    task,
+                    Box::new(move |r| {
+                        let status = if r.ok { "ok" } else { "err" };
+                        let err = r.error.unwrap_or_default().replace('\n', " ");
+                        let msg = format!(
+                            "RESULT {} {} {} {} {}\n",
+                            r.id, status, r.exec_us, r.wait_us, err
+                        );
+                        if let Ok(mut s) = w.lock() {
+                            let _ = s.write_all(msg.as_bytes());
+                        }
+                    }),
+                );
+            }
+            Some("STATS") => {
+                let st = svc.stats();
+                let msg = format!(
+                    "STATS {} {} {} {} {}\n",
+                    st.submitted.load(Ordering::SeqCst),
+                    st.completed.load(Ordering::SeqCst),
+                    st.failed.load(Ordering::SeqCst),
+                    svc.queue_len(),
+                    svc.live_executors(),
+                );
+                writer.lock().unwrap().write_all(msg.as_bytes())?;
+            }
+            Some("QUIT") => return Ok(()),
+            other => bail!("bad request {other:?}"),
+        }
+    }
+}
+
+/// A blocking TCP client for the Falkon endpoint.
+pub struct FalkonClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// One result line from the service.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemoteResult {
+    pub id: u64,
+    pub ok: bool,
+    pub exec_us: u64,
+    pub wait_us: u64,
+    pub error: String,
+}
+
+impl FalkonClient {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connect falkon")?;
+        stream.set_nodelay(true).ok();
+        Ok(Self { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// Fire a submission without waiting.
+    pub fn submit(&mut self, id: u64, executable: &str, args: &[&str]) -> Result<()> {
+        let mut line = format!("SUBMIT {id} {executable}");
+        for a in args {
+            line.push(' ');
+            line.push_str(a);
+        }
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        Ok(())
+    }
+
+    /// Read the next RESULT line (results may arrive out of order).
+    pub fn next_result(&mut self) -> Result<RemoteResult> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                bail!("connection closed");
+            }
+            let parts: Vec<&str> = line.trim().splitn(6, ' ').collect();
+            if parts.first() == Some(&"RESULT") && parts.len() >= 5 {
+                return Ok(RemoteResult {
+                    id: parts[1].parse()?,
+                    ok: parts[2] == "ok",
+                    exec_us: parts[3].parse()?,
+                    wait_us: parts[4].parse()?,
+                    error: parts.get(5).unwrap_or(&"").to_string(),
+                });
+            }
+        }
+    }
+
+    /// Convenience: submit and wait for that id.
+    pub fn run(&mut self, id: u64, executable: &str, args: &[&str]) -> Result<RemoteResult> {
+        self.submit(id, executable, args)?;
+        loop {
+            let r = self.next_result()?;
+            if r.id == id {
+                return Ok(r);
+            }
+        }
+    }
+
+    /// Query service stats.
+    pub fn stats(&mut self) -> Result<(u64, u64, u64, usize, usize)> {
+        self.writer.write_all(b"STATS\n")?;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                bail!("connection closed");
+            }
+            let parts: Vec<&str> = line.trim().split(' ').collect();
+            if parts.first() == Some(&"STATS") && parts.len() == 6 {
+                return Ok((
+                    parts[1].parse()?,
+                    parts[2].parse()?,
+                    parts[3].parse()?,
+                    parts[4].parse()?,
+                    parts[5].parse()?,
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::falkon::service::{FalkonServiceConfig, RealDrpPolicy};
+    use std::time::Duration;
+
+    fn start_svc() -> (Arc<FalkonService>, FalkonTcpServer) {
+        let svc = FalkonService::start(
+            FalkonServiceConfig {
+                drp: RealDrpPolicy::static_pool(2),
+                executor_overhead: Duration::ZERO,
+            },
+            Arc::new(|t| {
+                if t.executable == "fail" {
+                    anyhow::bail!("requested failure")
+                }
+                Ok(())
+            }),
+        );
+        let server = FalkonTcpServer::start(Arc::clone(&svc), "127.0.0.1:0").unwrap();
+        (svc, server)
+    }
+
+    #[test]
+    fn tcp_submit_roundtrip() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect(server.addr()).unwrap();
+        let r = client.run(1, "sleep0", &[]).unwrap();
+        assert!(r.ok);
+        assert_eq!(r.id, 1);
+    }
+
+    #[test]
+    fn tcp_reports_failures() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect(server.addr()).unwrap();
+        let r = client.run(2, "fail", &[]).unwrap();
+        assert!(!r.ok);
+        assert!(r.error.contains("requested failure"));
+    }
+
+    #[test]
+    fn tcp_pipeline_many_submissions() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect(server.addr()).unwrap();
+        let n = 200;
+        for i in 0..n {
+            client.submit(i, "sleep0", &[]).unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..n {
+            let r = client.next_result().unwrap();
+            assert!(r.ok);
+            seen.insert(r.id);
+        }
+        assert_eq!(seen.len(), n as usize);
+    }
+
+    #[test]
+    fn tcp_stats_query() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect(server.addr()).unwrap();
+        client.run(1, "sleep0", &[]).unwrap();
+        let (submitted, completed, failed, _q, execs) = client.stats().unwrap();
+        assert_eq!(submitted, 1);
+        assert_eq!(completed, 1);
+        assert_eq!(failed, 0);
+        assert_eq!(execs, 2);
+    }
+}

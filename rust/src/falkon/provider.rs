@@ -1,0 +1,127 @@
+//! The Falkon provider: adapts [`FalkonService`] to the Karajan
+//! [`Provider`] interface (paper §5.3: "submitting jobs to the Falkon
+//! service via the Falkon provider that we developed").
+
+use std::sync::{Arc, Mutex};
+
+use crate::providers::{AppTask, BundleDone, Provider, TaskResult};
+
+use super::service::FalkonService;
+
+/// Provider adapter over a running Falkon service.
+pub struct FalkonProvider {
+    name: String,
+    service: Arc<FalkonService>,
+}
+
+impl FalkonProvider {
+    pub fn new(name: &str, service: Arc<FalkonService>) -> Self {
+        Self { name: name.to_string(), service }
+    }
+
+    pub fn service(&self) -> &Arc<FalkonService> {
+        &self.service
+    }
+}
+
+impl Provider for FalkonProvider {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn submit(&self, bundle: Vec<AppTask>, done: BundleDone) {
+        // Falkon's fine-grained dispatch makes clustering unnecessary
+        // (paper §3.13), but the provider interface allows bundles:
+        // submit each task individually and aggregate completions.
+        let n = bundle.len();
+        if n == 0 {
+            done(Vec::new());
+            return;
+        }
+        struct Agg {
+            results: Vec<Option<TaskResult>>,
+            remaining: usize,
+            done: Option<BundleDone>,
+        }
+        let agg = Arc::new(Mutex::new(Agg {
+            results: (0..n).map(|_| None).collect(),
+            remaining: n,
+            done: Some(done),
+        }));
+        for (i, task) in bundle.into_iter().enumerate() {
+            let agg = Arc::clone(&agg);
+            self.service.submit(
+                task,
+                Box::new(move |r| {
+                    let mut a = agg.lock().unwrap();
+                    a.results[i] = Some(r);
+                    a.remaining -= 1;
+                    if a.remaining == 0 {
+                        let results =
+                            a.results.drain(..).map(|r| r.unwrap()).collect();
+                        let done = a.done.take().unwrap();
+                        drop(a);
+                        done(results);
+                    }
+                }),
+            );
+        }
+    }
+
+    fn slots(&self) -> usize {
+        self.service.live_executors().max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::falkon::service::{FalkonServiceConfig, RealDrpPolicy};
+    use std::time::Duration;
+
+    fn task(id: u64) -> AppTask {
+        AppTask {
+            id,
+            key: format!("k{id}"),
+            executable: "x".into(),
+            args: vec![],
+            inputs: vec![],
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn bundles_aggregate_in_order() {
+        let svc = FalkonService::start(
+            FalkonServiceConfig {
+                drp: RealDrpPolicy::static_pool(4),
+                executor_overhead: Duration::ZERO,
+            },
+            Arc::new(|_t| Ok(())),
+        );
+        let p = FalkonProvider::new("falkon", svc);
+        let (tx, rx) = std::sync::mpsc::channel();
+        p.submit(
+            (0..8).map(task).collect(),
+            Box::new(move |rs| tx.send(rs).unwrap()),
+        );
+        let rs = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(rs.len(), 8);
+        for (i, r) in rs.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "results keep bundle order");
+            assert!(r.ok);
+        }
+    }
+
+    #[test]
+    fn empty_bundle_completes_immediately() {
+        let svc = FalkonService::start(
+            FalkonServiceConfig::default(),
+            Arc::new(|_t| Ok(())),
+        );
+        let p = FalkonProvider::new("falkon", svc);
+        let (tx, rx) = std::sync::mpsc::channel();
+        p.submit(vec![], Box::new(move |rs| tx.send(rs).unwrap()));
+        assert!(rx.recv_timeout(Duration::from_secs(1)).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,1205 @@
+//! The Karajan-style dataflow engine (paper §3.8–3.11).
+//!
+//! The engine interprets a [`TypedProgram`] with *no dependency analysis*:
+//! every statement is instantiated immediately, producing futures and open
+//! collections; data availability alone drives execution ("we treat all
+//! computations as parallel and the future mechanism establishes the
+//! dependencies"). Instantiation work runs as lightweight tasks
+//! (continuations) on a single control thread — the engine's analogue of
+//! Karajan's lightweight threads: an idle workflow node costs a closure on
+//! a queue plus its futures, not an OS thread stack.
+//!
+//! Atomic procedure calls become [`AppTask`]s submitted through the
+//! [`GridScheduler`] when their inputs materialize; completions post
+//! continuations back to the control queue. `foreach` expands *at
+//! runtime* as collection elements arrive (dynamic workflow structure,
+//! §3.6), which also yields pipelining across stages for free (§3.13,
+//! Figure 10) — disable with [`EngineConfig::pipelining`] to reproduce the
+//! staged baseline.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::future::{link_slots, ArraySlot, Cont, ControlSink, DataFuture, Slot};
+use super::restart::RestartLog;
+use super::scheduler::GridScheduler;
+use crate::providers::AppTask;
+use crate::swiftscript::ast::*;
+use crate::swiftscript::TypedProgram;
+use crate::xdtm::mappers::MapperParams;
+use crate::xdtm::types::Type;
+use crate::xdtm::{MapperRegistry, Value};
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Directory for synthesized intermediate/output files.
+    pub workdir: PathBuf,
+    /// Data-driven pipelining across stages (paper default: on).
+    pub pipelining: bool,
+    /// Restart log path (None disables resume support).
+    pub restart_log: Option<PathBuf>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            workdir: std::env::temp_dir().join("gridswift_work"),
+            pipelining: true,
+            restart_log: None,
+        }
+    }
+}
+
+/// Result of a run.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Values of fully materialized global variables.
+    pub outputs: BTreeMap<String, Value>,
+    /// Tasks actually executed.
+    pub executed: u64,
+    /// Tasks skipped via the restart log.
+    pub skipped: u64,
+    /// Scheduler timeline (wall clock).
+    pub timeline: crate::metrics::Timeline,
+}
+
+// ---------------------------------------------------------------------
+// Control queue (the lightweight-thread scheduler)
+// ---------------------------------------------------------------------
+
+struct ControlQueue {
+    q: Mutex<VecDeque<Cont>>,
+    cv: Condvar,
+}
+
+impl ControlQueue {
+    fn new() -> Arc<Self> {
+        Arc::new(Self { q: Mutex::new(VecDeque::new()), cv: Condvar::new() })
+    }
+}
+
+impl ControlSink for ControlQueue {
+    fn post(&self, c: Cont) {
+        self.q.lock().unwrap().push_back(c);
+        self.cv.notify_one();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Environments (lexical scopes as shared frames)
+// ---------------------------------------------------------------------
+
+struct EnvInner {
+    vars: Mutex<BTreeMap<String, Slot>>,
+    parent: Option<Env>,
+}
+
+#[derive(Clone)]
+struct Env(Arc<EnvInner>);
+
+impl Env {
+    fn root() -> Env {
+        Env(Arc::new(EnvInner { vars: Mutex::new(BTreeMap::new()), parent: None }))
+    }
+
+    fn child(&self) -> Env {
+        Env(Arc::new(EnvInner {
+            vars: Mutex::new(BTreeMap::new()),
+            parent: Some(self.clone()),
+        }))
+    }
+
+    fn bind(&self, name: &str, slot: Slot) {
+        self.0.vars.lock().unwrap().insert(name.to_string(), slot);
+    }
+
+    fn lookup(&self, name: &str) -> Result<Slot> {
+        let mut cur = Some(self.clone());
+        while let Some(e) = cur {
+            if let Some(s) = e.0.vars.lock().unwrap().get(name) {
+                return Ok(s.clone());
+            }
+            cur = e.0.parent.clone();
+        }
+        bail!("undefined variable {name} at runtime")
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------
+
+/// The dataflow engine. Construct per run.
+pub struct Engine {
+    cfg: EngineConfig,
+    sched: Arc<GridScheduler>,
+    mappers: Arc<MapperRegistry>,
+}
+
+struct Interp {
+    prog: Arc<TypedProgram>,
+    cfg: EngineConfig,
+    queue: Arc<ControlQueue>,
+    sink: Arc<dyn ControlSink>,
+    sched: Arc<GridScheduler>,
+    mappers: Arc<MapperRegistry>,
+    outstanding: AtomicU64,
+    executed: AtomicU64,
+    skipped: AtomicU64,
+    failed: Mutex<Option<String>>,
+    restart: Option<RestartLog>,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig, sched: Arc<GridScheduler>) -> Self {
+        Self { cfg, sched, mappers: Arc::new(MapperRegistry::standard()) }
+    }
+
+    pub fn with_mappers(mut self, mappers: MapperRegistry) -> Self {
+        self.mappers = Arc::new(mappers);
+        self
+    }
+
+    /// Run a typed program to completion.
+    pub fn run(&self, prog: &TypedProgram) -> Result<RunReport> {
+        std::fs::create_dir_all(&self.cfg.workdir)
+            .with_context(|| format!("create workdir {:?}", self.cfg.workdir))?;
+        let queue = ControlQueue::new();
+        let restart = match &self.cfg.restart_log {
+            Some(p) => Some(RestartLog::open(p)?),
+            None => None,
+        };
+        let interp = Arc::new(Interp {
+            prog: Arc::new(prog.clone()),
+            cfg: self.cfg.clone(),
+            sink: Arc::clone(&queue) as Arc<dyn ControlSink>,
+            queue: Arc::clone(&queue),
+            sched: Arc::clone(&self.sched),
+            mappers: Arc::clone(&self.mappers),
+            outstanding: AtomicU64::new(0),
+            executed: AtomicU64::new(0),
+            skipped: AtomicU64::new(0),
+            failed: Mutex::new(None),
+            restart,
+        });
+
+        // Instantiate the global program on the control thread.
+        let globals = Env::root();
+        {
+            let interp2 = Arc::clone(&interp);
+            let env = globals.clone();
+            let stmts = prog.globals.clone();
+            queue.post(Box::new(move || {
+                if let Err(e) = interp2.exec_stmts(&stmts, &env, "main") {
+                    interp2.fail(format!("{e:#}"));
+                }
+            }));
+        }
+
+        // Control loop: run lightweight tasks until quiescent. On
+        // failure, stop once in-flight provider work drains (joins for
+        // downstream tasks will never fire; don't wait for them).
+        loop {
+            let cont = {
+                let mut q = queue.q.lock().unwrap();
+                loop {
+                    if let Some(c) = q.pop_front() {
+                        break Some(c);
+                    }
+                    if interp.outstanding.load(Ordering::SeqCst) == 0 {
+                        break None;
+                    }
+                    if interp.failed.lock().unwrap().is_some()
+                        && self.sched.in_flight() == 0
+                    {
+                        break None;
+                    }
+                    let (g, timeout) = queue
+                        .cv
+                        .wait_timeout(q, std::time::Duration::from_millis(50))
+                        .unwrap_or_else(|e| e.into_inner());
+                    q = g;
+                    let _ = timeout;
+                }
+            };
+            match cont {
+                Some(c) => c(),
+                None => break,
+            }
+        }
+
+        if let Some(err) = interp.failed.lock().unwrap().clone() {
+            bail!("workflow failed: {err}");
+        }
+
+        // Collect materialized global outputs.
+        let mut outputs = BTreeMap::new();
+        for name in prog.global_types.keys() {
+            if let Ok(slot) = globals.lookup(name) {
+                if let Ok(v) = slot.force() {
+                    outputs.insert(name.clone(), v);
+                }
+            }
+        }
+        Ok(RunReport {
+            outputs,
+            executed: interp.executed.load(Ordering::SeqCst),
+            skipped: interp.skipped.load(Ordering::SeqCst),
+            timeline: self.sched.timeline(),
+        })
+    }
+}
+
+impl Interp {
+    fn fail(&self, msg: String) {
+        let mut f = self.failed.lock().unwrap();
+        if f.is_none() {
+            *f = Some(msg);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Statement instantiation
+    // ------------------------------------------------------------------
+
+    fn exec_stmts(self: &Arc<Self>, stmts: &[Stmt], env: &Env, path: &str) -> Result<()> {
+        for (i, stmt) in stmts.iter().enumerate() {
+            self.exec_stmt(stmt, stmts, env, &format!("{path}@{i}"))?;
+        }
+        Ok(())
+    }
+
+    fn exec_stmt(
+        self: &Arc<Self>,
+        stmt: &Stmt,
+        body: &[Stmt],
+        env: &Env,
+        path: &str,
+    ) -> Result<()> {
+        match stmt {
+            Stmt::VarDecl { ty, name, mapper, init } => {
+                let t = self.resolve_ref(ty)?;
+                match (mapper, init) {
+                    (Some(m), None) => {
+                        if assigned_in(body, name) {
+                            // Output-mapped dataset: dataflow-produced,
+                            // published to the mapped location at the end.
+                            let slot = self.slot_for_type(&t);
+                            env.bind(name, slot.clone());
+                            self.install_publisher(m.clone(), t, slot, env, path)?;
+                        } else {
+                            // Input dataset: map (once params resolve).
+                            let slot = self.slot_for_type(&t);
+                            env.bind(name, slot.clone());
+                            self.run_input_mapper(m.clone(), t, slot, env, path)?;
+                        }
+                    }
+                    (None, Some(e)) => {
+                        // Bind directly to the expression's slot.
+                        let slot = self.eval(e, env, path)?;
+                        env.bind(name, slot);
+                    }
+                    (None, None) => {
+                        env.bind(name, self.slot_for_type(&t));
+                    }
+                    (Some(m), Some(e)) => {
+                        // Mapped + initialized: map outputs paths, then
+                        // treat as output-mapped with an immediate link.
+                        let slot = self.slot_for_type(&t);
+                        env.bind(name, slot.clone());
+                        self.install_publisher(m.clone(), t, slot.clone(), env, path)?;
+                        let src = self.eval(e, env, path)?;
+                        link_slots(&slot, &src)?;
+                    }
+                }
+                Ok(())
+            }
+            Stmt::Assign { lhs, rhs } => {
+                let src = self.eval(rhs, env, path)?;
+                self.assign_into(lhs, src, env, path)
+            }
+            Stmt::TupleAssign { lhs, rhs } => {
+                let Expr::Call { name, args } = rhs else {
+                    bail!("tuple assignment requires a call");
+                };
+                let outs = self.call_proc(name, args, env, path)?;
+                if outs.len() != lhs.len() {
+                    bail!("tuple arity mismatch at runtime");
+                }
+                for (lv, slot) in lhs.iter().zip(outs) {
+                    self.assign_into(lv, slot, env, path)?;
+                }
+                Ok(())
+            }
+            Stmt::Foreach { var, index, over, body: fbody, .. } => {
+                self.exec_foreach(var, index.as_deref(), over, fbody, env, path)
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                let cslot = self.eval(cond, env, path)?;
+                let interp = Arc::clone(self);
+                let env = env.clone();
+                let then_body = then_body.clone();
+                let else_body = else_body.clone();
+                let path = path.to_string();
+                let cslot2 = cslot.clone();
+                cslot.when_materialized(
+                    &self.sink,
+                    Box::new(move || {
+                        let branch = match cslot2.force().and_then(|v| v.as_bool()) {
+                            Ok(true) => then_body,
+                            Ok(false) => else_body,
+                            Err(e) => {
+                                interp.fail(format!("if condition: {e:#}"));
+                                return;
+                            }
+                        };
+                        let benv = env.child();
+                        if let Err(e) =
+                            interp.exec_stmts(&branch, &benv, &format!("{path}/if"))
+                        {
+                            interp.fail(format!("{e:#}"));
+                        }
+                    }),
+                );
+                Ok(())
+            }
+        }
+    }
+
+    fn exec_foreach(
+        self: &Arc<Self>,
+        var: &str,
+        index: Option<&str>,
+        over: &Expr,
+        body: &[Stmt],
+        env: &Env,
+        path: &str,
+    ) -> Result<()> {
+        let over_slot = self.eval(over, env, path)?;
+        // Producer tokens on all arrays the body writes, so downstream
+        // consumers know when those collections are complete.
+        let out_arrays = self.collect_output_arrays(body, env)?;
+        for a in &out_arrays {
+            a.add_producer();
+        }
+        let interp = Arc::clone(self);
+        let env0 = env.clone();
+        let body0: Vec<Stmt> = body.to_vec();
+        let var0 = var.to_string();
+        let idx0 = index.map(|s| s.to_string());
+        let path0 = path.to_string();
+
+        let run_elem = move |i: usize, elem: Slot| {
+            let benv = env0.child();
+            benv.bind(&var0, elem);
+            if let Some(ix) = &idx0 {
+                benv.bind(ix, Slot::ready(Value::Int(i as i64)));
+            }
+            if let Err(e) =
+                interp.exec_stmts(&body0, &benv, &format!("{path0}[{i}]"))
+            {
+                interp.fail(format!("{e:#}"));
+            }
+        };
+        let release = move || {
+            for a in &out_arrays {
+                a.release_producer();
+            }
+        };
+
+        match over_slot {
+            Slot::Array(a) if self.cfg.pipelining => {
+                // Streamed expansion: each element instantiates its body
+                // as soon as the element exists (pipelining, §3.13).
+                let run_elem = run_elem;
+                a.subscribe(
+                    Box::new(move |i, s| run_elem(i, s)),
+                    Box::new(release),
+                );
+                Ok(())
+            }
+            Slot::Array(a) => {
+                // Pipelining disabled: barrier until the whole input
+                // collection is materialized (staged execution, Fig. 10
+                // baseline).
+                let whole = Slot::Array(Arc::clone(&a));
+                let whole2 = whole.clone();
+                whole.when_materialized(
+                    &self.sink,
+                    Box::new(move || {
+                        if let Ok(Value::Array(items)) = whole2.force() {
+                            let run_elem = run_elem;
+                            for (i, v) in items.into_iter().enumerate() {
+                                run_elem(i, Slot::ready(v));
+                            }
+                        }
+                        release();
+                    }),
+                );
+                Ok(())
+            }
+            Slot::Future(f) => {
+                // e.g. a csv-mapped dataset: resolve, then iterate.
+                let f2 = f.clone();
+                let sinkless = Arc::clone(self);
+                f.on_ready(
+                    &self.sink,
+                    Box::new(move || {
+                        match f2.try_get().expect("resolved") {
+                            Value::Array(items) => {
+                                let run_elem = run_elem;
+                                for (i, v) in items.into_iter().enumerate() {
+                                    run_elem(i, Slot::ready(v));
+                                }
+                            }
+                            other => sinkless.fail(format!(
+                                "foreach over non-array value {other:?}"
+                            )),
+                        }
+                        release();
+                    }),
+                );
+                Ok(())
+            }
+            Slot::Struct(_) => bail!("foreach over struct"),
+        }
+    }
+
+    /// Find all arrays that assignments in `body` (recursively) insert
+    /// into, resolved against the enclosing scope.
+    fn collect_output_arrays(
+        &self,
+        body: &[Stmt],
+        env: &Env,
+    ) -> Result<Vec<Arc<ArraySlot>>> {
+        let mut out: Vec<Arc<ArraySlot>> = Vec::new();
+        fn target_array(
+            interp: &Interp,
+            lhs: &LValue,
+            env: &Env,
+            out: &mut Vec<Arc<ArraySlot>>,
+        ) {
+            if let Some(Access::Index(_)) = lhs.path.last() {
+                // Navigate to the parent array if resolvable against the
+                // *enclosing* scope (loop vars are not bound yet — those
+                // writes target arrays created inside the body, already
+                // tokened by their own constructs).
+                if let Ok(base) = env.lookup(&lhs.base) {
+                    let mut cur = base;
+                    let mut ok = true;
+                    for acc in &lhs.path[..lhs.path.len().saturating_sub(1)] {
+                        match acc {
+                            Access::Member(m) => match cur.member(m, &interp.sink) {
+                                Ok(n) => cur = n,
+                                Err(_) => {
+                                    ok = false;
+                                    break;
+                                }
+                            },
+                            Access::Index(_) => {
+                                ok = false;
+                                break;
+                            }
+                        }
+                    }
+                    if ok {
+                        if let Slot::Array(a) = cur {
+                            if !out.iter().any(|x| Arc::ptr_eq(x, &a)) {
+                                out.push(a);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        fn walk(
+            interp: &Interp,
+            stmts: &[Stmt],
+            env: &Env,
+            out: &mut Vec<Arc<ArraySlot>>,
+        ) {
+            for s in stmts {
+                match s {
+                    Stmt::Assign { lhs, .. } => target_array(interp, lhs, env, out),
+                    Stmt::TupleAssign { lhs, .. } => {
+                        for lv in lhs {
+                            target_array(interp, lv, env, out);
+                        }
+                    }
+                    Stmt::Foreach { body, .. } => walk(interp, body, env, out),
+                    Stmt::If { then_body, else_body, .. } => {
+                        walk(interp, then_body, env, out);
+                        walk(interp, else_body, env, out);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        walk(self, body, env, &mut out);
+        Ok(out)
+    }
+
+    fn assign_into(
+        self: &Arc<Self>,
+        lhs: &LValue,
+        src: Slot,
+        env: &Env,
+        path: &str,
+    ) -> Result<()> {
+        let base = env.lookup(&lhs.base)?;
+        if lhs.path.is_empty() {
+            return link_slots(&base, &src);
+        }
+        // Navigate to the parent of the final access.
+        let mut cur = base;
+        for acc in &lhs.path[..lhs.path.len() - 1] {
+            cur = match acc {
+                Access::Member(m) => cur.member(m, &self.sink)?,
+                Access::Index(e) => {
+                    let i = self.resolve_index(e, env, path)?;
+                    cur.index(i, &self.sink)?
+                }
+            };
+        }
+        match lhs.path.last().unwrap() {
+            Access::Member(m) => {
+                let field = cur.member(m, &self.sink)?;
+                link_slots(&field, &src)
+            }
+            Access::Index(e) => {
+                let i = self.resolve_index(e, env, path)?;
+                match cur {
+                    Slot::Array(a) => a.insert(i, src),
+                    _ => bail!("indexed assignment into non-array"),
+                }
+            }
+        }
+    }
+
+    fn resolve_index(self: &Arc<Self>, e: &Expr, env: &Env, path: &str) -> Result<usize> {
+        let slot = self.eval(e, env, path)?;
+        let v = slot
+            .force()
+            .context("array index not resolvable at instantiation time")?;
+        Ok(v.as_int()? as usize)
+    }
+
+    // ------------------------------------------------------------------
+    // Expressions
+    // ------------------------------------------------------------------
+
+    fn eval(self: &Arc<Self>, e: &Expr, env: &Env, path: &str) -> Result<Slot> {
+        Ok(match e {
+            Expr::Int(i) => Slot::ready(Value::Int(*i)),
+            Expr::Float(f) => Slot::ready(Value::Float(*f)),
+            Expr::Str(s) => Slot::ready(Value::Str(s.clone())),
+            Expr::Bool(b) => Slot::ready(Value::Bool(*b)),
+            Expr::Path(lv) => {
+                let mut cur = env.lookup(&lv.base)?;
+                for acc in &lv.path {
+                    cur = match acc {
+                        Access::Member(m) => cur.member(m, &self.sink)?,
+                        Access::Index(e) => {
+                            let i = self.resolve_index(e, env, path)?;
+                            cur.index(i, &self.sink)?
+                        }
+                    };
+                }
+                cur
+            }
+            Expr::Call { name, args } => {
+                let outs = self.call_proc(name, args, env, path)?;
+                if outs.len() != 1 {
+                    bail!("multi-output call {name} used as a single value");
+                }
+                outs.into_iter().next().unwrap()
+            }
+            Expr::Binary { op, lhs, rhs } => {
+                let l = self.eval(lhs, env, path)?;
+                let r = self.eval(rhs, env, path)?;
+                let op = *op;
+                // Fast path: both ready.
+                if let (Ok(lv), Ok(rv)) = (l.force(), r.force()) {
+                    return Ok(Slot::ready(apply_binop(op, &lv, &rv)?));
+                }
+                // Join both sides into a derived future.
+                let out = DataFuture::new();
+                let out2 = out.clone();
+                let mut fields = BTreeMap::new();
+                fields.insert("l".to_string(), l);
+                fields.insert("r".to_string(), r);
+                let joined = Slot::Struct(Arc::new(fields));
+                let joined2 = joined.clone();
+                let interp = Arc::clone(self);
+                joined.when_materialized(
+                    &self.sink,
+                    Box::new(move || {
+                        let go = || -> Result<Value> {
+                            let v = joined2.force()?;
+                            let lv = v.member("l")?;
+                            let rv = v.member("r")?;
+                            apply_binop(op, lv, rv)
+                        };
+                        match go() {
+                            Ok(v) => {
+                                let _ = out2.set(v);
+                            }
+                            Err(e) => interp.fail(format!("{e:#}")),
+                        }
+                    }),
+                );
+                Slot::Future(out)
+            }
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Procedure calls
+    // ------------------------------------------------------------------
+
+    fn call_proc(
+        self: &Arc<Self>,
+        name: &str,
+        args: &[Expr],
+        env: &Env,
+        path: &str,
+    ) -> Result<Vec<Slot>> {
+        let proc = self
+            .prog
+            .procs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown procedure {name} at runtime"))?
+            .clone();
+        let mut arg_slots = Vec::with_capacity(args.len());
+        for a in args {
+            arg_slots.push(self.eval(a, env, path)?);
+        }
+        let call_path = format!("{path}/{name}");
+        match &proc.body {
+            ProcBody::Compound(body) => {
+                let cenv = Env::root();
+                for (p, s) in proc.inputs.iter().zip(arg_slots) {
+                    cenv.bind(&p.name, s);
+                }
+                let mut outs = Vec::with_capacity(proc.outputs.len());
+                for o in &proc.outputs {
+                    let t = self.resolve_ref(&o.ty)?;
+                    let s = self.slot_for_type(&t);
+                    cenv.bind(&o.name, s.clone());
+                    outs.push(s);
+                }
+                self.exec_stmts(body, &cenv, &call_path)?;
+                Ok(outs)
+            }
+            ProcBody::App(spec) => {
+                self.call_atomic(&proc, spec.clone(), arg_slots, &call_path)
+            }
+        }
+    }
+
+    fn call_atomic(
+        self: &Arc<Self>,
+        proc: &ProcDecl,
+        spec: AppSpec,
+        arg_slots: Vec<Slot>,
+        call_path: &str,
+    ) -> Result<Vec<Slot>> {
+        // Plan output values (concrete file paths, deterministic from the
+        // call path) and create their dataflow slots.
+        let mut planned: BTreeMap<String, Value> = BTreeMap::new();
+        let mut out_slots = Vec::with_capacity(proc.outputs.len());
+        for o in &proc.outputs {
+            let t = self.resolve_ref(&o.ty)?;
+            let v = self.plan_output(&t, call_path, &o.name)?;
+            planned.insert(o.name.clone(), v);
+            out_slots.push(Slot::fresh());
+        }
+        let out_files: Vec<PathBuf> =
+            planned.values().flat_map(|v| v.files()).collect();
+
+        // Restart-log skip: outputs already produced and present.
+        if let Some(log) = &self.restart {
+            if log.is_done(call_path) {
+                self.skipped.fetch_add(1, Ordering::SeqCst);
+                for (slot, o) in out_slots.iter().zip(&proc.outputs) {
+                    if let Slot::Future(f) = slot {
+                        let _ = f.set(planned[&o.name].clone());
+                    }
+                }
+                return Ok(out_slots);
+            }
+        }
+
+        // Join all inputs; then render the command line and submit.
+        let mut join_fields = BTreeMap::new();
+        for (p, s) in proc.inputs.iter().zip(&arg_slots) {
+            join_fields.insert(p.name.clone(), s.clone());
+        }
+        let inputs_slot = Slot::Struct(Arc::new(join_fields));
+        let inputs_slot2 = inputs_slot.clone();
+
+        let interp = Arc::clone(self);
+        let proc2 = proc.clone();
+        let call_path2 = call_path.to_string();
+        let out_slots2 = out_slots.clone();
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+        inputs_slot.when_materialized(
+            &self.sink,
+            Box::new(move || {
+                let submit = || -> Result<()> {
+                    let Value::Struct(input_vals) = inputs_slot2.force()? else {
+                        bail!("input join must be a struct")
+                    };
+                    // Rendering scope: inputs (materialized) + outputs
+                    // (planned paths).
+                    let mut scope = input_vals.clone();
+                    for (k, v) in &planned {
+                        scope.insert(k.clone(), v.clone());
+                    }
+                    let mut args = Vec::with_capacity(spec.args.len());
+                    for a in &spec.args {
+                        match a {
+                            AppArg::Filename(e) => {
+                                args.push(eval_value_expr(e, &scope)?.filename()?)
+                            }
+                            AppArg::Filenames(e) => {
+                                for f in eval_value_expr(e, &scope)?.files() {
+                                    args.push(f.to_string_lossy().into_owned());
+                                }
+                            }
+                            AppArg::Expr(e) => {
+                                args.push(eval_value_expr(e, &scope)?.to_string())
+                            }
+                        }
+                    }
+                    let in_files: Vec<PathBuf> =
+                        input_vals.values().flat_map(|v| v.files()).collect();
+                    // Ensure output directories exist (the sandbox).
+                    for f in &out_files {
+                        if let Some(dir) = f.parent() {
+                            std::fs::create_dir_all(dir).ok();
+                        }
+                    }
+                    static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+                    let task = AppTask {
+                        id: NEXT_ID.fetch_add(1, Ordering::SeqCst),
+                        key: call_path2.clone(),
+                        executable: spec.executable.clone(),
+                        args,
+                        inputs: in_files,
+                        outputs: out_files.clone(),
+                    };
+                    let interp2 = Arc::clone(&interp);
+                    let planned2 = planned.clone();
+                    let outs = out_slots2.clone();
+                    let proc3 = proc2.clone();
+                    let key = call_path2.clone();
+                    interp.sched.submit(
+                        task,
+                        Box::new(move |result| {
+                            // Back on a provider thread: post to control.
+                            let interp3 = Arc::clone(&interp2);
+                            interp2.queue.post(Box::new(move || {
+                                if result.ok {
+                                    if let Some(log) = &interp3.restart {
+                                        let files: Vec<PathBuf> = planned2
+                                            .values()
+                                            .flat_map(|v| v.files())
+                                            .collect();
+                                        let _ = log.record(&key, &files);
+                                    }
+                                    interp3.executed.fetch_add(1, Ordering::SeqCst);
+                                    for (slot, o) in
+                                        outs.iter().zip(&proc3.outputs)
+                                    {
+                                        if let Slot::Future(f) = slot {
+                                            let _ =
+                                                f.set(planned2[&o.name].clone());
+                                        }
+                                    }
+                                } else {
+                                    interp3.fail(format!(
+                                        "task {key} failed: {}",
+                                        result
+                                            .error
+                                            .unwrap_or_else(|| "unknown".into())
+                                    ));
+                                }
+                                interp3.outstanding.fetch_sub(1, Ordering::SeqCst);
+                                interp3.queue.cv.notify_all();
+                            }));
+                        }),
+                    );
+                    Ok(())
+                };
+                if let Err(e) = submit() {
+                    interp.fail(format!("{e:#}"));
+                    interp.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    interp.queue.cv.notify_all();
+                }
+            }),
+        );
+        Ok(out_slots)
+    }
+
+    /// Plan the output value (file paths) for an atomic output param.
+    fn plan_output(&self, t: &Type, call_path: &str, param: &str) -> Result<Value> {
+        let dir = self.cfg.workdir.join("data").join(sanitize(call_path));
+        match t {
+            Type::File(_) | Type::Table => {
+                Ok(Value::File(dir.join(format!("{param}.dat"))))
+            }
+            Type::Struct(name) => {
+                let def = self
+                    .prog
+                    .env
+                    .struct_def(name)
+                    .ok_or_else(|| anyhow!("unknown struct {name}"))?;
+                let mut fields = BTreeMap::new();
+                for (fname, fty) in &def.fields {
+                    match fty {
+                        Type::File(_) => {
+                            fields.insert(
+                                fname.clone(),
+                                Value::File(dir.join(format!("{param}.{fname}"))),
+                            );
+                        }
+                        other => bail!(
+                            "atomic output struct field {fname}: unsupported type {}",
+                            other.name()
+                        ),
+                    }
+                }
+                Ok(Value::Struct(fields))
+            }
+            other => bail!(
+                "atomic procedures can only output files/structs, got {}",
+                other.name()
+            ),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Mappers
+    // ------------------------------------------------------------------
+
+    fn run_input_mapper(
+        self: &Arc<Self>,
+        m: MapperSpec,
+        ty: Type,
+        slot: Slot,
+        env: &Env,
+        path: &str,
+    ) -> Result<()> {
+        // Evaluate mapper params; join any dataset references first.
+        let mut param_slots = Vec::new();
+        for (k, e) in &m.params {
+            param_slots.push((k.clone(), self.eval(e, env, path)?));
+        }
+        let mut fields = BTreeMap::new();
+        for (i, (_k, s)) in param_slots.iter().enumerate() {
+            fields.insert(format!("p{i}"), s.clone());
+        }
+        let join = Slot::Struct(Arc::new(fields));
+        let join2 = join.clone();
+        let interp = Arc::clone(self);
+        let keys: Vec<String> =
+            param_slots.iter().map(|(k, _)| k.clone()).collect();
+        join.when_materialized(
+            &self.sink,
+            Box::new(move || {
+                let go = || -> Result<()> {
+                    let Value::Struct(vals) = join2.force()? else {
+                        bail!("mapper param join")
+                    };
+                    let mut params = MapperParams::new();
+                    for (i, k) in keys.iter().enumerate() {
+                        let v = &vals[&format!("p{i}")];
+                        let s = match v {
+                            Value::File(p) => p.to_string_lossy().into_owned(),
+                            other => other.to_string(),
+                        };
+                        params.insert(k.clone(), s);
+                    }
+                    let mapper = interp.mappers.get(&m.mapper)?;
+                    let value = mapper.map_input(&ty, &interp.prog.env, &params)?;
+                    distribute_into(&slot, value)
+                };
+                if let Err(e) = go() {
+                    interp.fail(format!("input mapping ({}): {e:#}", m.mapper));
+                }
+            }),
+        );
+        Ok(())
+    }
+
+    /// Output-mapped variable: when the produced dataset materializes,
+    /// publish (copy) its physical files to the mapper-described location.
+    fn install_publisher(
+        self: &Arc<Self>,
+        m: MapperSpec,
+        _ty: Type,
+        slot: Slot,
+        _env: &Env,
+        _path: &str,
+    ) -> Result<()> {
+        let interp = Arc::clone(self);
+        let slot2 = slot.clone();
+        // Keep the run alive until publication completes.
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+        slot.when_materialized(
+            &self.sink,
+            Box::new(move || {
+                let go = || -> Result<()> {
+                    let v = slot2.force()?;
+                    let mut params = MapperParams::new();
+                    for (k, e) in &m.params {
+                        if let Expr::Str(s) = e {
+                            params.insert(k.clone(), s.clone());
+                        } else if let Expr::Int(i) = e {
+                            params.insert(k.clone(), i.to_string());
+                        } else if let Expr::Bool(b) = e {
+                            params.insert(k.clone(), b.to_string());
+                        }
+                    }
+                    publish_output(&m.mapper, &params, &v)
+                };
+                if let Err(e) = go() {
+                    interp.fail(format!("output mapping ({}): {e:#}", m.mapper));
+                }
+                interp.outstanding.fetch_sub(1, Ordering::SeqCst);
+                interp.queue.cv.notify_all();
+            }),
+        );
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Helpers
+    // ------------------------------------------------------------------
+
+    fn resolve_ref(&self, r: &TypeRef) -> Result<Type> {
+        let mut t = self.prog.env.resolve(&r.name)?;
+        for _ in 0..r.array_depth {
+            t = Type::array_of(t);
+        }
+        Ok(t)
+    }
+
+    /// Create a dataflow slot shaped like the XDTM type.
+    fn slot_for_type(&self, t: &Type) -> Slot {
+        match t {
+            Type::Array(_) => Slot::Array(Arc::new(ArraySlot::new())),
+            Type::Struct(name) => {
+                let mut fields = BTreeMap::new();
+                if let Some(def) = self.prog.env.struct_def(name) {
+                    for (fname, fty) in &def.fields {
+                        fields.insert(fname.clone(), self.slot_for_type(fty));
+                    }
+                }
+                Slot::Struct(Arc::new(fields))
+            }
+            _ => Slot::fresh(),
+        }
+    }
+}
+
+/// True if `name` is the base of any assignment in the statement list
+/// (recursively) — distinguishes output-mapped from input-mapped datasets.
+fn assigned_in(stmts: &[Stmt], name: &str) -> bool {
+    stmts.iter().any(|s| match s {
+        Stmt::Assign { lhs, .. } => lhs.base == name,
+        Stmt::TupleAssign { lhs, .. } => lhs.iter().any(|l| l.base == name),
+        Stmt::Foreach { body, .. } => assigned_in(body, name),
+        Stmt::If { then_body, else_body, .. } => {
+            assigned_in(then_body, name) || assigned_in(else_body, name)
+        }
+        _ => false,
+    })
+}
+
+/// Write a fully-materialized value into a structured slot.
+fn distribute_into(slot: &Slot, v: Value) -> Result<()> {
+    match (slot, v) {
+        (Slot::Future(f), v) => f.set(v),
+        (Slot::Struct(fields), Value::Struct(vals)) => {
+            for (k, s) in fields.iter() {
+                if let Some(val) = vals.get(k) {
+                    distribute_into(s, val.clone())?;
+                }
+            }
+            Ok(())
+        }
+        (Slot::Array(a), Value::Array(vals)) => {
+            for (i, val) in vals.into_iter().enumerate() {
+                a.insert(i, Slot::ready(val))?;
+            }
+            a.close();
+            Ok(())
+        }
+        (_, v) => bail!("cannot distribute {v:?} into slot of different shape"),
+    }
+}
+
+/// Evaluate an expression against a pure value scope (app command-line
+/// rendering).
+fn eval_value_expr(e: &Expr, scope: &BTreeMap<String, Value>) -> Result<Value> {
+    Ok(match e {
+        Expr::Int(i) => Value::Int(*i),
+        Expr::Float(f) => Value::Float(*f),
+        Expr::Str(s) => Value::Str(s.clone()),
+        Expr::Bool(b) => Value::Bool(*b),
+        Expr::Path(lv) => {
+            let mut v = scope
+                .get(&lv.base)
+                .ok_or_else(|| anyhow!("app arg: unknown {}", lv.base))?
+                .clone();
+            for acc in &lv.path {
+                v = match acc {
+                    Access::Member(m) => v.member(m)?.clone(),
+                    Access::Index(e) => {
+                        let i = eval_value_expr(e, scope)?.as_int()? as usize;
+                        v.index(i)?.clone()
+                    }
+                };
+            }
+            v
+        }
+        Expr::Binary { op, lhs, rhs } => {
+            let l = eval_value_expr(lhs, scope)?;
+            let r = eval_value_expr(rhs, scope)?;
+            apply_binop(*op, &l, &r)?
+        }
+        Expr::Call { name, .. } => bail!("calls not allowed in app args ({name})"),
+    })
+}
+
+fn apply_binop(op: BinOp, l: &Value, r: &Value) -> Result<Value> {
+    use BinOp::*;
+    // Numeric fast paths.
+    let as_f = |v: &Value| v.as_float();
+    Ok(match op {
+        Add | Sub | Mul | Div => {
+            if let (Value::Int(a), Value::Int(b)) = (l, r) {
+                Value::Int(match op {
+                    Add => a + b,
+                    Sub => a - b,
+                    Mul => a * b,
+                    Div => {
+                        if *b == 0 {
+                            bail!("division by zero")
+                        }
+                        a / b
+                    }
+                    _ => unreachable!(),
+                })
+            } else {
+                let (a, b) = (as_f(l)?, as_f(r)?);
+                Value::Float(match op {
+                    Add => a + b,
+                    Sub => a - b,
+                    Mul => a * b,
+                    Div => a / b,
+                    _ => unreachable!(),
+                })
+            }
+        }
+        Eq | Ne | Lt | Le | Gt | Ge => {
+            let c = if let (Value::Str(a), Value::Str(b)) = (l, r) {
+                a.cmp(b)
+            } else {
+                as_f(l)?
+                    .partial_cmp(&as_f(r)?)
+                    .ok_or_else(|| anyhow!("incomparable values"))?
+            };
+            use std::cmp::Ordering as O;
+            Value::Bool(match op {
+                Eq => c == O::Equal,
+                Ne => c != O::Equal,
+                Lt => c == O::Less,
+                Le => c != O::Greater,
+                Gt => c == O::Greater,
+                Ge => c != O::Less,
+                _ => unreachable!(),
+            })
+        }
+    })
+}
+
+/// Publish a produced dataset to its mapped physical location.
+fn publish_output(
+    mapper: &str,
+    params: &MapperParams,
+    v: &Value,
+) -> Result<()> {
+    match mapper {
+        "run_mapper" => {
+            let location = params
+                .get("location")
+                .ok_or_else(|| anyhow!("run_mapper publish: missing location"))?;
+            let prefix = params
+                .get("prefix")
+                .ok_or_else(|| anyhow!("run_mapper publish: missing prefix"))?;
+            std::fs::create_dir_all(location)?;
+            // Value is a Run-like struct with one array field of volumes.
+            let Value::Struct(fields) = v else {
+                bail!("run_mapper publish expects a struct")
+            };
+            for arr in fields.values() {
+                let Value::Array(items) = arr else { continue };
+                for (i, item) in items.iter().enumerate() {
+                    let Value::Struct(vf) = item else { continue };
+                    for (fname, leaf) in vf {
+                        if let Value::File(src) = leaf {
+                            let ext = if fname == "hdr" { "hdr" } else { "img" };
+                            let dst = std::path::Path::new(location)
+                                .join(format!("{prefix}_{i:04}.{ext}"));
+                            std::fs::copy(src, dst).with_context(|| {
+                                format!("publish {src:?}")
+                            })?;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        }
+        "file_mapper" => {
+            let file = params
+                .get("file")
+                .ok_or_else(|| anyhow!("file_mapper publish: missing file"))?;
+            let files = v.files();
+            if let Some(src) = files.first() {
+                if let Some(dir) = std::path::Path::new(file).parent() {
+                    std::fs::create_dir_all(dir).ok();
+                }
+                std::fs::copy(src, file)?;
+            }
+            Ok(())
+        }
+        // Other mappers: publication is a no-op (data stays in workdir).
+        _ => Ok(()),
+    }
+}
+
+fn sanitize(key: &str) -> String {
+    let cleaned: String = key
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    if cleaned.len() <= 120 {
+        cleaned
+    } else {
+        // Keep a stable hash suffix for uniqueness.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in key.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        format!("{}_{h:016x}", &cleaned[..100])
+    }
+}

@@ -1,0 +1,789 @@
+//! Futures and open collections — the dataflow synchronization substrate
+//! (paper §3.9).
+//!
+//! "We treat all computations as parallel and the future mechanism
+//! establishes the dependencies between them, thus constructing the
+//! workflow structure dynamically at run time."
+//!
+//! - [`DataFuture`] is a single-assignment variable holding an XDTM
+//!   [`Value`]; waiters are *continuations* posted to the engine's control
+//!   queue (lightweight threads — no OS thread ever blocks on a future).
+//! - [`ArraySlot`] is an *open collection*: elements arrive one at a time
+//!   (each a [`Slot`]), subscribers see them as they arrive (this is what
+//!   makes cross-stage pipelining free, §3.13), and the producer closes
+//!   the collection when no more indices will appear.
+//! - [`Slot`] composes futures into logical dataset shapes mirroring the
+//!   XDTM type structure: a struct of slots, an open array of slots, or a
+//!   future of a whole value.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::xdtm::Value;
+
+/// A continuation: a closure posted to the engine's control queue.
+pub type Cont = Box<dyn FnOnce() + Send>;
+
+/// Where continuations go when futures fire. The engine's control queue
+/// implements this; tests use an inline-executing sink.
+pub trait ControlSink: Send + Sync {
+    fn post(&self, c: Cont);
+}
+
+/// An inline sink that runs continuations immediately (tests, and the
+/// memory-scalability bench where no concurrency exists).
+pub struct InlineSink;
+
+impl ControlSink for InlineSink {
+    fn post(&self, c: Cont) {
+        c();
+    }
+}
+
+// ---------------------------------------------------------------------
+// DataFuture
+// ---------------------------------------------------------------------
+
+struct FutureInner {
+    state: Mutex<FutureState>,
+}
+
+enum FutureState {
+    Pending(Vec<Cont>),
+    Ready(Value),
+}
+
+/// Single-assignment dataflow variable.
+#[derive(Clone)]
+pub struct DataFuture {
+    inner: Arc<FutureInner>,
+}
+
+impl Default for DataFuture {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DataFuture {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(FutureInner {
+                state: Mutex::new(FutureState::Pending(Vec::new())),
+            }),
+        }
+    }
+
+    pub fn ready(v: Value) -> Self {
+        Self {
+            inner: Arc::new(FutureInner { state: Mutex::new(FutureState::Ready(v)) }),
+        }
+    }
+
+    /// Resolve the future. Single assignment: a second set is an error
+    /// (SwiftScript variables are write-once, §3.9).
+    pub fn set(&self, v: Value) -> Result<()> {
+        let waiters = {
+            let mut st = self.inner.state.lock().unwrap();
+            match &mut *st {
+                FutureState::Ready(_) => {
+                    bail!("future already resolved (single-assignment violation)")
+                }
+                FutureState::Pending(ws) => {
+                    let ws = std::mem::take(ws);
+                    *st = FutureState::Ready(v);
+                    ws
+                }
+            }
+        };
+        for w in waiters {
+            w();
+        }
+        Ok(())
+    }
+
+    pub fn try_get(&self) -> Option<Value> {
+        match &*self.inner.state.lock().unwrap() {
+            FutureState::Ready(v) => Some(v.clone()),
+            FutureState::Pending(_) => None,
+        }
+    }
+
+    pub fn is_ready(&self) -> bool {
+        matches!(&*self.inner.state.lock().unwrap(), FutureState::Ready(_))
+    }
+
+    /// Register a continuation to run when resolved (immediately if
+    /// already resolved). The continuation receives no arguments; use
+    /// `try_get` inside it — by construction it will be Some.
+    pub fn on_ready(&self, sink: &Arc<dyn ControlSink>, c: Cont) {
+        let mut st = self.inner.state.lock().unwrap();
+        match &mut *st {
+            FutureState::Ready(_) => {
+                drop(st);
+                sink.post(c);
+            }
+            FutureState::Pending(ws) => {
+                let sink = Arc::clone(sink);
+                ws.push(Box::new(move || sink.post(c)));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// ArraySlot — open collections
+// ---------------------------------------------------------------------
+
+type ElemSub = Box<dyn FnMut(usize, Slot) + Send>;
+type CloseSub = Cont;
+
+struct ArrayState {
+    items: BTreeMap<usize, Slot>,
+    closed: bool,
+    elem_subs: Vec<ElemSub>,
+    close_subs: Vec<CloseSub>,
+    /// Outstanding producer tokens; close fires when it reaches zero
+    /// after `close()` OR when explicitly closed with no tokens.
+    producers: usize,
+}
+
+/// An open (dynamically filling) array of slots.
+pub struct ArraySlot {
+    state: Mutex<ArrayState>,
+}
+
+impl Default for ArraySlot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ArraySlot {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(ArrayState {
+                items: BTreeMap::new(),
+                closed: false,
+                elem_subs: Vec::new(),
+                close_subs: Vec::new(),
+                producers: 0,
+            }),
+        }
+    }
+
+    /// A closed array built from ready values.
+    pub fn from_values(vals: Vec<Value>) -> Arc<Self> {
+        let a = Arc::new(Self::new());
+        for (i, v) in vals.into_iter().enumerate() {
+            a.insert(i, Slot::ready(v)).unwrap();
+        }
+        a.close();
+        a
+    }
+
+    /// Take a producer token: the array will not close until released.
+    pub fn add_producer(&self) {
+        self.state.lock().unwrap().producers += 1;
+    }
+
+    /// Release a producer token. When the last producer releases, the
+    /// collection is complete: it closes (this is how engine-produced
+    /// arrays close — each writing construct holds a token while it may
+    /// still insert).
+    pub fn release_producer(&self) {
+        let subs = {
+            let mut st = self.state.lock().unwrap();
+            debug_assert!(st.producers > 0);
+            st.producers -= 1;
+            if st.producers == 0 {
+                st.closed = true;
+                std::mem::take(&mut st.close_subs)
+            } else {
+                Vec::new()
+            }
+        };
+        for s in subs {
+            s();
+        }
+    }
+
+    /// Insert an element. If a placeholder exists at the index (created
+    /// by an early reader), the new slot is linked into it instead.
+    pub fn insert(&self, idx: usize, slot: Slot) -> Result<()> {
+        enum Outcome {
+            Notify(Vec<usize>),
+            LinkInto(Slot),
+        }
+        let (outcome, canonical) = {
+            let mut st = self.state.lock().unwrap();
+            if st.closed && st.producers == 0 {
+                bail!("insert into closed array at [{idx}]");
+            }
+            if let Some(existing) = st.items.get(&idx) {
+                (Outcome::LinkInto(existing.clone()), slot.clone())
+            } else {
+                st.items.insert(idx, slot.clone());
+                (Outcome::Notify(vec![idx]), slot)
+            }
+        };
+        match outcome {
+            Outcome::LinkInto(existing) => {
+                // The producer's slot feeds the placeholder.
+                link_slots(&existing, &canonical)?;
+            }
+            Outcome::Notify(idxs) => {
+                // Run element subscribers outside the lock.
+                for idx in idxs {
+                    let mut subs = {
+                        let mut st = self.state.lock().unwrap();
+                        std::mem::take(&mut st.elem_subs)
+                    };
+                    for sub in &mut subs {
+                        sub(idx, canonical.clone());
+                    }
+                    let mut st = self.state.lock().unwrap();
+                    // New subscribers may have been added re-entrantly;
+                    // keep both sets.
+                    subs.extend(std::mem::take(&mut st.elem_subs));
+                    st.elem_subs = subs;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Get the slot at `idx`, creating a placeholder future if absent
+    /// (early reader).
+    pub fn get_or_placeholder(&self, idx: usize) -> Slot {
+        let mut st = self.state.lock().unwrap();
+        if let Some(s) = st.items.get(&idx) {
+            return s.clone();
+        }
+        let s = Slot::Future(DataFuture::new());
+        st.items.insert(idx, s.clone());
+        s
+    }
+
+    /// Mark complete: no more inserts (once producer tokens drain).
+    pub fn close(&self) {
+        let subs = {
+            let mut st = self.state.lock().unwrap();
+            st.closed = true;
+            if st.producers == 0 {
+                std::mem::take(&mut st.close_subs)
+            } else {
+                Vec::new()
+            }
+        };
+        for s in subs {
+            s();
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        st.closed && st.producers == 0
+    }
+
+    /// Subscribe: `on_elem` fires for every existing and future element
+    /// (in index order for existing ones); `on_close` fires once the
+    /// array is closed (immediately if already).
+    pub fn subscribe(
+        &self,
+        mut on_elem: ElemSub,
+        on_close: CloseSub,
+    ) {
+        let existing: Vec<(usize, Slot)> = {
+            let st = self.state.lock().unwrap();
+            st.items.iter().map(|(i, s)| (*i, s.clone())).collect()
+        };
+        for (i, s) in existing {
+            on_elem(i, s);
+        }
+        let mut st = self.state.lock().unwrap();
+        st.elem_subs.push(on_elem);
+        if st.closed && st.producers == 0 {
+            drop(st);
+            on_close();
+        } else {
+            st.close_subs.push(on_close);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Slot
+// ---------------------------------------------------------------------
+
+/// A dataflow handle shaped like its XDTM type.
+#[derive(Clone)]
+pub enum Slot {
+    /// A future of a whole value (scalar, file, or fully-materialized
+    /// struct/array).
+    Future(DataFuture),
+    /// A struct whose fields are independently flowing slots.
+    Struct(Arc<BTreeMap<String, Slot>>),
+    /// An open array.
+    Array(Arc<ArraySlot>),
+}
+
+impl Slot {
+    pub fn ready(v: Value) -> Slot {
+        Slot::Future(DataFuture::ready(v))
+    }
+
+    pub fn fresh() -> Slot {
+        Slot::Future(DataFuture::new())
+    }
+
+    /// Struct field access.
+    pub fn member(&self, field: &str, sink: &Arc<dyn ControlSink>) -> Result<Slot> {
+        match self {
+            Slot::Struct(fields) => fields
+                .get(field)
+                .cloned()
+                .ok_or_else(|| anyhow!("struct slot has no field {field}")),
+            Slot::Future(f) => {
+                // Derived future projecting the member.
+                let out = DataFuture::new();
+                let src = f.clone();
+                let out2 = out.clone();
+                let field = field.to_string();
+                f.on_ready(
+                    sink,
+                    Box::new(move || {
+                        let v = src.try_get().expect("resolved");
+                        match v.member(&field) {
+                            Ok(m) => {
+                                let _ = out2.set(m.clone());
+                            }
+                            Err(_) => { /* type error surfaced earlier */ }
+                        }
+                    }),
+                );
+                Ok(Slot::Future(out))
+            }
+            Slot::Array(_) => bail!("member .{field} on array slot"),
+        }
+    }
+
+    /// Array index access.
+    pub fn index(&self, idx: usize, sink: &Arc<dyn ControlSink>) -> Result<Slot> {
+        match self {
+            Slot::Array(a) => Ok(a.get_or_placeholder(idx)),
+            Slot::Future(f) => {
+                let out = DataFuture::new();
+                let src = f.clone();
+                let out2 = out.clone();
+                f.on_ready(
+                    sink,
+                    Box::new(move || {
+                        let v = src.try_get().expect("resolved");
+                        if let Ok(e) = v.index(idx) {
+                            let _ = out2.set(e.clone());
+                        }
+                    }),
+                );
+                Ok(Slot::Future(out))
+            }
+            Slot::Struct(_) => bail!("index [{idx}] on struct slot"),
+        }
+    }
+
+    /// Register `cont` to run once this slot is fully materialized (all
+    /// leaf futures resolved, all arrays closed), then materialize with
+    /// [`Slot::force`].
+    pub fn when_materialized(&self, sink: &Arc<dyn ControlSink>, cont: Cont) {
+        // Join counter over all leaves discovered so far; arrays add
+        // leaves dynamically until closed.
+        struct Join {
+            outstanding: Mutex<usize>,
+            cont: Mutex<Option<Cont>>,
+        }
+        impl Join {
+            fn add(&self, n: usize) {
+                *self.outstanding.lock().unwrap() += n;
+            }
+            fn done(&self) {
+                let fire = {
+                    let mut o = self.outstanding.lock().unwrap();
+                    *o -= 1;
+                    *o == 0
+                };
+                if fire {
+                    if let Some(c) = self.cont.lock().unwrap().take() {
+                        c();
+                    }
+                }
+            }
+        }
+        fn walk(s: &Slot, join: &Arc<Join>, sink: &Arc<dyn ControlSink>) {
+            match s {
+                Slot::Future(f) => {
+                    join.add(1);
+                    let j = Arc::clone(join);
+                    f.on_ready(sink, Box::new(move || j.done()));
+                }
+                Slot::Struct(fields) => {
+                    for f in fields.values() {
+                        walk(f, join, sink);
+                    }
+                }
+                Slot::Array(a) => {
+                    // One unit for the close event; each element walks.
+                    join.add(1);
+                    let j = Arc::clone(join);
+                    let j2 = Arc::clone(join);
+                    let sink2 = Arc::clone(sink);
+                    a.subscribe(
+                        Box::new(move |_i, elem| {
+                            walk(&elem, &j, &sink2);
+                        }),
+                        Box::new(move || j2.done()),
+                    );
+                }
+            }
+        }
+        let join = Arc::new(Join {
+            outstanding: Mutex::new(1), // guard unit
+            cont: Mutex::new(Some(cont)),
+        });
+        walk(self, &join, sink);
+        join.done(); // release guard
+    }
+
+    /// Materialize into a [`Value`]. Errors if any part is unresolved —
+    /// call only after `when_materialized` fired.
+    pub fn force(&self) -> Result<Value> {
+        match self {
+            Slot::Future(f) => {
+                f.try_get().ok_or_else(|| anyhow!("future not resolved"))
+            }
+            Slot::Struct(fields) => {
+                let mut out = BTreeMap::new();
+                for (k, s) in fields.iter() {
+                    out.insert(k.clone(), s.force()?);
+                }
+                Ok(Value::Struct(out))
+            }
+            Slot::Array(a) => {
+                if !a.is_closed() {
+                    bail!("array not closed");
+                }
+                let st = a.state.lock().unwrap();
+                let mut out = Vec::new();
+                for (_, s) in st.items.iter() {
+                    out.push(s.force()?);
+                }
+                Ok(Value::Array(out))
+            }
+        }
+    }
+}
+
+/// Link: when `src` materializes, resolve `dst` with its value.
+/// Structurally recursive where both sides have structure; for arrays the
+/// link is streaming (element-by-element, preserving pipelining).
+pub fn link_slots(dst: &Slot, src: &Slot) -> Result<()> {
+    // The inline sink is correct here: link continuations only move data.
+    let sink: Arc<dyn ControlSink> = Arc::new(InlineSink);
+    match (dst, src) {
+        (Slot::Struct(df), Slot::Struct(sf)) => {
+            for (k, d) in df.iter() {
+                let s = sf
+                    .get(k)
+                    .ok_or_else(|| anyhow!("link: source missing field {k}"))?;
+                link_slots(d, s)?;
+            }
+            Ok(())
+        }
+        (Slot::Array(da), Slot::Array(sa)) => {
+            let da2 = Arc::clone(da);
+            let da3 = Arc::clone(da);
+            da.add_producer();
+            sa.subscribe(
+                Box::new(move |i, elem| {
+                    let _ = da2.insert(i, elem);
+                }),
+                Box::new(move || {
+                    da3.close();
+                    da3.release_producer();
+                }),
+            );
+            Ok(())
+        }
+        (Slot::Future(d), src) => {
+            let d = d.clone();
+            let src2 = src.clone();
+            src.when_materialized(
+                &sink,
+                Box::new(move || {
+                    if let Ok(v) = src2.force() {
+                        let _ = d.set(v);
+                    }
+                }),
+            );
+            Ok(())
+        }
+        (dst, Slot::Future(s)) => {
+            // Source is a future of a whole value; distribute into the
+            // structured destination when it arrives.
+            let dst = dst.clone();
+            let s2 = s.clone();
+            s.on_ready(
+                &sink,
+                Box::new(move || {
+                    let v = s2.try_get().expect("resolved");
+                    let _ = distribute(&dst, v);
+                }),
+            );
+            Ok(())
+        }
+        (Slot::Struct(_), Slot::Array(_)) | (Slot::Array(_), Slot::Struct(_)) => {
+            bail!("link: shape mismatch (struct vs array)")
+        }
+    }
+}
+
+/// Write a ready value into a structured slot.
+fn distribute(dst: &Slot, v: Value) -> Result<()> {
+    match dst {
+        Slot::Future(f) => f.set(v),
+        Slot::Struct(fields) => match v {
+            Value::Struct(vals) => {
+                for (k, s) in fields.iter() {
+                    let val = vals
+                        .get(k)
+                        .ok_or_else(|| anyhow!("distribute: missing field {k}"))?;
+                    distribute(s, val.clone())?;
+                }
+                Ok(())
+            }
+            other => bail!("distribute: struct slot given {other:?}"),
+        },
+        Slot::Array(a) => match v {
+            Value::Array(vals) => {
+                for (i, val) in vals.into_iter().enumerate() {
+                    a.insert(i, Slot::ready(val))?;
+                }
+                a.close();
+                Ok(())
+            }
+            other => bail!("distribute: array slot given {other:?}"),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn sink() -> Arc<dyn ControlSink> {
+        Arc::new(InlineSink)
+    }
+
+    #[test]
+    fn future_single_assignment() {
+        let f = DataFuture::new();
+        assert!(f.try_get().is_none());
+        f.set(Value::Int(1)).unwrap();
+        assert_eq!(f.try_get(), Some(Value::Int(1)));
+        assert!(f.set(Value::Int(2)).is_err(), "double set must fail");
+    }
+
+    #[test]
+    fn on_ready_fires_now_and_later() {
+        let f = DataFuture::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        f.on_ready(&sink(), Box::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(hits.load(Ordering::SeqCst), 0);
+        f.set(Value::Int(7)).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        let h2 = Arc::clone(&hits);
+        f.on_ready(&sink(), Box::new(move || {
+            h2.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(hits.load(Ordering::SeqCst), 2, "fires immediately when ready");
+    }
+
+    #[test]
+    fn array_streams_elements_to_subscriber() {
+        let a = Arc::new(ArraySlot::new());
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let closed = Arc::new(AtomicUsize::new(0));
+        let s2 = Arc::clone(&seen);
+        let c2 = Arc::clone(&closed);
+        a.insert(0, Slot::ready(Value::Int(10))).unwrap();
+        a.subscribe(
+            Box::new(move |i, _| s2.lock().unwrap().push(i)),
+            Box::new(move || {
+                c2.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+        assert_eq!(*seen.lock().unwrap(), vec![0], "existing element replayed");
+        a.insert(1, Slot::ready(Value::Int(11))).unwrap();
+        a.insert(2, Slot::ready(Value::Int(12))).unwrap();
+        assert_eq!(*seen.lock().unwrap(), vec![0, 1, 2]);
+        assert_eq!(closed.load(Ordering::SeqCst), 0);
+        a.close();
+        assert_eq!(closed.load(Ordering::SeqCst), 1);
+        assert!(a.insert(3, Slot::ready(Value::Int(13))).is_err());
+    }
+
+    #[test]
+    fn producer_tokens_defer_close() {
+        let a = Arc::new(ArraySlot::new());
+        let closed = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&closed);
+        a.subscribe(Box::new(|_, _| {}), Box::new(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        }));
+        a.add_producer();
+        a.close();
+        assert_eq!(closed.load(Ordering::SeqCst), 0, "producer still live");
+        a.insert(0, Slot::ready(Value::Int(1))).unwrap();
+        a.release_producer();
+        assert_eq!(closed.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn early_reader_placeholder_links_to_producer() {
+        let a = Arc::new(ArraySlot::new());
+        // Reader grabs v[1] before it exists.
+        let placeholder = a.get_or_placeholder(1);
+        let Slot::Future(pf) = placeholder.clone() else { panic!() };
+        assert!(!pf.is_ready());
+        // Producer inserts a struct slot at index 1.
+        let mut fields = BTreeMap::new();
+        fields.insert("img".to_string(), Slot::ready(Value::file("x.img")));
+        a.insert(1, Slot::Struct(Arc::new(fields))).unwrap();
+        // Placeholder resolves to the materialized struct.
+        assert_eq!(
+            pf.try_get().unwrap().member("img").unwrap(),
+            &Value::file("x.img")
+        );
+    }
+
+    #[test]
+    fn member_on_future_derives() {
+        let f = DataFuture::new();
+        let s = Slot::Future(f.clone());
+        let img = s.member("img", &sink()).unwrap();
+        let Slot::Future(imgf) = img else { panic!() };
+        assert!(!imgf.is_ready());
+        f.set(Value::structure([(
+            "img".to_string(),
+            Value::file("a.img"),
+        )]))
+        .unwrap();
+        assert_eq!(imgf.try_get(), Some(Value::file("a.img")));
+    }
+
+    #[test]
+    fn when_materialized_waits_for_all_leaves() {
+        let mut fields = BTreeMap::new();
+        let f1 = DataFuture::new();
+        let f2 = DataFuture::new();
+        fields.insert("a".to_string(), Slot::Future(f1.clone()));
+        fields.insert("b".to_string(), Slot::Future(f2.clone()));
+        let s = Slot::Struct(Arc::new(fields));
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f = Arc::clone(&fired);
+        s.when_materialized(&sink(), Box::new(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        f1.set(Value::Int(1)).unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        f2.set(Value::Int(2)).unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        let v = s.force().unwrap();
+        assert_eq!(v.member("b").unwrap(), &Value::Int(2));
+    }
+
+    #[test]
+    fn when_materialized_waits_for_array_close_and_elements() {
+        let a = Arc::new(ArraySlot::new());
+        let s = Slot::Array(Arc::clone(&a));
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f = Arc::clone(&fired);
+        s.when_materialized(&sink(), Box::new(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        }));
+        let pending = DataFuture::new();
+        a.insert(0, Slot::Future(pending.clone())).unwrap();
+        a.close();
+        assert_eq!(fired.load(Ordering::SeqCst), 0, "element still pending");
+        pending.set(Value::Int(5)).unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        assert_eq!(s.force().unwrap(), Value::Array(vec![Value::Int(5)]));
+    }
+
+    #[test]
+    fn link_struct_to_struct() {
+        let mk = |f: DataFuture| {
+            let mut m = BTreeMap::new();
+            m.insert("x".to_string(), Slot::Future(f));
+            Slot::Struct(Arc::new(m))
+        };
+        let sf = DataFuture::new();
+        let df = DataFuture::new();
+        let src = mk(sf.clone());
+        let dst = mk(df.clone());
+        link_slots(&dst, &src).unwrap();
+        sf.set(Value::Int(9)).unwrap();
+        assert_eq!(df.try_get(), Some(Value::Int(9)));
+    }
+
+    #[test]
+    fn link_array_streams() {
+        let sa = Arc::new(ArraySlot::new());
+        let da = Arc::new(ArraySlot::new());
+        link_slots(&Slot::Array(Arc::clone(&da)), &Slot::Array(Arc::clone(&sa)))
+            .unwrap();
+        sa.insert(0, Slot::ready(Value::Int(1))).unwrap();
+        assert_eq!(da.len(), 1, "element streamed before close");
+        assert!(!da.is_closed());
+        sa.insert(1, Slot::ready(Value::Int(2))).unwrap();
+        sa.close();
+        assert!(da.is_closed());
+        assert_eq!(
+            Slot::Array(da).force().unwrap(),
+            Value::Array(vec![Value::Int(1), Value::Int(2)])
+        );
+    }
+
+    #[test]
+    fn link_future_value_distributes_into_array() {
+        let f = DataFuture::new();
+        let da = Arc::new(ArraySlot::new());
+        link_slots(&Slot::Array(Arc::clone(&da)), &Slot::Future(f.clone()))
+            .unwrap();
+        f.set(Value::Array(vec![Value::Int(1), Value::Int(2)])).unwrap();
+        assert!(da.is_closed());
+        assert_eq!(da.len(), 2);
+    }
+
+    #[test]
+    fn force_fails_on_pending() {
+        let s = Slot::fresh();
+        assert!(s.force().is_err());
+        let a = Arc::new(ArraySlot::new());
+        assert!(Slot::Array(a).force().is_err(), "open array can't force");
+    }
+}

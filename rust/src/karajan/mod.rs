@@ -1,0 +1,19 @@
+//! Karajan — the execution engine (paper §3.8–3.13).
+//!
+//! - [`future`] — single-assignment futures + open collections (the
+//!   dataflow synchronization substrate).
+//! - [`engine`] — the dataflow interpreter: lightweight-task control
+//!   queue, dynamic foreach expansion, pipelining, mappers, restart.
+//! - [`scheduler`] — site selection with scores, clustering, retries,
+//!   host/site suspension.
+//! - [`restart`] — the dataset-availability restart log.
+
+pub mod engine;
+pub mod future;
+pub mod restart;
+pub mod scheduler;
+
+pub use engine::{Engine, EngineConfig, RunReport};
+pub use future::{ArraySlot, DataFuture, Slot};
+pub use restart::RestartLog;
+pub use scheduler::{ClusterPolicy, GridScheduler};

@@ -1,0 +1,157 @@
+//! Restart log (paper §3.12).
+//!
+//! Swift logs *datasets successfully produced* (not jobs finished — the
+//! engine evaluates workflows by data availability, so tracking data is
+//! what makes resume correct). Each line records the deterministic
+//! call-path key of an atomic invocation and the files it produced:
+//!
+//! ```text
+//! main/fmri_wf@0/reorientRun@0[3]/reorient \t out/a.img\tout/a.hdr
+//! ```
+//!
+//! On restart, a key whose files all still exist is *skipped*: its outputs
+//! are marked available and dependent stages proceed — which also gives
+//! the paper's two side effects for free: newly added inputs get computed
+//! on resume, and modified programs restart correctly as long as prior
+//! data flows are unaffected.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// Append-only restart log with an in-memory index.
+pub struct RestartLog {
+    path: PathBuf,
+    state: Mutex<LogState>,
+}
+
+struct LogState {
+    produced: HashMap<String, Vec<PathBuf>>,
+    file: Option<std::fs::File>,
+}
+
+impl RestartLog {
+    /// Open (creating if absent) and load existing entries.
+    pub fn open(path: impl Into<PathBuf>) -> Result<Self> {
+        let path = path.into();
+        let mut produced = HashMap::new();
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("read restart log {path:?}"))?;
+            for line in text.lines() {
+                let mut parts = line.split('\t');
+                if let Some(key) = parts.next() {
+                    let files: Vec<PathBuf> = parts.map(PathBuf::from).collect();
+                    if !key.is_empty() {
+                        produced.insert(key.to_string(), files);
+                    }
+                }
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("open restart log {path:?}"))?;
+        Ok(Self {
+            path,
+            state: Mutex::new(LogState { produced, file: Some(file) }),
+        })
+    }
+
+    /// True if this invocation already produced its outputs and the files
+    /// are still present (safe to skip).
+    pub fn is_done(&self, key: &str) -> bool {
+        let st = self.state.lock().unwrap();
+        match st.produced.get(key) {
+            Some(files) => files.iter().all(|f| f.exists()),
+            None => false,
+        }
+    }
+
+    /// Record a successful production.
+    pub fn record(&self, key: &str, files: &[PathBuf]) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let mut line = String::from(key);
+        for f in files {
+            line.push('\t');
+            line.push_str(&f.to_string_lossy());
+        }
+        line.push('\n');
+        if let Some(fh) = st.file.as_mut() {
+            fh.write_all(line.as_bytes())
+                .with_context(|| format!("append restart log {:?}", self.path))?;
+            fh.flush().ok();
+        }
+        st.produced.insert(key.to_string(), files.to_vec());
+        Ok(())
+    }
+
+    /// Number of recorded productions.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().produced.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("gridswift_restart");
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join(name);
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn records_and_reloads() {
+        let logp = tmp("a.log");
+        let out = tmp("a.out");
+        std::fs::write(&out, b"data").unwrap();
+        {
+            let log = RestartLog::open(&logp).unwrap();
+            assert!(!log.is_done("k1"));
+            log.record("k1", &[out.clone()]).unwrap();
+            assert!(log.is_done("k1"));
+        }
+        // Reload from disk (new process simulation).
+        let log2 = RestartLog::open(&logp).unwrap();
+        assert_eq!(log2.len(), 1);
+        assert!(log2.is_done("k1"));
+        assert!(!log2.is_done("k2"));
+    }
+
+    #[test]
+    fn missing_files_invalidate_entry() {
+        let logp = tmp("b.log");
+        let out = tmp("b.out");
+        std::fs::write(&out, b"data").unwrap();
+        let log = RestartLog::open(&logp).unwrap();
+        log.record("k", &[out.clone()]).unwrap();
+        assert!(log.is_done("k"));
+        std::fs::remove_file(&out).unwrap();
+        assert!(!log.is_done("k"), "deleted outputs force re-execution");
+    }
+
+    #[test]
+    fn later_entries_override() {
+        let logp = tmp("c.log");
+        let o1 = tmp("c1.out");
+        let o2 = tmp("c2.out");
+        std::fs::write(&o2, b"x").unwrap();
+        let log = RestartLog::open(&logp).unwrap();
+        log.record("k", &[o1]).unwrap(); // file missing
+        log.record("k", &[o2]).unwrap(); // file present
+        let log2 = RestartLog::open(&logp).unwrap();
+        assert!(log2.is_done("k"));
+    }
+}

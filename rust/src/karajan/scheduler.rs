@@ -1,0 +1,517 @@
+//! The Grid scheduler (paper §3.13): site selection with responsiveness
+//! scores, dynamic clustering, retry/suspension fault handling, and
+//! timeline recording.
+//!
+//! - **Load balancing**: each site carries a score; successful jobs grow
+//!   it, failures halve it, and sites are drawn score-proportionally.
+//! - **Clustering**: instead of whole-graph partitioning (Pegasus), Swift
+//!   introduces a small submission delay (the *clustering window*) and
+//!   bundles whatever independent tasks accumulated, up to a bundle size.
+//! - **Fault tolerance** (§3.12): failed tasks are retried up to
+//!   `retries` times, preferring a different site; a site whose failures
+//!   accumulate is suspended for a cool-down period.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::{TaskRecord, Timeline};
+use crate::providers::{AppTask, BundleDone, Provider, TaskResult};
+use crate::util::DetRng;
+
+/// Clustering policy (paper §3.13).
+#[derive(Debug, Clone)]
+pub struct ClusterPolicy {
+    /// Max tasks per bundle.
+    pub bundle_size: usize,
+    /// Window to wait for more tasks before flushing.
+    pub window: Duration,
+}
+
+/// Per-site scheduling state.
+struct Site {
+    provider: Arc<dyn Provider>,
+    score: f64,
+    suspended_until: Option<Instant>,
+    successes: u64,
+    failures: u64,
+}
+
+/// Completion callback the engine installs per task.
+pub type TaskDone = Box<dyn FnOnce(TaskResult) + Send>;
+
+struct Pending {
+    task: AppTask,
+    done: TaskDone,
+    attempts: usize,
+    /// Site index of the previous (failed) attempt, if any.
+    last_site: Option<usize>,
+}
+
+struct SchedInner {
+    sites: Vec<Site>,
+    buffer: Vec<Pending>,
+    buffer_since: Option<Instant>,
+    rng: DetRng,
+    timeline: Timeline,
+    shutdown: bool,
+}
+
+/// The scheduler shared state + flusher thread.
+pub struct GridScheduler {
+    inner: Arc<(Mutex<SchedInner>, Condvar)>,
+    cluster: Option<ClusterPolicy>,
+    retries: usize,
+    epoch: Instant,
+    in_flight: Arc<AtomicU64>,
+    flusher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Suspension cool-down after repeated failures.
+    pub suspend_after_failures: u64,
+    pub suspend_for: Duration,
+}
+
+impl GridScheduler {
+    pub fn new(
+        providers: Vec<Arc<dyn Provider>>,
+        cluster: Option<ClusterPolicy>,
+        retries: usize,
+        seed: u64,
+    ) -> Arc<Self> {
+        assert!(!providers.is_empty(), "need at least one provider");
+        let sites = providers
+            .into_iter()
+            .map(|provider| Site {
+                provider,
+                score: 16.0,
+                suspended_until: None,
+                successes: 0,
+                failures: 0,
+            })
+            .collect();
+        let inner = Arc::new((
+            Mutex::new(SchedInner {
+                sites,
+                buffer: Vec::new(),
+                buffer_since: None,
+                rng: DetRng::new(seed),
+                timeline: Timeline::new(),
+                shutdown: false,
+            }),
+            Condvar::new(),
+        ));
+        let sched = Arc::new(Self {
+            inner,
+            cluster,
+            retries,
+            epoch: Instant::now(),
+            in_flight: Arc::new(AtomicU64::new(0)),
+            flusher: Mutex::new(None),
+            suspend_after_failures: 3,
+            suspend_for: Duration::from_secs(30),
+        });
+        if sched.cluster.is_some() {
+            let s = Arc::clone(&sched);
+            let h = std::thread::Builder::new()
+                .name("gridswift-cluster-flusher".into())
+                .spawn(move || s.flusher_loop())
+                .expect("spawn flusher");
+            *sched.flusher.lock().unwrap() = Some(h);
+        }
+        sched
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Submit one task; `done` fires after final success/failure
+    /// (including retries).
+    pub fn submit(self: &Arc<Self>, task: AppTask, done: TaskDone) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        let pending = Pending { task, done, attempts: 0, last_site: None };
+        match &self.cluster {
+            None => self.dispatch(vec![pending]),
+            Some(policy) => {
+                let flush = {
+                    let (m, cv) = &*self.inner;
+                    let mut st = m.lock().unwrap();
+                    st.buffer.push(pending);
+                    if st.buffer_since.is_none() {
+                        st.buffer_since = Some(Instant::now());
+                    }
+                    cv.notify_one();
+                    st.buffer.len() >= policy.bundle_size
+                };
+                if flush {
+                    self.flush_buffer();
+                }
+            }
+        }
+    }
+
+    /// Tasks submitted but not yet completed.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    fn flusher_loop(self: Arc<Self>) {
+        let window = self.cluster.as_ref().unwrap().window;
+        let (m, cv) = &*self.inner;
+        let mut st = m.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return;
+            }
+            match st.buffer_since {
+                None => {
+                    st = cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+                Some(since) => {
+                    let elapsed = since.elapsed();
+                    if elapsed >= window {
+                        st.buffer_since = None;
+                        let batch = std::mem::take(&mut st.buffer);
+                        drop(st);
+                        if !batch.is_empty() {
+                            self.dispatch(batch);
+                        }
+                        st = m.lock().unwrap();
+                    } else {
+                        let (g, _) = cv
+                            .wait_timeout(st, window - elapsed)
+                            .unwrap_or_else(|e| e.into_inner());
+                        st = g;
+                    }
+                }
+            }
+        }
+    }
+
+    fn flush_buffer(self: &Arc<Self>) {
+        let batch = {
+            let (m, _) = &*self.inner;
+            let mut st = m.lock().unwrap();
+            st.buffer_since = None;
+            std::mem::take(&mut st.buffer)
+        };
+        if !batch.is_empty() {
+            self.dispatch(batch);
+        }
+    }
+
+    /// Pick a site score-proportionally, avoiding `avoid` and suspended
+    /// sites when possible.
+    fn pick_site(st: &mut SchedInner, avoid: Option<usize>) -> usize {
+        let now = Instant::now();
+        let eligible: Vec<usize> = st
+            .sites
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| {
+                Some(*i) != avoid
+                    && s.suspended_until.map(|t| t <= now).unwrap_or(true)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let pool: Vec<usize> = if eligible.is_empty() {
+            (0..st.sites.len()).collect()
+        } else {
+            eligible
+        };
+        let total: f64 = pool.iter().map(|&i| st.sites[i].score).sum();
+        let mut pick = st.rng.f64() * total;
+        for &i in &pool {
+            if pick < st.sites[i].score {
+                return i;
+            }
+            pick -= st.sites[i].score;
+        }
+        *pool.last().unwrap()
+    }
+
+    fn dispatch(self: &Arc<Self>, batch: Vec<Pending>) {
+        // Fast path: unclustered submissions are single-task batches —
+        // skip the per-site grouping allocations (hot path).
+        if batch.len() == 1 {
+            let site = {
+                let (m, _) = &*self.inner;
+                let mut st = m.lock().unwrap();
+                Self::pick_site(&mut st, batch[0].last_site)
+            };
+            self.submit_bundle(site, batch);
+            return;
+        }
+        // Group the batch per chosen site (one bundle per site pick).
+        let mut by_site: Vec<(usize, Vec<Pending>)> = Vec::new();
+        {
+            let (m, _) = &*self.inner;
+            let mut st = m.lock().unwrap();
+            for p in batch {
+                let site = Self::pick_site(&mut st, p.last_site);
+                match by_site.iter_mut().find(|(s, _)| *s == site) {
+                    Some((_, v)) => v.push(p),
+                    None => by_site.push((site, vec![p])),
+                }
+            }
+        }
+        for (site, pendings) in by_site {
+            self.submit_bundle(site, pendings);
+        }
+    }
+
+    fn submit_bundle(self: &Arc<Self>, site: usize, pendings: Vec<Pending>) {
+        let provider = {
+            let (m, _) = &*self.inner;
+            let st = m.lock().unwrap();
+            Arc::clone(&st.sites[site].provider)
+        };
+        let tasks: Vec<AppTask> = pendings.iter().map(|p| p.task.clone()).collect();
+        let sched = Arc::clone(self);
+        let submit_us = self.now_us();
+        let done: BundleDone = Box::new(move |results: Vec<TaskResult>| {
+            sched.on_bundle_done(site, pendings, results, submit_us);
+        });
+        provider.submit(tasks, done);
+    }
+
+    fn on_bundle_done(
+        self: &Arc<Self>,
+        site: usize,
+        pendings: Vec<Pending>,
+        results: Vec<TaskResult>,
+        submit_us: u64,
+    ) {
+        let mut retry: Vec<Pending> = Vec::new();
+        let now = self.now_us();
+        {
+            let (m, _) = &*self.inner;
+            let mut st = m.lock().unwrap();
+            let site_name = st.sites[site].provider.name().to_string();
+            for (p, r) in pendings.into_iter().zip(results) {
+                debug_assert_eq!(p.task.id, r.id);
+                if r.ok {
+                    // Score: additive-increase on success.
+                    st.sites[site].successes += 1;
+                    st.sites[site].score = (st.sites[site].score + 1.0).min(1e6);
+                    st.timeline.push(TaskRecord {
+                        task_id: r.id,
+                        stage: p.task.executable.clone(),
+                        site: site_name.clone(),
+                        executor: r.executor,
+                        submitted: submit_us,
+                        started: now.saturating_sub(r.exec_us),
+                        ended: now,
+                        ok: true,
+                    });
+                    self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                    (p.done)(r);
+                } else {
+                    // Score: multiplicative-decrease; maybe suspend.
+                    st.sites[site].failures += 1;
+                    st.sites[site].score = (st.sites[site].score * 0.5).max(0.25);
+                    if st.sites[site].failures % self.suspend_after_failures == 0 {
+                        st.sites[site].suspended_until =
+                            Some(Instant::now() + self.suspend_for);
+                    }
+                    if p.attempts < self.retries {
+                        retry.push(Pending {
+                            task: p.task,
+                            done: p.done,
+                            attempts: p.attempts + 1,
+                            last_site: Some(site),
+                        });
+                    } else {
+                        st.timeline.push(TaskRecord {
+                            task_id: r.id,
+                            stage: p.task.executable.clone(),
+                            site: site_name.clone(),
+                            executor: r.executor,
+                            submitted: submit_us,
+                            started: now.saturating_sub(r.exec_us),
+                            ended: now,
+                            ok: false,
+                        });
+                        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                        (p.done)(r);
+                    }
+                }
+            }
+        }
+        if !retry.is_empty() {
+            self.dispatch(retry);
+        }
+    }
+
+    /// Snapshot of the timeline recorded so far.
+    pub fn timeline(&self) -> Timeline {
+        self.inner.0.lock().unwrap().timeline.clone()
+    }
+
+    /// Site scores (diagnostics / tests).
+    pub fn scores(&self) -> Vec<(String, f64)> {
+        let st = self.inner.0.lock().unwrap();
+        st.sites
+            .iter()
+            .map(|s| (s.provider.name().to_string(), s.score))
+            .collect()
+    }
+
+    /// Flush any buffered bundle immediately (drain at end of run).
+    pub fn drain(self: &Arc<Self>) {
+        self.flush_buffer();
+    }
+}
+
+impl Drop for GridScheduler {
+    fn drop(&mut self) {
+        {
+            let (m, cv) = &*self.inner;
+            m.lock().unwrap().shutdown = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.flusher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::providers::{testing, LocalProvider};
+    use std::sync::mpsc;
+
+    fn task(id: u64) -> AppTask {
+        AppTask {
+            id,
+            key: format!("k{id}"),
+            executable: "x".into(),
+            args: vec![],
+            inputs: vec![],
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn submits_and_completes() {
+        let (runner, _) = testing::sleeper(0);
+        let p: Arc<dyn Provider> = Arc::new(LocalProvider::new("a", 2, runner));
+        let sched = GridScheduler::new(vec![p], None, 0, 1);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            let tx = tx.clone();
+            sched.submit(task(i), Box::new(move |r| tx.send(r).unwrap()));
+        }
+        for _ in 0..10 {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(r.ok);
+        }
+        assert_eq!(sched.in_flight(), 0);
+        assert_eq!(sched.timeline().len(), 10);
+    }
+
+    #[test]
+    fn clustering_bundles_by_size() {
+        let (runner, _) = testing::sleeper(0);
+        let p: Arc<dyn Provider> = Arc::new(LocalProvider::new("a", 1, runner));
+        let sched = GridScheduler::new(
+            vec![p],
+            Some(ClusterPolicy {
+                bundle_size: 5,
+                window: Duration::from_secs(60), // size-triggered only
+            }),
+            0,
+            2,
+        );
+        let (tx, rx) = mpsc::channel();
+        for i in 0..5 {
+            let tx = tx.clone();
+            sched.submit(task(i), Box::new(move |r| tx.send(r).unwrap()));
+        }
+        for _ in 0..5 {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        // All five ran as one bundle on one executor.
+        let tl = sched.timeline();
+        let execs: std::collections::HashSet<u64> =
+            tl.records.iter().map(|r| r.executor).collect();
+        assert_eq!(execs.len(), 1);
+    }
+
+    #[test]
+    fn clustering_window_flushes_partial_bundle() {
+        let (runner, _) = testing::sleeper(0);
+        let p: Arc<dyn Provider> = Arc::new(LocalProvider::new("a", 1, runner));
+        let sched = GridScheduler::new(
+            vec![p],
+            Some(ClusterPolicy {
+                bundle_size: 100,
+                window: Duration::from_millis(30),
+            }),
+            0,
+            3,
+        );
+        let (tx, rx) = mpsc::channel();
+        for i in 0..3 {
+            let tx = tx.clone();
+            sched.submit(task(i), Box::new(move |r| tx.send(r).unwrap()));
+        }
+        // Window expiry must flush despite bundle_size not reached.
+        for _ in 0..3 {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+    }
+
+    #[test]
+    fn retries_failed_tasks_to_success() {
+        let runner = testing::flaky(vec![0, 1]);
+        let p: Arc<dyn Provider> = Arc::new(LocalProvider::new("a", 1, runner));
+        let sched = GridScheduler::new(vec![p], None, 2, 4);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..3 {
+            let tx = tx.clone();
+            sched.submit(task(i), Box::new(move |r| tx.send(r).unwrap()));
+        }
+        for _ in 0..3 {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(r.ok, "flaky tasks succeed after retry");
+        }
+    }
+
+    #[test]
+    fn exhausted_retries_report_failure() {
+        let runner: crate::providers::AppRunner =
+            Arc::new(|_t| anyhow::bail!("always fails"));
+        let p: Arc<dyn Provider> = Arc::new(LocalProvider::new("a", 1, runner));
+        let sched = GridScheduler::new(vec![p], None, 1, 5);
+        let (tx, rx) = mpsc::channel();
+        sched.submit(task(0), Box::new(move |r| tx.send(r).unwrap()));
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!r.ok);
+        assert!(r.error.unwrap().contains("always fails"));
+        assert_eq!(sched.in_flight(), 0);
+    }
+
+    #[test]
+    fn failures_lower_site_score() {
+        let runner: crate::providers::AppRunner =
+            Arc::new(|_t| anyhow::bail!("bad site"));
+        let good = testing::sleeper(0).0;
+        let pbad: Arc<dyn Provider> = Arc::new(LocalProvider::new("bad", 1, runner));
+        let pgood: Arc<dyn Provider> = Arc::new(LocalProvider::new("good", 1, good));
+        let sched = GridScheduler::new(vec![pbad, pgood], None, 5, 6);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..20 {
+            let tx = tx.clone();
+            sched.submit(task(i), Box::new(move |r| tx.send(r).unwrap()));
+        }
+        for _ in 0..20 {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(r.ok, "retries route to the good site");
+        }
+        let scores = sched.scores();
+        let bad = scores.iter().find(|(n, _)| n == "bad").unwrap().1;
+        let good = scores.iter().find(|(n, _)| n == "good").unwrap().1;
+        assert!(good > bad, "good {good} must outscore bad {bad}");
+    }
+}

@@ -1,0 +1,33 @@
+//! # gridswift
+//!
+//! A from-scratch reproduction of *Realizing Fast, Scalable and Reliable
+//! Scientific Computations in Grid Environments* (Zhao et al., CS.DC 2008):
+//! the Swift parallel scripting system (SwiftScript + XDTM), the Karajan
+//! dataflow execution engine, and the Falkon lightweight task execution
+//! service — implemented as a Rust coordinator over AOT-compiled JAX/Pallas
+//! compute kernels executed via PJRT.
+//!
+//! Layer map (see DESIGN.md):
+//! - [`swiftscript`] — the workflow language: lexer, parser, XDTM types.
+//! - [`xdtm`] — logical datasets, physical mappers.
+//! - [`karajan`] — futures, lightweight tasks, dataflow engine, scheduler.
+//! - [`falkon`] — queue + streamlined dispatcher + executors + DRP.
+//! - [`providers`] — abstract provider interface (local/GRAM/PBS/Falkon).
+//! - [`sim`] — discrete-event grid simulator (baselines + paper scale).
+//! - [`runtime`] — PJRT artifact loading/execution (the compute path).
+//! - [`apps`] — fMRI, Montage, MolDyn workloads.
+//! - [`provenance`] — Kickstart records + virtual data catalog.
+//! - [`metrics`], [`util`] — timelines, stats, plots, rng, json.
+
+pub mod apps;
+pub mod falkon;
+pub mod karajan;
+pub mod metrics;
+pub mod xdtm;
+pub mod provenance;
+pub mod providers;
+pub mod runtime;
+pub mod sim;
+pub mod stack;
+pub mod swiftscript;
+pub mod util;

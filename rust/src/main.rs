@@ -1,0 +1,194 @@
+//! gridswift CLI — the leader entrypoint.
+//!
+//! ```text
+//! gridswift run <workflow.swift> [--provider local|falkon|falkon-drp]
+//!                                [--workers N] [--no-pipelining]
+//!                                [--cluster SIZE] [--restart-log PATH]
+//!                                [--workdir DIR] [--provenance OUT.jsonl]
+//! gridswift demo  fmri|montage|moldyn [size]
+//! gridswift serve [ADDR]          # standalone Falkon service
+//! gridswift artifacts             # list loaded artifacts
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use gridswift::apps::{fmri, moldyn, montage, AppRegistry};
+use gridswift::falkon::{FalkonService, FalkonServiceConfig, FalkonTcpServer, RealDrpPolicy};
+use gridswift::karajan::ClusterPolicy;
+use gridswift::metrics::plot::gantt;
+use gridswift::runtime;
+use gridswift::stack::{build, ProviderKind, StackOptions};
+use gridswift::swiftscript::compile;
+
+const USAGE: &str = "\
+gridswift — Swift/Karajan/Falkon grid workflow system (CS.DC 2008 reproduction)
+
+USAGE:
+  gridswift run <workflow.swift> [options]
+  gridswift demo fmri|montage|moldyn [size]
+  gridswift serve [addr]
+  gridswift artifacts
+
+OPTIONS (run):
+  --provider local|falkon|falkon-drp   execution provider (default falkon)
+  --workers N                          executor count (default 4)
+  --no-pipelining                      staged execution (Figure 10 baseline)
+  --cluster SIZE                       clustering bundle size (default off)
+  --restart-log PATH                   enable resume support
+  --workdir DIR                        intermediate data directory
+  --provenance OUT.jsonl               export VDC after the run
+";
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("demo") => cmd_demo(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let Some(path) = args.first().filter(|a| !a.starts_with("--")) else {
+        bail!("run: missing workflow file\n{USAGE}");
+    };
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("read workflow {path}"))?;
+    let prog = compile(&src)?;
+    println!(
+        "compiled {path}: {} procedures, {} global statements",
+        prog.procs.len(),
+        prog.globals.len()
+    );
+
+    let provider = match flag_value(args, "--provider") {
+        Some("local") => ProviderKind::Local,
+        Some("falkon-drp") => ProviderKind::FalkonDrp,
+        Some("falkon") | None => ProviderKind::Falkon,
+        Some(other) => bail!("unknown provider {other}"),
+    };
+    let workers: usize = flag_value(args, "--workers")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(4);
+    let clustering = flag_value(args, "--cluster")
+        .map(|s| -> Result<ClusterPolicy> {
+            Ok(ClusterPolicy {
+                bundle_size: s.parse()?,
+                window: std::time::Duration::from_millis(100),
+            })
+        })
+        .transpose()?;
+    let opts = StackOptions {
+        provider,
+        workers,
+        pipelining: !args.iter().any(|a| a == "--no-pipelining"),
+        clustering,
+        restart_log: flag_value(args, "--restart-log").map(PathBuf::from),
+        workdir: flag_value(args, "--workdir")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| std::env::temp_dir().join("gridswift_run")),
+        provenance: flag_value(args, "--provenance").is_some(),
+        ..Default::default()
+    };
+    let stack = build(opts)?;
+    let t0 = std::time::Instant::now();
+    let report = stack.engine.run(&prog)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\n{} tasks executed ({} resumed) in {dt:.2}s ({:.1} tasks/s)",
+        report.executed,
+        report.skipped,
+        report.executed as f64 / dt.max(1e-9)
+    );
+    print!("{}", gantt("stage windows", &report.timeline.stage_windows(), 48));
+    if let (Some(vdc), Some(out)) = (&stack.vdc, flag_value(args, "--provenance")) {
+        vdc.export(std::path::Path::new(out))?;
+        println!("provenance exported to {out} ({} records)", vdc.len());
+    }
+    Ok(())
+}
+
+fn cmd_demo(args: &[String]) -> Result<()> {
+    let wd = std::env::temp_dir().join("gridswift_demo");
+    let _ = std::fs::remove_dir_all(&wd);
+    std::fs::create_dir_all(&wd)?;
+    let size: usize = args.get(1).map(|s| s.parse().unwrap_or(0)).unwrap_or(0);
+    let (name, src) = match args.first().map(|s| s.as_str()) {
+        Some("fmri") => {
+            let n = if size == 0 { 12 } else { size };
+            let study = wd.join("study");
+            fmri::generate_study(&study, "bold1", n, 1)?;
+            ("fmri", fmri::workflow_source(&study, &wd.join("out"), "bold1"))
+        }
+        Some("montage") => {
+            let side = if size == 0 { 2 } else { size };
+            let survey = wd.join("survey");
+            montage::generate_survey(&survey, side, 1)?;
+            std::fs::create_dir_all(wd.join("out"))?;
+            ("montage", montage::workflow_source(&survey, &wd.join("out")))
+        }
+        Some("moldyn") => {
+            let n = if size == 0 { 2 } else { size };
+            let lib = wd.join("lib");
+            moldyn::generate_library(&lib, n, 8, 1)?;
+            ("moldyn", moldyn::workflow_source(&lib, &wd))
+        }
+        other => bail!("demo: unknown app {other:?} (fmri|montage|moldyn)"),
+    };
+    let file = wd.join(format!("{name}.swift"));
+    std::fs::write(&file, &src)?;
+    println!("wrote {}", file.display());
+    cmd_run(&[file.to_string_lossy().into_owned()])
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let addr = args.first().map(|s| s.as_str()).unwrap_or("127.0.0.1:9123");
+    let registry = Arc::new(AppRegistry::standard());
+    let dir = runtime::default_artifact_dir();
+    if dir.join("manifest.txt").exists() {
+        runtime::init(dir)?;
+    }
+    let svc = FalkonService::start(
+        FalkonServiceConfig {
+            drp: RealDrpPolicy::dynamic(1, 16),
+            executor_overhead: std::time::Duration::ZERO,
+        },
+        registry.runner(),
+    );
+    let server = FalkonTcpServer::start(svc, addr)?;
+    println!("falkon service on {}", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let dir = runtime::default_artifact_dir();
+    let manifest = runtime::init(&dir)
+        .with_context(|| format!("no artifacts at {dir:?}; run `make artifacts`"))?;
+    println!("artifacts in {dir:?}:");
+    for name in manifest.names() {
+        let spec = manifest.get(name).unwrap();
+        println!(
+            "  {name:<16} {} input(s), {} output(s)",
+            spec.inputs.len(),
+            spec.outputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! ASCII plots so `cargo bench` output shows figure *shapes* (who wins,
+//! where curves cross) directly in the terminal, mirroring the paper's
+//! figures without a plotting stack.
+
+/// Render an XY line chart with multiple named series.
+///
+/// `series` holds (label, points); x is plotted on a log scale if
+/// `log_x` (the paper's task-length and data-size axes are log).
+pub fn line_chart(
+    title: &str,
+    series: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+    log_x: bool,
+) -> String {
+    let markers = ['*', '+', 'o', 'x', '#', '@'];
+    let mut xs: Vec<f64> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    for (_, pts) in series {
+        for &(x, y) in pts {
+            xs.push(if log_x { x.max(1e-12).log10() } else { x });
+            ys.push(y);
+        }
+    }
+    if xs.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (xmin, xmax) = (
+        xs.iter().copied().fold(f64::INFINITY, f64::min),
+        xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+    );
+    let (ymin, ymax) = (
+        ys.iter().copied().fold(f64::INFINITY, f64::min),
+        ys.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+    );
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let m = markers[si % markers.len()];
+        for &(x, y) in pts {
+            let xv = if log_x { x.max(1e-12).log10() } else { x };
+            let col = (((xv - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row = (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            let r = height - 1 - row.min(height - 1);
+            grid[r][col.min(width - 1)] = m;
+        }
+    }
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("{ymax:>10.3} ┤"));
+    out.push_str(&grid[0].iter().collect::<String>());
+    out.push('\n');
+    for row in grid.iter().take(height - 1).skip(1) {
+        out.push_str("           │");
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{ymin:>10.3} ┤"));
+    out.push_str(&grid[height - 1].iter().collect::<String>());
+    out.push('\n');
+    out.push_str(&format!(
+        "            {}{}\n",
+        if log_x { "log10 x: " } else { "x: " },
+        format_args!("{xmin:.2} .. {xmax:.2}")
+    ));
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "            {} = {}\n",
+            markers[si % markers.len()],
+            label
+        ));
+    }
+    out
+}
+
+/// Horizontal bar chart (Figure 10/14-style per-stage bars).
+pub fn bar_chart(title: &str, bars: &[(String, f64)], width: usize) -> String {
+    let maxv = bars.iter().map(|(_, v)| *v).fold(0.0_f64, f64::max).max(1e-12);
+    let labelw = bars.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (label, v) in bars {
+        let n = ((v / maxv) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "  {:<labelw$} |{:<width$}| {v:.2}\n",
+            label,
+            "█".repeat(n),
+        ));
+    }
+    out
+}
+
+/// Gantt-style stage-window chart (Figure 10): one row per stage, showing
+/// [start, end] as a span over the experiment duration.
+pub fn gantt(title: &str, windows: &[(String, f64, f64)], width: usize) -> String {
+    let total = windows.iter().map(|w| w.2).fold(0.0_f64, f64::max).max(1e-12);
+    let labelw = windows.iter().map(|(l, _, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("{title} (total {total:.1}s)\n");
+    for (label, s, e) in windows {
+        let c0 = ((s / total) * width as f64).round() as usize;
+        let c1 = (((e / total) * width as f64).round() as usize).max(c0 + 1);
+        let mut line = vec![' '; width];
+        for cell in line.iter_mut().take(c1.min(width)).skip(c0) {
+            *cell = '▓';
+        }
+        out.push_str(&format!(
+            "  {:<labelw$} |{}| {s:.1}-{e:.1}s\n",
+            label,
+            line.into_iter().collect::<String>()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_contains_series_markers() {
+        let s = vec![
+            ("falkon", vec![(1.0, 0.95), (10.0, 0.99)]),
+            ("pbs", vec![(1.0, 0.01), (10.0, 0.05)]),
+        ];
+        let out = line_chart("Fig6", &s, 40, 10, true);
+        assert!(out.contains('*'));
+        assert!(out.contains('+'));
+        assert!(out.contains("falkon"));
+        assert!(out.contains("pbs"));
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let out = bar_chart(
+            "t",
+            &[("a".into(), 10.0), ("b".into(), 5.0)],
+            20,
+        );
+        let a_bars = out.lines().nth(1).unwrap().matches('█').count();
+        let b_bars = out.lines().nth(2).unwrap().matches('█').count();
+        assert_eq!(a_bars, 20);
+        assert_eq!(b_bars, 10);
+    }
+
+    #[test]
+    fn gantt_windows_ordered() {
+        let out = gantt(
+            "stages",
+            &[("s1".into(), 0.0, 5.0), ("s2".into(), 4.0, 10.0)],
+            20,
+        );
+        assert!(out.contains("s1"));
+        assert!(out.contains("0.0-5.0s"));
+    }
+
+    #[test]
+    fn empty_series_is_safe() {
+        let out = line_chart("empty", &[], 10, 5, false);
+        assert!(out.contains("no data"));
+    }
+}

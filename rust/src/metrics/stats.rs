@@ -1,0 +1,135 @@
+//! Statistics helpers shared by the figure benches: speedup, efficiency,
+//! means/stddevs for the paper's error bars (5-run repeats).
+
+/// Paper's efficiency metric: E = S_p / S_i, where the ideal speedup S_i
+/// is the processor count.
+pub fn efficiency(speedup: f64, procs: usize) -> f64 {
+    if procs == 0 {
+        return 0.0;
+    }
+    (speedup / procs as f64).clamp(0.0, 1.0)
+}
+
+/// Speedup: serial_time / parallel_time.
+pub fn speedup(serial_secs: f64, parallel_secs: f64) -> f64 {
+    if parallel_secs <= 0.0 {
+        return 0.0;
+    }
+    serial_secs / parallel_secs
+}
+
+/// Analytic efficiency for a dispatch-rate-limited system (Figure 7):
+/// `n_tasks` tasks of `task_secs` each, on `procs` processors, fed by a
+/// dispatcher sustaining `throughput` tasks/sec.
+///
+/// The dispatcher needs n/r seconds to push all tasks; compute needs
+/// n*t/p seconds of work. The makespan is bounded below by both, and by
+/// the last task's (dispatch + execute) tail.
+pub fn dispatch_limited_efficiency(
+    n_tasks: f64,
+    task_secs: f64,
+    procs: f64,
+    throughput: f64,
+) -> f64 {
+    if n_tasks <= 0.0 || procs <= 0.0 || throughput <= 0.0 || task_secs <= 0.0 {
+        return 0.0;
+    }
+    // Ideal compute-bound makespan vs dispatch-bound makespan (single
+    // dispatcher feeding P processors at `throughput` tasks/s; the last
+    // task still takes `task_secs` after its dispatch).
+    let ideal = n_tasks * task_secs / procs;
+    let makespan = ideal.max(n_tasks / throughput + task_secs);
+    (ideal / makespan).clamp(0.0, 1.0)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Percentile by nearest-rank (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_basics() {
+        assert!((efficiency(64.0, 64) - 1.0).abs() < 1e-12);
+        assert!((efficiency(32.0, 64) - 0.5).abs() < 1e-12);
+        assert_eq!(efficiency(10.0, 0), 0.0);
+    }
+
+    #[test]
+    fn speedup_basics() {
+        assert!((speedup(100.0, 10.0) - 10.0).abs() < 1e-12);
+        assert_eq!(speedup(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn dispatch_limited_matches_paper_examples() {
+        // Paper §4 / Fig 7: at 1 task/s on 100 procs, ~100 s (0.9*P/r=90s)
+        // tasks give ~90% efficiency.
+        let e = dispatch_limited_efficiency(1e6, 90.0, 100.0, 1.0);
+        assert!((e - 0.9).abs() < 0.02, "e={e}");
+        // At 500 tasks/s on 100 procs, ~0.2 s tasks give ~90%.
+        let e2 = dispatch_limited_efficiency(1e6, 0.18, 100.0, 500.0);
+        assert!((e2 - 0.9).abs() < 0.02, "e2={e2}");
+        // 1K procs at 1 task/s needs ~900 s tasks for 90%.
+        let e3 = dispatch_limited_efficiency(1e6, 900.0, 1000.0, 1.0);
+        assert!((e3 - 0.9).abs() < 0.02, "e3={e3}");
+        // 10K procs at 1 task/s: ~10K-second (2.8 h) tasks for 90%.
+        let e4 = dispatch_limited_efficiency(1e6, 9000.0, 10_000.0, 1.0);
+        assert!((e4 - 0.9).abs() < 0.02, "e4={e4}");
+    }
+
+    #[test]
+    fn dispatch_limited_monotone_in_task_length() {
+        let mut last = 0.0;
+        for t in [0.1, 1.0, 10.0, 100.0, 1000.0] {
+            let e = dispatch_limited_efficiency(1e6, t, 1000.0, 10.0);
+            assert!(e >= last);
+            last = e;
+        }
+    }
+
+    #[test]
+    fn moments_and_percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!((mean(&xs) - 3.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.5811388).abs() < 1e-5);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(min(&xs), 1.0);
+        assert_eq!(max(&xs), 5.0);
+    }
+}

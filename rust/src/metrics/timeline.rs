@@ -1,0 +1,214 @@
+//! Per-task execution records, the substrate of Figures 10-18: every task
+//! logs submit / dispatch / start / end timestamps plus where it ran.
+
+use crate::util::time::{to_secs, Micros};
+
+/// One task's lifecycle timestamps (all in experiment Micros).
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub task_id: u64,
+    /// Workflow stage name (e.g. "reorient", "mDiffFit").
+    pub stage: String,
+    /// Site / cluster name the task ran on.
+    pub site: String,
+    /// Executor (node) id within the site.
+    pub executor: u64,
+    /// When the engine handed the task to a provider.
+    pub submitted: Micros,
+    /// When an executor picked it up (end of queue wait).
+    pub started: Micros,
+    /// Completion time.
+    pub ended: Micros,
+    pub ok: bool,
+}
+
+impl TaskRecord {
+    pub fn wait(&self) -> Micros {
+        self.started.saturating_sub(self.submitted)
+    }
+
+    pub fn exec(&self) -> Micros {
+        self.ended.saturating_sub(self.started)
+    }
+}
+
+/// An experiment's full task timeline.
+#[derive(Debug, Default, Clone)]
+pub struct Timeline {
+    pub records: Vec<TaskRecord>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: TaskRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Experiment makespan: max(end) - min(submit).
+    pub fn makespan(&self) -> Micros {
+        let start = self.records.iter().map(|r| r.submitted).min().unwrap_or(0);
+        let end = self.records.iter().map(|r| r.ended).max().unwrap_or(0);
+        end.saturating_sub(start)
+    }
+
+    /// Total CPU time consumed (sum of exec times), in seconds.
+    pub fn cpu_secs(&self) -> f64 {
+        self.records.iter().map(|r| to_secs(r.exec())).sum()
+    }
+
+    /// Aggregate wait time in seconds.
+    pub fn wait_secs(&self) -> f64 {
+        self.records.iter().map(|r| to_secs(r.wait())).sum()
+    }
+
+    /// Records grouped by stage, in first-seen order.
+    pub fn by_stage(&self) -> Vec<(String, Vec<&TaskRecord>)> {
+        let mut order: Vec<String> = Vec::new();
+        for r in &self.records {
+            if !order.contains(&r.stage) {
+                order.push(r.stage.clone());
+            }
+        }
+        order
+            .into_iter()
+            .map(|s| {
+                let group = self.records.iter().filter(|r| r.stage == s).collect();
+                (s, group)
+            })
+            .collect()
+    }
+
+    /// Per-stage (start, end) windows in seconds relative to experiment
+    /// start — the data behind the Figure 10 pipelining plot.
+    pub fn stage_windows(&self) -> Vec<(String, f64, f64)> {
+        let t0 = self.records.iter().map(|r| r.submitted).min().unwrap_or(0);
+        self.by_stage()
+            .into_iter()
+            .map(|(name, recs)| {
+                let s = recs.iter().map(|r| r.started).min().unwrap_or(t0);
+                let e = recs.iter().map(|r| r.ended).max().unwrap_or(t0);
+                (
+                    name,
+                    to_secs(s.saturating_sub(t0)),
+                    to_secs(e.saturating_sub(t0)),
+                )
+            })
+            .collect()
+    }
+
+    /// Count of tasks per site — Figure 11's job split.
+    pub fn site_counts(&self) -> Vec<(String, usize)> {
+        let mut out: Vec<(String, usize)> = Vec::new();
+        for r in &self.records {
+            match out.iter_mut().find(|(s, _)| *s == r.site) {
+                Some((_, n)) => *n += 1,
+                None => out.push((r.site.clone(), 1)),
+            }
+        }
+        out
+    }
+
+    /// Resource efficiency given a processor count: cpu_time / (procs *
+    /// makespan). This is the paper's E = S_p / S_i with S_i = procs.
+    pub fn efficiency(&self, procs: usize) -> f64 {
+        let span = to_secs(self.makespan());
+        if span <= 0.0 || procs == 0 {
+            return 0.0;
+        }
+        (self.cpu_secs() / (procs as f64 * span)).min(1.0)
+    }
+
+    /// Throughput in tasks/second over the makespan.
+    pub fn throughput(&self) -> f64 {
+        let span = to_secs(self.makespan());
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.records.len() as f64 / span
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::time::SEC;
+
+    fn rec(id: u64, sub: Micros, st: Micros, en: Micros, site: &str) -> TaskRecord {
+        TaskRecord {
+            task_id: id,
+            stage: "s".into(),
+            site: site.into(),
+            executor: 0,
+            submitted: sub,
+            started: st,
+            ended: en,
+            ok: true,
+        }
+    }
+
+    #[test]
+    fn makespan_and_waits() {
+        let mut t = Timeline::new();
+        t.push(rec(1, 0, SEC, 3 * SEC, "a"));
+        t.push(rec(2, SEC, 2 * SEC, 5 * SEC, "a"));
+        assert_eq!(t.makespan(), 5 * SEC);
+        assert_eq!(t.records[0].wait(), SEC);
+        assert_eq!(t.records[1].exec(), 3 * SEC);
+        assert!((t.cpu_secs() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_perfect_packing() {
+        let mut t = Timeline::new();
+        // 4 tasks of 1s on 2 procs, perfectly packed into 2s.
+        for i in 0..4u64 {
+            let s = (i / 2) * SEC;
+            t.push(rec(i, 0, s, s + SEC, "a"));
+        }
+        assert!((t.efficiency(2) - 1.0).abs() < 1e-9);
+        assert!((t.efficiency(4) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn site_counts_split() {
+        let mut t = Timeline::new();
+        t.push(rec(1, 0, 0, SEC, "anl"));
+        t.push(rec(2, 0, 0, SEC, "uc"));
+        t.push(rec(3, 0, 0, SEC, "anl"));
+        assert_eq!(t.site_counts(), vec![("anl".into(), 2), ("uc".into(), 1)]);
+    }
+
+    #[test]
+    fn stage_windows_ordered_by_first_seen() {
+        let mut t = Timeline::new();
+        let mut r1 = rec(1, 0, 0, SEC, "a");
+        r1.stage = "first".into();
+        let mut r2 = rec(2, 0, SEC, 2 * SEC, "a");
+        r2.stage = "second".into();
+        t.push(r1);
+        t.push(r2);
+        let w = t.stage_windows();
+        assert_eq!(w[0].0, "first");
+        assert_eq!(w[1].0, "second");
+        assert!((w[1].2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_timeline_is_safe() {
+        let t = Timeline::new();
+        assert_eq!(t.makespan(), 0);
+        assert_eq!(t.efficiency(8), 0.0);
+        assert_eq!(t.throughput(), 0.0);
+    }
+}

@@ -1,0 +1,283 @@
+//! Provenance tracking (paper §3.14): Kickstart-style invocation records
+//! and a virtual data catalog (VDC).
+//!
+//! Every job launched through a recording runner produces an *invocation
+//! document* — environment details, application behaviour (exit status),
+//! and resource usage — which is stored in the VDC together with the
+//! derivation edges (inputs -> outputs), enabling the "how was this file
+//! computed" queries the paper demonstrates.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::providers::{AppRunner, AppTask};
+use crate::util::json::Json;
+
+/// A Kickstart-style invocation document.
+#[derive(Debug, Clone)]
+pub struct InvocationRecord {
+    pub key: String,
+    pub executable: String,
+    pub args: Vec<String>,
+    pub hostname: String,
+    pub cwd: String,
+    pub start_unix_ms: u64,
+    pub duration_us: u64,
+    pub exit_ok: bool,
+    pub error: Option<String>,
+    pub inputs: Vec<PathBuf>,
+    pub outputs: Vec<PathBuf>,
+}
+
+impl InvocationRecord {
+    /// Render as a JSON invocation document.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("key", self.key.as_str())
+            .set("executable", self.executable.as_str())
+            .set(
+                "args",
+                Json::Arr(self.args.iter().map(|a| Json::Str(a.clone())).collect()),
+            )
+            .set("hostname", self.hostname.as_str())
+            .set("cwd", self.cwd.as_str())
+            .set("start_unix_ms", self.start_unix_ms)
+            .set("duration_us", self.duration_us)
+            .set("exit_ok", self.exit_ok)
+            .set(
+                "inputs",
+                Json::Arr(
+                    self.inputs
+                        .iter()
+                        .map(|p| Json::Str(p.to_string_lossy().into_owned()))
+                        .collect(),
+                ),
+            )
+            .set(
+                "outputs",
+                Json::Arr(
+                    self.outputs
+                        .iter()
+                        .map(|p| Json::Str(p.to_string_lossy().into_owned()))
+                        .collect(),
+                ),
+            );
+        if let Some(e) = &self.error {
+            o.set("error", e.as_str());
+        }
+        o
+    }
+}
+
+/// The virtual data catalog: invocation documents + derivation index.
+#[derive(Default)]
+pub struct Vdc {
+    records: Mutex<Vec<InvocationRecord>>,
+    /// output file -> record index (who produced it).
+    producers: Mutex<BTreeMap<PathBuf, usize>>,
+}
+
+impl Vdc {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn insert(&self, rec: InvocationRecord) {
+        let mut records = self.records.lock().unwrap();
+        let idx = records.len();
+        let mut producers = self.producers.lock().unwrap();
+        for out in &rec.outputs {
+            producers.insert(out.clone(), idx);
+        }
+        records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Who produced this file?
+    pub fn producer_of(&self, file: &Path) -> Option<InvocationRecord> {
+        let producers = self.producers.lock().unwrap();
+        let idx = *producers.get(file)?;
+        Some(self.records.lock().unwrap()[idx].clone())
+    }
+
+    /// Full derivation chain of a file: the transitive closure of
+    /// producing invocations, nearest first.
+    pub fn lineage(&self, file: &Path) -> Vec<InvocationRecord> {
+        let mut out = Vec::new();
+        let mut frontier = vec![file.to_path_buf()];
+        let mut seen = std::collections::BTreeSet::new();
+        while let Some(f) = frontier.pop() {
+            if let Some(rec) = self.producer_of(&f) {
+                if seen.insert(rec.key.clone()) {
+                    frontier.extend(rec.inputs.iter().cloned());
+                    out.push(rec);
+                }
+            }
+        }
+        out
+    }
+
+    /// Records by executable name.
+    pub fn by_executable(&self, exe: &str) -> Vec<InvocationRecord> {
+        self.records
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.executable == exe)
+            .cloned()
+            .collect()
+    }
+
+    /// Dump the catalog as a JSON-lines file.
+    pub fn export(&self, path: &Path) -> Result<()> {
+        let records = self.records.lock().unwrap();
+        let mut text = String::new();
+        for r in records.iter() {
+            text.push_str(&r.to_json().render());
+            text.push('\n');
+        }
+        std::fs::write(path, text).with_context(|| format!("export VDC to {path:?}"))
+    }
+}
+
+fn hostname() -> String {
+    std::fs::read_to_string("/proc/sys/kernel/hostname")
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|_| "unknown".into())
+}
+
+/// Wrap an [`AppRunner`] so every invocation is recorded in the VDC —
+/// the Kickstart launcher role.
+pub fn recording_runner(inner: AppRunner, vdc: Arc<Vdc>) -> AppRunner {
+    Arc::new(move |task: &AppTask| {
+        let start_unix_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let t0 = Instant::now();
+        let outcome = inner(task);
+        let rec = InvocationRecord {
+            key: task.key.clone(),
+            executable: task.executable.clone(),
+            args: task.args.clone(),
+            hostname: hostname(),
+            cwd: std::env::current_dir()
+                .map(|p| p.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            start_unix_ms,
+            duration_us: t0.elapsed().as_micros() as u64,
+            exit_ok: outcome.is_ok(),
+            error: outcome.as_ref().err().map(|e| format!("{e:#}")),
+            inputs: task.inputs.clone(),
+            outputs: task.outputs.clone(),
+        };
+        vdc.insert(rec);
+        outcome
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(key: &str, exe: &str, inputs: Vec<&str>, outputs: Vec<&str>) -> AppTask {
+        AppTask {
+            id: 0,
+            key: key.into(),
+            executable: exe.into(),
+            args: vec!["a".into()],
+            inputs: inputs.into_iter().map(PathBuf::from).collect(),
+            outputs: outputs.into_iter().map(PathBuf::from).collect(),
+        }
+    }
+
+    #[test]
+    fn records_invocations() {
+        let vdc = Vdc::new();
+        let runner = recording_runner(Arc::new(|_t| Ok(())), Arc::clone(&vdc));
+        runner(&task("k1", "reorient", vec!["in.img"], vec!["out.img"])).unwrap();
+        assert_eq!(vdc.len(), 1);
+        let rec = vdc.producer_of(Path::new("out.img")).unwrap();
+        assert_eq!(rec.executable, "reorient");
+        assert!(rec.exit_ok);
+    }
+
+    #[test]
+    fn records_failures_with_error() {
+        let vdc = Vdc::new();
+        let runner = recording_runner(
+            Arc::new(|_t| anyhow::bail!("boom")),
+            Arc::clone(&vdc),
+        );
+        assert!(runner(&task("k", "x", vec![], vec!["o"])).is_err());
+        let rec = vdc.producer_of(Path::new("o")).unwrap();
+        assert!(!rec.exit_ok);
+        assert!(rec.error.unwrap().contains("boom"));
+    }
+
+    #[test]
+    fn lineage_walks_derivation_chain() {
+        let vdc = Vdc::new();
+        let runner = recording_runner(Arc::new(|_t| Ok(())), Arc::clone(&vdc));
+        runner(&task("k1", "stage1", vec!["raw.img"], vec!["mid.img"])).unwrap();
+        runner(&task("k2", "stage2", vec!["mid.img"], vec!["final.img"])).unwrap();
+        let lineage = vdc.lineage(Path::new("final.img"));
+        assert_eq!(lineage.len(), 2);
+        assert_eq!(lineage[0].executable, "stage2");
+        assert_eq!(lineage[1].executable, "stage1");
+    }
+
+    #[test]
+    fn export_is_json_lines() {
+        let vdc = Vdc::new();
+        let runner = recording_runner(Arc::new(|_t| Ok(())), Arc::clone(&vdc));
+        runner(&task("k1", "e", vec![], vec!["o1"])).unwrap();
+        runner(&task("k2", "e", vec![], vec!["o2"])).unwrap();
+        let p = std::env::temp_dir().join("gridswift_vdc_export.jsonl");
+        vdc.export(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+    }
+
+    #[test]
+    fn invocation_json_has_kickstart_fields() {
+        let vdc = Vdc::new();
+        let runner = recording_runner(Arc::new(|_t| Ok(())), Arc::clone(&vdc));
+        runner(&task("k", "e", vec!["i"], vec!["o"])).unwrap();
+        let rec = vdc.producer_of(Path::new("o")).unwrap();
+        let j = rec.to_json().render();
+        for field in [
+            "\"hostname\"",
+            "\"cwd\"",
+            "\"duration_us\"",
+            "\"exit_ok\"",
+            "\"inputs\"",
+            "\"outputs\"",
+        ] {
+            assert!(j.contains(field), "{field} in {j}");
+        }
+    }
+
+    #[test]
+    fn by_executable_filters() {
+        let vdc = Vdc::new();
+        let runner = recording_runner(Arc::new(|_t| Ok(())), Arc::clone(&vdc));
+        runner(&task("k1", "a", vec![], vec!["o1"])).unwrap();
+        runner(&task("k2", "b", vec![], vec!["o2"])).unwrap();
+        runner(&task("k3", "a", vec![], vec!["o3"])).unwrap();
+        assert_eq!(vdc.by_executable("a").len(), 2);
+        assert_eq!(vdc.by_executable("b").len(), 1);
+    }
+}

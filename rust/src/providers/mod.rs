@@ -1,0 +1,332 @@
+//! Execution providers (paper §3.11): the abstract provider interface the
+//! Karajan engine submits jobs through, and the local (thread-pool)
+//! implementation. The Falkon provider lives in [`crate::falkon`]; the
+//! simulated GRAM/PBS/Condor stacks live in [`crate::sim`] (they model
+//! virtual time, which real providers cannot).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+/// One application invocation (paper: a job): the rendered command line
+/// plus its staging lists.
+#[derive(Debug, Clone)]
+pub struct AppTask {
+    /// Engine-assigned id (unique per run).
+    pub id: u64,
+    /// Deterministic call-path key (stable across reruns; used by the
+    /// restart log and for output path synthesis).
+    pub key: String,
+    /// Logical executable name (resolved by the app registry).
+    pub executable: String,
+    /// Command-line words after the executable.
+    pub args: Vec<String>,
+    /// Files that must exist before execution (stage-in list).
+    pub inputs: Vec<PathBuf>,
+    /// Files the task promises to produce (stage-out list).
+    pub outputs: Vec<PathBuf>,
+}
+
+/// Execution result for one task.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub id: u64,
+    pub ok: bool,
+    pub error: Option<String>,
+    /// Executor label (thread / node) for provenance.
+    pub executor: u64,
+    /// Wall-clock execution time in microseconds.
+    pub exec_us: u64,
+    /// Wall-clock wait (queue) time in microseconds.
+    pub wait_us: u64,
+}
+
+/// Completion callback for a submitted bundle.
+pub type BundleDone = Box<dyn FnOnce(Vec<TaskResult>) + Send>;
+
+/// The app runner: maps an [`AppTask`] to actual computation. The real
+/// registry (apps::exec) dispatches on `executable` and calls PJRT
+/// artifacts; tests install mocks (sleepers, failers).
+pub type AppRunner = Arc<dyn Fn(&AppTask) -> Result<()> + Send + Sync>;
+
+/// The abstract provider interface (paper: submit/suspend/resume/cancel —
+/// we implement submit + drain; suspension happens at the scheduler level
+/// via site scores).
+pub trait Provider: Send + Sync {
+    fn name(&self) -> &str;
+    /// Submit a bundle of tasks; `done` fires exactly once with all
+    /// results (bundles run on one executor, serially, like a clustered
+    /// job).
+    fn submit(&self, bundle: Vec<AppTask>, done: BundleDone);
+    /// Number of executor slots (for efficiency accounting).
+    fn slots(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------
+// LocalProvider
+// ---------------------------------------------------------------------
+
+struct WorkItem {
+    bundle: Vec<AppTask>,
+    done: BundleDone,
+    enqueued: std::time::Instant,
+}
+
+struct LocalShared {
+    queue: Mutex<std::collections::VecDeque<WorkItem>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    busy: AtomicU64,
+}
+
+/// Thread-pool provider: the "local host" execution resource. Each worker
+/// owns its own PJRT registry (thread-local in `runtime`), so compute
+/// tasks run truly in parallel.
+pub struct LocalProvider {
+    name: String,
+    shared: Arc<LocalShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    nworkers: usize,
+}
+
+impl LocalProvider {
+    pub fn new(name: &str, workers: usize, runner: AppRunner) -> Self {
+        let shared = Arc::new(LocalShared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            busy: AtomicU64::new(0),
+        });
+        let handles = (0..workers.max(1))
+            .map(|wid| {
+                let shared = Arc::clone(&shared);
+                let runner = Arc::clone(&runner);
+                std::thread::Builder::new()
+                    .name(format!("{name}-worker-{wid}"))
+                    .spawn(move || worker_loop(wid as u64, shared, runner))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            name: name.to_string(),
+            shared,
+            workers: handles,
+            nworkers: workers.max(1),
+        }
+    }
+
+    /// Tasks currently executing (for tests/metrics).
+    pub fn busy(&self) -> u64 {
+        self.shared.busy.load(Ordering::SeqCst)
+    }
+}
+
+fn worker_loop(wid: u64, shared: Arc<LocalShared>, runner: AppRunner) {
+    loop {
+        let item = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(item) = q.pop_front() {
+                    break item;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        shared.busy.fetch_add(1, Ordering::SeqCst);
+        let wait_us = item.enqueued.elapsed().as_micros() as u64;
+        let mut results = Vec::with_capacity(item.bundle.len());
+        for task in &item.bundle {
+            let t0 = std::time::Instant::now();
+            let outcome = runner(task);
+            let exec_us = t0.elapsed().as_micros() as u64;
+            results.push(TaskResult {
+                id: task.id,
+                ok: outcome.is_ok(),
+                error: outcome.err().map(|e| format!("{e:#}")),
+                executor: wid,
+                exec_us,
+                wait_us,
+            });
+        }
+        shared.busy.fetch_sub(1, Ordering::SeqCst);
+        (item.done)(results);
+    }
+}
+
+impl Provider for LocalProvider {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn submit(&self, bundle: Vec<AppTask>, done: BundleDone) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(WorkItem {
+            bundle,
+            done,
+            enqueued: std::time::Instant::now(),
+        });
+        self.shared.cv.notify_one();
+    }
+
+    fn slots(&self) -> usize {
+        self.nworkers
+    }
+}
+
+impl Drop for LocalProvider {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+pub mod testing {
+    //! Mock runners shared across the test suite.
+
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Runner that sleeps `ms` per task and counts invocations.
+    pub fn sleeper(ms: u64) -> (AppRunner, Arc<AtomicUsize>) {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&count);
+        let runner: AppRunner = Arc::new(move |_t| {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            c.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        });
+        (runner, count)
+    }
+
+    /// Runner that fails tasks whose id is in `fail_ids`, once each.
+    pub fn flaky(fail_ids: Vec<u64>) -> AppRunner {
+        let failed: Arc<Mutex<std::collections::HashSet<u64>>> =
+            Arc::new(Mutex::new(fail_ids.into_iter().collect()));
+        Arc::new(move |t| {
+            if failed.lock().unwrap().remove(&t.id) {
+                anyhow::bail!("injected failure for task {}", t.id)
+            }
+            Ok(())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn local_provider_runs_bundles_and_reports() {
+        let (runner, count) = testing::sleeper(1);
+        let p = LocalProvider::new("local", 2, runner);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let bundle: Vec<AppTask> = (0..3)
+            .map(|i| AppTask {
+                id: i,
+                key: format!("k{i}"),
+                executable: "sleep".into(),
+                args: vec![],
+                inputs: vec![],
+                outputs: vec![],
+            })
+            .collect();
+        p.submit(
+            bundle,
+            Box::new(move |rs| {
+                tx.send(rs).unwrap();
+            }),
+        );
+        let rs = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(rs.len(), 3);
+        assert!(rs.iter().all(|r| r.ok));
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+        // Bundle runs serially on one executor.
+        let execs: std::collections::HashSet<u64> =
+            rs.iter().map(|r| r.executor).collect();
+        assert_eq!(execs.len(), 1);
+    }
+
+    #[test]
+    fn parallel_bundles_use_multiple_workers() {
+        let (runner, _count) = testing::sleeper(30);
+        let p = LocalProvider::new("local", 4, runner);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = std::sync::mpsc::channel::<Vec<TaskResult>>();
+        for i in 0..4u64 {
+            let tx = tx.clone();
+            let h = Arc::clone(&hits);
+            p.submit(
+                vec![AppTask {
+                    id: i,
+                    key: format!("k{i}"),
+                    executable: "sleep".into(),
+                    args: vec![],
+                    inputs: vec![],
+                    outputs: vec![],
+                }],
+                Box::new(move |rs| {
+                    h.fetch_add(1, Ordering::SeqCst);
+                    tx.send(rs).unwrap();
+                }),
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let mut executors = std::collections::HashSet::new();
+        for _ in 0..4 {
+            let rs = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            executors.insert(rs[0].executor);
+        }
+        // 4 x 30 ms on 4 workers: well under serial 120 ms.
+        assert!(t0.elapsed().as_millis() < 100, "{:?}", t0.elapsed());
+        assert!(executors.len() >= 2, "work spread across workers");
+    }
+
+    #[test]
+    fn failures_are_reported_not_panicked() {
+        let runner = testing::flaky(vec![1]);
+        let p = LocalProvider::new("local", 1, runner);
+        let (tx, rx) = std::sync::mpsc::channel();
+        p.submit(
+            vec![
+                AppTask {
+                    id: 1,
+                    key: "a".into(),
+                    executable: "x".into(),
+                    args: vec![],
+                    inputs: vec![],
+                    outputs: vec![],
+                },
+                AppTask {
+                    id: 2,
+                    key: "b".into(),
+                    executable: "x".into(),
+                    args: vec![],
+                    inputs: vec![],
+                    outputs: vec![],
+                },
+            ],
+            Box::new(move |rs| tx.send(rs).unwrap()),
+        );
+        let rs = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert!(!rs[0].ok);
+        assert!(rs[0].error.as_ref().unwrap().contains("injected"));
+        assert!(rs[1].ok, "bundle continues after a failed member");
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let (runner, _) = testing::sleeper(0);
+        let p = LocalProvider::new("local", 2, runner);
+        drop(p); // must not hang
+    }
+}

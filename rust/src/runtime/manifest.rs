@@ -1,0 +1,144 @@
+//! Artifact manifest parsing.
+//!
+//! `aot.py` writes one line per artifact:
+//!
+//! ```text
+//! reorient_y inputs=f32[64,64,24] outputs=f32[64,64,24]
+//! wham inputs=f32[1,64];f32[8,64];f32[8,1] outputs=f32[8,1];f32[1,64]
+//! ```
+//!
+//! The manifest lets the Rust side validate tensors without parsing HLO.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Input/output shape contract of one artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// The full artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    specs: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    let inner = s
+        .strip_prefix("f32[")
+        .and_then(|r| r.strip_suffix(']'))
+        .with_context(|| format!("bad shape token {s:?} (only f32[...] supported)"))?;
+    if inner.is_empty() {
+        return Ok(vec![]);
+    }
+    inner
+        .split(',')
+        .map(|d| d.trim().parse::<usize>().with_context(|| format!("bad dim in {s:?}")))
+        .collect()
+}
+
+fn parse_shapes(field: &str, key: &str) -> Result<Vec<Vec<usize>>> {
+    let rest = field
+        .strip_prefix(key)
+        .with_context(|| format!("expected field {key}.. in {field:?}"))?;
+    rest.split(';').map(parse_shape).collect()
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut specs = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (Some(name), Some(ins), Some(outs)) =
+                (parts.next(), parts.next(), parts.next())
+            else {
+                bail!("manifest line {}: expected 3 fields: {line:?}", lineno + 1);
+            };
+            let spec = ArtifactSpec {
+                name: name.to_string(),
+                inputs: parse_shapes(ins, "inputs=")?,
+                outputs: parse_shapes(outs, "outputs=")?,
+            };
+            specs.insert(name.to_string(), spec);
+        }
+        Ok(Self { specs })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.specs.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+reorient_y inputs=f32[64,64,24] outputs=f32[64,64,24]
+wham inputs=f32[1,64];f32[8,64];f32[8,1] outputs=f32[8,1];f32[1,64]
+# a comment
+
+mdenergy inputs=f32[128,3] outputs=f32[128,3];f32[1]
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 3);
+        let w = m.get("wham").unwrap();
+        assert_eq!(w.inputs.len(), 3);
+        assert_eq!(w.inputs[1], vec![8, 64]);
+        assert_eq!(w.outputs[0], vec![8, 1]);
+        let e = m.get("mdenergy").unwrap();
+        assert_eq!(e.outputs[1], vec![1]);
+    }
+
+    #[test]
+    fn scalar_shape_is_empty_dims() {
+        let m = Manifest::parse("s inputs=f32[] outputs=f32[]\n").unwrap();
+        assert_eq!(m.get("s").unwrap().inputs[0], Vec::<usize>::new());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("bad-line-without-fields\n").is_err());
+        assert!(Manifest::parse("x inputs=f64[2] outputs=f32[2]\n").is_err());
+        assert!(Manifest::parse("x inputs=f32[a] outputs=f32[2]\n").is_err());
+    }
+
+    #[test]
+    fn names_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let names: Vec<&str> = m.names().collect();
+        assert_eq!(names, vec!["mdenergy", "reorient_y", "wham"]);
+    }
+}

@@ -1,0 +1,180 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles each once per thread, and executes
+//! them from the coordinator's hot path.
+//!
+//! Design notes:
+//! - Interchange is HLO **text** (`HloModuleProto::from_text_file`) — see
+//!   DESIGN.md: xla_extension 0.5.1 rejects jax>=0.5 serialized protos.
+//! - The `xla` crate's types wrap raw C++ pointers and are `!Send`, so the
+//!   registry lives in a thread-local: each executor thread owns a PJRT
+//!   CPU client and a compiled-executable cache. Callers only ever see
+//!   [`Tensor`] (plain `Vec<f32>` + shape), which is `Send`.
+//! - Executables are compiled lazily on first use per thread and cached
+//!   for the life of the thread — compile once, execute many.
+
+mod manifest;
+mod tensor;
+
+pub use manifest::{ArtifactSpec, Manifest};
+pub use tensor::Tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Global artifact directory, set once at process start.
+static ARTIFACT_DIR: OnceLock<PathBuf> = OnceLock::new();
+
+/// Point the runtime at the artifacts directory (idempotent; first call
+/// wins). Returns the parsed manifest for inspection.
+pub fn init(dir: impl Into<PathBuf>) -> Result<Manifest> {
+    let dir = dir.into();
+    let manifest = Manifest::load(&dir)?;
+    let _ = ARTIFACT_DIR.set(dir);
+    Ok(manifest)
+}
+
+/// Default artifact directory: $GRIDSWIFT_ARTIFACTS or ./artifacts.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("GRIDSWIFT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn artifact_dir() -> Result<&'static PathBuf> {
+    ARTIFACT_DIR
+        .get()
+        .ok_or_else(|| anyhow!("runtime::init not called (artifact dir unset)"))
+}
+
+struct ThreadRegistry {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+thread_local! {
+    static REGISTRY: RefCell<Option<ThreadRegistry>> = const { RefCell::new(None) };
+}
+
+impl ThreadRegistry {
+    fn create() -> Result<Self> {
+        let dir = artifact_dir()?;
+        Ok(Self {
+            client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
+            manifest: Manifest::load(dir)?,
+            execs: HashMap::new(),
+        })
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.execs.contains_key(name) {
+            let dir = artifact_dir()?;
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact {name}"))?;
+            self.execs.insert(name.to_string(), exe);
+        }
+        Ok(self.execs.get(name).unwrap())
+    }
+
+    fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.shape != *s {
+                bail!(
+                    "artifact {name} input {i}: shape {:?} != manifest {:?}",
+                    t.shape,
+                    s
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .context("reshape input literal")
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("execute artifact {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let parts = lit.to_tuple().context("untuple result")?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact {name}: {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(p, shape)| {
+                let data = p.to_vec::<f32>().context("read output f32s")?;
+                Ok(Tensor::new(shape.clone(), data))
+            })
+            .collect()
+    }
+}
+
+/// Execute artifact `name` with `inputs` on this thread's PJRT client.
+///
+/// The first call on a thread creates the client and compiles the
+/// executable; subsequent calls hit the cache. This is the only runtime
+/// entry point the coordinator uses.
+pub fn execute(name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    REGISTRY.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(ThreadRegistry::create()?);
+        }
+        slot.as_mut().unwrap().execute(name, inputs)
+    })
+}
+
+/// Pre-compile an artifact on this thread (warm-up for benchmarks).
+pub fn warm(name: &str) -> Result<()> {
+    REGISTRY.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(ThreadRegistry::create()?);
+        }
+        slot.as_mut().unwrap().executable(name).map(|_| ())
+    })
+}
+
+/// True if the artifact directory has been initialized and contains the
+/// named artifact.
+pub fn has_artifact(name: &str) -> bool {
+    ARTIFACT_DIR
+        .get()
+        .map(|d| d.join(format!("{name}.hlo.txt")).exists())
+        .unwrap_or(false)
+}

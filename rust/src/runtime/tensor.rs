@@ -1,0 +1,133 @@
+//! Plain-data tensor type: the `Send`-able facade over XLA literals.
+
+use anyhow::{bail, Result};
+
+/// A dense f32 tensor with row-major layout.
+///
+/// This is the unit of data exchanged between the coordinator (Layer 3)
+/// and the PJRT-executed artifacts; it is also the on-disk format of the
+/// synthetic datasets (`.img` files are raw little-endian f32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn vec(v: Vec<f32>) -> Self {
+        Self { shape: vec![v.len()], data: v }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of bytes of payload (for the I/O models and file writes).
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Reinterpret with a new shape of the same element count.
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Result<Self> {
+        if shape.iter().product::<usize>() != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Write as raw little-endian f32 (the `.img` dataset format).
+    pub fn write_raw(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut bytes = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes)
+    }
+
+    /// Read raw little-endian f32 with a known shape.
+    pub fn read_raw(path: &std::path::Path, shape: &[usize]) -> Result<Self> {
+        let bytes = std::fs::read(path)?;
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!(
+                "{path:?}: {} bytes but shape {shape:?} needs {}",
+                bytes.len(),
+                n * 4
+            );
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    /// Max absolute difference vs another tensor (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.byte_len(), 24);
+        assert!(t.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::vec(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(t.clone().reshaped(vec![2, 2]).is_ok());
+        assert!(t.reshaped(vec![3, 2]).is_err());
+    }
+
+    #[test]
+    fn raw_roundtrip() {
+        let dir = std::env::temp_dir().join("gridswift_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.img");
+        let t = Tensor::new(vec![2, 2], vec![1.5, -2.5, 3.25, 0.0]);
+        t.write_raw(&path).unwrap();
+        let back = Tensor::read_raw(&path, &[2, 2]).unwrap();
+        assert_eq!(t, back);
+        let bad = Tensor::read_raw(&path, &[3, 3]);
+        assert!(bad.is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::vec(vec![1.0, 2.0]);
+        let b = Tensor::vec(vec![1.5, 1.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

@@ -1,0 +1,878 @@
+//! The simulation driver: executes a workflow [`Dag`] under a configured
+//! submission mode, producing a [`Timeline`] with the same record schema
+//! the real engine produces — benches compare modes by running the same
+//! DAG through different drivers.
+//!
+//! Modes mirror the paper's §5.4 comparisons:
+//! - [`Mode::GramLrm`] — every task is a GRAM submission to a batch
+//!   scheduler (the paper's "GRAM" baseline).
+//! - [`Mode::GramCluster`] — Swift's clustering: a time-window/size-bound
+//!   bundler in front of GRAM (the paper's "GRAM+Clustering").
+//! - [`Mode::Falkon`] — the Falkon service with DRP.
+//! - [`Mode::MultiSite`] — score-based load balancing across sites, each
+//!   behind GRAM+LRM (Figure 11).
+//! - [`Mode::Mpi`] — gang-scheduled stage-barrier execution with per-stage
+//!   init/aggregation costs (the Montage MPI baseline, Figure 14).
+
+use std::collections::HashMap;
+
+use crate::metrics::{TaskRecord, Timeline};
+use crate::util::time::{secs, Micros};
+use crate::util::DetRng;
+
+use super::dag::Dag;
+use super::falkon_model::{FalkonConfig, FalkonSim};
+use super::lrm::{GramConfig, LrmConfig, LrmJob, LrmSim};
+use super::sharedfs::SharedFs;
+use super::{Event, EventQueue};
+
+/// Submission mode for a simulation run.
+#[derive(Debug, Clone)]
+pub enum Mode {
+    /// One GRAM submission per task to a batch scheduler.
+    GramLrm { lrm: LrmConfig, gram: GramConfig },
+    /// Swift clustering in front of GRAM+LRM.
+    GramCluster {
+        lrm: LrmConfig,
+        gram: GramConfig,
+        /// Max tasks per bundle.
+        bundle: usize,
+        /// Clustering window (paper §3.13: small submission delays that
+        /// accumulate independent tasks).
+        window: Micros,
+    },
+    /// The Falkon execution service.
+    Falkon { cfg: FalkonConfig },
+    /// Score-based load balancing across sites (site name, LRM, relative
+    /// processor speed).
+    MultiSite {
+        sites: Vec<(String, LrmConfig, f64)>,
+        gram: GramConfig,
+    },
+    /// MPI gang execution: stage barriers, per-stage init + aggregation.
+    Mpi {
+        procs: usize,
+        stage_init: Micros,
+        stage_agg: Micros,
+    },
+}
+
+/// Results of a simulation run.
+#[derive(Debug)]
+pub struct SimOutcome {
+    pub timeline: Timeline,
+    /// Virtual makespan in seconds.
+    pub makespan_secs: f64,
+    /// Peak executors (Falkon) or busy processors (LRM).
+    pub peak_resources: usize,
+    /// Peak service queue length (Falkon).
+    pub peak_queue: usize,
+    /// CPU time consumed by tasks (seconds).
+    pub busy_cpu_secs: f64,
+    /// CPU time allocated but idle (seconds; Falkon executor accounting).
+    pub wasted_cpu_secs: f64,
+    /// Aggregate shared-FS bytes moved.
+    pub fs_bytes: f64,
+}
+
+impl SimOutcome {
+    /// The paper's MolDyn efficiency: consumed / (consumed + wasted).
+    pub fn allocation_efficiency(&self) -> f64 {
+        let total = self.busy_cpu_secs + self.wasted_cpu_secs;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.busy_cpu_secs / total
+    }
+
+    /// Speedup vs serial execution of the same DAG.
+    pub fn speedup(&self, total_service_secs: f64) -> f64 {
+        if self.makespan_secs <= 0.0 {
+            return 0.0;
+        }
+        total_service_secs / self.makespan_secs
+    }
+}
+
+/// Continuation for a shared-FS transfer.
+#[derive(Debug, Clone, Copy)]
+enum FsCont {
+    /// Input staged: start computing (task, exec/node, site context).
+    ReadDone { task: usize },
+    /// Output staged: task fully complete.
+    WriteDone { task: usize },
+}
+
+/// The simulation driver. Create with [`Driver::new`], call [`Driver::run`].
+pub struct Driver {
+    dag: Dag,
+    mode: Mode,
+    q: EventQueue,
+    /// Remaining unmet dependencies per task.
+    indeg: Vec<usize>,
+    dependents: Vec<Vec<usize>>,
+    completed: Vec<bool>,
+    n_done: usize,
+    timeline: Timeline,
+    submit_time: Vec<Micros>,
+    start_time: Vec<Micros>,
+
+    // Mode state.
+    lrms: Vec<LrmSim>,
+    site_names: Vec<String>,
+    site_speed: Vec<f64>,
+    site_scores: Vec<f64>,
+    task_site: Vec<usize>,
+    gram_free_at: Vec<Micros>,
+    falkon: Option<FalkonSim>,
+    falkon_task_exec: HashMap<usize, usize>,
+    cluster_buf: Vec<usize>,
+    cluster_deadline_set: bool,
+    /// Multi-site mode: centrally pending tasks + per-site outstanding
+    /// counts (Karajan's score-driven per-site submission windows).
+    pending_multisite: std::collections::VecDeque<usize>,
+    site_outstanding: Vec<usize>,
+
+    // Optional shared FS (Figure 8 / data-aware experiments).
+    fs: Option<SharedFs>,
+    fs_conts: HashMap<u64, FsCont>,
+    fs_exec_of_task: HashMap<usize, usize>,
+
+    _rng: DetRng,
+    /// Falkon executor lifetime accounting for wasted-CPU stats.
+    run_end: Micros,
+}
+
+impl Driver {
+    pub fn new(dag: Dag, mode: Mode, seed: u64) -> Self {
+        assert!(dag.validate(), "DAG deps must be topologically ordered");
+        let n = dag.len();
+        let mut indeg = vec![0usize; n];
+        let mut dependents = vec![Vec::new(); n];
+        for (i, t) in dag.tasks.iter().enumerate() {
+            indeg[i] = t.deps.len();
+            for &d in &t.deps {
+                dependents[d].push(i);
+            }
+        }
+        let (lrms, site_names, site_speed) = match &mode {
+            Mode::GramLrm { lrm, .. } | Mode::GramCluster { lrm, .. } => (
+                vec![LrmSim::new(lrm.clone())],
+                vec![lrm.name.to_string()],
+                vec![1.0],
+            ),
+            Mode::MultiSite { sites, .. } => {
+                let lrms = sites.iter().map(|(_, c, _)| LrmSim::new(c.clone())).collect();
+                let names = sites.iter().map(|(n, _, _)| n.clone()).collect();
+                let speeds = sites.iter().map(|(_, _, s)| *s).collect();
+                (lrms, names, speeds)
+            }
+            _ => (Vec::new(), Vec::new(), Vec::new()),
+        };
+        let nsites = lrms.len().max(1);
+        let falkon = match &mode {
+            Mode::Falkon { cfg } => Some(FalkonSim::new(cfg.clone())),
+            _ => None,
+        };
+        Self {
+            dag,
+            mode,
+            q: EventQueue::new(),
+            indeg,
+            dependents,
+            completed: vec![false; n],
+            n_done: 0,
+            timeline: Timeline::new(),
+            submit_time: vec![0; n],
+            start_time: vec![0; n],
+            // Initial per-site window: modest optimism, ramps on success.
+            site_scores: vec![32.0; nsites],
+            task_site: vec![0; n],
+            lrms,
+            site_names,
+            site_speed,
+            gram_free_at: vec![0; nsites],
+            falkon,
+            falkon_task_exec: HashMap::new(),
+            cluster_buf: Vec::new(),
+            cluster_deadline_set: false,
+            pending_multisite: std::collections::VecDeque::new(),
+            site_outstanding: vec![0; nsites],
+            fs: None,
+            fs_conts: HashMap::new(),
+            fs_exec_of_task: HashMap::new(),
+            _rng: DetRng::new(seed),
+            run_end: 0,
+        }
+    }
+
+    /// Attach a shared-FS model: tasks with input/output bytes will stage
+    /// data through it (Falkon and GRAM modes).
+    pub fn with_shared_fs(mut self, fs: SharedFs) -> Self {
+        self.fs = Some(fs);
+        self
+    }
+
+    /// Run to completion; returns the outcome.
+    pub fn run(mut self) -> SimOutcome {
+        if let Mode::Mpi { .. } = self.mode {
+            return self.run_mpi();
+        }
+        // Seed: release all ready tasks at t=0.
+        for i in 0..self.dag.len() {
+            if self.indeg[i] == 0 {
+                self.q.at(0, Event::Release(i));
+            }
+        }
+        if self.falkon.is_some() {
+            self.q.at(0, Event::DrpCheck { falkon: 0 });
+        }
+        while self.n_done < self.dag.len() {
+            let Some((now, ev)) = self.q.pop() else {
+                panic!(
+                    "simulation deadlock: {} of {} tasks done",
+                    self.n_done,
+                    self.dag.len()
+                );
+            };
+            self.handle(now, ev);
+        }
+        self.run_end = self.q.now();
+        self.finish()
+    }
+
+    fn finish(self) -> SimOutcome {
+        let makespan_secs = self.timeline.makespan() as f64 / 1e6;
+        let busy = self.timeline.cpu_secs();
+        let (peak_resources, peak_queue, wasted) = match &self.falkon {
+            Some(f) => {
+                // Wasted CPU: executor alive time minus busy time, up to
+                // run end (deregistered executors stop accruing).
+                let mut alive = 0f64;
+                for e in &f.executors {
+                    let end = if e.state
+                        == super::falkon_model::ExecState::Deregistered
+                    {
+                        // Approximation: idle_since marks deregistration.
+                        e.idle_since
+                    } else {
+                        self.run_end
+                    };
+                    alive += end.saturating_sub(e.registered_at) as f64 / 1e6;
+                }
+                (
+                    f.peak_executors,
+                    f.peak_queue,
+                    (alive - f.total_busy() as f64 / 1e6).max(0.0),
+                )
+            }
+            None => {
+                let peak = self
+                    .lrms
+                    .iter()
+                    .map(|l| l.cfg.total_procs())
+                    .max()
+                    .unwrap_or(0);
+                (peak, 0, 0.0)
+            }
+        };
+        SimOutcome {
+            makespan_secs,
+            peak_resources,
+            peak_queue,
+            busy_cpu_secs: busy,
+            wasted_cpu_secs: wasted,
+            fs_bytes: self.fs.as_ref().map(|f| f.bytes_done).unwrap_or(0.0),
+            timeline: self.timeline,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Event handling
+    // ------------------------------------------------------------------
+
+    fn handle(&mut self, now: Micros, ev: Event) {
+        match ev {
+            Event::Release(task) => self.on_release(now, task),
+            Event::GramArrive { site, bundle } => {
+                let service = self.bundle_service(&bundle, site);
+                self.lrms[site].enqueue(LrmJob {
+                    bundle,
+                    service,
+                    queued_at: now,
+                });
+                self.q.at(now, Event::LrmCycle { site });
+            }
+            Event::LrmCycle { site } => self.on_lrm_cycle(now, site),
+            Event::LrmJobDone { site, node, bundle } => {
+                self.lrms[site].finish(node);
+                for t in bundle {
+                    self.complete_task(now, t);
+                }
+                self.q.at(now, Event::LrmCycle { site });
+            }
+            Event::FalkonDispatch { .. } => self.on_falkon_dispatch(now),
+            Event::FalkonTaskDone { exec, task, .. } => {
+                // Output staging through the FS if configured.
+                let out_bytes = self.dag.tasks[task].output_bytes;
+                if out_bytes > 0 && self.fs.is_some() {
+                    let fs = self.fs.as_mut().unwrap();
+                    let id = fs.start(out_bytes, now);
+                    self.fs_conts.insert(id, FsCont::WriteDone { task });
+                    self.fs_exec_of_task.insert(task, exec);
+                    self.schedule_fs_wake(now);
+                } else {
+                    self.falkon_task_finished(now, exec, task);
+                }
+            }
+            Event::DrpCheck { .. } => self.on_drp_check(now),
+            Event::ExecutorJoin { count, .. } => {
+                if let Some(f) = self.falkon.as_mut() {
+                    f.register(count, now);
+                }
+                self.q.at(now, Event::FalkonDispatch { falkon: 0 });
+            }
+            Event::ExecutorIdle { .. } => { /* handled in DrpCheck */ }
+            Event::ClusterFlush => {
+                self.cluster_deadline_set = false;
+                self.flush_cluster(now);
+            }
+            Event::FsTransferDone { transfer } => self.on_fs_wake(now, transfer),
+            Event::MpiStage { .. } => unreachable!("MPI runs synchronously"),
+        }
+    }
+
+    fn bundle_service(&self, bundle: &[usize], site: usize) -> Micros {
+        let speed = self.site_speed.get(site).copied().unwrap_or(1.0);
+        let total: Micros = bundle.iter().map(|&t| self.dag.tasks[t].service).sum();
+        (total as f64 / speed) as Micros
+    }
+
+    fn on_release(&mut self, now: Micros, task: usize) {
+        self.submit_time[task] = now;
+        match &self.mode {
+            Mode::GramLrm { gram, .. } => {
+                let gram = gram.clone();
+                self.gram_submit(now, 0, vec![task], &gram);
+            }
+            Mode::GramCluster { gram, bundle, window, .. } => {
+                let (gram, bundle, window) = (gram.clone(), *bundle, *window);
+                self.cluster_buf.push(task);
+                if self.cluster_buf.len() >= bundle {
+                    self.flush_cluster_with(now, &gram);
+                } else if !self.cluster_deadline_set {
+                    self.cluster_deadline_set = true;
+                    self.q.after(window, Event::ClusterFlush);
+                }
+            }
+            Mode::Falkon { .. } => {
+                let f = self.falkon.as_mut().unwrap();
+                f.submit(task);
+                self.q.at(now, Event::FalkonDispatch { falkon: 0 });
+            }
+            Mode::MultiSite { .. } => {
+                // Tasks wait centrally; score-sized per-site windows pull
+                // them (paper §3.13: dispatch proportional to site score).
+                self.pending_multisite.push_back(task);
+                self.pump_multisite(now);
+            }
+            Mode::Mpi { .. } => unreachable!(),
+        }
+    }
+
+    /// Multi-site pull loop: each site's submission window is its score
+    /// (TCP-like: grows on success, halves on failure), capped by its
+    /// processor count. Sites with higher scores hold more outstanding
+    /// jobs, which realizes the paper's proportional dispatch.
+    fn pump_multisite(&mut self, now: Micros) {
+        let Mode::MultiSite { gram, .. } = &self.mode else { return };
+        let gram = gram.clone();
+        loop {
+            if self.pending_multisite.is_empty() {
+                return;
+            }
+            // Score-proportional routing: among sites with window
+            // headroom, pick the highest score per outstanding job, so
+            // equal scores balance outstanding counts and higher-scoring
+            // sites hold proportionally more.
+            let mut best: Option<(usize, f64)> = None;
+            for i in 0..self.lrms.len() {
+                let cap = self.site_scores[i]
+                    .min(self.lrms[i].cfg.total_procs() as f64);
+                if (self.site_outstanding[i] as f64) >= cap {
+                    continue;
+                }
+                let weight =
+                    self.site_scores[i] / (self.site_outstanding[i] + 1) as f64;
+                if best.map(|(_, w)| weight > w).unwrap_or(true) {
+                    best = Some((i, weight));
+                }
+            }
+            let Some((site, _)) = best else { return };
+            let task = self.pending_multisite.pop_front().unwrap();
+            self.task_site[task] = site;
+            self.site_outstanding[site] += 1;
+            self.gram_submit(now, site, vec![task], &gram);
+        }
+    }
+
+    fn gram_submit(
+        &mut self,
+        now: Micros,
+        site: usize,
+        bundle: Vec<usize>,
+        gram: &GramConfig,
+    ) {
+        // Serialize through the gateway with the throttle.
+        let slot = now.max(self.gram_free_at[site]);
+        self.gram_free_at[site] = slot + gram.throttle_interval;
+        let arrive = slot + gram.submit_cost;
+        self.q.at(arrive, Event::GramArrive { site, bundle });
+    }
+
+    fn flush_cluster(&mut self, now: Micros) {
+        if let Mode::GramCluster { gram, .. } = &self.mode {
+            let gram = gram.clone();
+            self.flush_cluster_with(now, &gram);
+        }
+    }
+
+    fn flush_cluster_with(&mut self, now: Micros, gram: &GramConfig) {
+        if self.cluster_buf.is_empty() {
+            return;
+        }
+        let bundle = std::mem::take(&mut self.cluster_buf);
+        self.gram_submit(now, 0, bundle, gram);
+    }
+
+    fn on_lrm_cycle(&mut self, now: Micros, site: usize) {
+        loop {
+            let Some((node, job)) = self.lrms[site].try_start(now) else {
+                break;
+            };
+            let overhead = self.lrms[site].cfg.job_overhead;
+            // Tasks in a bundle run serially on the node's processor.
+            let speed = self.site_speed.get(site).copied().unwrap_or(1.0);
+            let mut t = now + overhead;
+            for &task in &job.bundle {
+                let svc = (self.dag.tasks[task].service as f64 / speed) as Micros;
+                self.start_time[task] = t;
+                t += svc;
+            }
+            self.q.at(
+                t,
+                Event::LrmJobDone { site, node, bundle: job.bundle.clone() },
+            );
+        }
+        if let Some(next) = self.lrms[site].next_cycle_after(now) {
+            if next > now {
+                self.q.at(next, Event::LrmCycle { site });
+            }
+        }
+    }
+
+    fn on_falkon_dispatch(&mut self, now: Micros) {
+        loop {
+            let Some(f) = self.falkon.as_mut() else { return };
+            let Some((exec, task, start)) = f.try_dispatch(now) else {
+                break;
+            };
+            let overhead = f.cfg.executor_overhead;
+            self.falkon_task_exec.insert(task, exec);
+            // Input staging first, if modeled.
+            let in_bytes = self.dag.tasks[task].input_bytes;
+            if in_bytes > 0 && self.fs.is_some() {
+                self.start_time[task] = start;
+                let fs = self.fs.as_mut().unwrap();
+                let id = fs.start(in_bytes, start.max(now));
+                self.fs_conts.insert(id, FsCont::ReadDone { task });
+                self.fs_exec_of_task.insert(task, exec);
+                self.schedule_fs_wake(now);
+            } else {
+                let svc = self.dag.tasks[task].service;
+                self.start_time[task] = start;
+                self.q.at(
+                    start + overhead + svc,
+                    Event::FalkonTaskDone { falkon: 0, exec, task },
+                );
+            }
+        }
+    }
+
+    fn falkon_task_finished(&mut self, now: Micros, exec: usize, task: usize) {
+        let busy = now.saturating_sub(self.start_time[task]);
+        if let Some(f) = self.falkon.as_mut() {
+            f.finish(exec, now, busy);
+        }
+        self.complete_task(now, task);
+        self.q.at(now, Event::FalkonDispatch { falkon: 0 });
+    }
+
+    fn on_drp_check(&mut self, now: Micros) {
+        let Some(f) = self.falkon.as_mut() else { return };
+        let wanted = f.drp_wanted();
+        if wanted > 0 {
+            let chunk = f.cfg.drp.chunk.max(1);
+            let count = wanted.div_ceil(chunk) * chunk;
+            let count = count.min(f.cfg.drp.max_executors - f.live_executors() - f.pending_allocs);
+            if count > 0 {
+                f.pending_allocs += count;
+                let latency = f.cfg.drp.allocation_latency;
+                self.q.after(latency, Event::ExecutorJoin { falkon: 0, count });
+            }
+        }
+        f.reap_idle(now);
+        // Keep evaluating while the run is live.
+        if self.n_done < self.dag.len() {
+            let interval = f.cfg.drp.check_interval;
+            self.q.after(interval, Event::DrpCheck { falkon: 0 });
+        }
+    }
+
+    fn schedule_fs_wake(&mut self, now: Micros) {
+        if let Some(fs) = &self.fs {
+            if let Some((t, id)) = fs.next_completion(now) {
+                self.q.at(t, Event::FsTransferDone { transfer: id });
+            }
+        }
+    }
+
+    fn on_fs_wake(&mut self, now: Micros, transfer: u64) {
+        let Some(fs) = self.fs.as_mut() else { return };
+        if !self.fs_conts.contains_key(&transfer) {
+            // Stale wake; reschedule for whatever is still active.
+            self.schedule_fs_wake(now);
+            return;
+        }
+        if fs.finish_if_done(transfer, now) {
+            let cont = self.fs_conts.remove(&transfer).unwrap();
+            match cont {
+                FsCont::ReadDone { task } => {
+                    let exec = self.fs_exec_of_task[&task];
+                    let f = self.falkon.as_ref().unwrap();
+                    let svc = self.dag.tasks[task].service;
+                    self.q.at(
+                        now + f.cfg.executor_overhead + svc,
+                        Event::FalkonTaskDone { falkon: 0, exec, task },
+                    );
+                }
+                FsCont::WriteDone { task } => {
+                    let exec = self.fs_exec_of_task[&task];
+                    self.falkon_task_finished(now, exec, task);
+                }
+            }
+        }
+        self.schedule_fs_wake(now);
+    }
+
+    fn complete_task(&mut self, now: Micros, task: usize) {
+        debug_assert!(!self.completed[task], "task {task} completed twice");
+        self.completed[task] = true;
+        self.n_done += 1;
+        let site = self
+            .site_names
+            .get(self.task_site[task])
+            .cloned()
+            .unwrap_or_else(|| {
+                if self.falkon.is_some() { "falkon".into() } else { "site".into() }
+            });
+        let exec = *self.falkon_task_exec.get(&task).unwrap_or(&0) as u64;
+        self.timeline.push(TaskRecord {
+            task_id: task as u64,
+            stage: self.dag.tasks[task].stage.clone(),
+            site,
+            executor: exec,
+            submitted: self.submit_time[task],
+            started: self.start_time[task],
+            ended: now,
+            ok: true,
+        });
+        // Score update for multi-site LB (paper §3.13): success grows the
+        // site's window, additively + multiplicatively; failures (injected
+        // by fault experiments) halve it in `fail_task`.
+        if let Mode::MultiSite { .. } = self.mode {
+            let s = self.task_site[task];
+            self.site_outstanding[s] = self.site_outstanding[s].saturating_sub(1);
+            let cap = self.lrms[s].cfg.total_procs() as f64;
+            self.site_scores[s] = (self.site_scores[s] * 1.05 + 0.5).min(cap);
+            self.pump_multisite(now);
+        }
+        // Release dependents.
+        for i in 0..self.dependents[task].len() {
+            let dep = self.dependents[task][i];
+            self.indeg[dep] -= 1;
+            if self.indeg[dep] == 0 {
+                self.q.at(now, Event::Release(dep));
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // MPI gang mode (synchronous computation)
+    // ------------------------------------------------------------------
+
+    fn run_mpi(mut self) -> SimOutcome {
+        let Mode::Mpi { procs, stage_init, stage_agg } = self.mode else {
+            unreachable!()
+        };
+        // Group tasks by stage in first-seen order (the DAG generators
+        // emit stages in topological order).
+        let mut stages: Vec<(String, Vec<usize>)> = Vec::new();
+        for (i, t) in self.dag.tasks.iter().enumerate() {
+            match stages.iter_mut().find(|(s, _)| *s == t.stage) {
+                Some((_, v)) => v.push(i),
+                None => stages.push((t.stage.clone(), vec![i])),
+            }
+        }
+        let mut now: Micros = 0;
+        for (_, tasks) in &stages {
+            let stage_start = now + stage_init;
+            // LPT-ish packing: processors pull tasks round-robin.
+            let mut proc_free = vec![stage_start; procs.max(1)];
+            for &t in tasks {
+                // Earliest-available processor.
+                let (pi, &earliest) = proc_free
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, &v)| v)
+                    .unwrap();
+                self.submit_time[t] = now;
+                self.start_time[t] = earliest;
+                let end = earliest + self.dag.tasks[t].service;
+                proc_free[pi] = end;
+                self.timeline.push(TaskRecord {
+                    task_id: t as u64,
+                    stage: self.dag.tasks[t].stage.clone(),
+                    site: "mpi".into(),
+                    executor: pi as u64,
+                    submitted: now,
+                    started: earliest,
+                    ended: end,
+                    ok: true,
+                });
+            }
+            let stage_end = proc_free.into_iter().max().unwrap_or(stage_start);
+            // Barrier + aggregation before the next stage.
+            now = stage_end + stage_agg;
+        }
+        self.run_end = now;
+        self.finish()
+    }
+}
+
+/// Convenience: run a DAG of `n` independent `task_secs` tasks under each
+/// of the Figure 6 systems on 64 processors and return (name, efficiency).
+pub fn fig6_point(task_secs: f64, n: usize, seed: u64) -> Vec<(String, f64)> {
+    let procs = 64;
+    let mut out = Vec::new();
+    let mk_dag = || Dag::bag(n, "task", task_secs);
+
+    // Falkon with a static 64-executor pool.
+    let mut fcfg = FalkonConfig::default();
+    fcfg.drp = super::falkon_model::DrpPolicy::static_pool(procs);
+    fcfg.drp.allocation_latency = 0;
+    let o = Driver::new(mk_dag(), Mode::Falkon { cfg: fcfg }, seed).run();
+    out.push(("Falkon".to_string(), o.timeline.efficiency(procs)));
+
+    for (name, lrm) in [
+        ("PBS", LrmConfig::pbs(32)),
+        ("Condor-6.7.2", LrmConfig::condor(32)),
+        ("Condor-6.9.3", LrmConfig::condor_693(32)),
+    ] {
+        let gram = GramConfig { submit_cost: secs(0.2), throttle_interval: 0 };
+        let o = Driver::new(
+            mk_dag(),
+            Mode::GramLrm { lrm, gram },
+            seed,
+        )
+        .run();
+        out.push((name.to_string(), o.timeline.efficiency(procs)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::falkon_model::DrpPolicy;
+
+    fn falkon_static(procs: usize) -> Mode {
+        let mut cfg = FalkonConfig::default();
+        cfg.drp = DrpPolicy::static_pool(procs);
+        cfg.drp.allocation_latency = 0;
+        Mode::Falkon { cfg }
+    }
+
+    #[test]
+    fn falkon_bag_completes_all_tasks() {
+        let dag = Dag::bag(100, "sleep", 1.0);
+        let o = Driver::new(dag, falkon_static(8), 1).run();
+        assert_eq!(o.timeline.len(), 100);
+        // 100 x 1s on 8 procs: makespan >= 12.5 s, < 16 s with overheads.
+        assert!(o.makespan_secs >= 12.5, "{}", o.makespan_secs);
+        assert!(o.makespan_secs < 16.0, "{}", o.makespan_secs);
+    }
+
+    #[test]
+    fn falkon_efficiency_high_for_long_tasks_low_for_lrm_short() {
+        let eff = fig6_point(8.0, 64, 2);
+        let falkon = eff.iter().find(|(n, _)| n == "Falkon").unwrap().1;
+        let pbs = eff.iter().find(|(n, _)| n == "PBS").unwrap().1;
+        assert!(falkon > 0.97, "falkon 8s eff {falkon}");
+        assert!(pbs < 0.25, "pbs 8s eff {pbs}");
+    }
+
+    #[test]
+    fn lrm_respects_processor_capacity() {
+        // 100 tasks of 100 s on a tiny 2-node cluster (4 procs): makespan
+        // ~ 100/4 * 100 = 2500 s.
+        let dag = Dag::bag(100, "t", 100.0);
+        let mode = Mode::GramLrm {
+            lrm: LrmConfig::pbs(2),
+            gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+        };
+        let o = Driver::new(dag, mode, 3).run();
+        assert!(o.makespan_secs >= 2500.0, "{}", o.makespan_secs);
+        assert!(o.makespan_secs < 2800.0, "{}", o.makespan_secs);
+    }
+
+    #[test]
+    fn clustering_beats_per_task_gram_for_short_tasks() {
+        let mk = || Dag::bag(120, "t", 3.0);
+        let gram = GramConfig::gt2();
+        let per_task = Driver::new(
+            mk(),
+            Mode::GramLrm { lrm: LrmConfig::pbs(31), gram: gram.clone() },
+            4,
+        )
+        .run();
+        let clustered = Driver::new(
+            mk(),
+            Mode::GramCluster {
+                lrm: LrmConfig::pbs(31),
+                gram,
+                bundle: 15,
+                window: secs(2.0),
+            },
+            4,
+        )
+        .run();
+        // Paper: clustering improves 2-4x for many short jobs.
+        let ratio = per_task.makespan_secs / clustered.makespan_secs;
+        assert!(ratio > 2.0, "clustering speedup {ratio}");
+    }
+
+    #[test]
+    fn falkon_drp_provisions_on_demand() {
+        let mut cfg = FalkonConfig::default();
+        cfg.drp = DrpPolicy {
+            tasks_per_executor: 1,
+            max_executors: 16,
+            min_executors: 0,
+            allocation_latency: secs(10.0),
+            idle_timeout: secs(30.0),
+            check_interval: secs(1.0),
+            chunk: 2,
+        };
+        let dag = Dag::bag(64, "t", 5.0);
+        let o = Driver::new(dag, Mode::Falkon { cfg }, 5).run();
+        assert_eq!(o.timeline.len(), 64);
+        assert!(o.peak_resources > 0 && o.peak_resources <= 16);
+        // First task can't start before the allocation latency.
+        let first_start = o
+            .timeline
+            .records
+            .iter()
+            .map(|r| r.started)
+            .min()
+            .unwrap();
+        assert!(first_start >= secs(10.0), "first start {first_start}");
+    }
+
+    #[test]
+    fn multisite_splits_load_toward_faster_site() {
+        let sites = vec![
+            ("ANL_TG".to_string(), LrmConfig::pbs(31), 1.0),
+            ("UC_TP".to_string(), LrmConfig::pbs(60), 1.6),
+        ];
+        let mode = Mode::MultiSite {
+            sites,
+            gram: GramConfig { submit_cost: secs(0.5), throttle_interval: secs(0.2) },
+        };
+        let dag = Dag::bag(480, "t", 10.0);
+        let o = Driver::new(dag, mode, 6).run();
+        let counts = o.timeline.site_counts();
+        let anl = counts.iter().find(|(s, _)| s == "ANL_TG").map(|x| x.1).unwrap_or(0);
+        let uc = counts.iter().find(|(s, _)| s == "UC_TP").map(|x| x.1).unwrap_or(0);
+        assert_eq!(anl + uc, 480);
+        assert!(uc > anl, "faster site gets more work: {anl} vs {uc}");
+    }
+
+    #[test]
+    fn mpi_stage_barriers_enforced() {
+        let mut rng = DetRng::new(7);
+        let dag = Dag::fmri(8, [1.0, 1.0, 1.0, 1.0], &mut rng);
+        let o = Driver::new(
+            dag,
+            Mode::Mpi { procs: 8, stage_init: secs(1.0), stage_agg: secs(1.0) },
+            7,
+        )
+        .run();
+        // Stages don't overlap: windows are disjoint in start order.
+        let w = o.timeline.stage_windows();
+        assert_eq!(w.len(), 4);
+        for pair in w.windows(2) {
+            assert!(
+                pair[1].1 >= pair[0].2,
+                "stage {} starts before {} ends",
+                pair[1].0,
+                pair[0].0
+            );
+        }
+    }
+
+    #[test]
+    fn fmri_dag_pipelining_beats_stage_barriers() {
+        // The same fMRI DAG through Falkon (pipelined, data-driven) vs MPI
+        // (stage barriers): pipelined must be faster per Figure 10.
+        let mut rng = DetRng::new(8);
+        let dag = Dag::fmri(120, [3.0, 3.0, 4.0, 4.0], &mut rng);
+        let pipelined = Driver::new(dag.clone(), falkon_static(16), 8).run();
+        let barriered = Driver::new(
+            dag,
+            Mode::Mpi { procs: 16, stage_init: secs(2.0), stage_agg: secs(2.0) },
+            8,
+        )
+        .run();
+        assert!(
+            pipelined.makespan_secs < barriered.makespan_secs,
+            "pipelined {} vs barriered {}",
+            pipelined.makespan_secs,
+            barriered.makespan_secs
+        );
+    }
+
+    #[test]
+    fn shared_fs_throttles_io_heavy_bags() {
+        let dag = Dag::io_bag(64, 100 * 1024 * 1024, 0); // 100 MB reads
+        let o = Driver::new(dag, falkon_static(64), 9)
+            .with_shared_fs(SharedFs::gpfs_8())
+            .run();
+        assert_eq!(o.timeline.len(), 64);
+        // 64 x 100 MB through a 1 GB/s FS: >= 6.4 s of pure I/O.
+        assert!(o.makespan_secs >= 6.0, "{}", o.makespan_secs);
+        assert!(o.fs_bytes >= 64.0 * 100.0 * 1024.0 * 1024.0 * 0.99);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mk = || {
+            let mut rng = DetRng::new(11);
+            Dag::moldyn(2, &mut rng)
+        };
+        let a = Driver::new(mk(), falkon_static(8), 12).run();
+        let b = Driver::new(mk(), falkon_static(8), 12).run();
+        assert_eq!(a.makespan_secs, b.makespan_secs);
+        assert_eq!(a.timeline.len(), b.timeline.len());
+    }
+}

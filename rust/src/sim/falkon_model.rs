@@ -1,0 +1,326 @@
+//! Falkon service model (paper §4): service queue, streamlined dispatcher,
+//! executor pool, and DRP (dynamic resource provisioning).
+//!
+//! Calibration: the paper measures 487 tasks/s sustained dispatch (one
+//! task per ~2.05 ms of serialized dispatcher work, 2 message exchanges
+//! per dispatch) and a per-task executor-side overhead in the tens of ms
+//! (sandbox directory setup, exit-code collection). DRP allocates nodes
+//! through GRAM4+PBS with tens-of-seconds allocation latency (the paper's
+//! Figure 15 shows 81 s for the first allocation) and deregisters idle
+//! executors after a configurable idle timeout.
+
+use crate::util::time::{secs, Micros};
+
+/// Falkon service parameters.
+#[derive(Debug, Clone)]
+pub struct FalkonConfig {
+    /// Serialized dispatcher cost per task (1/487 s measured).
+    pub dispatch_cost: Micros,
+    /// Executor-side per-task overhead (sandbox + notification).
+    pub executor_overhead: Micros,
+    /// DRP policy.
+    pub drp: DrpPolicy,
+}
+
+impl Default for FalkonConfig {
+    fn default() -> Self {
+        Self {
+            dispatch_cost: 2053, // 1 / 487 tasks/s
+            executor_overhead: 45_000,
+            drp: DrpPolicy::default(),
+        }
+    }
+}
+
+/// Dynamic-resource-provisioning policy (paper §4, [29]).
+#[derive(Debug, Clone)]
+pub struct DrpPolicy {
+    /// Allocate one executor per this many queued tasks (ceil).
+    pub tasks_per_executor: usize,
+    /// Upper bound on executors (site allocation limit).
+    pub max_executors: usize,
+    /// Lower bound kept alive.
+    pub min_executors: usize,
+    /// Allocation latency: GRAM4+PBS round trip until workers register.
+    pub allocation_latency: Micros,
+    /// Deregister an executor idle for this long (0 = never).
+    pub idle_timeout: Micros,
+    /// Policy evaluation period.
+    pub check_interval: Micros,
+    /// Executors acquired per allocation request (nodes x procs).
+    pub chunk: usize,
+}
+
+impl Default for DrpPolicy {
+    fn default() -> Self {
+        Self {
+            tasks_per_executor: 1,
+            max_executors: 216, // paper's MolDyn peak
+            min_executors: 0,
+            allocation_latency: secs(81.0), // paper Fig. 15 first alloc
+            idle_timeout: secs(60.0),
+            check_interval: secs(5.0),
+            chunk: 2, // one dual-processor node per allocation
+        }
+    }
+}
+
+impl DrpPolicy {
+    /// A static pool: allocate everything up front, never deregister.
+    pub fn static_pool(executors: usize) -> Self {
+        Self {
+            tasks_per_executor: 1,
+            max_executors: executors,
+            min_executors: executors,
+            allocation_latency: secs(81.0),
+            idle_timeout: 0,
+            check_interval: secs(5.0),
+            chunk: executors,
+        }
+    }
+
+    /// Desired executor count for a queue length.
+    pub fn desired(&self, queued: usize, live: usize) -> usize {
+        let want = queued.div_ceil(self.tasks_per_executor.max(1));
+        want.clamp(self.min_executors, self.max_executors).max(
+            // Never shrink below what's already live via desired();
+            // shrinking happens through idle timeouts only.
+            live.min(self.max_executors),
+        )
+    }
+}
+
+/// Executor states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecState {
+    Idle,
+    Busy,
+    Deregistered,
+}
+
+/// One registered executor.
+#[derive(Debug, Clone)]
+pub struct Executor {
+    pub state: ExecState,
+    pub idle_since: Micros,
+    pub registered_at: Micros,
+    pub tasks_run: u64,
+    pub busy_time: Micros,
+}
+
+/// The Falkon service state (model).
+#[derive(Debug)]
+pub struct FalkonSim {
+    pub cfg: FalkonConfig,
+    /// FIFO service queue of DAG task ids.
+    pub queue: std::collections::VecDeque<usize>,
+    pub executors: Vec<Executor>,
+    /// Dispatcher is busy until this time (serialized dispatch cost).
+    pub dispatcher_free_at: Micros,
+    /// Executors requested but not yet registered.
+    pub pending_allocs: usize,
+    /// Stats.
+    pub dispatched: u64,
+    pub peak_queue: usize,
+    pub peak_executors: usize,
+}
+
+impl FalkonSim {
+    pub fn new(cfg: FalkonConfig) -> Self {
+        Self {
+            cfg,
+            queue: std::collections::VecDeque::new(),
+            executors: Vec::new(),
+            dispatcher_free_at: 0,
+            pending_allocs: 0,
+            dispatched: 0,
+            peak_queue: 0,
+            peak_executors: 0,
+        }
+    }
+
+    pub fn submit(&mut self, task: usize) {
+        self.queue.push_back(task);
+        self.peak_queue = self.peak_queue.max(self.queue.len());
+    }
+
+    pub fn live_executors(&self) -> usize {
+        self.executors
+            .iter()
+            .filter(|e| e.state != ExecState::Deregistered)
+            .count()
+    }
+
+    pub fn idle_executor(&self) -> Option<usize> {
+        self.executors.iter().position(|e| e.state == ExecState::Idle)
+    }
+
+    /// Register `count` new executors at `now`. Returns their ids.
+    pub fn register(&mut self, count: usize, now: Micros) -> Vec<usize> {
+        let mut ids = Vec::with_capacity(count);
+        for _ in 0..count {
+            self.executors.push(Executor {
+                state: ExecState::Idle,
+                idle_since: now,
+                registered_at: now,
+                tasks_run: 0,
+                busy_time: 0,
+            });
+            ids.push(self.executors.len() - 1);
+        }
+        self.pending_allocs = self.pending_allocs.saturating_sub(count);
+        self.peak_executors = self.peak_executors.max(self.live_executors());
+        ids
+    }
+
+    /// Attempt one dispatch at `now`: pops the queue head onto an idle
+    /// executor. Returns `(exec, task, start_time)`; `start_time` accounts
+    /// for the serialized dispatcher cost (the streamlined dispatcher's 2
+    /// message exchanges).
+    pub fn try_dispatch(&mut self, now: Micros) -> Option<(usize, usize, Micros)> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let exec = self.idle_executor()?;
+        let task = self.queue.pop_front().unwrap();
+        let start = now.max(self.dispatcher_free_at) + self.cfg.dispatch_cost;
+        self.dispatcher_free_at = start;
+        self.executors[exec].state = ExecState::Busy;
+        self.dispatched += 1;
+        Some((exec, task, start))
+    }
+
+    /// Executor finished its task at `now` (busy for `busy` us).
+    pub fn finish(&mut self, exec: usize, now: Micros, busy: Micros) {
+        let e = &mut self.executors[exec];
+        debug_assert_eq!(e.state, ExecState::Busy);
+        e.state = ExecState::Idle;
+        e.idle_since = now;
+        e.tasks_run += 1;
+        e.busy_time += busy;
+    }
+
+    /// DRP: how many new executors to request at `now`.
+    pub fn drp_wanted(&self) -> usize {
+        let live = self.live_executors() + self.pending_allocs;
+        let desired = self.cfg.drp.desired(self.queue.len() + live, live);
+        desired.saturating_sub(live)
+    }
+
+    /// Deregister executors idle past the timeout. Returns count removed.
+    pub fn reap_idle(&mut self, now: Micros) -> usize {
+        let timeout = self.cfg.drp.idle_timeout;
+        if timeout == 0 {
+            return 0;
+        }
+        let min = self.cfg.drp.min_executors;
+        let mut live = self.live_executors();
+        let mut reaped = 0;
+        for e in &mut self.executors {
+            if live <= min {
+                break;
+            }
+            if e.state == ExecState::Idle && now.saturating_sub(e.idle_since) >= timeout
+            {
+                e.state = ExecState::Deregistered;
+                live -= 1;
+                reaped += 1;
+            }
+        }
+        reaped
+    }
+
+    /// Aggregate busy time across executors (for efficiency accounting).
+    pub fn total_busy(&self) -> Micros {
+        self.executors.iter().map(|e| e.busy_time).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc() -> FalkonSim {
+        FalkonSim::new(FalkonConfig::default())
+    }
+
+    #[test]
+    fn dispatch_requires_idle_executor() {
+        let mut f = svc();
+        f.submit(0);
+        assert!(f.try_dispatch(0).is_none(), "no executors yet");
+        f.register(1, 0);
+        let (exec, task, start) = f.try_dispatch(0).unwrap();
+        assert_eq!((exec, task), (0, 0));
+        assert_eq!(start, f.cfg.dispatch_cost);
+        // Executor busy: nothing else dispatches.
+        f.submit(1);
+        assert!(f.try_dispatch(start).is_none());
+        f.finish(exec, start + 100, 100);
+        assert!(f.try_dispatch(start + 100).is_some());
+    }
+
+    #[test]
+    fn dispatcher_serializes_at_configured_rate() {
+        let mut f = svc();
+        f.register(10, 0);
+        for t in 0..10 {
+            f.submit(t);
+        }
+        let mut starts = Vec::new();
+        while let Some((_, _, s)) = f.try_dispatch(0) {
+            starts.push(s);
+        }
+        assert_eq!(starts.len(), 10);
+        // Starts spaced by dispatch_cost: sustained rate = 487/s.
+        for w in starts.windows(2) {
+            assert_eq!(w[1] - w[0], f.cfg.dispatch_cost);
+        }
+        let rate = 1e6 / f.cfg.dispatch_cost as f64;
+        assert!((rate - 487.0).abs() < 1.0, "rate {rate}");
+    }
+
+    #[test]
+    fn drp_scales_with_queue_and_respects_max() {
+        let mut f = svc();
+        f.cfg.drp.max_executors = 4;
+        f.cfg.drp.chunk = 2;
+        for t in 0..100 {
+            f.submit(t);
+        }
+        assert_eq!(f.drp_wanted(), 4, "capped at max");
+        f.pending_allocs = 4;
+        assert_eq!(f.drp_wanted(), 0, "pending counts");
+    }
+
+    #[test]
+    fn reap_idle_respects_min_and_timeout() {
+        let mut f = svc();
+        f.cfg.drp.idle_timeout = secs(60.0);
+        f.cfg.drp.min_executors = 1;
+        f.register(3, 0);
+        assert_eq!(f.reap_idle(secs(30.0)), 0, "not yet timed out");
+        let reaped = f.reap_idle(secs(61.0));
+        assert_eq!(reaped, 2, "keeps min_executors alive");
+        assert_eq!(f.live_executors(), 1);
+    }
+
+    #[test]
+    fn static_pool_policy_never_wants_more_than_pool() {
+        let p = DrpPolicy::static_pool(16);
+        assert_eq!(p.desired(1000, 16), 16);
+        assert_eq!(p.desired(0, 16), 16);
+        assert_eq!(p.idle_timeout, 0);
+    }
+
+    #[test]
+    fn stats_track_peaks() {
+        let mut f = svc();
+        for t in 0..5 {
+            f.submit(t);
+        }
+        assert_eq!(f.peak_queue, 5);
+        f.register(3, 0);
+        assert_eq!(f.peak_executors, 3);
+    }
+}

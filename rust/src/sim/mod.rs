@@ -1,0 +1,166 @@
+//! Discrete-event grid simulator.
+//!
+//! The paper's baselines (GRAM + PBS/Condor submission, MPI execution) and
+//! its large-scale results (54 K executors, 1.5 M queued tasks, the
+//! 244-molecule MolDyn run) are infeasible to measure in real time on this
+//! testbed, so they run here in virtual time: a deterministic
+//! discrete-event simulation whose component models are calibrated to the
+//! paper's measured per-task overheads and throughputs (see DESIGN.md §2).
+//!
+//! Components:
+//! - [`lrm`] — local resource manager (batch scheduler) models: PBS,
+//!   Condor 6.7.2, Condor 6.9.3 (derived), with a GRAM gateway model in
+//!   front (submit cost + rate throttle).
+//! - [`falkon_model`] — the Falkon service model: service queue,
+//!   streamlined dispatcher (serialized per-dispatch cost), executor pool,
+//!   DRP dynamic provisioning with allocation latency and idle
+//!   deregistration.
+//! - [`sharedfs`] — GPFS-style shared filesystem fluid-flow model
+//!   (aggregate bandwidth shared across concurrent streams, per-node NIC
+//!   cap) for the Figure 8 I/O experiments.
+//! - [`dag`] — workflow DAGs (generic bag-of-tasks + fMRI/Montage/MolDyn
+//!   structure generators mirroring `apps`).
+//! - [`driver`] — the experiment driver: routes released tasks to a
+//!   provider model per the configured submission mode (GRAM-direct,
+//!   GRAM+clustering, Falkon, MPI gang), applying Karajan scheduling
+//!   policies (site scores, clustering window), and records a
+//!   [`crate::metrics::Timeline`].
+
+pub mod dag;
+pub mod driver;
+pub mod falkon_model;
+pub mod lrm;
+pub mod sharedfs;
+
+pub use dag::{Dag, SimTask};
+pub use driver::{Driver, Mode, SimOutcome};
+pub use falkon_model::{DrpPolicy, FalkonConfig, FalkonSim};
+pub use lrm::{GramConfig, LrmConfig, LrmSim};
+pub use sharedfs::SharedFs;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::util::Micros;
+
+/// A schedulable simulation event: `(time, seq)` orders the queue; `seq`
+/// makes simultaneous events FIFO and the run deterministic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// A DAG task's dependencies are satisfied: route it to a provider.
+    Release(usize),
+    /// GRAM gateway finished forwarding a job bundle to the site LRM.
+    GramArrive { site: usize, bundle: Vec<usize> },
+    /// LRM scheduler wakes and tries to start queued jobs.
+    LrmCycle { site: usize },
+    /// A job (bundle of tasks) finished on an LRM node.
+    LrmJobDone { site: usize, node: usize, bundle: Vec<usize> },
+    /// Falkon dispatcher attempts to match queue and idle executors.
+    FalkonDispatch { falkon: usize },
+    /// An executor finished its task.
+    FalkonTaskDone { falkon: usize, exec: usize, task: usize },
+    /// DRP periodic policy evaluation.
+    DrpCheck { falkon: usize },
+    /// Provisioned executors come online (after allocation latency).
+    ExecutorJoin { falkon: usize, count: usize },
+    /// Idle-timeout check for one executor.
+    ExecutorIdle { falkon: usize, exec: usize },
+    /// Clustering window expired: flush the pending bundle.
+    ClusterFlush,
+    /// Shared-FS transfer completion (id into the FS active set).
+    FsTransferDone { transfer: u64 },
+    /// MPI gang: stage barrier completed, start next stage.
+    MpiStage { stage: usize },
+}
+
+/// The event queue + virtual clock every model shares.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    now: Micros,
+    seq: u64,
+    heap: BinaryHeap<Reverse<(Micros, u64, EventBox)>>,
+}
+
+/// Wrapper ordering events only by (time, seq).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct EventBox(Event);
+
+impl PartialOrd for EventBox {
+    fn partial_cmp(&self, _: &Self) -> Option<std::cmp::Ordering> {
+        Some(std::cmp::Ordering::Equal)
+    }
+}
+impl Ord for EventBox {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> Micros {
+        self.now
+    }
+
+    /// Schedule `ev` at absolute time `t` (>= now).
+    pub fn at(&mut self, t: Micros, ev: Event) {
+        debug_assert!(t >= self.now, "scheduling into the past");
+        self.seq += 1;
+        self.heap.push(Reverse((t.max(self.now), self.seq, EventBox(ev))));
+    }
+
+    /// Schedule `ev` after a delay.
+    pub fn after(&mut self, d: Micros, ev: Event) {
+        self.at(self.now + d, ev);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(Micros, Event)> {
+        self.heap.pop().map(|Reverse((t, _, e))| {
+            self.now = t;
+            (t, e.0)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_orders_by_time_then_fifo() {
+        let mut q = EventQueue::new();
+        q.at(100, Event::Release(1));
+        q.at(50, Event::Release(2));
+        q.at(100, Event::Release(3));
+        let (t1, e1) = q.pop().unwrap();
+        assert_eq!((t1, e1), (50, Event::Release(2)));
+        let (t2, e2) = q.pop().unwrap();
+        assert_eq!((t2, e2), (100, Event::Release(1)));
+        let (_, e3) = q.pop().unwrap();
+        assert_eq!(e3, Event::Release(3));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.after(10, Event::ClusterFlush);
+        q.pop();
+        assert_eq!(q.now(), 10);
+        q.after(5, Event::ClusterFlush);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 15);
+    }
+}

@@ -1,0 +1,193 @@
+//! Shared-filesystem fluid-flow model (Figure 8).
+//!
+//! The paper's GPFS deployment had 8 I/O servers on 1 Gb/s Ethernet. We
+//! model the FS as a processor-sharing fluid: the aggregate bandwidth is
+//! divided equally among active streams, each stream additionally capped
+//! by the client NIC. When a transfer starts or ends, remaining bytes of
+//! all active transfers are advanced at the old rate and completion times
+//! recomputed — the standard event-driven fluid approximation.
+
+use crate::util::time::Micros;
+
+/// One active transfer.
+#[derive(Debug, Clone)]
+struct Transfer {
+    id: u64,
+    remaining: f64, // bytes
+}
+
+/// Shared filesystem model.
+#[derive(Debug)]
+pub struct SharedFs {
+    /// Aggregate server-side bandwidth (bytes/s).
+    pub aggregate_bw: f64,
+    /// Per-client stream cap (bytes/s), e.g. a 1 Gb/s NIC.
+    pub per_stream_bw: f64,
+    /// Fixed per-operation latency (metadata + open/close).
+    pub op_latency: Micros,
+    active: Vec<Transfer>,
+    last_update: Micros,
+    next_id: u64,
+    /// Total bytes moved (stats).
+    pub bytes_done: f64,
+}
+
+impl SharedFs {
+    /// The paper's testbed: 8 I/O servers x 1 Gb/s, clients on 1 Gb/s.
+    pub fn gpfs_8() -> Self {
+        Self::new(8.0 * 125.0e6, 125.0e6, 30_000)
+    }
+
+    pub fn new(aggregate_bw: f64, per_stream_bw: f64, op_latency: Micros) -> Self {
+        Self {
+            aggregate_bw,
+            per_stream_bw,
+            op_latency,
+            active: Vec::new(),
+            last_update: 0,
+            next_id: 0,
+            bytes_done: 0.0,
+        }
+    }
+
+    fn rate_per_stream(&self) -> f64 {
+        if self.active.is_empty() {
+            return 0.0;
+        }
+        (self.aggregate_bw / self.active.len() as f64).min(self.per_stream_bw)
+    }
+
+    /// Advance all active transfers to `now` at the current rate.
+    fn advance(&mut self, now: Micros) {
+        let dt = (now.saturating_sub(self.last_update)) as f64 / 1e6;
+        if dt > 0.0 {
+            let rate = self.rate_per_stream();
+            for t in &mut self.active {
+                let moved = (rate * dt).min(t.remaining);
+                t.remaining -= moved;
+                self.bytes_done += moved;
+            }
+        }
+        self.last_update = now;
+    }
+
+    /// Start a transfer of `bytes` at `now`; returns its id.
+    pub fn start(&mut self, bytes: u64, now: Micros) -> u64 {
+        self.advance(now);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.active.push(Transfer { id, remaining: bytes.max(1) as f64 });
+        id
+    }
+
+    /// Earliest completion among active transfers, given current sharing.
+    /// Returns `(time, id)`.
+    pub fn next_completion(&self, now: Micros) -> Option<(Micros, u64)> {
+        let rate = self.rate_per_stream();
+        if rate <= 0.0 {
+            return None;
+        }
+        self.active
+            .iter()
+            .map(|t| {
+                let secs = t.remaining / rate;
+                (now + (secs * 1e6).ceil() as Micros + self.op_latency, t.id)
+            })
+            .min_by_key(|(t, _)| *t)
+    }
+
+    /// Whether a transfer has (fluid-)finished by `now`.
+    pub fn finish_if_done(&mut self, id: u64, now: Micros) -> bool {
+        self.advance(now);
+        if let Some(pos) = self.active.iter().position(|t| t.id == id) {
+            if self.active[pos].remaining <= 1e-6 {
+                self.active.remove(pos);
+                return true;
+            }
+            return false;
+        }
+        true // already gone
+    }
+
+    pub fn active_streams(&self) -> usize {
+        self.active.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::time::secs;
+
+    #[test]
+    fn single_stream_uses_nic_cap() {
+        let mut fs = SharedFs::new(1000.0e6, 125.0e6, 0);
+        let id = fs.start(125_000_000, 0);
+        // One stream: limited by per-stream 125 MB/s => 1 s.
+        let (t, cid) = fs.next_completion(0).unwrap();
+        assert_eq!(cid, id);
+        assert!((t as i64 - secs(1.0) as i64).abs() < 1000, "t={t}");
+        assert!(fs.finish_if_done(id, t));
+    }
+
+    #[test]
+    fn many_streams_share_aggregate() {
+        let mut fs = SharedFs::new(1000.0e6, 125.0e6, 0);
+        // 16 streams: per-stream = 1000/16 = 62.5 MB/s < NIC cap.
+        for _ in 0..16 {
+            fs.start(62_500_000, 0);
+        }
+        let (t, _) = fs.next_completion(0).unwrap();
+        assert!((t as i64 - secs(1.0) as i64).abs() < 2000, "t={t}");
+    }
+
+    #[test]
+    fn departure_speeds_up_remaining() {
+        let mut fs = SharedFs::new(200.0e6, 200.0e6, 0);
+        let a = fs.start(100_000_000, 0);
+        let b = fs.start(100_000_000, 0);
+        // Both share 100 MB/s each; at t=0.5s, a is half done (50 MB left).
+        // Remove b at 0.5 s (pretend b was cancelled by finishing early —
+        // use finish_if_done which advances): not done yet, so force by
+        // advancing: check sharing math through next_completion instead.
+        let (t, first) = fs.next_completion(0).unwrap();
+        assert!((t as i64 - secs(1.0) as i64).abs() < 2000);
+        assert!(fs.finish_if_done(first, t));
+        let second = if first == a { b } else { a };
+        // Remaining stream finishes (it was fluid-advanced along the way).
+        let done = fs.finish_if_done(second, t);
+        assert!(done, "equal streams finish together in the fluid model");
+    }
+
+    #[test]
+    fn throughput_matches_dispatch_limited_regime() {
+        // If tasks arrive slowly (low dispatch rate), achieved aggregate
+        // throughput is arrival_rate * bytes, far below FS capacity —
+        // the Fig. 8 effect.
+        let mut fs = SharedFs::gpfs_8();
+        let mut now = 0;
+        let bytes = 1_000_000u64; // 1 MB per task
+        let mut done_bytes = 0.0;
+        // 2 tasks/s for 10 s (GRAM+PBS-like rate).
+        for _ in 0..20 {
+            let id = fs.start(bytes, now);
+            let (t, _) = fs.next_completion(now).unwrap();
+            assert!(fs.finish_if_done(id, t));
+            done_bytes += bytes as f64;
+            now += secs(0.5);
+        }
+        let throughput = done_bytes / (now as f64 / 1e6);
+        assert!(throughput < 0.01 * fs.aggregate_bw, "tp={throughput}");
+    }
+
+    #[test]
+    fn op_latency_added_to_completion() {
+        let fs_no = SharedFs::new(1e9, 1e9, 0);
+        let mut fs = SharedFs::new(1e9, 1e9, 50_000);
+        let _ = fs_no;
+        let id = fs.start(1, 0);
+        let (t, cid) = fs.next_completion(0).unwrap();
+        assert_eq!(cid, id);
+        assert!(t >= 50_000);
+    }
+}

@@ -1,0 +1,165 @@
+//! SwiftScript abstract syntax tree.
+
+/// A type reference as written: name + array suffix count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TypeRef {
+    pub name: String,
+    /// Number of `[]` suffixes.
+    pub array_depth: usize,
+}
+
+impl TypeRef {
+    pub fn simple(name: &str) -> Self {
+        Self { name: name.to_string(), array_depth: 0 }
+    }
+}
+
+/// A struct field declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FieldDecl {
+    pub ty: TypeRef,
+    pub name: String,
+}
+
+/// `type Name { fields }` (empty fields = opaque file type).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TypeDecl {
+    pub name: String,
+    pub fields: Vec<FieldDecl>,
+}
+
+/// Procedure parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub ty: TypeRef,
+    pub name: String,
+}
+
+/// One argument in an `app { ... }` command line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AppArg {
+    /// `@filename(expr)` — physical path of a mapped dataset.
+    Filename(Expr),
+    /// `@filenames(expr)` — all physical paths of a dataset collection,
+    /// rendered as consecutive command-line words.
+    Filenames(Expr),
+    /// Any expression rendered to a command-line word.
+    Expr(Expr),
+}
+
+/// `app { executable arg arg ...; }`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppSpec {
+    pub executable: String,
+    pub args: Vec<AppArg>,
+}
+
+/// Procedure body: atomic (app) or compound (statements).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProcBody {
+    App(AppSpec),
+    Compound(Vec<Stmt>),
+}
+
+/// `(outputs) name (inputs) { body }`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProcDecl {
+    pub name: String,
+    pub outputs: Vec<Param>,
+    pub inputs: Vec<Param>,
+    pub body: ProcBody,
+}
+
+/// Mapper declaration: `<mapper_name; key=value, ...>`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MapperSpec {
+    pub mapper: String,
+    /// Values are expressions: literals or dataset references (the
+    /// montage `file=diffsTbl` case).
+    pub params: Vec<(String, Expr)>,
+}
+
+/// lvalue path element.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Access {
+    Member(String),
+    Index(Expr),
+}
+
+/// `base.member[index]...`
+#[derive(Debug, Clone, PartialEq)]
+pub struct LValue {
+    pub base: String,
+    pub path: Vec<Access>,
+}
+
+impl LValue {
+    pub fn var(name: &str) -> Self {
+        Self { base: name.to_string(), path: Vec::new() }
+    }
+}
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+    Path(LValue),
+    Call { name: String, args: Vec<Expr> },
+    Binary { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr> },
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `Type name<mapper;...> = init;` (mapper and init optional).
+    VarDecl {
+        ty: TypeRef,
+        name: String,
+        mapper: Option<MapperSpec>,
+        init: Option<Expr>,
+    },
+    /// `lhs = expr;`
+    Assign { lhs: LValue, rhs: Expr },
+    /// `(a, b) = call(...);` — multi-output procedure call.
+    TupleAssign { lhs: Vec<LValue>, rhs: Expr },
+    /// `foreach [Type] v[, i] in over { body }`
+    Foreach {
+        elem_ty: Option<TypeRef>,
+        var: String,
+        index: Option<String>,
+        over: Expr,
+        body: Vec<Stmt>,
+    },
+    /// `if (cond) { .. } [else { .. }]`
+    If {
+        cond: Expr,
+        then_body: Vec<Stmt>,
+        else_body: Vec<Stmt>,
+    },
+}
+
+/// A parsed program.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Program {
+    pub types: Vec<TypeDecl>,
+    pub procs: Vec<ProcDecl>,
+    pub stmts: Vec<Stmt>,
+}

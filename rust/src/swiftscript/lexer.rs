@@ -1,0 +1,323 @@
+//! SwiftScript lexer: hand-written, line/column tracked, `//` and `#`
+//! line comments.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenKind {
+    Ident(String),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    // Keywords.
+    Type,
+    App,
+    Foreach,
+    In,
+    If,
+    Else,
+    True,
+    False,
+    // Punctuation.
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Lt,
+    Gt,
+    Semi,
+    Comma,
+    Dot,
+    At,
+    Assign,
+    // Operators.
+    Eq,
+    Ne,
+    Le,
+    Ge,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Eof,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub line: usize,
+    pub col: usize,
+}
+
+pub struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+    col: usize,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(src: &'a str) -> Self {
+        Self { src: src.as_bytes(), pos: 0, line: 1, col: 1 }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+
+    fn peek2(&self) -> Option<u8> {
+        self.src.get(self.pos + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn skip_trivia(&mut self) {
+        loop {
+            match self.peek() {
+                Some(c) if c.is_ascii_whitespace() => {
+                    self.bump();
+                }
+                Some(b'/') if self.peek2() == Some(b'/') => {
+                    while let Some(c) = self.peek() {
+                        if c == b'\n' {
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                Some(b'#') => {
+                    while let Some(c) = self.peek() {
+                        if c == b'\n' {
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                _ => break,
+            }
+        }
+    }
+
+    fn tok(&self, kind: TokenKind, line: usize, col: usize) -> Token {
+        Token { kind, line, col }
+    }
+
+    pub fn next_token(&mut self) -> Result<Token> {
+        self.skip_trivia();
+        let (line, col) = (self.line, self.col);
+        let Some(c) = self.peek() else {
+            return Ok(self.tok(TokenKind::Eof, line, col));
+        };
+        // Identifiers / keywords.
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let start = self.pos;
+            while let Some(c) = self.peek() {
+                if c.is_ascii_alphanumeric() || c == b'_' {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            let word = std::str::from_utf8(&self.src[start..self.pos])?.to_string();
+            let kind = match word.as_str() {
+                "type" => TokenKind::Type,
+                "app" => TokenKind::App,
+                "foreach" => TokenKind::Foreach,
+                "in" => TokenKind::In,
+                "if" => TokenKind::If,
+                "else" => TokenKind::Else,
+                "true" => TokenKind::True,
+                "false" => TokenKind::False,
+                _ => TokenKind::Ident(word),
+            };
+            return Ok(self.tok(kind, line, col));
+        }
+        // Numbers.
+        if c.is_ascii_digit() {
+            let start = self.pos;
+            let mut is_float = false;
+            while let Some(c) = self.peek() {
+                if c.is_ascii_digit() {
+                    self.bump();
+                } else if c == b'.'
+                    && self.peek2().map(|d| d.is_ascii_digit()).unwrap_or(false)
+                    && !is_float
+                {
+                    is_float = true;
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            let text = std::str::from_utf8(&self.src[start..self.pos])?;
+            let kind = if is_float {
+                TokenKind::Float(text.parse()?)
+            } else {
+                TokenKind::Int(text.parse()?)
+            };
+            return Ok(self.tok(kind, line, col));
+        }
+        // Strings.
+        if c == b'"' {
+            self.bump();
+            let mut s = String::new();
+            loop {
+                match self.bump() {
+                    Some(b'"') => break,
+                    Some(b'\\') => match self.bump() {
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        other => bail!(
+                            "line {line}: bad escape \\{:?} in string",
+                            other.map(|c| c as char)
+                        ),
+                    },
+                    Some(c) => s.push(c as char),
+                    None => bail!("line {line}: unterminated string"),
+                }
+            }
+            return Ok(self.tok(TokenKind::Str(s), line, col));
+        }
+        // Operators / punctuation.
+        self.bump();
+        let two = |l: &mut Self, k: TokenKind| -> Result<Token> {
+            l.bump();
+            Ok(Token { kind: k, line, col })
+        };
+        match c {
+            b'(' => Ok(self.tok(TokenKind::LParen, line, col)),
+            b')' => Ok(self.tok(TokenKind::RParen, line, col)),
+            b'{' => Ok(self.tok(TokenKind::LBrace, line, col)),
+            b'}' => Ok(self.tok(TokenKind::RBrace, line, col)),
+            b'[' => Ok(self.tok(TokenKind::LBracket, line, col)),
+            b']' => Ok(self.tok(TokenKind::RBracket, line, col)),
+            b';' => Ok(self.tok(TokenKind::Semi, line, col)),
+            b',' => Ok(self.tok(TokenKind::Comma, line, col)),
+            b'.' => Ok(self.tok(TokenKind::Dot, line, col)),
+            b'@' => Ok(self.tok(TokenKind::At, line, col)),
+            b'+' => Ok(self.tok(TokenKind::Plus, line, col)),
+            b'-' => Ok(self.tok(TokenKind::Minus, line, col)),
+            b'*' => Ok(self.tok(TokenKind::Star, line, col)),
+            b'/' => Ok(self.tok(TokenKind::Slash, line, col)),
+            b'=' if self.peek() == Some(b'=') => two(self, TokenKind::Eq),
+            b'=' => Ok(self.tok(TokenKind::Assign, line, col)),
+            b'!' if self.peek() == Some(b'=') => two(self, TokenKind::Ne),
+            b'<' if self.peek() == Some(b'=') => two(self, TokenKind::Le),
+            b'<' => Ok(self.tok(TokenKind::Lt, line, col)),
+            b'>' if self.peek() == Some(b'=') => two(self, TokenKind::Ge),
+            b'>' => Ok(self.tok(TokenKind::Gt, line, col)),
+            other => bail!("line {line}:{col}: unexpected character {:?}", other as char),
+        }
+    }
+
+    /// Lex the whole input.
+    pub fn tokenize(mut self) -> Result<Vec<Token>> {
+        let mut out = Vec::new();
+        loop {
+            let t = self.next_token()?;
+            let eof = t.kind == TokenKind::Eof;
+            out.push(t);
+            if eof {
+                return Ok(out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokenKind> {
+        Lexer::new(src)
+            .tokenize()
+            .unwrap()
+            .into_iter()
+            .map(|t| t.kind)
+            .collect()
+    }
+
+    #[test]
+    fn lexes_type_decl() {
+        let k = kinds("type Volume { Image img; }");
+        assert_eq!(
+            k,
+            vec![
+                TokenKind::Type,
+                TokenKind::Ident("Volume".into()),
+                TokenKind::LBrace,
+                TokenKind::Ident("Image".into()),
+                TokenKind::Ident("img".into()),
+                TokenKind::Semi,
+                TokenKind::RBrace,
+                TokenKind::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_mapper_decl_with_strings() {
+        let k = kinds(r#"Run b<run_mapper;location="d/",prefix="bold1">;"#);
+        assert!(k.contains(&TokenKind::Lt));
+        assert!(k.contains(&TokenKind::Str("d/".into())));
+        assert!(k.contains(&TokenKind::Gt));
+    }
+
+    #[test]
+    fn lexes_numbers_and_operators() {
+        let k = kinds("x = 12 + 3.5 * 2; y == 4; z != 1; a <= 2; b >= 3");
+        assert!(k.contains(&TokenKind::Int(12)));
+        assert!(k.contains(&TokenKind::Float(3.5)));
+        assert!(k.contains(&TokenKind::Eq));
+        assert!(k.contains(&TokenKind::Ne));
+        assert!(k.contains(&TokenKind::Le));
+        assert!(k.contains(&TokenKind::Ge));
+    }
+
+    #[test]
+    fn skips_comments_both_styles() {
+        let k = kinds("// swift comment\n# hash comment\nfoo");
+        assert_eq!(k, vec![TokenKind::Ident("foo".into()), TokenKind::Eof]);
+    }
+
+    #[test]
+    fn at_filename_builtin() {
+        let k = kinds("@filename(iv.hdr)");
+        assert_eq!(k[0], TokenKind::At);
+        assert_eq!(k[1], TokenKind::Ident("filename".into()));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let k = kinds(r#""a\"b\n""#);
+        assert_eq!(k[0], TokenKind::Str("a\"b\n".into()));
+    }
+
+    #[test]
+    fn errors_on_unterminated_string() {
+        assert!(Lexer::new("\"abc").tokenize().is_err());
+    }
+
+    #[test]
+    fn tracks_line_numbers() {
+        let toks = Lexer::new("a\nb\n  c").tokenize().unwrap();
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[2].line, 3);
+        assert_eq!(toks[2].col, 3);
+    }
+}

@@ -1,0 +1,32 @@
+//! SwiftScript — the paper's workflow language (§3.1–3.7).
+//!
+//! A hand-written lexer + recursive-descent parser for the SwiftScript
+//! subset the paper demonstrates (Figures 1 and 3), an XDTM-based type
+//! checker, and the typed program representation the Karajan engine
+//! interprets:
+//!
+//! - C-style dataset type declarations (`type Volume { Image img; ... }`)
+//! - atomic procedures with `app { ... }` bodies and the `@filename`
+//!   mapping builtin
+//! - compound procedures (multiple outputs supported)
+//! - `foreach v, i in expr { ... }` parallel iteration
+//! - `if` conditional execution
+//! - dataset mapping declarations
+//!   (`Run bold1<run_mapper;location="...",prefix="bold1">;`)
+//! - member/index paths, string/int/float literals, comparison and
+//!   arithmetic operators.
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+pub mod typecheck;
+
+pub use ast::*;
+pub use lexer::{Lexer, Token, TokenKind};
+pub use parser::parse;
+pub use typecheck::{typecheck, TypedProgram};
+
+/// Parse + typecheck in one step.
+pub fn compile(source: &str) -> anyhow::Result<TypedProgram> {
+    typecheck(parse(source)?)
+}

@@ -1,0 +1,718 @@
+//! Recursive-descent parser for SwiftScript.
+//!
+//! Disambiguation notes:
+//! - At top level, `( ...` starts a procedure declaration (output list).
+//! - `type` starts a type declaration.
+//! - `Ident Ident ...` is a variable declaration; `Ident . / [ / =`
+//!   continues an lvalue for an assignment.
+//! - Inside a var declaration, `<` opens a mapper spec (never a
+//!   comparison — SwiftScript has no expressions at that position).
+
+use anyhow::{anyhow, bail, Result};
+
+use super::ast::*;
+use super::lexer::{Lexer, Token, TokenKind};
+
+pub struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+/// Parse a SwiftScript source into a [`Program`].
+pub fn parse(src: &str) -> Result<Program> {
+    Parser::new(src)?.program()
+}
+
+impl Parser {
+    pub fn new(src: &str) -> Result<Self> {
+        Ok(Self { toks: Lexer::new(src).tokenize()?, pos: 0 })
+    }
+
+    fn peek(&self) -> &TokenKind {
+        &self.toks[self.pos].kind
+    }
+
+    fn peek_at(&self, off: usize) -> &TokenKind {
+        self.toks
+            .get(self.pos + off)
+            .map(|t| &t.kind)
+            .unwrap_or(&TokenKind::Eof)
+    }
+
+    fn here(&self) -> String {
+        let t = &self.toks[self.pos.min(self.toks.len() - 1)];
+        format!("line {}:{} near {:?}", t.line, t.col, t.kind)
+    }
+
+    fn bump(&mut self) -> TokenKind {
+        let k = self.toks[self.pos].kind.clone();
+        if self.pos < self.toks.len() - 1 {
+            self.pos += 1;
+        }
+        k
+    }
+
+    fn eat(&mut self, want: TokenKind) -> Result<()> {
+        if *self.peek() == want {
+            self.bump();
+            Ok(())
+        } else {
+            bail!("expected {want:?} at {}", self.here())
+        }
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.bump() {
+            TokenKind::Ident(s) => Ok(s),
+            other => bail!("expected identifier, got {other:?} at {}", self.here()),
+        }
+    }
+
+    // ------------------------------------------------------------------
+
+    pub fn program(&mut self) -> Result<Program> {
+        let mut p = Program::default();
+        loop {
+            match self.peek() {
+                TokenKind::Eof => break,
+                TokenKind::Type => p.types.push(self.type_decl()?),
+                // `( ... ) = ...` is a tuple assignment; `( ... ) name (`
+                // is a procedure declaration.
+                TokenKind::LParen if self.paren_starts_proc() => {
+                    p.procs.push(self.proc_decl()?)
+                }
+                _ => p.stmts.push(self.statement()?),
+            }
+        }
+        Ok(p)
+    }
+
+    /// Lookahead: does the `(` at the cursor open a procedure declaration
+    /// (vs a tuple assignment)? Scan to the matching `)` and check the
+    /// following token.
+    fn paren_starts_proc(&self) -> bool {
+        let mut depth = 0usize;
+        let mut i = 0usize;
+        loop {
+            match self.peek_at(i) {
+                TokenKind::LParen => depth += 1,
+                TokenKind::RParen => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return *self.peek_at(i + 1) != TokenKind::Assign;
+                    }
+                }
+                TokenKind::Eof => return true, // let proc_decl report it
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+
+    fn type_ref(&mut self) -> Result<TypeRef> {
+        let name = self.ident()?;
+        let mut depth = 0;
+        while *self.peek() == TokenKind::LBracket
+            && *self.peek_at(1) == TokenKind::RBracket
+        {
+            self.bump();
+            self.bump();
+            depth += 1;
+        }
+        Ok(TypeRef { name, array_depth: depth })
+    }
+
+    fn type_decl(&mut self) -> Result<TypeDecl> {
+        self.eat(TokenKind::Type)?;
+        let name = self.ident()?;
+        self.eat(TokenKind::LBrace)?;
+        let mut fields = Vec::new();
+        while *self.peek() != TokenKind::RBrace {
+            let ty = self.type_ref()?;
+            let fname = self.ident()?;
+            // Postfix array suffix on the field name: `Volume v[];`
+            let mut extra = 0;
+            while *self.peek() == TokenKind::LBracket {
+                self.bump();
+                self.eat(TokenKind::RBracket)?;
+                extra += 1;
+            }
+            self.eat(TokenKind::Semi)?;
+            fields.push(FieldDecl {
+                ty: TypeRef { name: ty.name, array_depth: ty.array_depth + extra },
+                name: fname,
+            });
+        }
+        self.eat(TokenKind::RBrace)?;
+        // Optional trailing semicolon.
+        if *self.peek() == TokenKind::Semi {
+            self.bump();
+        }
+        Ok(TypeDecl { name, fields })
+    }
+
+    fn param_list(&mut self) -> Result<Vec<Param>> {
+        let mut out = Vec::new();
+        if *self.peek() == TokenKind::RParen {
+            return Ok(out);
+        }
+        loop {
+            let ty = self.type_ref()?;
+            let name = self.ident()?;
+            let mut extra = 0;
+            while *self.peek() == TokenKind::LBracket {
+                self.bump();
+                self.eat(TokenKind::RBracket)?;
+                extra += 1;
+            }
+            out.push(Param {
+                ty: TypeRef { name: ty.name, array_depth: ty.array_depth + extra },
+                name,
+            });
+            if *self.peek() == TokenKind::Comma {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    fn proc_decl(&mut self) -> Result<ProcDecl> {
+        self.eat(TokenKind::LParen)?;
+        let outputs = self.param_list()?;
+        self.eat(TokenKind::RParen)?;
+        let name = self.ident()?;
+        self.eat(TokenKind::LParen)?;
+        let inputs = self.param_list()?;
+        self.eat(TokenKind::RParen)?;
+        self.eat(TokenKind::LBrace)?;
+        let body = if *self.peek() == TokenKind::App {
+            self.bump();
+            self.eat(TokenKind::LBrace)?;
+            let spec = self.app_spec()?;
+            self.eat(TokenKind::RBrace)?;
+            ProcBody::App(spec)
+        } else {
+            let mut stmts = Vec::new();
+            while *self.peek() != TokenKind::RBrace {
+                stmts.push(self.statement()?);
+            }
+            ProcBody::Compound(stmts)
+        };
+        self.eat(TokenKind::RBrace)?;
+        Ok(ProcDecl { name, outputs, inputs, body })
+    }
+
+    fn app_spec(&mut self) -> Result<AppSpec> {
+        let executable = self.ident()?;
+        let mut args = Vec::new();
+        while *self.peek() != TokenKind::Semi && *self.peek() != TokenKind::RBrace {
+            if *self.peek() == TokenKind::At {
+                self.bump();
+                let builtin = self.ident()?;
+                self.eat(TokenKind::LParen)?;
+                let e = self.expr()?;
+                self.eat(TokenKind::RParen)?;
+                match builtin.as_str() {
+                    "filename" => args.push(AppArg::Filename(e)),
+                    "filenames" => args.push(AppArg::Filenames(e)),
+                    other => bail!("unknown @-builtin @{other} at {}", self.here()),
+                }
+            } else {
+                args.push(AppArg::Expr(self.primary()?));
+            }
+        }
+        if *self.peek() == TokenKind::Semi {
+            self.bump();
+        }
+        Ok(AppSpec { executable, args })
+    }
+
+    // ------------------------------------------------------------------
+    // Statements
+    // ------------------------------------------------------------------
+
+    fn statement(&mut self) -> Result<Stmt> {
+        match self.peek() {
+            TokenKind::Foreach => self.foreach(),
+            TokenKind::If => self.if_stmt(),
+            TokenKind::LParen => self.tuple_assign(),
+            TokenKind::Ident(_) => {
+                // Var decl: `Ident Ident` (a type then a name);
+                // otherwise an assignment to an lvalue path.
+                let second = self.peek_at(1).clone();
+                let is_decl = matches!(second, TokenKind::Ident(_))
+                    || (second == TokenKind::LBracket
+                        && *self.peek_at(2) == TokenKind::RBracket);
+                if is_decl {
+                    self.var_decl()
+                } else {
+                    self.assign()
+                }
+            }
+            _ => bail!("unexpected token at {}", self.here()),
+        }
+    }
+
+    fn var_decl(&mut self) -> Result<Stmt> {
+        let ty = self.type_ref()?;
+        let name = self.ident()?;
+        // Postfix array suffix: `DiffStruct diffs[]<csv_mapper;...>`
+        let mut extra = 0;
+        while *self.peek() == TokenKind::LBracket
+            && *self.peek_at(1) == TokenKind::RBracket
+        {
+            self.bump();
+            self.bump();
+            extra += 1;
+        }
+        let ty = TypeRef { name: ty.name, array_depth: ty.array_depth + extra };
+        let mapper = if *self.peek() == TokenKind::Lt {
+            Some(self.mapper_spec()?)
+        } else {
+            None
+        };
+        let init = if *self.peek() == TokenKind::Assign {
+            self.bump();
+            Some(self.expr()?)
+        } else {
+            None
+        };
+        self.eat(TokenKind::Semi)?;
+        Ok(Stmt::VarDecl { ty, name, mapper, init })
+    }
+
+    fn mapper_spec(&mut self) -> Result<MapperSpec> {
+        self.eat(TokenKind::Lt)?;
+        let mapper = self.ident()?;
+        let mut params = Vec::new();
+        if *self.peek() == TokenKind::Semi {
+            self.bump();
+            loop {
+                let key = self.ident()?;
+                self.eat(TokenKind::Assign)?;
+                let val = match self.peek().clone() {
+                    TokenKind::Str(s) => {
+                        self.bump();
+                        Expr::Str(s)
+                    }
+                    TokenKind::Int(i) => {
+                        self.bump();
+                        Expr::Int(i)
+                    }
+                    TokenKind::Float(f) => {
+                        self.bump();
+                        Expr::Float(f)
+                    }
+                    TokenKind::True => {
+                        self.bump();
+                        Expr::Bool(true)
+                    }
+                    TokenKind::False => {
+                        self.bump();
+                        Expr::Bool(false)
+                    }
+                    TokenKind::Ident(_) => Expr::Path(self.lvalue()?),
+                    other => bail!(
+                        "bad mapper parameter value {other:?} at {}",
+                        self.here()
+                    ),
+                };
+                params.push((key, val));
+                if *self.peek() == TokenKind::Comma {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.eat(TokenKind::Gt)?;
+        Ok(MapperSpec { mapper, params })
+    }
+
+    fn assign(&mut self) -> Result<Stmt> {
+        let lhs = self.lvalue()?;
+        self.eat(TokenKind::Assign)?;
+        let rhs = self.expr()?;
+        self.eat(TokenKind::Semi)?;
+        Ok(Stmt::Assign { lhs, rhs })
+    }
+
+    fn tuple_assign(&mut self) -> Result<Stmt> {
+        self.eat(TokenKind::LParen)?;
+        let mut lhs = Vec::new();
+        loop {
+            lhs.push(self.lvalue()?);
+            if *self.peek() == TokenKind::Comma {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.eat(TokenKind::RParen)?;
+        self.eat(TokenKind::Assign)?;
+        let rhs = self.expr()?;
+        self.eat(TokenKind::Semi)?;
+        Ok(Stmt::TupleAssign { lhs, rhs })
+    }
+
+    fn foreach(&mut self) -> Result<Stmt> {
+        self.eat(TokenKind::Foreach)?;
+        // Optional element type: `foreach Volume iv, i in run.v`.
+        let (elem_ty, var) = {
+            let first = self.ident()?;
+            if let TokenKind::Ident(_) = self.peek() {
+                let v = self.ident()?;
+                (Some(TypeRef::simple(&first)), v)
+            } else {
+                (None, first)
+            }
+        };
+        let index = if *self.peek() == TokenKind::Comma {
+            self.bump();
+            Some(self.ident()?)
+        } else {
+            None
+        };
+        self.eat(TokenKind::In)?;
+        let over = self.expr()?;
+        self.eat(TokenKind::LBrace)?;
+        let mut body = Vec::new();
+        while *self.peek() != TokenKind::RBrace {
+            body.push(self.statement()?);
+        }
+        self.eat(TokenKind::RBrace)?;
+        Ok(Stmt::Foreach { elem_ty, var, index, over, body })
+    }
+
+    fn if_stmt(&mut self) -> Result<Stmt> {
+        self.eat(TokenKind::If)?;
+        self.eat(TokenKind::LParen)?;
+        let cond = self.expr()?;
+        self.eat(TokenKind::RParen)?;
+        self.eat(TokenKind::LBrace)?;
+        let mut then_body = Vec::new();
+        while *self.peek() != TokenKind::RBrace {
+            then_body.push(self.statement()?);
+        }
+        self.eat(TokenKind::RBrace)?;
+        let mut else_body = Vec::new();
+        if *self.peek() == TokenKind::Else {
+            self.bump();
+            self.eat(TokenKind::LBrace)?;
+            while *self.peek() != TokenKind::RBrace {
+                else_body.push(self.statement()?);
+            }
+            self.eat(TokenKind::RBrace)?;
+        }
+        Ok(Stmt::If { cond, then_body, else_body })
+    }
+
+    // ------------------------------------------------------------------
+    // Expressions (precedence: comparison < additive < multiplicative)
+    // ------------------------------------------------------------------
+
+    fn expr(&mut self) -> Result<Expr> {
+        let lhs = self.additive()?;
+        let op = match self.peek() {
+            TokenKind::Eq => BinOp::Eq,
+            TokenKind::Ne => BinOp::Ne,
+            TokenKind::Lt => BinOp::Lt,
+            TokenKind::Le => BinOp::Le,
+            TokenKind::Gt => BinOp::Gt,
+            TokenKind::Ge => BinOp::Ge,
+            _ => return Ok(lhs),
+        };
+        self.bump();
+        let rhs = self.additive()?;
+        Ok(Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) })
+    }
+
+    fn additive(&mut self) -> Result<Expr> {
+        let mut lhs = self.multiplicative()?;
+        loop {
+            let op = match self.peek() {
+                TokenKind::Plus => BinOp::Add,
+                TokenKind::Minus => BinOp::Sub,
+                _ => return Ok(lhs),
+            };
+            self.bump();
+            let rhs = self.multiplicative()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+    }
+
+    fn multiplicative(&mut self) -> Result<Expr> {
+        let mut lhs = self.primary()?;
+        loop {
+            let op = match self.peek() {
+                TokenKind::Star => BinOp::Mul,
+                TokenKind::Slash => BinOp::Div,
+                _ => return Ok(lhs),
+            };
+            self.bump();
+            let rhs = self.primary()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+    }
+
+    fn primary(&mut self) -> Result<Expr> {
+        match self.peek().clone() {
+            TokenKind::Int(i) => {
+                self.bump();
+                Ok(Expr::Int(i))
+            }
+            TokenKind::Float(f) => {
+                self.bump();
+                Ok(Expr::Float(f))
+            }
+            TokenKind::Str(s) => {
+                self.bump();
+                Ok(Expr::Str(s))
+            }
+            TokenKind::True => {
+                self.bump();
+                Ok(Expr::Bool(true))
+            }
+            TokenKind::False => {
+                self.bump();
+                Ok(Expr::Bool(false))
+            }
+            TokenKind::Minus => {
+                self.bump();
+                match self.bump() {
+                    TokenKind::Int(i) => Ok(Expr::Int(-i)),
+                    TokenKind::Float(f) => Ok(Expr::Float(-f)),
+                    other => bail!("bad negation of {other:?} at {}", self.here()),
+                }
+            }
+            TokenKind::LParen => {
+                self.bump();
+                let e = self.expr()?;
+                self.eat(TokenKind::RParen)?;
+                Ok(e)
+            }
+            TokenKind::Ident(_) => {
+                // Call or path.
+                if *self.peek_at(1) == TokenKind::LParen {
+                    let name = self.ident()?;
+                    self.eat(TokenKind::LParen)?;
+                    let mut args = Vec::new();
+                    if *self.peek() != TokenKind::RParen {
+                        loop {
+                            args.push(self.expr()?);
+                            if *self.peek() == TokenKind::Comma {
+                                self.bump();
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    self.eat(TokenKind::RParen)?;
+                    Ok(Expr::Call { name, args })
+                } else {
+                    Ok(Expr::Path(self.lvalue()?))
+                }
+            }
+            other => Err(anyhow!("unexpected {other:?} at {}", self.here())),
+        }
+    }
+
+    fn lvalue(&mut self) -> Result<LValue> {
+        let base = self.ident()?;
+        let mut path = Vec::new();
+        loop {
+            match self.peek() {
+                TokenKind::Dot => {
+                    self.bump();
+                    path.push(Access::Member(self.ident()?));
+                }
+                TokenKind::LBracket => {
+                    self.bump();
+                    let idx = self.expr()?;
+                    self.eat(TokenKind::RBracket)?;
+                    path.push(Access::Index(idx));
+                }
+                _ => return Ok(LValue { base, path }),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Figure 1 fMRI workflow, verbatim modulo whitespace.
+    pub const FMRI_FIG1: &str = r#"
+type Image {};
+type Header {};
+type Volume { Image img; Header hdr; };
+type Run { Volume v[]; };
+type Air {};
+type AirVector { Air a[]; };
+
+(Volume ov) reorient (Volume iv, string direction, string overwrite)
+{
+  app {
+    reorient @filename(iv.hdr) @filename(ov.hdr) direction overwrite;
+  }
+}
+(Run or) reorientRun (Run ir, string direction, string overwrite)
+{
+  foreach Volume iv, i in ir.v {
+    or.v[i] = reorient(iv, direction, overwrite);
+  }
+}
+(Run resliced) fmri_wf (Run r) {
+  Run yroRun = reorientRun( r, "y", "n" );
+  Run roRun = reorientRun( yroRun, "x", "n" );
+  Volume std = roRun.v[1];
+  AirVector roAirVec = alignlinearRun(std, roRun, 12, 1000, 1000, "81 3 3");
+  resliced = resliceRun( roRun, roAirVec, "-o", "-k");
+}
+Run bold1<run_mapper;location="fmridc/functional_data/",prefix="bold1">;
+Run sbold1<run_mapper;location="fmridc/functional_data/",prefix="sbold1">;
+sbold1 = fmri_wf(bold1);
+"#;
+
+    #[test]
+    fn parses_paper_figure1() {
+        let p = parse(FMRI_FIG1).unwrap();
+        assert_eq!(p.types.len(), 6);
+        assert_eq!(p.procs.len(), 3);
+        assert_eq!(p.stmts.len(), 3);
+        // reorient is atomic with 4 command args.
+        let reorient = &p.procs[0];
+        assert_eq!(reorient.name, "reorient");
+        match &reorient.body {
+            ProcBody::App(spec) => {
+                assert_eq!(spec.executable, "reorient");
+                assert_eq!(spec.args.len(), 4);
+                assert!(matches!(spec.args[0], AppArg::Filename(_)));
+                assert!(matches!(spec.args[2], AppArg::Expr(_)));
+            }
+            _ => panic!("reorient must be atomic"),
+        }
+        // reorientRun iterates with an index variable.
+        match &p.procs[1].body {
+            ProcBody::Compound(stmts) => match &stmts[0] {
+                Stmt::Foreach { var, index, elem_ty, .. } => {
+                    assert_eq!(var, "iv");
+                    assert_eq!(index.as_deref(), Some("i"));
+                    assert_eq!(elem_ty.as_ref().unwrap().name, "Volume");
+                }
+                other => panic!("expected foreach, got {other:?}"),
+            },
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_run_type_with_array_field() {
+        let p = parse("type Run { Volume v[]; };").unwrap();
+        assert_eq!(p.types[0].fields[0].ty.array_depth, 1);
+        assert_eq!(p.types[0].fields[0].name, "v");
+    }
+
+    #[test]
+    fn parses_mapper_with_variable_reference() {
+        // Montage Figure 3: file=diffsTbl references a dataset variable.
+        let src = r#"
+type Image {};
+type DiffStruct { int cntr1; int cntr2; Image plus; Image minus; Image diff; };
+Table diffsTbl = mOverlaps(projImgTbl);
+DiffStruct diffs[]<csv_mapper; file=diffsTbl, skip=1, header=true, hdelim="|">;
+"#;
+        let p = parse(src).unwrap();
+        match &p.stmts[1] {
+            Stmt::VarDecl { ty, mapper: Some(m), .. } => {
+                assert_eq!(ty.array_depth, 1);
+                assert_eq!(m.mapper, "csv_mapper");
+                assert_eq!(m.params.len(), 4);
+                assert!(matches!(m.params[0].1, Expr::Path(_)));
+                assert_eq!(m.params[1].1, Expr::Int(1));
+                assert_eq!(m.params[2].1, Expr::Bool(true));
+                assert_eq!(m.params[3].1, Expr::Str("|".into()));
+            }
+            other => panic!("expected mapped decl, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_foreach_without_type_or_index() {
+        let p = parse("foreach d in diffs { Image i1 = d.plus; }").unwrap();
+        match &p.stmts[0] {
+            Stmt::Foreach { var, index, elem_ty, .. } => {
+                assert_eq!(var, "d");
+                assert!(index.is_none());
+                assert!(elem_ty.is_none());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_if_else_and_comparisons() {
+        let src = r#"
+if (n > 100) {
+  mosaic = coaddRegions(imgs, 8);
+} else {
+  mosaic = coadd(imgs);
+}
+"#;
+        let p = parse(src).unwrap();
+        match &p.stmts[0] {
+            Stmt::If { cond, then_body, else_body } => {
+                assert!(matches!(
+                    cond,
+                    Expr::Binary { op: BinOp::Gt, .. }
+                ));
+                assert_eq!(then_body.len(), 1);
+                assert_eq!(else_body.len(), 1);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_tuple_assign() {
+        let p = parse("(resliced, params) = fmri_chain(v, r);").unwrap();
+        match &p.stmts[0] {
+            Stmt::TupleAssign { lhs, .. } => {
+                assert_eq!(lhs.len(), 2);
+                assert_eq!(lhs[0].base, "resliced");
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_arithmetic_precedence() {
+        let p = parse("int x = 1 + 2 * 3;").unwrap();
+        match &p.stmts[0] {
+            Stmt::VarDecl { init: Some(Expr::Binary { op: BinOp::Add, rhs, .. }), .. } => {
+                assert!(matches!(**rhs, Expr::Binary { op: BinOp::Mul, .. }));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("type { }").is_err());
+        assert!(parse("foreach in x { }").is_err());
+        assert!(parse("x = ;").is_err());
+        assert!(parse("(a,b = f(x);").is_err());
+    }
+
+    #[test]
+    fn negative_literals() {
+        let p = parse("int x = -5; float y = -2.5;").unwrap();
+        assert!(matches!(
+            p.stmts[0],
+            Stmt::VarDecl { init: Some(Expr::Int(-5)), .. }
+        ));
+    }
+}

@@ -1,0 +1,636 @@
+//! SwiftScript type checker (paper §3.12: "type checking capabilities
+//! allow it to identify potential problems in a program prior to
+//! execution").
+//!
+//! Builds the XDTM [`TypeEnv`] from the program's type declarations,
+//! registers procedure signatures, and checks every statement and
+//! expression. The result, [`TypedProgram`], is the "abstract computation
+//! plan" the Karajan engine interprets.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::ast::*;
+use crate::xdtm::types::{StructDef, Type, TypeEnv};
+
+/// A checked program, ready for the engine.
+#[derive(Debug, Clone)]
+pub struct TypedProgram {
+    pub env: TypeEnv,
+    pub procs: BTreeMap<String, ProcDecl>,
+    pub globals: Vec<Stmt>,
+    /// Types of global variables (declaration order preserved in globals).
+    pub global_types: BTreeMap<String, Type>,
+}
+
+/// Internal expression type: single value or a procedure's output tuple.
+#[derive(Debug, Clone, PartialEq)]
+enum ETy {
+    One(Type),
+    Tuple(Vec<Type>),
+}
+
+impl ETy {
+    fn one(self) -> Result<Type> {
+        match self {
+            ETy::One(t) => Ok(t),
+            ETy::Tuple(ts) => bail!(
+                "expected a single value, got a {}-output procedure result",
+                ts.len()
+            ),
+        }
+    }
+}
+
+struct Scope {
+    frames: Vec<BTreeMap<String, Type>>,
+}
+
+impl Scope {
+    fn push(&mut self) {
+        self.frames.push(BTreeMap::new());
+    }
+
+    fn pop(&mut self) {
+        self.frames.pop();
+    }
+
+    fn declare(&mut self, name: &str, ty: Type) -> Result<()> {
+        let top = self.frames.last_mut().unwrap();
+        if top.contains_key(name) {
+            bail!("variable {name} already declared in this scope");
+        }
+        top.insert(name.to_string(), ty);
+        Ok(())
+    }
+
+    fn lookup(&self, name: &str) -> Result<Type> {
+        for frame in self.frames.iter().rev() {
+            if let Some(t) = frame.get(name) {
+                return Ok(t.clone());
+            }
+        }
+        bail!("undeclared variable {name}")
+    }
+}
+
+struct Checker {
+    env: TypeEnv,
+    procs: BTreeMap<String, ProcDecl>,
+}
+
+/// Run the type checker over a parsed program.
+pub fn typecheck(p: Program) -> Result<TypedProgram> {
+    // Pass 1: type declarations, in order (forward references rejected,
+    // matching the paper's examples which declare bottom-up).
+    let mut env = TypeEnv::new();
+    for td in &p.types {
+        if td.fields.is_empty() {
+            env.declare_file(&td.name)?;
+        } else {
+            let mut fields = Vec::new();
+            for f in &td.fields {
+                let base = env.resolve(&f.ty.name)
+                    .map_err(|e| anyhow!("in type {}: {e}", td.name))?;
+                fields.push((f.name.clone(), apply_depth(base, f.ty.array_depth)));
+            }
+            env.declare_struct(&td.name, StructDef { fields })?;
+        }
+    }
+    // Pass 2: procedure signatures.
+    let mut procs = BTreeMap::new();
+    for proc in &p.procs {
+        if procs.contains_key(&proc.name) {
+            bail!("procedure {} declared twice", proc.name);
+        }
+        if proc.outputs.is_empty() {
+            bail!("procedure {} has no outputs (procedures are functional)", proc.name);
+        }
+        procs.insert(proc.name.clone(), proc.clone());
+    }
+    let checker = Checker { env, procs };
+    // Pass 3: procedure bodies.
+    for proc in checker.procs.values() {
+        checker.check_proc(proc)?;
+    }
+    // Pass 4: global statements.
+    let mut scope = Scope { frames: vec![BTreeMap::new()] };
+    for stmt in &p.stmts {
+        checker.check_stmt(stmt, &mut scope)?;
+    }
+    let global_types = scope.frames.pop().unwrap();
+    Ok(TypedProgram {
+        env: checker.env,
+        procs: checker.procs,
+        globals: p.stmts,
+        global_types,
+    })
+}
+
+fn apply_depth(base: Type, depth: usize) -> Type {
+    let mut t = base;
+    for _ in 0..depth {
+        t = Type::array_of(t);
+    }
+    t
+}
+
+fn assignable(dst: &Type, src: &Type) -> bool {
+    dst == src || (matches!(dst, Type::Float) && matches!(src, Type::Int))
+}
+
+impl Checker {
+    fn resolve_ref(&self, r: &TypeRef) -> Result<Type> {
+        Ok(apply_depth(self.env.resolve(&r.name)?, r.array_depth))
+    }
+
+    fn check_proc(&self, proc: &ProcDecl) -> Result<()> {
+        let mut scope = Scope { frames: vec![BTreeMap::new()] };
+        for p in proc.inputs.iter().chain(&proc.outputs) {
+            scope
+                .declare(&p.name, self.resolve_ref(&p.ty)?)
+                .map_err(|e| anyhow!("in {}: {e}", proc.name))?;
+        }
+        match &proc.body {
+            ProcBody::App(spec) => {
+                for arg in &spec.args {
+                    match arg {
+                        AppArg::Filename(e) => {
+                            let t = self.check_expr(e, &scope)?.one()?;
+                            if !t.is_file_backed() {
+                                bail!(
+                                    "in {}: @filename on non-file-backed {}",
+                                    proc.name,
+                                    t.name()
+                                );
+                            }
+                        }
+                        AppArg::Filenames(e) => {
+                            let t = self.check_expr(e, &scope)?.one()?;
+                            let ok = matches!(&t, Type::Array(inner)
+                                if inner.is_file_backed() || matches!(**inner, Type::Struct(_)));
+                            if !ok {
+                                bail!(
+                                    "in {}: @filenames needs an array of file-backed \
+                                     datasets, got {}",
+                                    proc.name,
+                                    t.name()
+                                );
+                            }
+                        }
+                        AppArg::Expr(e) => {
+                            let t = self.check_expr(e, &scope)?.one()?;
+                            match t {
+                                Type::Int
+                                | Type::Float
+                                | Type::String
+                                | Type::Boolean
+                                | Type::File(_)
+                                | Type::Table => {}
+                                other => bail!(
+                                    "in {}: app arg of unsupported type {}",
+                                    proc.name,
+                                    other.name()
+                                ),
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            }
+            ProcBody::Compound(stmts) => {
+                scope.push();
+                for s in stmts {
+                    self.check_stmt(s, &mut scope)?;
+                }
+                scope.pop();
+                Ok(())
+            }
+        }
+    }
+
+    fn check_stmt(&self, stmt: &Stmt, scope: &mut Scope) -> Result<()> {
+        match stmt {
+            Stmt::VarDecl { ty, name, mapper, init } => {
+                let t = self.resolve_ref(ty)?;
+                if let Some(m) = mapper {
+                    for (_, e) in &m.params {
+                        // Parameter values: scalars or dataset references.
+                        self.check_expr(e, scope)?.one()?;
+                    }
+                }
+                if let Some(e) = init {
+                    let et = self.check_expr(e, scope)?;
+                    match et {
+                        ETy::One(et) => {
+                            if !assignable(&t, &et) {
+                                bail!(
+                                    "cannot initialize {name}: {} = {}",
+                                    t.name(),
+                                    et.name()
+                                );
+                            }
+                        }
+                        ETy::Tuple(_) => bail!(
+                            "cannot initialize {name} from a multi-output call; \
+                             use tuple assignment"
+                        ),
+                    }
+                }
+                scope.declare(name, t)
+            }
+            Stmt::Assign { lhs, rhs } => {
+                let lt = self.lvalue_type(lhs, scope)?;
+                let rt = self.check_expr(rhs, scope)?.one()?;
+                if !assignable(&lt, &rt) {
+                    bail!(
+                        "type mismatch assigning {}: {} = {}",
+                        lhs.base,
+                        lt.name(),
+                        rt.name()
+                    );
+                }
+                Ok(())
+            }
+            Stmt::TupleAssign { lhs, rhs } => {
+                let rt = self.check_expr(rhs, scope)?;
+                let ETy::Tuple(outs) = rt else {
+                    bail!("tuple assignment requires a multi-output call");
+                };
+                if outs.len() != lhs.len() {
+                    bail!(
+                        "tuple assignment arity mismatch: {} targets, {} outputs",
+                        lhs.len(),
+                        outs.len()
+                    );
+                }
+                for (lv, ot) in lhs.iter().zip(outs) {
+                    let lt = self.lvalue_type(lv, scope)?;
+                    if !assignable(&lt, &ot) {
+                        bail!(
+                            "tuple assignment mismatch at {}: {} = {}",
+                            lv.base,
+                            lt.name(),
+                            ot.name()
+                        );
+                    }
+                }
+                Ok(())
+            }
+            Stmt::Foreach { elem_ty, var, index, over, body } => {
+                let ot = self.check_expr(over, scope)?.one()?;
+                let elem = ot
+                    .element()
+                    .ok_or_else(|| {
+                        anyhow!("foreach over non-array type {}", ot.name())
+                    })?
+                    .clone();
+                if let Some(declared) = elem_ty {
+                    let dt = self.resolve_ref(declared)?;
+                    if dt != elem {
+                        bail!(
+                            "foreach element type {} does not match array of {}",
+                            dt.name(),
+                            elem.name()
+                        );
+                    }
+                }
+                scope.push();
+                scope.declare(var, elem)?;
+                if let Some(ix) = index {
+                    scope.declare(ix, Type::Int)?;
+                }
+                for s in body {
+                    self.check_stmt(s, scope)?;
+                }
+                scope.pop();
+                Ok(())
+            }
+            Stmt::If { cond, then_body, else_body } => {
+                let ct = self.check_expr(cond, scope)?.one()?;
+                if ct != Type::Boolean {
+                    bail!("if condition must be boolean, got {}", ct.name());
+                }
+                scope.push();
+                for s in then_body {
+                    self.check_stmt(s, scope)?;
+                }
+                scope.pop();
+                scope.push();
+                for s in else_body {
+                    self.check_stmt(s, scope)?;
+                }
+                scope.pop();
+                Ok(())
+            }
+        }
+    }
+
+    fn lvalue_type(&self, lv: &LValue, scope: &Scope) -> Result<Type> {
+        let mut t = scope.lookup(&lv.base)?;
+        for acc in &lv.path {
+            t = match acc {
+                Access::Member(m) => self.env.member_type(&t, m)?,
+                Access::Index(e) => {
+                    let it = self.check_expr(e, scope)?.one()?;
+                    if it != Type::Int {
+                        bail!("array index must be int, got {}", it.name());
+                    }
+                    t.element()
+                        .ok_or_else(|| anyhow!("indexing non-array {}", t.name()))?
+                        .clone()
+                }
+            };
+        }
+        Ok(t)
+    }
+
+    fn check_expr(&self, e: &Expr, scope: &Scope) -> Result<ETy> {
+        Ok(match e {
+            Expr::Int(_) => ETy::One(Type::Int),
+            Expr::Float(_) => ETy::One(Type::Float),
+            Expr::Str(_) => ETy::One(Type::String),
+            Expr::Bool(_) => ETy::One(Type::Boolean),
+            Expr::Path(lv) => ETy::One(self.lvalue_type(lv, scope)?),
+            Expr::Call { name, args } => {
+                let proc = self
+                    .procs
+                    .get(name)
+                    .ok_or_else(|| anyhow!("unknown procedure {name}"))?;
+                if args.len() != proc.inputs.len() {
+                    bail!(
+                        "{name} expects {} arguments, got {}",
+                        proc.inputs.len(),
+                        args.len()
+                    );
+                }
+                for (a, p) in args.iter().zip(&proc.inputs) {
+                    let at = self.check_expr(a, scope)?.one()?;
+                    let pt = self.resolve_ref(&p.ty)?;
+                    if !assignable(&pt, &at) {
+                        bail!(
+                            "{name}: argument {} is {}, expected {}",
+                            p.name,
+                            at.name(),
+                            pt.name()
+                        );
+                    }
+                }
+                let outs: Vec<Type> = proc
+                    .outputs
+                    .iter()
+                    .map(|o| self.resolve_ref(&o.ty))
+                    .collect::<Result<_>>()?;
+                if outs.len() == 1 {
+                    ETy::One(outs.into_iter().next().unwrap())
+                } else {
+                    ETy::Tuple(outs)
+                }
+            }
+            Expr::Binary { op, lhs, rhs } => {
+                let lt = self.check_expr(lhs, scope)?.one()?;
+                let rt = self.check_expr(rhs, scope)?.one()?;
+                let numeric = |t: &Type| matches!(t, Type::Int | Type::Float);
+                match op {
+                    BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div => {
+                        if !numeric(&lt) || !numeric(&rt) {
+                            bail!(
+                                "arithmetic on non-numeric {} / {}",
+                                lt.name(),
+                                rt.name()
+                            );
+                        }
+                        if lt == Type::Float || rt == Type::Float {
+                            ETy::One(Type::Float)
+                        } else {
+                            ETy::One(Type::Int)
+                        }
+                    }
+                    _ => {
+                        let comparable = (numeric(&lt) && numeric(&rt))
+                            || (lt == Type::String && rt == Type::String);
+                        if !comparable {
+                            bail!(
+                                "cannot compare {} with {}",
+                                lt.name(),
+                                rt.name()
+                            );
+                        }
+                        ETy::One(Type::Boolean)
+                    }
+                }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::swiftscript::parser::parse;
+
+    /// Self-contained fMRI workflow (Figure 1 with all procedures
+    /// declared) used across the test suite.
+    pub const FMRI_FULL: &str = r#"
+type Image {};
+type Header {};
+type Volume { Image img; Header hdr; };
+type Run { Volume v[]; };
+type Air {};
+type AirVector { Air a[]; };
+
+(Volume ov) reorient (Volume iv, string direction, string overwrite) {
+  app { reorient @filename(iv.img) @filename(ov.img) direction overwrite; }
+}
+(Air out) alignlinear (Volume std, Volume iv, int m, int x, int y, string opts) {
+  app { alignlinear @filename(std.img) @filename(iv.img) @filename(out) m x y opts; }
+}
+(Volume ov) reslice (Volume iv, Air align, string o, string k) {
+  app { reslice @filename(align) @filename(iv.img) @filename(ov.img) o k; }
+}
+(Run or) reorientRun (Run ir, string direction, string overwrite) {
+  foreach Volume iv, i in ir.v {
+    or.v[i] = reorient(iv, direction, overwrite);
+  }
+}
+(AirVector ov) alignlinearRun (Volume std, Run ir, int m, int x, int y, string opts) {
+  foreach Volume iv, i in ir.v {
+    ov.a[i] = alignlinear(std, iv, m, x, y, opts);
+  }
+}
+(Run or) resliceRun (Run ir, AirVector av, string o, string k) {
+  foreach Volume iv, i in ir.v {
+    or.v[i] = reslice(iv, av.a[i], o, k);
+  }
+}
+(Run resliced) fmri_wf (Run r) {
+  Run yroRun = reorientRun( r, "y", "n" );
+  Run roRun = reorientRun( yroRun, "x", "n" );
+  Volume std = roRun.v[1];
+  AirVector roAirVec = alignlinearRun(std, roRun, 12, 1000, 1000, "81 3 3");
+  resliced = resliceRun( roRun, roAirVec, "-o", "-k");
+}
+Run bold1<run_mapper;location="fmridc/functional_data/",prefix="bold1">;
+Run sbold1<run_mapper;location="fmridc/functional_data/",prefix="sbold1">;
+sbold1 = fmri_wf(bold1);
+"#;
+
+    #[test]
+    fn accepts_full_fmri_workflow() {
+        let tp = typecheck(parse(FMRI_FULL).unwrap()).unwrap();
+        assert_eq!(tp.procs.len(), 7);
+        assert_eq!(
+            tp.global_types.get("bold1"),
+            Some(&Type::Struct("Run".into()))
+        );
+    }
+
+    fn check(src: &str) -> Result<TypedProgram> {
+        typecheck(parse(src).unwrap())
+    }
+
+    #[test]
+    fn rejects_unknown_type() {
+        assert!(check("Bogus x;").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_procedure() {
+        let err = check("int x = f(1);").unwrap_err().to_string();
+        assert!(err.contains("unknown procedure"), "{err}");
+    }
+
+    #[test]
+    fn rejects_arity_mismatch() {
+        let src = r#"
+type Image {};
+(Image o) f (Image a, int n) { app { f @filename(a) n @filename(o); } }
+Image x<file_mapper;file="x">;
+Image y = f(x);
+"#;
+        let err = check(src).unwrap_err().to_string();
+        assert!(err.contains("expects 2 arguments"), "{err}");
+    }
+
+    #[test]
+    fn rejects_argument_type_mismatch() {
+        let src = r#"
+type Image {};
+(Image o) f (int n) { app { f n @filename(o); } }
+Image y = f("notanint");
+"#;
+        assert!(check(src).is_err());
+    }
+
+    #[test]
+    fn int_coerces_to_float_argument() {
+        let src = r#"
+type Image {};
+(Image o) f (float x) { app { f x @filename(o); } }
+Image y = f(3);
+"#;
+        assert!(check(src).is_ok());
+    }
+
+    #[test]
+    fn rejects_foreach_over_scalar() {
+        let err = check("int n = 3;\nforeach v in n { int m = 1; }")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("foreach over non-array"), "{err}");
+    }
+
+    #[test]
+    fn rejects_foreach_element_type_mismatch() {
+        let src = r#"
+type Image {};
+type Pair { Image a; Image b; };
+type Bag { Pair p[]; };
+Bag bag<run_mapper;location="d",prefix="x">;
+foreach Image v in bag.p { Image w = v; }
+"#;
+        assert!(check(src).is_err());
+    }
+
+    #[test]
+    fn rejects_nonboolean_if() {
+        let err = check("if (3) { int x = 1; }").unwrap_err().to_string();
+        assert!(err.contains("must be boolean"), "{err}");
+    }
+
+    #[test]
+    fn rejects_filename_on_scalar() {
+        let src = r#"
+type Image {};
+(Image o) f (int n) { app { f @filename(n) @filename(o); } }
+"#;
+        let err = check(src).unwrap_err().to_string();
+        assert!(err.contains("@filename on non-file-backed"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicate_variable() {
+        assert!(check("int x = 1; int x = 2;").is_err());
+    }
+
+    #[test]
+    fn rejects_procedure_without_outputs() {
+        let src = "type Image {};\n() f (Image a) { app { f @filename(a); } }";
+        // Parser produces empty outputs; typecheck rejects.
+        assert!(check(src).is_err());
+    }
+
+    #[test]
+    fn tuple_assignment_arity_checked() {
+        let src = r#"
+type Image {};
+(Image a, Image b) f (Image x) { app { f @filename(x) @filename(a) @filename(b); } }
+Image i<file_mapper;file="i">;
+Image p;
+Image q;
+(p, q) = f(i);
+"#;
+        assert!(check(src).is_ok());
+        let bad = r#"
+type Image {};
+(Image a, Image b) f (Image x) { app { f @filename(x) @filename(a) @filename(b); } }
+Image i<file_mapper;file="i">;
+Image p;
+(p) = f(i);
+"#;
+        assert!(check(bad).is_err());
+    }
+
+    #[test]
+    fn member_access_checked() {
+        let src = r#"
+type Image {};
+type Volume { Image img; };
+Volume v<file_mapper;file="v">;
+Image i = v.img;
+"#;
+        assert!(check(src).is_ok());
+        let bad = r#"
+type Image {};
+type Volume { Image img; };
+Volume v<file_mapper;file="v">;
+Image i = v.nope;
+"#;
+        assert!(check(bad).is_err());
+    }
+
+    #[test]
+    fn comparison_types() {
+        assert!(check(r#"int n = 3; if (n >= 2) { int y = 1; }"#).is_ok());
+        assert!(check(r#"if ("a" < 3) { int y = 1; }"#).is_err());
+        assert!(check(r#"if ("a" != "b") { int y = 1; }"#).is_ok());
+    }
+
+    #[test]
+    fn arithmetic_result_types() {
+        assert!(check("float f = 1 + 2.5;").is_ok());
+        assert!(check("int i = 1 + 2.5;").is_err());
+        assert!(check(r#"int i = 1 + "x";"#).is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! Line-of-code counting for the Table 1 / §3.7 code-size comparison.
+//!
+//! The paper counts non-blank source lines of each workflow encoding
+//! (ad-hoc shell script, PERL DAG generator, SwiftScript). We bundle all
+//! three encodings of each workflow under `workflows/` and count them the
+//! same way.
+
+/// Count non-blank, non-comment-only lines.
+///
+/// `comment_prefixes` lists line-comment markers for the encoding (e.g.
+/// `#` for shell/PERL, `//` for SwiftScript).
+pub fn count_loc(source: &str, comment_prefixes: &[&str]) -> usize {
+    source
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .filter(|l| !comment_prefixes.iter().any(|p| l.starts_with(p)))
+        .count()
+}
+
+/// Count LoC of a file on disk.
+pub fn count_file_loc(
+    path: &std::path::Path,
+    comment_prefixes: &[&str],
+) -> std::io::Result<usize> {
+    Ok(count_loc(&std::fs::read_to_string(path)?, comment_prefixes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skips_blank_and_comments() {
+        let src = "#!/bin/sh\n\n# a comment\necho hi\n  \necho bye # trailing ok\n";
+        assert_eq!(count_loc(src, &["#"]), 2);
+    }
+
+    #[test]
+    fn swift_comments() {
+        let src = "// header\ntype Image {};\n\n// more\nRun r<run_mapper;>;\n";
+        assert_eq!(count_loc(src, &["//"]), 2);
+    }
+
+    #[test]
+    fn empty_source_is_zero() {
+        assert_eq!(count_loc("", &["#"]), 0);
+        assert_eq!(count_loc("\n\n\n", &["#"]), 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared utilities: deterministic RNG, time units, JSON writer, memory
+//! introspection, line counting.
+
+pub mod json;
+pub mod loc;
+pub mod mem;
+pub mod rng;
+pub mod time;
+
+pub use rng::DetRng;
+pub use time::Micros;

@@ -1,0 +1,64 @@
+//! Time units. Virtual-time experiments and real-clock measurements share
+//! the `Micros` unit (u64 microseconds) so metrics code is mode-agnostic.
+
+use std::time::Instant;
+
+/// Microseconds since an experiment epoch (virtual or wall).
+pub type Micros = u64;
+
+pub const SEC: Micros = 1_000_000;
+pub const MS: Micros = 1_000;
+
+/// Convert seconds (f64) to Micros, saturating at zero.
+pub fn secs(s: f64) -> Micros {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * SEC as f64).round() as Micros
+    }
+}
+
+/// Convert Micros to seconds (f64).
+pub fn to_secs(us: Micros) -> f64 {
+    us as f64 / SEC as f64
+}
+
+/// Wall-clock stopwatch for real-mode measurements.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_us(&self) -> Micros {
+        self.start.elapsed().as_micros() as Micros
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secs_roundtrip() {
+        assert_eq!(secs(1.0), SEC);
+        assert_eq!(secs(0.001), MS);
+        assert_eq!(secs(-5.0), 0);
+        assert!((to_secs(secs(3.25)) - 3.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_us();
+        let b = sw.elapsed_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,656 @@
+//! Dataset mappers (paper §3.5): implementations of the standard mapping
+//! interface that materialize logical values from physical storage.
+//!
+//! Provided mappers (the paper's set):
+//! - [`RunMapper`] (`run_mapper`): scans a directory for `<prefix>*.img` /
+//!   `.hdr` pairs and builds a `Run { Volume v[] }` — the fMRI mapper.
+//! - [`CsvMapper`] (`csv_mapper`): maps a delimited table file into an
+//!   array of structs — this is what makes the *dynamic* Montage workflow
+//!   expressible (§3.6): the overlap table produced at runtime is mapped
+//!   and iterated.
+//! - [`FileMapper`] (`file_mapper`): a single named file.
+//! - [`StringMapper`] (`string_mapper`): constant string data.
+//! - [`ArrayMapper`] (`array_mapper`): numbered files `<prefix><i><suffix>`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::types::{Type, TypeEnv};
+use super::value::Value;
+
+/// Mapper parameters: the `<mapper_name; k=v, ...>` clause.
+pub type MapperParams = BTreeMap<String, String>;
+
+/// The standard mapping interface (paper §3.5). Data providers implement
+/// this to support new physical representations.
+pub trait Mapper: Send + Sync {
+    /// Mapper descriptor name (e.g. "run_mapper").
+    fn name(&self) -> &'static str;
+
+    /// Materialize an *input* dataset: discover the physical data and
+    /// build the logical value of type `ty`.
+    fn map_input(
+        &self,
+        ty: &Type,
+        env: &TypeEnv,
+        params: &MapperParams,
+    ) -> Result<Value>;
+
+    /// Plan an *output* dataset: choose physical locations for a value of
+    /// type `ty` that the workflow will produce. Mappers that cannot be
+    /// outputs may error.
+    fn map_output(
+        &self,
+        ty: &Type,
+        env: &TypeEnv,
+        params: &MapperParams,
+    ) -> Result<Value> {
+        let _ = (ty, env);
+        bail!("{} cannot map outputs (params {params:?})", self.name())
+    }
+}
+
+fn require<'p>(params: &'p MapperParams, key: &str, mapper: &str) -> Result<&'p String> {
+    params
+        .get(key)
+        .ok_or_else(|| anyhow!("{mapper}: missing required parameter `{key}`"))
+}
+
+// ---------------------------------------------------------------------
+// run_mapper
+// ---------------------------------------------------------------------
+
+/// `run_mapper;location=...,prefix=...`: pairs of `.img`/`.hdr` files
+/// sharing a prefix become `Volume { img, hdr }` elements of a `Run`.
+pub struct RunMapper;
+
+impl Mapper for RunMapper {
+    fn name(&self) -> &'static str {
+        "run_mapper"
+    }
+
+    fn map_input(
+        &self,
+        ty: &Type,
+        env: &TypeEnv,
+        params: &MapperParams,
+    ) -> Result<Value> {
+        let location = require(params, "location", self.name())?;
+        let prefix = require(params, "prefix", self.name())?;
+        let struct_name = match ty {
+            Type::Struct(n) => n,
+            other => bail!("run_mapper maps a struct type, got {}", other.name()),
+        };
+        // The mapped struct must have exactly one array-of-struct field
+        // whose element has img/hdr (or generally: file fields by suffix).
+        let def = env
+            .struct_def(struct_name)
+            .ok_or_else(|| anyhow!("unknown struct {struct_name}"))?
+            .clone();
+        let (field_name, elem_ty) = def
+            .fields
+            .iter()
+            .find_map(|(n, t)| t.element().map(|e| (n.clone(), e.clone())))
+            .ok_or_else(|| anyhow!("run_mapper: {struct_name} has no array field"))?;
+
+        let mut imgs: Vec<PathBuf> = Vec::new();
+        let dir = Path::new(location);
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("run_mapper: read dir {location}"))?;
+        for entry in entries {
+            let p = entry?.path();
+            let fname = p.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if fname.starts_with(prefix.as_str()) && fname.ends_with(".img") {
+                imgs.push(p);
+            }
+        }
+        imgs.sort();
+        let mut volumes = Vec::with_capacity(imgs.len());
+        for img in imgs {
+            let hdr = img.with_extension("hdr");
+            if !hdr.exists() {
+                bail!("run_mapper: {img:?} has no matching .hdr");
+            }
+            // Build the element struct by suffix convention.
+            let mut fields = BTreeMap::new();
+            if let Type::Struct(vol_name) = &elem_ty {
+                let vdef = env
+                    .struct_def(vol_name)
+                    .ok_or_else(|| anyhow!("unknown struct {vol_name}"))?;
+                for (fname, fty) in &vdef.fields {
+                    match fty {
+                        Type::File(_) => {
+                            let path = if fname == "hdr" {
+                                hdr.clone()
+                            } else {
+                                img.clone()
+                            };
+                            fields.insert(fname.clone(), Value::File(path));
+                        }
+                        other => bail!(
+                            "run_mapper: unsupported volume field type {}",
+                            other.name()
+                        ),
+                    }
+                }
+            } else {
+                bail!("run_mapper: array element must be a struct");
+            }
+            volumes.push(Value::Struct(fields));
+        }
+        Ok(Value::structure([(field_name, Value::Array(volumes))]))
+    }
+
+    fn map_output(
+        &self,
+        ty: &Type,
+        env: &TypeEnv,
+        params: &MapperParams,
+    ) -> Result<Value> {
+        // Outputs: same structure, paths synthesized lazily per element by
+        // the engine (an output Run's length is determined by dataflow).
+        // We return an empty run; the engine extends it.
+        let _ = (env, params);
+        match ty {
+            Type::Struct(_) => Ok(Value::Struct(BTreeMap::new())),
+            other => bail!("run_mapper output must be a struct, got {}", other.name()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// csv_mapper
+// ---------------------------------------------------------------------
+
+/// `csv_mapper;file=...,header=true,skip=1,hdelim="|",delim=","`:
+/// maps a delimited table into `Struct[]` using the target struct's
+/// declared field order (or the header names when present).
+pub struct CsvMapper;
+
+impl CsvMapper {
+    fn parse_row(
+        header: &[String],
+        row: &[String],
+        elem: &Type,
+        env: &TypeEnv,
+    ) -> Result<Value> {
+        let Type::Struct(name) = elem else {
+            bail!("csv_mapper element must be struct, got {}", elem.name());
+        };
+        let def = env
+            .struct_def(name)
+            .ok_or_else(|| anyhow!("unknown struct {name}"))?;
+        let mut fields = BTreeMap::new();
+        for (i, (fname, fty)) in def.fields.iter().enumerate() {
+            // Column by header name if available, else by position.
+            let idx = if !header.is_empty() {
+                header
+                    .iter()
+                    .position(|h| h == fname)
+                    .ok_or_else(|| anyhow!("csv_mapper: no column {fname}"))?
+            } else {
+                i
+            };
+            let cell = row
+                .get(idx)
+                .ok_or_else(|| anyhow!("csv_mapper: row too short for {fname}"))?
+                .trim();
+            let val = match fty {
+                Type::Int => Value::Int(cell.parse().with_context(|| {
+                    format!("csv_mapper: bad int {cell:?} for {fname}")
+                })?),
+                Type::Float => Value::Float(cell.parse().with_context(|| {
+                    format!("csv_mapper: bad float {cell:?} for {fname}")
+                })?),
+                Type::String => Value::str(cell),
+                Type::Boolean => Value::Bool(cell == "true" || cell == "1"),
+                Type::File(_) => Value::file(cell),
+                other => bail!("csv_mapper: unsupported field type {}", other.name()),
+            };
+            fields.insert(fname.clone(), val);
+        }
+        Ok(Value::Struct(fields))
+    }
+}
+
+impl Mapper for CsvMapper {
+    fn name(&self) -> &'static str {
+        "csv_mapper"
+    }
+
+    fn map_input(
+        &self,
+        ty: &Type,
+        env: &TypeEnv,
+        params: &MapperParams,
+    ) -> Result<Value> {
+        let file = require(params, "file", self.name())?;
+        let elem = ty
+            .element()
+            .ok_or_else(|| anyhow!("csv_mapper maps T[], got {}", ty.name()))?;
+        let text = std::fs::read_to_string(file)
+            .with_context(|| format!("csv_mapper: read {file}"))?;
+        let delim = params
+            .get("hdelim")
+            .or_else(|| params.get("delim"))
+            .map(|s| s.as_str())
+            .unwrap_or(",");
+        let has_header = params.get("header").map(|v| v == "true").unwrap_or(false);
+        let skip: usize = params
+            .get("skip")
+            .map(|s| s.parse().unwrap_or(0))
+            .unwrap_or(0);
+
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header: Vec<String> = if has_header {
+            lines
+                .next()
+                .map(|l| {
+                    l.split(delim)
+                        .map(|c| c.trim().to_string())
+                        .filter(|c| !c.is_empty())
+                        .collect()
+                })
+                .unwrap_or_default()
+        } else {
+            Vec::new()
+        };
+        // `skip` counts post-header metadata lines (e.g. the type row in
+        // montage overlap tables).
+        let mut rows = Vec::new();
+        for line in lines.skip(skip) {
+            let cells: Vec<String> = line
+                .split(delim)
+                .map(|c| c.trim().to_string())
+                .filter(|c| !c.is_empty())
+                .collect();
+            if cells.is_empty() {
+                continue;
+            }
+            rows.push(Self::parse_row(&header, &cells, elem, env)?);
+        }
+        Ok(Value::Array(rows))
+    }
+}
+
+// ---------------------------------------------------------------------
+// file_mapper / string_mapper / array_mapper
+// ---------------------------------------------------------------------
+
+/// `file_mapper;file=path`: a single file leaf.
+pub struct FileMapper;
+
+impl Mapper for FileMapper {
+    fn name(&self) -> &'static str {
+        "file_mapper"
+    }
+
+    fn map_input(
+        &self,
+        ty: &Type,
+        _env: &TypeEnv,
+        params: &MapperParams,
+    ) -> Result<Value> {
+        let file = require(params, "file", self.name())?;
+        match ty {
+            Type::File(_) | Type::Table => Ok(Value::file(file)),
+            other => bail!("file_mapper maps file types, got {}", other.name()),
+        }
+    }
+
+    fn map_output(
+        &self,
+        ty: &Type,
+        env: &TypeEnv,
+        params: &MapperParams,
+    ) -> Result<Value> {
+        self.map_input(ty, env, params)
+    }
+}
+
+/// `string_mapper;value=...`: constant string.
+pub struct StringMapper;
+
+impl Mapper for StringMapper {
+    fn name(&self) -> &'static str {
+        "string_mapper"
+    }
+
+    fn map_input(
+        &self,
+        ty: &Type,
+        _env: &TypeEnv,
+        params: &MapperParams,
+    ) -> Result<Value> {
+        let v = require(params, "value", self.name())?;
+        match ty {
+            Type::String => Ok(Value::str(v.clone())),
+            Type::Int => Ok(Value::Int(v.parse()?)),
+            Type::Float => Ok(Value::Float(v.parse()?)),
+            other => bail!("string_mapper maps scalars, got {}", other.name()),
+        }
+    }
+}
+
+/// `array_mapper;location=...,prefix=...,suffix=...,[pad=K],[n=...]`:
+/// numbered files `<location>/<prefix><i><suffix>` with `i` zero-padded
+/// to `pad` digits. For inputs, existing files are discovered; for
+/// outputs, `n` paths are synthesized.
+pub struct ArrayMapper;
+
+fn numbered(prefix: &str, i: usize, pad: usize, suffix: &str) -> String {
+    format!("{prefix}{i:0pad$}{suffix}")
+}
+
+impl Mapper for ArrayMapper {
+    fn name(&self) -> &'static str {
+        "array_mapper"
+    }
+
+    fn map_input(
+        &self,
+        ty: &Type,
+        _env: &TypeEnv,
+        params: &MapperParams,
+    ) -> Result<Value> {
+        let location = require(params, "location", self.name())?;
+        let prefix = require(params, "prefix", self.name())?;
+        let suffix = params.get("suffix").cloned().unwrap_or_default();
+        let pad: usize = params.get("pad").map(|s| s.parse().unwrap_or(1)).unwrap_or(1);
+        if ty.element().is_none() {
+            bail!("array_mapper maps T[], got {}", ty.name());
+        }
+        let mut out = Vec::new();
+        for i in 0.. {
+            let p = Path::new(location).join(numbered(prefix, i, pad, &suffix));
+            if !p.exists() {
+                break;
+            }
+            out.push(Value::File(p));
+        }
+        Ok(Value::Array(out))
+    }
+
+    fn map_output(
+        &self,
+        ty: &Type,
+        _env: &TypeEnv,
+        params: &MapperParams,
+    ) -> Result<Value> {
+        let location = require(params, "location", self.name())?;
+        let prefix = require(params, "prefix", self.name())?;
+        let suffix = params.get("suffix").cloned().unwrap_or_default();
+        let pad: usize = params.get("pad").map(|s| s.parse().unwrap_or(1)).unwrap_or(1);
+        let n: usize = params
+            .get("n")
+            .map(|s| s.parse().unwrap_or(0))
+            .unwrap_or(0);
+        if ty.element().is_none() {
+            bail!("array_mapper maps T[], got {}", ty.name());
+        }
+        let out = (0..n)
+            .map(|i| {
+                Value::File(Path::new(location).join(numbered(prefix, i, pad, &suffix)))
+            })
+            .collect();
+        Ok(Value::Array(out))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Mapper registry: descriptor name -> implementation (paper: "a mapping
+/// descriptor provides the pointer to a mapping implementation").
+pub struct MapperRegistry {
+    mappers: BTreeMap<&'static str, Box<dyn Mapper>>,
+}
+
+impl Default for MapperRegistry {
+    fn default() -> Self {
+        Self::standard()
+    }
+}
+
+impl MapperRegistry {
+    /// Registry with the paper's default mappers installed.
+    pub fn standard() -> Self {
+        let mut r = Self { mappers: BTreeMap::new() };
+        r.register(Box::new(RunMapper));
+        r.register(Box::new(CsvMapper));
+        r.register(Box::new(FileMapper));
+        r.register(Box::new(StringMapper));
+        r.register(Box::new(ArrayMapper));
+        r
+    }
+
+    pub fn register(&mut self, m: Box<dyn Mapper>) {
+        self.mappers.insert(m.name(), m);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&dyn Mapper> {
+        self.mappers
+            .get(name)
+            .map(|b| b.as_ref())
+            .ok_or_else(|| anyhow!("unknown mapper {name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::xdtm::types::StructDef;
+
+    fn fmri_env() -> TypeEnv {
+        let mut e = TypeEnv::new();
+        e.declare_file("Image").unwrap();
+        e.declare_file("Header").unwrap();
+        e.declare_struct(
+            "Volume",
+            StructDef {
+                fields: vec![
+                    ("img".into(), Type::File("Image".into())),
+                    ("hdr".into(), Type::File("Header".into())),
+                ],
+            },
+        )
+        .unwrap();
+        e.declare_struct(
+            "Run",
+            StructDef {
+                fields: vec![(
+                    "v".into(),
+                    Type::array_of(Type::Struct("Volume".into())),
+                )],
+            },
+        )
+        .unwrap();
+        e
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gridswift_mapper_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn run_mapper_discovers_pairs_sorted() {
+        let d = tmpdir("run");
+        for i in [2, 0, 1] {
+            std::fs::write(d.join(format!("bold1_{i:03}.img")), b"x").unwrap();
+            std::fs::write(d.join(format!("bold1_{i:03}.hdr")), b"h").unwrap();
+        }
+        // A distractor with wrong prefix.
+        std::fs::write(d.join("other_000.img"), b"x").unwrap();
+        std::fs::write(d.join("other_000.hdr"), b"x").unwrap();
+        let env = fmri_env();
+        let params: MapperParams = [
+            ("location".to_string(), d.to_string_lossy().into_owned()),
+            ("prefix".to_string(), "bold1".to_string()),
+        ]
+        .into();
+        let run = RunMapper
+            .map_input(&Type::Struct("Run".into()), &env, &params)
+            .unwrap();
+        let vols = run.member("v").unwrap().as_array().unwrap();
+        assert_eq!(vols.len(), 3);
+        let first = vols[0].member("img").unwrap().filename().unwrap();
+        assert!(first.ends_with("bold1_000.img"), "{first}");
+        let hdr = vols[2].member("hdr").unwrap().filename().unwrap();
+        assert!(hdr.ends_with("bold1_002.hdr"));
+    }
+
+    #[test]
+    fn run_mapper_errors_on_missing_hdr() {
+        let d = tmpdir("run_missing");
+        std::fs::write(d.join("b_0.img"), b"x").unwrap();
+        let env = fmri_env();
+        let params: MapperParams = [
+            ("location".to_string(), d.to_string_lossy().into_owned()),
+            ("prefix".to_string(), "b".to_string()),
+        ]
+        .into();
+        assert!(RunMapper
+            .map_input(&Type::Struct("Run".into()), &env, &params)
+            .is_err());
+    }
+
+    #[test]
+    fn csv_mapper_parses_montage_overlap_table() {
+        // The montage overlap table from paper Figure 2 (| delimited, with
+        // header and one type row to skip).
+        let d = tmpdir("csv");
+        let path = d.join("diffs.tbl");
+        std::fs::write(
+            &path,
+            "| cntr1 | cntr2 | plus | minus | diff |\n\
+             | int | int | char | char | char |\n\
+             | 0 | 91 | p_a.fits | p_b.fits | diff.000000.000091.fits |\n\
+             | 1 | 95 | p_c.fits | p_d.fits | diff.000001.000095.fits |\n",
+        )
+        .unwrap();
+        let mut env = TypeEnv::new();
+        env.declare_file("Imagef").unwrap();
+        env.declare_struct(
+            "DiffStruct",
+            StructDef {
+                fields: vec![
+                    ("cntr1".into(), Type::Int),
+                    ("cntr2".into(), Type::Int),
+                    ("plus".into(), Type::File("Imagef".into())),
+                    ("minus".into(), Type::File("Imagef".into())),
+                    ("diff".into(), Type::File("Imagef".into())),
+                ],
+            },
+        )
+        .unwrap();
+        let params: MapperParams = [
+            ("file".to_string(), path.to_string_lossy().into_owned()),
+            ("header".to_string(), "true".to_string()),
+            ("skip".to_string(), "1".to_string()),
+            ("hdelim".to_string(), "|".to_string()),
+        ]
+        .into();
+        let arr = CsvMapper
+            .map_input(
+                &Type::array_of(Type::Struct("DiffStruct".into())),
+                &env,
+                &params,
+            )
+            .unwrap();
+        let rows = arr.as_array().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].member("cntr2").unwrap().as_int().unwrap(), 91);
+        assert_eq!(
+            rows[1].member("diff").unwrap().filename().unwrap(),
+            "diff.000001.000095.fits"
+        );
+    }
+
+    #[test]
+    fn csv_mapper_rejects_bad_int() {
+        let d = tmpdir("csv_bad");
+        let path = d.join("t.csv");
+        std::fs::write(&path, "a,notanint\n").unwrap();
+        let mut env = TypeEnv::new();
+        env.declare_struct(
+            "Row",
+            StructDef {
+                fields: vec![("s".into(), Type::String), ("n".into(), Type::Int)],
+            },
+        )
+        .unwrap();
+        let params: MapperParams =
+            [("file".to_string(), path.to_string_lossy().into_owned())].into();
+        assert!(CsvMapper
+            .map_input(&Type::array_of(Type::Struct("Row".into())), &env, &params)
+            .is_err());
+    }
+
+    #[test]
+    fn file_and_string_mappers() {
+        let env = TypeEnv::new();
+        let params: MapperParams = [("file".to_string(), "/a/b.fits".to_string())].into();
+        let mut env2 = TypeEnv::new();
+        env2.declare_file("Image").unwrap();
+        let v = FileMapper
+            .map_input(&Type::File("Image".into()), &env2, &params)
+            .unwrap();
+        assert_eq!(v.filename().unwrap(), "/a/b.fits");
+
+        let sp: MapperParams = [("value".to_string(), "42".to_string())].into();
+        assert_eq!(
+            StringMapper.map_input(&Type::Int, &env, &sp).unwrap(),
+            Value::Int(42)
+        );
+        assert_eq!(
+            StringMapper.map_input(&Type::String, &env, &sp).unwrap(),
+            Value::str("42")
+        );
+        assert!(StringMapper.map_input(&Type::Table, &env, &sp).is_err());
+    }
+
+    #[test]
+    fn array_mapper_input_and_output() {
+        let d = tmpdir("arr");
+        for i in 0..3 {
+            std::fs::write(d.join(format!("img{i}.raw")), b"x").unwrap();
+        }
+        let mut env = TypeEnv::new();
+        env.declare_file("Image").unwrap();
+        let ty = Type::array_of(Type::File("Image".into()));
+        let params: MapperParams = [
+            ("location".to_string(), d.to_string_lossy().into_owned()),
+            ("prefix".to_string(), "img".to_string()),
+            ("suffix".to_string(), ".raw".to_string()),
+        ]
+        .into();
+        let v = ArrayMapper.map_input(&ty, &env, &params).unwrap();
+        assert_eq!(v.as_array().unwrap().len(), 3);
+
+        let mut oparams = params.clone();
+        oparams.insert("n".to_string(), "5".to_string());
+        let o = ArrayMapper.map_output(&ty, &env, &oparams).unwrap();
+        assert_eq!(o.as_array().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn registry_resolves_standard_mappers() {
+        let r = MapperRegistry::standard();
+        for name in [
+            "run_mapper",
+            "csv_mapper",
+            "file_mapper",
+            "string_mapper",
+            "array_mapper",
+        ] {
+            assert!(r.get(name).is_ok(), "{name}");
+        }
+        assert!(r.get("bogus_mapper").is_err());
+    }
+}

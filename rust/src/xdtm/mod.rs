@@ -1,0 +1,20 @@
+//! XDTM — XML Dataset Typing and Mapping (paper §3.2, §3.5).
+//!
+//! XDTM separates a dataset's *logical structure* (a type built from
+//! primitives, structs and arrays) from its *physical representation*
+//! (files in directories, rows of a CSV table, string constants). The
+//! SwiftScript type system builds on [`types::Type`]; at execution time a
+//! [`mappers::Mapper`] materializes a logical [`value::Value`] from its
+//! physical representation and vice versa.
+//!
+//! The paper's C-style type syntax is translated transparently from/to XML
+//! Schema; this implementation keeps the same two-level model with the
+//! C-style syntax as the source of truth.
+
+pub mod mappers;
+pub mod types;
+pub mod value;
+
+pub use mappers::{CsvMapper, FileMapper, Mapper, MapperRegistry, RunMapper, StringMapper};
+pub use types::{Type, TypeEnv};
+pub use value::Value;

@@ -1,0 +1,223 @@
+//! The XDTM logical type system (paper §3.2).
+//!
+//! Primitive scalars (boolean/int/float/string — the XML-Schema subset the
+//! paper cites), opaque *marker* types backed by files (`type Image {}`),
+//! named composite types with fields, and arrays of any type.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A logical dataset type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Type {
+    Boolean,
+    Int,
+    Float,
+    String,
+    /// `type Image {}` — an opaque file-backed dataset.
+    File(String),
+    /// A named struct: `type Volume { Image img; Header hdr; }`.
+    Struct(String),
+    /// `T[]`.
+    Array(Box<Type>),
+    /// A generic table handle (the montage overlap table).
+    Table,
+}
+
+impl Type {
+    /// True for types whose values live in (collections of) files.
+    pub fn is_file_backed(&self) -> bool {
+        match self {
+            // A Table is a file handle (e.g. the Montage overlap table).
+            Type::File(_) | Type::Table => true,
+            Type::Array(inner) => inner.is_file_backed(),
+            _ => false,
+        }
+    }
+
+    pub fn array_of(t: Type) -> Type {
+        Type::Array(Box::new(t))
+    }
+
+    /// Element type if this is an array.
+    pub fn element(&self) -> Option<&Type> {
+        match self {
+            Type::Array(inner) => Some(inner),
+            _ => None,
+        }
+    }
+
+    /// Human-readable name (diagnostics).
+    pub fn name(&self) -> String {
+        match self {
+            Type::Boolean => "boolean".into(),
+            Type::Int => "int".into(),
+            Type::Float => "float".into(),
+            Type::String => "string".into(),
+            Type::File(n) | Type::Struct(n) => n.clone(),
+            Type::Array(inner) => format!("{}[]", inner.name()),
+            Type::Table => "Table".into(),
+        }
+    }
+}
+
+/// Field list of a struct type, in declaration order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StructDef {
+    pub fields: Vec<(String, Type)>,
+}
+
+impl StructDef {
+    pub fn field(&self, name: &str) -> Option<&Type> {
+        self.fields.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+}
+
+/// The type environment: named type declarations of a program.
+#[derive(Debug, Clone, Default)]
+pub struct TypeEnv {
+    structs: BTreeMap<String, StructDef>,
+    files: BTreeMap<String, ()>,
+}
+
+impl TypeEnv {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare `type Name {}` (opaque file type).
+    pub fn declare_file(&mut self, name: &str) -> Result<()> {
+        self.check_fresh(name)?;
+        self.files.insert(name.to_string(), ());
+        Ok(())
+    }
+
+    /// Declare `type Name { fields.. }`.
+    pub fn declare_struct(&mut self, name: &str, def: StructDef) -> Result<()> {
+        self.check_fresh(name)?;
+        self.structs.insert(name.to_string(), def);
+        Ok(())
+    }
+
+    fn check_fresh(&self, name: &str) -> Result<()> {
+        if self.structs.contains_key(name) || self.files.contains_key(name) {
+            bail!("type {name} already declared");
+        }
+        if matches!(name, "int" | "float" | "string" | "boolean" | "Table") {
+            bail!("cannot redeclare builtin type {name}");
+        }
+        Ok(())
+    }
+
+    /// Resolve a type name (no array suffix) to a Type.
+    pub fn resolve(&self, name: &str) -> Result<Type> {
+        Ok(match name {
+            "int" => Type::Int,
+            "float" => Type::Float,
+            "string" => Type::String,
+            "boolean" => Type::Boolean,
+            "Table" => Type::Table,
+            n if self.files.contains_key(n) => Type::File(n.to_string()),
+            n if self.structs.contains_key(n) => Type::Struct(n.to_string()),
+            n => bail!("unknown type {n}"),
+        })
+    }
+
+    pub fn struct_def(&self, name: &str) -> Option<&StructDef> {
+        self.structs.get(name)
+    }
+
+    /// Type of `t.field`, if valid.
+    pub fn member_type(&self, t: &Type, field: &str) -> Result<Type> {
+        match t {
+            Type::Struct(name) => {
+                let def = self
+                    .struct_def(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown struct {name}"))?;
+                def.field(field)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("{name} has no field {field}"))
+            }
+            other => bail!("member access .{field} on non-struct {}", other.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> TypeEnv {
+        let mut e = TypeEnv::new();
+        e.declare_file("Image").unwrap();
+        e.declare_file("Header").unwrap();
+        e.declare_struct(
+            "Volume",
+            StructDef {
+                fields: vec![
+                    ("img".into(), Type::File("Image".into())),
+                    ("hdr".into(), Type::File("Header".into())),
+                ],
+            },
+        )
+        .unwrap();
+        e.declare_struct(
+            "Run",
+            StructDef {
+                fields: vec![(
+                    "v".into(),
+                    Type::array_of(Type::Struct("Volume".into())),
+                )],
+            },
+        )
+        .unwrap();
+        e
+    }
+
+    #[test]
+    fn resolves_builtin_and_declared() {
+        let e = env();
+        assert_eq!(e.resolve("int").unwrap(), Type::Int);
+        assert_eq!(e.resolve("Image").unwrap(), Type::File("Image".into()));
+        assert_eq!(e.resolve("Run").unwrap(), Type::Struct("Run".into()));
+        assert!(e.resolve("Nope").is_err());
+    }
+
+    #[test]
+    fn member_types() {
+        let e = env();
+        let run = e.resolve("Run").unwrap();
+        let v = e.member_type(&run, "v").unwrap();
+        assert_eq!(v, Type::array_of(Type::Struct("Volume".into())));
+        let vol = v.element().unwrap();
+        assert_eq!(
+            e.member_type(vol, "img").unwrap(),
+            Type::File("Image".into())
+        );
+        assert!(e.member_type(vol, "nope").is_err());
+        assert!(e.member_type(&Type::Int, "x").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates_and_builtin_redecl() {
+        let mut e = env();
+        assert!(e.declare_file("Image").is_err());
+        assert!(e.declare_struct("Volume", StructDef::default()).is_err());
+        assert!(e.declare_file("int").is_err());
+    }
+
+    #[test]
+    fn file_backed_propagates_through_arrays() {
+        let e = env();
+        assert!(e.resolve("Image").unwrap().is_file_backed());
+        assert!(Type::array_of(e.resolve("Image").unwrap()).is_file_backed());
+        assert!(!Type::Int.is_file_backed());
+    }
+
+    #[test]
+    fn names_render() {
+        assert_eq!(Type::array_of(Type::Int).name(), "int[]");
+        assert_eq!(Type::File("Air".into()).name(), "Air");
+    }
+}

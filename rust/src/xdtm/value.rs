@@ -1,0 +1,209 @@
+//! Logical dataset values (paper §3.2): the runtime representation of
+//! XDTM-typed data. File-backed leaves hold paths; structs and arrays
+//! compose. Dataflow synchronization wraps these in Karajan futures — a
+//! `Value` itself is always fully materialized.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A fully materialized logical value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    /// A file-backed dataset leaf: the physical path.
+    File(PathBuf),
+    /// Struct instance: field name -> value.
+    Struct(BTreeMap<String, Value>),
+    /// Array instance.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn file(p: impl Into<PathBuf>) -> Value {
+        Value::File(p.into())
+    }
+
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    /// Struct field access.
+    pub fn member(&self, field: &str) -> Result<&Value> {
+        match self {
+            Value::Struct(m) => m
+                .get(field)
+                .ok_or_else(|| anyhow!("no field {field} in struct")),
+            other => bail!("member .{field} on non-struct {other:?}"),
+        }
+    }
+
+    /// Array index access.
+    pub fn index(&self, i: usize) -> Result<&Value> {
+        match self {
+            Value::Array(v) => v
+                .get(i)
+                .ok_or_else(|| anyhow!("index {i} out of bounds (len {})", v.len())),
+            other => bail!("index [{i}] on non-array {other:?}"),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[Value]> {
+        match self {
+            Value::Array(v) => Ok(v),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => bail!("expected int, got {other:?}"),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected boolean, got {other:?}"),
+        }
+    }
+
+    /// `@filename` builtin (paper §3.3): the physical path of a
+    /// file-backed leaf.
+    pub fn filename(&self) -> Result<String> {
+        match self {
+            Value::File(p) => Ok(p.to_string_lossy().into_owned()),
+            other => bail!("@filename on non-file value {other:?}"),
+        }
+    }
+
+    /// All physical files reachable from this value (stage-in lists).
+    pub fn files(&self) -> Vec<PathBuf> {
+        let mut out = Vec::new();
+        self.collect_files(&mut out);
+        out
+    }
+
+    fn collect_files(&self, out: &mut Vec<PathBuf>) {
+        match self {
+            Value::File(p) => out.push(p.clone()),
+            Value::Struct(m) => m.values().for_each(|v| v.collect_files(out)),
+            Value::Array(v) => v.iter().for_each(|x| x.collect_files(out)),
+            _ => {}
+        }
+    }
+
+    /// Build a struct value from (field, value) pairs.
+    pub fn structure(fields: impl IntoIterator<Item = (String, Value)>) -> Value {
+        Value::Struct(fields.into_iter().collect())
+    }
+}
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Str(s) => write!(f, "{s}"),
+            Value::File(p) => write!(f, "{}", p.display()),
+            Value::Struct(m) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k}: {v}")?;
+                }
+                write!(f, "}}")
+            }
+            Value::Array(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn member_and_index() {
+        let vol = Value::structure([
+            ("img".to_string(), Value::file("/d/a.img")),
+            ("hdr".to_string(), Value::file("/d/a.hdr")),
+        ]);
+        let run = Value::Array(vec![vol.clone()]);
+        assert_eq!(
+            run.index(0).unwrap().member("img").unwrap(),
+            &Value::file("/d/a.img")
+        );
+        assert!(run.index(1).is_err());
+        assert!(vol.member("nope").is_err());
+        assert!(Value::Int(3).member("x").is_err());
+    }
+
+    #[test]
+    fn filename_builtin() {
+        assert_eq!(Value::file("/x/y.hdr").filename().unwrap(), "/x/y.hdr");
+        assert!(Value::Int(1).filename().is_err());
+    }
+
+    #[test]
+    fn files_walks_structure() {
+        let v = Value::Array(vec![
+            Value::structure([
+                ("img".to_string(), Value::file("a.img")),
+                ("hdr".to_string(), Value::file("a.hdr")),
+            ]),
+            Value::structure([
+                ("img".to_string(), Value::file("b.img")),
+                ("hdr".to_string(), Value::file("b.hdr")),
+            ]),
+        ]);
+        let files = v.files();
+        assert_eq!(files.len(), 4);
+        assert!(files.contains(&PathBuf::from("b.hdr")));
+    }
+
+    #[test]
+    fn scalar_coercions() {
+        assert_eq!(Value::Int(3).as_float().unwrap(), 3.0);
+        assert!(Value::Str("x".into()).as_int().is_err());
+        assert!(Value::Bool(true).as_bool().unwrap());
+    }
+
+    #[test]
+    fn display_is_compact() {
+        let v = Value::Array(vec![Value::Int(1), Value::str("a")]);
+        assert_eq!(v.to_string(), "[1, a]");
+    }
+}

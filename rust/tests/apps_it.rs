@@ -1,0 +1,162 @@
+//! Full-stack application integration tests: SwiftScript workflow sources
+//! -> Karajan engine -> Falkon service -> PJRT-executed kernels on
+//! synthetic datasets. Requires `make artifacts`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use gridswift::apps::{exec, fmri, moldyn, montage, AppRegistry};
+use gridswift::falkon::{FalkonProvider, FalkonService, FalkonServiceConfig, RealDrpPolicy};
+use gridswift::karajan::{Engine, EngineConfig, GridScheduler};
+use gridswift::providers::Provider;
+use gridswift::runtime::{self, Tensor};
+use gridswift::swiftscript::compile;
+
+fn have_artifacts() -> bool {
+    let dir = runtime::default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return false;
+    }
+    runtime::init(dir).ok();
+    true
+}
+
+fn workdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gridswift_apps_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn engine(wd: &PathBuf, executors: usize) -> Engine {
+    let registry = Arc::new(AppRegistry::standard());
+    let svc = FalkonService::start(
+        FalkonServiceConfig {
+            drp: RealDrpPolicy::static_pool(executors),
+            executor_overhead: std::time::Duration::ZERO,
+        },
+        registry.runner(),
+    );
+    let p: Arc<dyn Provider> = Arc::new(FalkonProvider::new("falkon", svc));
+    let sched = GridScheduler::new(vec![p], None, 1, 7);
+    Engine::new(
+        EngineConfig { workdir: wd.clone(), pipelining: true, restart_log: None },
+        sched,
+    )
+}
+
+#[test]
+fn fmri_study_end_to_end_with_real_kernels() {
+    if !have_artifacts() {
+        return;
+    }
+    let wd = workdir("fmri");
+    let input = wd.join("study");
+    let outdir = wd.join("normalized");
+    fmri::generate_study(&input, "bold1", 6, 11).unwrap();
+    let src = fmri::workflow_source(&input, &outdir, "bold1");
+    let prog = compile(&src).unwrap();
+    let report = engine(&wd, 4).run(&prog).unwrap();
+    assert_eq!(report.executed as usize, fmri::expected_tasks(6));
+
+    // Published, normalized volumes exist and contain a centered brain:
+    // the workflow corrects the per-volume motion, so normalized volumes
+    // should be closer to each other than raw inputs were.
+    let read = |p: PathBuf| Tensor::read_raw(&p, &exec::VOLUME).unwrap();
+    let n0 = read(outdir.join("sbold1_0000.img"));
+    let n3 = read(outdir.join("sbold1_0003.img"));
+    let r0 = read(input.join("bold1_0000.img"));
+    let r3 = read(input.join("bold1_0003.img"));
+    let dist = |a: &Tensor, b: &Tensor| -> f32 {
+        a.data.iter().zip(&b.data).map(|(x, y)| (x - y) * (x - y)).sum()
+    };
+    let raw = dist(&r0, &r3);
+    let norm = dist(&n0, &n3);
+    assert!(
+        norm < raw * 0.6,
+        "normalization must reduce inter-volume distance: {norm} vs {raw}"
+    );
+}
+
+#[test]
+fn montage_mosaic_end_to_end_with_dynamic_structure() {
+    if !have_artifacts() {
+        return;
+    }
+    let wd = workdir("montage");
+    let survey = wd.join("survey");
+    let out = wd.join("mosaic");
+    std::fs::create_dir_all(&out).unwrap();
+    let nplates = montage::generate_survey(&survey, 2, 5).unwrap();
+    assert_eq!(nplates, 4);
+    let src = montage::workflow_source(&survey, &out);
+    let prog = compile(&src).unwrap();
+    let report = engine(&wd, 4).run(&prog).unwrap();
+    // 4 proj + 1 overlaps + 6 diff + 1 bgmodel + 4 background + 1 add
+    let expected = 4 + 1 + montage::expected_overlaps(2) + 1 + 4 + 1;
+    assert_eq!(report.executed as usize, expected);
+    // The mosaic was published and has signal.
+    let mosaic = Tensor::read_raw(&out.join("mosaic.img"), &exec::IMAGE).unwrap();
+    assert!(mosaic.data.iter().any(|v| *v > 0.2), "mosaic has sources");
+    assert!(mosaic.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn moldyn_study_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let wd = workdir("moldyn");
+    let lib = wd.join("library");
+    moldyn::generate_library(&lib, 2, 8, 3).unwrap();
+    let src = moldyn::workflow_source(&lib, &wd);
+    let prog = compile(&src).unwrap();
+    let report = engine(&wd, 4).run(&prog).unwrap();
+    assert_eq!(
+        report.executed as usize,
+        moldyn::expected_tasks(2, 8),
+        "1 annotate + 2 molecules x (8 fe + 7 chain)"
+    );
+}
+
+#[test]
+fn fmri_restart_resumes_with_real_kernels() {
+    if !have_artifacts() {
+        return;
+    }
+    let wd = workdir("fmri_restart");
+    let input = wd.join("study");
+    fmri::generate_study(&input, "bold1", 3, 13).unwrap();
+    let src = fmri::workflow_source(&input, &wd.join("norm"), "bold1");
+    let prog = compile(&src).unwrap();
+    let logp = wd.join("restart.log");
+
+    let run = || {
+        let registry = Arc::new(AppRegistry::standard());
+        let svc = FalkonService::start(
+            FalkonServiceConfig {
+                drp: RealDrpPolicy::static_pool(2),
+                executor_overhead: std::time::Duration::ZERO,
+            },
+            registry.runner(),
+        );
+        let p: Arc<dyn Provider> = Arc::new(FalkonProvider::new("falkon", svc));
+        let sched = GridScheduler::new(vec![p], None, 1, 3);
+        Engine::new(
+            EngineConfig {
+                workdir: wd.clone(),
+                pipelining: true,
+                restart_log: Some(logp.clone()),
+            },
+            sched,
+        )
+        .run(&prog)
+        .unwrap()
+    };
+    let r1 = run();
+    assert_eq!(r1.executed, 12);
+    let r2 = run();
+    assert_eq!(r2.executed, 0);
+    assert_eq!(r2.skipped, 12);
+}

@@ -1,0 +1,484 @@
+//! Engine integration tests: SwiftScript programs through the full
+//! parse -> typecheck -> Karajan-engine -> scheduler -> local-provider
+//! pipeline, with a mock app runner that writes output files.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use gridswift::karajan::{ClusterPolicy, Engine, EngineConfig, GridScheduler};
+use gridswift::providers::{AppRunner, AppTask, LocalProvider, Provider};
+use gridswift::swiftscript::compile;
+
+/// Mock runner: "executes" a task by writing each expected output file
+/// (content = executable + args) after an optional delay.
+fn writer_runner(delay_ms: u64) -> (AppRunner, Arc<Mutex<Vec<String>>>) {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let log2 = Arc::clone(&log);
+    let runner: AppRunner = Arc::new(move |task: &AppTask| {
+        if delay_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+        }
+        // Inputs must exist (stage-in contract).
+        for f in &task.inputs {
+            anyhow::ensure!(f.exists(), "missing input {f:?} for {}", task.executable);
+        }
+        for f in &task.outputs {
+            if let Some(d) = f.parent() {
+                std::fs::create_dir_all(d)?;
+            }
+            std::fs::write(f, format!("{} {}", task.executable, task.args.join(" ")))?;
+        }
+        log2.lock()
+            .unwrap()
+            .push(format!("{}({})", task.executable, task.args.join(",")));
+        Ok(())
+    });
+    (runner, log)
+}
+
+fn workdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gridswift_engine_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn engine_with(
+    name: &str,
+    runner: AppRunner,
+    workers: usize,
+) -> (Engine, Arc<GridScheduler>, PathBuf) {
+    let wd = workdir(name);
+    let p: Arc<dyn Provider> = Arc::new(LocalProvider::new("local", workers, runner));
+    let sched = GridScheduler::new(vec![p], None, 0, 42);
+    let cfg = EngineConfig { workdir: wd.clone(), pipelining: true, restart_log: None };
+    (Engine::new(cfg, Arc::clone(&sched)), sched, wd)
+}
+
+/// Generate an fMRI-style input directory with n img/hdr pairs.
+fn gen_run(dir: &PathBuf, prefix: &str, n: usize) {
+    for i in 0..n {
+        std::fs::write(dir.join(format!("{prefix}_{i:03}.img")), format!("img{i}"))
+            .unwrap();
+        std::fs::write(dir.join(format!("{prefix}_{i:03}.hdr")), format!("hdr{i}"))
+            .unwrap();
+    }
+}
+
+const FMRI_SRC_TEMPLATE: &str = r#"
+type Image {};
+type Header {};
+type Volume { Image img; Header hdr; };
+type Run { Volume v[]; };
+type Air {};
+type AirVector { Air a[]; };
+
+(Volume ov) reorient (Volume iv, string direction, string overwrite) {
+  app { reorient @filename(iv.img) @filename(ov.img) direction overwrite; }
+}
+(Air out) alignlinear (Volume std, Volume iv, int m) {
+  app { alignlinear @filename(std.img) @filename(iv.img) @filename(out) m; }
+}
+(Volume ov) reslice (Volume iv, Air align) {
+  app { reslice @filename(align) @filename(iv.img) @filename(ov.img); }
+}
+(Run or) reorientRun (Run ir, string direction, string overwrite) {
+  foreach Volume iv, i in ir.v {
+    or.v[i] = reorient(iv, direction, overwrite);
+  }
+}
+(AirVector ov) alignlinearRun (Volume std, Run ir, int m) {
+  foreach Volume iv, i in ir.v {
+    ov.a[i] = alignlinear(std, iv, m);
+  }
+}
+(Run or) resliceRun (Run ir, AirVector av) {
+  foreach Volume iv, i in ir.v {
+    or.v[i] = reslice(iv, av.a[i]);
+  }
+}
+(Run resliced) fmri_wf (Run r) {
+  Run yroRun = reorientRun( r, "y", "n" );
+  Run roRun = reorientRun( yroRun, "x", "n" );
+  Volume std = roRun.v[1];
+  AirVector roAirVec = alignlinearRun(std, roRun, 12);
+  resliced = resliceRun( roRun, roAirVec );
+}
+Run bold1<run_mapper;location="__LOC__",prefix="bold1">;
+Run sbold1<run_mapper;location="__OUT__",prefix="sbold1">;
+sbold1 = fmri_wf(bold1);
+"#;
+
+#[test]
+fn fmri_workflow_end_to_end() {
+    let (runner, log) = writer_runner(0);
+    let (engine, _sched, wd) = engine_with("fmri", runner, 4);
+    let input = wd.join("input");
+    let outdir = wd.join("published");
+    std::fs::create_dir_all(&input).unwrap();
+    gen_run(&input, "bold1", 5);
+    let src = FMRI_SRC_TEMPLATE
+        .replace("__LOC__", input.to_str().unwrap())
+        .replace("__OUT__", outdir.to_str().unwrap());
+    let prog = compile(&src).unwrap();
+    let report = engine.run(&prog).unwrap();
+
+    // 4 stages x 5 volumes = 20 tasks.
+    assert_eq!(report.executed, 20, "log: {:?}", log.lock().unwrap());
+    assert_eq!(report.timeline.len(), 20);
+    // Stage mix is right.
+    let l = log.lock().unwrap();
+    assert_eq!(l.iter().filter(|s| s.starts_with("reorient(")).count(), 10);
+    assert_eq!(l.iter().filter(|s| s.starts_with("alignlinear(")).count(), 5);
+    assert_eq!(l.iter().filter(|s| s.starts_with("reslice(")).count(), 5);
+    // Output dataset was published to the mapped location.
+    let published: Vec<_> = std::fs::read_dir(&outdir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    assert_eq!(
+        published.iter().filter(|f| f.starts_with("sbold1")).count(),
+        10,
+        "5 volumes x img+hdr published: {published:?}"
+    );
+    // Global outputs include the materialized input run.
+    assert!(report.outputs.contains_key("bold1"));
+    assert!(report.outputs.contains_key("sbold1"));
+}
+
+#[test]
+fn dataflow_orders_dependent_stages() {
+    // reorient of volume i must precede its alignlinear, which must
+    // precede its reslice — verify per-volume ordering in the log.
+    let (runner, log) = writer_runner(1);
+    let (engine, _s, wd) = engine_with("order", runner, 8);
+    let input = wd.join("in");
+    std::fs::create_dir_all(&input).unwrap();
+    gen_run(&input, "bold1", 3);
+    let src = FMRI_SRC_TEMPLATE
+        .replace("__LOC__", input.to_str().unwrap())
+        .replace("__OUT__", wd.join("out").to_str().unwrap());
+    let prog = compile(&src).unwrap();
+    engine.run(&prog).unwrap();
+    let l = log.lock().unwrap();
+    // All 6 reorients (2 stages x 3 vols) happen before any reslice of the
+    // same volume; coarser check: first reslice index > first-volume
+    // align index.
+    let first_reslice = l.iter().position(|s| s.starts_with("reslice(")).unwrap();
+    let align_count_before = l[..first_reslice]
+        .iter()
+        .filter(|s| s.starts_with("alignlinear("))
+        .count();
+    assert!(align_count_before >= 1, "a reslice ran before any align: {l:?}");
+}
+
+#[test]
+fn restart_log_skips_completed_tasks() {
+    let (runner, _log) = writer_runner(0);
+    let wd = workdir("restart");
+    let input = wd.join("in");
+    std::fs::create_dir_all(&input).unwrap();
+    gen_run(&input, "bold1", 4);
+    let src = FMRI_SRC_TEMPLATE
+        .replace("__LOC__", input.to_str().unwrap())
+        .replace("__OUT__", wd.join("out").to_str().unwrap());
+    let prog = compile(&src).unwrap();
+    let logp = wd.join("restart.log");
+
+    let run = |runner: AppRunner| {
+        let p: Arc<dyn Provider> = Arc::new(LocalProvider::new("local", 2, runner));
+        let sched = GridScheduler::new(vec![p], None, 0, 1);
+        let cfg = EngineConfig {
+            workdir: wd.clone(),
+            pipelining: true,
+            restart_log: Some(logp.clone()),
+        };
+        Engine::new(cfg, sched).run(&prog).unwrap()
+    };
+    let r1 = run(runner);
+    assert_eq!(r1.executed, 16);
+    assert_eq!(r1.skipped, 0);
+    // Second run: everything resumes from the log.
+    let (runner2, log2) = writer_runner(0);
+    let r2 = run(runner2);
+    assert_eq!(r2.executed, 0, "all tasks skipped on resume");
+    assert_eq!(r2.skipped, 16);
+    assert!(log2.lock().unwrap().is_empty());
+}
+
+#[test]
+fn failure_fails_workflow_with_message() {
+    let runner: AppRunner = Arc::new(|t: &AppTask| {
+        if t.executable == "alignlinear" {
+            anyhow::bail!("stale NFS handle");
+        }
+        for f in &t.outputs {
+            if let Some(d) = f.parent() {
+                std::fs::create_dir_all(d)?;
+            }
+            std::fs::write(f, "x")?;
+        }
+        Ok(())
+    });
+    let (engine, _s, wd) = engine_with("fail", runner, 2);
+    let input = wd.join("in");
+    std::fs::create_dir_all(&input).unwrap();
+    gen_run(&input, "bold1", 2);
+    let src = FMRI_SRC_TEMPLATE
+        .replace("__LOC__", input.to_str().unwrap())
+        .replace("__OUT__", wd.join("out").to_str().unwrap());
+    let prog = compile(&src).unwrap();
+    let err = engine.run(&prog).unwrap_err().to_string();
+    assert!(err.contains("stale NFS handle"), "{err}");
+}
+
+#[test]
+fn retry_recovers_transient_failures() {
+    // First alignlinear attempt fails; scheduler retries and the workflow
+    // completes (paper §3.12 transitory-problem recovery).
+    let attempts = Arc::new(AtomicUsize::new(0));
+    let a2 = Arc::clone(&attempts);
+    let runner: AppRunner = Arc::new(move |t: &AppTask| {
+        if t.executable == "alignlinear" && a2.fetch_add(1, Ordering::SeqCst) == 0 {
+            anyhow::bail!("transient");
+        }
+        for f in &t.outputs {
+            if let Some(d) = f.parent() {
+                std::fs::create_dir_all(d)?;
+            }
+            std::fs::write(f, "x")?;
+        }
+        Ok(())
+    });
+    let wd = workdir("retry");
+    let input = wd.join("in");
+    std::fs::create_dir_all(&input).unwrap();
+    gen_run(&input, "bold1", 2);
+    let p: Arc<dyn Provider> = Arc::new(LocalProvider::new("local", 2, runner));
+    let sched = GridScheduler::new(vec![p], None, 2, 7);
+    let cfg = EngineConfig { workdir: wd.clone(), pipelining: true, restart_log: None };
+    let engine = Engine::new(cfg, sched);
+    let src = FMRI_SRC_TEMPLATE
+        .replace("__LOC__", input.to_str().unwrap())
+        .replace("__OUT__", wd.join("out").to_str().unwrap());
+    let prog = compile(&src).unwrap();
+    let report = engine.run(&prog).unwrap();
+    assert_eq!(report.executed, 8);
+    assert!(attempts.load(Ordering::SeqCst) >= 3, "one retry happened");
+}
+
+#[test]
+fn conditional_execution_picks_branch() {
+    let (runner, log) = writer_runner(0);
+    let (engine, _s, wd) = engine_with("cond", runner, 2);
+    std::fs::write(wd.join("seed.dat"), "s").unwrap();
+    let src = format!(
+        r#"
+type Image {{}};
+(Image o) small (Image i) {{ app {{ small @filename(i) @filename(o); }} }}
+(Image o) large (Image i) {{ app {{ large @filename(i) @filename(o); }} }}
+Image input<file_mapper;file="{}">;
+int n = 5;
+Image out1;
+if (n > 3) {{
+  out1 = large(input);
+}} else {{
+  out1 = small(input);
+}}
+"#,
+        wd.join("seed.dat").display()
+    );
+    let prog = compile(&src).unwrap();
+    let report = engine.run(&prog).unwrap();
+    assert_eq!(report.executed, 1);
+    let l = log.lock().unwrap();
+    assert!(l[0].starts_with("large("), "{l:?}");
+}
+
+#[test]
+fn csv_mapper_drives_dynamic_fanout() {
+    // The Montage §3.6 pattern: a produced table, mapped via csv_mapper,
+    // drives a foreach whose width is only known at runtime.
+    let (runner_base, log) = writer_runner(0);
+    // Wrap: when the executable is mkoverlaps, write a CSV with 3 rows.
+    let runner: AppRunner = Arc::new(move |t: &AppTask| {
+        if t.executable == "mkoverlaps" {
+            for f in &t.outputs {
+                if let Some(d) = f.parent() {
+                    std::fs::create_dir_all(d)?;
+                }
+                std::fs::write(
+                    f,
+                    "cntr1,cntr2\n\
+                     0,91\n\
+                     1,95\n\
+                     2,3\n",
+                )?;
+            }
+            Ok(())
+        } else {
+            runner_base(t)
+        }
+    });
+    let (engine, _s, wd) = engine_with("csv", runner, 2);
+    std::fs::write(wd.join("imgs.dat"), "x").unwrap();
+    let src = format!(
+        r#"
+type Imagef {{}};
+type DiffStruct {{ int cntr1; int cntr2; }};
+(Table t) mkoverlaps (Imagef i) {{ app {{ mkoverlaps @filename(i) @filename(t); }} }}
+(Imagef o) diffit (int a, int b) {{ app {{ diffit a b @filename(o); }} }}
+Imagef imgs<file_mapper;file="{}">;
+Table diffsTbl = mkoverlaps(imgs);
+DiffStruct diffs[]<csv_mapper; file=diffsTbl, header=true>;
+foreach d in diffs {{
+  Imagef di = diffit(d.cntr1, d.cntr2);
+}}
+"#,
+        wd.join("imgs.dat").display()
+    );
+    let prog = compile(&src).unwrap();
+    let report = engine.run(&prog).unwrap();
+    // 1 mkoverlaps + 3 dynamic diffit tasks.
+    assert_eq!(report.executed, 4);
+    let l = log.lock().unwrap();
+    assert!(l.iter().any(|s| s.contains("diffit(0,91,")), "{l:?}");
+    assert!(l.iter().any(|s| s.contains("diffit(2,3,")), "{l:?}");
+}
+
+#[test]
+fn pipelining_overlaps_stages_and_barriers_do_not() {
+    // Two-stage chain over 6 volumes with 10 ms tasks on 6 workers:
+    // pipelined run must be significantly faster than staged.
+    let src_of = |wd: &PathBuf| {
+        format!(
+            r#"
+type Image {{}};
+type Header {{}};
+type Volume {{ Image img; Header hdr; }};
+type Run {{ Volume v[]; }};
+(Volume ov) s1 (Volume iv) {{ app {{ s1 @filename(iv.img) @filename(ov.img); }} }}
+(Volume ov) s2 (Volume iv) {{ app {{ s2 @filename(iv.img) @filename(ov.img); }} }}
+(Run or) s1run (Run ir) {{
+  foreach Volume iv, i in ir.v {{ or.v[i] = s1(iv); }}
+}}
+(Run or) s2run (Run ir) {{
+  foreach Volume iv, i in ir.v {{ or.v[i] = s2(iv); }}
+}}
+Run input<run_mapper;location="{}",prefix="b">;
+Run stage1 = s1run(input);
+Run stage2 = s2run(stage1);
+"#,
+            wd.join("in").display()
+        )
+    };
+    // Per-task durations vary (hash of args): the pipelining win is
+    // max_i(sum_k t_ki) vs sum_k(max_i t_ki) — per-volume variance is
+    // what the paper's Figure 10 21% reduction comes from.
+    let variable_runner = || -> AppRunner {
+        Arc::new(move |task: &AppTask| {
+            let mut h: u64 = 0xcbf29ce484222325;
+            for b in task.args.join(" ").bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            let ms = 5 + (h % 40);
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            for f in &task.outputs {
+                if let Some(d) = f.parent() {
+                    std::fs::create_dir_all(d)?;
+                }
+                std::fs::write(f, "x")?;
+            }
+            Ok(())
+        })
+    };
+    let mut times = Vec::new();
+    for pipelining in [true, false] {
+        let wd = workdir(&format!("pipe_{pipelining}"));
+        std::fs::create_dir_all(wd.join("in")).unwrap();
+        gen_run(&wd.join("in"), "b", 8);
+        let p: Arc<dyn Provider> =
+            Arc::new(LocalProvider::new("local", 8, variable_runner()));
+        let sched = GridScheduler::new(vec![p], None, 0, 3);
+        let cfg = EngineConfig { workdir: wd.clone(), pipelining, restart_log: None };
+        let engine = Engine::new(cfg, sched);
+        let prog = compile(&src_of(&wd)).unwrap();
+        let t0 = std::time::Instant::now();
+        let report = engine.run(&prog).unwrap();
+        assert_eq!(report.executed, 16);
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    // Pipelined (times[0]) should beat staged (times[1]).
+    assert!(
+        times[0] < times[1],
+        "pipelined {:.3}s vs staged {:.3}s",
+        times[0],
+        times[1]
+    );
+}
+
+#[test]
+fn clustering_reduces_bundle_count() {
+    let (runner, _log) = writer_runner(1);
+    let wd = workdir("cluster");
+    std::fs::create_dir_all(wd.join("in")).unwrap();
+    gen_run(&wd.join("in"), "b", 8);
+    let p = Arc::new(LocalProvider::new("local", 2, runner));
+    let pc: Arc<dyn Provider> = Arc::clone(&p) as Arc<dyn Provider>;
+    let sched = GridScheduler::new(
+        vec![pc],
+        Some(ClusterPolicy {
+            bundle_size: 4,
+            window: std::time::Duration::from_millis(50),
+        }),
+        0,
+        9,
+    );
+    let cfg = EngineConfig { workdir: wd.clone(), pipelining: true, restart_log: None };
+    let engine = Engine::new(cfg, sched);
+    let src = format!(
+        r#"
+type Image {{}};
+type Header {{}};
+type Volume {{ Image img; Header hdr; }};
+type Run {{ Volume v[]; }};
+(Volume ov) work (Volume iv) {{ app {{ work @filename(iv.img) @filename(ov.img); }} }}
+(Run or) workRun (Run ir) {{
+  foreach Volume iv, i in ir.v {{ or.v[i] = work(iv); }}
+}}
+Run input<run_mapper;location="{}",prefix="b">;
+Run out = workRun(input);
+"#,
+        wd.join("in").display()
+    );
+    let prog = compile(&src).unwrap();
+    let report = engine.run(&prog).unwrap();
+    assert_eq!(report.executed, 8);
+}
+
+#[test]
+fn tuple_assign_links_multiple_outputs() {
+    let (runner, _log) = writer_runner(0);
+    let (engine, _s, wd) = engine_with("tuple", runner, 2);
+    std::fs::write(wd.join("i.dat"), "x").unwrap();
+    let src = format!(
+        r#"
+type Image {{}};
+(Image a, Image b) split (Image i) {{
+  app {{ split @filename(i) @filename(a) @filename(b); }}
+}}
+(Image o) consume (Image x) {{ app {{ consume @filename(x) @filename(o); }} }}
+Image input<file_mapper;file="{}">;
+Image left;
+Image right;
+(left, right) = split(input);
+Image fin = consume(left);
+"#,
+        wd.join("i.dat").display()
+    );
+    let prog = compile(&src).unwrap();
+    let report = engine.run(&prog).unwrap();
+    assert_eq!(report.executed, 2);
+}

@@ -1,0 +1,185 @@
+//! Falkon service integration tests: DRP behaviour under bursty load,
+//! multi-client TCP, failure injection through the provider path.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use gridswift::falkon::{
+    FalkonClient, FalkonProvider, FalkonService, FalkonServiceConfig, FalkonTcpServer,
+    RealDrpPolicy,
+};
+use gridswift::providers::{AppRunner, AppTask, Provider};
+
+fn task(id: u64) -> AppTask {
+    AppTask {
+        id,
+        key: format!("k{id}"),
+        executable: "sleep0".into(),
+        args: vec![],
+        inputs: vec![],
+        outputs: vec![],
+    }
+}
+
+fn sleepy(ms: u64) -> AppRunner {
+    Arc::new(move |_t| {
+        std::thread::sleep(Duration::from_millis(ms));
+        Ok(())
+    })
+}
+
+#[test]
+fn drp_ramps_up_and_down_across_bursts() {
+    let svc = FalkonService::start(
+        FalkonServiceConfig {
+            drp: RealDrpPolicy {
+                min_executors: 1,
+                max_executors: 12,
+                tasks_per_executor: 1,
+                allocation_delay: Duration::from_millis(20),
+                idle_timeout: Duration::from_millis(120),
+                check_interval: Duration::from_millis(5),
+            },
+            executor_overhead: Duration::ZERO,
+        },
+        sleepy(15),
+    );
+    // Burst 1.
+    let (tx, rx) = std::sync::mpsc::channel();
+    for i in 0..48 {
+        let tx = tx.clone();
+        svc.submit(task(i), Box::new(move |r| tx.send(r.ok).unwrap()));
+    }
+    for _ in 0..48 {
+        assert!(rx.recv_timeout(Duration::from_secs(10)).unwrap());
+    }
+    let peak1 = svc.stats().peak_executors.load(Ordering::SeqCst);
+    assert!(peak1 > 2, "burst grew the pool: {peak1}");
+    // Idle: pool shrinks to min.
+    std::thread::sleep(Duration::from_millis(500));
+    assert!(
+        svc.live_executors() <= 2,
+        "pool shrank after idle: {}",
+        svc.live_executors()
+    );
+    // Burst 2 still works after shrink.
+    let (tx, rx) = std::sync::mpsc::channel();
+    for i in 100..120 {
+        let tx = tx.clone();
+        svc.submit(task(i), Box::new(move |r| tx.send(r.ok).unwrap()));
+    }
+    for _ in 0..20 {
+        assert!(rx.recv_timeout(Duration::from_secs(10)).unwrap());
+    }
+}
+
+#[test]
+fn multiple_tcp_clients_interleave() {
+    let svc = FalkonService::start(
+        FalkonServiceConfig {
+            drp: RealDrpPolicy::static_pool(4),
+            executor_overhead: Duration::ZERO,
+        },
+        Arc::new(|_t| Ok(())),
+    );
+    let server = FalkonTcpServer::start(Arc::clone(&svc), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..4)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = FalkonClient::connect(addr).unwrap();
+                for i in 0..100u64 {
+                    client.submit(c * 1000 + i, "sleep0", &[]).unwrap();
+                }
+                let mut ok = 0;
+                for _ in 0..100 {
+                    if client.next_result().unwrap().ok {
+                        ok += 1;
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let total: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 400);
+    assert_eq!(svc.stats().completed.load(Ordering::SeqCst), 400);
+}
+
+#[test]
+fn provider_bundles_mixed_success_failure() {
+    let svc = FalkonService::start(
+        FalkonServiceConfig {
+            drp: RealDrpPolicy::static_pool(2),
+            executor_overhead: Duration::ZERO,
+        },
+        Arc::new(|t: &AppTask| {
+            if t.id % 3 == 0 {
+                anyhow::bail!("id divisible by 3")
+            }
+            Ok(())
+        }),
+    );
+    let p = FalkonProvider::new("falkon", svc);
+    let (tx, rx) = std::sync::mpsc::channel();
+    p.submit(
+        (0..9).map(task).collect(),
+        Box::new(move |rs| tx.send(rs).unwrap()),
+    );
+    let rs = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(rs.len(), 9);
+    for r in &rs {
+        assert_eq!(r.ok, r.id % 3 != 0, "task {}", r.id);
+    }
+}
+
+#[test]
+fn executor_overhead_is_applied() {
+    // With a 20ms sandbox overhead, 10 tasks on 1 executor take >= 200ms.
+    let svc = FalkonService::start(
+        FalkonServiceConfig {
+            drp: RealDrpPolicy::static_pool(1),
+            executor_overhead: Duration::from_millis(20),
+        },
+        Arc::new(|_t| Ok(())),
+    );
+    let t0 = std::time::Instant::now();
+    for i in 0..10 {
+        svc.submit_wait(task(i));
+    }
+    assert!(
+        t0.elapsed() >= Duration::from_millis(190),
+        "{:?}",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn stats_accounting_consistent() {
+    let svc = FalkonService::start(
+        FalkonServiceConfig {
+            drp: RealDrpPolicy::static_pool(3),
+            executor_overhead: Duration::ZERO,
+        },
+        Arc::new(|t: &AppTask| {
+            if t.id == 5 {
+                anyhow::bail!("five fails")
+            }
+            Ok(())
+        }),
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    for i in 0..10 {
+        let tx = tx.clone();
+        svc.submit(task(i), Box::new(move |r| tx.send(r).unwrap()));
+    }
+    for _ in 0..10 {
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    }
+    let s = svc.stats();
+    assert_eq!(s.submitted.load(Ordering::SeqCst), 10);
+    assert_eq!(s.completed.load(Ordering::SeqCst), 9);
+    assert_eq!(s.failed.load(Ordering::SeqCst), 1);
+    assert_eq!(svc.queue_len(), 0);
+}

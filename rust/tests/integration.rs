@@ -1,0 +1,337 @@
+//! Integration tests over the PJRT runtime: Rust loads and executes the
+//! AOT artifacts produced by `make artifacts` and checks numerics against
+//! the Python oracles' invariants.
+//!
+//! These tests require `artifacts/` to exist (run `make artifacts`).
+
+use gridswift::runtime::{self, Tensor};
+
+fn init() -> bool {
+    let dir = runtime::default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return false;
+    }
+    runtime::init(dir).expect("init runtime");
+    true
+}
+
+const VOL: [usize; 3] = [64, 64, 24];
+
+fn vol_elems() -> usize {
+    VOL.iter().product()
+}
+
+fn ramp_volume() -> Tensor {
+    let n = vol_elems();
+    let data: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.25).collect();
+    Tensor::new(VOL.to_vec(), data)
+}
+
+#[test]
+fn manifest_covers_all_artifacts() {
+    if !init() {
+        return;
+    }
+    let m = runtime::Manifest::load(&runtime::default_artifact_dir()).unwrap();
+    for name in [
+        "reorient_x",
+        "reorient_y",
+        "reorient_z",
+        "alignlinear",
+        "reslice",
+        "fmri_chain",
+        "mproject",
+        "mdifffit",
+        "mbgcorrect",
+        "madd",
+        "mdenergy",
+        "mdequil",
+        "wham",
+    ] {
+        assert!(m.get(name).is_some(), "missing artifact {name}");
+        assert!(runtime::has_artifact(name), "missing hlo file {name}");
+    }
+}
+
+#[test]
+fn reorient_is_involution() {
+    if !init() {
+        return;
+    }
+    let v = ramp_volume();
+    let once = runtime::execute("reorient_y", &[v.clone()]).unwrap();
+    let twice = runtime::execute("reorient_y", &[once[0].clone()]).unwrap();
+    assert_eq!(twice[0], v, "flip twice must be identity");
+    // And a single flip must differ.
+    assert!(once[0].max_abs_diff(&v) > 0.0);
+}
+
+#[test]
+fn reorient_axes_commute() {
+    if !init() {
+        return;
+    }
+    let v = ramp_volume();
+    let xy = runtime::execute(
+        "reorient_y",
+        &[runtime::execute("reorient_x", &[v.clone()]).unwrap()[0].clone()],
+    )
+    .unwrap();
+    let yx = runtime::execute(
+        "reorient_x",
+        &[runtime::execute("reorient_y", &[v]).unwrap()[0].clone()],
+    )
+    .unwrap();
+    assert_eq!(xy[0], yx[0]);
+}
+
+fn gaussian_volume(cx: f32, cy: f32, cz: f32) -> Tensor {
+    let (x, y, z) = (VOL[0], VOL[1], VOL[2]);
+    let mut data = Vec::with_capacity(x * y * z);
+    for i in 0..x {
+        for j in 0..y {
+            for k in 0..z {
+                let r2 = (i as f32 - cx).powi(2)
+                    + (j as f32 - cy).powi(2)
+                    + (k as f32 - cz).powi(2);
+                data.push((-r2 / 72.0).exp());
+            }
+        }
+    }
+    Tensor::new(VOL.to_vec(), data)
+}
+
+#[test]
+fn alignlinear_identity_params_for_same_volume() {
+    if !init() {
+        return;
+    }
+    let v = gaussian_volume(32.0, 32.0, 12.0);
+    let out = runtime::execute("alignlinear", &[v.clone(), v]).unwrap();
+    let p = &out[0];
+    assert_eq!(p.shape, vec![6]);
+    let expect = [1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+    for (got, want) in p.data.iter().zip(expect) {
+        assert!((got - want).abs() < 5e-3, "params {:?}", p.data);
+    }
+}
+
+#[test]
+fn alignlinear_recovers_shift_and_reslice_applies_it() {
+    if !init() {
+        return;
+    }
+    let reference = gaussian_volume(30.0, 32.0, 12.0);
+    let moved = gaussian_volume(34.0, 32.0, 12.0);
+    let p = runtime::execute("alignlinear", &[moved.clone(), reference.clone()])
+        .unwrap()
+        .remove(0);
+    // tx ~ +4 voxels
+    assert!((p.data[1] - 4.0).abs() < 0.4, "params {:?}", p.data);
+    let resliced = runtime::execute("reslice", &[moved.clone(), p])
+        .unwrap()
+        .remove(0);
+    let before: f32 = moved
+        .data
+        .iter()
+        .zip(&reference.data)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    let after: f32 = resliced
+        .data
+        .iter()
+        .zip(&reference.data)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    assert!(
+        after < 0.25 * before,
+        "reslice must reduce misalignment: {after} vs {before}"
+    );
+}
+
+#[test]
+fn fmri_chain_matches_staged_execution() {
+    if !init() {
+        return;
+    }
+    let vol = ramp_volume();
+    let rf = gaussian_volume(32.0, 32.0, 12.0);
+    let chain = runtime::execute("fmri_chain", &[vol.clone(), rf.clone()]).unwrap();
+    // staged: y, x flips on both, align, reslice
+    let v1 = runtime::execute("reorient_y", &[vol]).unwrap().remove(0);
+    let v2 = runtime::execute("reorient_x", &[v1]).unwrap().remove(0);
+    let r1 = runtime::execute("reorient_y", &[rf]).unwrap().remove(0);
+    let r2 = runtime::execute("reorient_x", &[r1]).unwrap().remove(0);
+    let p = runtime::execute("alignlinear", &[v2.clone(), r2])
+        .unwrap()
+        .remove(0);
+    let staged = runtime::execute("reslice", &[v2, p.clone()])
+        .unwrap()
+        .remove(0);
+    assert!(chain[0].max_abs_diff(&staged) < 1e-3);
+    assert!(chain[1].max_abs_diff(&p) < 1e-3);
+}
+
+#[test]
+fn mproject_identity_params_is_noop() {
+    if !init() {
+        return;
+    }
+    let n = 512 * 512;
+    let img = Tensor::new(
+        vec![512, 512],
+        (0..n).map(|i| ((i * 31) % 101) as f32).collect(),
+    );
+    let p = Tensor::vec(vec![1.0, 0.0, 1.0, 0.0]);
+    let out = runtime::execute("mproject", &[img.clone(), p]).unwrap();
+    assert!(out[0].max_abs_diff(&img) < 1e-3);
+}
+
+#[test]
+fn mdifffit_recovers_plane_and_bgcorrect_removes_it() {
+    if !init() {
+        return;
+    }
+    let (h, w) = (512usize, 512usize);
+    let base: Vec<f32> = (0..h * w).map(|i| ((i * 7) % 13) as f32).collect();
+    let mut tilted = base.clone();
+    for r in 0..h {
+        for c in 0..w {
+            tilted[r * w + c] += 2.0 + 0.01 * r as f32 - 0.005 * c as f32;
+        }
+    }
+    let a = Tensor::new(vec![h, w], tilted);
+    let b = Tensor::new(vec![h, w], base);
+    let out = runtime::execute("mdifffit", &[a.clone(), b.clone()]).unwrap();
+    let coeffs = &out[1];
+    assert!((coeffs.data[0] - 2.0).abs() < 1e-2, "{:?}", coeffs.data);
+    assert!((coeffs.data[1] - 0.01).abs() < 1e-4);
+    assert!((coeffs.data[2] + 0.005).abs() < 1e-4);
+    let fixed = runtime::execute("mbgcorrect", &[a, coeffs.clone()])
+        .unwrap()
+        .remove(0);
+    assert!(fixed.max_abs_diff(&b) < 0.05);
+}
+
+#[test]
+fn madd_uniform_weights_averages() {
+    if !init() {
+        return;
+    }
+    let k = 8usize;
+    let (h, w) = (512usize, 512usize);
+    let mut stack = Vec::with_capacity(k * h * w);
+    for ki in 0..k {
+        stack.extend((0..h * w).map(|i| (ki + i % 5) as f32));
+    }
+    let s = Tensor::new(vec![k, h, w], stack);
+    let wts = Tensor::vec(vec![1.0; k]);
+    let out = runtime::execute("madd", &[s, wts]).unwrap().remove(0);
+    // mean over ki of (ki + c) = 3.5 + c
+    assert!((out.data[0] - 3.5).abs() < 1e-4);
+}
+
+#[test]
+fn mdenergy_forces_sum_to_zero() {
+    if !init() {
+        return;
+    }
+    // 128 atoms on a lattice.
+    let mut data = Vec::with_capacity(128 * 3);
+    for i in 0..128 {
+        let (a, b, c) = (i % 5, (i / 5) % 5, i / 25);
+        data.extend([
+            a as f32 * 1.12 + 0.01 * (i % 3) as f32,
+            b as f32 * 1.12,
+            c as f32 * 1.12,
+        ]);
+    }
+    let pos = Tensor::new(vec![128, 3], data);
+    let out = runtime::execute("mdenergy", &[pos]).unwrap();
+    let f = &out[0];
+    let mut sum = [0.0f64; 3];
+    for chunk in f.data.chunks(3) {
+        for d in 0..3 {
+            sum[d] += chunk[d] as f64;
+        }
+    }
+    for s in sum {
+        assert!(s.abs() < 0.05, "net force {sum:?}");
+    }
+    assert!(out[1].data[0].is_finite());
+}
+
+#[test]
+fn mdequil_lowers_energy() {
+    if !init() {
+        return;
+    }
+    let mut data = Vec::with_capacity(128 * 3);
+    for i in 0..128 {
+        let (a, b, c) = (i % 5, (i / 5) % 5, i / 25);
+        data.extend([
+            a as f32 * 1.2 + 0.03 * ((i * 7) % 11) as f32,
+            b as f32 * 1.2 + 0.02 * ((i * 3) % 7) as f32,
+            c as f32 * 1.2,
+        ]);
+    }
+    let pos = Tensor::new(vec![128, 3], data);
+    let e0 = runtime::execute("mdenergy", &[pos.clone()]).unwrap()[1].data[0];
+    let out = runtime::execute("mdequil", &[pos]).unwrap();
+    let pos1 = out[0].clone();
+    let e1 = runtime::execute("mdenergy", &[pos1]).unwrap()[1].data[0];
+    assert!(e1 < e0, "equilibration must lower energy: {e1} vs {e0}");
+}
+
+#[test]
+fn wham_fixed_point_anchored() {
+    if !init() {
+        return;
+    }
+    let counts = Tensor::new(vec![1, 64], (0..64).map(|i| 1.0 + (i % 7) as f32).collect());
+    let bias = Tensor::new(
+        vec![8, 64],
+        (0..8 * 64).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect(),
+    );
+    let nsamp = Tensor::new(vec![8, 1], vec![100.0; 8]);
+    let out = runtime::execute("wham", &[counts, bias, nsamp]).unwrap();
+    let f = &out[0];
+    assert_eq!(f.shape, vec![8, 1]);
+    assert_eq!(f.data[0], 0.0, "gauge anchor f[0]=0");
+    assert!(f.data.iter().all(|v| v.is_finite()));
+    let p = &out[1];
+    assert!(p.data.iter().all(|v| *v >= 0.0));
+}
+
+#[test]
+fn execute_rejects_wrong_shapes_and_names() {
+    if !init() {
+        return;
+    }
+    let bad = Tensor::zeros(&[2, 2]);
+    assert!(runtime::execute("reorient_y", &[bad]).is_err());
+    assert!(runtime::execute("reorient_y", &[]).is_err());
+    assert!(runtime::execute("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn runtime_is_usable_from_multiple_threads() {
+    if !init() {
+        return;
+    }
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(|| {
+                let v = ramp_volume();
+                let once = runtime::execute("reorient_y", &[v.clone()]).unwrap();
+                let twice =
+                    runtime::execute("reorient_y", &[once[0].clone()]).unwrap();
+                assert_eq!(twice[0], v);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,156 @@
+//! Language-level integration: every bundled workflow compiles; error
+//! messages are actionable; paper code samples parse verbatim.
+
+use gridswift::swiftscript::{compile, parse};
+
+#[test]
+fn all_bundled_swiftscript_workflows_compile() {
+    let dir = std::path::Path::new("workflows");
+    let mut checked = 0;
+    for entry in std::fs::read_dir(dir).expect("workflows dir") {
+        let p = entry.unwrap().path();
+        if p.extension().map(|e| e == "swift").unwrap_or(false) {
+            let src = std::fs::read_to_string(&p).unwrap();
+            compile(&src).unwrap_or_else(|e| panic!("{p:?} failed: {e:#}"));
+            checked += 1;
+        }
+    }
+    assert!(checked >= 5, "expected the 5 Table-1 workflows, found {checked}");
+}
+
+#[test]
+fn app_workflow_sources_compile() {
+    use std::path::Path;
+    compile(&gridswift::apps::fmri::workflow_source(
+        Path::new("/in"),
+        Path::new("/out"),
+        "bold1",
+    ))
+    .unwrap();
+    compile(&gridswift::apps::montage::workflow_source(
+        Path::new("/sv"),
+        Path::new("/out"),
+    ))
+    .unwrap();
+    compile(&gridswift::apps::moldyn::workflow_source(
+        Path::new("/lib"),
+        Path::new("/out"),
+    ))
+    .unwrap();
+}
+
+#[test]
+fn paper_figure1_parses_verbatim() {
+    // The exact Figure 1 text (types + procedures + mapped datasets),
+    // including procedures whose callees are declared elsewhere — parse
+    // succeeds; typecheck correctly reports the missing procedures.
+    let fig1 = r#"
+type Image {};
+type Header {};
+type Volume { Image img; Header hdr; };
+type Run { Volume v[]; };
+type Air {};
+type AirVector { Air a[]; };
+(Volume ov) reorient (Volume iv, string direction, string overwrite)
+{
+  app {
+    reorient @filename(iv.hdr) @filename(ov.hdr) direction overwrite;
+  }
+}
+(Run or) reorientRun (Run ir, string direction, string overwrite)
+{
+  foreach Volume iv, i in ir.v {
+    or.v[i] = reorient(iv, direction, overwrite);
+  }
+}
+(Run resliced) fmri_wf (Run r) {
+  Run yroRun = reorientRun( r , "y", "n" );
+  Run roRun = reorientRun( yroRun , "x", "n" );
+  Volume std = roRun.v[1];
+  AirVector roAirVec = alignlinearRun(std, roRun, 12, 1000, 1000, "81 3 3");
+  resliced = resliceRun( roRun, roAirVec, "-o", "-k");
+}
+Run bold1<run_mapper;location="fmridc/functional_data/",prefix="bold1">;
+Run sbold1<run_mapper;location="fmridc/functional_data/",prefix="sbold1">;
+sbold1 = fmri_wf(bold1);
+"#;
+    let prog = parse(fig1).unwrap();
+    assert_eq!(prog.types.len(), 6);
+    assert_eq!(prog.procs.len(), 3);
+    let err = compile(fig1).unwrap_err().to_string();
+    assert!(err.contains("alignlinearRun"), "{err}");
+}
+
+#[test]
+fn paper_figure3_montage_excerpt_parses() {
+    let fig3 = r#"
+type Image {};
+type DiffStruct {
+  int cntr1;
+  int cntr2;
+  Image plus;
+  Image minus;
+  Image diff;
+};
+(Table t) mOverlaps (Table p) { app { mOverlaps @filename(p) @filename(t); } }
+(Image diffImg) mDiffFit (Image image1, Image image2) {
+  app { mDiffFit @filename(image1) @filename(image2) @filename(diffImg); }
+}
+Table projImgTbl<file_mapper;file="proj.tbl">;
+Table diffsTbl = mOverlaps ( projImgTbl );
+DiffStruct diffs[]<csv_mapper; file=diffsTbl, skip=1, header=true, hdelim="|">;
+foreach d in diffs {
+  Image image1 = d.plus;
+  Image image2 = d.minus;
+  Image diffImg = mDiffFit(image1, image2);
+}
+"#;
+    let tp = compile(fig3).unwrap();
+    assert_eq!(tp.procs.len(), 2);
+}
+
+#[test]
+fn error_messages_name_the_problem() {
+    let cases: &[(&str, &str)] = &[
+        ("int x = y;", "undeclared"),
+        ("Bogus b;", "unknown type"),
+        ("int x = 1; int x = 2;", "already declared"),
+        ("foreach v in 3 { int a = 1; }", "foreach over non-array"),
+        ("if (1) { int a = 1; }", "must be boolean"),
+        (
+            "type I {};\n(I o) f (I a) { app { f @filename(a) @filename(o); } }\nI x<file_mapper;file=\"x\">;\nI y = f(x, x);",
+            "expects 1 argument",
+        ),
+    ];
+    for (src, needle) in cases {
+        let err = compile(src).unwrap_err().to_string();
+        assert!(
+            err.contains(needle),
+            "error for {src:?} should mention {needle:?}: {err}"
+        );
+    }
+}
+
+#[test]
+fn nested_foreach_and_member_paths() {
+    let src = r#"
+type Image {};
+type Volume { Image img; };
+type Run { Volume v[]; };
+type Study { Run runs[]; };
+(Image o) f (Image i) { app { f @filename(i) @filename(o); } }
+Study s<run_mapper;location="d",prefix="s">;
+foreach r, i in s.runs {
+  foreach vol, j in r.v {
+    Image out = f(vol.img);
+  }
+}
+"#;
+    compile(src).unwrap();
+}
+
+#[test]
+fn comments_and_whitespace_insensitive() {
+    let src = "// header\ntype I {};\n# hash comment\n(I o) f (I i) {\n  app { f @filename(i) @filename(o); }\n}\n";
+    compile(src).unwrap();
+}

@@ -1,0 +1,404 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state). `proptest` is unavailable offline, so a minimal seeded
+//! framework lives at the top: `forall(cases, |rng| ...)` reports the
+//! failing seed for reproduction.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use gridswift::karajan::{ArraySlot, DataFuture, GridScheduler, Slot};
+use gridswift::providers::{AppRunner, AppTask, LocalProvider, Provider};
+use gridswift::sim::driver::{Driver, Mode};
+use gridswift::sim::falkon_model::{DrpPolicy, FalkonConfig};
+use gridswift::sim::lrm::{GramConfig, LrmConfig};
+use gridswift::sim::{Dag, SimTask};
+use gridswift::util::DetRng;
+use gridswift::xdtm::Value;
+
+/// Mini property-test driver: runs `prop` for `cases` derived seeds;
+/// panics with the failing seed.
+fn forall(cases: u64, prop: impl Fn(&mut DetRng)) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let mut rng = DetRng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed for seed {seed:#x} (case {case})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random topologically-ordered DAG.
+fn random_dag(rng: &mut DetRng) -> Dag {
+    let n = 5 + rng.below(60) as usize;
+    let mut dag = Dag::new();
+    for i in 0..n {
+        let mut t = SimTask::new(
+            ["a", "b", "c"][rng.below(3) as usize],
+            0.1 + rng.f64() * 20.0,
+        );
+        // Up to 3 random earlier deps.
+        if i > 0 {
+            let k = rng.below(3) as usize;
+            let mut deps: Vec<usize> =
+                (0..k).map(|_| rng.below(i as u64) as usize).collect();
+            deps.sort_unstable();
+            deps.dedup();
+            t.deps = deps;
+        }
+        dag.push(t);
+    }
+    dag
+}
+
+fn falkon_mode(rng: &mut DetRng) -> Mode {
+    let mut cfg = FalkonConfig::default();
+    cfg.drp = DrpPolicy::static_pool(1 + rng.below(32) as usize);
+    cfg.drp.allocation_latency = 0;
+    Mode::Falkon { cfg }
+}
+
+// ---------------------------------------------------------------------
+// Simulator invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_sim_completes_every_task_exactly_once() {
+    forall(40, |rng| {
+        let dag = random_dag(rng);
+        let n = dag.len();
+        let mode = if rng.f64() < 0.5 {
+            falkon_mode(rng)
+        } else {
+            Mode::GramLrm {
+                lrm: LrmConfig::pbs(1 + rng.below(16) as usize),
+                gram: GramConfig { submit_cost: 10_000, throttle_interval: 0 },
+            }
+        };
+        let o = Driver::new(dag, mode, rng.next_u64()).run();
+        assert_eq!(o.timeline.len(), n, "every task exactly once");
+        let mut ids: Vec<u64> = o.timeline.records.iter().map(|r| r.task_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "no duplicate completions");
+    });
+}
+
+#[test]
+fn prop_sim_timeline_ordering_invariants() {
+    forall(40, |rng| {
+        let dag = random_dag(rng);
+        let o = Driver::new(dag, falkon_mode(rng), rng.next_u64()).run();
+        for r in &o.timeline.records {
+            assert!(r.submitted <= r.started, "submit before start");
+            assert!(r.started <= r.ended, "start before end");
+        }
+        let eff = o.timeline.efficiency(64);
+        assert!((0.0..=1.0).contains(&eff));
+    });
+}
+
+#[test]
+fn prop_sim_dependencies_respected() {
+    forall(30, |rng| {
+        let dag = random_dag(rng);
+        let deps: Vec<Vec<usize>> = dag.tasks.iter().map(|t| t.deps.clone()).collect();
+        let o = Driver::new(dag, falkon_mode(rng), rng.next_u64()).run();
+        let mut end_of = vec![0u64; deps.len()];
+        for r in &o.timeline.records {
+            end_of[r.task_id as usize] = r.ended;
+        }
+        for r in &o.timeline.records {
+            for &d in &deps[r.task_id as usize] {
+                assert!(
+                    end_of[d] <= r.started,
+                    "task {} started at {} before dep {} ended at {}",
+                    r.task_id,
+                    r.started,
+                    d,
+                    end_of[d]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sim_makespan_at_least_critical_path() {
+    forall(30, |rng| {
+        let dag = random_dag(rng);
+        let cp = dag.critical_path_secs();
+        let o = Driver::new(dag, falkon_mode(rng), rng.next_u64()).run();
+        assert!(
+            o.makespan_secs >= cp * 0.999,
+            "makespan {} < critical path {}",
+            o.makespan_secs,
+            cp
+        );
+    });
+}
+
+#[test]
+fn prop_sim_deterministic_for_seed() {
+    forall(10, |rng| {
+        let seed = rng.next_u64();
+        let mk = |s: u64| {
+            let mut r = DetRng::new(s);
+            let dag = random_dag(&mut r);
+            Driver::new(dag, falkon_mode(&mut r), s).run()
+        };
+        let a = mk(seed);
+        let b = mk(seed);
+        assert_eq!(a.makespan_secs, b.makespan_secs);
+        assert_eq!(a.timeline.len(), b.timeline.len());
+    });
+}
+
+#[test]
+fn prop_lrm_never_exceeds_processor_capacity() {
+    forall(25, |rng| {
+        let procs = 2 * (1 + rng.below(8) as usize); // dual-proc nodes
+        let dag = Dag::bag(30 + rng.below(50) as usize, "t", 1.0 + rng.f64() * 5.0);
+        let o = Driver::new(
+            dag,
+            Mode::GramLrm {
+                lrm: LrmConfig::pbs(procs / 2),
+                gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+            },
+            rng.next_u64(),
+        )
+        .run();
+        // Sweep concurrency.
+        let mut events: Vec<(u64, i32)> = Vec::new();
+        for r in &o.timeline.records {
+            events.push((r.started, 1));
+            events.push((r.ended, -1));
+        }
+        events.sort();
+        let mut cur = 0i32;
+        for (_, d) in events {
+            cur += d;
+            assert!(cur as usize <= procs, "concurrency {cur} > procs {procs}");
+        }
+    });
+}
+
+#[test]
+fn prop_falkon_executor_runs_one_task_at_a_time() {
+    forall(25, |rng| {
+        let dag = random_dag(rng);
+        let o = Driver::new(dag, falkon_mode(rng), rng.next_u64()).run();
+        // Group by executor; intervals must not overlap.
+        let mut by_exec: std::collections::BTreeMap<u64, Vec<(u64, u64)>> =
+            Default::default();
+        for r in &o.timeline.records {
+            by_exec.entry(r.executor).or_default().push((r.started, r.ended));
+        }
+        for (exec, mut spans) in by_exec {
+            spans.sort();
+            for w in spans.windows(2) {
+                assert!(
+                    w[0].1 <= w[1].0,
+                    "executor {exec} overlap: {:?} then {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Scheduler (real) invariants: routing, batching, retry state
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_completion_exactly_once_under_random_failures() {
+    forall(12, |rng| {
+        // Tasks fail pseudo-randomly but fewer times than the retry
+        // budget, so every submission eventually succeeds exactly once.
+        let fail_budget: Arc<Mutex<std::collections::HashMap<u64, u32>>> =
+            Arc::new(Mutex::new(Default::default()));
+        let n = 20 + rng.below(40);
+        {
+            let mut fb = fail_budget.lock().unwrap();
+            for i in 0..n {
+                fb.insert(i, rng.below(3) as u32); // 0..2 failures each
+            }
+        }
+        let fb = Arc::clone(&fail_budget);
+        let runner: AppRunner = Arc::new(move |t: &AppTask| {
+            let mut g = fb.lock().unwrap();
+            let left = g.get_mut(&t.id).unwrap();
+            if *left > 0 {
+                *left -= 1;
+                anyhow::bail!("injected")
+            }
+            Ok(())
+        });
+        let p: Arc<dyn Provider> = Arc::new(LocalProvider::new("a", 4, runner));
+        let sched = GridScheduler::new(vec![p], None, 3, rng.next_u64());
+        let done = Arc::new(AtomicUsize::new(0));
+        let ok = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..n {
+            let done = Arc::clone(&done);
+            let ok = Arc::clone(&ok);
+            let tx = tx.clone();
+            sched.submit(
+                AppTask {
+                    id: i,
+                    key: format!("k{i}"),
+                    executable: "x".into(),
+                    args: vec![],
+                    inputs: vec![],
+                    outputs: vec![],
+                },
+                Box::new(move |r| {
+                    done.fetch_add(1, Ordering::SeqCst);
+                    if r.ok {
+                        ok.fetch_add(1, Ordering::SeqCst);
+                    }
+                    let _ = tx.send(());
+                }),
+            );
+        }
+        for _ in 0..n {
+            rx.recv_timeout(std::time::Duration::from_secs(20)).unwrap();
+        }
+        assert_eq!(done.load(Ordering::SeqCst) as u64, n, "one completion each");
+        assert_eq!(ok.load(Ordering::SeqCst) as u64, n, "all eventually succeed");
+        assert_eq!(sched.in_flight(), 0);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Dataflow substrate invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_future_single_assignment_race() {
+    forall(20, |rng| {
+        let f = DataFuture::new();
+        let winners = Arc::new(AtomicUsize::new(0));
+        let threads = 2 + rng.below(6) as usize;
+        let handles: Vec<_> = (0..threads)
+            .map(|i| {
+                let f = f.clone();
+                let w = Arc::clone(&winners);
+                std::thread::spawn(move || {
+                    if f.set(Value::Int(i as i64)).is_ok() {
+                        w.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(winners.load(Ordering::SeqCst), 1, "exactly one setter wins");
+        assert!(f.try_get().is_some());
+    });
+}
+
+#[test]
+fn prop_array_subscribers_see_each_element_exactly_once() {
+    forall(30, |rng| {
+        let a = Arc::new(ArraySlot::new());
+        let n = 1 + rng.below(40) as usize;
+        // Random interleaving: subscribe at a random point.
+        let sub_at = rng.below(n as u64 + 1) as usize;
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let closed = Arc::new(AtomicUsize::new(0));
+        let mut subscribed = false;
+        for i in 0..n {
+            if i == sub_at {
+                let s = Arc::clone(&seen);
+                let c = Arc::clone(&closed);
+                a.subscribe(
+                    Box::new(move |idx, _| s.lock().unwrap().push(idx)),
+                    Box::new(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    }),
+                );
+                subscribed = true;
+            }
+            a.insert(i, Slot::ready(Value::Int(i as i64))).unwrap();
+        }
+        if !subscribed {
+            let s = Arc::clone(&seen);
+            let c = Arc::clone(&closed);
+            a.subscribe(
+                Box::new(move |idx, _| s.lock().unwrap().push(idx)),
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }),
+            );
+        }
+        a.close();
+        let mut got = seen.lock().unwrap().clone();
+        got.sort_unstable();
+        assert_eq!(got, (0..n).collect::<Vec<_>>(), "each element exactly once");
+        assert_eq!(closed.load(Ordering::SeqCst), 1, "close fires once");
+    });
+}
+
+#[test]
+fn prop_dag_generators_always_valid() {
+    forall(20, |rng| {
+        let v = 1 + rng.below(50) as usize;
+        let fmri = Dag::fmri(v, [1.0, 2.0, 3.0, 4.0], rng);
+        assert!(fmri.validate());
+        assert_eq!(fmri.len(), 4 * v);
+        let m = 1 + rng.below(5) as usize;
+        let mol = Dag::moldyn(m, rng);
+        assert!(mol.validate());
+        assert_eq!(mol.len(), 1 + 84 * m);
+        let plates = 2 + rng.below(30) as usize;
+        let overlaps = rng.below(80) as usize;
+        let montage = Dag::montage(plates, overlaps, 4, rng);
+        assert!(montage.validate());
+    });
+}
+
+#[test]
+fn prop_lexer_never_panics_on_garbage() {
+    forall(60, |rng| {
+        let len = rng.below(200) as usize;
+        let charset: Vec<char> =
+            "abc123{}()[]<>;,.=@\"\\+-*/ \n\t_#".chars().collect();
+        let src: String = (0..len)
+            .map(|_| charset[rng.below(charset.len() as u64) as usize])
+            .collect();
+        // Must return Ok or Err, never panic.
+        let _ = gridswift::swiftscript::parse(&src);
+    });
+}
+
+#[test]
+fn prop_parser_roundtrips_generated_programs() {
+    forall(30, |rng| {
+        // Generate a random but well-formed program from a tiny grammar.
+        let ntypes = 1 + rng.below(3);
+        let mut src = String::new();
+        for t in 0..ntypes {
+            src.push_str(&format!("type T{t} {{}};\n"));
+        }
+        src.push_str("(T0 o) f (T0 i, int n) { app { f @filename(i) n @filename(o); } }\n");
+        let nvars = 1 + rng.below(4);
+        for v in 0..nvars {
+            src.push_str(&format!(
+                "T0 x{v}<file_mapper;file=\"/tmp/x{v}\">;\n"
+            ));
+        }
+        for v in 0..nvars {
+            src.push_str(&format!("T0 y{v} = f(x{v}, {});\n", rng.below(100)));
+        }
+        let prog = gridswift::swiftscript::compile(&src)
+            .unwrap_or_else(|e| panic!("generated program must compile: {e:#}\n{src}"));
+        assert_eq!(prog.procs.len(), 1);
+    });
+}
