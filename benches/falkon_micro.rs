@@ -8,16 +8,28 @@
 //! scaling; the 54K-executor and 1.5M-queue points run on the
 //! virtual-time model (54K OS threads is not a one-box experiment) with
 //! memory accounting.
+//!
+//! Machine-readable output: writes `BENCH_dispatch.json` (tasks/s for
+//! the single-submit and batched-submit paths, p50/p99 dispatch latency,
+//! core count) so later PRs can track dispatch-core regressions.
+//!
+//! `--quick` shrinks task counts and skips the 512-executor and
+//! paper-scale sections (CI smoke mode).
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use gridswift::falkon::service::TaskDone;
 use gridswift::falkon::{FalkonService, FalkonServiceConfig, RealDrpPolicy};
 use gridswift::metrics::Table;
 use gridswift::providers::AppTask;
 use gridswift::sim::falkon_model::{DrpPolicy, FalkonConfig, FalkonSim};
+use gridswift::util::json::Json;
 use gridswift::util::mem::rss_bytes;
 
+// Same task shape as the seed benchmark (including the per-task key
+// allocation on the submit side) so tasks/s stays comparable across
+// revisions of the dispatch core.
 fn task(id: u64) -> AppTask {
     AppTask {
         id,
@@ -29,116 +41,217 @@ fn task(id: u64) -> AppTask {
     }
 }
 
-fn throughput(executors: usize, n: u64) -> f64 {
-    let svc = FalkonService::start(
-        FalkonServiceConfig {
-            drp: RealDrpPolicy::static_pool(executors),
-            executor_overhead: std::time::Duration::ZERO,
-        },
-        Arc::new(|_t: &AppTask| Ok(())),
-    );
+/// One throughput run: returns (tasks/s, sorted dispatch waits in us).
+struct RunStats {
+    rate: f64,
+    waits_us: Vec<u64>,
+}
+
+impl RunStats {
+    fn percentile(&self, p: f64) -> u64 {
+        if self.waits_us.is_empty() {
+            return 0;
+        }
+        let idx = ((self.waits_us.len() - 1) as f64 * p).round() as usize;
+        self.waits_us[idx]
+    }
+}
+
+fn run_single(svc: &FalkonService, n: u64) -> RunStats {
     let (tx, rx) = std::sync::mpsc::channel();
     let t0 = Instant::now();
     for i in 0..n {
         let tx = tx.clone();
         svc.submit(task(i), Box::new(move |r| {
-            let _ = tx.send(r.ok);
+            let _ = tx.send(r.wait_us);
         }));
     }
+    let mut waits_us: Vec<u64> = Vec::with_capacity(n as usize);
     for _ in 0..n {
-        rx.recv().unwrap();
+        waits_us.push(rx.recv().unwrap());
     }
-    n as f64 / t0.elapsed().as_secs_f64()
+    let rate = n as f64 / t0.elapsed().as_secs_f64();
+    waits_us.sort_unstable();
+    RunStats { rate, waits_us }
 }
 
-fn main() {
-    println!("== Falkon microbenchmarks (paper §4) ==\n");
-
-    // 1. Sustained dispatch throughput (real clock).
-    println!("-- dispatch throughput (sleep-0 tasks, real clock) --");
-    let mut t = Table::new(&["Executors", "tasks/s (ours)", "paper"]);
-    for execs in [1usize, 2, 4, 8, 16] {
-        let rate = throughput(execs, 50_000);
-        t.row(&[
-            execs.to_string(),
-            format!("{rate:.0}"),
-            if execs == 4 { "487 (sustained)" } else { "-" }.to_string(),
-        ]);
+fn run_batched(svc: &FalkonService, n: u64, chunk: u64) -> RunStats {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t0 = Instant::now();
+    let mut i = 0u64;
+    while i < n {
+        let hi = (i + chunk).min(n);
+        let batch: Vec<(AppTask, TaskDone)> = (i..hi)
+            .map(|id| {
+                let tx = tx.clone();
+                let done: TaskDone = Box::new(move |r| {
+                    let _ = tx.send(r.wait_us);
+                });
+                (task(id), done)
+            })
+            .collect();
+        svc.submit_batch(batch);
+        i = hi;
     }
-    t.print();
+    let mut waits_us: Vec<u64> = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        waits_us.push(rx.recv().unwrap());
+    }
+    let rate = n as f64 / t0.elapsed().as_secs_f64();
+    waits_us.sort_unstable();
+    RunStats { rate, waits_us }
+}
 
-    // 2. Real executor scaling on this box.
-    println!("\n-- real executor registry scaling --");
-    let before = rss_bytes().unwrap_or(0);
-    let svc = FalkonService::start(
+fn service(executors: usize) -> Arc<FalkonService> {
+    FalkonService::start(
         FalkonServiceConfig {
-            drp: RealDrpPolicy::static_pool(512),
+            drp: RealDrpPolicy::static_pool(executors),
             executor_overhead: std::time::Duration::ZERO,
         },
         Arc::new(|_t: &AppTask| Ok(())),
-    );
-    while svc.live_executors() < 512 {
-        std::thread::sleep(std::time::Duration::from_millis(5));
+    )
+}
+
+fn throughput(executors: usize, n: u64) -> RunStats {
+    let svc = service(executors);
+    run_single(&svc, n)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n: u64 = if quick { 10_000 } else { 50_000 };
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    println!("== Falkon microbenchmarks (paper §4) ==");
+    println!("   {cores} cores, {n} tasks per point{}\n", if quick { " (quick)" } else { "" });
+
+    // 1. Sustained dispatch throughput (real clock).
+    println!("-- dispatch throughput (sleep-0 tasks, real clock) --");
+    let mut report = Json::obj();
+    report.set("bench", "falkon_micro");
+    report.set("cores", cores);
+    report.set("quick", quick);
+    report.set("n_tasks", n);
+    report.set("paper_tasks_per_s", 487u64);
+    let mut per_exec = Vec::new();
+    let mut t = Table::new(&["Executors", "tasks/s (ours)", "p50 us", "p99 us", "paper"]);
+    let mut headline: Option<RunStats> = None;
+    for execs in [1usize, 2, 4, 8, 16] {
+        let stats = throughput(execs, n);
+        t.row(&[
+            execs.to_string(),
+            format!("{:.0}", stats.rate),
+            stats.percentile(0.50).to_string(),
+            stats.percentile(0.99).to_string(),
+            if execs == 4 { "487 (sustained)" } else { "-" }.to_string(),
+        ]);
+        let mut point = Json::obj();
+        point.set("executors", execs);
+        point.set("tasks_per_s", stats.rate);
+        point.set("p50_dispatch_us", stats.percentile(0.50));
+        point.set("p99_dispatch_us", stats.percentile(0.99));
+        per_exec.push(point);
+        if execs == 4 {
+            headline = Some(stats);
+        }
     }
-    let after = rss_bytes().unwrap_or(0);
+    t.print();
+    let headline = headline.expect("4-executor point");
+    let mut single = Json::obj();
+    single.set("executors", 4u64);
+    single.set("tasks_per_s", headline.rate);
+    single.set("p50_dispatch_us", headline.percentile(0.50));
+    single.set("p99_dispatch_us", headline.percentile(0.99));
+    report.set("single_submit", single);
+    report.set("per_executor", Json::Arr(per_exec));
+
+    // 2. Batched submit/complete path (one lock + wakeup per bundle).
+    println!("\n-- batched submit path (chunks of 1024) --");
+    let svc = service(4);
+    let batched = run_batched(&svc, n, 1024);
     println!(
-        "  512 live executor threads; ~{:.1} KB RSS each",
-        (after.saturating_sub(before)) as f64 / 512.0 / 1024.0
+        "  {:.0} tasks/s, p50 {} us, p99 {} us ({:.1}x the single-submit path)",
+        batched.rate,
+        batched.percentile(0.50),
+        batched.percentile(0.99),
+        batched.rate / headline.rate,
     );
-    let rate = {
-        let (tx, rx) = std::sync::mpsc::channel();
-        let n = 50_000u64;
-        let t0 = Instant::now();
-        for i in 0..n {
-            let tx = tx.clone();
-            svc.submit(task(i), Box::new(move |r| {
-                let _ = tx.send(r.ok);
-            }));
-        }
-        for _ in 0..n {
-            rx.recv().unwrap();
-        }
-        n as f64 / t0.elapsed().as_secs_f64()
-    };
-    println!("  dispatch rate with 512 executors: {rate:.0} tasks/s");
+    let mut b = Json::obj();
+    b.set("executors", 4u64);
+    b.set("chunk", 1024u64);
+    b.set("tasks_per_s", batched.rate);
+    b.set("p50_dispatch_us", batched.percentile(0.50));
+    b.set("p99_dispatch_us", batched.percentile(0.99));
+    report.set("batched_submit", b);
     drop(svc);
 
-    // 3. Paper-scale registry + queue (virtual-time model + memory).
-    println!("\n-- paper-scale capacity (model) --");
-    let before = rss_bytes().unwrap_or(0);
-    let mut sim = FalkonSim::new(FalkonConfig {
-        dispatch_cost: 2053,
-        executor_overhead: 45_000,
-        drp: DrpPolicy::static_pool(54_000),
-    });
-    sim.register(54_000, 0);
-    for i in 0..1_500_000usize {
-        sim.submit(i);
-    }
-    let after = rss_bytes().unwrap_or(0);
-    println!(
-        "  54,000 executors registered + 1,500,000 tasks queued (paper: 54K / 1.5M)"
-    );
-    println!(
-        "  state fits in {:.0} MB ({} peak queue, {} executors)",
-        (after.saturating_sub(before)) as f64 / 1e6,
-        sim.peak_queue,
-        sim.live_executors(),
-    );
-    // Drain a slice in virtual time to show the dispatcher at scale.
-    let mut now = 0u64;
-    let mut dispatched = 0u64;
-    while dispatched < 100_000 {
-        if let Some((exec, _task, start)) = sim.try_dispatch(now) {
-            now = start;
-            sim.finish(exec, now, 0);
-            dispatched += 1;
-        } else {
-            break;
+    if !quick {
+        // 3. Real executor scaling on this box.
+        println!("\n-- real executor registry scaling --");
+        let before = rss_bytes().unwrap_or(0);
+        let svc = service(512);
+        while svc.live_executors() < 512 {
+            std::thread::sleep(std::time::Duration::from_millis(5));
         }
+        let after = rss_bytes().unwrap_or(0);
+        println!(
+            "  512 live executor threads; ~{:.1} KB RSS each",
+            (after.saturating_sub(before)) as f64 / 512.0 / 1024.0
+        );
+        let stats = run_single(&svc, n);
+        println!("  dispatch rate with 512 executors: {:.0} tasks/s", stats.rate);
+        report.set("executors_512_tasks_per_s", stats.rate);
+        drop(svc);
+
+        // 4. Paper-scale registry + queue (virtual-time model + memory).
+        println!("\n-- paper-scale capacity (model) --");
+        let before = rss_bytes().unwrap_or(0);
+        let mut sim = FalkonSim::new(FalkonConfig {
+            dispatch_cost: 2053,
+            executor_overhead: 45_000,
+            drp: DrpPolicy::static_pool(54_000),
+        });
+        sim.register(54_000, 0);
+        for i in 0..1_500_000usize {
+            sim.submit(i);
+        }
+        let after = rss_bytes().unwrap_or(0);
+        println!(
+            "  54,000 executors registered + 1,500,000 tasks queued (paper: 54K / 1.5M)"
+        );
+        println!(
+            "  state fits in {:.0} MB ({} peak queue, {} executors)",
+            (after.saturating_sub(before)) as f64 / 1e6,
+            sim.peak_queue,
+            sim.live_executors(),
+        );
+        // Drain a slice in virtual time to show the dispatcher at scale.
+        let mut now = 0u64;
+        let mut dispatched = 0u64;
+        while dispatched < 100_000 {
+            if let Some((exec, _task, start)) = sim.try_dispatch(now) {
+                now = start;
+                sim.finish(exec, now, 0);
+                dispatched += 1;
+            } else {
+                break;
+            }
+        }
+        println!(
+            "  model dispatch of 100K tasks at calibrated 2.053ms/task = {:.0} tasks/s sustained",
+            dispatched as f64 / (now as f64 / 1e6)
+        );
     }
-    println!(
-        "  model dispatch of 100K tasks at calibrated 2.053ms/task = {:.0} tasks/s sustained",
-        dispatched as f64 / (now as f64 / 1e6)
-    );
+
+    let out = report.render();
+    std::fs::write("BENCH_dispatch.json", &out).expect("write BENCH_dispatch.json");
+    println!("\nwrote BENCH_dispatch.json");
+    let floor = 10_000.0;
+    if headline.rate < floor {
+        println!(
+            "WARNING: single-submit rate {:.0} tasks/s below the {floor:.0}/s target",
+            headline.rate
+        );
+    }
 }

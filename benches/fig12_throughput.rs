@@ -13,6 +13,7 @@ use std::time::Instant;
 use gridswift::apps::AppRegistry;
 use gridswift::falkon::{FalkonClient, FalkonService, FalkonServiceConfig, FalkonTcpServer, RealDrpPolicy};
 use gridswift::metrics::Table;
+use gridswift::util::json::Json;
 use gridswift::providers::AppTask;
 use gridswift::sim::driver::{Driver, Mode};
 use gridswift::sim::lrm::{GramConfig, LrmConfig};
@@ -122,11 +123,14 @@ fn gram_pbs_sim(n: usize) -> f64 {
 }
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     println!("== Figure 12: Swift/Falkon sleep(0) throughput ==\n");
-    let inproc = direct_inproc(20_000);
-    let tcp = direct_tcp(20_000);
-    let swift = via_swift(4_000);
-    let gram = gram_pbs_sim(500);
+    let (n_direct, n_swift, n_gram) =
+        if quick { (5_000, 1_000, 200) } else { (20_000, 4_000, 500) };
+    let inproc = direct_inproc(n_direct);
+    let tcp = direct_tcp(n_direct);
+    let swift = via_swift(n_swift);
+    let gram = gram_pbs_sim(n_gram);
 
     let mut t = Table::new(&["Path", "tasks/s (ours)", "paper"]);
     t.row(&[
@@ -160,4 +164,25 @@ fn main() {
         "  Swift+Falkon vs GRAM+PBS: {:.0}x faster (paper: 23x)",
         swift / gram
     );
+
+    // Machine-readable dump for regression tracking across PRs.
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let mut report = Json::obj();
+    report.set("bench", "fig12_throughput");
+    report.set("cores", cores);
+    report.set("quick", quick);
+    report.set("n_direct", n_direct);
+    report.set("n_swift", n_swift);
+    report.set("n_gram", n_gram);
+    report.set("falkon_inproc_tasks_per_s", inproc);
+    report.set("falkon_tcp_tasks_per_s", tcp);
+    report.set("swift_falkon_tasks_per_s", swift);
+    report.set("gram_pbs_sim_tasks_per_s", gram);
+    report.set("paper_falkon_direct_tasks_per_s", 120u64);
+    report.set("paper_swift_falkon_lan_tasks_per_s", 56u64);
+    std::fs::write("BENCH_fig12.json", report.render())
+        .expect("write BENCH_fig12.json");
+    println!("\nwrote BENCH_fig12.json");
 }

@@ -4,6 +4,8 @@
 //! Falkon separates *resource provisioning* (acquiring executors) from
 //! *task dispatch* (mapping queued tasks to acquired executors):
 //!
+//! - [`queue`] — the sharded, work-stealing service queue the dispatch
+//!   core runs on (batched push/pop, targeted wakeups).
 //! - [`service`] — the execution service: service queue, streamlined
 //!   dispatcher, executor registry, DRP manager thread.
 //! - [`provider`] — the Karajan [`crate::providers::Provider`] adapter
@@ -17,8 +19,10 @@
 
 pub mod protocol;
 pub mod provider;
+pub mod queue;
 pub mod service;
 
 pub use protocol::{FalkonClient, FalkonTcpServer};
 pub use provider::FalkonProvider;
+pub use queue::ShardedQueue;
 pub use service::{FalkonService, FalkonServiceConfig, RealDrpPolicy, ServiceStats};

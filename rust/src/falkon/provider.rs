@@ -2,9 +2,9 @@
 //! [`Provider`] interface (paper §5.3: "submitting jobs to the Falkon
 //! service via the Falkon provider that we developed").
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use crate::providers::{AppTask, BundleDone, Provider, TaskResult};
+use crate::providers::{AppTask, BundleDone, Provider};
 
 use super::service::FalkonService;
 
@@ -31,41 +31,10 @@ impl Provider for FalkonProvider {
 
     fn submit(&self, bundle: Vec<AppTask>, done: BundleDone) {
         // Falkon's fine-grained dispatch makes clustering unnecessary
-        // (paper §3.13), but the provider interface allows bundles:
-        // submit each task individually and aggregate completions.
-        let n = bundle.len();
-        if n == 0 {
-            done(Vec::new());
-            return;
-        }
-        struct Agg {
-            results: Vec<Option<TaskResult>>,
-            remaining: usize,
-            done: Option<BundleDone>,
-        }
-        let agg = Arc::new(Mutex::new(Agg {
-            results: (0..n).map(|_| None).collect(),
-            remaining: n,
-            done: Some(done),
-        }));
-        for (i, task) in bundle.into_iter().enumerate() {
-            let agg = Arc::clone(&agg);
-            self.service.submit(
-                task,
-                Box::new(move |r| {
-                    let mut a = agg.lock().unwrap();
-                    a.results[i] = Some(r);
-                    a.remaining -= 1;
-                    if a.remaining == 0 {
-                        let results =
-                            a.results.drain(..).map(|r| r.unwrap()).collect();
-                        let done = a.done.take().unwrap();
-                        drop(a);
-                        done(results);
-                    }
-                }),
-            );
-        }
+        // (paper §3.13), but the provider interface allows bundles: the
+        // service enqueues the whole bundle with one batched queue
+        // operation and aggregates completions in submission order.
+        self.service.submit_bundle(bundle, done);
     }
 
     fn slots(&self) -> usize {

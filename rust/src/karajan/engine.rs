@@ -26,7 +26,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::future::{link_slots, ArraySlot, Cont, ControlSink, DataFuture, Slot};
 use super::restart::RestartLog;
-use super::scheduler::GridScheduler;
+use super::scheduler::{GridScheduler, TaskDone};
 use crate::providers::AppTask;
 use crate::swiftscript::ast::*;
 use crate::swiftscript::TypedProgram;
@@ -153,6 +153,10 @@ struct Interp {
     skipped: AtomicU64,
     failed: Mutex<Option<String>>,
     restart: Option<RestartLog>,
+    /// Tasks whose inputs materialized during the current control-queue
+    /// drain; flushed to the scheduler as one batched submit so the
+    /// scheduler lock is taken once per drain, not once per task.
+    submit_buf: Mutex<Vec<(AppTask, TaskDone)>>,
 }
 
 impl Engine {
@@ -186,6 +190,7 @@ impl Engine {
             skipped: AtomicU64::new(0),
             failed: Mutex::new(None),
             restart,
+            submit_buf: Mutex::new(Vec::new()),
         });
 
         // Instantiate the global program on the control thread.
@@ -201,36 +206,45 @@ impl Engine {
             }));
         }
 
-        // Control loop: run lightweight tasks until quiescent. On
-        // failure, stop once in-flight provider work drains (joins for
-        // downstream tasks will never fire; don't wait for them).
+        // Control loop: run lightweight tasks until quiescent. Each pass
+        // drains every queued continuation under a single lock, runs them,
+        // then flushes the buffered task submissions as one batched
+        // scheduler pass. On failure, stop once in-flight provider work
+        // drains (joins for downstream tasks will never fire; don't wait
+        // for them).
+        let mut run_batch: Vec<Cont> = Vec::new();
         loop {
-            let cont = {
+            {
                 let mut q = queue.q.lock().unwrap();
-                loop {
-                    if let Some(c) = q.pop_front() {
-                        break Some(c);
-                    }
-                    if interp.outstanding.load(Ordering::SeqCst) == 0 {
-                        break None;
-                    }
-                    if interp.failed.lock().unwrap().is_some()
-                        && self.sched.in_flight() == 0
-                    {
-                        break None;
-                    }
-                    let (g, timeout) = queue
-                        .cv
-                        .wait_timeout(q, std::time::Duration::from_millis(50))
-                        .unwrap_or_else(|e| e.into_inner());
-                    q = g;
-                    let _ = timeout;
+                while let Some(c) = q.pop_front() {
+                    run_batch.push(c);
                 }
-            };
-            match cont {
-                Some(c) => c(),
-                None => break,
             }
+            if !run_batch.is_empty() {
+                for c in run_batch.drain(..) {
+                    c();
+                }
+                interp.flush_submits();
+                continue;
+            }
+            // Nothing runnable: make sure no submission is stranded in
+            // the buffer before deciding to wait or exit.
+            interp.flush_submits();
+            let q = queue.q.lock().unwrap();
+            if !q.is_empty() {
+                continue;
+            }
+            if interp.outstanding.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            if interp.failed.lock().unwrap().is_some() && self.sched.in_flight() == 0
+            {
+                break;
+            }
+            let _ = queue
+                .cv
+                .wait_timeout(q, std::time::Duration::from_millis(50))
+                .unwrap_or_else(|e| e.into_inner());
         }
 
         if let Some(err) = interp.failed.lock().unwrap().clone() {
@@ -260,6 +274,19 @@ impl Interp {
         let mut f = self.failed.lock().unwrap();
         if f.is_none() {
             *f = Some(msg);
+        }
+    }
+
+    /// Queue a ready task for the next batched scheduler submit.
+    fn buffer_submit(&self, task: AppTask, done: TaskDone) {
+        self.submit_buf.lock().unwrap().push((task, done));
+    }
+
+    /// Hand all buffered tasks to the scheduler in one pass.
+    fn flush_submits(&self) {
+        let batch = std::mem::take(&mut *self.submit_buf.lock().unwrap());
+        if !batch.is_empty() {
+            self.sched.submit_batch(batch);
         }
     }
 
@@ -799,7 +826,7 @@ impl Interp {
                     let outs = out_slots2.clone();
                     let proc3 = proc2.clone();
                     let key = call_path2.clone();
-                    interp.sched.submit(
+                    interp.buffer_submit(
                         task,
                         Box::new(move |result| {
                             // Back on a provider thread: post to control.

@@ -16,4 +16,4 @@ pub mod scheduler;
 pub use engine::{Engine, EngineConfig, RunReport};
 pub use future::{ArraySlot, DataFuture, Slot};
 pub use restart::RestartLog;
-pub use scheduler::{ClusterPolicy, GridScheduler};
+pub use scheduler::{ClusterPolicy, FaultPolicy, GridScheduler};

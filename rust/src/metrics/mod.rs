@@ -8,4 +8,4 @@ pub mod timeline;
 
 pub use stats::{efficiency, mean, speedup, stddev};
 pub use table::Table;
-pub use timeline::{TaskRecord, Timeline};
+pub use timeline::{TaskRecord, Timeline, TimelineSink};

@@ -126,6 +126,10 @@ pub struct Driver {
     gram_free_at: Vec<Micros>,
     falkon: Option<FalkonSim>,
     falkon_task_exec: HashMap<usize, usize>,
+    /// A FalkonDispatch event is already queued: submits and completions
+    /// coalesce onto it instead of flooding the heap with one dispatch
+    /// event per task.
+    falkon_dispatch_queued: bool,
     cluster_buf: Vec<usize>,
     cluster_deadline_set: bool,
     /// Multi-site mode: centrally pending tasks + per-site outstanding
@@ -194,6 +198,7 @@ impl Driver {
             gram_free_at: vec![0; nsites],
             falkon,
             falkon_task_exec: HashMap::new(),
+            falkon_dispatch_queued: false,
             cluster_buf: Vec::new(),
             cluster_deadline_set: false,
             pending_multisite: std::collections::VecDeque::new(),
@@ -227,15 +232,23 @@ impl Driver {
         if self.falkon.is_some() {
             self.q.at(0, Event::DrpCheck { falkon: 0 });
         }
+        // Batch-pop all events sharing a timestamp: one heap interaction
+        // per virtual instant instead of one per event. Events scheduled
+        // *during* a batch (at the same timestamp) form the next batch,
+        // preserving the seq-FIFO semantics of per-event popping.
+        let mut batch: Vec<Event> = Vec::new();
         while self.n_done < self.dag.len() {
-            let Some((now, ev)) = self.q.pop() else {
+            if self.q.pop_batch(&mut batch).is_none() {
                 panic!(
                     "simulation deadlock: {} of {} tasks done",
                     self.n_done,
                     self.dag.len()
                 );
-            };
-            self.handle(now, ev);
+            }
+            for ev in batch.drain(..) {
+                let now = self.q.now();
+                self.handle(now, ev);
+            }
         }
         self.run_end = self.q.now();
         self.finish()
@@ -311,7 +324,10 @@ impl Driver {
                 }
                 self.q.at(now, Event::LrmCycle { site });
             }
-            Event::FalkonDispatch { .. } => self.on_falkon_dispatch(now),
+            Event::FalkonDispatch { .. } => {
+                self.falkon_dispatch_queued = false;
+                self.on_falkon_dispatch(now);
+            }
             Event::FalkonTaskDone { exec, task, .. } => {
                 // Output staging through the FS if configured.
                 let out_bytes = self.dag.tasks[task].output_bytes;
@@ -330,7 +346,7 @@ impl Driver {
                 if let Some(f) = self.falkon.as_mut() {
                     f.register(count, now);
                 }
-                self.q.at(now, Event::FalkonDispatch { falkon: 0 });
+                self.queue_falkon_dispatch(now);
             }
             Event::ExecutorIdle { .. } => { /* handled in DrpCheck */ }
             Event::ClusterFlush => {
@@ -368,7 +384,7 @@ impl Driver {
             Mode::Falkon { .. } => {
                 let f = self.falkon.as_mut().unwrap();
                 f.submit(task);
-                self.q.at(now, Event::FalkonDispatch { falkon: 0 });
+                self.queue_falkon_dispatch(now);
             }
             Mode::MultiSite { .. } => {
                 // Tasks wait centrally; score-sized per-site windows pull
@@ -499,13 +515,23 @@ impl Driver {
         }
     }
 
+    /// Schedule a dispatcher pass unless one is already pending — the
+    /// dispatch loop drains everything it can, so one event per virtual
+    /// instant suffices no matter how many submits/completions occur.
+    fn queue_falkon_dispatch(&mut self, now: Micros) {
+        if !self.falkon_dispatch_queued {
+            self.falkon_dispatch_queued = true;
+            self.q.at(now, Event::FalkonDispatch { falkon: 0 });
+        }
+    }
+
     fn falkon_task_finished(&mut self, now: Micros, exec: usize, task: usize) {
         let busy = now.saturating_sub(self.start_time[task]);
         if let Some(f) = self.falkon.as_mut() {
             f.finish(exec, now, busy);
         }
         self.complete_task(now, task);
-        self.q.at(now, Event::FalkonDispatch { falkon: 0 });
+        self.queue_falkon_dispatch(now);
     }
 
     fn on_drp_check(&mut self, now: Micros) {

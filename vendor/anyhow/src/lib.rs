@@ -1,0 +1,269 @@
+//! Offline-buildable subset of the `anyhow` error-handling API.
+//!
+//! The build environment for this repository has no network access to
+//! crates.io, so the handful of `anyhow` features the codebase uses are
+//! vendored here behind the same names: [`Error`], [`Result`], the
+//! [`anyhow!`], [`bail!`] and [`ensure!`] macros, and the [`Context`]
+//! extension trait for `Result` and `Option`.
+//!
+//! Error values are stored as a flattened context chain of strings:
+//! `Display` prints the outermost message, `{:#}` prints the whole chain
+//! separated by `": "` (matching anyhow's alternate formatting, which the
+//! codebase relies on when rendering task failures), and `Debug` prints
+//! the chain in anyhow's `Caused by:` layout.
+
+use std::fmt;
+
+/// `Result` with a defaulted error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chain error type mirroring the parts of `anyhow::Error` the
+/// repository uses.
+pub struct Error {
+    /// Outermost message first; each added context pushes to the front.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Construct from a standard error, capturing its source chain.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut chain = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, outermost first.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+mod ext {
+    use super::Error;
+
+    /// Private conversion trait so [`super::Context`] works uniformly on
+    /// `Result<T, E: std::error::Error>` and `Result<T, Error>` (the same
+    /// device real anyhow uses; `Error` itself does not implement
+    /// `std::error::Error`, so the impls do not overlap).
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> Error {
+            Error::new(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, like `anyhow::Context`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| ext::IntoError::into_error(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| ext::IntoError::into_error(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string, like `anyhow::anyhow!`.
+///
+/// Tokens are forwarded verbatim to `format!`, so positional arguments
+/// and inline captures (`anyhow!("missing {name}")`) behave exactly as
+/// they do in `format!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($($arg)+))
+    };
+}
+
+/// Early-return with an error, like `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Assert a condition, early-returning an error on failure, like
+/// `anyhow::ensure!`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = fails().unwrap_err().context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+    }
+
+    #[test]
+    fn context_on_io_error() {
+        let r: Result<String> =
+            std::fs::read_to_string("/definitely/not/here").context("reading config");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").starts_with("reading config: "));
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing x");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn go() -> Result<u32> {
+            let n: u32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(go().is_err());
+    }
+
+    #[test]
+    fn ensure_formats_message() {
+        fn go(n: u32) -> Result<()> {
+            ensure!(n > 3, "n too small: {n}");
+            Ok(())
+        }
+        assert!(go(5).is_ok());
+        assert_eq!(format!("{}", go(1).unwrap_err()), "n too small: 1");
+    }
+
+    #[test]
+    fn anyhow_macro_inline_captures() {
+        let what = "thing";
+        let e = anyhow!("missing {what} ({})", 42);
+        assert_eq!(format!("{e}"), "missing thing (42)");
+    }
+}

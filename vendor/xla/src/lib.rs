@@ -1,0 +1,131 @@
+//! Offline stub of the `xla` (PJRT) binding API that
+//! `gridswift::runtime` compiles against.
+//!
+//! The real binding wraps the xla_extension C++ library, which is not
+//! available in this build environment. This stub provides the exact
+//! API surface the runtime uses so the whole workspace builds and
+//! tests run; every entry point that would touch PJRT returns a
+//! descriptive [`Error`] at runtime instead. Integration tests that
+//! need real artifacts skip themselves when the artifact directory is
+//! absent, so the stub never executes in CI.
+//!
+//! Swap this path dependency for the real `xla` crate (and build
+//! artifacts with `python/compile/aot.py`) to enable the compute path.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the binding's: a displayable message.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla backend unavailable ({what}): this build uses the offline stub \
+         in vendor/xla; link the real xla/PJRT binding to execute artifacts"
+    )))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// Host-side literal value (stub).
+pub struct Literal(());
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+impl Literal {
+    pub fn vec1<T>(_values: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla backend unavailable"));
+    }
+
+    #[test]
+    fn computation_wrapping_is_inert() {
+        // from_proto takes a reference; constructing the input requires
+        // a (failing) parse, so only the error path is reachable here.
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+}

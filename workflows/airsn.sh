@@ -1,0 +1,54 @@
+#!/bin/sh
+# AIRSN as an ad-hoc shell script (paper Table 1 comparison point).
+# Serial, fixed layout, manual bookkeeping of intermediate names at
+# every stage — compare workflows/airsn.swift.
+set -e
+DATA=data/func
+ATLAS=data/atlas/atlas.img
+OUT=results
+MODEL=12
+mkdir -p "$OUT" work/yro work/ro work/air work/resliced work/snorm
+
+# Stage 1+2: reorient twice.
+for img in "$DATA"/bold1_*.img; do
+  base=$(basename "$img" .img)
+  reorient "$img" work/yro/$base.img y n
+  cp "$DATA/$base.hdr" work/yro/$base.hdr
+done
+for img in work/yro/*.img; do
+  base=$(basename "$img" .img)
+  reorient "$img" work/ro/$base.img x n
+  cp work/yro/$base.hdr work/ro/$base.hdr
+done
+
+# Stage 3: motion correction against the first volume.
+STD=$(ls work/ro/*.img | head -n 1)
+for img in work/ro/*.img; do
+  base=$(basename "$img" .img)
+  alignlinear "$STD" "$img" work/air/$base.air -m $MODEL -t1 1000 -t2 1000 -b1 81 3 3
+done
+
+# Stage 4: reslice with the recorded transforms.
+for img in work/ro/*.img; do
+  base=$(basename "$img" .img)
+  reslice work/air/$base.air "$img" work/resliced/$base.img -o -k
+  cp work/ro/$base.hdr work/resliced/$base.hdr
+done
+
+# Stage 5: mean volume.
+softmean work/mean.img work/mean.hdr y work/resliced/*.img
+
+# Stage 6: warp to atlas space, apply to every volume.
+align_warp "$ATLAS" work/mean.img work/mean.warp -m $MODEL
+for img in work/resliced/*.img; do
+  base=$(basename "$img" .img)
+  reslice_warp work/mean.warp "$img" work/snorm/$base.img
+  cp work/resliced/$base.hdr work/snorm/$base.hdr
+done
+
+# Stage 7: snapshots + publish.
+FIRST=$(ls work/snorm/*.img | head -n 1)
+slicer "$FIRST" x 0.5 "$OUT/axial.ppm"
+slicer "$FIRST" y 0.5 "$OUT/sagittal.ppm"
+cp work/snorm/*.img work/snorm/*.hdr "$OUT"/
+echo "spatially normalized run published to $OUT"

@@ -1,0 +1,68 @@
+// AIRSN (paper Table 1, largest workflow): AIR spatial normalization —
+// reorient twice, motion-correct every volume against a reference,
+// reslice, average into a mean volume, warp to the atlas space, and
+// render snapshot images.
+type Image {};
+type Header {};
+type Volume { Image img; Header hdr; };
+type Run { Volume v[]; };
+type Air {};
+type AirVector { Air a[]; };
+type Warp {};
+
+(Volume ov) reorient (Volume iv, string direction, string overwrite) {
+  app { reorient @filename(iv.img) @filename(ov.img) direction overwrite; }
+}
+(Air out) alignlinear (Volume std, Volume iv, int m, int x, int y, string opts) {
+  app { alignlinear @filename(std.img) @filename(iv.img) @filename(out) m x y opts; }
+}
+(Volume ov) reslice (Volume iv, Air align, string o, string k) {
+  app { reslice @filename(align) @filename(iv.img) @filename(ov.img) o k; }
+}
+(Run or) reorientRun (Run ir, string direction, string overwrite) {
+  foreach Volume iv, i in ir.v {
+    or.v[i] = reorient(iv, direction, overwrite);
+  }
+}
+(AirVector ov) alignlinearRun (Volume std, Run ir, int m, int x, int y, string opts) {
+  foreach Volume iv, i in ir.v {
+    ov.a[i] = alignlinear(std, iv, m, x, y, opts);
+  }
+}
+(Run or) resliceRun (Run ir, AirVector av, string o, string k) {
+  foreach Volume iv, i in ir.v {
+    or.v[i] = reslice(iv, av.a[i], o, k);
+  }
+}
+(Volume mean) softmean (Run r) {
+  app { softmean @filename(mean.img) @filename(mean.hdr) "y" @filenames(r.v); }
+}
+(Warp w) alignwarp (Volume atlas, Volume mean, string model) {
+  app { align_warp @filename(atlas.img) @filename(mean.img) @filename(w) model; }
+}
+(Volume ov) resliceWarp (Volume iv, Warp w) {
+  app { reslice_warp @filename(w) @filename(iv.img) @filename(ov.img); }
+}
+(Image s) slicer (Volume iv, string axis, float position) {
+  app { slicer @filename(iv.img) axis position @filename(s); }
+}
+(Run snorm) airsn (Run r, Volume atlas) {
+  Run yroRun = reorientRun(r, "y", "n");
+  Run roRun = reorientRun(yroRun, "x", "n");
+  Volume std = roRun.v[0];
+  AirVector roAirVec = alignlinearRun(std, roRun, 12, 1000, 1000, "81 3 3");
+  Run reslicedRun = resliceRun(roRun, roAirVec, "-o", "-k");
+  Volume mean = softmean(reslicedRun);
+  Warp warp = alignwarp(atlas, mean, "12");
+  foreach Volume iv, i in reslicedRun.v {
+    snorm.v[i] = resliceWarp(iv, warp);
+  }
+}
+
+Volume atlas<run_mapper;location="data/atlas",prefix="atlas">;
+Run bold1<run_mapper;location="data/func",prefix="bold1">;
+Run snbold1<run_mapper;location="results",prefix="snbold1">;
+snbold1 = airsn(bold1, atlas);
+Volume check = snbold1.v[0];
+Image axial = slicer(check, "x", 0.5);
+Image sagittal = slicer(check, "y", 0.5);

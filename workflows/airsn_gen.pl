@@ -1,0 +1,71 @@
+#!/usr/bin/perl
+# AIRSN DAG generator (paper Table 1 comparison point): emits DAGMan
+# files for the seven-stage spatial-normalization pipeline. Every stage
+# boundary and file name convention is replicated by hand; changing the
+# pipeline means editing both this generator and its downstream
+# consumers, which is the maintenance cost Table 1 quantifies.
+use strict;
+use warnings;
+
+my $data  = shift @ARGV || "data/func";
+my $atlas = shift @ARGV || "data/atlas/atlas.img";
+my $out   = shift @ARGV || "results";
+my $model = 12;
+
+opendir(my $dh, $data) or die "cannot open $data: $!";
+my @imgs = sort grep { /^bold1_\d+\.img$/ } readdir($dh);
+closedir($dh);
+die "no volumes in $data" unless @imgs;
+my $n = scalar @imgs;
+
+open(my $dag, ">", "airsn.dag") or die $!;
+
+sub submit_file {
+    my ($name, $exe, @args) = @_;
+    open(my $fh, ">", "$name.sub") or die $!;
+    print $fh "executable = $exe\n";
+    print $fh "arguments  = @args\n";
+    print $fh "error      = $name.err\n";
+    print $fh "queue\n";
+    close($fh);
+    print $dag "JOB $name $name.sub\n";
+}
+
+my (@yro, @ro, @air, @resl, @warp);
+for my $i (0 .. $n - 1) {
+    my $base = sprintf("bold1_%04d", $i);
+    submit_file("yro_$i", "reorient", "$data/$base.img", "work/yro/$base.img", "y", "n");
+    submit_file("ro_$i", "reorient", "work/yro/$base.img", "work/ro/$base.img", "x", "n");
+    print $dag "PARENT yro_$i CHILD ro_$i\n";
+    push @yro, "yro_$i";
+    push @ro,  "ro_$i";
+}
+my $std = "work/ro/bold1_0000.img";
+for my $i (0 .. $n - 1) {
+    my $base = sprintf("bold1_%04d", $i);
+    submit_file("air_$i", "alignlinear", $std, "work/ro/$base.img",
+        "work/air/$base.air", "-m", $model, "-t1", 1000, "-t2", 1000);
+    print $dag "PARENT ro_$i ro_0 CHILD air_$i\n";
+    submit_file("resl_$i", "reslice", "work/air/$base.air",
+        "work/ro/$base.img", "work/resliced/$base.img", "-o", "-k");
+    print $dag "PARENT air_$i CHILD resl_$i\n";
+    push @air,  "air_$i";
+    push @resl, "resl_$i";
+}
+submit_file("mean", "softmean", "work/mean.img", "work/mean.hdr", "y",
+    map { sprintf("work/resliced/bold1_%04d.img", $_) } 0 .. $n - 1);
+print $dag "PARENT @resl CHILD mean\n";
+submit_file("warp", "align_warp", $atlas, "work/mean.img", "work/mean.warp", "-m", $model);
+print $dag "PARENT mean CHILD warp\n";
+for my $i (0 .. $n - 1) {
+    my $base = sprintf("bold1_%04d", $i);
+    submit_file("snorm_$i", "reslice_warp", "work/mean.warp",
+        "work/resliced/$base.img", "work/snorm/$base.img");
+    print $dag "PARENT warp CHILD snorm_$i\n";
+    push @warp, "snorm_$i";
+}
+submit_file("axial", "slicer", "work/snorm/bold1_0000.img", "x", 0.5, "$out/axial.ppm");
+submit_file("sagittal", "slicer", "work/snorm/bold1_0000.img", "y", 0.5, "$out/sagittal.ppm");
+print $dag "PARENT snorm_0 CHILD axial sagittal\n";
+close($dag);
+print "wrote airsn.dag with ", 4 * $n + 4, " jobs\n";

@@ -1,0 +1,51 @@
+// FEAT (paper Table 1): FSL first-level analysis — brain extraction,
+// motion correction, optional smoothing, model fit, post-stats.
+type Image {};
+type Header {};
+type Design {};
+type Volume { Image img; Header hdr; };
+type Run { Volume v[]; };
+type Stats { Image pe; Image res; };
+type Report { Image zstat; Image rendered; };
+
+(Volume ov) bet (Volume iv, float frac) {
+  app { bet @filename(iv.img) frac @filename(ov.img); }
+}
+(Volume ov) mcflirt (Volume iv, Volume reference) {
+  app { mcflirt @filename(iv.img) @filename(reference.img) @filename(ov.img); }
+}
+(Volume ov) smooth (Volume iv, float fwhm) {
+  app { susan @filename(iv.img) fwhm @filename(ov.img); }
+}
+(Run or) preprocess (Run ir, float frac, float fwhm) {
+  Volume reference = ir.v[0];
+  foreach Volume iv, i in ir.v {
+    Volume stripped = bet(iv, frac);
+    Volume moved = mcflirt(stripped, reference);
+    or.v[i] = smooth(moved, fwhm);
+  }
+}
+(Stats s) film (Run r, Design d) {
+  app {
+    film_gls @filename(d) @filename(s.pe) @filename(s.res) @filenames(r.v);
+  }
+}
+(Report rep) poststats (Stats s, float zthresh) {
+  app {
+    cluster @filename(s.pe) @filename(s.res) zthresh
+      @filename(rep.zstat) @filename(rep.rendered);
+  }
+}
+
+Design design<file_mapper;file="design/design.mat">;
+Run bold<run_mapper;location="data/func",prefix="bold1">;
+Report report<run_mapper;location="results",prefix="feat1">;
+int smoothmm = 5;
+Run pre;
+if (smoothmm > 0) {
+  pre = preprocess(bold, 0.3, 5.0);
+} else {
+  pre = preprocess(bold, 0.3, 0.0);
+}
+Stats stats = film(pre, design);
+report = poststats(stats, 2.3);

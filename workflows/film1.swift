@@ -1,0 +1,28 @@
+// FILM1 (paper Table 1): FSL FILM general-linear-model fit over a
+// preprocessed BOLD run against a design matrix.
+type Image {};
+type Header {};
+type Design {};
+type Volume { Image img; Header hdr; };
+type Run { Volume v[]; };
+type Stats { Image pe; Image res; };
+
+(Volume ov) smooth (Volume iv, float fwhm) {
+  app { susan @filename(iv.img) fwhm @filename(ov.img); }
+}
+(Run or) smoothRun (Run ir, float fwhm) {
+  foreach Volume iv, i in ir.v {
+    or.v[i] = smooth(iv, fwhm);
+  }
+}
+(Stats s) film (Run r, Design d) {
+  app {
+    film_gls @filename(d) @filename(s.pe) @filename(s.res) @filenames(r.v);
+  }
+}
+
+Design design<file_mapper;file="design/design.mat">;
+Run bold<run_mapper;location="data/func",prefix="bold1">;
+Stats stats1<run_mapper;location="results",prefix="stats1">;
+Run sbold = smoothRun(bold, 5.0);
+stats1 = film(sbold, design);

@@ -1,0 +1,31 @@
+#!/bin/sh
+# GENATLAS1 as an ad-hoc shell script (paper Table 1 comparison point):
+# fixed file layout, fixed volume count, serial execution, no typing,
+# no restart. Compare workflows/genatlas1.swift.
+set -e
+DATA=data/anatomy
+OUT=results
+MODEL=12
+mkdir -p "$OUT" work
+STD_IMG=$DATA/anat_0000.img
+STD_HDR=$DATA/anat_0000.hdr
+i=0
+for img in "$DATA"/anat_*.img; do
+  base=$(basename "$img" .img)
+  hdr=$DATA/$base.hdr
+  if [ ! -f "$hdr" ]; then
+    echo "missing header for $base" >&2
+    exit 1
+  fi
+  air=work/$base.air
+  alignlinear "$STD_IMG" "$img" "$air" -m $MODEL || exit 1
+  reslice "$air" "$img" work/aligned_$(printf '%04d' $i).img
+  cp "$hdr" work/aligned_$(printf '%04d' $i).hdr
+  i=$((i + 1))
+done
+if [ $i -eq 0 ]; then
+  echo "no input volumes in $DATA" >&2
+  exit 1
+fi
+softmean "$OUT/atlas1.img" "$OUT/atlas1.hdr" y work/aligned_*.img
+echo "atlas written to $OUT/atlas1.img ($i volumes)"

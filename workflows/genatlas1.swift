@@ -1,0 +1,30 @@
+// GENATLAS1 (paper Table 1, smallest workflow): align each anatomical
+// volume to a reference, reslice, and average into an atlas.
+type Image {};
+type Header {};
+type Volume { Image img; Header hdr; };
+type Run { Volume v[]; };
+type Air {};
+
+(Air a) alignlinear (Volume std, Volume iv, int model) {
+  app { alignlinear @filename(std.img) @filename(iv.img) @filename(a) model; }
+}
+(Volume ov) reslice (Volume iv, Air air) {
+  app { reslice @filename(air) @filename(iv.img) @filename(ov.img); }
+}
+(Volume atlas) softmean (Run r) {
+  app { softmean @filename(atlas.img) @filename(atlas.hdr) "y" @filenames(r.v); }
+}
+(Volume atlas) genatlas (Run r) {
+  Volume std = r.v[0];
+  Run aligned;
+  foreach Volume iv, i in r.v {
+    Air a = alignlinear(std, iv, 12);
+    aligned.v[i] = reslice(iv, a);
+  }
+  atlas = softmean(aligned);
+}
+
+Run anatomies<run_mapper;location="data/anatomy",prefix="anat">;
+Volume atlas1<run_mapper;location="results",prefix="atlas1">;
+atlas1 = genatlas(anatomies);

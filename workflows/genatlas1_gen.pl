@@ -1,0 +1,50 @@
+#!/usr/bin/perl
+# GENATLAS1 DAG generator (paper Table 1 comparison point): emits a
+# Condor DAGMan file plus one submit file per job. The workflow shape
+# is hard-coded here instead of being derived from the data, which is
+# the brittleness SwiftScript removes.
+use strict;
+use warnings;
+
+my $data  = shift @ARGV || "data/anatomy";
+my $out   = shift @ARGV || "results";
+my $model = 12;
+
+opendir(my $dh, $data) or die "cannot open $data: $!";
+my @imgs = sort grep { /^anat_\d+\.img$/ } readdir($dh);
+closedir($dh);
+die "no input volumes in $data" unless @imgs;
+
+my $std = "$data/$imgs[0]";
+open(my $dag, ">", "genatlas1.dag") or die $!;
+my @reslice_jobs;
+
+sub submit_file {
+    my ($name, $exe, @args) = @_;
+    open(my $fh, ">", "$name.sub") or die $!;
+    print $fh "executable = $exe\n";
+    print $fh "arguments  = @args\n";
+    print $fh "error      = $name.err\n";
+    print $fh "queue\n";
+    close($fh);
+}
+
+my $i = 0;
+for my $img (@imgs) {
+    (my $base = $img) =~ s/\.img$//;
+    my $air     = "work/$base.air";
+    my $aligned = sprintf("work/aligned_%04d.img", $i);
+    submit_file("align_$i", "alignlinear", "$std", "$data/$img", $air, "-m", $model);
+    submit_file("reslice_$i", "reslice", $air, "$data/$img", $aligned);
+    print $dag "JOB align_$i align_$i.sub\n";
+    print $dag "JOB reslice_$i reslice_$i.sub\n";
+    print $dag "PARENT align_$i CHILD reslice_$i\n";
+    push @reslice_jobs, "reslice_$i";
+    $i++;
+}
+submit_file("softmean", "softmean", "$out/atlas1.img", "$out/atlas1.hdr", "y",
+    map { sprintf("work/aligned_%04d.img", $_) } 0 .. $i - 1);
+print $dag "JOB softmean softmean.sub\n";
+print $dag "PARENT @reslice_jobs CHILD softmean\n";
+close($dag);
+print "wrote genatlas1.dag with ", 2 * $i + 1, " jobs\n";

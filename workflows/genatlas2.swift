@@ -1,0 +1,39 @@
+// GENATLAS2 (paper Table 1): GENATLAS1 plus axial/sagittal/coronal
+// snapshots of the atlas rendered to image files.
+type Image {};
+type Header {};
+type Volume { Image img; Header hdr; };
+type Run { Volume v[]; };
+type Air {};
+
+(Air a) alignlinear (Volume std, Volume iv, int model) {
+  app { alignlinear @filename(std.img) @filename(iv.img) @filename(a) model; }
+}
+(Volume ov) reslice (Volume iv, Air air) {
+  app { reslice @filename(air) @filename(iv.img) @filename(ov.img); }
+}
+(Volume atlas) softmean (Run r) {
+  app { softmean @filename(atlas.img) @filename(atlas.hdr) "y" @filenames(r.v); }
+}
+(Image s) slicer (Volume iv, string axis, float position) {
+  app { slicer @filename(iv.img) axis position @filename(s); }
+}
+(Image png) convert (Image ppm) {
+  app { convert @filename(ppm) @filename(png); }
+}
+(Volume atlas) genatlas (Run r) {
+  Volume std = r.v[0];
+  Run aligned;
+  foreach Volume iv, i in r.v {
+    Air a = alignlinear(std, iv, 12);
+    aligned.v[i] = reslice(iv, a);
+  }
+  atlas = softmean(aligned);
+}
+
+Run anatomies<run_mapper;location="data/anatomy",prefix="anat">;
+Volume atlas2<run_mapper;location="results",prefix="atlas2">;
+atlas2 = genatlas(anatomies);
+Image axial = convert(slicer(atlas2, "x", 0.5));
+Image sagittal = convert(slicer(atlas2, "y", 0.5));
+Image coronal = convert(slicer(atlas2, "z", 0.5));
