@@ -211,6 +211,7 @@ fn main() {
             dispatch_cost: 2053,
             executor_overhead: 45_000,
             drp: DrpPolicy::static_pool(54_000),
+            ..Default::default()
         });
         sim.register(54_000, 0);
         for i in 0..1_500_000usize {

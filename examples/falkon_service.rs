@@ -13,7 +13,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 use gridswift::apps::AppRegistry;
-use gridswift::falkon::{FalkonClient, FalkonService, FalkonServiceConfig, FalkonTcpServer, RealDrpPolicy};
+use gridswift::falkon::{
+    FalkonClient, FalkonService, FalkonServiceConfig, FalkonTcpServer, RealDrpPolicy,
+    TaskSpec,
+};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -30,7 +33,9 @@ fn main() -> Result<()> {
         let addr = args.get(pos + 1).map(|s| s.as_str()).unwrap_or("127.0.0.1:9123");
         let server = FalkonTcpServer::start(Arc::clone(&svc), addr)?;
         println!("falkon service listening on {}", server.addr());
-        println!("protocol: SUBMIT <id> <executable> [args...] | STATS | QUIT");
+        println!(
+            "protocol: SUBMIT <id> <executable> [args...] | SUBMITB <n> + n task lines | STATS | QUIT"
+        );
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
         }
@@ -55,6 +60,30 @@ fn main() -> Result<()> {
     println!(
         "{ok}/{n} tasks through TCP submit->dispatch->notify in {dt:.2}s = {:.0} tasks/s",
         n as f64 / dt
+    );
+
+    // Framed mode: the same load as SUBMITB frames of 256 (one write and
+    // one server-side queue push per frame, coalesced DONEB acks).
+    let t0 = Instant::now();
+    let mut i = n;
+    while i < 2 * n {
+        let hi = (i + 256).min(2 * n);
+        let frame: Vec<TaskSpec> = (i..hi)
+            .map(|id| TaskSpec { id, executable: "sleep0".into(), args: vec![] })
+            .collect();
+        client.submit_batch(&frame)?;
+        i = hi;
+    }
+    let mut ok_framed = 0u64;
+    for _ in 0..n {
+        if client.next_result()?.ok {
+            ok_framed += 1;
+        }
+    }
+    let dtf = t0.elapsed().as_secs_f64();
+    println!(
+        "{ok_framed}/{n} tasks as SUBMITB x256 frames in {dtf:.2}s = {:.0} tasks/s",
+        n as f64 / dtf
     );
     println!("(paper: Falkon sustains 487 tasks/s; Figure 12 measured 120/s end-to-end)");
     let (submitted, completed, failed, queue, execs) = client.stats()?;

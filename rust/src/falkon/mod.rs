@@ -11,7 +11,8 @@
 //! - [`provider`] — the Karajan [`crate::providers::Provider`] adapter
 //!   ("the Falkon provider that we developed", §5.3).
 //! - [`protocol`] — the client-facing network endpoint (the paper's
-//!   WS-interface analogue): a line-oriented TCP protocol plus a client.
+//!   WS-interface analogue): a TCP protocol with batched `SUBMITB`
+//!   submit frames and coalesced `DONEB` acks, plus a client.
 //!
 //! The virtual-time Falkon *model* used for paper-scale experiments lives
 //! in [`crate::sim::falkon_model`]; this module is the real data path the
@@ -22,7 +23,7 @@ pub mod provider;
 pub mod queue;
 pub mod service;
 
-pub use protocol::{FalkonClient, FalkonTcpServer};
+pub use protocol::{FalkonClient, FalkonTcpServer, RemoteResult, TaskSpec};
 pub use provider::FalkonProvider;
 pub use queue::ShardedQueue;
 pub use service::{FalkonService, FalkonServiceConfig, RealDrpPolicy, ServiceStats};

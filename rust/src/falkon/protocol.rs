@@ -1,30 +1,200 @@
 //! Falkon network endpoint: the client-facing interface (the paper's
-//! Web-Services interface analogue) as a line-oriented TCP protocol.
+//! Web-Services interface analogue) as a TCP protocol with batched,
+//! count-prefixed frames.
 //!
-//! Protocol (one request per line, UTF-8):
+//! Frame grammar (UTF-8 lines; `<n>` is a decimal count prefixing the
+//! frame body — see DESIGN.md §4.1 for ordering/ack guarantees):
 //!
 //! ```text
-//! C->S:  SUBMIT <id> <executable> [args...]
+//! C->S:  SUBMIT <id> <executable> [args...]          single-task (legacy)
+//! C->S:  SUBMITB <n>                                 batched submit frame
+//!        <id> <executable> [args...]                 x n task lines
 //! S->C:  RESULT <id> <ok|err> <exec_us> <wait_us> [error...]
+//! S->C:  DONEB <n>                                   batched ack frame
+//!        <id> <ok|err> <exec_us> <wait_us> [error...]   x n status lines
 //! C->S:  STATS
 //! S->C:  STATS <submitted> <completed> <failed> <queue> <executors>
 //! C->S:  QUIT
 //! ```
 //!
+//! A `SUBMITB` frame enters the service through one
+//! [`FalkonService::submit_batch`] call (one sharded-queue push for the
+//! whole frame) instead of one queue operation per line. Completions are
+//! still per-task; the server coalesces whatever acks are ready at write
+//! time into one `DONEB` frame (opportunistic batching — no completion
+//! waits for its frame peers). Single-line `SUBMIT` requests keep their
+//! legacy `RESULT`-line acks so old clients work unchanged.
+//!
 //! Executors remain in-process (this testbed is one host); the endpoint
 //! exists so remote clients — and the fig12 "submit from a different
 //! host" benchmark — exercise a real network hop on the submit path.
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::providers::AppTask;
+use crate::providers::{AppTask, TaskDone};
 
 use super::service::FalkonService;
+
+/// Upper bound on `<n>` in a `SUBMITB`/`DONEB` header: a defense against
+/// absurd counts from malformed or hostile peers (the paper's service
+/// queues 1.5M tasks total; no single frame needs more than this).
+pub const MAX_FRAME_TASKS: usize = 65_536;
+
+/// One task as it crosses the wire (the client-side mirror of the
+/// `SUBMITB` task line `<id> <executable> [args...]`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskSpec {
+    /// Client-chosen task id, echoed back in the ack.
+    pub id: u64,
+    /// Logical executable name (resolved by the server's app registry).
+    pub executable: String,
+    /// Command-line words after the executable (no embedded whitespace).
+    pub args: Vec<String>,
+}
+
+/// One result line from the service (a `RESULT` line or one `DONEB`
+/// status line — both carry the same fields).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemoteResult {
+    /// The id the task was submitted with.
+    pub id: u64,
+    /// True when the task ran to success.
+    pub ok: bool,
+    /// Executor-side execution time in microseconds.
+    pub exec_us: u64,
+    /// Service-queue wait time in microseconds.
+    pub wait_us: u64,
+    /// Error message for failed tasks (newlines flattened; empty on ok).
+    pub error: String,
+}
+
+// ---------------------------------------------------------------------
+// Frame encode/decode (pure; unit-testable without sockets)
+// ---------------------------------------------------------------------
+
+/// Encode a `SUBMITB` frame: the `SUBMITB <n>` header line followed by
+/// `n` task lines. Fails if an executable or arg contains whitespace —
+/// an embedded space would silently split into extra wire args, and an
+/// embedded newline would desynchronize the frame (the receiver counts
+/// lines), so both are rejected before anything touches the wire.
+pub fn encode_submitb(tasks: &[TaskSpec]) -> Result<String> {
+    let mut out = format!("SUBMITB {}\n", tasks.len());
+    for t in tasks {
+        ensure_wire_word(&t.executable, "executable")?;
+        out.push_str(&t.id.to_string());
+        out.push(' ');
+        out.push_str(&t.executable);
+        for a in &t.args {
+            ensure_wire_word(a, "arg")?;
+            out.push(' ');
+            out.push_str(a);
+        }
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// A wire word is one non-empty token of a task line: no whitespace.
+fn ensure_wire_word(s: &str, what: &str) -> Result<()> {
+    if s.is_empty() || s.contains(char::is_whitespace) {
+        bail!("task {what} {s:?} must be non-empty and whitespace-free");
+    }
+    Ok(())
+}
+
+/// Decode the body of a `SUBMITB` frame — the `n` task lines following
+/// an already-consumed header. Fails on a count above
+/// [`MAX_FRAME_TASKS`], on EOF before `n` lines arrive (truncated
+/// frame), and on malformed task lines.
+pub fn decode_submitb_body(n: usize, reader: &mut impl BufRead) -> Result<Vec<TaskSpec>> {
+    if n > MAX_FRAME_TASKS {
+        bail!("SUBMITB frame of {n} tasks exceeds the {MAX_FRAME_TASKS} cap");
+    }
+    let mut tasks = Vec::with_capacity(n);
+    let mut line = String::new();
+    for i in 0..n {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("truncated SUBMITB frame: got {i} of {n} task lines");
+        }
+        let mut parts = line.trim().split(' ').filter(|s| !s.is_empty());
+        let id: u64 = parts
+            .next()
+            .context("SUBMITB task line missing id")?
+            .parse()
+            .context("SUBMITB task line: bad id")?;
+        let executable = parts
+            .next()
+            .context("SUBMITB task line missing executable")?
+            .to_string();
+        let args = parts.map(|s| s.to_string()).collect();
+        tasks.push(TaskSpec { id, executable, args });
+    }
+    Ok(tasks)
+}
+
+/// Render one status line (shared by `RESULT` acks, which prefix it with
+/// the keyword, and `DONEB` body lines).
+fn status_line(r: &RemoteResult) -> String {
+    let status = if r.ok { "ok" } else { "err" };
+    let err = r.error.replace('\n', " ");
+    format!("{} {} {} {} {}\n", r.id, status, r.exec_us, r.wait_us, err)
+}
+
+/// Encode a `DONEB` frame: the `DONEB <n>` header line followed by `n`
+/// status lines.
+pub fn encode_doneb(results: &[RemoteResult]) -> String {
+    let mut out = format!("DONEB {}\n", results.len());
+    for r in results {
+        out.push_str(&status_line(r));
+    }
+    out
+}
+
+/// Parse the fields of one status line (after any keyword prefix has
+/// been stripped): `<id> <ok|err> <exec_us> <wait_us> [error...]`.
+fn parse_status_fields(fields: &str) -> Result<RemoteResult> {
+    let parts: Vec<&str> = fields.trim().splitn(5, ' ').collect();
+    if parts.len() < 4 {
+        bail!("malformed status line: {fields:?}");
+    }
+    Ok(RemoteResult {
+        id: parts[0].parse().context("status line: bad id")?,
+        ok: parts[1] == "ok",
+        exec_us: parts[2].parse().context("status line: bad exec_us")?,
+        wait_us: parts[3].parse().context("status line: bad wait_us")?,
+        error: parts.get(4).map(|s| s.trim_end()).unwrap_or("").to_string(),
+    })
+}
+
+/// Decode the body of a `DONEB` frame — the `n` status lines following
+/// an already-consumed header. Fails on an oversized count and on EOF
+/// before `n` lines arrive (truncated frame).
+pub fn decode_doneb_body(n: usize, reader: &mut impl BufRead) -> Result<Vec<RemoteResult>> {
+    if n > MAX_FRAME_TASKS {
+        bail!("DONEB frame of {n} results exceeds the {MAX_FRAME_TASKS} cap");
+    }
+    let mut results = Vec::with_capacity(n);
+    let mut line = String::new();
+    for i in 0..n {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("truncated DONEB frame: got {i} of {n} status lines");
+        }
+        results.push(parse_status_fields(&line)?);
+    }
+    Ok(results)
+}
+
+// ---------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------
 
 /// TCP front-end for a Falkon service.
 pub struct FalkonTcpServer {
@@ -65,6 +235,7 @@ impl FalkonTcpServer {
         Ok(Self { addr, accept_thread: Some(accept_thread), shutdown })
     }
 
+    /// The bound address (useful with ephemeral port 0).
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
@@ -79,10 +250,48 @@ impl Drop for FalkonTcpServer {
     }
 }
 
+/// Per-connection shared state: the write half plus the pending-ack
+/// buffer that coalesces completions into `DONEB` frames.
+struct ConnState {
+    writer: Mutex<TcpStream>,
+    acks: Mutex<Vec<RemoteResult>>,
+}
+
+impl ConnState {
+    /// Queue one completion and flush. If another completion is mid-write
+    /// it picks this ack up in its own `DONEB` frame (flush combining);
+    /// no ack is ever delayed waiting for more completions.
+    fn push_ack(&self, r: RemoteResult) {
+        self.acks.lock().unwrap().push(r);
+        self.flush_acks();
+    }
+
+    fn flush_acks(&self) {
+        loop {
+            let batch: Vec<RemoteResult> = {
+                let mut acks = self.acks.lock().unwrap();
+                if acks.is_empty() {
+                    return;
+                }
+                std::mem::take(&mut *acks)
+            };
+            let frame = encode_doneb(&batch);
+            if let Ok(mut w) = self.writer.lock() {
+                let _ = w.write_all(frame.as_bytes());
+            }
+            // Loop: completions that arrived during the write get their
+            // own frame now instead of waiting for the next completion.
+        }
+    }
+}
+
 fn serve_conn(stream: TcpStream, svc: Arc<FalkonService>) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut reader = BufReader::new(stream.try_clone()?);
-    let writer = Arc::new(std::sync::Mutex::new(stream));
+    let conn = Arc::new(ConnState {
+        writer: Mutex::new(stream),
+        acks: Mutex::new(Vec::new()),
+    });
     let mut line = String::new();
     loop {
         line.clear();
@@ -96,29 +305,35 @@ fn serve_conn(stream: TcpStream, svc: Arc<FalkonService>) -> Result<()> {
                 let executable = parts[2].to_string();
                 let args: Vec<String> =
                     parts[3..].iter().map(|s| s.to_string()).collect();
-                let task = AppTask {
-                    id,
-                    key: format!("tcp/{peer:?}/{id}"),
-                    executable,
-                    args,
-                    inputs: vec![],
-                    outputs: vec![],
-                };
-                let w = Arc::clone(&writer);
+                let task = app_task(TaskSpec { id, executable, args }, &peer);
+                let c = Arc::clone(&conn);
                 svc.submit(
                     task,
                     Box::new(move |r| {
-                        let status = if r.ok { "ok" } else { "err" };
-                        let err = r.error.unwrap_or_default().replace('\n', " ");
-                        let msg = format!(
-                            "RESULT {} {} {} {} {}\n",
-                            r.id, status, r.exec_us, r.wait_us, err
-                        );
-                        if let Ok(mut s) = w.lock() {
+                        // Legacy single-task ack: one RESULT line.
+                        let msg = format!("RESULT {}", status_line(&remote(r)));
+                        if let Ok(mut s) = c.writer.lock() {
                             let _ = s.write_all(msg.as_bytes());
                         }
                     }),
                 );
+            }
+            Some("SUBMITB") if parts.len() == 2 => {
+                let n: usize = parts[1].parse().context("bad SUBMITB count")?;
+                let specs = decode_submitb_body(n, &mut reader)?;
+                // One service call for the whole frame: the batched
+                // queue push amortizes locks/wakeups across the frame.
+                let batch: Vec<(AppTask, TaskDone)> = specs
+                    .into_iter()
+                    .map(|spec| {
+                        let task = app_task(spec, &peer);
+                        let c = Arc::clone(&conn);
+                        let done: TaskDone =
+                            Box::new(move |r| c.push_ack(remote(r)));
+                        (task, done)
+                    })
+                    .collect();
+                svc.submit_batch(batch);
             }
             Some("STATS") => {
                 let st = svc.stats();
@@ -130,7 +345,7 @@ fn serve_conn(stream: TcpStream, svc: Arc<FalkonService>) -> Result<()> {
                     svc.queue_len(),
                     svc.live_executors(),
                 );
-                writer.lock().unwrap().write_all(msg.as_bytes())?;
+                conn.writer.lock().unwrap().write_all(msg.as_bytes())?;
             }
             Some("QUIT") => return Ok(()),
             other => bail!("bad request {other:?}"),
@@ -138,30 +353,57 @@ fn serve_conn(stream: TcpStream, svc: Arc<FalkonService>) -> Result<()> {
     }
 }
 
-/// A blocking TCP client for the Falkon endpoint.
+/// Build the server-side [`AppTask`] for a wire task.
+fn app_task(spec: TaskSpec, peer: &Option<std::net::SocketAddr>) -> AppTask {
+    AppTask {
+        id: spec.id,
+        key: format!("tcp/{peer:?}/{}", spec.id),
+        executable: spec.executable,
+        args: spec.args,
+        inputs: vec![],
+        outputs: vec![],
+    }
+}
+
+/// Convert a service [`crate::providers::TaskResult`] to its wire form.
+fn remote(r: crate::providers::TaskResult) -> RemoteResult {
+    RemoteResult {
+        id: r.id,
+        ok: r.ok,
+        exec_us: r.exec_us,
+        wait_us: r.wait_us,
+        error: r.error.unwrap_or_default(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------
+
+/// A blocking TCP client for the Falkon endpoint. Decodes both legacy
+/// `RESULT` lines and batched `DONEB` frames into a single result
+/// stream.
 pub struct FalkonClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
-}
-
-/// One result line from the service.
-#[derive(Debug, Clone, PartialEq)]
-pub struct RemoteResult {
-    pub id: u64,
-    pub ok: bool,
-    pub exec_us: u64,
-    pub wait_us: u64,
-    pub error: String,
+    /// Results decoded from a `DONEB` frame (or stashed while waiting
+    /// for a STATS reply) but not yet handed to the caller.
+    pending: VecDeque<RemoteResult>,
 }
 
 impl FalkonClient {
+    /// Connect to a running [`FalkonTcpServer`].
     pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Self> {
         let stream = TcpStream::connect(addr).context("connect falkon")?;
         stream.set_nodelay(true).ok();
-        Ok(Self { reader: BufReader::new(stream.try_clone()?), writer: stream })
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            pending: VecDeque::new(),
+        })
     }
 
-    /// Fire a submission without waiting.
+    /// Fire a single submission (legacy line) without waiting.
     pub fn submit(&mut self, id: u64, executable: &str, args: &[&str]) -> Result<()> {
         let mut line = format!("SUBMIT {id} {executable}");
         for a in args {
@@ -173,28 +415,52 @@ impl FalkonClient {
         Ok(())
     }
 
-    /// Read the next RESULT line (results may arrive out of order).
+    /// Fire a whole batch as `SUBMITB` frames (one write and one
+    /// server-side queue operation per frame) without waiting. Batches
+    /// above [`MAX_FRAME_TASKS`] are split into maximal frames so no
+    /// legal call can trip the server's frame cap.
+    pub fn submit_batch(&mut self, tasks: &[TaskSpec]) -> Result<()> {
+        for frame in tasks.chunks(MAX_FRAME_TASKS) {
+            self.writer.write_all(encode_submitb(frame)?.as_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Read the next completion (results may arrive in any order, from
+    /// `RESULT` lines or `DONEB` frames alike).
     pub fn next_result(&mut self) -> Result<RemoteResult> {
+        if let Some(r) = self.pending.pop_front() {
+            return Ok(r);
+        }
+        // One reused line buffer: this is the ack hot path (fig12 reads
+        // tens of thousands of lines per run).
         let mut line = String::new();
         loop {
             line.clear();
             if self.reader.read_line(&mut line)? == 0 {
                 bail!("connection closed");
             }
-            let parts: Vec<&str> = line.trim().splitn(6, ' ').collect();
-            if parts.first() == Some(&"RESULT") && parts.len() >= 5 {
-                return Ok(RemoteResult {
-                    id: parts[1].parse()?,
-                    ok: parts[2] == "ok",
-                    exec_us: parts[3].parse()?,
-                    wait_us: parts[4].parse()?,
-                    error: parts.get(5).unwrap_or(&"").to_string(),
-                });
+            self.decode_ack_line(&line)?;
+            if let Some(r) = self.pending.pop_front() {
+                return Ok(r);
             }
         }
     }
 
-    /// Convenience: submit and wait for that id.
+    /// Decode one server line that may carry results (`RESULT` or a
+    /// `DONEB` header) into `pending`; other lines are ignored.
+    fn decode_ack_line(&mut self, line: &str) -> Result<()> {
+        let trimmed = line.trim();
+        if let Some(fields) = trimmed.strip_prefix("RESULT ") {
+            self.pending.push_back(parse_status_fields(fields)?);
+        } else if let Some(count) = trimmed.strip_prefix("DONEB ") {
+            let n: usize = count.trim().parse().context("bad DONEB count")?;
+            self.pending.extend(decode_doneb_body(n, &mut self.reader)?);
+        }
+        Ok(())
+    }
+
+    /// Convenience: submit one task and wait for that id.
     pub fn run(&mut self, id: u64, executable: &str, args: &[&str]) -> Result<RemoteResult> {
         self.submit(id, executable, args)?;
         loop {
@@ -205,7 +471,10 @@ impl FalkonClient {
         }
     }
 
-    /// Query service stats.
+    /// Query service stats: (submitted, completed, failed, queue length,
+    /// live executors). Results arriving before the STATS reply are
+    /// stashed for later [`FalkonClient::next_result`] calls, not
+    /// dropped.
     pub fn stats(&mut self) -> Result<(u64, u64, u64, usize, usize)> {
         self.writer.write_all(b"STATS\n")?;
         let mut line = String::new();
@@ -224,6 +493,7 @@ impl FalkonClient {
                     parts[5].parse()?,
                 ));
             }
+            self.decode_ack_line(&line)?;
         }
     }
 }
@@ -232,6 +502,7 @@ impl FalkonClient {
 mod tests {
     use super::*;
     use crate::falkon::service::{FalkonServiceConfig, RealDrpPolicy};
+    use std::io::Cursor;
     use std::time::Duration;
 
     fn start_svc() -> (Arc<FalkonService>, FalkonTcpServer) {
@@ -250,6 +521,96 @@ mod tests {
         let server = FalkonTcpServer::start(Arc::clone(&svc), "127.0.0.1:0").unwrap();
         (svc, server)
     }
+
+    fn spec(id: u64, exe: &str, args: &[&str]) -> TaskSpec {
+        TaskSpec {
+            id,
+            executable: exe.into(),
+            args: args.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    // -- pure frame round-trips ----------------------------------------
+
+    #[test]
+    fn submitb_frame_roundtrip() {
+        let tasks = vec![
+            spec(1, "convert", &["-i", "a.img", "-o", "b.img"]),
+            spec(2, "sleep0", &[]),
+            spec(99, "align", &["m12"]),
+        ];
+        let wire = encode_submitb(&tasks).unwrap();
+        let mut lines = wire.lines();
+        let header = lines.next().unwrap();
+        assert_eq!(header, "SUBMITB 3");
+        let body = wire.splitn(2, '\n').nth(1).unwrap();
+        let decoded = decode_submitb_body(3, &mut Cursor::new(body)).unwrap();
+        assert_eq!(decoded, tasks);
+    }
+
+    #[test]
+    fn doneb_frame_roundtrip() {
+        let results = vec![
+            RemoteResult { id: 7, ok: true, exec_us: 120, wait_us: 3, error: String::new() },
+            RemoteResult {
+                id: 8,
+                ok: false,
+                exec_us: 0,
+                wait_us: 11,
+                error: "boom with spaces".into(),
+            },
+        ];
+        let wire = encode_doneb(&results);
+        assert!(wire.starts_with("DONEB 2\n"));
+        let body = wire.splitn(2, '\n').nth(1).unwrap();
+        let decoded = decode_doneb_body(2, &mut Cursor::new(body)).unwrap();
+        assert_eq!(decoded, results);
+    }
+
+    #[test]
+    fn truncated_submitb_frame_is_an_error() {
+        let tasks: Vec<TaskSpec> = (0..4).map(|i| spec(i, "x", &[])).collect();
+        let wire = encode_submitb(&tasks).unwrap();
+        let body = wire.splitn(2, '\n').nth(1).unwrap();
+        // Keep only the first two task lines of four.
+        let cut: String = body.lines().take(2).map(|l| format!("{l}\n")).collect();
+        let err = decode_submitb_body(4, &mut Cursor::new(cut)).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn truncated_doneb_frame_is_an_error() {
+        let err = decode_doneb_body(3, &mut Cursor::new("1 ok 5 5 \n")).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn oversized_frame_counts_are_rejected() {
+        let e = decode_submitb_body(MAX_FRAME_TASKS + 1, &mut Cursor::new("")).unwrap_err();
+        assert!(format!("{e:#}").contains("cap"), "{e:#}");
+        let e = decode_doneb_body(MAX_FRAME_TASKS + 1, &mut Cursor::new("")).unwrap_err();
+        assert!(format!("{e:#}").contains("cap"), "{e:#}");
+    }
+
+    #[test]
+    fn malformed_task_line_is_an_error() {
+        // Missing executable.
+        assert!(decode_submitb_body(1, &mut Cursor::new("42\n")).is_err());
+        // Non-numeric id.
+        assert!(decode_submitb_body(1, &mut Cursor::new("nope x\n")).is_err());
+    }
+
+    #[test]
+    fn encode_rejects_whitespace_in_wire_words() {
+        // An embedded space would split into extra wire args...
+        assert!(encode_submitb(&[spec(1, "x", &["a b"])]).is_err());
+        // ...and an embedded newline would desynchronize the frame.
+        assert!(encode_submitb(&[spec(1, "x\n2 y", &[])]).is_err());
+        assert!(encode_submitb(&[spec(1, "", &[])]).is_err());
+        assert!(encode_submitb(&[spec(1, "ok", &["fine"])]).is_ok());
+    }
+
+    // -- live TCP ------------------------------------------------------
 
     #[test]
     fn tcp_submit_roundtrip() {
@@ -284,6 +645,43 @@ mod tests {
             seen.insert(r.id);
         }
         assert_eq!(seen.len(), n as usize);
+    }
+
+    #[test]
+    fn tcp_batched_frames_roundtrip_mixed_outcomes() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect(server.addr()).unwrap();
+        let tasks: Vec<TaskSpec> = (0..120u64)
+            .map(|i| spec(i, if i % 10 == 0 { "fail" } else { "sleep0" }, &[]))
+            .collect();
+        client.submit_batch(&tasks).unwrap();
+        let mut seen = std::collections::HashMap::new();
+        for _ in 0..tasks.len() {
+            let r = client.next_result().unwrap();
+            seen.insert(r.id, r.ok);
+        }
+        assert_eq!(seen.len(), tasks.len(), "every frame task acked once");
+        for i in 0..120u64 {
+            assert_eq!(seen[&i], i % 10 != 0, "task {i}");
+        }
+    }
+
+    #[test]
+    fn tcp_mixed_legacy_and_framed_submissions() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect(server.addr()).unwrap();
+        client.submit(1000, "sleep0", &[]).unwrap();
+        client
+            .submit_batch(&(0..50u64).map(|i| spec(i, "sleep0", &[])).collect::<Vec<_>>())
+            .unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..51 {
+            let r = client.next_result().unwrap();
+            assert!(r.ok);
+            seen.insert(r.id);
+        }
+        assert!(seen.contains(&1000), "legacy RESULT ack decoded");
+        assert_eq!(seen.len(), 51);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use crate::providers::{AppTask, BundleDone, Provider};
+use crate::providers::{AppTask, BundleDone, Provider, TaskDone};
 
 use super::service::FalkonService;
 
@@ -15,10 +15,12 @@ pub struct FalkonProvider {
 }
 
 impl FalkonProvider {
+    /// Wrap a running service as a named scheduler site.
     pub fn new(name: &str, service: Arc<FalkonService>) -> Self {
         Self { name: name.to_string(), service }
     }
 
+    /// The underlying service handle (stats, drain, TCP endpoint setup).
     pub fn service(&self) -> &Arc<FalkonService> {
         &self.service
     }
@@ -35,6 +37,14 @@ impl Provider for FalkonProvider {
         // service enqueues the whole bundle with one batched queue
         // operation and aggregates completions in submission order.
         self.service.submit_bundle(bundle, done);
+    }
+
+    fn submit_stream(&self, batch: Vec<(AppTask, TaskDone)>) {
+        // The streaming path maps 1:1 onto the service's batched submit:
+        // one sharded-queue push (one lock + wakeup per shard) for the
+        // whole batch, with each task carrying its own completion — this
+        // is where the engine's unclustered flush lands.
+        self.service.submit_batch(batch);
     }
 
     fn slots(&self) -> usize {
@@ -80,6 +90,51 @@ mod tests {
             assert_eq!(r.id, i as u64, "results keep bundle order");
             assert!(r.ok);
         }
+    }
+
+    #[test]
+    fn stream_completions_are_not_delayed_by_batch_peers() {
+        // Two executors; task 0 blocks until task 1's completion has
+        // been observed. If submit_stream delayed completions until the
+        // whole batch finished (bundle semantics), this would deadlock
+        // and the recv below would time out.
+        let (unblock_tx, unblock_rx) = std::sync::mpsc::channel::<()>();
+        let unblock_rx = std::sync::Mutex::new(unblock_rx);
+        let svc = FalkonService::start(
+            FalkonServiceConfig {
+                drp: RealDrpPolicy::static_pool(2),
+                executor_overhead: Duration::ZERO,
+            },
+            Arc::new(move |t: &AppTask| {
+                if t.id == 0 {
+                    unblock_rx
+                        .lock()
+                        .unwrap()
+                        .recv_timeout(Duration::from_secs(10))
+                        .map_err(|_| anyhow::anyhow!("never unblocked"))?;
+                }
+                Ok(())
+            }),
+        );
+        let p = FalkonProvider::new("falkon", svc);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let batch: Vec<(AppTask, crate::providers::TaskDone)> = (0..2u64)
+            .map(|i| {
+                let tx = tx.clone();
+                let done: crate::providers::TaskDone =
+                    Box::new(move |r| tx.send(r).unwrap());
+                (task(i), done)
+            })
+            .collect();
+        p.submit_stream(batch);
+        // Task 1's completion must arrive while task 0 is still running.
+        let first = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(first.id, 1, "fast task completes independently");
+        assert!(first.ok);
+        unblock_tx.send(()).unwrap();
+        let second = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(second.id, 0);
+        assert!(second.ok);
     }
 
     #[test]

@@ -28,6 +28,20 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+/// Cap on queue shards. Tuned from `benches/falkon_micro.rs` (see
+/// DESIGN.md §2.5): past 8 shards the per-shard locks are essentially
+/// uncontended on the 4–16-executor pools the benches exercise, while
+/// every additional shard lengthens the executor's empty-shard steal
+/// scan and the submit side's wake scan. 8 is the knee.
+pub const MAX_SHARDS: usize = 8;
+
+/// Max tasks an executor pops per queue-lock acquisition. Tuned from
+/// `benches/falkon_micro.rs` (see DESIGN.md §2.5): 32 amortizes the
+/// shard lock to noise under backlog without letting one executor
+/// monopolize a burst — the actual pop size is further capped at the
+/// executor's fair share of the current backlog.
+pub const DISPATCH_BATCH: usize = 32;
+
 struct Shard<T> {
     q: Mutex<VecDeque<T>>,
     cv: Condvar,
@@ -90,14 +104,17 @@ impl<T> ShardedQueue<T> {
         self.peak.load(Ordering::SeqCst)
     }
 
+    /// Number of shards (fixed at construction).
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
 
+    /// Total queued items across all shards (lock-free read).
     pub fn len(&self) -> usize {
         self.len.load(Ordering::SeqCst)
     }
 
+    /// True when no shard holds work (lock-free read).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -260,11 +277,15 @@ impl<T> ShardedQueue<T> {
         }
     }
 
+    /// Mark the queue shut down and wake every parked worker so they can
+    /// observe it. Queued items are not drained; callers decide whether
+    /// to finish or drop them.
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
         self.wake_all();
     }
 
+    /// True once [`ShardedQueue::shutdown`] has been called.
     pub fn is_shutdown(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
     }

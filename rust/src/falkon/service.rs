@@ -33,15 +33,7 @@ use crate::providers::{AppRunner, AppTask, BundleDone, TaskResult};
 
 use super::queue::ShardedQueue;
 
-/// Cap on queue shards: beyond this, shard locks stop being contended
-/// and the steal scan just gets longer.
-const MAX_SHARDS: usize = 8;
-
-/// Max tasks an executor pops per queue-lock acquisition. The actual
-/// pop size adapts to queue pressure (fair share of the backlog) so a
-/// small burst never serializes inside one executor's private buffer
-/// while siblings idle.
-const DISPATCH_BATCH: usize = 32;
+use super::queue::{DISPATCH_BATCH, MAX_SHARDS};
 
 /// Dynamic resource provisioning policy (real clock).
 #[derive(Debug, Clone)]
@@ -103,19 +95,28 @@ impl Default for FalkonServiceConfig {
     }
 }
 
-/// Aggregate service statistics.
+/// Aggregate service statistics (atomically maintained; readable while
+/// the service runs).
 #[derive(Debug, Default)]
 pub struct ServiceStats {
+    /// Tasks accepted by the service (all submit paths).
     pub submitted: AtomicU64,
+    /// Tasks that finished successfully.
     pub completed: AtomicU64,
+    /// Tasks that finished with an error.
     pub failed: AtomicU64,
+    /// High-water mark of the service queue length.
     pub peak_queue: AtomicUsize,
+    /// High-water mark of the live executor count.
     pub peak_executors: AtomicUsize,
+    /// Total executor busy time (task execution only) in microseconds.
     pub busy_us: AtomicU64,
 }
 
-/// Completion callback per task.
-pub type TaskDone = Box<dyn FnOnce(TaskResult) + Send>;
+/// Per-task completion callback (the canonical alias lives in
+/// [`crate::providers`]; re-exported here because the service API is
+/// task-granular).
+pub use crate::providers::TaskDone;
 
 /// Bundle-completion aggregation state: one allocation per bundle
 /// instead of one boxed closure + shared mutex hop per task.
@@ -300,14 +301,17 @@ impl FalkonService {
         rx.recv().expect("service dropped")
     }
 
+    /// Live aggregate counters (lock-free reads).
     pub fn stats(&self) -> &ServiceStats {
         &self.inner.stats
     }
 
+    /// Current service-queue depth (lock-free read).
     pub fn queue_len(&self) -> usize {
         self.inner.queue.len()
     }
 
+    /// Registered executors currently alive.
     pub fn live_executors(&self) -> usize {
         self.inner.live.load(Ordering::SeqCst)
     }

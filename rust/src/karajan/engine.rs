@@ -155,7 +155,11 @@ struct Interp {
     restart: Option<RestartLog>,
     /// Tasks whose inputs materialized during the current control-queue
     /// drain; flushed to the scheduler as one batched submit so the
-    /// scheduler lock is taken once per drain, not once per task.
+    /// scheduler lock is taken once per drain, not once per task. From
+    /// there the unclustered path streams each site's share through
+    /// `Provider::submit_stream` in one provider call (for Falkon: one
+    /// `FalkonService::submit_batch` queue push), while completions
+    /// still arrive per task — pipelining is never bundle-barriered.
     submit_buf: Mutex<Vec<(AppTask, TaskDone)>>,
 }
 
@@ -282,7 +286,8 @@ impl Interp {
         self.submit_buf.lock().unwrap().push((task, done));
     }
 
-    /// Hand all buffered tasks to the scheduler in one pass.
+    /// Hand all buffered tasks to the scheduler in one pass (the head of
+    /// the end-to-end batched dispatch pipeline; see DESIGN.md §4).
     fn flush_submits(&self) {
         let batch = std::mem::take(&mut *self.submit_buf.lock().unwrap());
         if !batch.is_empty() {

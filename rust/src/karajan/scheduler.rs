@@ -63,8 +63,9 @@ struct Site {
     failures: u64,
 }
 
-/// Completion callback the engine installs per task.
-pub type TaskDone = Box<dyn FnOnce(TaskResult) + Send>;
+/// Completion callback the engine installs per task (canonical alias in
+/// [`crate::providers`]; re-exported for the engine-facing API).
+pub use crate::providers::TaskDone;
 
 struct Pending {
     task: AppTask,
@@ -175,7 +176,7 @@ impl GridScheduler {
         self.in_flight.fetch_add(1, Ordering::SeqCst);
         let pending = Pending { task, done, attempts: 0, last_site: None };
         match &self.cluster {
-            None => self.dispatch(vec![pending]),
+            None => self.dispatch_singles(vec![pending]),
             Some(policy) => {
                 let flush = {
                     let (m, cv) = &*self.inner;
@@ -196,9 +197,10 @@ impl GridScheduler {
 
     /// Submit a batch of independent tasks in one scheduler pass: one
     /// `in_flight` update, one buffer lock (clustered) or one
-    /// site-selection lock (unclustered) for the whole batch. Unclustered
-    /// tasks keep their one-bundle-per-task semantics (bundles execute
-    /// serially on one executor); only the bookkeeping is batched.
+    /// site-selection lock (unclustered) for the whole batch. The
+    /// unclustered path then streams each site's share through a single
+    /// [`Provider::submit_stream`] call — submits batch, completions
+    /// stay per task, so pipelining is preserved.
     pub fn submit_batch(self: &Arc<Self>, batch: Vec<(AppTask, TaskDone)>) {
         if batch.is_empty() {
             return;
@@ -315,24 +317,123 @@ impl GridScheduler {
         last
     }
 
-    /// Route a batch of tasks as *individual* bundles: all site picks
-    /// happen under one lock acquisition, then each task goes to its
-    /// provider as a bundle of one (no re-locking per task).
+    /// Route a batch of independent tasks through the streaming provider
+    /// API ([`Provider::submit_stream`]): all site picks happen under one
+    /// lock acquisition, then each site receives its whole share of the
+    /// batch in a single provider call while completions stay per-task
+    /// (no bundle barrier, so dataflow pipelining is preserved).
     fn dispatch_singles(self: &Arc<Self>, batch: Vec<Pending>) {
-        if batch.len() <= 1 {
-            return self.dispatch(batch);
+        match batch.len() {
+            0 => return,
+            1 => {
+                // Hot path for single submissions/retries: one site pick,
+                // no grouping allocations.
+                let site = {
+                    let (m, _) = &*self.inner;
+                    let mut st = m.lock().unwrap();
+                    Self::pick_site(&mut st, batch[0].last_site, Instant::now())
+                };
+                return self.submit_stream_to_site(site, batch);
+            }
+            _ => {}
         }
-        let sites: Vec<usize> = {
+        for (site, pendings) in self.group_by_site(batch) {
+            self.submit_stream_to_site(site, pendings);
+        }
+    }
+
+    /// Pick a site for every pending task under one lock acquisition and
+    /// group the batch per chosen site, preserving submission order
+    /// within each group. Shared by the streamed and bundled paths.
+    fn group_by_site(self: &Arc<Self>, batch: Vec<Pending>) -> Vec<(usize, Vec<Pending>)> {
+        let mut by_site: Vec<(usize, Vec<Pending>)> = Vec::new();
+        {
             let now = Instant::now();
             let (m, _) = &*self.inner;
             let mut st = m.lock().unwrap();
-            batch
-                .iter()
-                .map(|p| Self::pick_site(&mut st, p.last_site, now))
-                .collect()
+            for p in batch {
+                let site = Self::pick_site(&mut st, p.last_site, now);
+                match by_site.iter_mut().find(|(s, _)| *s == site) {
+                    Some((_, v)) => v.push(p),
+                    None => by_site.push((site, vec![p])),
+                }
+            }
+        }
+        by_site
+    }
+
+    /// Hand a site's share of a batch to its provider in one streaming
+    /// call. Provider handles are immutable: no scheduler lock here.
+    fn submit_stream_to_site(self: &Arc<Self>, site: usize, pendings: Vec<Pending>) {
+        let provider = Arc::clone(&self.providers[site]);
+        let submit_us = self.now_us();
+        let batch: Vec<(AppTask, TaskDone)> = pendings
+            .into_iter()
+            .map(|p| {
+                let sched = Arc::clone(self);
+                let task = p.task.clone();
+                let done: TaskDone =
+                    Box::new(move |r| sched.on_task_done(site, p, r, submit_us));
+                (task, done)
+            })
+            .collect();
+        provider.submit_stream(batch);
+    }
+
+    /// Per-task completion from the streaming path: score bookkeeping
+    /// under the lock, then retry or finalize outside it.
+    fn on_task_done(
+        self: &Arc<Self>,
+        site: usize,
+        p: Pending,
+        r: TaskResult,
+        submit_us: u64,
+    ) {
+        debug_assert_eq!(p.task.id, r.id);
+        let now = self.now_us();
+        let retry = {
+            let (m, _) = &*self.inner;
+            let mut st = m.lock().unwrap();
+            self.note_outcome(&mut st, site, r.ok);
+            !r.ok && p.attempts < self.retries
         };
-        for (site, p) in sites.into_iter().zip(batch) {
-            self.submit_bundle(site, vec![p]);
+        if retry {
+            self.dispatch_singles(vec![Pending {
+                task: p.task,
+                done: p.done,
+                attempts: p.attempts + 1,
+                last_site: Some(site),
+            }]);
+            return;
+        }
+        self.timeline.record(TaskRecord {
+            task_id: r.id,
+            stage: p.task.executable.clone(),
+            site: self.site_names[site].clone(),
+            executor: r.executor,
+            submitted: submit_us,
+            started: now.saturating_sub(r.exec_us),
+            ended: now,
+            ok: r.ok,
+        });
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        (p.done)(r);
+    }
+
+    /// Score/suspension bookkeeping for one task outcome: additive
+    /// increase on success, multiplicative decrease + possible suspension
+    /// on failure. Runs inside the scheduler lock.
+    fn note_outcome(&self, st: &mut SchedInner, site: usize, ok: bool) {
+        if ok {
+            st.sites[site].successes += 1;
+            st.sites[site].score = (st.sites[site].score + 1.0).min(1e6);
+        } else {
+            st.sites[site].failures += 1;
+            st.sites[site].score = (st.sites[site].score * 0.5).max(0.25);
+            if st.sites[site].failures % self.suspend_after_failures.max(1) == 0 {
+                st.sites[site].suspended_until =
+                    Some(Instant::now() + self.suspend_for);
+            }
         }
     }
 
@@ -348,21 +449,7 @@ impl GridScheduler {
             self.submit_bundle(site, batch);
             return;
         }
-        // Group the batch per chosen site: one lock acquisition covers
-        // every site pick in the batch.
-        let mut by_site: Vec<(usize, Vec<Pending>)> = Vec::new();
-        {
-            let now = Instant::now();
-            let (m, _) = &*self.inner;
-            let mut st = m.lock().unwrap();
-            for p in batch {
-                let site = Self::pick_site(&mut st, p.last_site, now);
-                match by_site.iter_mut().find(|(s, _)| *s == site) {
-                    Some((_, v)) => v.push(p),
-                    None => by_site.push((site, vec![p])),
-                }
-            }
-        }
+        let by_site = self.group_by_site(batch);
         // Respect the clustering bundle cap even when a batched submit
         // grew the buffer past it before the flush.
         let max_bundle = self
@@ -413,31 +500,16 @@ impl GridScheduler {
             let mut st = m.lock().unwrap();
             for (p, r) in pendings.into_iter().zip(results) {
                 debug_assert_eq!(p.task.id, r.id);
-                if r.ok {
-                    // Score: additive-increase on success.
-                    st.sites[site].successes += 1;
-                    st.sites[site].score = (st.sites[site].score + 1.0).min(1e6);
+                self.note_outcome(&mut st, site, r.ok);
+                if r.ok || p.attempts >= self.retries {
                     finals.push((p, r));
                 } else {
-                    // Score: multiplicative-decrease; maybe suspend.
-                    st.sites[site].failures += 1;
-                    st.sites[site].score = (st.sites[site].score * 0.5).max(0.25);
-                    if st.sites[site].failures % self.suspend_after_failures.max(1)
-                        == 0
-                    {
-                        st.sites[site].suspended_until =
-                            Some(Instant::now() + self.suspend_for);
-                    }
-                    if p.attempts < self.retries {
-                        retry.push(Pending {
-                            task: p.task,
-                            done: p.done,
-                            attempts: p.attempts + 1,
-                            last_site: Some(site),
-                        });
-                    } else {
-                        finals.push((p, r));
-                    }
+                    retry.push(Pending {
+                        task: p.task,
+                        done: p.done,
+                        attempts: p.attempts + 1,
+                        last_site: Some(site),
+                    });
                 }
             }
         }
@@ -640,6 +712,72 @@ mod tests {
         fn slots(&self) -> usize {
             1
         }
+    }
+
+    /// Provider that records streamed batch sizes and completes each
+    /// task individually, in reverse submission order (to prove the
+    /// scheduler tolerates out-of-order per-task completions).
+    struct StreamProbe {
+        stream_batches: Arc<Mutex<Vec<usize>>>,
+    }
+
+    impl Provider for StreamProbe {
+        fn name(&self) -> &str {
+            "stream-probe"
+        }
+
+        fn submit(&self, _bundle: Vec<AppTask>, _done: BundleDone) {
+            panic!("unclustered batches must use submit_stream, not submit");
+        }
+
+        fn submit_stream(&self, batch: Vec<(AppTask, crate::providers::TaskDone)>) {
+            self.stream_batches.lock().unwrap().push(batch.len());
+            for (t, done) in batch.into_iter().rev() {
+                done(TaskResult {
+                    id: t.id,
+                    ok: true,
+                    error: None,
+                    executor: 0,
+                    exec_us: 0,
+                    wait_us: 0,
+                });
+            }
+        }
+
+        fn slots(&self) -> usize {
+            4
+        }
+    }
+
+    #[test]
+    fn unclustered_flush_streams_once_with_per_task_completions() {
+        let batches = Arc::new(Mutex::new(Vec::new()));
+        let p: Arc<dyn Provider> =
+            Arc::new(StreamProbe { stream_batches: Arc::clone(&batches) });
+        let sched = GridScheduler::new(vec![p], None, 0, 9);
+        let (tx, rx) = mpsc::channel();
+        let batch: Vec<(AppTask, TaskDone)> = (0..32u64)
+            .map(|i| {
+                let tx = tx.clone();
+                let done: TaskDone = Box::new(move |r| tx.send(r).unwrap());
+                (task(i), done)
+            })
+            .collect();
+        sched.submit_batch(batch);
+        let mut ids = std::collections::HashSet::new();
+        for _ in 0..32 {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(r.ok);
+            ids.insert(r.id);
+        }
+        assert_eq!(ids.len(), 32, "each task completed exactly once");
+        assert_eq!(
+            *batches.lock().unwrap(),
+            vec![32],
+            "one streamed provider call for the whole 32-task flush"
+        );
+        assert_eq!(sched.in_flight(), 0);
+        assert_eq!(sched.timeline().len(), 32);
     }
 
     #[test]

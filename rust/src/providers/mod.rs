@@ -46,6 +46,11 @@ pub struct TaskResult {
 /// Completion callback for a submitted bundle.
 pub type BundleDone = Box<dyn FnOnce(Vec<TaskResult>) + Send>;
 
+/// Completion callback for a single task. This is the unit of the
+/// streaming batch-submit contract ([`Provider::submit_stream`]): submits
+/// are batched, completions are delivered one `TaskDone` at a time.
+pub type TaskDone = Box<dyn FnOnce(TaskResult) + Send>;
+
 /// The app runner: maps an [`AppTask`] to actual computation. The real
 /// registry (apps::exec) dispatches on `executable` and calls PJRT
 /// artifacts; tests install mocks (sleepers, failers).
@@ -55,11 +60,43 @@ pub type AppRunner = Arc<dyn Fn(&AppTask) -> Result<()> + Send + Sync>;
 /// we implement submit + drain; suspension happens at the scheduler level
 /// via site scores).
 pub trait Provider: Send + Sync {
+    /// Site name (stable; used for timeline records and diagnostics).
     fn name(&self) -> &str;
     /// Submit a bundle of tasks; `done` fires exactly once with all
     /// results (bundles run on one executor, serially, like a clustered
     /// job).
     fn submit(&self, bundle: Vec<AppTask>, done: BundleDone);
+    /// Streaming batch submit: hand the provider a whole batch of
+    /// *independent* tasks in one call, with a per-task completion
+    /// callback for each.
+    ///
+    /// Contract (see DESIGN.md §4.2):
+    /// - The provider must accept the entire batch in one operation
+    ///   (amortizing locks/wire round-trips over the batch), but each
+    ///   task completes independently — a task's `done` fires as soon as
+    ///   *that task* finishes. No completion may be delayed until the
+    ///   rest of the batch finishes, or dataflow pipelining (paper
+    ///   §3.13) would degrade to bundle-barrier execution.
+    /// - Tasks in the batch may run concurrently on different executors
+    ///   and complete in any order.
+    /// - Each `done` fires exactly once, including on task failure
+    ///   (failures are reported through `TaskResult::ok`, not panics).
+    ///
+    /// The default implementation degrades to one single-task bundle per
+    /// task, which trivially satisfies the per-task completion contract;
+    /// real providers override it to batch the submit side.
+    fn submit_stream(&self, batch: Vec<(AppTask, TaskDone)>) {
+        for (task, done) in batch {
+            self.submit(
+                vec![task],
+                Box::new(move |mut results: Vec<TaskResult>| {
+                    if let Some(r) = results.pop() {
+                        done(r);
+                    }
+                }),
+            );
+        }
+    }
     /// Number of executor slots (for efficiency accounting).
     fn slots(&self) -> usize;
 }
@@ -171,6 +208,34 @@ impl Provider for LocalProvider {
             enqueued: std::time::Instant::now(),
         });
         self.shared.cv.notify_one();
+    }
+
+    fn submit_stream(&self, batch: Vec<(AppTask, TaskDone)>) {
+        if batch.is_empty() {
+            return;
+        }
+        // One queue lock for the whole batch; each task is its own work
+        // item so completions stay per-task and workers pick tasks up
+        // concurrently.
+        let n = batch.len();
+        let now = std::time::Instant::now();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for (task, done) in batch {
+                q.push_back(WorkItem {
+                    bundle: vec![task],
+                    done: Box::new(move |mut results: Vec<TaskResult>| {
+                        if let Some(r) = results.pop() {
+                            done(r);
+                        }
+                    }),
+                    enqueued: now,
+                });
+            }
+        }
+        for _ in 0..n.min(self.nworkers) {
+            self.shared.cv.notify_one();
+        }
     }
 
     fn slots(&self) -> usize {
@@ -328,5 +393,95 @@ mod tests {
         let (runner, _) = testing::sleeper(0);
         let p = LocalProvider::new("local", 2, runner);
         drop(p); // must not hang
+    }
+
+    #[test]
+    fn submit_stream_delivers_per_task_completions() {
+        let (runner, count) = testing::sleeper(0);
+        let p = LocalProvider::new("local", 4, runner);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let batch: Vec<(AppTask, TaskDone)> = (0..16u64)
+            .map(|i| {
+                let tx = tx.clone();
+                let done: TaskDone = Box::new(move |r| tx.send(r).unwrap());
+                (
+                    AppTask {
+                        id: i,
+                        key: format!("k{i}"),
+                        executable: "x".into(),
+                        args: vec![],
+                        inputs: vec![],
+                        outputs: vec![],
+                    },
+                    done,
+                )
+            })
+            .collect();
+        p.submit_stream(batch);
+        let mut ids = std::collections::HashSet::new();
+        for _ in 0..16 {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            assert!(r.ok);
+            ids.insert(r.id);
+        }
+        assert_eq!(ids.len(), 16, "each task completed exactly once");
+        assert_eq!(count.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn default_submit_stream_falls_back_to_single_bundles() {
+        /// A provider with only the required methods: `submit_stream`
+        /// comes from the trait default.
+        struct Minimal {
+            sizes: Arc<Mutex<Vec<usize>>>,
+        }
+        impl Provider for Minimal {
+            fn name(&self) -> &str {
+                "minimal"
+            }
+            fn submit(&self, bundle: Vec<AppTask>, done: BundleDone) {
+                self.sizes.lock().unwrap().push(bundle.len());
+                let results = bundle
+                    .iter()
+                    .map(|t| TaskResult {
+                        id: t.id,
+                        ok: true,
+                        error: None,
+                        executor: 0,
+                        exec_us: 0,
+                        wait_us: 0,
+                    })
+                    .collect();
+                done(results);
+            }
+            fn slots(&self) -> usize {
+                1
+            }
+        }
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let p = Minimal { sizes: Arc::clone(&sizes) };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let batch: Vec<(AppTask, TaskDone)> = (0..3u64)
+            .map(|i| {
+                let tx = tx.clone();
+                let done: TaskDone = Box::new(move |r| tx.send(r.id).unwrap());
+                (
+                    AppTask {
+                        id: i,
+                        key: format!("k{i}"),
+                        executable: "x".into(),
+                        args: vec![],
+                        inputs: vec![],
+                        outputs: vec![],
+                    },
+                    done,
+                )
+            })
+            .collect();
+        p.submit_stream(batch);
+        let mut got: Vec<u64> = (0..3).map(|_| rx.recv().unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2]);
+        assert_eq!(*sizes.lock().unwrap(), vec![1, 1, 1], "one bundle per task");
     }
 }

@@ -324,6 +324,16 @@ impl Driver {
                 }
                 self.q.at(now, Event::LrmCycle { site });
             }
+            Event::FalkonSubmit { tasks, .. } => {
+                // One frame arrives whole: count it once, queue its tasks.
+                let f = self.falkon.as_mut().unwrap();
+                f.frames_received += 1;
+                for t in tasks {
+                    f.queue.push_back(t);
+                }
+                f.peak_queue = f.peak_queue.max(f.queue.len());
+                self.queue_falkon_dispatch(now);
+            }
             Event::FalkonDispatch { .. } => {
                 self.falkon_dispatch_queued = false;
                 self.on_falkon_dispatch(now);
@@ -382,9 +392,23 @@ impl Driver {
                 }
             }
             Mode::Falkon { .. } => {
+                // Releases arrive one at a time in virtual time, so each
+                // is a frame of one on the wire. With a zero-cost
+                // framing config (the default) the task is queued
+                // immediately; a nonzero config delays the *arrival* of
+                // the frame at the service — the task must not be
+                // dispatchable (nor visible to DRP) before then.
                 let f = self.falkon.as_mut().unwrap();
-                f.submit(task);
-                self.queue_falkon_dispatch(now);
+                let cost = f.cfg.framing.submit_cost(1);
+                if cost == 0 {
+                    f.submit(task);
+                    self.queue_falkon_dispatch(now);
+                } else {
+                    self.q.at(
+                        now + cost,
+                        Event::FalkonSubmit { falkon: 0, tasks: vec![task] },
+                    );
+                }
             }
             Mode::MultiSite { .. } => {
                 // Tasks wait centrally; score-sized per-site windows pull
@@ -720,7 +744,7 @@ pub fn fig6_point(task_secs: f64, n: usize, seed: u64) -> Vec<(String, f64)> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::falkon_model::DrpPolicy;
+    use crate::sim::falkon_model::{DrpPolicy, FrameConfig};
 
     fn falkon_static(procs: usize) -> Mode {
         let mut cfg = FalkonConfig::default();
@@ -786,6 +810,29 @@ mod tests {
         // Paper: clustering improves 2-4x for many short jobs.
         let ratio = per_task.makespan_secs / clustered.makespan_secs;
         assert!(ratio > 2.0, "clustering speedup {ratio}");
+    }
+
+    #[test]
+    fn framing_cost_delays_task_arrival() {
+        // With a nonzero per-frame submit cost, no task may be dispatched
+        // before its frame has arrived at the service.
+        let mut cfg = FalkonConfig::default();
+        cfg.drp = DrpPolicy::static_pool(4);
+        cfg.drp.allocation_latency = 0;
+        cfg.framing = FrameConfig {
+            frame_cap: 256,
+            frame_overhead: 500_000,
+            per_task_cost: 0,
+        };
+        let dag = Dag::bag(8, "t", 1.0);
+        let o = Driver::new(dag, Mode::Falkon { cfg }, 13).run();
+        assert_eq!(o.timeline.len(), 8);
+        let first_start =
+            o.timeline.records.iter().map(|r| r.started).min().unwrap();
+        assert!(
+            first_start >= 500_000,
+            "dispatch before frame arrival: {first_start}"
+        );
     }
 
     #[test]

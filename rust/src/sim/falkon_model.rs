@@ -20,6 +20,9 @@ pub struct FalkonConfig {
     pub executor_overhead: Micros,
     /// DRP policy.
     pub drp: DrpPolicy,
+    /// Client->service submission framing (mirrors the real endpoint's
+    /// `SUBMITB` frames in `falkon::protocol`).
+    pub framing: FrameConfig,
 }
 
 impl Default for FalkonConfig {
@@ -28,7 +31,48 @@ impl Default for FalkonConfig {
             dispatch_cost: 2053, // 1 / 487 tasks/s
             executor_overhead: 45_000,
             drp: DrpPolicy::default(),
+            framing: FrameConfig::default(),
         }
+    }
+}
+
+/// Submission-framing model: the virtual-time mirror of the real TCP
+/// endpoint's count-prefixed `SUBMITB` frames (see `falkon::protocol`
+/// and DESIGN.md §4.1). A framed submit pays `frame_overhead` once per
+/// frame (header parse + one wire round trip) plus `per_task_cost` per
+/// task line, so batching N tasks into ceil(N / frame_cap) frames
+/// models the reduced round-trip count of the batched wire protocol.
+///
+/// Defaults are zero-cost (a frame of one, free), which preserves the
+/// pre-framing behavior of every seeded simulation bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct FrameConfig {
+    /// Max tasks per submit frame (the client-side chunking bound).
+    pub frame_cap: usize,
+    /// Per-frame cost: header handling plus one submit round trip.
+    pub frame_overhead: Micros,
+    /// Per-task decode cost inside a frame.
+    pub per_task_cost: Micros,
+}
+
+impl Default for FrameConfig {
+    fn default() -> Self {
+        Self { frame_cap: 256, frame_overhead: 0, per_task_cost: 0 }
+    }
+}
+
+impl FrameConfig {
+    /// Serialized submission cost for `n` tasks under this framing:
+    /// one `frame_overhead` per frame plus `per_task_cost` per task.
+    pub fn submit_cost(&self, n: usize) -> Micros {
+        let frames = n.div_ceil(self.frame_cap.max(1)) as Micros;
+        frames * self.frame_overhead + n as Micros * self.per_task_cost
+    }
+
+    /// The same `n` tasks submitted one line-per-task (the legacy
+    /// `SUBMIT` path): every task pays the full round trip.
+    pub fn line_per_task_cost(&self, n: usize) -> Micros {
+        n as Micros * (self.frame_overhead + self.per_task_cost)
     }
 }
 
@@ -119,10 +163,15 @@ pub struct FalkonSim {
     pub dispatcher_free_at: Micros,
     /// Executors requested but not yet registered.
     pub pending_allocs: usize,
-    /// Stats.
+    /// Tasks handed to executors so far.
     pub dispatched: u64,
+    /// High-water mark of the service queue.
     pub peak_queue: usize,
+    /// High-water mark of the live executor count.
     pub peak_executors: usize,
+    /// Submit frames received (a legacy line-per-task submit counts as a
+    /// frame of one), for round-trip accounting.
+    pub frames_received: u64,
 }
 
 impl FalkonSim {
@@ -136,12 +185,31 @@ impl FalkonSim {
             dispatched: 0,
             peak_queue: 0,
             peak_executors: 0,
+            frames_received: 0,
         }
     }
 
+    /// Submit one task (a frame of one on the wire).
     pub fn submit(&mut self, task: usize) {
+        self.frames_received += 1;
         self.queue.push_back(task);
         self.peak_queue = self.peak_queue.max(self.queue.len());
+    }
+
+    /// Submit a batch as `SUBMITB`-style frames at `now`: tasks enter
+    /// the service queue after the serialized framing cost (one
+    /// round-trip per frame, not per task). Returns the virtual time at
+    /// which the whole batch is queued — callers schedule their first
+    /// dispatch pass no earlier than this.
+    pub fn submit_framed(&mut self, tasks: &[usize], now: Micros) -> Micros {
+        let ready = now + self.cfg.framing.submit_cost(tasks.len());
+        self.frames_received +=
+            tasks.len().div_ceil(self.cfg.framing.frame_cap.max(1)) as u64;
+        for &t in tasks {
+            self.queue.push_back(t);
+        }
+        self.peak_queue = self.peak_queue.max(self.queue.len());
+        ready
     }
 
     pub fn live_executors(&self) -> usize {
@@ -311,6 +379,35 @@ mod tests {
         assert_eq!(p.desired(1000, 16), 16);
         assert_eq!(p.desired(0, 16), 16);
         assert_eq!(p.idle_timeout, 0);
+    }
+
+    #[test]
+    fn framed_submission_models_reduced_round_trips() {
+        let mut f = svc();
+        f.cfg.framing =
+            FrameConfig { frame_cap: 100, frame_overhead: 1000, per_task_cost: 10 };
+        let tasks: Vec<usize> = (0..250).collect();
+        let ready = f.submit_framed(&tasks, 0);
+        // 3 frames x 1000 us + 250 task lines x 10 us.
+        assert_eq!(ready, 3 * 1000 + 250 * 10);
+        assert_eq!(f.frames_received, 3);
+        assert_eq!(f.queue.len(), 250);
+        // The legacy line-per-task path pays a full round trip per task:
+        // framing cuts serialized submit cost by an order of magnitude.
+        assert_eq!(f.cfg.framing.line_per_task_cost(250), 250 * 1010);
+        assert!(
+            f.cfg.framing.submit_cost(250)
+                < f.cfg.framing.line_per_task_cost(250) / 10
+        );
+    }
+
+    #[test]
+    fn default_framing_is_zero_cost_and_behavior_preserving() {
+        let mut f = svc();
+        let ready = f.submit_framed(&[0, 1, 2], 123);
+        assert_eq!(ready, 123, "zero-cost default framing enqueues instantly");
+        assert_eq!(f.queue.len(), 3);
+        assert_eq!(f.frames_received, 1);
     }
 
     #[test]

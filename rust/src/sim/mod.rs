@@ -55,6 +55,9 @@ pub enum Event {
     LrmCycle { site: usize },
     /// A job (bundle of tasks) finished on an LRM node.
     LrmJobDone { site: usize, node: usize, bundle: Vec<usize> },
+    /// A submit frame's tasks arrive at the Falkon service queue (after
+    /// the serialized framing cost; see `falkon_model::FrameConfig`).
+    FalkonSubmit { falkon: usize, tasks: Vec<usize> },
     /// Falkon dispatcher attempts to match queue and idle executors.
     FalkonDispatch { falkon: usize },
     /// An executor finished its task.

@@ -482,3 +482,75 @@ Image fin = consume(left);
     let report = engine.run(&prog).unwrap();
     assert_eq!(report.executed, 2);
 }
+
+/// Provider wrapper that records the size of every streamed batch it
+/// receives before delegating to a real [`LocalProvider`].
+struct StreamSpy {
+    inner: LocalProvider,
+    batches: Arc<Mutex<Vec<usize>>>,
+}
+
+impl Provider for StreamSpy {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn submit(&self, bundle: Vec<AppTask>, done: gridswift::providers::BundleDone) {
+        self.inner.submit(bundle, done);
+    }
+
+    fn submit_stream(&self, batch: Vec<(AppTask, gridswift::providers::TaskDone)>) {
+        self.batches.lock().unwrap().push(batch.len());
+        self.inner.submit_stream(batch);
+    }
+
+    fn slots(&self) -> usize {
+        self.inner.slots()
+    }
+}
+
+#[test]
+fn unclustered_flush_reaches_provider_as_one_streamed_batch() {
+    // The acceptance test for end-to-end batched dispatch: a 12-wide
+    // independent foreach must leave the engine's submit buffer as ONE
+    // Provider::submit_stream call (which, on the Falkon provider, is
+    // one FalkonService::submit_batch queue push), while the 12
+    // completions are delivered individually by the provider.
+    let (runner, _log) = writer_runner(0);
+    let wd = workdir("stream_flush");
+    std::fs::create_dir_all(wd.join("in")).unwrap();
+    gen_run(&wd.join("in"), "b", 12);
+    let batches = Arc::new(Mutex::new(Vec::new()));
+    let spy: Arc<dyn Provider> = Arc::new(StreamSpy {
+        inner: LocalProvider::new("local", 4, runner),
+        batches: Arc::clone(&batches),
+    });
+    let sched = GridScheduler::new(vec![spy], None, 0, 11);
+    let cfg = EngineConfig { workdir: wd.clone(), pipelining: true, restart_log: None };
+    let engine = Engine::new(cfg, sched);
+    let src = format!(
+        r#"
+type Image {{}};
+type Header {{}};
+type Volume {{ Image img; Header hdr; }};
+type Run {{ Volume v[]; }};
+(Volume ov) work (Volume iv) {{ app {{ work @filename(iv.img) @filename(ov.img); }} }}
+(Run or) workRun (Run ir) {{
+  foreach Volume iv, i in ir.v {{ or.v[i] = work(iv); }}
+}}
+Run input<run_mapper;location="{}",prefix="b">;
+Run out = workRun(input);
+"#,
+        wd.join("in").display()
+    );
+    let prog = compile(&src).unwrap();
+    let report = engine.run(&prog).unwrap();
+    assert_eq!(report.executed, 12);
+    assert_eq!(report.timeline.len(), 12);
+    let b = batches.lock().unwrap();
+    assert_eq!(
+        *b,
+        vec![12],
+        "all 12 independent tasks must flush as one streamed provider call"
+    );
+}

@@ -183,3 +183,92 @@ fn stats_accounting_consistent() {
     assert_eq!(s.failed.load(Ordering::SeqCst), 1);
     assert_eq!(svc.queue_len(), 0);
 }
+
+#[test]
+fn submit_batch_completions_stream_per_task() {
+    // A batch where one task blocks until another's completion has been
+    // delivered: proves submit_batch completions are per-task (streamed)
+    // and never aggregated until the batch finishes. Would deadlock and
+    // time out under bundle-end aggregation.
+    let (unblock_tx, unblock_rx) = std::sync::mpsc::channel::<()>();
+    let unblock_rx = std::sync::Mutex::new(unblock_rx);
+    let svc = FalkonService::start(
+        FalkonServiceConfig {
+            drp: RealDrpPolicy::static_pool(2),
+            executor_overhead: Duration::ZERO,
+        },
+        Arc::new(move |t: &AppTask| {
+            if t.id == 0 {
+                unblock_rx
+                    .lock()
+                    .unwrap()
+                    .recv_timeout(Duration::from_secs(10))
+                    .map_err(|_| anyhow::anyhow!("never unblocked"))?;
+            }
+            Ok(())
+        }),
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    let batch: Vec<(AppTask, gridswift::providers::TaskDone)> = (0..8u64)
+        .map(|i| {
+            let tx = tx.clone();
+            let done: gridswift::providers::TaskDone =
+                Box::new(move |r| tx.send(r).unwrap());
+            (task(i), done)
+        })
+        .collect();
+    svc.submit_batch(batch);
+    // Under bundle-end aggregation nothing would arrive while task 0 is
+    // blocked and this recv would time out; under streaming, a peer's
+    // completion arrives immediately.
+    let first = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert!(first.ok);
+    assert_ne!(first.id, 0, "a peer completed while task 0 was still blocked");
+    unblock_tx.send(()).unwrap();
+    let mut seen = std::collections::HashSet::new();
+    seen.insert(first.id);
+    for _ in 0..7 {
+        let r = rx.recv_timeout(Duration::from_secs(15)).unwrap();
+        assert!(r.ok);
+        seen.insert(r.id);
+    }
+    assert_eq!(seen.len(), 8, "every batch task completed exactly once");
+}
+
+#[test]
+fn tcp_framed_submissions_from_multiple_clients() {
+    let svc = FalkonService::start(
+        FalkonServiceConfig {
+            drp: RealDrpPolicy::static_pool(4),
+            executor_overhead: Duration::ZERO,
+        },
+        Arc::new(|_t| Ok(())),
+    );
+    let server = FalkonTcpServer::start(Arc::clone(&svc), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..3u64)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = FalkonClient::connect(addr).unwrap();
+                let frame: Vec<gridswift::falkon::TaskSpec> = (0..200u64)
+                    .map(|i| gridswift::falkon::TaskSpec {
+                        id: c * 1000 + i,
+                        executable: "sleep0".into(),
+                        args: vec![],
+                    })
+                    .collect();
+                client.submit_batch(&frame).unwrap();
+                let mut ok = 0;
+                for _ in 0..frame.len() {
+                    if client.next_result().unwrap().ok {
+                        ok += 1;
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let total: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 600);
+    assert_eq!(svc.stats().completed.load(Ordering::SeqCst), 600);
+}

@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Compare the current BENCH_dispatch.json against the previous run.
+
+Usage: bench_trend.py PREV_JSON CURRENT_JSON [--max-regress 0.20]
+
+Fails (exit 1) when a tracked tasks/s metric regressed by more than
+--max-regress relative to the previous run. A missing/unreadable
+previous file is not an error (first run, expired artifact): the check
+passes with a note so the pipeline stays green on fresh branches.
+Improvements and regressions within tolerance are reported for the log.
+"""
+
+import argparse
+import json
+import sys
+
+# Metrics tracked for regression: (label, path into the JSON object).
+TRACKED = [
+    ("single-submit tasks/s", ("single_submit", "tasks_per_s")),
+    ("batched-submit tasks/s", ("batched_submit", "tasks_per_s")),
+]
+
+
+def lookup(obj, path):
+    for key in path:
+        if not isinstance(obj, dict) or key not in obj:
+            return None
+        obj = obj[key]
+    return obj if isinstance(obj, (int, float)) else None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev")
+    ap.add_argument("current")
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="maximum allowed fractional drop (default 0.20)")
+    args = ap.parse_args()
+
+    try:
+        with open(args.prev) as f:
+            prev = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"no previous bench to compare ({e}); passing")
+        return 0
+
+    try:
+        with open(args.current) as f:
+            cur = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"ERROR: current bench unreadable: {e}")
+        return 1
+
+    # Quick-mode runs use smaller task counts; rates are still
+    # comparable, but flag mismatched modes in the log.
+    if prev.get("quick") != cur.get("quick"):
+        print(f"note: mode mismatch (prev quick={prev.get('quick')}, "
+              f"cur quick={cur.get('quick')}); comparing anyway")
+
+    failed = False
+    for label, path in TRACKED:
+        p, c = lookup(prev, path), lookup(cur, path)
+        if c is None:
+            # The current bench must always emit every tracked key; a
+            # silent skip here would disable the gate on a key rename.
+            print(f"  {label}: MISSING from current bench output")
+            failed = True
+            continue
+        if p is None or p <= 0:
+            print(f"  {label}: no previous value (prev={p}); skipping")
+            continue
+        delta = (c - p) / p
+        mark = "OK"
+        if delta < -args.max_regress:
+            mark = "REGRESSION"
+            failed = True
+        print(f"  {label}: {p:.0f} -> {c:.0f} ({delta:+.1%}) {mark}")
+
+    if failed:
+        print(f"FAIL: a tracked metric is missing or dropped more than "
+              f"{args.max_regress:.0%} vs the previous run")
+        return 1
+    print("bench trend OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
