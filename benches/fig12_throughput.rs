@@ -3,8 +3,12 @@
 //! over TCP line-per-task and (b') over batched SUBMITB frames (the
 //! paper's LAN/WAN hops, with and without the batched wire protocol),
 //! (c) Swift submitting through the Falkon provider (full engine path:
-//! site selection, sandbox dirs, logging, streamed batch submits), and
-//! (d) the GRAM+PBS baseline (simulated: ~2 jobs/s).
+//! site selection, sandbox dirs, logging, streamed batch submits),
+//! (d) the GRAM+PBS baseline (simulated: ~2 jobs/s), and (e) a
+//! virtual-time WAN variant with nonzero `FrameConfig` costs: the same
+//! bag submitted framed (cap 256 via the shared `FrameCoalescer`
+//! cut-off) vs line-per-task over a paper-scale WAN round trip, both
+//! through the sim's serialized submit channel.
 //!
 //! Paper: Falkon direct ~120/s, Swift+Falkon 56/s LAN, 46/s WAN,
 //! GT2 GRAM+PBS ~2/s (Swift+Falkon = 23x GRAM).
@@ -21,6 +25,7 @@ use gridswift::metrics::Table;
 use gridswift::util::json::Json;
 use gridswift::providers::AppTask;
 use gridswift::sim::driver::{Driver, Mode};
+use gridswift::sim::falkon_model::{DrpPolicy, FalkonConfig, FrameConfig};
 use gridswift::sim::lrm::{GramConfig, LrmConfig};
 use gridswift::sim::Dag;
 use gridswift::stack::{build, ProviderKind, StackOptions};
@@ -133,6 +138,32 @@ foreach f, i in inputs {{
     n as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// Per-frame WAN submit round trip (UC->ANL scale, ~20 ms) and per-task
+/// line cost inside a frame.
+const WAN_RTT_US: u64 = 20_000;
+const WAN_PER_TASK_US: u64 = 100;
+
+/// Virtual-time WAN submission: a sleep(0)-scale bag through the sim's
+/// Falkon model with costed framing. `frame_cap` 1 models the legacy
+/// line-per-task client (every task pays the full round trip,
+/// serialized on the submit channel); larger caps model the batched
+/// `SUBMITB` client, whose cut-off is the same `FrameCoalescer` policy
+/// the real client ships.
+fn sim_wan(n: usize, frame_cap: usize) -> f64 {
+    let mut cfg = FalkonConfig::default();
+    cfg.drp = DrpPolicy::static_pool(8);
+    cfg.drp.allocation_latency = 0;
+    cfg.executor_overhead = 0;
+    cfg.framing = FrameConfig {
+        frame_cap,
+        frame_overhead: WAN_RTT_US,
+        per_task_cost: WAN_PER_TASK_US,
+    };
+    let dag = Dag::bag(n, "sleep0", 0.001);
+    let o = Driver::new(dag, Mode::Falkon { cfg }, 17).run();
+    n as f64 / o.makespan_secs
+}
+
 fn gram_pbs_sim(n: usize) -> f64 {
     let dag = Dag::bag(n, "sleep0", 0.01);
     // The paper's "standard setting" (GT2 GRAM + PBS, no MolDyn-style
@@ -159,6 +190,10 @@ fn main() {
     let tcp_framed = framed_tcp(n_direct, 256);
     let swift = via_swift(n_swift);
     let gram = gram_pbs_sim(n_gram);
+    // Virtual-time WAN variant (deterministic; same n in both modes).
+    let n_wan = if quick { 1_500 } else { 5_000 };
+    let wan_framed = sim_wan(n_wan, 256);
+    let wan_line = sim_wan(n_wan, 1);
 
     let mut t = Table::new(&["Path", "tasks/s (ours)", "paper"]);
     t.row(&[
@@ -186,12 +221,27 @@ fn main() {
         format!("{gram:.1}"),
         "~2".into(),
     ]);
+    t.row(&[
+        "WAN sim, line-per-task (20ms RTT)".into(),
+        format!("{wan_line:.0}"),
+        "~46-115 (UC->ANL)".into(),
+    ]);
+    t.row(&[
+        "WAN sim, SUBMITB x256 (20ms RTT)".into(),
+        format!("{wan_framed:.0}"),
+        "- (batched frames)".into(),
+    ]);
     t.print();
 
     println!("\nshape checks:");
     println!(
         "  framed TCP vs line-per-task TCP: {:.1}x (batched frames cut per-task round trips)",
         tcp_framed / tcp
+    );
+    println!(
+        "  WAN sim framed vs line-per-task: {:.1}x (wire-bound ~{:.0}/s -> dispatcher-bound)",
+        wan_framed / wan_line,
+        1e6 / (WAN_RTT_US + WAN_PER_TASK_US) as f64
     );
     println!(
         "  Swift adds engine overhead vs direct submission: {:.1}x slower (paper: ~2.1x)",
@@ -219,6 +269,11 @@ fn main() {
     report.set("falkon_tcp_frame_chunk", 256u64);
     report.set("swift_falkon_tasks_per_s", swift);
     report.set("gram_pbs_sim_tasks_per_s", gram);
+    report.set("n_wan", n_wan);
+    report.set("sim_wan_rtt_us", WAN_RTT_US);
+    report.set("sim_wan_per_task_us", WAN_PER_TASK_US);
+    report.set("sim_wan_framed_tasks_per_s", wan_framed);
+    report.set("sim_wan_line_per_task_tasks_per_s", wan_line);
     report.set("paper_falkon_direct_tasks_per_s", 120u64);
     report.set("paper_swift_falkon_lan_tasks_per_s", 56u64);
     std::fs::write("BENCH_fig12.json", report.render())

@@ -25,6 +25,13 @@
 //! waits for its frame peers). Single-line `SUBMIT` requests keep their
 //! legacy `RESULT`-line acks so old clients work unchanged.
 //!
+//! Frame *cut-off* decisions — when a stream of singles becomes a frame
+//! — are the policy core's [`crate::policy::FrameCoalescer`]: the
+//! server's ack path runs it with a zero age threshold (flush
+//! combining, frames capped at [`MAX_FRAME_TASKS`]), and the client's
+//! optional [`FalkonClient::with_autobatch`] buffer runs it with a real
+//! batch/age window (the Nagle-style submit side).
+//!
 //! Executors remain in-process (this testbed is one host); the endpoint
 //! exists so remote clients — and the fig12 "submit from a different
 //! host" benchmark — exercise a real network hop on the submit path.
@@ -34,9 +41,11 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::policy::{FrameCoalescer, FramePolicy, RealClock};
 use crate::providers::{AppTask, TaskDone};
 
 use super::service::FalkonService;
@@ -251,36 +260,44 @@ impl Drop for FalkonTcpServer {
 }
 
 /// Per-connection shared state: the write half plus the pending-ack
-/// buffer that coalesces completions into `DONEB` frames.
+/// coalescer that cuts completions into `DONEB` frames.
+///
+/// The cut-off rule is the policy core's [`FrameCoalescer`] with a zero
+/// age threshold: an ack never *waits* for peers — every completion
+/// triggers a flush — but completions that accumulate while another
+/// completion holds the write lock coalesce into one frame (flush
+/// combining). The coalescer's batch cap also guarantees no `DONEB`
+/// frame ever exceeds [`MAX_FRAME_TASKS`], which an unbounded ack
+/// buffer could previously overflow under extreme backlog.
 struct ConnState {
     writer: Mutex<TcpStream>,
-    acks: Mutex<Vec<RemoteResult>>,
+    acks: Mutex<FrameCoalescer<RealClock, RemoteResult>>,
 }
 
 impl ConnState {
-    /// Queue one completion and flush. If another completion is mid-write
-    /// it picks this ack up in its own `DONEB` frame (flush combining);
-    /// no ack is ever delayed waiting for more completions.
+    /// Queue one completion and flush whatever frames are due.
     fn push_ack(&self, r: RemoteResult) {
-        self.acks.lock().unwrap().push(r);
+        let full = self.acks.lock().unwrap().push(r, Instant::now());
+        if let Some(frame) = full {
+            self.write_doneb(&frame);
+        }
         self.flush_acks();
     }
 
     fn flush_acks(&self) {
         loop {
-            let batch: Vec<RemoteResult> = {
-                let mut acks = self.acks.lock().unwrap();
-                if acks.is_empty() {
-                    return;
-                }
-                std::mem::take(&mut *acks)
-            };
-            let frame = encode_doneb(&batch);
-            if let Ok(mut w) = self.writer.lock() {
-                let _ = w.write_all(frame.as_bytes());
-            }
+            let batch = self.acks.lock().unwrap().take_due(Instant::now());
+            let Some(batch) = batch else { return };
+            self.write_doneb(&batch);
             // Loop: completions that arrived during the write get their
             // own frame now instead of waiting for the next completion.
+        }
+    }
+
+    fn write_doneb(&self, batch: &[RemoteResult]) {
+        let frame = encode_doneb(batch);
+        if let Ok(mut w) = self.writer.lock() {
+            let _ = w.write_all(frame.as_bytes());
         }
     }
 }
@@ -290,7 +307,10 @@ fn serve_conn(stream: TcpStream, svc: Arc<FalkonService>) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let conn = Arc::new(ConnState {
         writer: Mutex::new(stream),
-        acks: Mutex::new(Vec::new()),
+        acks: Mutex::new(FrameCoalescer::new(FramePolicy {
+            max_tasks: MAX_FRAME_TASKS,
+            max_age: Duration::ZERO,
+        })),
     });
     let mut line = String::new();
     loop {
@@ -383,12 +403,23 @@ fn remote(r: crate::providers::TaskResult) -> RemoteResult {
 /// A blocking TCP client for the Falkon endpoint. Decodes both legacy
 /// `RESULT` lines and batched `DONEB` frames into a single result
 /// stream.
+///
+/// With [`FalkonClient::with_autobatch`], a stream of single
+/// [`FalkonClient::submit_buffered`] calls is Nagle-style coalesced
+/// into `SUBMITB` frames by the policy core's [`FrameCoalescer`]: a
+/// frame ships when the batch cap fills or the oldest buffered task
+/// crosses the age threshold (checked on every client call — the
+/// blocking client has no timer thread), and [`FalkonClient::flush`]
+/// is the escape hatch. Reading results auto-flushes first, so a
+/// buffered submit can never deadlock against its own ack.
 pub struct FalkonClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     /// Results decoded from a `DONEB` frame (or stashed while waiting
     /// for a STATS reply) but not yet handed to the caller.
     pending: VecDeque<RemoteResult>,
+    /// Nagle-style submit buffer (None until `with_autobatch`).
+    submit_buf: Option<FrameCoalescer<RealClock, TaskSpec>>,
 }
 
 impl FalkonClient {
@@ -400,7 +431,57 @@ impl FalkonClient {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
             pending: VecDeque::new(),
+            submit_buf: None,
         })
+    }
+
+    /// Enable Nagle-style submit coalescing: buffered submissions cut
+    /// into `SUBMITB` frames of up to `max_tasks` (clamped to the wire
+    /// cap), or whenever the oldest buffered task is `max_age` old.
+    pub fn with_autobatch(mut self, max_tasks: usize, max_age: Duration) -> Self {
+        self.submit_buf = Some(FrameCoalescer::new(FramePolicy {
+            max_tasks: max_tasks.clamp(1, MAX_FRAME_TASKS),
+            max_age,
+        }));
+        self
+    }
+
+    /// Buffer one submission behind the autobatch cut-off. Without
+    /// [`FalkonClient::with_autobatch`], degrades to an immediate
+    /// single-task frame.
+    pub fn submit_buffered(&mut self, spec: TaskSpec) -> Result<()> {
+        let Some(buf) = self.submit_buf.as_mut() else {
+            let frame = [spec];
+            return self.write_submitb(&frame);
+        };
+        let now = Instant::now();
+        if let Some(frame) = buf.push(spec, now) {
+            return self.write_submitb(&frame);
+        }
+        if buf.due(now) {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Ship every buffered submission now (the escape hatch; also runs
+    /// before any blocking read).
+    pub fn flush(&mut self) -> Result<()> {
+        loop {
+            let frame = match self.submit_buf.as_mut() {
+                Some(buf) => buf.take_frame(),
+                None => None,
+            };
+            match frame {
+                Some(frame) => self.write_submitb(&frame)?,
+                None => return Ok(()),
+            }
+        }
+    }
+
+    fn write_submitb(&mut self, frame: &[TaskSpec]) -> Result<()> {
+        self.writer.write_all(encode_submitb(frame)?.as_bytes())?;
+        Ok(())
     }
 
     /// Fire a single submission (legacy line) without waiting.
@@ -427,11 +508,13 @@ impl FalkonClient {
     }
 
     /// Read the next completion (results may arrive in any order, from
-    /// `RESULT` lines or `DONEB` frames alike).
+    /// `RESULT` lines or `DONEB` frames alike). Flushes any buffered
+    /// submissions first so the read can't deadlock on them.
     pub fn next_result(&mut self) -> Result<RemoteResult> {
         if let Some(r) = self.pending.pop_front() {
             return Ok(r);
         }
+        self.flush()?;
         // One reused line buffer: this is the ack hot path (fig12 reads
         // tens of thousands of lines per run).
         let mut line = String::new();
@@ -476,6 +559,7 @@ impl FalkonClient {
     /// stashed for later [`FalkonClient::next_result`] calls, not
     /// dropped.
     pub fn stats(&mut self) -> Result<(u64, u64, u64, usize, usize)> {
+        self.flush()?;
         self.writer.write_all(b"STATS\n")?;
         let mut line = String::new();
         loop {
@@ -682,6 +766,61 @@ mod tests {
         }
         assert!(seen.contains(&1000), "legacy RESULT ack decoded");
         assert_eq!(seen.len(), 51);
+    }
+
+    #[test]
+    fn autobatch_coalesces_singles_into_frames() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect(server.addr())
+            .unwrap()
+            .with_autobatch(8, Duration::from_secs(60));
+        // 20 buffered singles with a 60 s age threshold: only the batch
+        // cut-off fires, shipping two full frames; 4 tasks stay
+        // buffered until the explicit flush.
+        for i in 0..20u64 {
+            client.submit_buffered(spec(i, "sleep0", &[])).unwrap();
+        }
+        assert_eq!(
+            client.submit_buf.as_ref().unwrap().len(),
+            4,
+            "two full frames shipped, remainder still buffered"
+        );
+        client.flush().unwrap();
+        assert!(client.submit_buf.as_ref().unwrap().is_empty());
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..20 {
+            let r = client.next_result().unwrap();
+            assert!(r.ok);
+            seen.insert(r.id);
+        }
+        assert_eq!(seen.len(), 20, "every buffered task acked once");
+    }
+
+    #[test]
+    fn autobatch_zero_age_ships_immediately() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect(server.addr())
+            .unwrap()
+            .with_autobatch(100, Duration::ZERO);
+        // Age threshold zero: the push itself is already due, so the
+        // task ships without filling the batch and without flush().
+        client.submit_buffered(spec(1, "sleep0", &[])).unwrap();
+        let r = client.next_result().unwrap();
+        assert!(r.ok);
+        assert_eq!(r.id, 1);
+    }
+
+    #[test]
+    fn next_result_flushes_buffered_submits() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect(server.addr())
+            .unwrap()
+            .with_autobatch(100, Duration::from_secs(60));
+        // Neither cut-off fires; the blocking read must flush or it
+        // would deadlock waiting for a task the server never saw.
+        client.submit_buffered(spec(9, "sleep0", &[])).unwrap();
+        let r = client.next_result().unwrap();
+        assert_eq!(r.id, 9);
     }
 
     #[test]

@@ -29,13 +29,17 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::policy::{DrpConfig, DrpController};
 use crate::providers::{AppRunner, AppTask, BundleDone, TaskResult};
 
 use super::queue::ShardedQueue;
 
 use super::queue::{DISPATCH_BATCH, MAX_SHARDS};
 
-/// Dynamic resource provisioning policy (real clock).
+/// Dynamic resource provisioning policy (real clock): the timing knobs
+/// live here; the sizing arithmetic (queued → desired count, chunking,
+/// the deregistration floor) is [`crate::policy::DrpController`],
+/// shared with the simulator's [`crate::sim::DrpPolicy`].
 #[derive(Debug, Clone)]
 pub struct RealDrpPolicy {
     pub min_executors: usize,
@@ -52,6 +56,18 @@ pub struct RealDrpPolicy {
 }
 
 impl RealDrpPolicy {
+    /// The clock-free sizing controller for this policy. The real
+    /// service allocates executors one at a time (threads, not node
+    /// chunks), so `chunk` is 1.
+    pub fn controller(&self) -> DrpController {
+        DrpController::new(DrpConfig {
+            min_executors: self.min_executors,
+            max_executors: self.max_executors,
+            tasks_per_executor: self.tasks_per_executor,
+            chunk: 1,
+        })
+    }
+
     /// A fixed-size pool: provisioned once, never shrinks.
     pub fn static_pool(n: usize) -> Self {
         Self {
@@ -347,6 +363,7 @@ impl Drop for FalkonService {
 
 fn drp_loop(inner: Arc<Inner>) {
     let policy = inner.cfg.drp.clone();
+    let ctrl = policy.controller();
     let mut pending_until: Option<Instant> = None;
     let mut pending_count = 0usize;
     loop {
@@ -365,23 +382,24 @@ fn drp_loop(inner: Arc<Inner>) {
                 pending_count = 0;
             }
         }
-        // Policy: one executor per tasks_per_executor queued. The queue
-        // length read is lock-free — DRP never contends the dispatch path.
-        let queued = inner.queue.len();
-        let live = inner.live.load(Ordering::SeqCst);
-        let desired = queued
-            .div_ceil(policy.tasks_per_executor.max(1))
-            .clamp(policy.min_executors, policy.max_executors)
-            .max(policy.min_executors);
-        if desired > live && pending_until.is_none() {
-            let want = desired - live;
-            if policy.allocation_delay.is_zero() {
-                for _ in 0..want {
-                    spawn_executor(&inner);
+        // Sizing is the shared policy core; this thread owns only the
+        // clock (allocation delay, evaluation period). The queue length
+        // read is lock-free — DRP never contends the dispatch path. At
+        // most one allocation is in flight at a time: while one is
+        // pending, the controller is not consulted again.
+        if pending_until.is_none() {
+            let queued = inner.queue.len();
+            let live = inner.live.load(Ordering::SeqCst);
+            let want = ctrl.to_allocate(queued, live);
+            if want > 0 {
+                if policy.allocation_delay.is_zero() {
+                    for _ in 0..want {
+                        spawn_executor(&inner);
+                    }
+                } else {
+                    pending_until = Some(Instant::now() + policy.allocation_delay);
+                    pending_count = want;
                 }
-            } else {
-                pending_until = Some(Instant::now() + policy.allocation_delay);
-                pending_count = want;
             }
         }
         std::thread::sleep(policy.check_interval.min(Duration::from_millis(50)));
@@ -404,12 +422,14 @@ fn spawn_executor(inner: &Arc<Inner>) {
 }
 
 /// Attempt idle deregistration: CAS `live` down, never below the DRP
-/// minimum. Returns true if this executor should exit.
+/// minimum (the floor decision is the policy core's; the CAS makes it
+/// race-safe against concurrent timeouts). Returns true if this
+/// executor should exit.
 fn try_deregister(inner: &Inner) -> bool {
-    let min = inner.cfg.drp.min_executors;
+    let ctrl = inner.cfg.drp.controller();
     let mut live = inner.live.load(Ordering::SeqCst);
     loop {
-        if live <= min {
+        if !ctrl.may_deregister(live) {
             return false;
         }
         match inner.live.compare_exchange(

@@ -18,12 +18,22 @@
 //! are immutable and read lock-free, completion callbacks run outside
 //! the lock, and timeline recording goes through the sharded
 //! [`TimelineSink`] (one shard lock per completed bundle).
+//!
+//! Policy-core notes: the score/suspension math and the score-
+//! proportional pick live in [`crate::policy::SiteScoreBoard`]
+//! (instantiated here on the real clock), and the clustering window's
+//! batch/age cut-off in [`crate::policy::FrameCoalescer`] — the same
+//! machines the discrete-event simulator drives in virtual time, so
+//! fault-handling behavior is pinned real-vs-sim by the differential
+//! test in `rust/tests/policy_differential.rs`. This module owns only
+//! the threading: locks, the flusher thread, provider fan-out.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::metrics::{TaskRecord, Timeline, TimelineSink};
+use crate::policy::{FrameCoalescer, FramePolicy, RealClock, ScoreConfig, SiteScoreBoard};
 use crate::providers::{AppTask, BundleDone, Provider, TaskResult};
 use crate::util::DetRng;
 
@@ -55,14 +65,6 @@ impl Default for FaultPolicy {
     }
 }
 
-/// Per-site scheduling state.
-struct Site {
-    score: f64,
-    suspended_until: Option<Instant>,
-    successes: u64,
-    failures: u64,
-}
-
 /// Completion callback the engine installs per task (canonical alias in
 /// [`crate::providers`]; re-exported for the engine-facing API).
 pub use crate::providers::TaskDone;
@@ -76,9 +78,12 @@ struct Pending {
 }
 
 struct SchedInner {
-    sites: Vec<Site>,
-    buffer: Vec<Pending>,
-    buffer_since: Option<Instant>,
+    /// Site scores/suspension policy (shared with the sim driver).
+    board: SiteScoreBoard<RealClock>,
+    /// Clustering buffer: the batch/age frame cut-off (policy core);
+    /// `None` when clustering is disabled, so nothing can buffer a task
+    /// that no flusher would ever cut.
+    cluster_buf: Option<FrameCoalescer<RealClock, Pending>>,
     rng: DetRng,
     shutdown: bool,
 }
@@ -86,8 +91,9 @@ struct SchedInner {
 /// The scheduler shared state + flusher thread.
 pub struct GridScheduler {
     inner: Arc<(Mutex<SchedInner>, Condvar)>,
-    /// Immutable provider handles, indexed like `SchedInner::sites` —
-    /// bundle submission reads these without taking the scheduler lock.
+    /// Immutable provider handles, indexed like the score board's sites
+    /// — bundle submission reads these without taking the scheduler
+    /// lock.
     providers: Vec<Arc<dyn Provider>>,
     site_names: Vec<String>,
     timeline: TimelineSink,
@@ -96,9 +102,6 @@ pub struct GridScheduler {
     epoch: Instant,
     in_flight: Arc<AtomicU64>,
     flusher: Mutex<Option<std::thread::JoinHandle<()>>>,
-    /// Suspension cool-down after repeated failures.
-    pub suspend_after_failures: u64,
-    pub suspend_for: Duration,
 }
 
 impl GridScheduler {
@@ -122,20 +125,25 @@ impl GridScheduler {
         assert!(!providers.is_empty(), "need at least one provider");
         let site_names: Vec<String> =
             providers.iter().map(|p| p.name().to_string()).collect();
-        let sites = providers
-            .iter()
-            .map(|_| Site {
-                score: 16.0,
-                suspended_until: None,
-                successes: 0,
-                failures: 0,
+        let board = SiteScoreBoard::new(
+            providers.len(),
+            ScoreConfig {
+                suspend_after_failures: fault.suspend_after_failures,
+                ..ScoreConfig::default()
+            },
+            fault.suspend_for,
+        );
+        // Clustering cut-off: bundle-size cap + window age threshold.
+        let cluster_buf = cluster.as_ref().map(|c| {
+            FrameCoalescer::new(FramePolicy {
+                max_tasks: c.bundle_size.max(1),
+                max_age: c.window,
             })
-            .collect();
+        });
         let inner = Arc::new((
             Mutex::new(SchedInner {
-                sites,
-                buffer: Vec::new(),
-                buffer_since: None,
+                board,
+                cluster_buf,
                 rng: DetRng::new(seed),
                 shutdown: false,
             }),
@@ -152,8 +160,6 @@ impl GridScheduler {
             epoch: Instant::now(),
             in_flight: Arc::new(AtomicU64::new(0)),
             flusher: Mutex::new(None),
-            suspend_after_failures: fault.suspend_after_failures,
-            suspend_for: fault.suspend_for,
         });
         if sched.cluster.is_some() {
             let s = Arc::clone(&sched);
@@ -177,19 +183,23 @@ impl GridScheduler {
         let pending = Pending { task, done, attempts: 0, last_site: None };
         match &self.cluster {
             None => self.dispatch_singles(vec![pending]),
-            Some(policy) => {
-                let flush = {
+            Some(_) => {
+                // The coalescer returns the buffered frame when this
+                // push hit the bundle-size cut-off; the window (age)
+                // cut-off is the flusher thread's job.
+                let frame = {
                     let (m, cv) = &*self.inner;
                     let mut st = m.lock().unwrap();
-                    st.buffer.push(pending);
-                    if st.buffer_since.is_none() {
-                        st.buffer_since = Some(Instant::now());
-                    }
+                    let buf = st
+                        .cluster_buf
+                        .as_mut()
+                        .expect("clustered scheduler has a coalescer");
+                    let frame = buf.push(pending, Instant::now());
                     cv.notify_one();
-                    st.buffer.len() >= policy.bundle_size
+                    frame
                 };
-                if flush {
-                    self.flush_buffer();
+                if let Some(batch) = frame {
+                    self.dispatch(batch);
                 }
             }
         }
@@ -212,19 +222,22 @@ impl GridScheduler {
             .collect();
         match &self.cluster {
             None => self.dispatch_singles(pendings),
-            Some(policy) => {
-                let flush = {
+            Some(_) => {
+                let frame = {
                     let (m, cv) = &*self.inner;
                     let mut st = m.lock().unwrap();
-                    st.buffer.extend(pendings);
-                    if st.buffer_since.is_none() {
-                        st.buffer_since = Some(Instant::now());
-                    }
+                    let buf = st
+                        .cluster_buf
+                        .as_mut()
+                        .expect("clustered scheduler has a coalescer");
+                    let frame = buf.extend(pendings, Instant::now());
                     cv.notify_one();
-                    st.buffer.len() >= policy.bundle_size
+                    frame
                 };
-                if flush {
-                    self.flush_buffer();
+                // A batched submit may overshoot the cut-off; `dispatch`
+                // re-splits the frame at the bundle cap per site.
+                if let Some(batch) = frame {
+                    self.dispatch(batch);
                 }
             }
         }
@@ -236,30 +249,34 @@ impl GridScheduler {
     }
 
     fn flusher_loop(self: Arc<Self>) {
-        let window = self.cluster.as_ref().unwrap().window;
         let (m, cv) = &*self.inner;
         let mut st = m.lock().unwrap();
         loop {
             if st.shutdown {
                 return;
             }
-            match st.buffer_since {
+            // The coalescer owns the window cut-off: its deadline is
+            // the oldest buffered task's arrival plus the clustering
+            // window. This thread just sleeps until then. (It is only
+            // spawned for clustered schedulers, so the coalescer is
+            // always present here.)
+            match st.cluster_buf.as_ref().and_then(|b| b.deadline()) {
                 None => {
                     st = cv.wait(st).unwrap_or_else(|e| e.into_inner());
                 }
-                Some(since) => {
-                    let elapsed = since.elapsed();
-                    if elapsed >= window {
-                        st.buffer_since = None;
-                        let batch = std::mem::take(&mut st.buffer);
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        let batch =
+                            st.cluster_buf.as_mut().and_then(|b| b.take_frame());
                         drop(st);
-                        if !batch.is_empty() {
+                        if let Some(batch) = batch {
                             self.dispatch(batch);
                         }
                         st = m.lock().unwrap();
                     } else {
                         let (g, _) = cv
-                            .wait_timeout(st, window - elapsed)
+                            .wait_timeout(st, deadline.saturating_duration_since(now))
                             .unwrap_or_else(|e| e.into_inner());
                         st = g;
                     }
@@ -269,52 +286,17 @@ impl GridScheduler {
     }
 
     fn flush_buffer(self: &Arc<Self>) {
-        let batch = {
-            let (m, _) = &*self.inner;
-            let mut st = m.lock().unwrap();
-            st.buffer_since = None;
-            std::mem::take(&mut st.buffer)
-        };
-        if !batch.is_empty() {
-            self.dispatch(batch);
-        }
-    }
-
-    /// Pick a site score-proportionally, avoiding `avoid` and suspended
-    /// sites when possible. Allocation-free and clock-free (the caller
-    /// hoists `now` out of its batch loop): this runs inside the
-    /// scheduler lock's critical section.
-    fn pick_site(st: &mut SchedInner, avoid: Option<usize>, now: Instant) -> usize {
-        fn eligible(site: &Site, i: usize, avoid: Option<usize>, now: Instant) -> bool {
-            Some(i) != avoid
-                && site.suspended_until.map(|t| t <= now).unwrap_or(true)
-        }
-        let mut total = 0.0;
-        let mut any = false;
-        for (i, s) in st.sites.iter().enumerate() {
-            if eligible(s, i, avoid, now) {
-                total += s.score;
-                any = true;
+        loop {
+            let batch = {
+                let (m, _) = &*self.inner;
+                let mut st = m.lock().unwrap();
+                st.cluster_buf.as_mut().and_then(|b| b.take_frame())
+            };
+            match batch {
+                Some(batch) => self.dispatch(batch),
+                None => return,
             }
         }
-        // Nothing eligible (everything avoided/suspended): draw from all.
-        let use_all = !any;
-        if use_all {
-            total = st.sites.iter().map(|s| s.score).sum();
-        }
-        let mut pick = st.rng.f64() * total;
-        let mut last = st.sites.len() - 1;
-        for (i, s) in st.sites.iter().enumerate() {
-            if !use_all && !eligible(s, i, avoid, now) {
-                continue;
-            }
-            if pick < s.score {
-                return i;
-            }
-            pick -= s.score;
-            last = i;
-        }
-        last
     }
 
     /// Route a batch of independent tasks through the streaming provider
@@ -331,7 +313,8 @@ impl GridScheduler {
                 let site = {
                     let (m, _) = &*self.inner;
                     let mut st = m.lock().unwrap();
-                    Self::pick_site(&mut st, batch[0].last_site, Instant::now())
+                    let SchedInner { board, rng, .. } = &mut *st;
+                    board.pick(batch[0].last_site, Instant::now(), rng)
                 };
                 return self.submit_stream_to_site(site, batch);
             }
@@ -351,8 +334,9 @@ impl GridScheduler {
             let now = Instant::now();
             let (m, _) = &*self.inner;
             let mut st = m.lock().unwrap();
+            let SchedInner { board, rng, .. } = &mut *st;
             for p in batch {
-                let site = Self::pick_site(&mut st, p.last_site, now);
+                let site = board.pick(p.last_site, now, rng);
                 match by_site.iter_mut().find(|(s, _)| *s == site) {
                     Some((_, v)) => v.push(p),
                     None => by_site.push((site, vec![p])),
@@ -394,7 +378,7 @@ impl GridScheduler {
         let retry = {
             let (m, _) = &*self.inner;
             let mut st = m.lock().unwrap();
-            self.note_outcome(&mut st, site, r.ok);
+            st.board.record(site, r.ok, Instant::now());
             !r.ok && p.attempts < self.retries
         };
         if retry {
@@ -420,23 +404,6 @@ impl GridScheduler {
         (p.done)(r);
     }
 
-    /// Score/suspension bookkeeping for one task outcome: additive
-    /// increase on success, multiplicative decrease + possible suspension
-    /// on failure. Runs inside the scheduler lock.
-    fn note_outcome(&self, st: &mut SchedInner, site: usize, ok: bool) {
-        if ok {
-            st.sites[site].successes += 1;
-            st.sites[site].score = (st.sites[site].score + 1.0).min(1e6);
-        } else {
-            st.sites[site].failures += 1;
-            st.sites[site].score = (st.sites[site].score * 0.5).max(0.25);
-            if st.sites[site].failures % self.suspend_after_failures.max(1) == 0 {
-                st.sites[site].suspended_until =
-                    Some(Instant::now() + self.suspend_for);
-            }
-        }
-    }
-
     fn dispatch(self: &Arc<Self>, batch: Vec<Pending>) {
         // Fast path: unclustered submissions are single-task batches —
         // skip the per-site grouping allocations (hot path).
@@ -444,7 +411,8 @@ impl GridScheduler {
             let site = {
                 let (m, _) = &*self.inner;
                 let mut st = m.lock().unwrap();
-                Self::pick_site(&mut st, batch[0].last_site, Instant::now())
+                let SchedInner { board, rng, .. } = &mut *st;
+                board.pick(batch[0].last_site, Instant::now(), rng)
             };
             self.submit_bundle(site, batch);
             return;
@@ -492,6 +460,7 @@ impl GridScheduler {
         let mut retry: Vec<Pending> = Vec::new();
         let mut finals: Vec<(Pending, TaskResult)> = Vec::new();
         let now = self.now_us();
+        let wall = Instant::now();
         {
             // Under the lock: only score/suspension bookkeeping and the
             // retry decision. Callbacks and timeline recording happen
@@ -500,7 +469,7 @@ impl GridScheduler {
             let mut st = m.lock().unwrap();
             for (p, r) in pendings.into_iter().zip(results) {
                 debug_assert_eq!(p.task.id, r.id);
-                self.note_outcome(&mut st, site, r.ok);
+                st.board.record(site, r.ok, wall);
                 if r.ok || p.attempts >= self.retries {
                     finals.push((p, r));
                 } else {
@@ -550,8 +519,8 @@ impl GridScheduler {
         let st = self.inner.0.lock().unwrap();
         self.site_names
             .iter()
-            .zip(&st.sites)
-            .map(|(n, s)| (n.clone(), s.score))
+            .cloned()
+            .zip(st.board.scores())
             .collect()
     }
 
@@ -560,8 +529,11 @@ impl GridScheduler {
         let st = self.inner.0.lock().unwrap();
         self.site_names
             .iter()
-            .zip(&st.sites)
-            .map(|(n, s)| (n.clone(), s.successes, s.failures))
+            .enumerate()
+            .map(|(i, n)| {
+                let (ok, fail) = st.board.stats(i);
+                (n.clone(), ok, fail)
+            })
             .collect()
     }
 
@@ -571,12 +543,8 @@ impl GridScheduler {
         let st = self.inner.0.lock().unwrap();
         self.site_names
             .iter()
-            .zip(&st.sites)
-            .map(|(n, s)| {
-                let suspended =
-                    s.suspended_until.map(|t| t > now).unwrap_or(false);
-                (n.clone(), s.score, suspended)
-            })
+            .enumerate()
+            .map(|(i, n)| (n.clone(), st.board.score(i), st.board.suspended(i, now)))
             .collect()
     }
 
@@ -942,7 +910,7 @@ mod tests {
         // suspension; the retry then lands on "good".
         {
             let (m, _) = &*sched.inner;
-            m.lock().unwrap().sites[1].score = 1e-6;
+            m.lock().unwrap().board.set_score(1, 1e-6);
         }
         let r = {
             let (tx, rx) = mpsc::channel();
@@ -983,6 +951,9 @@ mod tests {
 
     #[test]
     fn pick_site_is_score_proportional() {
+        // Exercises the policy board *through the scheduler's own
+        // state* (the policy module has its own unit tests; this pins
+        // the wiring).
         let (r1, _) = testing::sleeper(0);
         let (r2, _) = testing::sleeper(0);
         let pa: Arc<dyn Provider> = Arc::new(LocalProvider::new("a", 1, r1));
@@ -990,13 +961,16 @@ mod tests {
         let sched = GridScheduler::new(vec![pa, pb], None, 0, 0xC0FFEE);
         let (m, _) = &*sched.inner;
         let mut st = m.lock().unwrap();
-        st.sites[0].score = 30.0;
-        st.sites[1].score = 10.0;
+        st.board.set_score(0, 30.0);
+        st.board.set_score(1, 10.0);
         let n = 20_000;
         let mut count_a = 0usize;
-        for _ in 0..n {
-            if GridScheduler::pick_site(&mut st, None, Instant::now()) == 0 {
-                count_a += 1;
+        {
+            let SchedInner { board, rng, .. } = &mut *st;
+            for _ in 0..n {
+                if board.pick(None, Instant::now(), rng) == 0 {
+                    count_a += 1;
+                }
             }
         }
         let frac = count_a as f64 / n as f64;
@@ -1004,23 +978,25 @@ mod tests {
             (frac - 0.75).abs() < 0.02,
             "score 30:10 must draw ~75% (got {frac:.3})"
         );
+        let SchedInner { board, rng, .. } = &mut *st;
         // `avoid` deterministically excludes a site when others exist.
         for _ in 0..200 {
-            assert_eq!(
-                GridScheduler::pick_site(&mut st, Some(0), Instant::now()),
-                1
-            );
+            assert_eq!(board.pick(Some(0), Instant::now(), rng), 1);
         }
-        // A suspended site is excluded until its cool-down passes.
-        st.sites[0].suspended_until =
-            Some(Instant::now() + Duration::from_secs(60));
+        // A suspended site is excluded until its cool-down passes; the
+        // scheduler's default policy suspends after 3 failures.
+        for _ in 0..3 {
+            board.record(0, false, Instant::now());
+        }
+        assert!(board.suspended(0, Instant::now()));
         for _ in 0..200 {
-            assert_eq!(GridScheduler::pick_site(&mut st, None, Instant::now()), 1);
+            assert_eq!(board.pick(None, Instant::now(), rng), 1);
         }
         // If everything is ineligible, picking still returns some site.
-        st.sites[1].suspended_until =
-            Some(Instant::now() + Duration::from_secs(60));
-        let p = GridScheduler::pick_site(&mut st, None, Instant::now());
+        for _ in 0..3 {
+            board.record(1, false, Instant::now());
+        }
+        let p = board.pick(None, Instant::now(), rng);
         assert!(p < 2);
     }
 }

@@ -13,6 +13,8 @@
 //! - [`karajan`] — futures, lightweight tasks, dataflow engine, scheduler.
 //! - [`falkon`] — queue + streamlined dispatcher + executors + DRP.
 //! - [`providers`] — abstract provider interface (local/GRAM/PBS/Falkon).
+//! - [`policy`] — clock-agnostic policy core (site scores, DRP sizing,
+//!   frame cut-off) shared by the threaded runtime and the simulator.
 //! - [`sim`] — discrete-event grid simulator (baselines + paper scale).
 //! - [`runtime`] — PJRT artifact loading/execution (the compute path).
 //! - [`apps`] — fMRI, Montage, MolDyn workloads.
@@ -24,6 +26,7 @@ pub mod falkon;
 pub mod karajan;
 pub mod metrics;
 pub mod xdtm;
+pub mod policy;
 pub mod provenance;
 pub mod providers;
 pub mod runtime;

@@ -1,0 +1,78 @@
+//! The clock abstraction the policy machines are generic over.
+//!
+//! Policies never *read* a clock — they are pure state machines that
+//! receive the current time as an argument — but they do *store* time
+//! points (suspension expiries, frame deadlines) and *add* spans to
+//! them. [`Clock`] captures exactly that: a totally-ordered time point
+//! type, a span type, and point-plus-span arithmetic. Two
+//! implementations cover the whole repo:
+//!
+//! - [`RealClock`] — wall time (`std::time::Instant` / `Duration`),
+//!   used by the threaded runtime (scheduler, service, TCP endpoint).
+//! - [`SimClock`] — virtual time ([`Micros`] for both points and
+//!   spans), used by the discrete-event simulator.
+//!
+//! Because callers inject `now`, the same policy code is exercised by
+//! live threads and by seeded simulations, and the differential tests
+//! in `rust/tests/policy_differential.rs` can pin the two executions
+//! against each other step for step.
+
+use std::time::{Duration, Instant};
+
+use crate::util::Micros;
+
+/// A timeline the policy machines can store points of and do
+/// point-plus-span arithmetic on. Implementations carry no state; the
+/// current time is always injected by the caller.
+pub trait Clock {
+    /// A point on this clock's timeline.
+    type Time: Copy + Ord + std::fmt::Debug;
+    /// A length of time between two points.
+    type Span: Copy + std::fmt::Debug;
+
+    /// The time point `span` after `t`.
+    fn add(t: Self::Time, span: Self::Span) -> Self::Time;
+}
+
+/// Wall-clock time for the threaded runtime.
+#[derive(Debug, Clone, Copy)]
+pub enum RealClock {}
+
+impl Clock for RealClock {
+    type Time = Instant;
+    type Span = Duration;
+
+    fn add(t: Instant, span: Duration) -> Instant {
+        t + span
+    }
+}
+
+/// Virtual time for the discrete-event simulator.
+#[derive(Debug, Clone, Copy)]
+pub enum SimClock {}
+
+impl Clock for SimClock {
+    type Time = Micros;
+    type Span = Micros;
+
+    fn add(t: Micros, span: Micros) -> Micros {
+        t + span
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_arithmetic() {
+        let t = Instant::now();
+        assert_eq!(RealClock::add(t, Duration::ZERO), t);
+        assert!(RealClock::add(t, Duration::from_millis(5)) > t);
+    }
+
+    #[test]
+    fn sim_clock_arithmetic() {
+        assert_eq!(SimClock::add(100, 50), 150);
+    }
+}

@@ -1,0 +1,150 @@
+//! Dynamic resource provisioning sizing (paper §4): queued-tasks →
+//! desired-executor-count, chunked allocation, and the idle
+//! deregistration floor, as one pure controller.
+//!
+//! The controller is clock-free: allocation latencies, idle timeouts,
+//! and evaluation periods are *timing*, owned by the layer that has a
+//! clock (the real service's DRP thread, the sim's `DrpCheck` events).
+//! What lives here is the *sizing* — the arithmetic both layers used to
+//! duplicate.
+
+/// DRP sizing parameters, shared by the real service
+/// ([`crate::falkon::RealDrpPolicy`]) and the simulator
+/// ([`crate::sim::DrpPolicy`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DrpConfig {
+    /// Lower bound kept alive (idle deregistration never goes below).
+    pub min_executors: usize,
+    /// Upper bound on executors (site allocation limit).
+    pub max_executors: usize,
+    /// Target one executor per this many queued tasks (ceil).
+    pub tasks_per_executor: usize,
+    /// Executors acquired per allocation request (e.g. nodes × procs);
+    /// requests round up to whole chunks.
+    pub chunk: usize,
+}
+
+/// The DRP sizing state machine. Stateless today (pure function of its
+/// config and the observed queue/pool), a struct so richer policies
+/// (trend-following, hysteresis) slot in without re-touching callers.
+#[derive(Debug, Clone)]
+pub struct DrpController {
+    cfg: DrpConfig,
+}
+
+impl DrpController {
+    pub fn new(cfg: DrpConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Desired executor count for `queued` tasks when `live` are
+    /// already committed: one executor per `tasks_per_executor` queued,
+    /// clamped to `[min, max]`, never below what is already live
+    /// (shrinking happens only through idle deregistration).
+    pub fn desired(&self, queued: usize, live: usize) -> usize {
+        let c = &self.cfg;
+        queued
+            .div_ceil(c.tasks_per_executor.max(1))
+            .clamp(c.min_executors, c.max_executors)
+            .max(live.min(c.max_executors))
+    }
+
+    /// How many executors to request now, given `queued` demand and
+    /// `committed` executors (live + already-requested): the shortfall
+    /// against [`DrpController::desired`], rounded up to whole
+    /// allocation chunks, capped so the pool never exceeds `max`.
+    ///
+    /// What counts as `queued` is the caller's contract, and the two
+    /// consumers deliberately differ: the real service sizes from the
+    /// *pending backlog only* (its queue length), while the simulator's
+    /// model also counts in-flight tasks (`queue.len() + committed`) so
+    /// a fully-busy pool with any backlog registers demand for growth —
+    /// preserving each side's historical provisioning curves. Tune DRP
+    /// configs against the world they will run in.
+    pub fn to_allocate(&self, queued: usize, committed: usize) -> usize {
+        let c = &self.cfg;
+        let want = self.desired(queued, committed).saturating_sub(committed);
+        if want == 0 {
+            return 0;
+        }
+        let chunk = c.chunk.max(1);
+        (want.div_ceil(chunk) * chunk)
+            .min(c.max_executors.saturating_sub(committed))
+    }
+
+    /// Whether an idle executor may deregister: the pool must stay at
+    /// the DRP minimum. The caller owns the idle-timeout clock and any
+    /// atomicity (e.g. the real service's CAS on the live count).
+    pub fn may_deregister(&self, live: usize) -> bool {
+        live > self.cfg.min_executors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctrl(min: usize, max: usize, tpe: usize, chunk: usize) -> DrpController {
+        DrpController::new(DrpConfig {
+            min_executors: min,
+            max_executors: max,
+            tasks_per_executor: tpe,
+            chunk,
+        })
+    }
+
+    #[test]
+    fn desired_scales_with_queue_and_clamps() {
+        let c = ctrl(2, 16, 4, 1);
+        assert_eq!(c.desired(0, 0), 2, "min floor");
+        assert_eq!(c.desired(8, 0), 2, "8 tasks / 4 per exec = 2 = min");
+        assert_eq!(c.desired(9, 0), 3, "ceil division");
+        assert_eq!(c.desired(1000, 0), 16, "max cap");
+        assert_eq!(c.desired(0, 10), 10, "never shrinks below live");
+        assert_eq!(c.desired(0, 99), 16, "live floor capped at max");
+    }
+
+    #[test]
+    fn to_allocate_rounds_to_chunks_and_respects_max() {
+        let c = ctrl(0, 16, 1, 4);
+        assert_eq!(c.to_allocate(0, 0), 0);
+        assert_eq!(c.to_allocate(1, 0), 4, "one task rounds up to a chunk");
+        assert_eq!(c.to_allocate(5, 0), 8, "5 wanted -> 2 chunks");
+        assert_eq!(c.to_allocate(100, 0), 16, "capped at max");
+        assert_eq!(c.to_allocate(100, 14), 2, "cap trims the final chunk");
+        assert_eq!(c.to_allocate(100, 16), 0, "pool full");
+    }
+
+    #[test]
+    fn to_allocate_counts_committed() {
+        let c = ctrl(0, 32, 2, 1);
+        // 10 queued -> 5 desired; 3 already committed -> 2 more.
+        assert_eq!(c.to_allocate(10, 3), 2);
+        assert_eq!(c.to_allocate(10, 5), 0, "pending allocations count");
+    }
+
+    #[test]
+    fn static_pool_shape() {
+        // min == max == chunk: allocate everything once, then nothing.
+        let c = ctrl(16, 16, 1, 16);
+        assert_eq!(c.to_allocate(0, 0), 16);
+        assert_eq!(c.to_allocate(1000, 16), 0);
+        assert_eq!(c.desired(1000, 16), 16);
+        assert!(!c.may_deregister(16));
+    }
+
+    #[test]
+    fn deregistration_floor() {
+        let c = ctrl(1, 8, 1, 1);
+        assert!(c.may_deregister(2));
+        assert!(!c.may_deregister(1));
+        assert!(!c.may_deregister(0));
+    }
+
+    #[test]
+    fn zero_divisors_are_harmless() {
+        let c = ctrl(0, 8, 0, 0);
+        assert_eq!(c.desired(5, 0), 5, "tasks_per_executor 0 treated as 1");
+        assert_eq!(c.to_allocate(5, 0), 5, "chunk 0 treated as 1");
+    }
+}

@@ -1,0 +1,219 @@
+//! The frame cut-off state machine: when does a stream of single items
+//! become a frame?
+//!
+//! One rule, three consumers:
+//!
+//! - the TCP client's Nagle-style submit buffer
+//!   ([`crate::falkon::FalkonClient::with_autobatch`]) — cut on
+//!   batch-full or age threshold, `flush()` escape hatch;
+//! - the server's `DONEB` ack path — cut immediately (zero age), which
+//!   coalesces whatever completions accumulated during the previous
+//!   socket write, and caps every frame at the wire maximum;
+//! - the simulator's framed-submission model — same cut-off in virtual
+//!   time, so `FrameConfig` cost experiments exercise the exact policy
+//!   the real client ships.
+//!
+//! The machine is pure: it stores the oldest buffered item's time point
+//! and exposes the flush deadline; the caller owns the waiting (condvar
+//! timeout, event-queue entry, or opportunistic check on the next
+//! call).
+
+use super::clock::Clock;
+
+/// Frame cut-off parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct FramePolicy<S> {
+    /// Cut a frame once this many items are buffered.
+    pub max_tasks: usize,
+    /// Cut a frame once the oldest buffered item is this old (zero =
+    /// frames never wait: every flush opportunity drains the buffer).
+    pub max_age: S,
+}
+
+/// Number of `cap`-sized frames needed for `n` items — the chunking
+/// rule shared by the wire client and the sim's framing cost model.
+pub fn frames_for(n: usize, cap: usize) -> usize {
+    n.div_ceil(cap.max(1))
+}
+
+/// Batch/age frame coalescer over an injected clock.
+#[derive(Debug)]
+pub struct FrameCoalescer<C: Clock, T> {
+    policy: FramePolicy<C::Span>,
+    buf: Vec<T>,
+    /// When the oldest buffered item arrived (None when empty).
+    oldest: Option<C::Time>,
+}
+
+impl<C: Clock, T> FrameCoalescer<C, T> {
+    pub fn new(policy: FramePolicy<C::Span>) -> Self {
+        Self { policy, buf: Vec::new(), oldest: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Buffer one item. Returns the whole buffer as a frame when the
+    /// push reached the batch cut-off.
+    pub fn push(&mut self, item: T, now: C::Time) -> Option<Vec<T>> {
+        self.oldest.get_or_insert(now);
+        self.buf.push(item);
+        if self.buf.len() >= self.policy.max_tasks.max(1) {
+            return self.take_all();
+        }
+        None
+    }
+
+    /// Buffer many items in one call. Returns the whole buffer as a
+    /// frame when the batch cut-off was reached or exceeded (callers
+    /// that need exact-cap frames split it; see
+    /// [`FrameCoalescer::take_frame`]).
+    pub fn extend(
+        &mut self,
+        items: impl IntoIterator<Item = T>,
+        now: C::Time,
+    ) -> Option<Vec<T>> {
+        let before = self.buf.len();
+        self.buf.extend(items);
+        if self.buf.len() > before {
+            self.oldest.get_or_insert(now);
+        }
+        if self.buf.len() >= self.policy.max_tasks.max(1) {
+            return self.take_all();
+        }
+        None
+    }
+
+    /// When the age cut-off requires a flush: `oldest + max_age`, or
+    /// `None` when nothing is buffered. Callers sleep/schedule until
+    /// this point.
+    pub fn deadline(&self) -> Option<C::Time> {
+        self.oldest.map(|t| C::add(t, self.policy.max_age))
+    }
+
+    /// True once the oldest buffered item has crossed the age
+    /// threshold.
+    pub fn due(&self, now: C::Time) -> bool {
+        self.deadline().map(|d| d <= now).unwrap_or(false)
+    }
+
+    /// Take up to one `max_tasks`-sized frame unconditionally (the
+    /// `flush()` escape hatch and the deadline-fire path). `None` when
+    /// empty.
+    pub fn take_frame(&mut self) -> Option<Vec<T>> {
+        if self.buf.is_empty() {
+            self.oldest = None;
+            return None;
+        }
+        let cap = self.policy.max_tasks.max(1);
+        if self.buf.len() <= cap {
+            return self.take_all();
+        }
+        let rest = self.buf.split_off(cap);
+        let frame = std::mem::replace(&mut self.buf, rest);
+        // Conservative: the true per-item arrival times are gone once
+        // coalesced; the remainder inherits the old deadline.
+        Some(frame)
+    }
+
+    /// Take a frame if the age threshold has expired.
+    pub fn take_due(&mut self, now: C::Time) -> Option<Vec<T>> {
+        if self.due(now) {
+            self.take_frame()
+        } else {
+            None
+        }
+    }
+
+    fn take_all(&mut self) -> Option<Vec<T>> {
+        self.oldest = None;
+        if self.buf.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.buf))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::clock::SimClock;
+
+    fn coal(cap: usize, age: u64) -> FrameCoalescer<SimClock, u64> {
+        FrameCoalescer::new(FramePolicy { max_tasks: cap, max_age: age })
+    }
+
+    #[test]
+    fn push_cuts_at_batch_cap() {
+        let mut c = coal(3, 1_000);
+        assert_eq!(c.push(1, 0), None);
+        assert_eq!(c.push(2, 0), None);
+        assert_eq!(c.push(3, 0), Some(vec![1, 2, 3]));
+        assert!(c.is_empty());
+        assert_eq!(c.deadline(), None, "cap flush clears the age clock");
+    }
+
+    #[test]
+    fn age_deadline_tracks_oldest_item() {
+        let mut c = coal(100, 50);
+        assert_eq!(c.deadline(), None);
+        c.push(1, 10);
+        c.push(2, 40);
+        assert_eq!(c.deadline(), Some(60), "oldest item sets the deadline");
+        assert!(!c.due(59));
+        assert!(c.due(60));
+        assert_eq!(c.take_due(59), None);
+        assert_eq!(c.take_due(60), Some(vec![1, 2]));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn zero_age_means_always_due() {
+        let mut c = coal(100, 0);
+        c.push(7, 123);
+        assert!(c.due(123));
+        assert_eq!(c.take_due(123), Some(vec![7]));
+    }
+
+    #[test]
+    fn extend_flushes_everything_at_or_past_cap() {
+        let mut c = coal(5, 1_000);
+        assert_eq!(c.extend(0..3, 0), None);
+        // 3 buffered + 4 new = 7 >= 5: the whole buffer comes out.
+        assert_eq!(c.extend(3..7, 1), Some((0..7).collect()));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn take_frame_drains_partial_buffers() {
+        let mut c = coal(4, 1_000);
+        assert_eq!(c.extend(0..3, 0), None);
+        assert_eq!(c.take_frame(), Some(vec![0, 1, 2]));
+        assert_eq!(c.take_frame(), None);
+        assert_eq!(c.deadline(), None);
+    }
+
+    #[test]
+    fn frames_for_chunking() {
+        assert_eq!(frames_for(0, 256), 0);
+        assert_eq!(frames_for(1, 256), 1);
+        assert_eq!(frames_for(256, 256), 1);
+        assert_eq!(frames_for(257, 256), 2);
+        assert_eq!(frames_for(5, 0), 5, "cap 0 treated as 1");
+    }
+
+    #[test]
+    fn flush_escape_hatch_before_any_threshold() {
+        let mut c = coal(100, 1_000_000);
+        c.push(1, 0);
+        c.push(2, 0);
+        assert!(!c.due(10), "neither threshold crossed");
+        assert_eq!(c.take_frame(), Some(vec![1, 2]), "flush() drains anyway");
+    }
+}

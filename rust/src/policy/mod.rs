@@ -1,0 +1,32 @@
+//! The policy core: pure, clock-agnostic state machines governing *who
+//! runs what, where, and when it ships* — shared verbatim by the
+//! threaded runtime and the discrete-event simulator.
+//!
+//! The paper validates one integrated stack with both live runs and
+//! modeled throughput curves; for that to stay honest, the governing
+//! policies must be the *same code* in both worlds. Each machine here
+//! is pure: it holds only policy state, receives the current time as an
+//! argument (see [`Clock`]), and draws randomness from an injected
+//! [`crate::util::DetRng`]. Layers own the clocks and the plumbing;
+//! this module owns the decisions:
+//!
+//! | machine | decision | real-clock consumer | sim consumer |
+//! |---|---|---|---|
+//! | [`SiteScoreBoard`] | site scores, suspension, score-proportional pick (§3.12–3.13) | `karajan::GridScheduler` | `sim::Driver` multi-site mode |
+//! | [`DrpController`] | queued-tasks → executor-count sizing, chunking, dereg floor (§4) | `falkon::service` DRP thread | `sim::falkon_model` + `DrpCheck` events |
+//! | [`FrameCoalescer`] | batch/age frame cut-off | `FalkonClient` autobatch, `DONEB` ack path, scheduler clustering buffer | framed-submission model |
+//!
+//! A policy change lands once and is instantly exercised by the live
+//! service and by every seeded figure bench; the differential test
+//! (`rust/tests/policy_differential.rs`) pins real-vs-sim score
+//! trajectories step for step.
+
+pub mod clock;
+pub mod drp;
+pub mod frame;
+pub mod score;
+
+pub use clock::{Clock, RealClock, SimClock};
+pub use drp::{DrpConfig, DrpController};
+pub use frame::{frames_for, FrameCoalescer, FramePolicy};
+pub use score::{ScoreConfig, SiteScoreBoard};

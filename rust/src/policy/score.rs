@@ -1,0 +1,399 @@
+//! Site responsiveness scores, suspension cool-downs, and the
+//! score-proportional pick (paper §3.12–§3.13), as one clock-agnostic
+//! state machine.
+//!
+//! The math is the paper's TCP-like rule: additive increase on success,
+//! multiplicative decrease on failure, and a suspension cool-down after
+//! every `suspend_after_failures` accumulated failures. The threaded
+//! [`crate::karajan::GridScheduler`] drives a
+//! `SiteScoreBoard<RealClock>`; the discrete-event driver's multi-site
+//! mode drives a `SiteScoreBoard<SimClock>`. Both therefore share one
+//! implementation of the score trajectory, which the differential test
+//! pins step for step.
+
+use crate::util::DetRng;
+
+use super::clock::Clock;
+
+/// Score-update parameters. The success rule is
+/// `score = (score * success_mult + success_add).min(max_score)`, which
+/// covers both dialects the repo historically ran: the threaded
+/// scheduler's pure additive increase (`success_mult` 1.0, the
+/// default) and the simulator's compounding window ramp
+/// (`success_mult` > 1). Failures are always multiplicative decrease.
+#[derive(Debug, Clone)]
+pub struct ScoreConfig {
+    /// Score every site starts with.
+    pub initial_score: f64,
+    /// Multiplicative growth per success (1.0 = purely additive).
+    pub success_mult: f64,
+    /// Additive increase per success.
+    pub success_add: f64,
+    /// Multiplicative decrease per failure.
+    pub failure_mult: f64,
+    /// Floor: a site never becomes unpickable through score alone.
+    pub min_score: f64,
+    /// Ceiling on success growth.
+    pub max_score: f64,
+    /// Suspend a site after every this-many accumulated failures.
+    pub suspend_after_failures: u64,
+}
+
+impl Default for ScoreConfig {
+    fn default() -> Self {
+        Self {
+            initial_score: 16.0,
+            success_mult: 1.0,
+            success_add: 1.0,
+            failure_mult: 0.5,
+            min_score: 0.25,
+            max_score: 1e6,
+            suspend_after_failures: 3,
+        }
+    }
+}
+
+/// Per-site policy state.
+#[derive(Debug, Clone)]
+struct SiteState<C: Clock> {
+    score: f64,
+    /// Per-site ceiling on success growth (defaults to the config's
+    /// `max_score`; e.g. the sim caps a site's score — and therefore
+    /// its submission window and pick weight — at its processor count).
+    max_score: f64,
+    suspended_until: Option<C::Time>,
+    successes: u64,
+    failures: u64,
+}
+
+/// The site scoring state machine: scores, success/failure counters,
+/// suspension cool-downs, and the score-proportional pick over an
+/// injected RNG. Pure — all time points are injected by the caller.
+#[derive(Debug, Clone)]
+pub struct SiteScoreBoard<C: Clock> {
+    cfg: ScoreConfig,
+    suspend_for: C::Span,
+    sites: Vec<SiteState<C>>,
+}
+
+impl<C: Clock> SiteScoreBoard<C> {
+    /// A board of `nsites` sites, all at the initial score.
+    pub fn new(nsites: usize, cfg: ScoreConfig, suspend_for: C::Span) -> Self {
+        assert!(nsites > 0, "need at least one site");
+        let sites = (0..nsites)
+            .map(|_| SiteState {
+                score: cfg.initial_score,
+                max_score: cfg.max_score,
+                suspended_until: None,
+                successes: 0,
+                failures: 0,
+            })
+            .collect();
+        Self { cfg, suspend_for, sites }
+    }
+
+    /// Number of sites on the board.
+    pub fn len(&self) -> usize {
+        self.sites.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    /// Record one task outcome on `site`: additive increase on success,
+    /// multiplicative decrease + possible suspension on failure.
+    /// Returns `true` when this outcome triggered a suspension.
+    pub fn record(&mut self, site: usize, ok: bool, now: C::Time) -> bool {
+        let cfg = &self.cfg;
+        let s = &mut self.sites[site];
+        if ok {
+            s.successes += 1;
+            s.score =
+                (s.score * cfg.success_mult + cfg.success_add).min(s.max_score);
+            false
+        } else {
+            s.failures += 1;
+            s.score = (s.score * cfg.failure_mult).max(cfg.min_score);
+            if s.failures % cfg.suspend_after_failures.max(1) == 0 {
+                s.suspended_until = Some(C::add(now, self.suspend_for));
+                true
+            } else {
+                false
+            }
+        }
+    }
+
+    /// True while `site` is inside a suspension cool-down at `now`.
+    pub fn suspended(&self, site: usize, now: C::Time) -> bool {
+        self.sites[site]
+            .suspended_until
+            .map(|t| t > now)
+            .unwrap_or(false)
+    }
+
+    /// Score-proportional pick among the sites passing `filter`,
+    /// excluding `avoid` and suspended sites when possible; when every
+    /// `filter`-passing site is avoided or suspended, fall back to a
+    /// draw over all of them (work must route somewhere). Returns
+    /// `None` — without consuming the RNG — only when *no* site passes
+    /// `filter`; otherwise consumes exactly one draw.
+    pub fn pick_filtered(
+        &self,
+        avoid: Option<usize>,
+        now: C::Time,
+        rng: &mut DetRng,
+        filter: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        let eligible = |i: usize, s: &SiteState<C>| {
+            filter(i)
+                && Some(i) != avoid
+                && s.suspended_until.map(|t| t <= now).unwrap_or(true)
+        };
+        let mut total = 0.0;
+        let mut any_filtered = false;
+        let mut any_eligible = false;
+        for (i, s) in self.sites.iter().enumerate() {
+            if !filter(i) {
+                continue;
+            }
+            any_filtered = true;
+            if eligible(i, s) {
+                total += s.score;
+                any_eligible = true;
+            }
+        }
+        if !any_filtered {
+            return None;
+        }
+        // Nothing eligible (everything avoided/suspended): draw from
+        // every filter-passing site instead.
+        let use_all = !any_eligible;
+        if use_all {
+            total = self
+                .sites
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| filter(*i))
+                .map(|(_, s)| s.score)
+                .sum();
+        }
+        let mut pick = rng.f64() * total;
+        let mut last = None;
+        for (i, s) in self.sites.iter().enumerate() {
+            if !filter(i) || (!use_all && !eligible(i, s)) {
+                continue;
+            }
+            if pick < s.score {
+                return Some(i);
+            }
+            pick -= s.score;
+            last = Some(i);
+        }
+        // Float-rounding fallthrough: return the last site walked.
+        last
+    }
+
+    /// Score-proportional pick over the whole board (the scheduler's
+    /// site selection). Consumes exactly one RNG draw.
+    pub fn pick(&self, avoid: Option<usize>, now: C::Time, rng: &mut DetRng) -> usize {
+        self.pick_filtered(avoid, now, rng, |_| true)
+            .expect("board has at least one site")
+    }
+
+    /// Current score of `site`.
+    pub fn score(&self, site: usize) -> f64 {
+        self.sites[site].score
+    }
+
+    /// All scores, in site order.
+    pub fn scores(&self) -> Vec<f64> {
+        self.sites.iter().map(|s| s.score).collect()
+    }
+
+    /// `(successes, failures)` counters for `site`.
+    pub fn stats(&self, site: usize) -> (u64, u64) {
+        let s = &self.sites[site];
+        (s.successes, s.failures)
+    }
+
+    /// Force a score (tests, diagnostics, warm-start).
+    pub fn set_score(&mut self, site: usize, score: f64) {
+        self.sites[site].score = score;
+    }
+
+    /// Cap one site's success growth below the config-wide ceiling
+    /// (e.g. at the site's processor count, so scores — and the
+    /// submission windows and pick weights derived from them — stay
+    /// bounded by real capacity).
+    pub fn set_max_score(&mut self, site: usize, max: f64) {
+        self.sites[site].max_score = max;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::clock::SimClock;
+
+    fn board(n: usize) -> SiteScoreBoard<SimClock> {
+        SiteScoreBoard::new(n, ScoreConfig::default(), 1_000)
+    }
+
+    #[test]
+    fn aimd_score_updates() {
+        let mut b = board(1);
+        assert_eq!(b.score(0), 16.0);
+        b.record(0, true, 0);
+        assert_eq!(b.score(0), 17.0);
+        b.record(0, false, 0);
+        assert_eq!(b.score(0), 8.5);
+        // Floor.
+        for _ in 0..20 {
+            b.record(0, false, 0);
+        }
+        assert_eq!(b.score(0), 0.25);
+        assert_eq!(b.stats(0), (1, 21));
+        // Ceiling.
+        b.set_score(0, 1e6);
+        b.record(0, true, 0);
+        assert_eq!(b.score(0), 1e6);
+    }
+
+    #[test]
+    fn compounding_success_ramp() {
+        // The simulator's historical window ramp: x1.05 + 0.5 per
+        // success, starting at 32.
+        let mut b: SiteScoreBoard<SimClock> = SiteScoreBoard::new(
+            1,
+            ScoreConfig {
+                initial_score: 32.0,
+                success_mult: 1.05,
+                success_add: 0.5,
+                ..Default::default()
+            },
+            1_000,
+        );
+        b.record(0, true, 0);
+        assert_eq!(b.score(0), 32.0 * 1.05 + 0.5);
+        b.record(0, true, 0);
+        assert_eq!(b.score(0), (32.0 * 1.05 + 0.5) * 1.05 + 0.5);
+        // Failures still halve.
+        let before = b.score(0);
+        b.record(0, false, 0);
+        assert_eq!(b.score(0), before * 0.5);
+        // A per-site ceiling (e.g. the site's processor count) bounds
+        // the ramp: (score * 1.05 + 0.5).min(cap), like the sim's
+        // historical window model.
+        b.set_max_score(0, 20.0);
+        for _ in 0..10 {
+            b.record(0, true, 0);
+        }
+        assert_eq!(b.score(0), 20.0);
+    }
+
+    #[test]
+    fn suspension_triggers_every_nth_failure_and_expires() {
+        let mut b: SiteScoreBoard<SimClock> = SiteScoreBoard::new(
+            2,
+            ScoreConfig { suspend_after_failures: 2, ..Default::default() },
+            500,
+        );
+        assert!(!b.record(0, false, 100), "first failure: no suspension");
+        assert!(b.record(0, false, 100), "second failure suspends");
+        assert!(b.suspended(0, 100));
+        assert!(b.suspended(0, 599));
+        assert!(!b.suspended(0, 600), "cool-down expired");
+        assert!(!b.suspended(1, 100), "other site unaffected");
+    }
+
+    #[test]
+    fn pick_is_score_proportional() {
+        let mut b = board(2);
+        b.set_score(0, 30.0);
+        b.set_score(1, 10.0);
+        let mut rng = DetRng::new(0xC0FFEE);
+        let n = 20_000;
+        let hits0 = (0..n).filter(|_| b.pick(None, 0, &mut rng) == 0).count();
+        let frac = hits0 as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.02, "score 30:10 draws ~75% (got {frac:.3})");
+    }
+
+    #[test]
+    fn pick_respects_avoid_and_suspension() {
+        let mut b = board(2);
+        let mut rng = DetRng::new(7);
+        for _ in 0..200 {
+            assert_eq!(b.pick(Some(0), 0, &mut rng), 1);
+        }
+        // Suspend site 0: everything routes to 1 until expiry.
+        b.record(0, false, 0);
+        b.record(0, false, 0);
+        b.record(0, false, 0); // third failure (default threshold) suspends
+        assert!(b.suspended(0, 0));
+        for _ in 0..200 {
+            assert_eq!(b.pick(None, 500, &mut rng), 1);
+        }
+        // After the cool-down, site 0 is pickable again.
+        let picked0 = (0..500).any(|_| b.pick(None, 2_000, &mut rng) == 0);
+        assert!(picked0, "expired suspension makes the site eligible again");
+    }
+
+    #[test]
+    fn pick_falls_back_when_everything_is_ineligible() {
+        let mut b = board(2);
+        // Suspend both sites.
+        for site in 0..2 {
+            for _ in 0..3 {
+                b.record(site, false, 0);
+            }
+            assert!(b.suspended(site, 0));
+        }
+        let mut rng = DetRng::new(9);
+        // Still returns *some* site (draw over all).
+        let p = b.pick(None, 100, &mut rng);
+        assert!(p < 2);
+    }
+
+    #[test]
+    fn pick_filtered_none_when_no_site_passes() {
+        let b = board(3);
+        let mut rng = DetRng::new(1);
+        let before = rng.clone().next_u64();
+        assert_eq!(b.pick_filtered(None, 0, &mut rng, |_| false), None);
+        // The RNG was not consumed.
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn pick_filtered_restricts_to_filter_set() {
+        let mut b = board(3);
+        b.set_score(0, 1e5);
+        let mut rng = DetRng::new(3);
+        for _ in 0..200 {
+            let p = b.pick_filtered(None, 0, &mut rng, |i| i != 0).unwrap();
+            assert_ne!(p, 0, "filtered-out site must never be picked");
+        }
+    }
+
+    #[test]
+    fn record_math_is_identical_across_clocks() {
+        // The same outcome sequence through a RealClock board and a
+        // SimClock board produces bit-identical scores (the machine is
+        // the same code; this pins it).
+        use crate::policy::clock::RealClock;
+        use std::time::{Duration, Instant};
+        let mut real: SiteScoreBoard<RealClock> =
+            SiteScoreBoard::new(2, ScoreConfig::default(), Duration::from_secs(3600));
+        let mut sim = board(2);
+        let mut rng = DetRng::new(42);
+        let t0 = Instant::now();
+        for step in 0..200u64 {
+            let site = (rng.next_u64() % 2) as usize;
+            let ok = rng.f64() < 0.7;
+            real.record(site, ok, t0);
+            sim.record(site, ok, step);
+            assert_eq!(real.scores(), sim.scores(), "step {step}");
+        }
+    }
+}

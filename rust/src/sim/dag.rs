@@ -106,6 +106,18 @@ impl Dag {
         dag
     }
 
+    /// A serial chain of `n` tasks (task i depends on i-1): exactly one
+    /// task in flight at any virtual instant, which the real-vs-sim
+    /// differential tests use to force a deterministic outcome order.
+    pub fn chain(n: usize, stage: &str, service_secs: f64) -> Dag {
+        let mut dag = Dag::new();
+        for i in 0..n {
+            let deps = if i == 0 { vec![] } else { vec![i - 1] };
+            dag.push(SimTask::new(stage, service_secs).with_deps(deps));
+        }
+        dag
+    }
+
     /// A bag of I/O tasks: each reads `input` and writes `output` bytes,
     /// with negligible compute (the Figure 8 workload).
     pub fn io_bag(n: usize, input: u64, output: u64) -> Dag {

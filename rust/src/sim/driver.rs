@@ -17,6 +17,7 @@
 use std::collections::HashMap;
 
 use crate::metrics::{TaskRecord, Timeline};
+use crate::policy::{FrameCoalescer, FramePolicy, ScoreConfig, SimClock, SiteScoreBoard};
 use crate::util::time::{secs, Micros};
 use crate::util::DetRng;
 
@@ -57,6 +58,18 @@ pub enum Mode {
     },
 }
 
+/// Injected task failures for virtual-time fault experiments (paper
+/// §3.12): selected tasks fail their first attempt(s), exercising the
+/// shared score/suspension/retry policy inside the simulator.
+#[derive(Debug, Clone, Default)]
+pub struct SimFaults {
+    /// Task index → number of leading attempts that fail before the
+    /// task succeeds.
+    pub fail_first_attempts: HashMap<usize, usize>,
+    /// Retries allowed per task before a final failure is recorded.
+    pub retries: usize,
+}
+
 /// Results of a simulation run.
 #[derive(Debug)]
 pub struct SimOutcome {
@@ -73,6 +86,13 @@ pub struct SimOutcome {
     pub wasted_cpu_secs: f64,
     /// Aggregate shared-FS bytes moved.
     pub fs_bytes: f64,
+    /// Multi-site mode: snapshot of every site's score after each task
+    /// reached its final outcome, in completion order — the sim half of
+    /// the real-vs-sim differential test.
+    pub score_trace: Vec<Vec<f64>>,
+    /// Multi-site mode: whether each site was inside a suspension
+    /// cool-down when the run ended.
+    pub site_suspended: Vec<bool>,
 }
 
 impl SimOutcome {
@@ -121,7 +141,10 @@ pub struct Driver {
     lrms: Vec<LrmSim>,
     site_names: Vec<String>,
     site_speed: Vec<f64>,
-    site_scores: Vec<f64>,
+    /// Multi-site mode: the shared score/suspension policy (the same
+    /// machine the threaded scheduler drives on the real clock), on the
+    /// virtual clock.
+    board: Option<SiteScoreBoard<SimClock>>,
     task_site: Vec<usize>,
     gram_free_at: Vec<Micros>,
     falkon: Option<FalkonSim>,
@@ -130,21 +153,43 @@ pub struct Driver {
     /// coalesce onto it instead of flooding the heap with one dispatch
     /// event per task.
     falkon_dispatch_queued: bool,
-    cluster_buf: Vec<usize>,
+    /// Costed framing only: the client-side submit coalescer (the
+    /// policy core's batch/age cut-off) plus its pending flush event
+    /// and the serialized submit-channel clock.
+    frame_buf: Option<FrameCoalescer<SimClock, usize>>,
+    frame_flush_queued: bool,
+    wire_free_at: Micros,
+    /// GRAM+Clustering mode: the clustering window's batch/age cut-off
+    /// (the same policy machine the threaded scheduler's clustering
+    /// buffer runs on the real clock).
+    cluster_buf: Option<FrameCoalescer<SimClock, usize>>,
     cluster_deadline_set: bool,
     /// Multi-site mode: centrally pending tasks + per-site outstanding
     /// counts (Karajan's score-driven per-site submission windows).
-    pending_multisite: std::collections::VecDeque<usize>,
+    pending_multisite: std::collections::VecDeque<SimPending>,
     site_outstanding: Vec<usize>,
+    /// Injected failures + per-task attempt counters (multi-site mode).
+    faults: SimFaults,
+    task_attempts: Vec<usize>,
+    score_trace: Vec<Vec<f64>>,
 
     // Optional shared FS (Figure 8 / data-aware experiments).
     fs: Option<SharedFs>,
     fs_conts: HashMap<u64, FsCont>,
     fs_exec_of_task: HashMap<usize, usize>,
 
-    _rng: DetRng,
+    rng: DetRng,
     /// Falkon executor lifetime accounting for wasted-CPU stats.
     run_end: Micros,
+}
+
+/// A centrally-pending multi-site task (first attempt or retry).
+#[derive(Debug, Clone, Copy)]
+struct SimPending {
+    task: usize,
+    /// Site of the previous failed attempt — the retry prefers a
+    /// different site, exactly like the threaded scheduler.
+    avoid: Option<usize>,
 }
 
 impl Driver {
@@ -178,6 +223,60 @@ impl Driver {
             Mode::Falkon { cfg } => Some(FalkonSim::new(cfg.clone())),
             _ => None,
         };
+        // Multi-site mode drives the shared score board; other modes
+        // have no site-selection policy to score. The default config is
+        // the sim's historical window ramp (initial 32, x1.05 + 0.5 per
+        // success) so per-site submission windows open at the pre-
+        // policy-core rate; `with_score_policy` overrides it (the
+        // differential test pins both worlds to the scheduler's
+        // additive defaults).
+        let board = match &mode {
+            Mode::MultiSite { .. } => {
+                let mut b = SiteScoreBoard::new(
+                    nsites,
+                    ScoreConfig {
+                        initial_score: 32.0,
+                        success_mult: 1.05,
+                        success_add: 0.5,
+                        ..ScoreConfig::default()
+                    },
+                    secs(30.0),
+                );
+                // Historical per-site ceiling: a site's score — and so
+                // its submission window and pick weight — caps at its
+                // processor count, keeping routing proportional to real
+                // capacity instead of compounding without bound.
+                for (i, l) in lrms.iter().enumerate() {
+                    b.set_max_score(i, l.cfg.total_procs() as f64);
+                }
+                Some(b)
+            }
+            _ => None,
+        };
+        let cluster_buf = match &mode {
+            Mode::GramCluster { bundle, window, .. } => {
+                Some(FrameCoalescer::new(FramePolicy {
+                    max_tasks: (*bundle).max(1),
+                    max_age: *window,
+                }))
+            }
+            _ => None,
+        };
+        // Costed framing routes releases through the client-side
+        // coalescer; the zero-cost default bypasses it entirely, which
+        // keeps every pre-framing seeded simulation bit-identical.
+        let frame_buf = falkon.as_ref().and_then(|f| {
+            f.cfg.framing.is_costed().then(|| {
+                FrameCoalescer::new(FramePolicy {
+                    max_tasks: f.cfg.framing.frame_cap.max(1),
+                    // Zero age: all releases sharing a virtual instant
+                    // coalesce into one frame, later releases flush
+                    // immediately — the sim twin of the real client's
+                    // autobatch buffer.
+                    max_age: 0,
+                })
+            })
+        });
         Self {
             dag,
             mode,
@@ -189,8 +288,7 @@ impl Driver {
             timeline: Timeline::new(),
             submit_time: vec![0; n],
             start_time: vec![0; n],
-            // Initial per-site window: modest optimism, ramps on success.
-            site_scores: vec![32.0; nsites],
+            board,
             task_site: vec![0; n],
             lrms,
             site_names,
@@ -199,14 +297,20 @@ impl Driver {
             falkon,
             falkon_task_exec: HashMap::new(),
             falkon_dispatch_queued: false,
-            cluster_buf: Vec::new(),
+            frame_buf,
+            frame_flush_queued: false,
+            wire_free_at: 0,
+            cluster_buf,
             cluster_deadline_set: false,
             pending_multisite: std::collections::VecDeque::new(),
             site_outstanding: vec![0; nsites],
+            faults: SimFaults::default(),
+            task_attempts: vec![0; n],
+            score_trace: Vec::new(),
             fs: None,
             fs_conts: HashMap::new(),
             fs_exec_of_task: HashMap::new(),
-            _rng: DetRng::new(seed),
+            rng: DetRng::new(seed),
             run_end: 0,
         }
     }
@@ -215,6 +319,28 @@ impl Driver {
     /// data through it (Falkon and GRAM modes).
     pub fn with_shared_fs(mut self, fs: SharedFs) -> Self {
         self.fs = Some(fs);
+        self
+    }
+
+    /// Inject task failures (multi-site mode): listed tasks fail their
+    /// first attempt(s) and ride the shared retry/score/suspension
+    /// policy.
+    pub fn with_faults(mut self, faults: SimFaults) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Override the multi-site score/suspension policy (default: the
+    /// historical window ramp with per-site processor-count ceilings,
+    /// 30 s cool-down). Rebuilding the board also resets the per-site
+    /// ceilings to `cfg.max_score` — which is what the differential
+    /// test wants when pinning the sim against the threaded
+    /// scheduler's uncapped additive defaults. No-op outside
+    /// multi-site mode.
+    pub fn with_score_policy(mut self, cfg: ScoreConfig, suspend_for: Micros) -> Self {
+        if let Some(b) = self.board.as_mut() {
+            *b = SiteScoreBoard::new(b.len(), cfg, suspend_for);
+        }
         self
     }
 
@@ -289,6 +415,10 @@ impl Driver {
                 (peak, 0, 0.0)
             }
         };
+        let site_suspended = match &self.board {
+            Some(b) => (0..b.len()).map(|i| b.suspended(i, self.run_end)).collect(),
+            None => Vec::new(),
+        };
         SimOutcome {
             makespan_secs,
             peak_resources,
@@ -296,6 +426,8 @@ impl Driver {
             busy_cpu_secs: busy,
             wasted_cpu_secs: wasted,
             fs_bytes: self.fs.as_ref().map(|f| f.bytes_done).unwrap_or(0.0),
+            score_trace: self.score_trace,
+            site_suspended,
             timeline: self.timeline,
         }
     }
@@ -320,7 +452,12 @@ impl Driver {
             Event::LrmJobDone { site, node, bundle } => {
                 self.lrms[site].finish(node);
                 for t in bundle {
-                    self.complete_task(now, t);
+                    self.on_lrm_task_outcome(now, site, t);
+                }
+                if self.board.is_some() {
+                    // Completions freed window headroom (and retries may
+                    // be pending): pull more central work.
+                    self.pump_multisite(now);
                 }
                 self.q.at(now, Event::LrmCycle { site });
             }
@@ -359,6 +496,10 @@ impl Driver {
                 self.queue_falkon_dispatch(now);
             }
             Event::ExecutorIdle { .. } => { /* handled in DrpCheck */ }
+            Event::FrameFlush => {
+                self.frame_flush_queued = false;
+                self.flush_frames(now);
+            }
             Event::ClusterFlush => {
                 self.cluster_deadline_set = false;
                 self.flush_cluster(now);
@@ -381,79 +522,148 @@ impl Driver {
                 let gram = gram.clone();
                 self.gram_submit(now, 0, vec![task], &gram);
             }
-            Mode::GramCluster { gram, bundle, window, .. } => {
-                let (gram, bundle, window) = (gram.clone(), *bundle, *window);
-                self.cluster_buf.push(task);
-                if self.cluster_buf.len() >= bundle {
-                    self.flush_cluster_with(now, &gram);
+            Mode::GramCluster { gram, .. } => {
+                let gram = gram.clone();
+                let buf = self.cluster_buf.as_mut().expect("cluster coalescer");
+                if let Some(bundle) = buf.push(task, now) {
+                    self.gram_submit(now, 0, bundle, &gram);
                 } else if !self.cluster_deadline_set {
                     self.cluster_deadline_set = true;
-                    self.q.after(window, Event::ClusterFlush);
+                    let at = self
+                        .cluster_buf
+                        .as_ref()
+                        .unwrap()
+                        .deadline()
+                        .expect("non-empty buffer has a deadline");
+                    self.q.at(at, Event::ClusterFlush);
                 }
             }
             Mode::Falkon { .. } => {
-                // Releases arrive one at a time in virtual time, so each
-                // is a frame of one on the wire. With a zero-cost
-                // framing config (the default) the task is queued
-                // immediately; a nonzero config delays the *arrival* of
-                // the frame at the service — the task must not be
-                // dispatchable (nor visible to DRP) before then.
-                let f = self.falkon.as_mut().unwrap();
-                let cost = f.cfg.framing.submit_cost(1);
-                if cost == 0 {
-                    f.submit(task);
-                    self.queue_falkon_dispatch(now);
-                } else {
-                    self.q.at(
-                        now + cost,
-                        Event::FalkonSubmit { falkon: 0, tasks: vec![task] },
-                    );
+                // Zero-cost framing (the default): the task is queued
+                // immediately, bit-identical to pre-framing behavior.
+                // Costed framing routes the release through the submit
+                // coalescer (the shared batch/age cut-off): the frame
+                // pays its serialized wire cost and its tasks are not
+                // dispatchable (nor visible to DRP) until it arrives.
+                match self.frame_buf.as_mut() {
+                    None => {
+                        let f = self.falkon.as_mut().unwrap();
+                        f.submit(task);
+                        self.queue_falkon_dispatch(now);
+                    }
+                    Some(buf) => {
+                        if let Some(frame) = buf.push(task, now) {
+                            self.ship_frame(now, frame);
+                        } else if !self.frame_flush_queued {
+                            self.frame_flush_queued = true;
+                            // Zero age threshold: the deadline is `now`,
+                            // so every release sharing this virtual
+                            // instant joins the frame before it cuts.
+                            let at = self.frame_buf.as_ref().unwrap().deadline().unwrap();
+                            self.q.at(at, Event::FrameFlush);
+                        }
+                    }
                 }
             }
             Mode::MultiSite { .. } => {
                 // Tasks wait centrally; score-sized per-site windows pull
                 // them (paper §3.13: dispatch proportional to site score).
-                self.pending_multisite.push_back(task);
+                self.pending_multisite
+                    .push_back(SimPending { task, avoid: None });
                 self.pump_multisite(now);
             }
             Mode::Mpi { .. } => unreachable!(),
         }
     }
 
+    /// Ship one submit frame: it occupies the serialized client→service
+    /// channel for its framing cost (header + per-task lines), then its
+    /// tasks arrive at the service queue together.
+    fn ship_frame(&mut self, now: Micros, frame: Vec<usize>) {
+        let framing = &self.falkon.as_ref().unwrap().cfg.framing;
+        let cost = framing.submit_cost(frame.len());
+        let start = now.max(self.wire_free_at);
+        let arrive = start + cost;
+        self.wire_free_at = arrive;
+        self.q.at(arrive, Event::FalkonSubmit { falkon: 0, tasks: frame });
+    }
+
+    /// The frame coalescer's age cut-off fired: cut and ship whatever
+    /// is buffered.
+    fn flush_frames(&mut self, now: Micros) {
+        while let Some(frame) =
+            self.frame_buf.as_mut().and_then(|b| b.take_frame())
+        {
+            self.ship_frame(now, frame);
+        }
+    }
+
     /// Multi-site pull loop: each site's submission window is its score
     /// (TCP-like: grows on success, halves on failure), capped by its
-    /// processor count. Sites with higher scores hold more outstanding
-    /// jobs, which realizes the paper's proportional dispatch.
+    /// processor count — sites with higher scores hold more outstanding
+    /// jobs. *Which* site a task routes to is the shared policy core's
+    /// score-proportional pick ([`SiteScoreBoard::pick_filtered`] over
+    /// the seeded RNG), restricted to sites with window headroom and
+    /// avoiding a retry's previous site — the exact selection the
+    /// threaded scheduler runs on the real clock.
     fn pump_multisite(&mut self, now: Micros) {
         let Mode::MultiSite { gram, .. } = &self.mode else { return };
         let gram = gram.clone();
         loop {
-            if self.pending_multisite.is_empty() {
+            let Some(head) = self.pending_multisite.front() else { return };
+            let avoid = head.avoid;
+            let board = self.board.as_ref().expect("multi-site board");
+            let headroom: Vec<bool> = (0..self.lrms.len())
+                .map(|i| {
+                    let cap = board
+                        .score(i)
+                        .min(self.lrms[i].cfg.total_procs() as f64);
+                    (self.site_outstanding[i] as f64) < cap
+                })
+                .collect();
+            let Some(site) =
+                board.pick_filtered(avoid, now, &mut self.rng, |i| headroom[i])
+            else {
+                // No site has window headroom: wait for completions.
+                return;
+            };
+            let p = self.pending_multisite.pop_front().unwrap();
+            self.task_site[p.task] = site;
+            self.site_outstanding[site] += 1;
+            self.gram_submit(now, site, vec![p.task], &gram);
+        }
+    }
+
+    /// One task's outcome on an LRM site. Multi-site mode applies the
+    /// injected fault plan and drives the shared score/suspension/retry
+    /// policy; other LRM modes complete unconditionally.
+    fn on_lrm_task_outcome(&mut self, now: Micros, site: usize, task: usize) {
+        let Some(board) = self.board.as_mut() else {
+            self.complete_task(now, task);
+            return;
+        };
+        self.site_outstanding[site] =
+            self.site_outstanding[site].saturating_sub(1);
+        let planned = *self
+            .faults
+            .fail_first_attempts
+            .get(&task)
+            .unwrap_or(&0);
+        let failed = self.task_attempts[task] < planned;
+        self.task_attempts[task] += 1;
+        board.record(site, !failed, now);
+        if failed {
+            if self.task_attempts[task] <= self.faults.retries {
+                // Retry, preferring a different site (same policy as
+                // the threaded scheduler's `last_site` avoidance).
+                self.pending_multisite
+                    .push_back(SimPending { task, avoid: Some(site) });
                 return;
             }
-            // Score-proportional routing: among sites with window
-            // headroom, pick the highest score per outstanding job, so
-            // equal scores balance outstanding counts and higher-scoring
-            // sites hold proportionally more.
-            let mut best: Option<(usize, f64)> = None;
-            for i in 0..self.lrms.len() {
-                let cap = self.site_scores[i]
-                    .min(self.lrms[i].cfg.total_procs() as f64);
-                if (self.site_outstanding[i] as f64) >= cap {
-                    continue;
-                }
-                let weight =
-                    self.site_scores[i] / (self.site_outstanding[i] + 1) as f64;
-                if best.map(|(_, w)| weight > w).unwrap_or(true) {
-                    best = Some((i, weight));
-                }
-            }
-            let Some((site, _)) = best else { return };
-            let task = self.pending_multisite.pop_front().unwrap();
-            self.task_site[task] = site;
-            self.site_outstanding[site] += 1;
-            self.gram_submit(now, site, vec![task], &gram);
+            self.complete_task_with(now, task, false);
+            return;
         }
+        self.complete_task_with(now, task, true);
     }
 
     fn gram_submit(
@@ -473,16 +683,12 @@ impl Driver {
     fn flush_cluster(&mut self, now: Micros) {
         if let Mode::GramCluster { gram, .. } = &self.mode {
             let gram = gram.clone();
-            self.flush_cluster_with(now, &gram);
+            if let Some(bundle) =
+                self.cluster_buf.as_mut().and_then(|b| b.take_frame())
+            {
+                self.gram_submit(now, 0, bundle, &gram);
+            }
         }
-    }
-
-    fn flush_cluster_with(&mut self, now: Micros, gram: &GramConfig) {
-        if self.cluster_buf.is_empty() {
-            return;
-        }
-        let bundle = std::mem::take(&mut self.cluster_buf);
-        self.gram_submit(now, 0, bundle, gram);
     }
 
     fn on_lrm_cycle(&mut self, now: Micros, site: usize) {
@@ -560,16 +766,14 @@ impl Driver {
 
     fn on_drp_check(&mut self, now: Micros) {
         let Some(f) = self.falkon.as_mut() else { return };
-        let wanted = f.drp_wanted();
-        if wanted > 0 {
-            let chunk = f.cfg.drp.chunk.max(1);
-            let count = wanted.div_ceil(chunk) * chunk;
-            let count = count.min(f.cfg.drp.max_executors - f.live_executors() - f.pending_allocs);
-            if count > 0 {
-                f.pending_allocs += count;
-                let latency = f.cfg.drp.allocation_latency;
-                self.q.after(latency, Event::ExecutorJoin { falkon: 0, count });
-            }
+        // Chunking and the max cap are the shared controller's
+        // (`drp_wanted` delegates); this handler owns only the virtual
+        // clock (allocation latency, evaluation period).
+        let count = f.drp_wanted();
+        if count > 0 {
+            f.pending_allocs += count;
+            let latency = f.cfg.drp.allocation_latency;
+            self.q.after(latency, Event::ExecutorJoin { falkon: 0, count });
         }
         f.reap_idle(now);
         // Keep evaluating while the run is live.
@@ -616,6 +820,16 @@ impl Driver {
     }
 
     fn complete_task(&mut self, now: Micros, task: usize) {
+        self.complete_task_with(now, task, true);
+    }
+
+    /// Record a task's final outcome. Score/suspension bookkeeping
+    /// already happened in [`Driver::on_lrm_task_outcome`] (the
+    /// per-attempt path); this is the terminal accounting: timeline,
+    /// the differential score trace, and dependent release. Failed
+    /// tasks (exhausted retries) still release dependents so the run
+    /// terminates; the timeline carries `ok: false`.
+    fn complete_task_with(&mut self, now: Micros, task: usize, ok: bool) {
         debug_assert!(!self.completed[task], "task {task} completed twice");
         self.completed[task] = true;
         self.n_done += 1;
@@ -635,17 +849,12 @@ impl Driver {
             submitted: self.submit_time[task],
             started: self.start_time[task],
             ended: now,
-            ok: true,
+            ok,
         });
-        // Score update for multi-site LB (paper §3.13): success grows the
-        // site's window, additively + multiplicatively; failures (injected
-        // by fault experiments) halve it in `fail_task`.
-        if let Mode::MultiSite { .. } = self.mode {
-            let s = self.task_site[task];
-            self.site_outstanding[s] = self.site_outstanding[s].saturating_sub(1);
-            let cap = self.lrms[s].cfg.total_procs() as f64;
-            self.site_scores[s] = (self.site_scores[s] * 1.05 + 0.5).min(cap);
-            self.pump_multisite(now);
+        // The differential trace: every site's score after this task's
+        // final outcome (multi-site mode only).
+        if let Some(b) = &self.board {
+            self.score_trace.push(b.scores());
         }
         // Release dependents.
         for i in 0..self.dependents[task].len() {
@@ -810,6 +1019,126 @@ mod tests {
         // Paper: clustering improves 2-4x for many short jobs.
         let ratio = per_task.makespan_secs / clustered.makespan_secs;
         assert!(ratio > 2.0, "clustering speedup {ratio}");
+    }
+
+    #[test]
+    fn multisite_faults_retry_on_other_site() {
+        // A chain (serial) DAG so outcomes apply one at a time; every
+        // third task fails its first attempt and must succeed on retry
+        // via the shared score/retry policy.
+        let sites = vec![
+            ("a".to_string(), LrmConfig::pbs(4), 1.0),
+            ("b".to_string(), LrmConfig::pbs(4), 1.0),
+        ];
+        let mode = Mode::MultiSite {
+            sites,
+            gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+        };
+        let n = 30;
+        let dag = Dag::chain(n, "t", 1.0);
+        let faults = SimFaults {
+            fail_first_attempts: (0..n)
+                .filter(|i| i % 3 == 0)
+                .map(|i| (i, 1))
+                .collect(),
+            retries: 1,
+        };
+        let o = Driver::new(dag, mode, 0xD1FF)
+            .with_faults(faults)
+            .with_score_policy(crate::policy::ScoreConfig::default(), secs(1e6))
+            .run();
+        assert_eq!(o.timeline.len(), n);
+        assert!(
+            o.timeline.records.iter().all(|r| r.ok),
+            "every faulted task recovered on retry"
+        );
+        // One score snapshot per completed task, failures visible in it.
+        assert_eq!(o.score_trace.len(), n);
+        let final_scores = o.score_trace.last().unwrap();
+        assert!(
+            final_scores.iter().any(|&s| s < 16.0) || o.site_suspended.iter().any(|&s| s),
+            "10 injected failures must dent a score or suspend a site: {final_scores:?}"
+        );
+    }
+
+    #[test]
+    fn multisite_exhausted_retries_record_failure() {
+        let sites = vec![
+            ("a".to_string(), LrmConfig::pbs(4), 1.0),
+            ("b".to_string(), LrmConfig::pbs(4), 1.0),
+        ];
+        let mode = Mode::MultiSite {
+            sites,
+            gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+        };
+        let dag = Dag::chain(4, "t", 1.0);
+        // Task 1 fails three attempts but only one retry is allowed.
+        let faults = SimFaults {
+            fail_first_attempts: [(1usize, 3usize)].into_iter().collect(),
+            retries: 1,
+        };
+        let o = Driver::new(dag, mode, 7).with_faults(faults).run();
+        assert_eq!(o.timeline.len(), 4);
+        let failed: Vec<u64> = o
+            .timeline
+            .records
+            .iter()
+            .filter(|r| !r.ok)
+            .map(|r| r.task_id)
+            .collect();
+        assert_eq!(failed, vec![1], "exactly the unretryable task fails");
+    }
+
+    #[test]
+    fn framed_releases_at_one_instant_coalesce_into_one_frame() {
+        // 8 tasks released at t=0 with a 500 ms per-frame cost: the
+        // coalescer cuts ONE frame of 8 (not 8 frames of 1), so the
+        // batch arrives at 0.5 s and the whole bag still finishes fast.
+        let mut cfg = FalkonConfig::default();
+        cfg.drp = DrpPolicy::static_pool(4);
+        cfg.drp.allocation_latency = 0;
+        cfg.executor_overhead = 0;
+        cfg.framing = FrameConfig {
+            frame_cap: 256,
+            frame_overhead: 500_000,
+            per_task_cost: 0,
+        };
+        let dag = Dag::bag(8, "t", 1.0);
+        let o = Driver::new(dag, Mode::Falkon { cfg }, 21).run();
+        assert_eq!(o.timeline.len(), 8);
+        let first_start =
+            o.timeline.records.iter().map(|r| r.started).min().unwrap();
+        assert!(first_start >= 500_000, "no dispatch before frame arrival");
+        // One frame: 0.5 s wire + 2 waves of 1 s tasks on 4 executors.
+        // Eight line-per-task frames would serialize 4 s of wire alone.
+        assert!(
+            o.makespan_secs < 3.5,
+            "coalesced submission: {}",
+            o.makespan_secs
+        );
+    }
+
+    #[test]
+    fn line_per_task_framing_serializes_the_wire() {
+        // frame_cap 1 models the legacy line-per-task client: four
+        // same-instant releases pay four serialized 500 ms round trips.
+        let mut cfg = FalkonConfig::default();
+        cfg.drp = DrpPolicy::static_pool(4);
+        cfg.drp.allocation_latency = 0;
+        cfg.executor_overhead = 0;
+        cfg.framing = FrameConfig {
+            frame_cap: 1,
+            frame_overhead: 500_000,
+            per_task_cost: 0,
+        };
+        let dag = Dag::bag(4, "t", 0.1);
+        let o = Driver::new(dag, Mode::Falkon { cfg }, 22).run();
+        let last_start =
+            o.timeline.records.iter().map(|r| r.started).max().unwrap();
+        assert!(
+            last_start >= 4 * 500_000,
+            "4th frame arrives after 2 s of serialized wire: {last_start}"
+        );
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! Figure 15 shows 81 s for the first allocation) and deregisters idle
 //! executors after a configurable idle timeout.
 
+use crate::policy::{frames_for, DrpConfig, DrpController};
 use crate::util::time::{secs, Micros};
 
 /// Falkon service parameters.
@@ -62,10 +63,19 @@ impl Default for FrameConfig {
 }
 
 impl FrameConfig {
+    /// True when this framing charges any wire cost (the zero-cost
+    /// default keeps seeded sims bit-identical to unframed behavior).
+    pub fn is_costed(&self) -> bool {
+        self.frame_overhead > 0 || self.per_task_cost > 0
+    }
+
     /// Serialized submission cost for `n` tasks under this framing:
     /// one `frame_overhead` per frame plus `per_task_cost` per task.
+    /// The chunking rule is the policy core's
+    /// ([`crate::policy::frames_for`]) — the same cut-off the real
+    /// client's autobatch buffer ships with.
     pub fn submit_cost(&self, n: usize) -> Micros {
-        let frames = n.div_ceil(self.frame_cap.max(1)) as Micros;
+        let frames = frames_for(n, self.frame_cap) as Micros;
         frames * self.frame_overhead + n as Micros * self.per_task_cost
     }
 
@@ -76,7 +86,10 @@ impl FrameConfig {
     }
 }
 
-/// Dynamic-resource-provisioning policy (paper §4, [29]).
+/// Dynamic-resource-provisioning policy (paper §4, [29]): virtual-time
+/// knobs plus the sizing parameters it hands to the shared
+/// [`crate::policy::DrpController`] (the same controller the real
+/// service's DRP thread runs on the wall clock).
 #[derive(Debug, Clone)]
 pub struct DrpPolicy {
     /// Allocate one executor per this many queued tasks (ceil).
@@ -123,14 +136,21 @@ impl DrpPolicy {
         }
     }
 
-    /// Desired executor count for a queue length.
+    /// The clock-free sizing controller for this policy.
+    pub fn controller(&self) -> DrpController {
+        DrpController::new(DrpConfig {
+            min_executors: self.min_executors,
+            max_executors: self.max_executors,
+            tasks_per_executor: self.tasks_per_executor,
+            chunk: self.chunk,
+        })
+    }
+
+    /// Desired executor count for a queue length (delegates to the
+    /// shared controller; shrinking happens through idle timeouts
+    /// only).
     pub fn desired(&self, queued: usize, live: usize) -> usize {
-        let want = queued.div_ceil(self.tasks_per_executor.max(1));
-        want.clamp(self.min_executors, self.max_executors).max(
-            // Never shrink below what's already live via desired();
-            // shrinking happens through idle timeouts only.
-            live.min(self.max_executors),
-        )
+        self.controller().desired(queued, live)
     }
 }
 
@@ -204,7 +224,7 @@ impl FalkonSim {
     pub fn submit_framed(&mut self, tasks: &[usize], now: Micros) -> Micros {
         let ready = now + self.cfg.framing.submit_cost(tasks.len());
         self.frames_received +=
-            tasks.len().div_ceil(self.cfg.framing.frame_cap.max(1)) as u64;
+            frames_for(tasks.len(), self.cfg.framing.frame_cap) as u64;
         for &t in tasks {
             self.queue.push_back(t);
         }
@@ -268,24 +288,33 @@ impl FalkonSim {
         e.busy_time += busy;
     }
 
-    /// DRP: how many new executors to request at `now`.
+    /// DRP: how many new executors to request now — the shared
+    /// controller's chunked, max-capped allocation for the current
+    /// demand against the committed pool (live + pending). Demand here
+    /// counts waiting *and* in-flight tasks (one per committed
+    /// executor), the model's historical convention — see the contract
+    /// note on [`DrpController::to_allocate`].
     pub fn drp_wanted(&self) -> usize {
-        let live = self.live_executors() + self.pending_allocs;
-        let desired = self.cfg.drp.desired(self.queue.len() + live, live);
-        desired.saturating_sub(live)
+        let committed = self.live_executors() + self.pending_allocs;
+        self.cfg
+            .drp
+            .controller()
+            .to_allocate(self.queue.len() + committed, committed)
     }
 
-    /// Deregister executors idle past the timeout. Returns count removed.
+    /// Deregister executors idle past the timeout. Returns count
+    /// removed. The idle clock is this model's; the never-below-minimum
+    /// floor is the shared controller's.
     pub fn reap_idle(&mut self, now: Micros) -> usize {
         let timeout = self.cfg.drp.idle_timeout;
         if timeout == 0 {
             return 0;
         }
-        let min = self.cfg.drp.min_executors;
+        let ctrl = self.cfg.drp.controller();
         let mut live = self.live_executors();
         let mut reaped = 0;
         for e in &mut self.executors {
-            if live <= min {
+            if !ctrl.may_deregister(live) {
                 break;
             }
             if e.state == ExecState::Idle && now.saturating_sub(e.idle_since) >= timeout

@@ -33,7 +33,7 @@ pub mod lrm;
 pub mod sharedfs;
 
 pub use dag::{Dag, SimTask};
-pub use driver::{Driver, Mode, SimOutcome};
+pub use driver::{Driver, Mode, SimFaults, SimOutcome};
 pub use falkon_model::{DrpPolicy, FalkonConfig, FalkonSim};
 pub use lrm::{GramConfig, LrmConfig, LrmSim};
 pub use sharedfs::SharedFs;
@@ -70,6 +70,9 @@ pub enum Event {
     ExecutorIdle { falkon: usize, exec: usize },
     /// Clustering window expired: flush the pending bundle.
     ClusterFlush,
+    /// Submit-frame coalescer cut-off reached: ship buffered tasks as
+    /// `SUBMITB`-style frames (costed-framing Falkon mode only).
+    FrameFlush,
     /// Shared-FS transfer completion (id into the FS active set).
     FsTransferDone { transfer: u64 },
     /// MPI gang: stage barrier completed, start next stage.

@@ -1,0 +1,247 @@
+//! Real-vs-sim differential tests for the policy core.
+//!
+//! The acceptance bar for the shared `policy` layer: the *threaded*
+//! scheduler (real clock, real threads, real provider callbacks) and
+//! the *discrete-event* driver (virtual clock, event loop) must produce
+//! **identical** score/suspension trajectories for the same seeded
+//! outcome sequence, because both now drive the same
+//! `SiteScoreBoard` state machine with the same seeded RNG.
+//!
+//! The harness forces a deterministic outcome order on both sides:
+//!
+//! - real side: providers complete *inline* (inside `submit_stream`),
+//!   and tasks are submitted one at a time, so every pick/record pair
+//!   happens synchronously on the test thread;
+//! - sim side: a serial chain DAG keeps exactly one task in flight per
+//!   virtual instant.
+//!
+//! Both sides see the same fault plan (task → first attempts that
+//! fail), the same retry budget, the same `ScoreConfig`, and the same
+//! RNG seed, so the pick → record call sequences — and therefore the
+//! f64 score trajectories — must match bit for bit.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use gridswift::karajan::{FaultPolicy, GridScheduler};
+use gridswift::policy::ScoreConfig;
+use gridswift::providers::{AppTask, BundleDone, Provider, TaskDone, TaskResult};
+use gridswift::sim::driver::{Driver, Mode, SimFaults};
+use gridswift::sim::lrm::{GramConfig, LrmConfig};
+use gridswift::sim::Dag;
+use gridswift::util::time::secs;
+use gridswift::util::DetRng;
+
+/// A provider that completes every task inline, failing tasks according
+/// to a shared fault plan (task id → remaining attempts that must
+/// fail). Sharing one plan between both sites mirrors the sim's
+/// task-keyed `SimFaults`: a task's first attempt fails wherever it
+/// lands.
+struct InlineSite {
+    name: String,
+    remaining_fails: Arc<Mutex<HashMap<u64, usize>>>,
+}
+
+impl InlineSite {
+    fn run(&self, t: &AppTask) -> TaskResult {
+        let failed = {
+            let mut plan = self.remaining_fails.lock().unwrap();
+            match plan.get_mut(&t.id) {
+                Some(n) if *n > 0 => {
+                    *n -= 1;
+                    true
+                }
+                _ => false,
+            }
+        };
+        TaskResult {
+            id: t.id,
+            ok: !failed,
+            error: failed.then(|| "injected fault".to_string()),
+            executor: 0,
+            exec_us: 0,
+            wait_us: 0,
+        }
+    }
+}
+
+impl Provider for InlineSite {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn submit(&self, bundle: Vec<AppTask>, done: BundleDone) {
+        let results = bundle.iter().map(|t| self.run(t)).collect();
+        done(results);
+    }
+
+    fn submit_stream(&self, batch: Vec<(AppTask, TaskDone)>) {
+        for (t, done) in batch {
+            done(self.run(&t));
+        }
+    }
+
+    fn slots(&self) -> usize {
+        1
+    }
+}
+
+fn task(id: u64) -> AppTask {
+    AppTask {
+        id,
+        key: format!("k{id}"),
+        executable: "t".into(),
+        args: vec![],
+        inputs: vec![],
+        outputs: vec![],
+    }
+}
+
+/// Build the shared fault plan: ~35% of tasks fail their first attempt.
+fn fault_plan(n: usize, plan_seed: u64) -> HashMap<usize, usize> {
+    let mut rng = DetRng::new(plan_seed);
+    (0..n)
+        .filter(|_| rng.f64() < 0.35)
+        .map(|i| (i, 1))
+        .collect()
+}
+
+/// Run the threaded scheduler over `n` serial tasks with the given
+/// fault plan; returns the per-task score trajectory and the final
+/// suspension flags.
+fn real_trajectory(
+    n: usize,
+    seed: u64,
+    plan: &HashMap<usize, usize>,
+) -> (Vec<Vec<f64>>, Vec<bool>) {
+    let remaining: Arc<Mutex<HashMap<u64, usize>>> = Arc::new(Mutex::new(
+        plan.iter().map(|(k, v)| (*k as u64, *v)).collect(),
+    ));
+    let providers: Vec<Arc<dyn Provider>> = ["a", "b"]
+        .iter()
+        .map(|name| {
+            Arc::new(InlineSite {
+                name: name.to_string(),
+                remaining_fails: Arc::clone(&remaining),
+            }) as Arc<dyn Provider>
+        })
+        .collect();
+    let sched = GridScheduler::with_fault_policy(
+        providers,
+        None,
+        1, // one retry, matching the sim's SimFaults::retries
+        seed,
+        FaultPolicy {
+            suspend_after_failures: 3,
+            // Effectively infinite on the wall clock: suspensions never
+            // expire within the test, matching the sim's cool-down.
+            suspend_for: Duration::from_secs(3600),
+        },
+    );
+    let mut trace = Vec::with_capacity(n);
+    for i in 0..n {
+        let (tx, rx) = mpsc::channel();
+        // Inline providers complete synchronously: the callback has
+        // fired (including any retry) by the time submit returns.
+        sched.submit(task(i as u64), Box::new(move |r| tx.send(r).unwrap()));
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.ok, "task {i} must recover on its retry");
+        trace.push(sched.scores().into_iter().map(|(_, s)| s).collect());
+    }
+    let suspended = sched
+        .site_states()
+        .into_iter()
+        .map(|(_, _, s)| s)
+        .collect();
+    (trace, suspended)
+}
+
+/// Run the sim driver over the same workload: a serial chain through
+/// two equal multi-site LRMs with the same seed and fault plan.
+fn sim_trajectory(
+    n: usize,
+    seed: u64,
+    plan: &HashMap<usize, usize>,
+) -> (Vec<Vec<f64>>, Vec<bool>) {
+    let sites = vec![
+        ("a".to_string(), LrmConfig::pbs(4), 1.0),
+        ("b".to_string(), LrmConfig::pbs(4), 1.0),
+    ];
+    let mode = Mode::MultiSite {
+        sites,
+        gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+    };
+    let o = Driver::new(Dag::chain(n, "t", 1.0), mode, seed)
+        .with_faults(SimFaults {
+            fail_first_attempts: plan.clone(),
+            retries: 1,
+        })
+        // Same score policy as the scheduler's FaultPolicy above; the
+        // cool-down is effectively infinite in virtual time too.
+        .with_score_policy(
+            ScoreConfig { suspend_after_failures: 3, ..ScoreConfig::default() },
+            secs(1e9),
+        )
+        .run();
+    assert_eq!(o.timeline.len(), n);
+    assert!(o.timeline.records.iter().all(|r| r.ok));
+    (o.score_trace, o.site_suspended)
+}
+
+#[test]
+fn scheduler_and_sim_share_score_trajectories() {
+    let n = 40;
+    let seed = 0x5EED_D1FF;
+    let plan = fault_plan(n, 0xFA17);
+    assert!(
+        plan.len() >= 5,
+        "plan must inject a meaningful number of faults, got {}",
+        plan.len()
+    );
+
+    let (real, real_susp) = real_trajectory(n, seed, &plan);
+    let (sim, sim_susp) = sim_trajectory(n, seed, &plan);
+
+    assert_eq!(real.len(), n);
+    assert_eq!(sim.len(), n);
+    for i in 0..n {
+        assert_eq!(
+            real[i], sim[i],
+            "score trajectories diverge at task {i}: real {:?} vs sim {:?}",
+            real[i], sim[i]
+        );
+    }
+    assert_eq!(
+        real_susp, sim_susp,
+        "final suspension states diverge (real vs sim)"
+    );
+}
+
+#[test]
+fn trajectories_differ_across_seeds_but_not_across_reruns() {
+    // Sanity guard on the differential test itself: the trajectory is
+    // seed-determined (reruns agree), and actually depends on the seed
+    // (different seeds route differently), so the equality above is a
+    // real statement and not a constant.
+    let n = 24;
+    let plan = fault_plan(n, 0xFA17);
+    let (a1, _) = sim_trajectory(n, 11, &plan);
+    let (a2, _) = sim_trajectory(n, 11, &plan);
+    assert_eq!(a1, a2, "same seed must reproduce bit-identically");
+    let (b, _) = sim_trajectory(n, 12, &plan);
+    assert_ne!(a1, b, "different seeds must explore different routes");
+}
+
+#[test]
+fn fault_free_trajectories_also_agree() {
+    // No faults: pure success-growth trajectories must still match
+    // (pins the success path, not just the failure path).
+    let n = 16;
+    let empty = HashMap::new();
+    let (real, real_susp) = real_trajectory(n, 0xB0A2D, &empty);
+    let (sim, sim_susp) = sim_trajectory(n, 0xB0A2D, &empty);
+    assert_eq!(real, sim);
+    assert_eq!(real_susp, sim_susp);
+    assert!(real_susp.iter().all(|s| !s), "nothing suspends without faults");
+}
