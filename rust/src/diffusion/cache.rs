@@ -1,0 +1,250 @@
+//! One site's cache: bounded-capacity LRU residency with
+//! pin-while-running semantics.
+//!
+//! The model is deliberately logical-time: recency is a caller-supplied
+//! monotone sequence number (the catalog's operation counter), not a
+//! clock, so the same operation sequence produces the same residency
+//! state in the threaded runtime and in the simulator — which is what
+//! lets the differential test pin eviction trajectories bit for bit.
+//!
+//! Pinning: a dataset an in-flight task depends on must stay resident
+//! for the duration of the run, so eviction of a pinned entry is
+//! *deferred* — the cache may temporarily exceed its capacity under pin
+//! pressure, and the overdue evictions happen on the next sweep after
+//! the pins release. Eviction order is strictly deterministic: least
+//! `last_access` first, dataset id as the tie-break.
+
+use std::collections::HashMap;
+
+use super::DatasetId;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    bytes: u64,
+    last_access: u64,
+    pins: u32,
+}
+
+/// A bounded LRU cache of dataset copies at one site.
+#[derive(Debug, Clone)]
+pub struct CacheModel {
+    capacity: u64,
+    used: u64,
+    entries: HashMap<DatasetId, Entry>,
+}
+
+impl CacheModel {
+    pub fn new(capacity: u64) -> Self {
+        Self { capacity, used: 0, entries: HashMap::new() }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Bytes currently resident (may exceed capacity under pin
+    /// pressure; see the module docs).
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, id: DatasetId) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    /// Refresh recency for a resident dataset. Returns false when the
+    /// dataset is not resident.
+    pub fn touch(&mut self, id: DatasetId, seq: u64) -> bool {
+        match self.entries.get_mut(&id) {
+            Some(e) => {
+                e.last_access = seq;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Pin a resident dataset (no-op when absent). Pins nest.
+    pub fn pin(&mut self, id: DatasetId) {
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.pins += 1;
+        }
+    }
+
+    /// Release one pin (no-op when absent or already unpinned). The
+    /// caller runs [`CacheModel::sweep`] afterwards to apply any
+    /// eviction deferred while the pin was held.
+    pub fn unpin(&mut self, id: DatasetId) {
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+
+    /// Insert an unpinned copy (a produced output). Idempotent: a
+    /// resident dataset only has its recency refreshed — no growth, no
+    /// eviction. Returns the datasets evicted to make room, in
+    /// eviction order.
+    pub fn insert(&mut self, id: DatasetId, bytes: u64, seq: u64) -> Vec<DatasetId> {
+        self.insert_with_pins(id, bytes, seq, 0)
+    }
+
+    /// Insert a copy pinned once (a staged input of a starting task):
+    /// the new entry itself cannot be evicted until the task's
+    /// [`CacheModel::unpin`], even when it alone exceeds capacity.
+    pub fn insert_pinned(&mut self, id: DatasetId, bytes: u64, seq: u64) -> Vec<DatasetId> {
+        self.insert_with_pins(id, bytes, seq, 1)
+    }
+
+    fn insert_with_pins(
+        &mut self,
+        id: DatasetId,
+        bytes: u64,
+        seq: u64,
+        pins: u32,
+    ) -> Vec<DatasetId> {
+        if let Some(e) = self.entries.get_mut(&id) {
+            // Idempotent re-record: recency (and the requested pin)
+            // only; the resident copy's size is authoritative.
+            e.last_access = seq;
+            e.pins += pins;
+            return Vec::new();
+        }
+        self.entries.insert(id, Entry { bytes, last_access: seq, pins });
+        self.used += bytes;
+        self.sweep()
+    }
+
+    /// Evict least-recently-used unpinned entries until within
+    /// capacity. Stops early (deferring) when only pinned entries
+    /// remain. Returns evicted ids in eviction order (deterministic:
+    /// min `(last_access, id)` first).
+    pub fn sweep(&mut self) -> Vec<DatasetId> {
+        let mut out = Vec::new();
+        while self.used > self.capacity {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.pins == 0)
+                .min_by_key(|(id, e)| (e.last_access, **id))
+                .map(|(id, _)| *id);
+            let Some(v) = victim else { break };
+            let e = self.entries.remove(&v).expect("victim is resident");
+            self.used -= e.bytes;
+            out.push(v);
+        }
+        out
+    }
+
+    /// Drop every entry (the site/executor vanished). Returns the
+    /// dropped ids sorted (deterministic reporting order).
+    pub fn drop_all(&mut self) -> Vec<DatasetId> {
+        let mut ids: Vec<DatasetId> = self.entries.keys().copied().collect();
+        ids.sort_unstable();
+        self.entries.clear();
+        self.used = 0;
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_evicts_least_recent_first() {
+        let mut c = CacheModel::new(3);
+        assert!(c.insert(1, 1, 1).is_empty());
+        assert!(c.insert(2, 1, 2).is_empty());
+        assert!(c.insert(3, 1, 3).is_empty());
+        // Touch 1: now 2 is the LRU.
+        assert!(c.touch(1, 4));
+        assert_eq!(c.insert(4, 1, 5), vec![2]);
+        assert!(c.contains(1) && c.contains(3) && c.contains(4));
+        assert_eq!(c.used(), 3);
+    }
+
+    #[test]
+    fn eviction_ties_break_on_dataset_id() {
+        let mut c = CacheModel::new(2);
+        // Same last_access for 7 and 9: the smaller id goes first.
+        c.insert(9, 1, 1);
+        c.insert(7, 1, 1);
+        assert_eq!(c.insert(8, 2, 2), vec![7, 9]);
+    }
+
+    #[test]
+    fn pinned_entries_defer_eviction() {
+        let mut c = CacheModel::new(2);
+        c.insert_pinned(1, 1, 1); // oldest, but pinned
+        c.insert(2, 1, 2);
+        // 3 overflows: the unpinned 2 goes even though 1 is older.
+        assert_eq!(c.insert(3, 1, 3), vec![2]);
+        assert!(c.contains(1), "pinned entry survived");
+        // Still over? No: used == 2 == capacity. Now overflow with
+        // everything pinned: eviction defers entirely.
+        c.pin(3);
+        assert_eq!(c.insert_pinned(4, 1, 4), vec![]);
+        assert_eq!(c.used(), 3, "over capacity under pin pressure");
+        // Unpinning releases the deferred eviction on the next sweep.
+        c.unpin(1);
+        assert_eq!(c.sweep(), vec![1]);
+        assert_eq!(c.used(), 2);
+    }
+
+    #[test]
+    fn insert_is_idempotent_for_resident_datasets() {
+        let mut c = CacheModel::new(4);
+        c.insert(1, 2, 1);
+        c.insert(2, 2, 2);
+        let before = c.used();
+        // Duplicate record: no growth, no eviction, recency refreshed.
+        assert!(c.insert(1, 2, 3).is_empty());
+        assert_eq!(c.used(), before);
+        assert_eq!(c.len(), 2);
+        // 1 was refreshed, so 2 is now the LRU.
+        assert_eq!(c.insert(3, 2, 4), vec![2]);
+    }
+
+    #[test]
+    fn pins_nest() {
+        let mut c = CacheModel::new(1);
+        c.insert_pinned(1, 1, 1);
+        c.pin(1);
+        c.insert(2, 1, 2); // overflow; 1 is double-pinned, 2 is newest
+        c.unpin(1);
+        assert_eq!(c.sweep(), vec![], "one pin still held");
+        c.unpin(1);
+        assert_eq!(c.sweep(), vec![1], "fully unpinned entry evicts");
+    }
+
+    #[test]
+    fn oversized_pinned_insert_survives_until_unpin() {
+        let mut c = CacheModel::new(1);
+        // A dataset larger than the whole cache, pinned by its running
+        // task: resident (over capacity) until the task ends.
+        assert_eq!(c.insert_pinned(1, 10, 1), vec![]);
+        assert!(c.contains(1));
+        c.unpin(1);
+        assert_eq!(c.sweep(), vec![1], "evicted once the run releases it");
+        assert_eq!(c.used(), 0);
+    }
+
+    #[test]
+    fn drop_all_reports_sorted_and_clears() {
+        let mut c = CacheModel::new(10);
+        c.insert(5, 1, 1);
+        c.insert(1, 1, 2);
+        c.insert(3, 1, 3);
+        assert_eq!(c.drop_all(), vec![1, 3, 5]);
+        assert!(c.is_empty());
+        assert_eq!(c.used(), 0);
+    }
+}

@@ -1,0 +1,329 @@
+//! The data catalog: which sites hold a copy of which logical dataset,
+//! maintained as one [`CacheModel`] per site plus a deterministic
+//! event log.
+//!
+//! The catalog is the single source of truth both worlds share: the
+//! threaded [`crate::karajan::GridScheduler`] drives one keyed by
+//! provider site, the simulator's Falkon mode drives one keyed by
+//! executor, and the simulator's MultiSite mode drives one keyed by
+//! LRM site. Every mutation appends to an ordered [`CacheEvent`] log,
+//! which the differential test compares bit for bit between the real
+//! and simulated executions.
+//!
+//! Life cycle of a task at a chosen site:
+//!
+//! 1. [`DataCatalog::note_task_start`] — each declared input either
+//!    *hits* (recency refreshed, copy pinned) or *misses* (staged copy
+//!    inserted pinned, possibly evicting LRU residents). Returns
+//!    `(hit_bytes, miss_bytes)`; the caller charges staging for the
+//!    miss bytes only.
+//! 2. [`DataCatalog::note_task_end`] — the attempt finished (success
+//!    *or* failure): pins release, deferred evictions apply.
+//! 3. [`DataCatalog::record_output`] — on success only: produced
+//!    datasets enter the site cache (idempotent for re-records).
+//!
+//! A vanished site (killed executor) drops its whole cache through
+//! [`DataCatalog::drop_site`].
+//!
+//! A zero-capacity catalog is a strict no-op: every method
+//! early-returns, the log stays empty, and no caller behavior changes
+//! — which keeps seeded pre-diffusion simulations bit-identical.
+
+use super::cache::CacheModel;
+use super::{DatasetId, DatasetRef};
+
+/// One catalog mutation, in operation order. The differential test
+/// pins real-vs-sim sequences of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheEvent {
+    /// A task's declared input was already cached at the chosen site.
+    Hit { site: usize, dataset: DatasetId },
+    /// A task's declared input was absent: staged in (and cached).
+    Miss { site: usize, dataset: DatasetId },
+    /// A produced output entered the site cache.
+    Output { site: usize, dataset: DatasetId },
+    /// An LRU eviction made room for an insert (or ran deferred).
+    Evict { site: usize, dataset: DatasetId },
+    /// The site vanished (executor failure): copy lost.
+    Drop { site: usize, dataset: DatasetId },
+}
+
+/// Aggregate catalog counters (bench reporting).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub hit_bytes: u64,
+    pub miss_bytes: u64,
+}
+
+/// The per-site dataset cache catalog. Pure and clock-free: recency is
+/// an internal operation counter, so identical operation sequences
+/// yield identical states in both worlds.
+#[derive(Debug)]
+pub struct DataCatalog {
+    capacity: u64,
+    caches: Vec<CacheModel>,
+    seq: u64,
+    log: Vec<CacheEvent>,
+    stats: CacheStats,
+}
+
+impl DataCatalog {
+    /// A catalog of `nsites` sites, each with `capacity_bytes` of
+    /// cache. Capacity 0 disables the catalog entirely.
+    pub fn new(nsites: usize, capacity_bytes: u64) -> Self {
+        Self {
+            capacity: capacity_bytes,
+            caches: (0..nsites).map(|_| CacheModel::new(capacity_bytes)).collect(),
+            seq: 0,
+            log: Vec::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// False for the zero-capacity (disabled) catalog.
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn sites(&self) -> usize {
+        self.caches.len()
+    }
+
+    /// Grow the site set to at least `n` (sites/executors register
+    /// dynamically; ids are stable indices).
+    pub fn ensure_sites(&mut self, n: usize) {
+        while self.caches.len() < n {
+            self.caches.push(CacheModel::new(self.capacity));
+        }
+    }
+
+    /// True when `site` holds a copy of `id`.
+    pub fn contains(&self, site: usize, id: DatasetId) -> bool {
+        self.caches.get(site).map(|c| c.contains(id)).unwrap_or(false)
+    }
+
+    /// Bytes of `inputs` already cached at `site` (0 when disabled or
+    /// the site is unknown) — the locality signal the router weighs.
+    pub fn cached_bytes(&self, site: usize, inputs: &[DatasetRef]) -> u64 {
+        let Some(c) = self.caches.get(site) else { return 0 };
+        inputs.iter().filter(|d| c.contains(d.id)).map(|d| d.bytes).sum()
+    }
+
+    /// A task with declared `inputs` starts at `site`: record hits and
+    /// misses, stage+cache the misses, pin everything for the run.
+    /// Returns `(hit_bytes, miss_bytes)`.
+    pub fn note_task_start(&mut self, site: usize, inputs: &[DatasetRef]) -> (u64, u64) {
+        if !self.enabled() || inputs.is_empty() {
+            return (0, 0);
+        }
+        self.ensure_sites(site + 1);
+        let (mut hit_bytes, mut miss_bytes) = (0u64, 0u64);
+        for d in inputs {
+            self.seq += 1;
+            let seq = self.seq;
+            let (hit, evicted) = {
+                let c = &mut self.caches[site];
+                if c.contains(d.id) {
+                    c.touch(d.id, seq);
+                    c.pin(d.id);
+                    (true, Vec::new())
+                } else {
+                    (false, c.insert_pinned(d.id, d.bytes, seq))
+                }
+            };
+            if hit {
+                hit_bytes += d.bytes;
+                self.stats.hits += 1;
+                self.stats.hit_bytes += d.bytes;
+                self.log.push(CacheEvent::Hit { site, dataset: d.id });
+            } else {
+                miss_bytes += d.bytes;
+                self.stats.misses += 1;
+                self.stats.miss_bytes += d.bytes;
+                self.log.push(CacheEvent::Miss { site, dataset: d.id });
+                for e in evicted {
+                    self.stats.evictions += 1;
+                    self.log.push(CacheEvent::Evict { site, dataset: e });
+                }
+            }
+        }
+        (hit_bytes, miss_bytes)
+    }
+
+    /// The attempt at `site` ended (success or failure): release the
+    /// input pins and apply any eviction deferred while they were
+    /// held.
+    pub fn note_task_end(&mut self, site: usize, inputs: &[DatasetRef]) {
+        if !self.enabled() || inputs.is_empty() || site >= self.caches.len() {
+            return;
+        }
+        let evicted = {
+            let c = &mut self.caches[site];
+            for d in inputs {
+                c.unpin(d.id);
+            }
+            c.sweep()
+        };
+        for e in evicted {
+            self.stats.evictions += 1;
+            self.log.push(CacheEvent::Evict { site, dataset: e });
+        }
+    }
+
+    /// A successful task at `site` produced `outputs`: cache them
+    /// (unpinned). Idempotent: a re-record of a resident dataset only
+    /// refreshes recency — no event, no growth.
+    pub fn record_output(&mut self, site: usize, outputs: &[DatasetRef]) {
+        if !self.enabled() || outputs.is_empty() {
+            return;
+        }
+        self.ensure_sites(site + 1);
+        for d in outputs {
+            self.seq += 1;
+            let seq = self.seq;
+            let (fresh, evicted) = {
+                let c = &mut self.caches[site];
+                if c.contains(d.id) {
+                    c.touch(d.id, seq);
+                    (false, Vec::new())
+                } else {
+                    (true, c.insert(d.id, d.bytes, seq))
+                }
+            };
+            if fresh {
+                self.log.push(CacheEvent::Output { site, dataset: d.id });
+                for e in evicted {
+                    self.stats.evictions += 1;
+                    self.log.push(CacheEvent::Evict { site, dataset: e });
+                }
+            }
+        }
+    }
+
+    /// The site vanished (e.g. its executor was killed): every copy it
+    /// held is lost, pins included.
+    pub fn drop_site(&mut self, site: usize) {
+        if !self.enabled() || site >= self.caches.len() {
+            return;
+        }
+        for id in self.caches[site].drop_all() {
+            self.log.push(CacheEvent::Drop { site, dataset: id });
+        }
+    }
+
+    /// The ordered mutation log (the differential-test surface).
+    pub fn log(&self) -> &[CacheEvent] {
+        &self.log
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds(id: DatasetId, bytes: u64) -> DatasetRef {
+        DatasetRef { id, bytes }
+    }
+
+    #[test]
+    fn zero_capacity_catalog_is_a_strict_noop() {
+        let mut cat = DataCatalog::new(2, 0);
+        assert!(!cat.enabled());
+        assert_eq!(cat.note_task_start(0, &[ds(1, 100)]), (0, 0));
+        cat.record_output(0, &[ds(2, 100)]);
+        cat.note_task_end(0, &[ds(1, 100)]);
+        cat.drop_site(0);
+        assert!(cat.log().is_empty(), "disabled catalog logs nothing");
+        assert_eq!(cat.stats(), CacheStats::default());
+        assert_eq!(cat.cached_bytes(0, &[ds(1, 100)]), 0);
+    }
+
+    #[test]
+    fn miss_stages_and_caches_then_hits() {
+        let mut cat = DataCatalog::new(1, 1000);
+        let (h, m) = cat.note_task_start(0, &[ds(7, 100)]);
+        assert_eq!((h, m), (0, 100), "cold read is a full miss");
+        cat.note_task_end(0, &[ds(7, 100)]);
+        let (h, m) = cat.note_task_start(0, &[ds(7, 100)]);
+        assert_eq!((h, m), (100, 0), "the staged copy diffused");
+        assert_eq!(
+            cat.log(),
+            &[
+                CacheEvent::Miss { site: 0, dataset: 7 },
+                CacheEvent::Hit { site: 0, dataset: 7 },
+            ]
+        );
+        let s = cat.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!((s.hit_bytes, s.miss_bytes), (100, 100));
+    }
+
+    #[test]
+    fn outputs_diffuse_to_the_producing_site_only() {
+        let mut cat = DataCatalog::new(2, 1000);
+        cat.record_output(1, &[ds(3, 50)]);
+        assert!(cat.contains(1, 3));
+        assert!(!cat.contains(0, 3));
+        assert_eq!(cat.cached_bytes(1, &[ds(3, 50), ds(4, 10)]), 50);
+    }
+
+    #[test]
+    fn duplicate_record_output_is_idempotent() {
+        let mut cat = DataCatalog::new(1, 1000);
+        cat.record_output(0, &[ds(3, 50)]);
+        let log_len = cat.log().len();
+        let stats = cat.stats();
+        cat.record_output(0, &[ds(3, 50)]);
+        assert_eq!(cat.log().len(), log_len, "re-record logs nothing");
+        assert_eq!(cat.stats(), stats);
+        assert_eq!(cat.cached_bytes(0, &[ds(3, 50)]), 50);
+    }
+
+    #[test]
+    fn eviction_pressure_logs_evicts_and_defers_pinned() {
+        let mut cat = DataCatalog::new(1, 200);
+        cat.record_output(0, &[ds(1, 100)]);
+        cat.record_output(0, &[ds(2, 100)]);
+        // A running task pins 1; inserting 3 must evict 2 (unpinned),
+        // not 1 (older but pinned).
+        let (h, m) = cat.note_task_start(0, &[ds(1, 100), ds(3, 100)]);
+        assert_eq!((h, m), (100, 100));
+        assert!(cat.contains(0, 1), "pinned survivor");
+        assert!(!cat.contains(0, 2), "unpinned LRU evicted");
+        assert!(cat
+            .log()
+            .contains(&CacheEvent::Evict { site: 0, dataset: 2 }));
+        assert_eq!(cat.stats().evictions, 1);
+        cat.note_task_end(0, &[ds(1, 100), ds(3, 100)]);
+    }
+
+    #[test]
+    fn drop_site_loses_every_copy() {
+        let mut cat = DataCatalog::new(2, 1000);
+        cat.record_output(0, &[ds(1, 10), ds(2, 10)]);
+        cat.record_output(1, &[ds(1, 10)]);
+        cat.drop_site(0);
+        assert!(!cat.contains(0, 1) && !cat.contains(0, 2));
+        assert!(cat.contains(1, 1), "other sites keep their copies");
+        assert!(cat.log().ends_with(&[
+            CacheEvent::Drop { site: 0, dataset: 1 },
+            CacheEvent::Drop { site: 0, dataset: 2 },
+        ]));
+    }
+
+    #[test]
+    fn sites_grow_on_demand() {
+        let mut cat = DataCatalog::new(1, 100);
+        assert_eq!(cat.sites(), 1);
+        cat.record_output(4, &[ds(9, 10)]);
+        assert_eq!(cat.sites(), 5);
+        assert!(cat.contains(4, 9));
+    }
+}

@@ -1,0 +1,110 @@
+//! Data diffusion (paper §3.13): per-site dataset caches plus
+//! locality-aware task routing, shared by the threaded runtime and the
+//! discrete-event simulator.
+//!
+//! The paper's shared-filesystem staging dominates task runtime for
+//! I/O-bound workloads (Figure 8); §3.13 names *data diffusion* —
+//! caching input data on executor sites and routing tasks to cached
+//! copies — as the path beyond a shared FS. This module is that policy
+//! layer, built like [`crate::policy`]: pure, clock-free state machines
+//! that both worlds drive, so the differential test
+//! (`rust/tests/policy_differential.rs`) can pin real-vs-sim cache
+//! hit/miss/eviction trajectories bit for bit.
+//!
+//! | machine | decision | real-clock consumer | sim consumer |
+//! |---|---|---|---|
+//! | [`CacheModel`] | per-site LRU residency, pin-while-running, deferred eviction | (via the catalog) | (via the catalog) |
+//! | [`DataCatalog`] | dataset → sites holding a copy; hit/miss/evict event log | `karajan::GridScheduler` | `sim::Driver` (MultiSite sites, Falkon executors) |
+//! | [`LocalityRouter`] | score × locality-bonus site pick | `karajan::GridScheduler` site selection | `sim::Driver` MultiSite routing |
+//!
+//! Dataset identity: a *logical dataset id*. On the real side,
+//! SwiftScript mapper outputs (the xdtm-mapped physical paths already
+//! carried in [`crate::providers::AppTask`] staging lists) map onto ids
+//! via [`dataset_id_for_path`]; the simulator declares ids directly on
+//! its [`crate::sim::SimTask`]s. The zero-capacity default disables
+//! the whole subsystem, keeping every seeded simulation bit-identical
+//! to the pre-diffusion behavior.
+
+pub mod cache;
+pub mod catalog;
+pub mod router;
+
+pub use cache::CacheModel;
+pub use catalog::{CacheEvent, CacheStats, DataCatalog};
+pub use router::{LocalityRouter, RouterConfig};
+
+use std::path::Path;
+
+/// A logical dataset identifier (stable across runs and processes).
+pub type DatasetId = u64;
+
+/// One declared dataset dependency or product: its logical id plus the
+/// bytes a copy occupies in a site cache (and costs to stage on a
+/// miss).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DatasetRef {
+    pub id: DatasetId,
+    pub bytes: u64,
+}
+
+/// Derive a stable dataset id from an xdtm-mapped physical path
+/// (FNV-1a over the path bytes — the std hasher is seeded per process
+/// and would break cross-run determinism).
+pub fn dataset_id_for_path(path: &Path) -> DatasetId {
+    let s = path.to_string_lossy();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Data-diffusion configuration shared by the threaded scheduler and
+/// the sim driver. The default (`capacity_bytes` 0) disables the
+/// subsystem entirely: no catalog state, no routing change, no RNG
+/// perturbation — seeded runs stay bit-identical.
+#[derive(Debug, Clone)]
+pub struct DiffusionConfig {
+    /// Per-site cache capacity in bytes; 0 disables data diffusion.
+    pub capacity_bytes: u64,
+    /// Bytes assumed per path-derived dataset on the real side, where
+    /// staging lists carry paths but not sizes (the sim declares sizes
+    /// explicitly per [`DatasetRef`]).
+    pub dataset_bytes: u64,
+    /// Locality-bonus / transfer-penalty routing knobs.
+    pub router: RouterConfig,
+}
+
+impl Default for DiffusionConfig {
+    fn default() -> Self {
+        Self {
+            capacity_bytes: 0,
+            dataset_bytes: 1 << 20,
+            router: RouterConfig::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn dataset_ids_are_stable_and_distinct() {
+        let a1 = dataset_id_for_path(Path::new("work/vol_3.img"));
+        let a2 = dataset_id_for_path(&PathBuf::from("work/vol_3.img"));
+        let b = dataset_id_for_path(Path::new("work/vol_4.img"));
+        assert_eq!(a1, a2, "same path, same id, across representations");
+        assert_ne!(a1, b, "different paths must (practically) differ");
+    }
+
+    #[test]
+    fn default_config_is_disabled() {
+        let cfg = DiffusionConfig::default();
+        assert_eq!(cfg.capacity_bytes, 0);
+        let cat = DataCatalog::new(2, cfg.capacity_bytes);
+        assert!(!cat.enabled());
+    }
+}

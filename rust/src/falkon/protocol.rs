@@ -39,8 +39,8 @@
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -400,6 +400,14 @@ fn remote(r: crate::providers::TaskResult) -> RemoteResult {
 // Client
 // ---------------------------------------------------------------------
 
+/// Shared autobatch state: the submit coalescer plus the condvar the
+/// optional timer thread sleeps on.
+struct SubmitBuf {
+    buf: Mutex<FrameCoalescer<RealClock, TaskSpec>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
 /// A blocking TCP client for the Falkon endpoint. Decodes both legacy
 /// `RESULT` lines and batched `DONEB` frames into a single result
 /// stream.
@@ -408,18 +416,26 @@ fn remote(r: crate::providers::TaskResult) -> RemoteResult {
 /// [`FalkonClient::submit_buffered`] calls is Nagle-style coalesced
 /// into `SUBMITB` frames by the policy core's [`FrameCoalescer`]: a
 /// frame ships when the batch cap fills or the oldest buffered task
-/// crosses the age threshold (checked on every client call — the
-/// blocking client has no timer thread), and [`FalkonClient::flush`]
-/// is the escape hatch. Reading results auto-flushes first, so a
-/// buffered submit can never deadlock against its own ack.
+/// crosses the age threshold (checked on every client call), and
+/// [`FalkonClient::flush`] is the escape hatch. Reading results
+/// auto-flushes first, so a buffered submit can never deadlock against
+/// its own ack. [`FalkonClient::with_autobatch_timer`] additionally
+/// spawns a timer thread so age-based flushes fire even when the
+/// caller makes no further client calls; dropping the client shuts the
+/// thread down and joins it.
 pub struct FalkonClient {
     reader: BufReader<TcpStream>,
-    writer: TcpStream,
+    /// Write half, lockable so the autobatch timer thread can ship
+    /// frames concurrently with caller writes (frames never
+    /// interleave mid-write).
+    writer: Arc<Mutex<TcpStream>>,
     /// Results decoded from a `DONEB` frame (or stashed while waiting
     /// for a STATS reply) but not yet handed to the caller.
     pending: VecDeque<RemoteResult>,
     /// Nagle-style submit buffer (None until `with_autobatch`).
-    submit_buf: Option<FrameCoalescer<RealClock, TaskSpec>>,
+    submit_buf: Option<Arc<SubmitBuf>>,
+    /// Age-flush timer thread (None until `with_autobatch_timer`).
+    timer: Option<std::thread::JoinHandle<()>>,
 }
 
 impl FalkonClient {
@@ -429,37 +445,74 @@ impl FalkonClient {
         stream.set_nodelay(true).ok();
         Ok(Self {
             reader: BufReader::new(stream.try_clone()?),
-            writer: stream,
+            writer: Arc::new(Mutex::new(stream)),
             pending: VecDeque::new(),
             submit_buf: None,
+            timer: None,
         })
     }
 
     /// Enable Nagle-style submit coalescing: buffered submissions cut
     /// into `SUBMITB` frames of up to `max_tasks` (clamped to the wire
-    /// cap), or whenever the oldest buffered task is `max_age` old.
+    /// cap), or whenever the oldest buffered task is `max_age` old
+    /// (checked on every client call; see
+    /// [`FalkonClient::with_autobatch_timer`] for call-free flushes).
     pub fn with_autobatch(mut self, max_tasks: usize, max_age: Duration) -> Self {
-        self.submit_buf = Some(FrameCoalescer::new(FramePolicy {
-            max_tasks: max_tasks.clamp(1, MAX_FRAME_TASKS),
-            max_age,
+        self.submit_buf = Some(Arc::new(SubmitBuf {
+            buf: Mutex::new(FrameCoalescer::new(FramePolicy {
+                max_tasks: max_tasks.clamp(1, MAX_FRAME_TASKS),
+                max_age,
+            })),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
         }));
         self
     }
 
+    /// [`FalkonClient::with_autobatch`] plus a timer thread: the age
+    /// cut-off fires on the coalescer's own deadline, so a buffered
+    /// task never waits on another client call to ship. The thread
+    /// joins cleanly when the client drops.
+    pub fn with_autobatch_timer(self, max_tasks: usize, max_age: Duration) -> Self {
+        let mut client = self.with_autobatch(max_tasks, max_age);
+        let shared = Arc::clone(client.submit_buf.as_ref().expect("just set"));
+        let writer = Arc::clone(&client.writer);
+        let h = std::thread::Builder::new()
+            .name("falkon-client-autobatch".into())
+            .spawn(move || autobatch_timer_loop(shared, writer))
+            .expect("spawn autobatch timer");
+        client.timer = Some(h);
+        client
+    }
+
     /// Buffer one submission behind the autobatch cut-off. Without
     /// [`FalkonClient::with_autobatch`], degrades to an immediate
-    /// single-task frame.
+    /// single-task frame. Malformed specs (whitespace in a wire word)
+    /// are rejected *here*, before buffering — a bad task must fail
+    /// its own submit call, not poison a whole frame at cut time
+    /// (where the timer thread has no caller to report to).
     pub fn submit_buffered(&mut self, spec: TaskSpec) -> Result<()> {
-        let Some(buf) = self.submit_buf.as_mut() else {
+        ensure_wire_word(&spec.executable, "executable")?;
+        for a in &spec.args {
+            ensure_wire_word(a, "arg")?;
+        }
+        let Some(shared) = self.submit_buf.as_ref() else {
             let frame = [spec];
             return self.write_submitb(&frame);
         };
         let now = Instant::now();
-        if let Some(frame) = buf.push(spec, now) {
+        let (frame, due) = {
+            let mut buf = shared.buf.lock().unwrap();
+            let frame = buf.push(spec, now);
+            (frame, buf.due(now))
+        };
+        // Wake the timer thread so it re-arms on the new deadline.
+        shared.cv.notify_one();
+        if let Some(frame) = frame {
             return self.write_submitb(&frame);
         }
-        if buf.due(now) {
-            self.flush()?;
+        if due {
+            return self.flush();
         }
         Ok(())
     }
@@ -467,11 +520,11 @@ impl FalkonClient {
     /// Ship every buffered submission now (the escape hatch; also runs
     /// before any blocking read).
     pub fn flush(&mut self) -> Result<()> {
+        let Some(shared) = self.submit_buf.as_ref() else {
+            return Ok(());
+        };
         loop {
-            let frame = match self.submit_buf.as_mut() {
-                Some(buf) => buf.take_frame(),
-                None => None,
-            };
+            let frame = shared.buf.lock().unwrap().take_frame();
             match frame {
                 Some(frame) => self.write_submitb(&frame)?,
                 None => return Ok(()),
@@ -479,8 +532,9 @@ impl FalkonClient {
         }
     }
 
-    fn write_submitb(&mut self, frame: &[TaskSpec]) -> Result<()> {
-        self.writer.write_all(encode_submitb(frame)?.as_bytes())?;
+    fn write_submitb(&self, frame: &[TaskSpec]) -> Result<()> {
+        let wire = encode_submitb(frame)?;
+        self.writer.lock().unwrap().write_all(wire.as_bytes())?;
         Ok(())
     }
 
@@ -492,7 +546,7 @@ impl FalkonClient {
             line.push_str(a);
         }
         line.push('\n');
-        self.writer.write_all(line.as_bytes())?;
+        self.writer.lock().unwrap().write_all(line.as_bytes())?;
         Ok(())
     }
 
@@ -502,7 +556,7 @@ impl FalkonClient {
     /// legal call can trip the server's frame cap.
     pub fn submit_batch(&mut self, tasks: &[TaskSpec]) -> Result<()> {
         for frame in tasks.chunks(MAX_FRAME_TASKS) {
-            self.writer.write_all(encode_submitb(frame)?.as_bytes())?;
+            self.write_submitb(frame)?;
         }
         Ok(())
     }
@@ -560,7 +614,7 @@ impl FalkonClient {
     /// dropped.
     pub fn stats(&mut self) -> Result<(u64, u64, u64, usize, usize)> {
         self.flush()?;
-        self.writer.write_all(b"STATS\n")?;
+        self.writer.lock().unwrap().write_all(b"STATS\n")?;
         let mut line = String::new();
         loop {
             line.clear();
@@ -578,6 +632,74 @@ impl FalkonClient {
                 ));
             }
             self.decode_ack_line(&line)?;
+        }
+    }
+}
+
+impl Drop for FalkonClient {
+    fn drop(&mut self) {
+        if let Some(shared) = self.submit_buf.as_ref() {
+            // Store the flag while holding the buffer lock so the
+            // timer thread is either before its shutdown check (and
+            // will see the flag) or parked in the condvar (and gets
+            // the notification) — no missed-wakeup window.
+            let _guard = shared
+                .buf
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.cv.notify_all();
+        }
+        if let Some(h) = self.timer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The autobatch timer thread: sleep until the coalescer's age
+/// deadline, cut and ship the due frame, repeat. Mirrors the
+/// scheduler's clustering flusher — the coalescer owns the cut-off,
+/// this thread owns only the waiting.
+///
+/// Error semantics match the server's ack writer: a failed socket
+/// write drops the frame silently and the caller discovers the broken
+/// connection on its next read (specs are validated before buffering,
+/// so encode itself cannot fail here). Writes are blocking — like
+/// every TCP write in this endpoint — so a peer that stops reading
+/// mid-frame can stall the timer (and a concurrent `drop` of the
+/// client, which joins this thread) until the kernel buffer drains or
+/// the connection dies.
+fn autobatch_timer_loop(shared: Arc<SubmitBuf>, writer: Arc<Mutex<TcpStream>>) {
+    let mut buf = shared.buf.lock().unwrap_or_else(|e| e.into_inner());
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match buf.deadline() {
+            None => {
+                buf = shared.cv.wait(buf).unwrap_or_else(|e| e.into_inner());
+            }
+            Some(deadline) => {
+                let now = Instant::now();
+                if now >= deadline {
+                    let frame = buf.take_frame();
+                    drop(buf);
+                    if let Some(frame) = frame {
+                        if let Ok(wire) = encode_submitb(&frame) {
+                            if let Ok(mut w) = writer.lock() {
+                                let _ = w.write_all(wire.as_bytes());
+                            }
+                        }
+                    }
+                    buf = shared.buf.lock().unwrap_or_else(|e| e.into_inner());
+                } else {
+                    let (g, _) = shared
+                        .cv
+                        .wait_timeout(buf, deadline.saturating_duration_since(now))
+                        .unwrap_or_else(|e| e.into_inner());
+                    buf = g;
+                }
+            }
         }
     }
 }
@@ -781,12 +903,19 @@ mod tests {
             client.submit_buffered(spec(i, "sleep0", &[])).unwrap();
         }
         assert_eq!(
-            client.submit_buf.as_ref().unwrap().len(),
+            client.submit_buf.as_ref().unwrap().buf.lock().unwrap().len(),
             4,
             "two full frames shipped, remainder still buffered"
         );
         client.flush().unwrap();
-        assert!(client.submit_buf.as_ref().unwrap().is_empty());
+        assert!(client
+            .submit_buf
+            .as_ref()
+            .unwrap()
+            .buf
+            .lock()
+            .unwrap()
+            .is_empty());
         let mut seen = std::collections::HashSet::new();
         for _ in 0..20 {
             let r = client.next_result().unwrap();
@@ -808,6 +937,67 @@ mod tests {
         let r = client.next_result().unwrap();
         assert!(r.ok);
         assert_eq!(r.id, 1);
+    }
+
+    #[test]
+    fn submit_buffered_rejects_malformed_specs_before_buffering() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect(server.addr())
+            .unwrap()
+            .with_autobatch(8, Duration::from_secs(60));
+        // A whitespace executable must fail the submit call itself —
+        // never reach the buffer, where it would poison a whole frame
+        // at cut time with no caller to report to.
+        assert!(client.submit_buffered(spec(1, "bad exe", &[])).is_err());
+        assert!(client
+            .submit_buf
+            .as_ref()
+            .unwrap()
+            .buf
+            .lock()
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn autobatch_timer_flushes_aged_frames_without_client_calls() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect(server.addr())
+            .unwrap()
+            .with_autobatch_timer(100, Duration::from_millis(30));
+        client.submit_buffered(spec(5, "sleep0", &[])).unwrap();
+        // No further client calls: the timer thread alone must cut the
+        // frame once the 30 ms age threshold passes.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let empty = client
+                .submit_buf
+                .as_ref()
+                .unwrap()
+                .buf
+                .lock()
+                .unwrap()
+                .is_empty();
+            if empty {
+                break;
+            }
+            assert!(Instant::now() < deadline, "timer never flushed the frame");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let r = client.next_result().unwrap();
+        assert!(r.ok);
+        assert_eq!(r.id, 5);
+    }
+
+    #[test]
+    fn autobatch_timer_shutdown_joins_cleanly() {
+        let (_svc, server) = start_svc();
+        let client = FalkonClient::connect(server.addr())
+            .unwrap()
+            .with_autobatch_timer(100, Duration::from_secs(60));
+        // Drop must interrupt the 60 s age wait and join the timer
+        // thread without hanging.
+        drop(client);
     }
 
     #[test]

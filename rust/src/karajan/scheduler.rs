@@ -27,11 +27,25 @@
 //! fault-handling behavior is pinned real-vs-sim by the differential
 //! test in `rust/tests/policy_differential.rs`. This module owns only
 //! the threading: locks, the flusher thread, provider fan-out.
+//!
+//! Data-diffusion notes (paper §3.13): with
+//! [`GridScheduler::with_diffusion`], site picks run the shared
+//! [`crate::diffusion::LocalityRouter`] over a per-site
+//! [`crate::diffusion::DataCatalog`] — tasks are drawn toward sites
+//! already caching their input datasets (xdtm-mapped staging paths),
+//! and completions record produced outputs into the catalog. The same
+//! catalog/router pair runs in the simulator, and the differential
+//! test pins cache hit/miss/eviction sequences bit for bit.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::diffusion::{
+    dataset_id_for_path, CacheEvent, CacheStats, DataCatalog, DatasetRef,
+    DiffusionConfig, LocalityRouter,
+};
 use crate::metrics::{TaskRecord, Timeline, TimelineSink};
 use crate::policy::{FrameCoalescer, FramePolicy, RealClock, ScoreConfig, SiteScoreBoard};
 use crate::providers::{AppTask, BundleDone, Provider, TaskResult};
@@ -77,6 +91,41 @@ struct Pending {
     last_site: Option<usize>,
 }
 
+/// Data-diffusion state under the scheduler lock: the per-site cache
+/// catalog plus the locality router (both shared-policy machines; the
+/// sim driver runs the same pair in virtual time).
+struct DiffusionState {
+    catalog: DataCatalog,
+    router: LocalityRouter,
+    /// Bytes assumed per path-derived dataset (staging lists carry
+    /// paths, not sizes).
+    dataset_bytes: u64,
+}
+
+impl DiffusionState {
+    /// Map a task's xdtm-mapped staging paths onto logical dataset
+    /// refs (paper §3.13: mapper outputs are the natural dataset ids).
+    fn refs(&self, paths: &[PathBuf]) -> Vec<DatasetRef> {
+        paths
+            .iter()
+            .map(|p| DatasetRef { id: dataset_id_for_path(p), bytes: self.dataset_bytes })
+            .collect()
+    }
+
+    /// Completion-path bookkeeping shared by the streamed and bundled
+    /// paths: unpin the attempt's inputs, then record outputs on
+    /// success — exactly the order the sim driver mirrors, which the
+    /// catalog differential test pins.
+    fn on_completion(&mut self, site: usize, task: &AppTask, ok: bool) {
+        let inputs = self.refs(&task.inputs);
+        self.catalog.note_task_end(site, &inputs);
+        if ok {
+            let outputs = self.refs(&task.outputs);
+            self.catalog.record_output(site, &outputs);
+        }
+    }
+}
+
 struct SchedInner {
     /// Site scores/suspension policy (shared with the sim driver).
     board: SiteScoreBoard<RealClock>,
@@ -84,8 +133,37 @@ struct SchedInner {
     /// `None` when clustering is disabled, so nothing can buffer a task
     /// that no flusher would ever cut.
     cluster_buf: Option<FrameCoalescer<RealClock, Pending>>,
+    /// Data diffusion (paper §3.13): `None` unless enabled with a
+    /// nonzero cache capacity — site picks then weigh input locality
+    /// and completions feed the catalog.
+    diffusion: Option<DiffusionState>,
     rng: DetRng,
     shutdown: bool,
+}
+
+/// Pick a site for one pending task under the scheduler lock: the
+/// locality router when data diffusion is enabled (also recording the
+/// catalog hit/miss outcome and pinning the task's inputs at the
+/// chosen site), the plain score-proportional pick otherwise.
+fn pick_site_locked(
+    st: &mut SchedInner,
+    task: &AppTask,
+    last_site: Option<usize>,
+    now: Instant,
+) -> usize {
+    let SchedInner { board, rng, diffusion, .. } = st;
+    match diffusion.as_mut() {
+        Some(d) => {
+            let inputs = d.refs(&task.inputs);
+            let DiffusionState { catalog, router, .. } = d;
+            let site = router
+                .pick(board, catalog, &inputs, last_site, now, rng, |_| true)
+                .expect("board has at least one site");
+            catalog.note_task_start(site, &inputs);
+            site
+        }
+        None => board.pick(last_site, now, rng),
+    }
 }
 
 /// The scheduler shared state + flusher thread.
@@ -122,7 +200,41 @@ impl GridScheduler {
         seed: u64,
         fault: FaultPolicy,
     ) -> Arc<Self> {
+        Self::with_policies(providers, cluster, retries, seed, fault, None)
+    }
+
+    /// Construct with fault handling *and* data diffusion (paper
+    /// §3.13): site picks weigh input-dataset locality against the
+    /// per-site cache catalog, and completions record produced
+    /// outputs into it. A zero `capacity_bytes` disables diffusion
+    /// entirely (identical to [`GridScheduler::with_fault_policy`]).
+    pub fn with_diffusion(
+        providers: Vec<Arc<dyn Provider>>,
+        cluster: Option<ClusterPolicy>,
+        retries: usize,
+        seed: u64,
+        fault: FaultPolicy,
+        diffusion: DiffusionConfig,
+    ) -> Arc<Self> {
+        Self::with_policies(providers, cluster, retries, seed, fault, Some(diffusion))
+    }
+
+    fn with_policies(
+        providers: Vec<Arc<dyn Provider>>,
+        cluster: Option<ClusterPolicy>,
+        retries: usize,
+        seed: u64,
+        fault: FaultPolicy,
+        diffusion: Option<DiffusionConfig>,
+    ) -> Arc<Self> {
         assert!(!providers.is_empty(), "need at least one provider");
+        let diffusion = diffusion
+            .filter(|d| d.capacity_bytes > 0)
+            .map(|d| DiffusionState {
+                catalog: DataCatalog::new(providers.len(), d.capacity_bytes),
+                router: LocalityRouter::new(d.router.clone()),
+                dataset_bytes: d.dataset_bytes,
+            });
         let site_names: Vec<String> =
             providers.iter().map(|p| p.name().to_string()).collect();
         let board = SiteScoreBoard::new(
@@ -144,6 +256,7 @@ impl GridScheduler {
             Mutex::new(SchedInner {
                 board,
                 cluster_buf,
+                diffusion,
                 rng: DetRng::new(seed),
                 shutdown: false,
             }),
@@ -313,8 +426,12 @@ impl GridScheduler {
                 let site = {
                     let (m, _) = &*self.inner;
                     let mut st = m.lock().unwrap();
-                    let SchedInner { board, rng, .. } = &mut *st;
-                    board.pick(batch[0].last_site, Instant::now(), rng)
+                    pick_site_locked(
+                        &mut st,
+                        &batch[0].task,
+                        batch[0].last_site,
+                        Instant::now(),
+                    )
                 };
                 return self.submit_stream_to_site(site, batch);
             }
@@ -334,9 +451,8 @@ impl GridScheduler {
             let now = Instant::now();
             let (m, _) = &*self.inner;
             let mut st = m.lock().unwrap();
-            let SchedInner { board, rng, .. } = &mut *st;
             for p in batch {
-                let site = board.pick(p.last_site, now, rng);
+                let site = pick_site_locked(&mut st, &p.task, p.last_site, now);
                 match by_site.iter_mut().find(|(s, _)| *s == site) {
                     Some((_, v)) => v.push(p),
                     None => by_site.push((site, vec![p])),
@@ -379,6 +495,12 @@ impl GridScheduler {
             let (m, _) = &*self.inner;
             let mut st = m.lock().unwrap();
             st.board.record(site, r.ok, Instant::now());
+            // Catalog bookkeeping in the same order the sim driver
+            // runs it (record → unpin → outputs), so the differential
+            // test can pin the event sequences against each other.
+            if let Some(d) = st.diffusion.as_mut() {
+                d.on_completion(site, &p.task, r.ok);
+            }
             !r.ok && p.attempts < self.retries
         };
         if retry {
@@ -411,8 +533,12 @@ impl GridScheduler {
             let site = {
                 let (m, _) = &*self.inner;
                 let mut st = m.lock().unwrap();
-                let SchedInner { board, rng, .. } = &mut *st;
-                board.pick(batch[0].last_site, Instant::now(), rng)
+                pick_site_locked(
+                    &mut st,
+                    &batch[0].task,
+                    batch[0].last_site,
+                    Instant::now(),
+                )
             };
             self.submit_bundle(site, batch);
             return;
@@ -470,6 +596,9 @@ impl GridScheduler {
             for (p, r) in pendings.into_iter().zip(results) {
                 debug_assert_eq!(p.task.id, r.id);
                 st.board.record(site, r.ok, wall);
+                if let Some(d) = st.diffusion.as_mut() {
+                    d.on_completion(site, &p.task, r.ok);
+                }
                 if r.ok || p.attempts >= self.retries {
                     finals.push((p, r));
                 } else {
@@ -546,6 +675,25 @@ impl GridScheduler {
             .enumerate()
             .map(|(i, n)| (n.clone(), st.board.score(i), st.board.suspended(i, now)))
             .collect()
+    }
+
+    /// The data-diffusion catalog's ordered event log (empty without
+    /// diffusion) — the real half of the catalog differential test.
+    pub fn cache_log(&self) -> Vec<CacheEvent> {
+        let st = self.inner.0.lock().unwrap();
+        st.diffusion
+            .as_ref()
+            .map(|d| d.catalog.log().to_vec())
+            .unwrap_or_default()
+    }
+
+    /// Aggregate catalog counters (zeros without diffusion).
+    pub fn cache_stats(&self) -> CacheStats {
+        let st = self.inner.0.lock().unwrap();
+        st.diffusion
+            .as_ref()
+            .map(|d| d.catalog.stats())
+            .unwrap_or_default()
     }
 
     /// Flush any buffered bundle immediately (drain at end of run).
@@ -947,6 +1095,58 @@ mod tests {
         let states = sched.site_states();
         let bad_state = states.iter().find(|(n, _, _)| n == "bad").unwrap();
         assert!(!bad_state.2, "cool-down expired");
+    }
+
+    #[test]
+    fn diffusion_catalog_tracks_outputs_hits_and_routes() {
+        let (r1, _) = testing::sleeper(0);
+        let (r2, _) = testing::sleeper(0);
+        let pa: Arc<dyn Provider> = Arc::new(LocalProvider::new("a", 1, r1));
+        let pb: Arc<dyn Provider> = Arc::new(LocalProvider::new("b", 1, r2));
+        let sched = GridScheduler::with_diffusion(
+            vec![pa, pb],
+            None,
+            0,
+            0xD1F,
+            FaultPolicy::default(),
+            DiffusionConfig {
+                capacity_bytes: 64 << 20,
+                dataset_bytes: 1 << 20,
+                ..Default::default()
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        // A producer task writes dataset cache/d0 at whichever site it
+        // lands on.
+        let mut t0 = task(0);
+        t0.outputs = vec![std::path::PathBuf::from("cache/d0")];
+        {
+            let tx = tx.clone();
+            sched.submit(t0, Box::new(move |r| tx.send(r).unwrap()));
+        }
+        assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().ok);
+        // 30 consumers read it. Catalog inserts happen at pick time
+        // under the scheduler lock, so at most one staging miss per
+        // site is possible no matter how completions interleave.
+        for i in 1..=30u64 {
+            let mut t = task(i);
+            t.inputs = vec![std::path::PathBuf::from("cache/d0")];
+            let tx = tx.clone();
+            sched.submit(t, Box::new(move |r| tx.send(r).unwrap()));
+        }
+        for _ in 0..30 {
+            assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().ok);
+        }
+        let s = sched.cache_stats();
+        assert!(s.misses <= 2, "at most one staging miss per site: {s:?}");
+        assert!(s.hits >= 28, "consumers hit the diffused copy: {s:?}");
+        assert!(
+            sched
+                .cache_log()
+                .iter()
+                .any(|e| matches!(e, CacheEvent::Output { .. })),
+            "producer output recorded in the catalog"
+        );
     }
 
     #[test]

@@ -15,6 +15,8 @@
 //! - [`providers`] — abstract provider interface (local/GRAM/PBS/Falkon).
 //! - [`policy`] — clock-agnostic policy core (site scores, DRP sizing,
 //!   frame cut-off) shared by the threaded runtime and the simulator.
+//! - [`diffusion`] — data diffusion (§3.13): per-site dataset cache
+//!   catalog + locality-aware routing, shared by both worlds.
 //! - [`sim`] — discrete-event grid simulator (baselines + paper scale).
 //! - [`runtime`] — PJRT artifact loading/execution (the compute path).
 //! - [`apps`] — fMRI, Montage, MolDyn workloads.
@@ -22,6 +24,7 @@
 //! - [`metrics`], [`util`] — timelines, stats, plots, rng, json.
 
 pub mod apps;
+pub mod diffusion;
 pub mod falkon;
 pub mod karajan;
 pub mod metrics;

@@ -138,6 +138,11 @@ impl<C: Clock> SiteScoreBoard<C> {
     /// draw over all of them (work must route somewhere). Returns
     /// `None` — without consuming the RNG — only when *no* site passes
     /// `filter`; otherwise consumes exactly one draw.
+    ///
+    /// This is [`SiteScoreBoard::pick_weighted`] with each site's
+    /// weight equal to its raw score — same float operations in the
+    /// same order, so the delegation is bit-identical to a direct
+    /// score-proportional draw.
     pub fn pick_filtered(
         &self,
         avoid: Option<usize>,
@@ -145,21 +150,34 @@ impl<C: Clock> SiteScoreBoard<C> {
         rng: &mut DetRng,
         filter: impl Fn(usize) -> bool,
     ) -> Option<usize> {
+        self.pick_weighted(avoid, now, rng, |i, score| filter(i).then_some(score))
+    }
+
+    /// Weighted pick generalizing [`SiteScoreBoard::pick_filtered`]:
+    /// `weight(site, score)` returns `None` to exclude a site (the
+    /// filter) or the site's draw weight (e.g. score times a locality
+    /// bonus — see `crate::diffusion::LocalityRouter`). Avoid/
+    /// suspension eligibility and the everything-ineligible fallback
+    /// behave exactly like the filtered pick; RNG consumption is
+    /// identical (one draw unless every site is excluded).
+    pub fn pick_weighted(
+        &self,
+        avoid: Option<usize>,
+        now: C::Time,
+        rng: &mut DetRng,
+        weight: impl Fn(usize, f64) -> Option<f64>,
+    ) -> Option<usize> {
         let eligible = |i: usize, s: &SiteState<C>| {
-            filter(i)
-                && Some(i) != avoid
-                && s.suspended_until.map(|t| t <= now).unwrap_or(true)
+            Some(i) != avoid && s.suspended_until.map(|t| t <= now).unwrap_or(true)
         };
         let mut total = 0.0;
         let mut any_filtered = false;
         let mut any_eligible = false;
         for (i, s) in self.sites.iter().enumerate() {
-            if !filter(i) {
-                continue;
-            }
+            let Some(w) = weight(i, s.score) else { continue };
             any_filtered = true;
             if eligible(i, s) {
-                total += s.score;
+                total += w;
                 any_eligible = true;
             }
         }
@@ -167,27 +185,27 @@ impl<C: Clock> SiteScoreBoard<C> {
             return None;
         }
         // Nothing eligible (everything avoided/suspended): draw from
-        // every filter-passing site instead.
+        // every weight-passing site instead.
         let use_all = !any_eligible;
         if use_all {
             total = self
                 .sites
                 .iter()
                 .enumerate()
-                .filter(|(i, _)| filter(*i))
-                .map(|(_, s)| s.score)
+                .filter_map(|(i, s)| weight(i, s.score))
                 .sum();
         }
         let mut pick = rng.f64() * total;
         let mut last = None;
         for (i, s) in self.sites.iter().enumerate() {
-            if !filter(i) || (!use_all && !eligible(i, s)) {
+            let Some(w) = weight(i, s.score) else { continue };
+            if !use_all && !eligible(i, s) {
                 continue;
             }
-            if pick < s.score {
+            if pick < w {
                 return Some(i);
             }
-            pick -= s.score;
+            pick -= w;
             last = Some(i);
         }
         // Float-rounding fallthrough: return the last site walked.
@@ -374,6 +392,39 @@ mod tests {
             let p = b.pick_filtered(None, 0, &mut rng, |i| i != 0).unwrap();
             assert_ne!(p, 0, "filtered-out site must never be picked");
         }
+    }
+
+    #[test]
+    fn pick_weighted_biases_toward_heavier_weights() {
+        let b = board(2); // equal scores
+        let mut rng = DetRng::new(0xBEEF);
+        let n = 20_000;
+        // Site 0 gets 3x the weight of site 1 at equal score.
+        let hits0 = (0..n)
+            .filter(|_| {
+                b.pick_weighted(None, 0, &mut rng, |i, s| {
+                    Some(if i == 0 { 3.0 * s } else { s })
+                }) == Some(0)
+            })
+            .count();
+        let frac = hits0 as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.02, "3:1 weights draw ~75% ({frac:.3})");
+    }
+
+    #[test]
+    fn pick_weighted_with_score_weights_equals_pick_filtered() {
+        let mut b = board(3);
+        b.set_score(0, 5.0);
+        b.set_score(2, 40.0);
+        let mut r1 = DetRng::new(0x51DE);
+        let mut r2 = DetRng::new(0x51DE);
+        for _ in 0..500 {
+            let a = b.pick_filtered(Some(1), 0, &mut r1, |i| i != 9);
+            let c =
+                b.pick_weighted(Some(1), 0, &mut r2, |i, s| (i != 9).then_some(s));
+            assert_eq!(a, c);
+        }
+        assert_eq!(r1.next_u64(), r2.next_u64(), "identical RNG consumption");
     }
 
     #[test]

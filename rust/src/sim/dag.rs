@@ -2,6 +2,7 @@
 //! three applications' structures (paper §5.4) and generic bags of tasks
 //! for the microbenchmarks.
 
+use crate::diffusion::DatasetRef;
 use crate::util::time::secs;
 use crate::util::{DetRng, Micros};
 
@@ -18,6 +19,11 @@ pub struct SimTask {
     pub input_bytes: u64,
     /// Output bytes written to the shared FS.
     pub output_bytes: u64,
+    /// Declared input datasets (data diffusion, paper §3.13): empty
+    /// means the task participates in no cache/locality decisions.
+    pub input_datasets: Vec<DatasetRef>,
+    /// Declared output datasets this task produces.
+    pub output_datasets: Vec<DatasetRef>,
 }
 
 impl SimTask {
@@ -28,6 +34,8 @@ impl SimTask {
             deps: Vec::new(),
             input_bytes: 0,
             output_bytes: 0,
+            input_datasets: Vec::new(),
+            output_datasets: Vec::new(),
         }
     }
 
@@ -39,6 +47,22 @@ impl SimTask {
     pub fn with_io(mut self, input: u64, output: u64) -> Self {
         self.input_bytes = input;
         self.output_bytes = output;
+        self
+    }
+
+    /// Declare logical datasets (data diffusion): also sets the raw
+    /// `input_bytes`/`output_bytes` to the dataset totals, so the same
+    /// DAG run without a cache stages exactly the declared bytes
+    /// through the shared FS (the apples-to-apples baseline).
+    pub fn with_datasets(
+        mut self,
+        inputs: Vec<DatasetRef>,
+        outputs: Vec<DatasetRef>,
+    ) -> Self {
+        self.input_bytes = inputs.iter().map(|d| d.bytes).sum();
+        self.output_bytes = outputs.iter().map(|d| d.bytes).sum();
+        self.input_datasets = inputs;
+        self.output_datasets = outputs;
         self
     }
 }
@@ -151,6 +175,43 @@ impl Dag {
                 let _ = v;
                 let id = dag.push(t);
                 *slot = Some(id);
+            }
+        }
+        dag
+    }
+
+    /// The fMRI pipeline with declared datasets (the data-diffusion
+    /// workload): four stages of `volumes` per-volume pipelines, where
+    /// stage k of volume v reads exactly the dataset stage k-1 wrote
+    /// (`volume_bytes` each). Consecutive stages of one volume are
+    /// therefore locality-heavy: an executor that ran stage k-1 holds
+    /// stage k's whole input in cache, while the shared-FS baseline
+    /// restages it every time.
+    pub fn fmri_datasets(
+        volumes: usize,
+        service_secs: [f64; 4],
+        volume_bytes: u64,
+        rng: &mut DetRng,
+    ) -> Dag {
+        let stages = ["reorient_y", "reorient_x", "alignlinear", "reslice"];
+        let mut dag = Dag::new();
+        let mut prev: Vec<Option<usize>> = vec![None; volumes];
+        for (k, stage) in stages.iter().enumerate() {
+            for (v, slot) in prev.iter_mut().enumerate() {
+                let jitter = 0.9 + 0.2 * rng.f64();
+                // Dataset ids: 8 slots per volume; slot k is the input
+                // of stage k and the output of stage k-1 (slot 0 is
+                // the raw volume).
+                let in_id = (v as u64) * 8 + k as u64;
+                let mut t = SimTask::new(stage, service_secs[k] * jitter)
+                    .with_datasets(
+                        vec![DatasetRef { id: in_id, bytes: volume_bytes }],
+                        vec![DatasetRef { id: in_id + 1, bytes: volume_bytes }],
+                    );
+                if let Some(p) = *slot {
+                    t.deps = vec![p];
+                }
+                *slot = Some(dag.push(t));
             }
         }
         dag
@@ -315,6 +376,27 @@ mod tests {
         // Critical path ~ sum of one task per stage, not stage sums.
         let cp = d.critical_path_secs();
         assert!(cp < 20.0, "cp={cp}");
+    }
+
+    #[test]
+    fn fmri_datasets_chains_stage_outputs_to_inputs() {
+        let mut rng = DetRng::new(5);
+        let d = Dag::fmri_datasets(10, [1.0, 1.0, 1.0, 1.0], 1 << 20, &mut rng);
+        assert_eq!(d.len(), 40);
+        assert!(d.validate());
+        for (i, t) in d.tasks.iter().enumerate() {
+            assert_eq!(t.input_datasets.len(), 1);
+            assert_eq!(t.output_datasets.len(), 1);
+            assert_eq!(t.input_bytes, 1 << 20, "with_datasets sets raw bytes");
+            // Each dependent task reads exactly what its dep wrote.
+            for &dep in &t.deps {
+                assert_eq!(
+                    d.tasks[dep].output_datasets[0].id,
+                    t.input_datasets[0].id,
+                    "task {i} reads its predecessor's product"
+                );
+            }
+        }
     }
 
     #[test]

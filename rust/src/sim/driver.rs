@@ -16,6 +16,7 @@
 
 use std::collections::HashMap;
 
+use crate::diffusion::{CacheEvent, CacheStats, DataCatalog, DiffusionConfig, LocalityRouter};
 use crate::metrics::{TaskRecord, Timeline};
 use crate::policy::{FrameCoalescer, FramePolicy, ScoreConfig, SimClock, SiteScoreBoard};
 use crate::util::time::{secs, Micros};
@@ -68,6 +69,13 @@ pub struct SimFaults {
     pub fail_first_attempts: HashMap<usize, usize>,
     /// Retries allowed per task before a final failure is recorded.
     pub retries: usize,
+    /// Falkon mode: `(virtual time, executor index)` executor-level
+    /// failures. The executor deregisters, its cached datasets drop
+    /// from the diffusion catalog, any in-flight staging is aborted,
+    /// and the task it was running is requeued (the service-side
+    /// resubmit — an executor death is not a task failure, so it does
+    /// not consume the task retry budget).
+    pub kill_executors: Vec<(Micros, usize)>,
 }
 
 /// Results of a simulation run.
@@ -93,6 +101,12 @@ pub struct SimOutcome {
     /// Multi-site mode: whether each site was inside a suspension
     /// cool-down when the run ended.
     pub site_suspended: Vec<bool>,
+    /// Data-diffusion catalog event log in operation order (empty
+    /// without diffusion) — the sim half of the catalog differential
+    /// test.
+    pub cache_log: Vec<CacheEvent>,
+    /// Aggregate diffusion-catalog counters (zeros without diffusion).
+    pub cache_stats: CacheStats,
 }
 
 impl SimOutcome {
@@ -172,6 +186,12 @@ pub struct Driver {
     faults: SimFaults,
     task_attempts: Vec<usize>,
     score_trace: Vec<Vec<f64>>,
+    /// Data diffusion (paper §3.13): the per-site (MultiSite) or
+    /// per-executor (Falkon) cache catalog plus the locality router —
+    /// the same shared-policy pair the threaded scheduler drives.
+    /// `None` (the zero-capacity default) leaves every seeded sim
+    /// bit-identical.
+    diffusion: Option<SimDiffusion>,
 
     // Optional shared FS (Figure 8 / data-aware experiments).
     fs: Option<SharedFs>,
@@ -181,6 +201,12 @@ pub struct Driver {
     rng: DetRng,
     /// Falkon executor lifetime accounting for wasted-CPU stats.
     run_end: Micros,
+}
+
+/// Data-diffusion state: catalog + router (see [`Driver::with_diffusion`]).
+struct SimDiffusion {
+    catalog: DataCatalog,
+    router: LocalityRouter,
 }
 
 /// A centrally-pending multi-site task (first attempt or retry).
@@ -307,6 +333,7 @@ impl Driver {
             faults: SimFaults::default(),
             task_attempts: vec![0; n],
             score_trace: Vec::new(),
+            diffusion: None,
             fs: None,
             fs_conts: HashMap::new(),
             fs_exec_of_task: HashMap::new(),
@@ -324,9 +351,27 @@ impl Driver {
 
     /// Inject task failures (multi-site mode): listed tasks fail their
     /// first attempt(s) and ride the shared retry/score/suspension
-    /// policy.
+    /// policy. In Falkon mode, `kill_executors` injects executor-level
+    /// failures instead.
     pub fn with_faults(mut self, faults: SimFaults) -> Self {
         self.faults = faults;
+        self
+    }
+
+    /// Enable data diffusion (paper §3.13): per-site dataset caches
+    /// consulted on the site pick (MultiSite) or the executor pick
+    /// (Falkon — where cache hits skip shared-FS staging, misses pay
+    /// the fluid-flow transfer, and declared outputs live in the
+    /// producing executor's cache instead of being written back). A
+    /// zero `capacity_bytes` disables the subsystem entirely, keeping
+    /// seeded sims bit-identical to the pre-diffusion behavior.
+    pub fn with_diffusion(mut self, cfg: DiffusionConfig) -> Self {
+        if cfg.capacity_bytes > 0 {
+            self.diffusion = Some(SimDiffusion {
+                catalog: DataCatalog::new(self.lrms.len().max(1), cfg.capacity_bytes),
+                router: LocalityRouter::new(cfg.router.clone()),
+            });
+        }
         self
     }
 
@@ -357,6 +402,9 @@ impl Driver {
         }
         if self.falkon.is_some() {
             self.q.at(0, Event::DrpCheck { falkon: 0 });
+            for &(t, exec) in &self.faults.kill_executors {
+                self.q.at(t, Event::ExecutorFail { falkon: 0, exec });
+            }
         }
         // Batch-pop all events sharing a timestamp: one heap interaction
         // per virtual instant instead of one per event. Events scheduled
@@ -419,6 +467,10 @@ impl Driver {
             Some(b) => (0..b.len()).map(|i| b.suspended(i, self.run_end)).collect(),
             None => Vec::new(),
         };
+        let (cache_log, cache_stats) = match &self.diffusion {
+            Some(d) => (d.catalog.log().to_vec(), d.catalog.stats()),
+            None => (Vec::new(), CacheStats::default()),
+        };
         SimOutcome {
             makespan_secs,
             peak_resources,
@@ -428,6 +480,8 @@ impl Driver {
             fs_bytes: self.fs.as_ref().map(|f| f.bytes_done).unwrap_or(0.0),
             score_trace: self.score_trace,
             site_suspended,
+            cache_log,
+            cache_stats,
             timeline: self.timeline,
         }
     }
@@ -476,9 +530,29 @@ impl Driver {
                 self.on_falkon_dispatch(now);
             }
             Event::FalkonTaskDone { exec, task, .. } => {
-                // Output staging through the FS if configured.
-                let out_bytes = self.dag.tasks[task].output_bytes;
-                if out_bytes > 0 && self.fs.is_some() {
+                // Stale completion: the executor was killed mid-run
+                // and the attempt died with it (the task was already
+                // requeued) — drop the event.
+                let live = self
+                    .falkon
+                    .as_ref()
+                    .map(|f| f.executors[exec].running == Some(task))
+                    .unwrap_or(false);
+                if !live {
+                    return;
+                }
+                // Output staging through the FS if configured. Under
+                // data diffusion, declared outputs live in the
+                // producing executor's cache (consumers restage misses
+                // on demand), so the shared-FS write-back is skipped.
+                let (out_bytes, local_out) = {
+                    let t = &self.dag.tasks[task];
+                    (
+                        t.output_bytes,
+                        self.diffusion.is_some() && !t.output_datasets.is_empty(),
+                    )
+                };
+                if out_bytes > 0 && self.fs.is_some() && !local_out {
                     let fs = self.fs.as_mut().unwrap();
                     let id = fs.start(out_bytes, now);
                     self.fs_conts.insert(id, FsCont::WriteDone { task });
@@ -488,6 +562,7 @@ impl Driver {
                     self.falkon_task_finished(now, exec, task);
                 }
             }
+            Event::ExecutorFail { exec, .. } => self.on_executor_fail(now, exec),
             Event::DrpCheck { .. } => self.on_drp_check(now),
             Event::ExecutorJoin { count, .. } => {
                 if let Some(f) = self.falkon.as_mut() {
@@ -612,6 +687,7 @@ impl Driver {
         loop {
             let Some(head) = self.pending_multisite.front() else { return };
             let avoid = head.avoid;
+            let task = head.task;
             let board = self.board.as_ref().expect("multi-site board");
             let headroom: Vec<bool> = (0..self.lrms.len())
                 .map(|i| {
@@ -621,9 +697,33 @@ impl Driver {
                     (self.site_outstanding[i] as f64) < cap
                 })
                 .collect();
-            let Some(site) =
-                board.pick_filtered(avoid, now, &mut self.rng, |i| headroom[i])
-            else {
+            // With data diffusion, the locality router weighs cached
+            // input bytes into the score-proportional pick (and the
+            // catalog records the hit/miss outcome at the chosen
+            // site); otherwise the plain filtered pick — both are the
+            // exact selection the threaded scheduler runs.
+            let picked = match self.diffusion.as_mut() {
+                Some(diff) => {
+                    let inputs = &self.dag.tasks[task].input_datasets;
+                    let site = diff.router.pick(
+                        board,
+                        &diff.catalog,
+                        inputs,
+                        avoid,
+                        now,
+                        &mut self.rng,
+                        |i| headroom[i],
+                    );
+                    if let Some(s) = site {
+                        diff.catalog.note_task_start(s, inputs);
+                    }
+                    site
+                }
+                None => {
+                    board.pick_filtered(avoid, now, &mut self.rng, |i| headroom[i])
+                }
+            };
+            let Some(site) = picked else {
                 // No site has window headroom: wait for completions.
                 return;
             };
@@ -652,6 +752,16 @@ impl Driver {
         let failed = self.task_attempts[task] < planned;
         self.task_attempts[task] += 1;
         board.record(site, !failed, now);
+        // Catalog bookkeeping in the same order as the threaded
+        // scheduler's completion path (record → unpin → outputs), so
+        // the differential test can pin the event sequences.
+        if let Some(diff) = self.diffusion.as_mut() {
+            let t = &self.dag.tasks[task];
+            diff.catalog.note_task_end(site, &t.input_datasets);
+            if !failed {
+                diff.catalog.record_output(site, &t.output_datasets);
+            }
+        }
         if failed {
             if self.task_attempts[task] <= self.faults.retries {
                 // Retry, preferring a different site (same policy as
@@ -720,13 +830,45 @@ impl Driver {
     fn on_falkon_dispatch(&mut self, now: Micros) {
         loop {
             let Some(f) = self.falkon.as_mut() else { return };
-            let Some((exec, task, start)) = f.try_dispatch(now) else {
+            // Data diffusion: among idle executors, dispatch the queue
+            // head to the one caching the most of its input bytes
+            // (lowest index on ties — which degenerates to the plain
+            // first-idle pick when nothing is cached).
+            let head = f.queue.front().copied();
+            let dispatched = match (&self.diffusion, head) {
+                (Some(diff), Some(task)) => {
+                    let inputs = &self.dag.tasks[task].input_datasets;
+                    let best = f
+                        .executors
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, e)| {
+                            e.state == super::falkon_model::ExecState::Idle
+                        })
+                        .map(|(i, _)| (i, diff.catalog.cached_bytes(i, inputs)))
+                        .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+                        .map(|(i, _)| i);
+                    best.and_then(|e| f.dispatch_to(e, now))
+                }
+                _ => f.try_dispatch(now),
+            };
+            let Some((exec, task, start)) = dispatched else {
                 break;
             };
             let overhead = f.cfg.executor_overhead;
             self.falkon_task_exec.insert(task, exec);
-            // Input staging first, if modeled.
-            let in_bytes = self.dag.tasks[task].input_bytes;
+            // Input staging first, if modeled. Declared datasets go
+            // through the catalog: hits skip the shared FS entirely,
+            // and only the miss bytes pay the fluid-flow transfer
+            // (the staged copies then live in the executor's cache).
+            let mut in_bytes = self.dag.tasks[task].input_bytes;
+            if let Some(diff) = self.diffusion.as_mut() {
+                let inputs = &self.dag.tasks[task].input_datasets;
+                if !inputs.is_empty() {
+                    let (_hit, miss) = diff.catalog.note_task_start(exec, inputs);
+                    in_bytes = miss;
+                }
+            }
             if in_bytes > 0 && self.fs.is_some() {
                 self.start_time[task] = start;
                 let fs = self.fs.as_mut().unwrap();
@@ -760,6 +902,13 @@ impl Driver {
         if let Some(f) = self.falkon.as_mut() {
             f.finish(exec, now, busy);
         }
+        // Data diffusion: release the input pins and record the
+        // produced datasets into the executor's cache.
+        if let Some(diff) = self.diffusion.as_mut() {
+            let t = &self.dag.tasks[task];
+            diff.catalog.note_task_end(exec, &t.input_datasets);
+            diff.catalog.record_output(exec, &t.output_datasets);
+        }
         self.complete_task(now, task);
         self.queue_falkon_dispatch(now);
     }
@@ -780,6 +929,51 @@ impl Driver {
         if self.n_done < self.dag.len() {
             let interval = f.cfg.drp.check_interval;
             self.q.after(interval, Event::DrpCheck { falkon: 0 });
+        }
+    }
+
+    /// Injected executor failure (Falkon mode): deregister the
+    /// executor, drop its cached datasets from the diffusion catalog,
+    /// abort any staging the dead attempt had in flight, and requeue
+    /// its task (the service-side resubmit; DRP then re-provisions a
+    /// replacement on its next check).
+    fn on_executor_fail(&mut self, now: Micros, exec: usize) {
+        let Some(f) = self.falkon.as_mut() else { return };
+        if exec >= f.executors.len() {
+            return;
+        }
+        let task = f.fail(exec, now);
+        if let Some(diff) = self.diffusion.as_mut() {
+            diff.catalog.drop_site(exec);
+        }
+        if let Some(task) = task {
+            // Abort the dead attempt's in-flight staging: the bytes
+            // moved so far were really transferred (and stay counted),
+            // but the stream stops competing for FS bandwidth.
+            if self.fs.is_some() {
+                let stale: Vec<u64> = self
+                    .fs_conts
+                    .iter()
+                    .filter(|(_, c)| {
+                        matches!(
+                            c,
+                            FsCont::ReadDone { task: t } | FsCont::WriteDone { task: t }
+                                if *t == task
+                        )
+                    })
+                    .map(|(id, _)| *id)
+                    .collect();
+                let fs = self.fs.as_mut().unwrap();
+                for id in stale {
+                    fs.cancel(id, now);
+                    self.fs_conts.remove(&id);
+                }
+            }
+            self.falkon_task_exec.remove(&task);
+            let f = self.falkon.as_mut().unwrap();
+            f.queue.push_back(task);
+            f.peak_queue = f.peak_queue.max(f.queue.len());
+            self.queue_falkon_dispatch(now);
         }
     }
 
@@ -804,11 +998,17 @@ impl Driver {
                 FsCont::ReadDone { task } => {
                     let exec = self.fs_exec_of_task[&task];
                     let f = self.falkon.as_ref().unwrap();
-                    let svc = self.dag.tasks[task].service;
-                    self.q.at(
-                        now + f.cfg.executor_overhead + svc,
-                        Event::FalkonTaskDone { falkon: 0, exec, task },
-                    );
+                    // Same-instant kill race: the executor may have
+                    // died as this staging completed — the attempt
+                    // died with it (the task was requeued), so don't
+                    // start the compute.
+                    if f.executors[exec].running == Some(task) {
+                        let svc = self.dag.tasks[task].service;
+                        self.q.at(
+                            now + f.cfg.executor_overhead + svc,
+                            Event::FalkonTaskDone { falkon: 0, exec, task },
+                        );
+                    }
                 }
                 FsCont::WriteDone { task } => {
                     let exec = self.fs_exec_of_task[&task];
@@ -1042,6 +1242,7 @@ mod tests {
                 .map(|i| (i, 1))
                 .collect(),
             retries: 1,
+            ..Default::default()
         };
         let o = Driver::new(dag, mode, 0xD1FF)
             .with_faults(faults)
@@ -1076,6 +1277,7 @@ mod tests {
         let faults = SimFaults {
             fail_first_attempts: [(1usize, 3usize)].into_iter().collect(),
             retries: 1,
+            ..Default::default()
         };
         let o = Driver::new(dag, mode, 7).with_faults(faults).run();
         assert_eq!(o.timeline.len(), 4);
@@ -1264,6 +1466,158 @@ mod tests {
         // 64 x 100 MB through a 1 GB/s FS: >= 6.4 s of pure I/O.
         assert!(o.makespan_secs >= 6.0, "{}", o.makespan_secs);
         assert!(o.fs_bytes >= 64.0 * 100.0 * 1024.0 * 1024.0 * 0.99);
+    }
+
+    #[test]
+    fn diffusion_cache_hits_skip_shared_fs_staging() {
+        const MB: u64 = 1024 * 1024;
+        let mk = || {
+            let mut rng = DetRng::new(42);
+            Dag::fmri_datasets(16, [1.0, 1.0, 1.0, 1.0], 32 * MB, &mut rng)
+        };
+        let plain = Driver::new(mk(), falkon_static(8), 5)
+            .with_shared_fs(SharedFs::gpfs_8())
+            .run();
+        let cached = Driver::new(mk(), falkon_static(8), 5)
+            .with_shared_fs(SharedFs::gpfs_8())
+            .with_diffusion(DiffusionConfig {
+                capacity_bytes: 1 << 30,
+                ..Default::default()
+            })
+            .run();
+        assert_eq!(plain.timeline.len(), 64);
+        assert_eq!(cached.timeline.len(), 64);
+        assert_eq!(plain.cache_stats.hits, 0, "no catalog without diffusion");
+        assert!(plain.cache_log.is_empty());
+        assert!(cached.cache_stats.hits > 0, "{:?}", cached.cache_stats);
+        assert!(
+            cached.fs_bytes < plain.fs_bytes,
+            "hits skip staging: {} vs {}",
+            cached.fs_bytes,
+            plain.fs_bytes
+        );
+        assert!(
+            cached.makespan_secs < plain.makespan_secs,
+            "data diffusion beats shared-FS-every-time: {} vs {}",
+            cached.makespan_secs,
+            plain.makespan_secs
+        );
+    }
+
+    #[test]
+    fn diffusion_without_datasets_or_capacity_is_bit_identical() {
+        let mode = || {
+            Mode::MultiSite {
+                sites: vec![
+                    ("a".to_string(), LrmConfig::pbs(4), 1.0),
+                    ("b".to_string(), LrmConfig::pbs(4), 1.0),
+                ],
+                gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+            }
+        };
+        let base = Driver::new(Dag::chain(20, "t", 1.0), mode(), 77).run();
+        // The zero-capacity default disables diffusion outright.
+        let zero = Driver::new(Dag::chain(20, "t", 1.0), mode(), 77)
+            .with_diffusion(DiffusionConfig::default())
+            .run();
+        // Enabled diffusion over a dataset-less DAG delegates to the
+        // plain score-proportional pick: same RNG draws, same routes.
+        let on = Driver::new(Dag::chain(20, "t", 1.0), mode(), 77)
+            .with_diffusion(DiffusionConfig {
+                capacity_bytes: 1 << 30,
+                ..Default::default()
+            })
+            .run();
+        assert_eq!(base.makespan_secs, zero.makespan_secs);
+        assert_eq!(base.score_trace, zero.score_trace);
+        assert_eq!(base.makespan_secs, on.makespan_secs);
+        assert_eq!(base.score_trace, on.score_trace);
+        assert!(zero.cache_log.is_empty());
+        assert!(on.cache_log.is_empty(), "no datasets: catalog untouched");
+    }
+
+    #[test]
+    fn multisite_routing_prefers_site_with_cached_inputs() {
+        const MB: u64 = 1024 * 1024;
+        let ds = crate::diffusion::DatasetRef { id: 1, bytes: 64 * MB };
+        let mut dag = Dag::new();
+        dag.push(
+            SimTask::new("produce", 1.0).with_datasets(vec![], vec![ds]),
+        );
+        for i in 1..30 {
+            dag.push(
+                SimTask::new("consume", 1.0)
+                    .with_deps(vec![i - 1])
+                    .with_datasets(vec![ds], vec![]),
+            );
+        }
+        let mode = Mode::MultiSite {
+            sites: vec![
+                ("a".to_string(), LrmConfig::pbs(4), 1.0),
+                ("b".to_string(), LrmConfig::pbs(4), 1.0),
+            ],
+            gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+        };
+        let o = Driver::new(dag, mode, 0xCAFE)
+            .with_diffusion(DiffusionConfig {
+                capacity_bytes: 1 << 30,
+                ..Default::default()
+            })
+            .run();
+        assert_eq!(o.timeline.len(), 30);
+        // The catalog inserts at pick time, so each site can miss the
+        // shared dataset at most once: 29 consumers, >= 27 hits.
+        assert!(o.cache_stats.misses <= 2, "{:?}", o.cache_stats);
+        assert!(o.cache_stats.hits >= 27, "{:?}", o.cache_stats);
+    }
+
+    #[test]
+    fn executor_kill_requeues_in_flight_task() {
+        let mut cfg = FalkonConfig::default();
+        cfg.drp = DrpPolicy::static_pool(4);
+        cfg.drp.allocation_latency = 0;
+        let dag = Dag::bag(40, "t", 1.0);
+        let faults = SimFaults {
+            kill_executors: vec![(secs(2.0), 0), (secs(5.0), 1)],
+            ..Default::default()
+        };
+        let o = Driver::new(dag, Mode::Falkon { cfg }, 31)
+            .with_faults(faults)
+            .run();
+        assert_eq!(o.timeline.len(), 40, "every task completes despite kills");
+        assert!(o.timeline.records.iter().all(|r| r.ok));
+        // 40 x 1 s across a pool that twice dips below 4 and is
+        // re-provisioned by DRP: at least the full-pool lower bound.
+        assert!(o.makespan_secs >= 10.0, "{}", o.makespan_secs);
+    }
+
+    #[test]
+    fn killed_executor_cache_entries_drop_from_catalog() {
+        const MB: u64 = 1024 * 1024;
+        let mut rng = DetRng::new(9);
+        let dag = Dag::fmri_datasets(8, [1.0, 1.0, 1.0, 1.0], 8 * MB, &mut rng);
+        let mut cfg = FalkonConfig::default();
+        cfg.drp = DrpPolicy::static_pool(4);
+        cfg.drp.allocation_latency = 0;
+        let o = Driver::new(dag, Mode::Falkon { cfg }, 11)
+            .with_shared_fs(SharedFs::gpfs_8())
+            .with_diffusion(DiffusionConfig {
+                capacity_bytes: 1 << 30,
+                ..Default::default()
+            })
+            .with_faults(SimFaults {
+                kill_executors: vec![(secs(3.0), 0)],
+                ..Default::default()
+            })
+            .run();
+        assert_eq!(o.timeline.len(), 32);
+        assert!(o.timeline.records.iter().all(|r| r.ok));
+        assert!(
+            o.cache_log
+                .iter()
+                .any(|e| matches!(e, CacheEvent::Drop { site: 0, .. })),
+            "killed executor's cached datasets dropped from the catalog"
+        );
     }
 
     #[test]

@@ -170,6 +170,10 @@ pub struct Executor {
     pub registered_at: Micros,
     pub tasks_run: u64,
     pub busy_time: Micros,
+    /// The DAG task currently dispatched to this executor (staging or
+    /// computing). Lets failure injection find the in-flight attempt,
+    /// and completion events validate they are not stale.
+    pub running: Option<usize>,
 }
 
 /// The Falkon service state (model).
@@ -253,6 +257,7 @@ impl FalkonSim {
                 registered_at: now,
                 tasks_run: 0,
                 busy_time: 0,
+                running: None,
             });
             ids.push(self.executors.len() - 1);
         }
@@ -261,19 +266,29 @@ impl FalkonSim {
         ids
     }
 
-    /// Attempt one dispatch at `now`: pops the queue head onto an idle
-    /// executor. Returns `(exec, task, start_time)`; `start_time` accounts
-    /// for the serialized dispatcher cost (the streamlined dispatcher's 2
-    /// message exchanges).
+    /// Attempt one dispatch at `now`: pops the queue head onto the
+    /// first idle executor. Returns `(exec, task, start_time)`;
+    /// `start_time` accounts for the serialized dispatcher cost (the
+    /// streamlined dispatcher's 2 message exchanges).
     pub fn try_dispatch(&mut self, now: Micros) -> Option<(usize, usize, Micros)> {
         if self.queue.is_empty() {
             return None;
         }
         let exec = self.idle_executor()?;
-        let task = self.queue.pop_front().unwrap();
+        self.dispatch_to(exec, now)
+    }
+
+    /// Dispatch the queue head onto a *specific* idle executor (the
+    /// data-diffusion driver picks the one caching the most of the
+    /// task's inputs). Same serialized dispatcher accounting as
+    /// [`FalkonSim::try_dispatch`].
+    pub fn dispatch_to(&mut self, exec: usize, now: Micros) -> Option<(usize, usize, Micros)> {
+        debug_assert_eq!(self.executors[exec].state, ExecState::Idle);
+        let task = self.queue.pop_front()?;
         let start = now.max(self.dispatcher_free_at) + self.cfg.dispatch_cost;
         self.dispatcher_free_at = start;
         self.executors[exec].state = ExecState::Busy;
+        self.executors[exec].running = Some(task);
         self.dispatched += 1;
         Some((exec, task, start))
     }
@@ -286,6 +301,22 @@ impl FalkonSim {
         e.idle_since = now;
         e.tasks_run += 1;
         e.busy_time += busy;
+        e.running = None;
+    }
+
+    /// Kill `exec` at `now` (injected executor failure, paper §3.12):
+    /// it deregisters immediately — stopping its alive-time accrual —
+    /// and the task it was running, if any, is returned for the caller
+    /// to requeue. Killing a dead executor is a no-op.
+    pub fn fail(&mut self, exec: usize, now: Micros) -> Option<usize> {
+        let e = &mut self.executors[exec];
+        if e.state == ExecState::Deregistered {
+            return None;
+        }
+        let task = e.running.take();
+        e.state = ExecState::Deregistered;
+        e.idle_since = now;
+        task
     }
 
     /// DRP: how many new executors to request now — the shared
@@ -375,6 +406,37 @@ mod tests {
         }
         let rate = 1e6 / f.cfg.dispatch_cost as f64;
         assert!((rate - 487.0).abs() < 1.0, "rate {rate}");
+    }
+
+    #[test]
+    fn fail_kills_executor_and_returns_in_flight_task() {
+        let mut f = svc();
+        f.register(2, 0);
+        f.submit(7);
+        let (exec, task, _) = f.try_dispatch(0).unwrap();
+        assert_eq!(task, 7);
+        assert_eq!(f.executors[exec].running, Some(7));
+        // Kill the busy executor: its task comes back for requeue.
+        assert_eq!(f.fail(exec, 100), Some(7));
+        assert_eq!(f.executors[exec].state, ExecState::Deregistered);
+        assert_eq!(f.live_executors(), 1);
+        // Killing again (or an idle executor) yields no task.
+        assert_eq!(f.fail(exec, 200), None);
+        let other = (exec + 1) % 2;
+        assert_eq!(f.fail(other, 200), None, "idle executor had no task");
+        assert_eq!(f.live_executors(), 0);
+    }
+
+    #[test]
+    fn dispatch_to_targets_a_chosen_executor() {
+        let mut f = svc();
+        f.register(3, 0);
+        f.submit(1);
+        let (exec, task, start) = f.dispatch_to(2, 0).unwrap();
+        assert_eq!((exec, task), (2, 1));
+        assert_eq!(start, f.cfg.dispatch_cost);
+        assert_eq!(f.executors[2].state, ExecState::Busy);
+        assert_eq!(f.executors[0].state, ExecState::Idle);
     }
 
     #[test]

@@ -68,6 +68,10 @@ pub enum Event {
     ExecutorJoin { falkon: usize, count: usize },
     /// Idle-timeout check for one executor.
     ExecutorIdle { falkon: usize, exec: usize },
+    /// Injected executor failure (`SimFaults::kill_executors`): the
+    /// executor dies, its cached datasets drop from the catalog, and
+    /// its in-flight task is requeued.
+    ExecutorFail { falkon: usize, exec: usize },
     /// Clustering window expired: flush the pending bundle.
     ClusterFlush,
     /// Submit-frame coalescer cut-off reached: ship buffered tasks as

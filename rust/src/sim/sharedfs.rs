@@ -96,6 +96,17 @@ impl SharedFs {
             .min_by_key(|(t, _)| *t)
     }
 
+    /// Abort a transfer (e.g. its executor died mid-staging): advance
+    /// the fluid to `now` — the bytes moved so far stay counted, as
+    /// they really crossed the wire — then drop the stream so the
+    /// remaining bandwidth redistributes. No-op for unknown ids.
+    pub fn cancel(&mut self, id: u64, now: Micros) {
+        self.advance(now);
+        if let Some(pos) = self.active.iter().position(|t| t.id == id) {
+            self.active.remove(pos);
+        }
+    }
+
     /// Whether a transfer has (fluid-)finished by `now`.
     pub fn finish_if_done(&mut self, id: u64, now: Micros) -> bool {
         self.advance(now);
@@ -157,6 +168,21 @@ mod tests {
         // Remaining stream finishes (it was fluid-advanced along the way).
         let done = fs.finish_if_done(second, t);
         assert!(done, "equal streams finish together in the fluid model");
+    }
+
+    #[test]
+    fn cancel_frees_bandwidth_for_survivors() {
+        let mut fs = SharedFs::new(200.0e6, 200.0e6, 0);
+        let a = fs.start(100_000_000, 0);
+        let b = fs.start(100_000_000, 0);
+        // Sharing 100 MB/s each; cancel b at 0.5 s: a has 50 MB left
+        // and then flows at the full 200 MB/s -> done at 0.75 s.
+        fs.cancel(b, secs(0.5));
+        assert_eq!(fs.active_streams(), 1);
+        let (t, id) = fs.next_completion(secs(0.5)).unwrap();
+        assert_eq!(id, a);
+        assert!((t as i64 - secs(0.75) as i64).abs() < 2000, "t={t}");
+        assert!(fs.finish_if_done(a, t));
     }
 
     #[test]

@@ -9,8 +9,9 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::apps::AppRegistry;
+use crate::diffusion::DiffusionConfig;
 use crate::falkon::{FalkonProvider, FalkonService, FalkonServiceConfig, RealDrpPolicy};
-use crate::karajan::{ClusterPolicy, Engine, EngineConfig, GridScheduler};
+use crate::karajan::{ClusterPolicy, Engine, EngineConfig, FaultPolicy, GridScheduler};
 use crate::providers::{AppRunner, LocalProvider, Provider};
 use crate::provenance::{recording_runner, Vdc};
 use crate::runtime;
@@ -38,6 +39,10 @@ pub struct StackOptions {
     pub restart_log: Option<PathBuf>,
     pub provenance: bool,
     pub seed: u64,
+    /// Data diffusion (paper §3.13): enable locality-aware site picks
+    /// + the per-site dataset cache catalog. `None` (the default)
+    /// leaves routing untouched.
+    pub diffusion: Option<DiffusionConfig>,
 }
 
 impl Default for StackOptions {
@@ -52,6 +57,7 @@ impl Default for StackOptions {
             restart_log: None,
             provenance: false,
             seed: 42,
+            diffusion: None,
         }
     }
 }
@@ -114,8 +120,22 @@ pub fn build(opts: StackOptions) -> Result<Stack> {
                 )
             }
         };
-    let scheduler =
-        GridScheduler::new(vec![provider], opts.clustering.clone(), opts.retries, opts.seed);
+    let scheduler = match opts.diffusion.clone() {
+        Some(diffusion) => GridScheduler::with_diffusion(
+            vec![provider],
+            opts.clustering.clone(),
+            opts.retries,
+            opts.seed,
+            FaultPolicy::default(),
+            diffusion,
+        ),
+        None => GridScheduler::new(
+            vec![provider],
+            opts.clustering.clone(),
+            opts.retries,
+            opts.seed,
+        ),
+    };
     let engine = Engine::new(
         EngineConfig {
             workdir: opts.workdir.clone(),

@@ -21,15 +21,19 @@
 //! f64 score trajectories — must match bit for bit.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
+use gridswift::diffusion::{
+    dataset_id_for_path, CacheEvent, CacheStats, DatasetRef, DiffusionConfig,
+};
 use gridswift::karajan::{FaultPolicy, GridScheduler};
 use gridswift::policy::ScoreConfig;
 use gridswift::providers::{AppTask, BundleDone, Provider, TaskDone, TaskResult};
 use gridswift::sim::driver::{Driver, Mode, SimFaults};
 use gridswift::sim::lrm::{GramConfig, LrmConfig};
-use gridswift::sim::Dag;
+use gridswift::sim::{Dag, SimTask};
 use gridswift::util::time::secs;
 use gridswift::util::DetRng;
 
@@ -176,6 +180,7 @@ fn sim_trajectory(
         .with_faults(SimFaults {
             fail_first_attempts: plan.clone(),
             retries: 1,
+            ..Default::default()
         })
         // Same score policy as the scheduler's FaultPolicy above; the
         // cool-down is effectively infinite in virtual time too.
@@ -231,6 +236,188 @@ fn trajectories_differ_across_seeds_but_not_across_reruns() {
     assert_eq!(a1, a2, "same seed must reproduce bit-identically");
     let (b, _) = sim_trajectory(n, 12, &plan);
     assert_ne!(a1, b, "different seeds must explore different routes");
+}
+
+// ---------------------------------------------------------------------
+// Data-diffusion catalog differential (paper §3.13)
+// ---------------------------------------------------------------------
+
+/// Per-dataset size used on both sides (the real side derives it from
+/// `DiffusionConfig::dataset_bytes`, the sim declares it per task).
+const DS_BYTES: u64 = 1 << 20;
+/// Small per-site cache: 3 datasets, so the chain forces evictions.
+const DS_CAPACITY: u64 = 3 * DS_BYTES;
+
+fn diffusion_cfg() -> DiffusionConfig {
+    DiffusionConfig {
+        capacity_bytes: DS_CAPACITY,
+        dataset_bytes: DS_BYTES,
+        ..Default::default()
+    }
+}
+
+/// The shared dataset chain: task `i` reads dataset `ds/i` (its
+/// predecessor's product) and writes `ds/{i+1}`.
+fn ds_path(i: usize) -> PathBuf {
+    PathBuf::from(format!("ds/{i}"))
+}
+
+fn dtask(i: u64) -> AppTask {
+    AppTask {
+        id: i,
+        key: format!("k{i}"),
+        executable: "t".into(),
+        args: vec![],
+        inputs: vec![ds_path(i as usize)],
+        outputs: vec![ds_path(i as usize + 1)],
+    }
+}
+
+/// Threaded scheduler with diffusion over the dataset chain: returns
+/// the score trajectory plus the catalog's event log and counters.
+fn real_catalog_run(
+    n: usize,
+    seed: u64,
+    plan: &HashMap<usize, usize>,
+) -> (Vec<Vec<f64>>, Vec<CacheEvent>, CacheStats) {
+    let remaining: Arc<Mutex<HashMap<u64, usize>>> = Arc::new(Mutex::new(
+        plan.iter().map(|(k, v)| (*k as u64, *v)).collect(),
+    ));
+    let providers: Vec<Arc<dyn Provider>> = ["a", "b"]
+        .iter()
+        .map(|name| {
+            Arc::new(InlineSite {
+                name: name.to_string(),
+                remaining_fails: Arc::clone(&remaining),
+            }) as Arc<dyn Provider>
+        })
+        .collect();
+    let sched = GridScheduler::with_diffusion(
+        providers,
+        None,
+        1,
+        seed,
+        FaultPolicy {
+            suspend_after_failures: 3,
+            suspend_for: Duration::from_secs(3600),
+        },
+        diffusion_cfg(),
+    );
+    let mut trace = Vec::with_capacity(n);
+    for i in 0..n {
+        let (tx, rx) = mpsc::channel();
+        sched.submit(dtask(i as u64), Box::new(move |r| tx.send(r).unwrap()));
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.ok, "task {i} must recover on its retry");
+        trace.push(sched.scores().into_iter().map(|(_, s)| s).collect());
+    }
+    (trace, sched.cache_log(), sched.cache_stats())
+}
+
+/// The sim driver over the same workload: a serial chain whose tasks
+/// declare the same dataset ids (derived from the same paths) with the
+/// same sizes, through the same catalog/router pair in virtual time.
+fn sim_catalog_run(
+    n: usize,
+    seed: u64,
+    plan: &HashMap<usize, usize>,
+) -> (Vec<Vec<f64>>, Vec<CacheEvent>, CacheStats) {
+    let sites = vec![
+        ("a".to_string(), LrmConfig::pbs(4), 1.0),
+        ("b".to_string(), LrmConfig::pbs(4), 1.0),
+    ];
+    let mode = Mode::MultiSite {
+        sites,
+        gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+    };
+    let mut dag = Dag::new();
+    for i in 0..n {
+        let deps = if i == 0 { vec![] } else { vec![i - 1] };
+        let input = DatasetRef {
+            id: dataset_id_for_path(Path::new(&format!("ds/{i}"))),
+            bytes: DS_BYTES,
+        };
+        let output = DatasetRef {
+            id: dataset_id_for_path(Path::new(&format!("ds/{}", i + 1))),
+            bytes: DS_BYTES,
+        };
+        dag.push(
+            SimTask::new("t", 1.0)
+                .with_deps(deps)
+                .with_datasets(vec![input], vec![output]),
+        );
+    }
+    let o = Driver::new(dag, mode, seed)
+        .with_faults(SimFaults {
+            fail_first_attempts: plan.clone(),
+            retries: 1,
+            ..Default::default()
+        })
+        .with_score_policy(
+            ScoreConfig { suspend_after_failures: 3, ..ScoreConfig::default() },
+            secs(1e9),
+        )
+        .with_diffusion(diffusion_cfg())
+        .run();
+    assert_eq!(o.timeline.len(), n);
+    assert!(o.timeline.records.iter().all(|r| r.ok));
+    (o.score_trace, o.cache_log, o.cache_stats)
+}
+
+#[test]
+fn scheduler_and_sim_share_cache_trajectories() {
+    // The diffusion acceptance bar: with the same seed, fault plan,
+    // dataset chain, cache capacity, and router config, the threaded
+    // scheduler and the discrete-event driver must produce the exact
+    // same catalog event sequence — every Hit, Miss, Output, Evict in
+    // the same order — plus identical score trajectories (the router
+    // draws through the same RNG, so routing is pinned too).
+    let n = 40;
+    let seed = 0xD1FF_05ED;
+    let plan = fault_plan(n, 0xFA17);
+    assert!(plan.len() >= 5, "need a meaningful fault plan");
+
+    let (real_trace, real_log, real_stats) = real_catalog_run(n, seed, &plan);
+    let (sim_trace, sim_log, sim_stats) = sim_catalog_run(n, seed, &plan);
+
+    assert_eq!(real_trace.len(), n);
+    assert_eq!(real_trace, sim_trace, "score trajectories diverge");
+    assert_eq!(real_stats, sim_stats, "catalog counters diverge");
+    assert_eq!(
+        real_log.len(),
+        sim_log.len(),
+        "catalog event counts diverge: real {} vs sim {}",
+        real_log.len(),
+        sim_log.len()
+    );
+    for (i, (r, s)) in real_log.iter().zip(&sim_log).enumerate() {
+        assert_eq!(r, s, "catalog logs diverge at event {i}");
+    }
+    // The case must exercise the whole machine, not a trivial subset.
+    for kind in ["Hit", "Miss", "Output", "Evict"] {
+        assert!(
+            real_log.iter().any(|e| match kind {
+                "Hit" => matches!(e, CacheEvent::Hit { .. }),
+                "Miss" => matches!(e, CacheEvent::Miss { .. }),
+                "Output" => matches!(e, CacheEvent::Output { .. }),
+                _ => matches!(e, CacheEvent::Evict { .. }),
+            }),
+            "differential case never produced a {kind} event"
+        );
+    }
+}
+
+#[test]
+fn cache_trajectories_are_seed_determined() {
+    let n = 24;
+    let plan = fault_plan(n, 0xFA17);
+    let (t1, l1, s1) = sim_catalog_run(n, 11, &plan);
+    let (t2, l2, s2) = sim_catalog_run(n, 11, &plan);
+    assert_eq!(t1, t2);
+    assert_eq!(l1, l2, "same seed must reproduce the exact event log");
+    assert_eq!(s1, s2);
+    let (_, l3, _) = sim_catalog_run(n, 12, &plan);
+    assert_ne!(l1, l3, "different seeds must route (and cache) differently");
 }
 
 #[test]

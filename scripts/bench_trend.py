@@ -36,6 +36,15 @@ TRACKED_BY_BENCH = {
         ("WAN sim line-per-task tasks/s",
          ("sim_wan_line_per_task_tasks_per_s",), True),
     ],
+    # All diffusion rows are deterministic virtual-time sims: gate them
+    # all (a >20% drop means a code change, not runner noise).
+    "diffusion": [
+        ("shared-FS-every-time tasks/s", ("sim_sharedfs_tasks_per_s",), True),
+        ("cache-hit tasks/s", ("sim_cache_hit_tasks_per_s",), True),
+        ("eviction-pressure tasks/s",
+         ("sim_eviction_pressure_tasks_per_s",), True),
+        ("executor-faults tasks/s", ("sim_exec_faults_tasks_per_s",), True),
+    ],
 }
 
 
