@@ -17,14 +17,28 @@
 //!   executor kills (`SimFaults::kill_executors`): dead executors drop
 //!   their cache entries, in-flight tasks requeue, DRP re-provisions.
 //!
+//! A second section measures the peer-to-peer transfer network on a
+//! locality-heavy fan-out (one hot dataset read by 64 consumers across
+//! 16 executors), comparing the three ways a consumer can get its
+//! input (`sim_peer_*` rows):
+//!
+//! - **local hit** — the dataset is already cached on every executor
+//!   (pre-warmed): staging-free upper bound.
+//! - **peer fetch** — one executor holds it; misses fetch over
+//!   dedicated 1 Gb/s peer links, each pair its own fluid channel.
+//! - **shared-FS cold** — no peer links (the zero-link topology):
+//!   misses restage through the contended GPFS fluid.
+//!
 //! All rows are deterministic virtual-time sims, so CI gates their
 //! `sim_*` keys (>20% regression fails) via `scripts/bench_trend.py`.
 
-use gridswift::diffusion::{CacheStats, DiffusionConfig};
+use gridswift::diffusion::{
+    CacheStats, DatasetRef, DiffusionConfig, LinkSpec, LinkTopology,
+};
 use gridswift::metrics::Table;
 use gridswift::sim::driver::{Driver, Mode, SimFaults};
 use gridswift::sim::falkon_model::{DrpPolicy, FalkonConfig};
-use gridswift::sim::{Dag, SharedFs};
+use gridswift::sim::{Dag, SharedFs, SimTask};
 use gridswift::util::json::Json;
 use gridswift::util::time::secs;
 use gridswift::util::DetRng;
@@ -86,6 +100,67 @@ fn run(
         tasks_per_s: n as f64 / o.makespan_secs,
         makespan_secs: o.makespan_secs,
         fs_gb: o.fs_bytes / (1024.0 * 1024.0 * 1024.0),
+        stats: o.cache_stats,
+    }
+}
+
+/// Per-consumer input size for the peer-transfer rows: big enough that
+/// staging dominates the 1 s of compute.
+const PEER_DS_MB: u64 = 256;
+const PEER_CONSUMERS: usize = 64;
+
+/// The peer-network fan-out: `warm` producers each publish the hot
+/// dataset on their executor (warm > 1 pre-seeds every executor for
+/// the local-hit row; warm == 1 leaves a single holder), then 64
+/// consumers read it.
+fn peer_dag(warm: usize) -> Dag {
+    let ds = DatasetRef { id: 1, bytes: PEER_DS_MB * MB };
+    let mut dag = Dag::new();
+    let producers: Vec<usize> = (0..warm)
+        .map(|_| {
+            dag.push(SimTask::new("produce", 1.0).with_datasets(vec![], vec![ds]))
+        })
+        .collect();
+    for _ in 0..PEER_CONSUMERS {
+        dag.push(
+            SimTask::new("consume", 1.0)
+                .with_deps(producers.clone())
+                .with_datasets(vec![ds], vec![]),
+        );
+    }
+    dag
+}
+
+struct PeerRow {
+    name: &'static str,
+    consumers_per_s: f64,
+    makespan_secs: f64,
+    fs_gb: f64,
+    peer_gb: f64,
+    stats: CacheStats,
+}
+
+/// One peer-network row: `warm` holders, the given link topology.
+fn run_peer(name: &'static str, warm: usize, links: LinkTopology) -> PeerRow {
+    let o = Driver::new(peer_dag(warm), falkon_mode(), SEED)
+        .with_shared_fs(SharedFs::gpfs_8())
+        .with_diffusion(DiffusionConfig {
+            capacity_bytes: 16 << 30,
+            links: Some(links),
+            ..Default::default()
+        })
+        .run();
+    assert_eq!(
+        o.timeline.len(),
+        warm + PEER_CONSUMERS,
+        "{name}: every task completes"
+    );
+    PeerRow {
+        name,
+        consumers_per_s: PEER_CONSUMERS as f64 / o.makespan_secs,
+        makespan_secs: o.makespan_secs,
+        fs_gb: o.fs_bytes / (1024.0 * 1024.0 * 1024.0),
+        peer_gb: o.peer_bytes / (1024.0 * 1024.0 * 1024.0),
         stats: o.cache_stats,
     }
 }
@@ -157,6 +232,81 @@ fn main() {
         "eviction-pressure row must actually evict"
     );
 
+    // ------------------------------------------------------------------
+    // Peer-to-peer transfer network (the PR-5 rows)
+    // ------------------------------------------------------------------
+    println!(
+        "\n== Peer transfer network: 1 hot {PEER_DS_MB} MB dataset, \
+         {PEER_CONSUMERS} consumers x {EXECUTORS} executors ==\n"
+    );
+    // Uplink estimate derived from the very fluid the misses stage
+    // through (per-stream NIC cap + op latency), so plan and fluid
+    // agree; peers get dedicated 1 Gb/s pair links.
+    let fs_uplink = SharedFs::gpfs_8().link_spec();
+    let peer_link = LinkSpec::gbit(1_000);
+    let local = run_peer(
+        "local hit (pre-warmed everywhere)",
+        EXECUTORS,
+        LinkTopology::uniform(EXECUTORS, fs_uplink, peer_link),
+    );
+    let peer = run_peer(
+        "peer fetch (1 holder, 1 Gb/s mesh)",
+        1,
+        LinkTopology::uniform(EXECUTORS, fs_uplink, peer_link),
+    );
+    let cold = run_peer(
+        "shared-FS cold (1 holder, no links)",
+        1,
+        LinkTopology::shared_only(EXECUTORS, fs_uplink),
+    );
+    let mut pt = Table::new(&[
+        "Row",
+        "consumers/s",
+        "makespan (s)",
+        "FS GB",
+        "peer GB",
+        "hits",
+        "misses",
+    ]);
+    for r in [&local, &peer, &cold] {
+        pt.row(&[
+            r.name.into(),
+            format!("{:.1}", r.consumers_per_s),
+            format!("{:.1}", r.makespan_secs),
+            format!("{:.2}", r.fs_gb),
+            format!("{:.2}", r.peer_gb),
+            r.stats.hits.to_string(),
+            r.stats.misses.to_string(),
+        ]);
+    }
+    pt.print();
+    println!(
+        "\n  peer fetch recovers {:.0}% of the local-hit win over cold restage",
+        100.0 * (peer.consumers_per_s - cold.consumers_per_s)
+            / (local.consumers_per_s - cold.consumers_per_s).max(1e-9)
+    );
+
+    // Acceptance: routing misses to a peer holder must beat restaging
+    // them cold through the shared FS, and the rows must exercise what
+    // they claim to.
+    assert!(
+        peer.consumers_per_s > cold.consumers_per_s,
+        "peer-fetch row must beat shared-FS-cold: {:.2} vs {:.2}",
+        peer.consumers_per_s,
+        cold.consumers_per_s
+    );
+    assert!(
+        local.consumers_per_s >= peer.consumers_per_s,
+        "local hits can't lose to peer fetches: {:.2} vs {:.2}",
+        local.consumers_per_s,
+        peer.consumers_per_s
+    );
+    assert!(peer.peer_gb > 0.0, "peer row must move bytes over links");
+    assert!(
+        cold.peer_gb == 0.0 && cold.fs_gb > 0.0,
+        "cold row must restage through the FS only"
+    );
+
     let mut report = Json::obj();
     report.set("bench", "diffusion");
     report.set("quick", quick);
@@ -177,6 +327,14 @@ fn main() {
     report.set("cache_hit_hits", cached.stats.hits);
     report.set("cache_hit_misses", cached.stats.misses);
     report.set("evict_pressure_evictions", evict.stats.evictions);
+    report.set("peer_dataset_mb", PEER_DS_MB);
+    report.set("peer_consumers", PEER_CONSUMERS as u64);
+    report.set("sim_peer_local_hit_tasks_per_s", local.consumers_per_s);
+    report.set("sim_peer_fetch_tasks_per_s", peer.consumers_per_s);
+    report.set("sim_peer_sharedfs_cold_tasks_per_s", cold.consumers_per_s);
+    report.set("peer_fetch_fs_gb", peer.fs_gb);
+    report.set("peer_fetch_peer_gb", peer.peer_gb);
+    report.set("sharedfs_cold_fs_gb", cold.fs_gb);
     std::fs::write("BENCH_diffusion.json", report.render())
         .expect("write BENCH_diffusion.json");
     println!("\nwrote BENCH_diffusion.json");

@@ -111,10 +111,21 @@ impl CacheModel {
         pins: u32,
     ) -> Vec<DatasetId> {
         if let Some(e) = self.entries.get_mut(&id) {
-            // Idempotent re-record: recency (and the requested pin)
-            // only; the resident copy's size is authoritative.
+            // Idempotent re-record: recency plus the requested pin. The
+            // caller's declared size is authoritative — a dataset whose
+            // recorded size changed (e.g. a regenerated output)
+            // reconciles `used`, sweeping if the copy grew.
             e.last_access = seq;
             e.pins += pins;
+            if e.bytes != bytes {
+                let old = e.bytes;
+                e.bytes = bytes;
+                self.used -= old;
+                self.used += bytes;
+                if bytes > old {
+                    return self.sweep();
+                }
+            }
             return Vec::new();
         }
         self.entries.insert(id, Entry { bytes, last_access: seq, pins });
@@ -211,6 +222,26 @@ mod tests {
         assert_eq!(c.len(), 2);
         // 1 was refreshed, so 2 is now the LRU.
         assert_eq!(c.insert(3, 2, 4), vec![2]);
+    }
+
+    #[test]
+    fn rerecord_with_changed_size_reconciles_used() {
+        let mut c = CacheModel::new(10);
+        c.insert(1, 4, 1);
+        c.insert(2, 4, 2);
+        assert_eq!(c.used(), 8);
+        // Shrink: `used` drops to reality, nothing evicts.
+        assert!(c.insert(1, 2, 3).is_empty());
+        assert_eq!(c.used(), 6);
+        // Grow past capacity: `used` reconciles and the overflow sweeps
+        // the LRU (2, since 1 was just refreshed).
+        assert_eq!(c.insert(1, 9, 4), vec![2]);
+        assert_eq!(c.used(), 9);
+        assert_eq!(c.len(), 1);
+        // A pinned re-record still reconciles but defers the sweep.
+        c.pin(1);
+        assert_eq!(c.insert_pinned(1, 12, 5), vec![]);
+        assert_eq!(c.used(), 12, "over capacity under pin pressure");
     }
 
     #[test]

@@ -32,6 +32,22 @@
 use super::cache::CacheModel;
 use super::{DatasetId, DatasetRef};
 
+/// Iterate `refs` keeping only the first occurrence of each dataset id.
+///
+/// Tasks may (through aliased mappings) declare the same dataset twice
+/// in one input list; the catalog's accounting is per *distinct*
+/// dataset — counting a duplicate would double hit/miss bytes, double
+/// the pin, and then over-unpin on task end, releasing a pin another
+/// in-flight task still holds. Input lists are short, so the quadratic
+/// scan beats allocating a set. (The router shares this boundary rule
+/// so its weights price each distinct dataset once too.)
+pub(crate) fn dedup_by_id(refs: &[DatasetRef]) -> impl Iterator<Item = &DatasetRef> {
+    refs.iter()
+        .enumerate()
+        .filter(|(i, d)| !refs[..*i].iter().any(|e| e.id == d.id))
+        .map(|(_, d)| d)
+}
+
 /// One catalog mutation, in operation order. The differential test
 /// pins real-vs-sim sequences of these.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -107,34 +123,91 @@ impl DataCatalog {
 
     /// Bytes of `inputs` already cached at `site` (0 when disabled or
     /// the site is unknown) — the locality signal the router weighs.
+    /// Duplicate declarations of one dataset count once.
     pub fn cached_bytes(&self, site: usize, inputs: &[DatasetRef]) -> u64 {
         let Some(c) = self.caches.get(site) else { return 0 };
-        inputs.iter().filter(|d| c.contains(d.id)).map(|d| d.bytes).sum()
+        dedup_by_id(inputs)
+            .filter(|d| c.contains(d.id))
+            .map(|d| d.bytes)
+            .sum()
+    }
+
+    /// The distinct `inputs` *not* cached at `site`, in declaration
+    /// order — the miss set a transfer planner prices *before*
+    /// [`DataCatalog::note_task_start`] inserts the staged copies.
+    /// Empty when the catalog is disabled (no staging decisions exist).
+    pub fn misses_at(&self, site: usize, inputs: &[DatasetRef]) -> Vec<DatasetRef> {
+        if !self.enabled() {
+            return Vec::new();
+        }
+        dedup_by_id(inputs)
+            .filter(|d| !self.contains(site, d.id))
+            .copied()
+            .collect()
+    }
+
+    /// Sites currently holding a copy of `id`, in ascending order —
+    /// the holder set the transfer planner chooses a source from. The
+    /// ascending order makes the planner's lowest-holder tie-break
+    /// deterministic across worlds.
+    pub fn holders_of(&self, id: DatasetId) -> Vec<usize> {
+        self.caches
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.contains(id))
+            .map(|(i, _)| i)
+            .collect()
     }
 
     /// A task with declared `inputs` starts at `site`: record hits and
     /// misses, stage+cache the misses, pin everything for the run.
-    /// Returns `(hit_bytes, miss_bytes)`.
+    /// Returns `(hit_bytes, miss_bytes)`. Duplicate declarations of
+    /// one dataset count (and pin) once; a hit whose declared size
+    /// differs from the resident copy's reconciles the cache
+    /// accounting (possibly evicting to re-fit).
+    ///
+    /// Hit/miss classification is fixed *at entry*: every resident
+    /// input is pinned up front, so a miss's pinned insert can never
+    /// evict a sibling input mid-call and turn it into a surprise
+    /// (unplanned, unstaged) miss. The at-entry classification is
+    /// exactly what [`DataCatalog::misses_at`] priced for the transfer
+    /// planner, so `plan count == miss count` holds.
     pub fn note_task_start(&mut self, site: usize, inputs: &[DatasetRef]) -> (u64, u64) {
         if !self.enabled() || inputs.is_empty() {
             return (0, 0);
         }
         self.ensure_sites(site + 1);
         let (mut hit_bytes, mut miss_bytes) = (0u64, 0u64);
-        for d in inputs {
+        let deduped: Vec<DatasetRef> = dedup_by_id(inputs).copied().collect();
+        // Phase 1: take the run pin on every already-resident input.
+        let resident: Vec<bool> = {
+            let c = &mut self.caches[site];
+            deduped
+                .iter()
+                .map(|d| {
+                    let r = c.contains(d.id);
+                    if r {
+                        c.pin(d.id);
+                    }
+                    r
+                })
+                .collect()
+        };
+        // Phase 2: account and stage in declaration order.
+        for (d, &was_resident) in deduped.iter().zip(&resident) {
             self.seq += 1;
             let seq = self.seq;
-            let (hit, evicted) = {
+            let evicted = {
                 let c = &mut self.caches[site];
-                if c.contains(d.id) {
-                    c.touch(d.id, seq);
-                    c.pin(d.id);
-                    (true, Vec::new())
+                if was_resident {
+                    // Pin already held: refresh recency + reconcile a
+                    // changed size.
+                    c.insert(d.id, d.bytes, seq)
                 } else {
-                    (false, c.insert_pinned(d.id, d.bytes, seq))
+                    c.insert_pinned(d.id, d.bytes, seq)
                 }
             };
-            if hit {
+            if was_resident {
                 hit_bytes += d.bytes;
                 self.stats.hits += 1;
                 self.stats.hit_bytes += d.bytes;
@@ -144,25 +217,25 @@ impl DataCatalog {
                 self.stats.misses += 1;
                 self.stats.miss_bytes += d.bytes;
                 self.log.push(CacheEvent::Miss { site, dataset: d.id });
-                for e in evicted {
-                    self.stats.evictions += 1;
-                    self.log.push(CacheEvent::Evict { site, dataset: e });
-                }
+            }
+            for e in evicted {
+                self.stats.evictions += 1;
+                self.log.push(CacheEvent::Evict { site, dataset: e });
             }
         }
         (hit_bytes, miss_bytes)
     }
 
     /// The attempt at `site` ended (success or failure): release the
-    /// input pins and apply any eviction deferred while they were
-    /// held.
+    /// input pins (once per distinct dataset, matching the start-side
+    /// pins) and apply any eviction deferred while they were held.
     pub fn note_task_end(&mut self, site: usize, inputs: &[DatasetRef]) {
         if !self.enabled() || inputs.is_empty() || site >= self.caches.len() {
             return;
         }
         let evicted = {
             let c = &mut self.caches[site];
-            for d in inputs {
+            for d in dedup_by_id(inputs) {
                 c.unpin(d.id);
             }
             c.sweep()
@@ -181,24 +254,23 @@ impl DataCatalog {
             return;
         }
         self.ensure_sites(site + 1);
-        for d in outputs {
+        for d in dedup_by_id(outputs) {
             self.seq += 1;
             let seq = self.seq;
             let (fresh, evicted) = {
                 let c = &mut self.caches[site];
-                if c.contains(d.id) {
-                    c.touch(d.id, seq);
-                    (false, Vec::new())
-                } else {
-                    (true, c.insert(d.id, d.bytes, seq))
-                }
+                let fresh = !c.contains(d.id);
+                // A resident re-record refreshes recency and reconciles
+                // a changed size (no Output event, but any evictions a
+                // grown copy forces are logged).
+                (fresh, c.insert(d.id, d.bytes, seq))
             };
             if fresh {
                 self.log.push(CacheEvent::Output { site, dataset: d.id });
-                for e in evicted {
-                    self.stats.evictions += 1;
-                    self.log.push(CacheEvent::Evict { site, dataset: e });
-                }
+            }
+            for e in evicted {
+                self.stats.evictions += 1;
+                self.log.push(CacheEvent::Evict { site, dataset: e });
             }
         }
     }
@@ -316,6 +388,76 @@ mod tests {
             CacheEvent::Drop { site: 0, dataset: 1 },
             CacheEvent::Drop { site: 0, dataset: 2 },
         ]));
+    }
+
+    #[test]
+    fn duplicate_inputs_count_once() {
+        let mut cat = DataCatalog::new(1, 1000);
+        // A task declaring the same dataset twice: one miss, one pin.
+        let dup = [ds(5, 100), ds(5, 100)];
+        let (h, m) = cat.note_task_start(0, &dup);
+        assert_eq!((h, m), (0, 100), "duplicate must not double the miss");
+        assert_eq!(cat.stats().misses, 1);
+        assert_eq!(cat.stats().miss_bytes, 100);
+        assert_eq!(cat.cached_bytes(0, &dup), 100, "cached_bytes dedups too");
+        // Another in-flight task pins the same dataset once.
+        cat.note_task_start(0, &[ds(5, 100)]);
+        // The duplicate-declaring task ends: it releases exactly the
+        // one pin it took, so the dataset stays pinned for the other
+        // task — an overflow insert must defer, not evict it.
+        cat.note_task_end(0, &dup);
+        cat.record_output(0, &[ds(6, 1000)]);
+        assert!(
+            cat.contains(0, 5),
+            "dataset still pinned by the in-flight task"
+        );
+        cat.note_task_end(0, &[ds(5, 100)]);
+    }
+
+    #[test]
+    fn sibling_miss_cannot_evict_a_resident_input_mid_call() {
+        // Regression: a miss's pinned insert used to be able to evict
+        // a later-declared resident input before its turn, recording a
+        // surprise miss that misses_at never priced (so the planner
+        // staged fewer bytes than the catalog charged).
+        let mut cat = DataCatalog::new(1, 100);
+        cat.record_output(0, &[ds(7, 60)]); // resident, unpinned
+        let inputs = [ds(8, 80), ds(7, 60)];
+        assert_eq!(cat.misses_at(0, &inputs), vec![ds(8, 80)]);
+        let (h, m) = cat.note_task_start(0, &inputs);
+        assert_eq!((h, m), (60, 80), "the resident input stays a hit");
+        assert_eq!(cat.stats().misses, 1, "exactly the planned miss");
+        assert!(cat.contains(0, 7), "pinned at entry: eviction deferred");
+        // Pins release at task end; the over-capacity state then sweeps.
+        cat.note_task_end(0, &inputs);
+        assert!(cat.log().iter().any(|e| matches!(
+            e,
+            CacheEvent::Evict { site: 0, .. }
+        )));
+    }
+
+    #[test]
+    fn holders_of_lists_sites_ascending() {
+        let mut cat = DataCatalog::new(4, 1000);
+        cat.record_output(2, &[ds(1, 10)]);
+        cat.record_output(0, &[ds(1, 10)]);
+        cat.record_output(3, &[ds(9, 10)]);
+        assert_eq!(cat.holders_of(1), vec![0, 2]);
+        assert_eq!(cat.holders_of(9), vec![3]);
+        assert!(cat.holders_of(77).is_empty());
+    }
+
+    #[test]
+    fn misses_at_prices_the_pre_staging_state() {
+        let mut cat = DataCatalog::new(2, 1000);
+        cat.record_output(0, &[ds(1, 10)]);
+        let inputs = [ds(1, 10), ds(2, 20), ds(2, 20), ds(3, 30)];
+        let m = cat.misses_at(0, &inputs);
+        assert_eq!(m, vec![ds(2, 20), ds(3, 30)], "deduped, declaration order");
+        assert!(
+            DataCatalog::new(1, 0).misses_at(0, &inputs).is_empty(),
+            "disabled catalog plans nothing"
+        );
     }
 
     #[test]

@@ -1,0 +1,394 @@
+//! Peer-to-peer transfer network for data diffusion (paper §3.13).
+//!
+//! PR 4's catalog knows *which* sites hold a copy of a dataset, but a
+//! miss was still priced as if the only source were the shared
+//! filesystem. This module models the missing piece: per-pair
+//! site-to-site links plus a planner that, for each miss, picks the
+//! cheapest source — a peer already holding the copy, or the shared-FS
+//! uplink every site always has.
+//!
+//! Like the rest of `diffusion/`, everything here is pure and
+//! clock-free: the [`LinkTopology`] is a static bandwidth/latency
+//! matrix, and [`TransferPlanner::plan`] is a deterministic function of
+//! `(destination, bytes, holder set)` that appends the decision to an
+//! ordered [`TransferPlan`] log. The threaded `GridScheduler` and the
+//! sim driver both drive the same planner, so the differential test
+//! (`rust/tests/policy_differential.rs`) pins real-vs-sim plan logs bit
+//! for bit. What the *consequences* of a plan cost is consumer-owned:
+//! the sim's Falkon mode runs peer fetches as their own fluid channels
+//! (`sim::sharedfs::PeerNet`), the sim's MultiSite mode stages picked
+//! transfers before GRAM submission, and the real scheduler records the
+//! decision only (real transfers take however long they take).
+//!
+//! The zero-link topology ([`LinkTopology::shared_only`], or simply
+//! leaving `DiffusionConfig::links` unset) has no peer links at all:
+//! every plan resolves to [`TransferSource::SharedFs`], and every
+//! consumer delegates verbatim to the pre-planner shared-FS-only code
+//! path, keeping seeded runs bit-identical.
+
+use super::{DatasetId, DatasetRef};
+use crate::util::time::Micros;
+
+/// One directed-capacity-free link: bandwidth plus a fixed per-transfer
+/// latency (connection setup, control round trip).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Link bandwidth in bytes per second.
+    pub bandwidth_bps: f64,
+    /// Fixed per-transfer latency.
+    pub latency: Micros,
+}
+
+impl LinkSpec {
+    /// A 1 Gb/s link (125 MB/s) with the given latency.
+    pub fn gbit(latency: Micros) -> Self {
+        Self { bandwidth_bps: 125.0e6, latency }
+    }
+
+    /// A 10 Gb/s link (1.25 GB/s) with the given latency.
+    pub fn tengbit(latency: Micros) -> Self {
+        Self { bandwidth_bps: 1.25e9, latency }
+    }
+
+    /// Uncontended transfer-time estimate for `bytes` over this link.
+    /// Deterministic: the f64 math is a pure function of the inputs,
+    /// so both worlds compute the identical estimate.
+    pub fn transfer_us(&self, bytes: u64) -> Micros {
+        let secs = bytes as f64 / self.bandwidth_bps.max(1.0);
+        self.latency + (secs * 1e6).ceil() as Micros
+    }
+}
+
+/// The site-to-site link matrix, with the shared filesystem as the
+/// default uplink every site can always fall back to.
+///
+/// Links are symmetric (one entry covers both directions; the fluid
+/// consumer shares a link's bandwidth across both directions too) and
+/// there is no self-link — a dataset already resident at the
+/// destination is a cache hit, not a transfer.
+#[derive(Debug, Clone)]
+pub struct LinkTopology {
+    nsites: usize,
+    shared_fs: LinkSpec,
+    /// Row-major upper-triangle-mirrored matrix: `links[a * n + b]`.
+    links: Vec<Option<LinkSpec>>,
+    /// Cached "any peer link exists" flag — consulted on every routed
+    /// task, so it must not rescan the n² matrix each time.
+    has_peer: bool,
+}
+
+impl LinkTopology {
+    /// The zero-link topology: every site has only the shared-FS
+    /// uplink. Consumers delegate verbatim to the pre-planner
+    /// shared-FS-only path, so seeded runs stay bit-identical.
+    pub fn shared_only(nsites: usize, shared_fs: LinkSpec) -> Self {
+        Self {
+            nsites,
+            shared_fs,
+            links: vec![None; nsites * nsites],
+            has_peer: false,
+        }
+    }
+
+    /// A full mesh: every distinct pair of sites shares one `peer`
+    /// link.
+    pub fn uniform(nsites: usize, shared_fs: LinkSpec, peer: LinkSpec) -> Self {
+        let mut t = Self::shared_only(nsites, shared_fs);
+        for a in 0..nsites {
+            for b in (a + 1)..nsites {
+                t.set_link(a, b, peer);
+            }
+        }
+        t
+    }
+
+    /// A star: `hub` is linked to every other site by `spoke`; the
+    /// leaves reach each other only through the shared FS.
+    pub fn star(nsites: usize, shared_fs: LinkSpec, hub: usize, spoke: LinkSpec) -> Self {
+        let mut t = Self::shared_only(nsites, shared_fs);
+        for b in 0..nsites {
+            if b != hub {
+                t.set_link(hub, b, spoke);
+            }
+        }
+        t
+    }
+
+    /// Number of sites the matrix covers. Sites beyond it (e.g.
+    /// late-registered executors) have no peer links and fall back to
+    /// the shared FS.
+    pub fn len(&self) -> usize {
+        self.nsites
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nsites == 0
+    }
+
+    /// The shared-FS uplink spec (the default source of last resort).
+    pub fn shared_fs(&self) -> LinkSpec {
+        self.shared_fs
+    }
+
+    /// Install a symmetric peer link between `a` and `b` (ignored for
+    /// self-links or out-of-range sites).
+    pub fn set_link(&mut self, a: usize, b: usize, spec: LinkSpec) {
+        if a == b || a >= self.nsites || b >= self.nsites {
+            return;
+        }
+        self.links[a * self.nsites + b] = Some(spec);
+        self.links[b * self.nsites + a] = Some(spec);
+        self.has_peer = true;
+    }
+
+    /// The peer link between `a` and `b`, if one exists.
+    pub fn link(&self, a: usize, b: usize) -> Option<LinkSpec> {
+        if a == b || a >= self.nsites || b >= self.nsites {
+            return None;
+        }
+        self.links[a * self.nsites + b]
+    }
+
+    /// True when any peer link exists. False means the topology is
+    /// shared-FS-only and consumers take the pre-planner path
+    /// verbatim. O(1): cached at construction/`set_link` time because
+    /// every routed task consults it.
+    pub fn has_peer_links(&self) -> bool {
+        self.has_peer
+    }
+}
+
+/// Where a planned transfer sources its bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferSource {
+    /// The shared filesystem (always available).
+    SharedFs,
+    /// A peer site already holding a copy, over the direct link.
+    Peer(usize),
+}
+
+/// One planned miss transfer, in decision order. Every field is
+/// integral, so plan logs compare exactly — the differential test pins
+/// real-vs-sim sequences of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferPlan {
+    pub dataset: DatasetId,
+    /// Site the copy is being staged to.
+    pub dest: usize,
+    pub source: TransferSource,
+    pub bytes: u64,
+    /// The planner's uncontended cost estimate for the chosen source.
+    pub est_us: Micros,
+}
+
+/// The cheapest-source chooser: given a miss at a destination site and
+/// the catalog's holder set, pick peer copy vs shared FS and log the
+/// deterministic [`TransferPlan`].
+///
+/// Tie-break is fixed: the shared FS wins an exact cost tie, then the
+/// lowest-indexed holder — `holders` must be in ascending site order
+/// (which [`super::DataCatalog::holders_of`] guarantees), so identical
+/// catalog states plan identically in both worlds.
+#[derive(Debug, Clone)]
+pub struct TransferPlanner {
+    topo: LinkTopology,
+    log: Vec<TransferPlan>,
+}
+
+impl TransferPlanner {
+    pub fn new(topo: LinkTopology) -> Self {
+        Self { topo, log: Vec::new() }
+    }
+
+    pub fn topology(&self) -> &LinkTopology {
+        &self.topo
+    }
+
+    /// Cheapest `(source, est_us)` for staging `bytes` to `dest` given
+    /// the ascending holder set. Pure; does not log.
+    pub fn cheapest(
+        &self,
+        dest: usize,
+        bytes: u64,
+        holders: &[usize],
+    ) -> (TransferSource, Micros) {
+        let mut best = (
+            TransferSource::SharedFs,
+            self.topo.shared_fs().transfer_us(bytes),
+        );
+        for &h in holders {
+            if h == dest {
+                continue;
+            }
+            if let Some(spec) = self.topo.link(h, dest) {
+                let c = spec.transfer_us(bytes);
+                if c < best.1 {
+                    best = (TransferSource::Peer(h), c);
+                }
+            }
+        }
+        best
+    }
+
+    /// Uncontended cost estimate of the cheapest source (the router's
+    /// weight input). Pure; does not log.
+    pub fn estimate(&self, dest: usize, bytes: u64, holders: &[usize]) -> Micros {
+        self.cheapest(dest, bytes, holders).1
+    }
+
+    /// Plan one miss transfer and append it to the log.
+    pub fn plan(
+        &mut self,
+        dest: usize,
+        dataset: DatasetId,
+        d_bytes: u64,
+        holders: &[usize],
+    ) -> TransferPlan {
+        let (source, est_us) = self.cheapest(dest, d_bytes, holders);
+        let p = TransferPlan { dataset, dest, source, bytes: d_bytes, est_us };
+        self.log.push(p);
+        p
+    }
+
+    /// Plan every input of `refs` missing from `dest` (the consumer
+    /// computes the deduped miss set via
+    /// [`super::DataCatalog::misses_at`] *before* the catalog inserts
+    /// them, so holder sets reflect the pre-staging state).
+    pub fn plan_misses(
+        &mut self,
+        catalog: &super::DataCatalog,
+        dest: usize,
+        misses: &[DatasetRef],
+    ) -> Vec<TransferPlan> {
+        misses
+            .iter()
+            .map(|d| {
+                let holders = catalog.holders_of(d.id);
+                self.plan(dest, d.id, d.bytes, &holders)
+            })
+            .collect()
+    }
+
+    /// The ordered plan log (the differential-test surface).
+    pub fn log(&self) -> &[TransferPlan] {
+        &self.log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1024 * 1024;
+
+    fn fs() -> LinkSpec {
+        // ~125 MB/s with 30 ms of metadata latency, like the GPFS model.
+        LinkSpec::gbit(30_000)
+    }
+
+    #[test]
+    fn transfer_us_is_latency_plus_bandwidth_time() {
+        let l = LinkSpec { bandwidth_bps: 1.0e6, latency: 500 };
+        // 2 MB at 1 MB/s = 2 s + 500 us.
+        assert_eq!(l.transfer_us(2_000_000), 2_000_000 + 500);
+        assert_eq!(l.transfer_us(0), 500, "latency charged even for empty");
+    }
+
+    #[test]
+    fn shared_only_topology_has_no_peer_links() {
+        let t = LinkTopology::shared_only(4, fs());
+        assert!(!t.has_peer_links());
+        for a in 0..4 {
+            for b in 0..4 {
+                assert_eq!(t.link(a, b), None);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_links_every_distinct_pair_symmetrically() {
+        let t = LinkTopology::uniform(3, fs(), LinkSpec::tengbit(1_000));
+        assert!(t.has_peer_links());
+        for a in 0..3 {
+            assert_eq!(t.link(a, a), None, "no self-links");
+            for b in 0..3 {
+                if a != b {
+                    assert_eq!(t.link(a, b), t.link(b, a));
+                    assert!(t.link(a, b).is_some());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn star_links_hub_to_leaves_only() {
+        let t = LinkTopology::star(4, fs(), 1, LinkSpec::gbit(0));
+        assert!(t.link(1, 0).is_some() && t.link(1, 2).is_some());
+        assert_eq!(t.link(0, 2), None, "leaves only reach the hub");
+        assert_eq!(t.link(2, 3), None);
+    }
+
+    #[test]
+    fn out_of_range_sites_fall_back_to_shared_fs() {
+        let mut t = LinkTopology::uniform(2, fs(), LinkSpec::tengbit(0));
+        t.set_link(0, 9, LinkSpec::gbit(0)); // ignored
+        assert_eq!(t.link(0, 9), None);
+        let p = TransferPlanner::new(t);
+        // Holder 9 is outside the matrix: the shared FS wins.
+        let (src, _) = p.cheapest(0, MB, &[9]);
+        assert_eq!(src, TransferSource::SharedFs);
+    }
+
+    #[test]
+    fn planner_picks_cheapest_holder_over_shared_fs() {
+        let t = LinkTopology::uniform(3, fs(), LinkSpec::tengbit(1_000));
+        let mut p = TransferPlanner::new(t);
+        let plan = p.plan(0, 42, 64 * MB, &[1, 2]);
+        // A dedicated 10 Gb/s peer link beats the 1 Gb/s shared FS;
+        // holders are ascending, so the tie between holders 1 and 2
+        // (identical links) resolves to the lower index.
+        assert_eq!(plan.source, TransferSource::Peer(1));
+        assert!(plan.est_us < fs().transfer_us(64 * MB));
+        assert_eq!(p.log(), &[plan]);
+    }
+
+    #[test]
+    fn zero_links_always_plan_shared_fs() {
+        let t = LinkTopology::shared_only(3, fs());
+        let mut p = TransferPlanner::new(t);
+        let plan = p.plan(2, 7, MB, &[0, 1]);
+        assert_eq!(plan.source, TransferSource::SharedFs);
+        assert_eq!(plan.est_us, fs().transfer_us(MB));
+    }
+
+    #[test]
+    fn shared_fs_wins_exact_cost_ties() {
+        // Peer link identical to the uplink: SharedFs keeps the tie, so
+        // the zero-link-equivalent decision is stable.
+        let t = LinkTopology::uniform(2, fs(), fs());
+        let p = TransferPlanner::new(t);
+        let (src, _) = p.cheapest(0, MB, &[1]);
+        assert_eq!(src, TransferSource::SharedFs);
+    }
+
+    #[test]
+    fn holder_at_destination_is_not_a_source() {
+        let t = LinkTopology::uniform(2, fs(), LinkSpec::tengbit(0));
+        let p = TransferPlanner::new(t);
+        let (src, _) = p.cheapest(0, MB, &[0]);
+        assert_eq!(src, TransferSource::SharedFs, "self-fetch is meaningless");
+    }
+
+    #[test]
+    fn plans_are_deterministic_for_identical_inputs() {
+        let mk = || {
+            let t = LinkTopology::star(4, fs(), 0, LinkSpec::tengbit(2_000));
+            let mut p = TransferPlanner::new(t);
+            for d in 0..8u64 {
+                p.plan((d % 4) as usize, d, (d + 1) * MB, &[0, 2]);
+            }
+            p.log().to_vec()
+        };
+        assert_eq!(mk(), mk(), "same inputs, bit-identical plan log");
+    }
+}

@@ -27,10 +27,12 @@
 
 pub mod cache;
 pub mod catalog;
+pub mod links;
 pub mod router;
 
 pub use cache::CacheModel;
 pub use catalog::{CacheEvent, CacheStats, DataCatalog};
+pub use links::{LinkSpec, LinkTopology, TransferPlan, TransferPlanner, TransferSource};
 pub use router::{LocalityRouter, RouterConfig};
 
 use std::path::Path;
@@ -74,6 +76,12 @@ pub struct DiffusionConfig {
     pub dataset_bytes: u64,
     /// Locality-bonus / transfer-penalty routing knobs.
     pub router: RouterConfig,
+    /// Peer-to-peer transfer network: per-pair links plus the shared-FS
+    /// uplink, consulted by a [`TransferPlanner`] to route each miss
+    /// to its cheapest source. `None` (the default) — and a topology
+    /// with no peer links — keep the pre-planner shared-FS-only
+    /// behavior bit-identical.
+    pub links: Option<LinkTopology>,
 }
 
 impl Default for DiffusionConfig {
@@ -82,6 +90,7 @@ impl Default for DiffusionConfig {
             capacity_bytes: 0,
             dataset_bytes: 1 << 20,
             router: RouterConfig::default(),
+            links: None,
         }
     }
 }

@@ -2,8 +2,9 @@
 //! [`SiteScoreBoard`], biased toward sites already holding a task's
 //! input datasets.
 //!
-//! The weight formula per candidate site `i` for a task with
-//! `total` declared input bytes of which `cached(i)` are resident:
+//! Without a transfer planner the weight per candidate site `i` for a
+//! task with `total` declared input bytes of which `cached(i)` are
+//! resident is:
 //!
 //! ```text
 //! weight(i) = score(i) * (1 + locality_bonus * cached(i)/total)
@@ -12,18 +13,33 @@
 //!
 //! so a full local copy multiplies a site's draw weight by
 //! `1 + locality_bonus`, and every megabyte that would have to be
-//! staged divides it by the configured transfer-cost estimate. When no
-//! site holds any copy (or the task declares no inputs, or the catalog
-//! is disabled), the router *delegates verbatim* to
-//! [`SiteScoreBoard::pick_filtered`] — the same code path, the same
-//! single RNG draw — so runs without locality signal are bit-identical
-//! to pre-diffusion routing.
+//! staged divides it by the configured flat transfer-cost estimate.
+//!
+//! With a [`TransferPlanner`] whose topology has peer links, the flat
+//! per-megabyte penalty is replaced by the planner's per-source cost
+//! estimate — the uncontended seconds of staging each missing input
+//! from its *cheapest* holder (peer copy or shared FS):
+//!
+//! ```text
+//! weight(i) = score(i) * (1 + locality_bonus * cached(i)/total)
+//!             / (1 + transfer_penalty_per_sec * est_secs(i))
+//! ```
+//!
+//! A site one fast link away from a holder is now nearly as attractive
+//! as the holder itself, which is what makes data diffusion pay off
+//! beyond strict cache affinity. When no site holds any copy (or the
+//! task declares no inputs, or the catalog is disabled), the router
+//! *delegates verbatim* to [`SiteScoreBoard::pick_filtered`] — the same
+//! code path, the same single RNG draw — and a zero-link planner
+//! delegates to the flat-penalty formula, so runs without peer links
+//! are bit-identical to pre-planner routing.
 
 use crate::policy::clock::Clock;
 use crate::policy::SiteScoreBoard;
 use crate::util::DetRng;
 
-use super::{DataCatalog, DatasetRef};
+use super::catalog::dedup_by_id;
+use super::{DataCatalog, DatasetRef, TransferPlanner};
 
 /// Locality-routing knobs.
 #[derive(Debug, Clone)]
@@ -32,20 +48,30 @@ pub struct RouterConfig {
     /// holding the full input set.
     pub locality_bonus: f64,
     /// Estimated staging cost, as a weight divisor per megabyte of
-    /// missing input.
+    /// missing input (the planner-less flat model).
     pub transfer_penalty_per_mb: f64,
+    /// Weight divisor per estimated *second* of cheapest-source staging
+    /// (used instead of the per-MB penalty when a transfer planner with
+    /// peer links is supplied).
+    pub transfer_penalty_per_sec: f64,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        Self { locality_bonus: 4.0, transfer_penalty_per_mb: 0.05 }
+        Self {
+            locality_bonus: 4.0,
+            transfer_penalty_per_mb: 0.05,
+            // Roughly the per-MB default at shared-FS speed (125 MB/s):
+            // 0.05/MB x 125 MB/s ~= 6/s.
+            transfer_penalty_per_sec: 6.0,
+        }
     }
 }
 
 /// The locality-aware pick, composing a [`DataCatalog`] with a
 /// [`SiteScoreBoard`]. Stateless beyond its config; all state lives in
-/// the board and the catalog, so the threaded scheduler and the sim
-/// share one routing rule.
+/// the board, the catalog and the planner, so the threaded scheduler
+/// and the sim share one routing rule.
 #[derive(Debug, Clone)]
 pub struct LocalityRouter {
     cfg: RouterConfig,
@@ -59,49 +85,91 @@ impl LocalityRouter {
     /// Pick a site for a task with declared `inputs`, among the sites
     /// passing `filter`, avoiding `avoid` and suspended sites exactly
     /// like [`SiteScoreBoard::pick_filtered`] (which this delegates to
-    /// whenever there is no locality signal to weigh). Consumes
-    /// exactly one RNG draw unless no site passes `filter`.
+    /// whenever there is no locality signal to weigh). When `planner`
+    /// is supplied *and its topology has peer links*, miss costs come
+    /// from the planner's cheapest-source estimate; otherwise the flat
+    /// per-megabyte penalty applies (so a zero-link planner routes
+    /// bit-identically to no planner at all). Consumes exactly one RNG
+    /// draw unless no site passes `filter`.
     #[allow(clippy::too_many_arguments)]
     pub fn pick<C: Clock>(
         &self,
         board: &SiteScoreBoard<C>,
         catalog: &DataCatalog,
+        planner: Option<&TransferPlanner>,
         inputs: &[DatasetRef],
         avoid: Option<usize>,
         now: C::Time,
         rng: &mut DetRng,
         filter: impl Fn(usize) -> bool,
     ) -> Option<usize> {
+        // Price each distinct dataset once, matching the catalog's
+        // dedup boundary (a duplicate declaration must not double the
+        // transfer estimate or halve the holder's hit fraction).
+        let inputs: Vec<DatasetRef> = dedup_by_id(inputs).copied().collect();
         let total_bytes: u64 = inputs.iter().map(|d| d.bytes).sum();
         if !catalog.enabled() || total_bytes == 0 {
             return board.pick_filtered(avoid, now, rng, filter);
         }
         let cached: Vec<u64> = (0..board.len())
-            .map(|i| catalog.cached_bytes(i, inputs))
+            .map(|i| catalog.cached_bytes(i, &inputs))
             .collect();
         if cached.iter().all(|&b| b == 0) {
             // No copy exists anywhere: plain score-proportional pick.
             return board.pick_filtered(avoid, now, rng, filter);
         }
         let total = total_bytes as f64;
-        board.pick_weighted(avoid, now, rng, |i, score| {
-            if !filter(i) {
-                return None;
+        match planner.filter(|p| p.topology().has_peer_links()) {
+            None => board.pick_weighted(avoid, now, rng, |i, score| {
+                if !filter(i) {
+                    return None;
+                }
+                let hit_frac = cached[i] as f64 / total;
+                // `cached[i] <= total_bytes` holds by construction
+                // (both sides of the subtraction are computed over the
+                // same deduped input set); saturate anyway so a future
+                // accounting slip degrades a weight instead of wrapping
+                // to ~u64::MAX megabytes.
+                let miss_mb = total_bytes.saturating_sub(cached[i]) as f64
+                    / (1024.0 * 1024.0);
+                Some(
+                    score * (1.0 + self.cfg.locality_bonus * hit_frac)
+                        / (1.0 + self.cfg.transfer_penalty_per_mb * miss_mb),
+                )
+            }),
+            Some(planner) => {
+                // Per-candidate cheapest-source staging estimate. The
+                // holder sets are computed once per input; a candidate
+                // holding the input skips it (it is a hit, not a
+                // transfer).
+                let holders: Vec<Vec<usize>> =
+                    inputs.iter().map(|d| catalog.holders_of(d.id)).collect();
+                board.pick_weighted(avoid, now, rng, |i, score| {
+                    if !filter(i) {
+                        return None;
+                    }
+                    let hit_frac = cached[i] as f64 / total;
+                    let est_us: u64 = inputs
+                        .iter()
+                        .zip(&holders)
+                        .filter(|(_, h)| !h.contains(&i))
+                        .map(|(d, h)| planner.estimate(i, d.bytes, h))
+                        .sum();
+                    let est_secs = est_us as f64 / 1e6;
+                    Some(
+                        score * (1.0 + self.cfg.locality_bonus * hit_frac)
+                            / (1.0 + self.cfg.transfer_penalty_per_sec * est_secs),
+                    )
+                })
             }
-            let hit_frac = cached[i] as f64 / total;
-            let miss_mb =
-                (total_bytes - cached[i]) as f64 / (1024.0 * 1024.0);
-            Some(
-                score * (1.0 + self.cfg.locality_bonus * hit_frac)
-                    / (1.0 + self.cfg.transfer_penalty_per_mb * miss_mb),
-            )
-        })
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::diffusion::{LinkSpec, LinkTopology};
     use crate::policy::clock::SimClock;
     use crate::policy::ScoreConfig;
 
@@ -115,6 +183,10 @@ mod tests {
         DatasetRef { id, bytes }
     }
 
+    fn fs_link() -> LinkSpec {
+        LinkSpec::gbit(30_000)
+    }
+
     #[test]
     fn no_copy_anywhere_matches_plain_pick_bit_for_bit() {
         let b = board(3);
@@ -125,7 +197,7 @@ mod tests {
         let mut r2 = DetRng::new(0xABCD);
         for _ in 0..200 {
             let a = router
-                .pick(&b, &cat, &inputs, None, 0, &mut r1, |_| true)
+                .pick(&b, &cat, None, &inputs, None, 0, &mut r1, |_| true)
                 .unwrap();
             let c = b.pick_filtered(None, 0, &mut r2, |_| true).unwrap();
             assert_eq!(a, c, "fallback must be the identical pick");
@@ -145,9 +217,11 @@ mod tests {
         let mut r3 = DetRng::new(7);
         for _ in 0..100 {
             let a = router
-                .pick(&b, &off, &[ds(1, MB)], None, 0, &mut r1, |_| true)
+                .pick(&b, &off, None, &[ds(1, MB)], None, 0, &mut r1, |_| true)
                 .unwrap();
-            let c = router.pick(&b, &on, &[], None, 0, &mut r2, |_| true).unwrap();
+            let c = router
+                .pick(&b, &on, None, &[], None, 0, &mut r2, |_| true)
+                .unwrap();
             let d = b.pick_filtered(None, 0, &mut r3, |_| true).unwrap();
             assert_eq!(a, d);
             assert_eq!(c, d);
@@ -162,6 +236,7 @@ mod tests {
         let router = LocalityRouter::new(RouterConfig {
             locality_bonus: 4.0,
             transfer_penalty_per_mb: 0.05,
+            ..RouterConfig::default()
         });
         let inputs = [ds(42, 10 * MB)];
         let mut rng = DetRng::new(3);
@@ -169,7 +244,7 @@ mod tests {
         let hits1 = (0..n)
             .filter(|_| {
                 router
-                    .pick(&b, &cat, &inputs, None, 0, &mut rng, |_| true)
+                    .pick(&b, &cat, None, &inputs, None, 0, &mut rng, |_| true)
                     .unwrap()
                     == 1
             })
@@ -191,19 +266,109 @@ mod tests {
         for _ in 0..100 {
             // Filter out the cached site: its bonus must not matter.
             let p = router
-                .pick(&b, &cat, &inputs, None, 0, &mut rng, |i| i != 0)
+                .pick(&b, &cat, None, &inputs, None, 0, &mut rng, |i| i != 0)
                 .unwrap();
             assert_ne!(p, 0);
             // Avoid must exclude even the cached site.
             let p = router
-                .pick(&b, &cat, &inputs, Some(0), 0, &mut rng, |_| true)
+                .pick(&b, &cat, None, &inputs, Some(0), 0, &mut rng, |_| true)
                 .unwrap();
             assert_ne!(p, 0);
         }
         assert_eq!(
-            router.pick(&b, &cat, &inputs, None, 0, &mut rng, |_| false),
+            router.pick(&b, &cat, None, &inputs, None, 0, &mut rng, |_| false),
             None,
             "empty filter set yields no site"
         );
+    }
+
+    #[test]
+    fn zero_link_planner_routes_bit_identically_to_no_planner() {
+        let b = board(3);
+        let mut cat = DataCatalog::new(3, 100 * MB);
+        cat.record_output(1, &[ds(42, 10 * MB)]);
+        cat.record_output(2, &[ds(43, 5 * MB)]);
+        let router = LocalityRouter::new(RouterConfig::default());
+        let planner =
+            TransferPlanner::new(LinkTopology::shared_only(3, fs_link()));
+        let inputs = [ds(42, 10 * MB), ds(43, 5 * MB)];
+        let mut r1 = DetRng::new(0xBEEF);
+        let mut r2 = DetRng::new(0xBEEF);
+        for _ in 0..500 {
+            let plain = router
+                .pick(&b, &cat, None, &inputs, None, 0, &mut r1, |_| true)
+                .unwrap();
+            let zero = router
+                .pick(&b, &cat, Some(&planner), &inputs, None, 0, &mut r2, |_| true)
+                .unwrap();
+            assert_eq!(plain, zero, "zero-link planner must not change routing");
+        }
+        assert_eq!(r1.next_u64(), r2.next_u64(), "identical RNG consumption");
+    }
+
+    #[test]
+    fn fast_peer_link_makes_the_neighbor_nearly_as_attractive() {
+        // Site 1 holds the dataset; site 2 has a 10 Gb/s link to it,
+        // site 0 only the 1 Gb/s shared FS. With a planner, site 2's
+        // miss is nearly free while site 0 pays the full FS estimate,
+        // so the pick shifts decisively away from site 0.
+        let b = board(3);
+        let mut cat = DataCatalog::new(3, 1 << 30);
+        cat.record_output(1, &[ds(7, 256 * MB)]);
+        let router = LocalityRouter::new(RouterConfig::default());
+        let mut topo = LinkTopology::shared_only(3, fs_link());
+        topo.set_link(1, 2, LinkSpec::tengbit(1_000));
+        let planner = TransferPlanner::new(topo);
+        let inputs = [ds(7, 256 * MB)];
+        let mut rng = DetRng::new(0x11);
+        let n = 4_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            let p = router
+                .pick(&b, &cat, Some(&planner), &inputs, None, 0, &mut rng, |_| true)
+                .unwrap();
+            counts[p] += 1;
+        }
+        assert!(
+            counts[2] > counts[0] * 3,
+            "fast-linked site must dominate the FS-only site: {counts:?}"
+        );
+        assert!(
+            counts[1] > counts[2],
+            "the holder itself stays most attractive: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn duplicate_inputs_weigh_exactly_like_a_single_declaration() {
+        // The router dedups at entry, so a task declaring the same
+        // dataset twice must draw the identical pick sequence (flat
+        // and planner paths alike) as one declaring it once — no
+        // doubled totals, no doubled transfer estimates, no halved
+        // hit fraction.
+        let b = board(3);
+        let mut cat = DataCatalog::new(3, 100 * MB);
+        cat.record_output(0, &[ds(1, 10 * MB)]);
+        cat.record_output(1, &[ds(2, 5 * MB)]);
+        let router = LocalityRouter::new(RouterConfig::default());
+        let mut topo = LinkTopology::shared_only(3, fs_link());
+        topo.set_link(0, 2, LinkSpec::tengbit(1_000));
+        let planner = TransferPlanner::new(topo);
+        let dup = [ds(1, 10 * MB), ds(1, 10 * MB), ds(2, 5 * MB)];
+        let single = [ds(1, 10 * MB), ds(2, 5 * MB)];
+        let mut r1 = DetRng::new(5);
+        let mut r2 = DetRng::new(5);
+        for pl in [None, Some(&planner)] {
+            for _ in 0..300 {
+                let a = router
+                    .pick(&b, &cat, pl, &dup, None, 0, &mut r1, |_| true)
+                    .unwrap();
+                let c = router
+                    .pick(&b, &cat, pl, &single, None, 0, &mut r2, |_| true)
+                    .unwrap();
+                assert_eq!(a, c, "a duplicate declaration skewed the weights");
+            }
+        }
+        assert_eq!(r1.next_u64(), r2.next_u64(), "identical RNG consumption");
     }
 }

@@ -44,7 +44,7 @@ use std::time::{Duration, Instant};
 
 use crate::diffusion::{
     dataset_id_for_path, CacheEvent, CacheStats, DataCatalog, DatasetRef,
-    DiffusionConfig, LocalityRouter,
+    DiffusionConfig, LocalityRouter, TransferPlan, TransferPlanner,
 };
 use crate::metrics::{TaskRecord, Timeline, TimelineSink};
 use crate::policy::{FrameCoalescer, FramePolicy, RealClock, ScoreConfig, SiteScoreBoard};
@@ -97,6 +97,12 @@ struct Pending {
 struct DiffusionState {
     catalog: DataCatalog,
     router: LocalityRouter,
+    /// Peer-to-peer transfer planner (`DiffusionConfig::links`): prices
+    /// each miss against its cheapest source (peer holder vs shared
+    /// FS) and logs the decision. On the real side the plan is
+    /// decision-only — transfers take however long they take — but the
+    /// log is the differential surface the sim is pinned against.
+    planner: Option<TransferPlanner>,
     /// Bytes assumed per path-derived dataset (staging lists carry
     /// paths, not sizes).
     dataset_bytes: u64,
@@ -142,9 +148,10 @@ struct SchedInner {
 }
 
 /// Pick a site for one pending task under the scheduler lock: the
-/// locality router when data diffusion is enabled (also recording the
-/// catalog hit/miss outcome and pinning the task's inputs at the
-/// chosen site), the plain score-proportional pick otherwise.
+/// locality router when data diffusion is enabled (also planning each
+/// miss's cheapest transfer source, recording the catalog hit/miss
+/// outcome, and pinning the task's inputs at the chosen site), the
+/// plain score-proportional pick otherwise.
 fn pick_site_locked(
     st: &mut SchedInner,
     task: &AppTask,
@@ -155,10 +162,26 @@ fn pick_site_locked(
     match diffusion.as_mut() {
         Some(d) => {
             let inputs = d.refs(&task.inputs);
-            let DiffusionState { catalog, router, .. } = d;
+            let DiffusionState { catalog, router, planner, .. } = d;
             let site = router
-                .pick(board, catalog, &inputs, last_site, now, rng, |_| true)
+                .pick(
+                    board,
+                    catalog,
+                    planner.as_ref(),
+                    &inputs,
+                    last_site,
+                    now,
+                    rng,
+                    |_| true,
+                )
                 .expect("board has at least one site");
+            // Plan the misses against the pre-staging holder state —
+            // the same order the sim driver runs, so the differential
+            // test pins the plan logs against each other.
+            if let Some(p) = planner.as_mut() {
+                let misses = catalog.misses_at(site, &inputs);
+                p.plan_misses(catalog, site, &misses);
+            }
             catalog.note_task_start(site, &inputs);
             site
         }
@@ -233,6 +256,7 @@ impl GridScheduler {
             .map(|d| DiffusionState {
                 catalog: DataCatalog::new(providers.len(), d.capacity_bytes),
                 router: LocalityRouter::new(d.router.clone()),
+                planner: d.links.clone().map(TransferPlanner::new),
                 dataset_bytes: d.dataset_bytes,
             });
         let site_names: Vec<String> =
@@ -684,6 +708,18 @@ impl GridScheduler {
         st.diffusion
             .as_ref()
             .map(|d| d.catalog.log().to_vec())
+            .unwrap_or_default()
+    }
+
+    /// The transfer planner's ordered decision log (empty without a
+    /// link topology) — the real half of the transfer-plan
+    /// differential test.
+    pub fn transfer_log(&self) -> Vec<TransferPlan> {
+        let st = self.inner.0.lock().unwrap();
+        st.diffusion
+            .as_ref()
+            .and_then(|d| d.planner.as_ref())
+            .map(|p| p.log().to_vec())
             .unwrap_or_default()
     }
 
@@ -1147,6 +1183,77 @@ mod tests {
                 .any(|e| matches!(e, CacheEvent::Output { .. })),
             "producer output recorded in the catalog"
         );
+    }
+
+    #[test]
+    fn transfer_planner_logs_miss_sources_under_the_lock() {
+        use crate::diffusion::{LinkSpec, LinkTopology, TransferSource};
+        let (r1, _) = testing::sleeper(0);
+        let (r2, _) = testing::sleeper(0);
+        let pa: Arc<dyn Provider> = Arc::new(LocalProvider::new("a", 1, r1));
+        let pb: Arc<dyn Provider> = Arc::new(LocalProvider::new("b", 1, r2));
+        let sched = GridScheduler::with_diffusion(
+            vec![pa, pb],
+            None,
+            0,
+            0x71AB,
+            FaultPolicy::default(),
+            DiffusionConfig {
+                capacity_bytes: 64 << 20,
+                dataset_bytes: 8 << 20,
+                links: Some(LinkTopology::uniform(
+                    2,
+                    LinkSpec::gbit(30_000),
+                    LinkSpec::tengbit(1_000),
+                )),
+                ..Default::default()
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        // The producer's input has no holder anywhere: its miss must
+        // plan the shared FS. Consumers then read it; any consumer
+        // routed to the other site must plan a peer fetch (the only
+        // holder is one fast hop away).
+        let mut t0 = task(0);
+        t0.inputs = vec![std::path::PathBuf::from("raw/seed")];
+        t0.outputs = vec![std::path::PathBuf::from("cache/d0")];
+        {
+            let tx = tx.clone();
+            sched.submit(t0, Box::new(move |r| tx.send(r).unwrap()));
+        }
+        assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().ok);
+        for i in 1..=20u64 {
+            let mut t = task(i);
+            t.inputs = vec![std::path::PathBuf::from("cache/d0")];
+            let tx = tx.clone();
+            sched.submit(t, Box::new(move |r| tx.send(r).unwrap()));
+        }
+        for _ in 0..20 {
+            assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().ok);
+        }
+        let plans = sched.transfer_log();
+        assert!(!plans.is_empty(), "misses must be planned");
+        assert_eq!(
+            plans[0].source,
+            TransferSource::SharedFs,
+            "holderless first miss sources the shared FS"
+        );
+        // Every planned miss agrees with the catalog's miss count, and
+        // with two sites both eventually caching d0, at least one miss
+        // was planned (d0's first arrival at each site); any
+        // second-site staging of d0 must have chosen the peer copy
+        // over the slower shared FS.
+        assert_eq!(plans.len() as u64, sched.cache_stats().misses);
+        let d0 = crate::diffusion::dataset_id_for_path(std::path::Path::new(
+            "cache/d0",
+        ));
+        for p in plans.iter().filter(|p| p.dataset == d0) {
+            assert_eq!(
+                p.source,
+                TransferSource::Peer(1 - p.dest),
+                "a d0 miss with a holder one hop away peers: {p:?}"
+            );
+        }
     }
 
     #[test]

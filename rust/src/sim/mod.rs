@@ -36,7 +36,7 @@ pub use dag::{Dag, SimTask};
 pub use driver::{Driver, Mode, SimFaults, SimOutcome};
 pub use falkon_model::{DrpPolicy, FalkonConfig, FalkonSim};
 pub use lrm::{GramConfig, LrmConfig, LrmSim};
-pub use sharedfs::SharedFs;
+pub use sharedfs::{PeerNet, SharedFs};
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -79,6 +79,10 @@ pub enum Event {
     FrameFlush,
     /// Shared-FS transfer completion (id into the FS active set).
     FsTransferDone { transfer: u64 },
+    /// Peer-link transfer completion (global id into the [`PeerNet`]
+    /// channel set): a data-diffusion miss staged from a peer holder
+    /// finished crossing its site-to-site link.
+    PeerTransferDone { transfer: u64 },
     /// MPI gang: stage barrier completed, start next stage.
     MpiStage { stage: usize },
 }

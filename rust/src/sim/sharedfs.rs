@@ -1,4 +1,6 @@
-//! Shared-filesystem fluid-flow model (Figure 8).
+//! Shared-filesystem fluid-flow model (Figure 8), plus the peer-link
+//! channel set ([`PeerNet`]) the data-diffusion transfer network runs
+//! on.
 //!
 //! The paper's GPFS deployment had 8 I/O servers on 1 Gb/s Ethernet. We
 //! model the FS as a processor-sharing fluid: the aggregate bandwidth is
@@ -6,14 +8,28 @@
 //! by the client NIC. When a transfer starts or ends, remaining bytes of
 //! all active transfers are advanced at the old rate and completion times
 //! recomputed — the standard event-driven fluid approximation.
+//!
+//! Per-operation latency is charged exactly once per transfer: each
+//! transfer carries its remaining latency from `start`, and elapsed
+//! time serves that latency before bytes flow. (An earlier version
+//! added `op_latency` to every `next_completion` estimate, so each
+//! start/cancel-triggered reschedule pushed in-flight completions
+//! later — latency was charged per wake, not per operation.)
 
+use crate::diffusion::LinkSpec;
 use crate::util::time::Micros;
+
+use std::collections::HashMap;
 
 /// One active transfer.
 #[derive(Debug, Clone)]
 struct Transfer {
     id: u64,
     remaining: f64, // bytes
+    /// Unserved per-operation latency (metadata + open/close); elapsed
+    /// time serves this before bytes flow, so the latency is charged
+    /// once per transfer no matter how often churn reschedules it.
+    latency_rem: Micros,
 }
 
 /// Shared filesystem model.
@@ -58,12 +74,17 @@ impl SharedFs {
     }
 
     /// Advance all active transfers to `now` at the current rate.
+    /// Elapsed time first serves a transfer's unserved per-operation
+    /// latency; only the remainder moves bytes.
     fn advance(&mut self, now: Micros) {
-        let dt = (now.saturating_sub(self.last_update)) as f64 / 1e6;
-        if dt > 0.0 {
+        let dt = now.saturating_sub(self.last_update);
+        if dt > 0 {
             let rate = self.rate_per_stream();
             for t in &mut self.active {
-                let moved = (rate * dt).min(t.remaining);
+                let lat = t.latency_rem.min(dt);
+                t.latency_rem -= lat;
+                let flow_secs = (dt - lat) as f64 / 1e6;
+                let moved = (rate * flow_secs).min(t.remaining);
                 t.remaining -= moved;
                 self.bytes_done += moved;
             }
@@ -71,12 +92,18 @@ impl SharedFs {
         self.last_update = now;
     }
 
-    /// Start a transfer of `bytes` at `now`; returns its id.
+    /// Start a transfer of `bytes` at `now`; returns its id. The
+    /// per-operation latency is recorded on the transfer here — once —
+    /// rather than re-added by every completion estimate.
     pub fn start(&mut self, bytes: u64, now: Micros) -> u64 {
         self.advance(now);
         let id = self.next_id;
         self.next_id += 1;
-        self.active.push(Transfer { id, remaining: bytes.max(1) as f64 });
+        self.active.push(Transfer {
+            id,
+            remaining: bytes.max(1) as f64,
+            latency_rem: self.op_latency,
+        });
         id
     }
 
@@ -91,7 +118,7 @@ impl SharedFs {
             .iter()
             .map(|t| {
                 let secs = t.remaining / rate;
-                (now + (secs * 1e6).ceil() as Micros + self.op_latency, t.id)
+                (now + t.latency_rem + (secs * 1e6).ceil() as Micros, t.id)
             })
             .min_by_key(|(t, _)| *t)
     }
@@ -122,6 +149,134 @@ impl SharedFs {
 
     pub fn active_streams(&self) -> usize {
         self.active.len()
+    }
+
+    /// This filesystem's single-stream behavior as a
+    /// [`LinkSpec`] — the right uplink estimate to hand a
+    /// [`LinkTopology`](crate::diffusion::LinkTopology) built next to
+    /// this fluid (`LinkTopology::shared_only(n, fs.link_spec())`),
+    /// so the planner's shared-FS cost model and the fluid the misses
+    /// actually stage through cannot silently disagree. The estimate
+    /// is deliberately uncontended (per-stream NIC cap, not the
+    /// shared aggregate): a plan is a routing decision, contention is
+    /// this fluid's job.
+    pub fn link_spec(&self) -> LinkSpec {
+        LinkSpec { bandwidth_bps: self.per_stream_bw, latency: self.op_latency }
+    }
+}
+
+/// The peer-to-peer transfer fabric: one independent fluid channel per
+/// site pair that has a link in the diffusion
+/// [`LinkTopology`](crate::diffusion::LinkTopology).
+///
+/// Each channel is its own [`SharedFs`] fluid (aggregate = per-stream =
+/// the link bandwidth, per-transfer latency = the link latency), so
+/// concurrent fetches over one pair share that link while fetches over
+/// different pairs do not contend — peer fetches are their *own*
+/// channels alongside the shared FS, which is the whole point of the
+/// transfer network. Channels materialize lazily in first-use order,
+/// and transfer ids are globally unique across channels so the driver's
+/// `Event::PeerTransferDone` routing needs no link key.
+#[derive(Debug, Default)]
+pub struct PeerNet {
+    /// `(unordered pair, channel)` in first-use order — deterministic
+    /// iteration for the earliest-completion scan.
+    channels: Vec<((usize, usize), SharedFs)>,
+    /// Global transfer id → (channel index, channel-local id).
+    by_global: HashMap<u64, (usize, u64)>,
+    /// (channel index, channel-local id) → global transfer id.
+    by_local: HashMap<(usize, u64), u64>,
+    next_id: u64,
+}
+
+impl PeerNet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn key(a: usize, b: usize) -> (usize, usize) {
+        (a.min(b), a.max(b))
+    }
+
+    fn channel_idx(&mut self, a: usize, b: usize, spec: &LinkSpec) -> usize {
+        let key = Self::key(a, b);
+        match self.channels.iter().position(|(k, _)| *k == key) {
+            Some(i) => i,
+            None => {
+                self.channels.push((
+                    key,
+                    SharedFs::new(spec.bandwidth_bps, spec.bandwidth_bps, spec.latency),
+                ));
+                self.channels.len() - 1
+            }
+        }
+    }
+
+    /// Start a peer fetch of `bytes` from `src` to `dst` over `spec`'s
+    /// link at `now`; returns the global transfer id.
+    pub fn start(
+        &mut self,
+        src: usize,
+        dst: usize,
+        spec: &LinkSpec,
+        bytes: u64,
+        now: Micros,
+    ) -> u64 {
+        let ch = self.channel_idx(src, dst, spec);
+        let local = self.channels[ch].1.start(bytes, now);
+        let global = self.next_id;
+        self.next_id += 1;
+        self.by_global.insert(global, (ch, local));
+        self.by_local.insert((ch, local), global);
+        global
+    }
+
+    /// Earliest completion across every channel: `(time, global id)`.
+    /// Ties resolve to the first channel in first-use order, then the
+    /// channel's own deterministic ordering.
+    pub fn next_completion(&self, now: Micros) -> Option<(Micros, u64)> {
+        self.channels
+            .iter()
+            .enumerate()
+            .filter_map(|(ci, (_, ch))| {
+                ch.next_completion(now)
+                    .map(|(t, local)| (t, self.by_local[&(ci, local)]))
+            })
+            .min_by_key(|(t, _)| *t)
+    }
+
+    /// Abort a peer fetch mid-flight (the destination executor died):
+    /// bytes moved so far stay counted, the stream stops competing for
+    /// its link. Mirrors [`SharedFs::cancel`]; no-op for unknown ids.
+    pub fn cancel(&mut self, id: u64, now: Micros) {
+        if let Some((ci, local)) = self.by_global.remove(&id) {
+            self.by_local.remove(&(ci, local));
+            self.channels[ci].1.cancel(local, now);
+        }
+    }
+
+    /// Whether the fetch has (fluid-)finished by `now`; a finished or
+    /// unknown id is forgotten.
+    pub fn finish_if_done(&mut self, id: u64, now: Micros) -> bool {
+        let Some(&(ci, local)) = self.by_global.get(&id) else {
+            return true; // already gone
+        };
+        if self.channels[ci].1.finish_if_done(local, now) {
+            self.by_global.remove(&id);
+            self.by_local.remove(&(ci, local));
+            return true;
+        }
+        false
+    }
+
+    /// Aggregate bytes moved across every peer channel.
+    pub fn bytes_done(&self) -> f64 {
+        self.channels.iter().map(|(_, ch)| ch.bytes_done).sum()
+    }
+
+    /// In-flight fetches across every channel.
+    pub fn active_streams(&self) -> usize {
+        self.channels.iter().map(|(_, ch)| ch.active_streams()).sum()
     }
 }
 
@@ -215,5 +370,94 @@ mod tests {
         let (t, cid) = fs.next_completion(0).unwrap();
         assert_eq!(cid, id);
         assert!(t >= 50_000);
+    }
+
+    #[test]
+    fn op_latency_charged_once_despite_mid_transfer_churn() {
+        // Regression: rescheduling used to re-add op_latency from `now`
+        // on every wake, so a transfer's completion drifted later with
+        // every concurrent start/cancel. With latency recorded at
+        // `start`, churn must not push the first transfer's completion
+        // beyond one op_latency over its fluid time.
+        let lat = 50_000;
+        let mut fs = SharedFs::new(100.0e6, 100.0e6, lat);
+        let a = fs.start(100_000_000, 0); // alone: 50 ms latency + 1 s flow
+        // Churn mid-transfer: a second stream starts at 0.5 s (the rate
+        // halves to 50 MB/s) and a third at 0.7 s is cancelled at 0.8 s.
+        let _b = fs.start(100_000_000, secs(0.5));
+        let c = fs.start(10_000_000, secs(0.7));
+        fs.cancel(c, secs(0.8));
+        // a's bytes served: latency until 0.05, then 0.45 s at 100 MB/s
+        // (alone) = 45 MB; 0.2 s at 50 MB/s = 10 MB; 0.1 s at ~33.3 MB/s;
+        // 45+10+3.33 = 58.33 MB, so ~41.67 MB remain at 0.8 s sharing
+        // 50 MB/s -> ~0.833 s more. Crucially: NO further latency term.
+        let (t, id) = fs.next_completion(secs(0.8)).unwrap();
+        assert_eq!(id, a);
+        let expect = secs(0.8) + 833_333;
+        assert!(
+            (t as i64 - expect as i64).abs() < 5_000,
+            "completion {t} vs expected {expect}: latency re-charged?"
+        );
+        // The buggy model would land ~op_latency later.
+        assert!(t < expect + lat / 2, "drifted by a re-charged latency");
+        assert!(fs.finish_if_done(a, t));
+    }
+
+    #[test]
+    fn link_spec_mirrors_the_fluid_parameters() {
+        let fs = SharedFs::gpfs_8();
+        let spec = fs.link_spec();
+        assert_eq!(spec.bandwidth_bps, fs.per_stream_bw);
+        assert_eq!(spec.latency, fs.op_latency);
+        // An uncontended single stream costs what the spec estimates.
+        let mut solo = SharedFs::gpfs_8();
+        let id = solo.start(125_000_000, 0);
+        let (t, _) = solo.next_completion(0).unwrap();
+        let est = spec.transfer_us(125_000_000);
+        assert!((t as i64 - est as i64).abs() < 2_000, "{t} vs {est}");
+        assert!(solo.finish_if_done(id, t));
+    }
+
+    #[test]
+    fn peer_net_channels_do_not_share_bandwidth() {
+        // Two fetches over two different pairs: each flows at full link
+        // rate. Two fetches over the same pair: they share it.
+        let spec = crate::diffusion::LinkSpec { bandwidth_bps: 100.0e6, latency: 0 };
+        let mut net = PeerNet::new();
+        let a = net.start(0, 1, &spec, 100_000_000, 0);
+        let b = net.start(2, 3, &spec, 100_000_000, 0);
+        assert_eq!(net.active_streams(), 2);
+        let (t, first) = net.next_completion(0).unwrap();
+        assert!((t as i64 - secs(1.0) as i64).abs() < 2_000, "t={t}");
+        assert!(first == a || first == b, "independent channels, both ~1 s");
+        assert!(net.finish_if_done(a, secs(1.001)));
+        assert!(net.finish_if_done(b, secs(1.001)));
+        // Same pair (either direction): shared fluid -> 2 s each.
+        let c = net.start(0, 1, &spec, 100_000_000, secs(1.001));
+        let _d = net.start(1, 0, &spec, 100_000_000, secs(1.001));
+        let (t2, _) = net.next_completion(secs(1.001)).unwrap();
+        assert!(
+            (t2 as i64 - secs(3.001) as i64).abs() < 3_000,
+            "shared link halves the rate: {t2}"
+        );
+        // Cancelling one frees the link for the survivor.
+        net.cancel(c, secs(2.001));
+        let (t3, _) = net.next_completion(secs(2.001)).unwrap();
+        assert!((t3 as i64 - secs(2.501) as i64).abs() < 3_000, "t3={t3}");
+    }
+
+    #[test]
+    fn peer_net_cancel_mirrors_shared_fs_cancel() {
+        let spec = crate::diffusion::LinkSpec { bandwidth_bps: 100.0e6, latency: 0 };
+        let mut net = PeerNet::new();
+        let id = net.start(0, 1, &spec, 100_000_000, 0);
+        net.cancel(id, secs(0.25));
+        assert_eq!(net.active_streams(), 0);
+        // Bytes moved before the cancel really crossed the wire.
+        assert!((net.bytes_done() - 25_000_000.0).abs() < 1e6);
+        assert!(net.finish_if_done(id, secs(0.3)), "unknown id reads done");
+        assert!(net.next_completion(secs(0.3)).is_none());
+        // Cancelling an unknown id is a no-op.
+        net.cancel(999, secs(0.3));
     }
 }

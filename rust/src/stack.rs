@@ -41,7 +41,10 @@ pub struct StackOptions {
     pub seed: u64,
     /// Data diffusion (paper §3.13): enable locality-aware site picks
     /// + the per-site dataset cache catalog. `None` (the default)
-    /// leaves routing untouched.
+    /// leaves routing untouched. Set `DiffusionConfig::links` to add
+    /// the peer-to-peer transfer network: site picks then weigh each
+    /// miss's cheapest source (peer holder vs shared FS) and the
+    /// scheduler logs every transfer plan (`GridScheduler::transfer_log`).
     pub diffusion: Option<DiffusionConfig>,
 }
 

@@ -27,6 +27,7 @@ use std::time::Duration;
 
 use gridswift::diffusion::{
     dataset_id_for_path, CacheEvent, CacheStats, DatasetRef, DiffusionConfig,
+    LinkSpec, LinkTopology, TransferPlan, TransferSource,
 };
 use gridswift::karajan::{FaultPolicy, GridScheduler};
 use gridswift::policy::ScoreConfig;
@@ -405,6 +406,168 @@ fn scheduler_and_sim_share_cache_trajectories() {
             "differential case never produced a {kind} event"
         );
     }
+}
+
+// ---------------------------------------------------------------------
+// Peer-transfer-plan differential (the PR-5 transfer network)
+// ---------------------------------------------------------------------
+
+/// Both worlds share this topology: two sites joined by a fast peer
+/// link, next to a 1 Gb/s / 30 ms shared-FS uplink estimate.
+fn linked_cfg() -> DiffusionConfig {
+    DiffusionConfig {
+        links: Some(LinkTopology::uniform(
+            2,
+            LinkSpec::gbit(30_000),
+            LinkSpec::tengbit(1_000),
+        )),
+        ..diffusion_cfg()
+    }
+}
+
+/// Threaded scheduler with diffusion *and* the transfer planner over
+/// the dataset chain: returns the catalog log plus the planner's
+/// ordered decision log.
+fn real_transfer_run(
+    n: usize,
+    seed: u64,
+    plan: &HashMap<usize, usize>,
+) -> (Vec<CacheEvent>, Vec<TransferPlan>) {
+    let remaining: Arc<Mutex<HashMap<u64, usize>>> = Arc::new(Mutex::new(
+        plan.iter().map(|(k, v)| (*k as u64, *v)).collect(),
+    ));
+    let providers: Vec<Arc<dyn Provider>> = ["a", "b"]
+        .iter()
+        .map(|name| {
+            Arc::new(InlineSite {
+                name: name.to_string(),
+                remaining_fails: Arc::clone(&remaining),
+            }) as Arc<dyn Provider>
+        })
+        .collect();
+    let sched = GridScheduler::with_diffusion(
+        providers,
+        None,
+        1,
+        seed,
+        FaultPolicy {
+            suspend_after_failures: 3,
+            suspend_for: Duration::from_secs(3600),
+        },
+        linked_cfg(),
+    );
+    for i in 0..n {
+        let (tx, rx) = mpsc::channel();
+        sched.submit(dtask(i as u64), Box::new(move |r| tx.send(r).unwrap()));
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.ok, "task {i} must recover on its retry");
+    }
+    (sched.cache_log(), sched.transfer_log())
+}
+
+/// The sim driver over the same linked workload (peer fetches run as
+/// fluid channels in virtual time; the *decisions* must be identical).
+fn sim_transfer_run(
+    n: usize,
+    seed: u64,
+    plan: &HashMap<usize, usize>,
+) -> (Vec<CacheEvent>, Vec<TransferPlan>) {
+    let sites = vec![
+        ("a".to_string(), LrmConfig::pbs(4), 1.0),
+        ("b".to_string(), LrmConfig::pbs(4), 1.0),
+    ];
+    let mode = Mode::MultiSite {
+        sites,
+        gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+    };
+    let mut dag = Dag::new();
+    for i in 0..n {
+        let deps = if i == 0 { vec![] } else { vec![i - 1] };
+        let input = DatasetRef {
+            id: dataset_id_for_path(Path::new(&format!("ds/{i}"))),
+            bytes: DS_BYTES,
+        };
+        let output = DatasetRef {
+            id: dataset_id_for_path(Path::new(&format!("ds/{}", i + 1))),
+            bytes: DS_BYTES,
+        };
+        dag.push(
+            SimTask::new("t", 1.0)
+                .with_deps(deps)
+                .with_datasets(vec![input], vec![output]),
+        );
+    }
+    let o = Driver::new(dag, mode, seed)
+        .with_faults(SimFaults {
+            fail_first_attempts: plan.clone(),
+            retries: 1,
+            ..Default::default()
+        })
+        .with_score_policy(
+            ScoreConfig { suspend_after_failures: 3, ..ScoreConfig::default() },
+            secs(1e9),
+        )
+        .with_diffusion(linked_cfg())
+        .run();
+    assert_eq!(o.timeline.len(), n);
+    assert!(o.timeline.records.iter().all(|r| r.ok));
+    (o.cache_log, o.transfer_log)
+}
+
+#[test]
+fn scheduler_and_sim_share_transfer_plans() {
+    // The transfer-network acceptance bar: with the same seed, fault
+    // plan, dataset chain, cache capacity, router config, and link
+    // topology, the threaded scheduler and the discrete-event driver
+    // must produce the exact same ordered transfer-plan log — every
+    // dataset, destination, chosen source (peer vs shared FS), and
+    // cost estimate — alongside identical catalog event sequences.
+    let n = 40;
+    let seed = 0x9EE2_5EED;
+    let plan = fault_plan(n, 0xFA17);
+    assert!(plan.len() >= 5, "need a meaningful fault plan");
+
+    let (real_cache, real_plans) = real_transfer_run(n, seed, &plan);
+    let (sim_cache, sim_plans) = sim_transfer_run(n, seed, &plan);
+
+    assert_eq!(real_cache, sim_cache, "catalog logs diverge");
+    assert_eq!(
+        real_plans.len(),
+        sim_plans.len(),
+        "plan counts diverge: real {} vs sim {}",
+        real_plans.len(),
+        sim_plans.len()
+    );
+    for (i, (r, s)) in real_plans.iter().zip(&sim_plans).enumerate() {
+        assert_eq!(r, s, "transfer plans diverge at decision {i}");
+    }
+    // The case must exercise both sources: peer fetches (the copy
+    // lives at the other site, one fast hop away) and shared-FS falls
+    // back (no holder anywhere, e.g. each chain dataset's first read
+    // after eviction).
+    assert!(
+        real_plans
+            .iter()
+            .any(|p| matches!(p.source, TransferSource::Peer(_))),
+        "differential case never planned a peer fetch"
+    );
+    assert!(
+        real_plans
+            .iter()
+            .any(|p| p.source == TransferSource::SharedFs),
+        "differential case never fell back to the shared FS"
+    );
+}
+
+#[test]
+fn transfer_plans_are_seed_determined() {
+    let n = 24;
+    let plan = fault_plan(n, 0xFA17);
+    let (_, p1) = sim_transfer_run(n, 21, &plan);
+    let (_, p2) = sim_transfer_run(n, 21, &plan);
+    assert_eq!(p1, p2, "same seed must reproduce the exact plan log");
+    let (_, p3) = sim_transfer_run(n, 22, &plan);
+    assert_ne!(p1, p3, "different seeds must route (and plan) differently");
 }
 
 #[test]

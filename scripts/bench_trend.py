@@ -44,6 +44,13 @@ TRACKED_BY_BENCH = {
         ("eviction-pressure tasks/s",
          ("sim_eviction_pressure_tasks_per_s",), True),
         ("executor-faults tasks/s", ("sim_exec_faults_tasks_per_s",), True),
+        # Peer-transfer-network rows (local-hit / peer-fetch /
+        # shared-FS-cold fan-out trio): also deterministic virtual time.
+        ("peer local-hit consumers/s",
+         ("sim_peer_local_hit_tasks_per_s",), True),
+        ("peer-fetch consumers/s", ("sim_peer_fetch_tasks_per_s",), True),
+        ("peer shared-FS-cold consumers/s",
+         ("sim_peer_sharedfs_cold_tasks_per_s",), True),
     ],
 }
 
