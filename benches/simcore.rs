@@ -1,0 +1,131 @@
+//! Sim-core raw speed (ROADMAP "Sim-core raw speed"): the discrete-event
+//! engine is the substrate under every `sim_*` row in the other benches,
+//! so this one measures the engine itself.
+//!
+//! Rows:
+//!
+//! - **queue churn** — a pure `EventQueue` microbench: a steady
+//!   population of in-flight events scheduled at mixed horizons
+//!   (same-instant storms, in-ring offsets, far-future overflow), popped
+//!   in `(time, seq)` order. This isolates the calendar queue + payload
+//!   slab from the rest of the driver; the acceptance bar is
+//!   >= 1 M events/s.
+//! - **1 M-task DAG** — end-to-end Falkon-mode run of `Dag::fmri`
+//!   per-volume pipelines (250 k volumes x 4 stages) on a 1024-executor
+//!   static pool: tasks/s, events/s, and peak RSS (VmHWM) for the whole
+//!   build + simulate cycle.
+//!
+//! Flags: `--quick` shrinks both rows for CI; `--smoke` additionally
+//! skips the JSON artifact and the throughput floor (used by the
+//! debug-assertions CI smoke, where the engine runs with every
+//! slab/handle/bitmap `debug_assert!` live).
+//!
+//! Both rows are deterministic virtual-time workloads, so CI gates the
+//! `sim_*` keys (>20% regression fails) via `scripts/bench_trend.py`.
+
+use std::time::Instant;
+
+use gridswift::sim::driver::{Driver, Mode};
+use gridswift::sim::falkon_model::{DrpPolicy, FalkonConfig};
+use gridswift::sim::{Dag, Event, EventQueue};
+use gridswift::util::json::Json;
+use gridswift::util::mem::vm_hwm_bytes;
+use gridswift::util::DetRng;
+
+/// In-flight event population for the queue microbench: enough to make
+/// bucket reuse and overflow migration real, small enough to stay
+/// cache-resident like the driver's steady state.
+const CHURN_POPULATION: usize = 8192;
+
+/// Pure queue churn: seed a population, then pop-one/push-one for
+/// `total` events. Returns events per second.
+fn queue_churn(total: u64) -> f64 {
+    let mut q = EventQueue::new();
+    let mut rng = DetRng::new(0x51C0);
+    for i in 0..CHURN_POPULATION {
+        q.after(rng.below(4096), Event::Release(i));
+    }
+    let t0 = Instant::now();
+    let mut popped = 0u64;
+    while popped < total {
+        let (_, ev) = q.pop().expect("population never drains");
+        popped += 1;
+        // Re-schedule at a mixed horizon: ~1/2 same-instant or near
+        // (storms), ~3/8 spread across the ring, ~1/8 far-future
+        // (overflow heap), mirroring the driver's mix of dispatch
+        // storms, service completions, and DRP timeouts.
+        let d = match rng.below(8) {
+            0..=3 => rng.below(4),
+            4..=6 => rng.below(4000),
+            _ => 4096 + rng.below(100_000),
+        };
+        q.after(d, ev);
+    }
+    popped as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// End-to-end DAG run: build the fMRI pipeline DAG and drive it through
+/// the Falkon-mode sim. Returns (tasks/s, events/s, n_tasks, events).
+fn dag_run(volumes: usize) -> (f64, f64, usize, u64) {
+    let mut rng = DetRng::new(0x51C1);
+    let t0 = Instant::now();
+    let dag = Dag::fmri(volumes, [1.0, 1.0, 1.0, 1.0], &mut rng);
+    let n = dag.len();
+    let mut cfg = FalkonConfig::default();
+    cfg.drp = DrpPolicy::static_pool(1024);
+    cfg.drp.allocation_latency = 0;
+    let o = Driver::new(dag, Mode::Falkon { cfg }, 0x51C1).run();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(o.timeline.len(), n, "every task completes");
+    (n as f64 / wall, o.events as f64 / wall, n, o.events)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    let churn_total: u64 = if quick { 500_000 } else { 4_000_000 };
+    // 4 stages per volume: 250 k volumes = the 1 M-task trace.
+    let volumes = if quick { 25_000 } else { 250_000 };
+
+    println!("== Sim-core raw speed ==\n");
+
+    let queue_eps = queue_churn(churn_total);
+    println!(
+        "queue churn:   {:>10.0} events/s ({churn_total} events, \
+         {CHURN_POPULATION} in flight)",
+        queue_eps
+    );
+
+    let (tasks_per_s, events_per_s, n_tasks, events) = dag_run(volumes);
+    let peak_rss_mb =
+        vm_hwm_bytes().unwrap_or(0) as f64 / (1024.0 * 1024.0);
+    println!(
+        "{n_tasks}-task DAG: {:>10.0} tasks/s, {:>10.0} events/s \
+         ({events} events), peak RSS {:.0} MB",
+        tasks_per_s, events_per_s, peak_rss_mb
+    );
+
+    if !smoke {
+        // The acceptance bar from the issue: the bare engine must
+        // sustain a million events per second.
+        assert!(
+            queue_eps >= 1e6,
+            "queue microbench below 1 M events/s: {queue_eps:.0}"
+        );
+
+        let mut report = Json::obj();
+        report.set("bench", "simcore");
+        report.set("quick", quick);
+        report.set("churn_events", churn_total);
+        report.set("n_tasks", n_tasks as u64);
+        report.set("dag_events", events);
+        report.set("sim_queue_events_per_s", queue_eps);
+        report.set("sim_dag_tasks_per_s", tasks_per_s);
+        report.set("sim_dag_events_per_s", events_per_s);
+        report.set("peak_rss_mb", peak_rss_mb);
+        std::fs::write("BENCH_simcore.json", report.render())
+            .expect("write BENCH_simcore.json");
+        println!("\nwrote BENCH_simcore.json");
+    }
+}

@@ -6,11 +6,17 @@ use crate::diffusion::DatasetRef;
 use crate::util::time::secs;
 use crate::util::{DetRng, Micros};
 
+/// Interned stage label: the generators allocate one `Arc<str>` per
+/// *distinct* stage name and every task of that stage shares it, so a
+/// million-task DAG costs a handful of string allocations instead of
+/// one per task.
+pub type StageName = std::sync::Arc<str>;
+
 /// One task in a simulated workflow.
 #[derive(Debug, Clone)]
 pub struct SimTask {
     /// Stage label (drives per-stage reporting, e.g. "mProjectPP").
-    pub stage: String,
+    pub stage: StageName,
     /// Service time on a reference processor.
     pub service: Micros,
     /// Indices of tasks that must complete first.
@@ -28,8 +34,15 @@ pub struct SimTask {
 
 impl SimTask {
     pub fn new(stage: &str, service_secs: f64) -> Self {
+        Self::with_stage(StageName::from(stage), service_secs)
+    }
+
+    /// Like [`SimTask::new`] but takes an already-interned stage label:
+    /// bulk generators clone one `Arc` per task instead of allocating
+    /// a fresh `String`.
+    pub fn with_stage(stage: StageName, service_secs: f64) -> Self {
         Self {
-            stage: stage.to_string(),
+            stage,
             service: secs(service_secs),
             deps: Vec::new(),
             input_bytes: 0,
@@ -123,9 +136,10 @@ impl Dag {
 
     /// A bag of `n` independent tasks of fixed length.
     pub fn bag(n: usize, stage: &str, service_secs: f64) -> Dag {
+        let stage = StageName::from(stage);
         let mut dag = Dag::new();
         for _ in 0..n {
-            dag.push(SimTask::new(stage, service_secs));
+            dag.push(SimTask::with_stage(stage.clone(), service_secs));
         }
         dag
     }
@@ -134,10 +148,13 @@ impl Dag {
     /// task in flight at any virtual instant, which the real-vs-sim
     /// differential tests use to force a deterministic outcome order.
     pub fn chain(n: usize, stage: &str, service_secs: f64) -> Dag {
+        let stage = StageName::from(stage);
         let mut dag = Dag::new();
         for i in 0..n {
             let deps = if i == 0 { vec![] } else { vec![i - 1] };
-            dag.push(SimTask::new(stage, service_secs).with_deps(deps));
+            dag.push(
+                SimTask::with_stage(stage.clone(), service_secs).with_deps(deps),
+            );
         }
         dag
     }
@@ -145,9 +162,12 @@ impl Dag {
     /// A bag of I/O tasks: each reads `input` and writes `output` bytes,
     /// with negligible compute (the Figure 8 workload).
     pub fn io_bag(n: usize, input: u64, output: u64) -> Dag {
+        let stage = StageName::from("io");
         let mut dag = Dag::new();
         for _ in 0..n {
-            dag.push(SimTask::new("io", 0.01).with_io(input, output));
+            dag.push(
+                SimTask::with_stage(stage.clone(), 0.01).with_io(input, output),
+            );
         }
         dag
     }
@@ -161,14 +181,16 @@ impl Dag {
     /// `service_secs[k]` is the per-stage task length; the paper's tasks
     /// are "a few seconds" on ANL_TG nodes.
     pub fn fmri(volumes: usize, service_secs: [f64; 4], rng: &mut DetRng) -> Dag {
-        let stages = ["reorient_y", "reorient_x", "alignlinear", "reslice"];
+        let stages = ["reorient_y", "reorient_x", "alignlinear", "reslice"]
+            .map(StageName::from);
         let mut dag = Dag::new();
         let mut prev: Vec<Option<usize>> = vec![None; volumes];
         for (k, stage) in stages.iter().enumerate() {
             for (v, slot) in prev.iter_mut().enumerate() {
                 let jitter = 0.9 + 0.2 * rng.f64();
-                let mut t = SimTask::new(stage, service_secs[k] * jitter)
-                    .with_io(200 * 1024, 200 * 1024);
+                let mut t =
+                    SimTask::with_stage(stage.clone(), service_secs[k] * jitter)
+                        .with_io(200 * 1024, 200 * 1024);
                 if let Some(p) = *slot {
                     t.deps = vec![p];
                 }
@@ -193,7 +215,8 @@ impl Dag {
         volume_bytes: u64,
         rng: &mut DetRng,
     ) -> Dag {
-        let stages = ["reorient_y", "reorient_x", "alignlinear", "reslice"];
+        let stages = ["reorient_y", "reorient_x", "alignlinear", "reslice"]
+            .map(StageName::from);
         let mut dag = Dag::new();
         let mut prev: Vec<Option<usize>> = vec![None; volumes];
         for (k, stage) in stages.iter().enumerate() {
@@ -203,8 +226,9 @@ impl Dag {
                 // of stage k and the output of stage k-1 (slot 0 is
                 // the raw volume).
                 let in_id = (v as u64) * 8 + k as u64;
-                let mut t = SimTask::new(stage, service_secs[k] * jitter)
-                    .with_datasets(
+                let mut t =
+                    SimTask::with_stage(stage.clone(), service_secs[k] * jitter)
+                        .with_datasets(
                         vec![DatasetRef { id: in_id, bytes: volume_bytes }],
                         vec![DatasetRef { id: in_id + 1, bytes: volume_bytes }],
                     );
@@ -231,12 +255,21 @@ impl Dag {
     ) -> Dag {
         let mut dag = Dag::new();
         let img_bytes = 2 * 1024 * 1024;
+        // Interned per-image/per-pair stage labels (the serial one-off
+        // stages just go through `SimTask::new`).
+        let s_proj = StageName::from("mProjectPP");
+        let s_diff = StageName::from("mDiffFit");
+        let s_bg = StageName::from("mBackground");
+        let s_sub = StageName::from("mAdd(sub)");
         // Stage 1: mProjectPP per image.
         let proj: Vec<usize> = (0..images)
             .map(|_| {
                 dag.push(
-                    SimTask::new("mProjectPP", 6.0 * (0.9 + 0.2 * rng.f64()))
-                        .with_io(img_bytes, img_bytes),
+                    SimTask::with_stage(
+                        s_proj.clone(),
+                        6.0 * (0.9 + 0.2 * rng.f64()),
+                    )
+                    .with_io(img_bytes, img_bytes),
                 )
             })
             .collect();
@@ -252,9 +285,12 @@ impl Dag {
                 let a = proj[rng.below(images as u64) as usize];
                 let b = proj[rng.below(images as u64) as usize];
                 dag.push(
-                    SimTask::new("mDiffFit", 2.5 * (0.9 + 0.2 * rng.f64()))
-                        .with_deps(vec![a, b, overlaps_task])
-                        .with_io(2 * img_bytes, img_bytes / 4),
+                    SimTask::with_stage(
+                        s_diff.clone(),
+                        2.5 * (0.9 + 0.2 * rng.f64()),
+                    )
+                    .with_deps(vec![a, b, overlaps_task])
+                    .with_io(2 * img_bytes, img_bytes / 4),
                 )
             })
             .collect();
@@ -269,9 +305,12 @@ impl Dag {
             .iter()
             .map(|&p| {
                 dag.push(
-                    SimTask::new("mBackground", 1.5 * (0.9 + 0.2 * rng.f64()))
-                        .with_deps(vec![p, bgmodel])
-                        .with_io(img_bytes, img_bytes),
+                    SimTask::with_stage(
+                        s_bg.clone(),
+                        1.5 * (0.9 + 0.2 * rng.f64()),
+                    )
+                    .with_deps(vec![p, bgmodel])
+                    .with_io(img_bytes, img_bytes),
                 )
             })
             .collect();
@@ -286,7 +325,8 @@ impl Dag {
             }
             let n = members.len();
             region_tasks.push(dag.push(
-                SimTask::new("mAdd(sub)", 8.0 + 0.05 * n as f64).with_deps(members),
+                SimTask::with_stage(s_sub.clone(), 8.0 + 0.05 * n as f64)
+                    .with_deps(members),
             ));
         }
         dag.push(
@@ -304,29 +344,47 @@ impl Dag {
     /// (3 serial jobs, then 68 parallel, then the tail).
     pub fn moldyn(molecules: usize, rng: &mut DetRng) -> Dag {
         let mut dag = Dag::new();
+        // Interned per-molecule stage labels: each repeats `molecules`
+        // (or 68 x molecules) times.
+        let s_ante = StageName::from("antechamber");
+        let s_setup = StageName::from("charmm_setup");
+        let s_equil = StageName::from("equilibrate");
+        let s_fe = StageName::from("charmm_fe");
+        let s_wham = StageName::from("wham");
+        let s_extract = StageName::from("extract");
+        let s_tab = StageName::from("tabulate");
         // Stage 1: one shared annotation job for the whole study.
         let annotate = dag.push(SimTask::new("annotate", 30.0));
         for _ in 0..molecules {
             // Three serial prep jobs (antechamber, charmm setup, equil).
             let p1 = dag.push(
-                SimTask::new("antechamber", 60.0 * (0.9 + 0.2 * rng.f64()))
+                SimTask::with_stage(s_ante.clone(), 60.0 * (0.9 + 0.2 * rng.f64()))
                     .with_deps(vec![annotate]),
             );
             let p2 = dag.push(
-                SimTask::new("charmm_setup", 45.0 * (0.9 + 0.2 * rng.f64()))
-                    .with_deps(vec![p1]),
+                SimTask::with_stage(
+                    s_setup.clone(),
+                    45.0 * (0.9 + 0.2 * rng.f64()),
+                )
+                .with_deps(vec![p1]),
             );
             let p3 = dag.push(
-                SimTask::new("equilibrate", 120.0 * (0.9 + 0.2 * rng.f64()))
-                    .with_deps(vec![p2]),
+                SimTask::with_stage(
+                    s_equil.clone(),
+                    120.0 * (0.9 + 0.2 * rng.f64()),
+                )
+                .with_deps(vec![p2]),
             );
             // 68 parallel free-energy perturbation jobs (~200 s typical
             // per paper).
             let fan: Vec<usize> = (0..68)
                 .map(|_| {
                     dag.push(
-                        SimTask::new("charmm_fe", 180.0 * (0.8 + 0.4 * rng.f64()))
-                            .with_deps(vec![p3]),
+                        SimTask::with_stage(
+                            s_fe.clone(),
+                            180.0 * (0.8 + 0.4 * rng.f64()),
+                        )
+                        .with_deps(vec![p3]),
                     )
                 })
                 .collect();
@@ -334,16 +392,22 @@ impl Dag {
             // to reach the paper's 84 jobs/molecule (1 + 84N total):
             // 3 prep + 68 fe + wham + 11 extract + tabulate = 84.
             let wham = dag.push(
-                SimTask::new("wham", 40.0 * (0.9 + 0.2 * rng.f64())).with_deps(fan),
+                SimTask::with_stage(s_wham.clone(), 40.0 * (0.9 + 0.2 * rng.f64()))
+                    .with_deps(fan),
             );
             let mut prev = wham;
             for _ in 0..11 {
                 prev = dag.push(
-                    SimTask::new("extract", 5.0 * (0.9 + 0.2 * rng.f64()))
-                        .with_deps(vec![prev]),
+                    SimTask::with_stage(
+                        s_extract.clone(),
+                        5.0 * (0.9 + 0.2 * rng.f64()),
+                    )
+                    .with_deps(vec![prev]),
                 );
             }
-            dag.push(SimTask::new("tabulate", 2.0).with_deps(vec![prev]));
+            dag.push(
+                SimTask::with_stage(s_tab.clone(), 2.0).with_deps(vec![prev]),
+            );
         }
         dag
     }
@@ -371,7 +435,7 @@ mod tests {
         assert!(d.validate());
         // Each reslice chains back through 3 predecessors.
         let last = &d.tasks[479];
-        assert_eq!(last.stage, "reslice");
+        assert_eq!(&*last.stage, "reslice");
         assert_eq!(last.deps.len(), 1);
         // Critical path ~ sum of one task per stage, not stage sums.
         let cp = d.critical_path_secs();
@@ -407,7 +471,7 @@ mod tests {
         // 440 proj + 1 overlaps + 2200 diff + 1 bgmodel + 440 bg + 8 sub +
         // 1 final = 3091
         assert_eq!(d.len(), 3091);
-        let stages: Vec<&str> = d.tasks.iter().map(|t| t.stage.as_str()).collect();
+        let stages: Vec<&str> = d.tasks.iter().map(|t| &*t.stage).collect();
         assert_eq!(stages.iter().filter(|s| **s == "mDiffFit").count(), 2200);
         assert_eq!(stages.iter().filter(|s| **s == "mAdd(sub)").count(), 8);
     }
@@ -431,6 +495,22 @@ mod tests {
         // Paper: <= 957.3 CPU hours for the 244-molecule run; our synthetic
         // service times land in the same regime.
         assert!(hours > 500.0 && hours < 1100.0, "cpu hours {hours}");
+    }
+
+    #[test]
+    fn generators_intern_stage_names() {
+        // Every task of one stage shares the same Arc allocation.
+        let d = Dag::bag(100, "sleep", 1.0);
+        assert!(d
+            .tasks
+            .iter()
+            .all(|t| StageName::ptr_eq(&t.stage, &d.tasks[0].stage)));
+        let mut rng = DetRng::new(7);
+        let d = Dag::moldyn(3, &mut rng);
+        let fe: Vec<&SimTask> =
+            d.tasks.iter().filter(|t| &*t.stage == "charmm_fe").collect();
+        assert_eq!(fe.len(), 3 * 68);
+        assert!(fe.iter().all(|t| StageName::ptr_eq(&t.stage, &fe[0].stage)));
     }
 
     #[test]

@@ -97,6 +97,10 @@ pub struct SimOutcome {
     pub wasted_cpu_secs: f64,
     /// Aggregate shared-FS bytes moved.
     pub fs_bytes: f64,
+    /// Total events the queue processed scheduling-wise over the run
+    /// (zero for the synchronous MPI mode) — the denominator for
+    /// events/s throughput reporting.
+    pub events: u64,
     /// Multi-site mode: snapshot of every site's score after each task
     /// reached its final outcome, in completion order — the sim half of
     /// the real-vs-sim differential test.
@@ -154,7 +158,12 @@ pub struct Driver {
     q: EventQueue,
     /// Remaining unmet dependencies per task.
     indeg: Vec<usize>,
-    dependents: Vec<Vec<usize>>,
+    /// Dependents in CSR form: task `t`'s dependents are
+    /// `dep_tgt[dep_off[t]..dep_off[t+1]]`, ascending — the same
+    /// release order as the historical `Vec<Vec<usize>>`, flattened
+    /// into two arrays sized once up front.
+    dep_off: Vec<u32>,
+    dep_tgt: Vec<u32>,
     completed: Vec<bool>,
     n_done: usize,
     timeline: Timeline,
@@ -220,6 +229,12 @@ pub struct Driver {
     rng: DetRng,
     /// Falkon executor lifetime accounting for wasted-CPU stats.
     run_end: Micros,
+    /// Scratch buffer for unpacking bundle handles in event handlers.
+    scratch: Vec<usize>,
+    /// Recycled task-list vectors for LRM job bundles: each bundle's
+    /// `Vec` round-trips arena → LRM queue → arena without allocating
+    /// in steady state.
+    vec_pool: Vec<Vec<usize>>,
 }
 
 /// Data-diffusion state: catalog + router + optional transfer planner
@@ -259,12 +274,28 @@ impl Driver {
     pub fn new(dag: Dag, mode: Mode, seed: u64) -> Self {
         assert!(dag.validate(), "DAG deps must be topologically ordered");
         let n = dag.len();
+        debug_assert!(n < u32::MAX as usize);
         let mut indeg = vec![0usize; n];
-        let mut dependents = vec![Vec::new(); n];
+        // Dependents as CSR: count per source, prefix-sum into offsets,
+        // then cursor-fill. Scanning tasks in ascending order fills each
+        // source's extent in ascending dependent order — the exact
+        // release order of the historical per-task Vecs.
+        let mut dep_off = vec![0u32; n + 1];
         for (i, t) in dag.tasks.iter().enumerate() {
             indeg[i] = t.deps.len();
             for &d in &t.deps {
-                dependents[d].push(i);
+                dep_off[d + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            dep_off[i + 1] += dep_off[i];
+        }
+        let mut cursor: Vec<u32> = dep_off[..n].to_vec();
+        let mut dep_tgt = vec![0u32; *dep_off.last().unwrap_or(&0) as usize];
+        for (i, t) in dag.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                dep_tgt[cursor[d] as usize] = i as u32;
+                cursor[d] += 1;
             }
         }
         let (lrms, site_names, site_speed) = match &mode {
@@ -345,7 +376,8 @@ impl Driver {
             mode,
             q: EventQueue::new(),
             indeg,
-            dependents,
+            dep_off,
+            dep_tgt,
             completed: vec![false; n],
             n_done: 0,
             timeline: Timeline::new(),
@@ -379,6 +411,8 @@ impl Driver {
             staging_left: HashMap::new(),
             rng: DetRng::new(seed),
             run_end: 0,
+            scratch: Vec::new(),
+            vec_pool: Vec::new(),
         }
     }
 
@@ -447,8 +481,9 @@ impl Driver {
                 self.q.at(t, Event::ExecutorFail { falkon: 0, exec });
             }
         }
-        // Batch-pop all events sharing a timestamp: one heap interaction
-        // per virtual instant instead of one per event. Events scheduled
+        // Batch-pop all events sharing a timestamp: one calendar-bucket
+        // drain per virtual instant instead of one pop per event
+        // (`pop_batch` clears the buffer itself). Events scheduled
         // *during* a batch (at the same timestamp) form the next batch,
         // preserving the seq-FIFO semantics of per-event popping.
         let mut batch: Vec<Event> = Vec::new();
@@ -524,7 +559,8 @@ impl Driver {
             peak_queue,
             busy_cpu_secs: busy,
             wasted_cpu_secs: wasted,
-            fs_bytes: self.fs.as_ref().map(|f| f.bytes_done).unwrap_or(0.0),
+            fs_bytes: self.fs.as_ref().map(|f| f.bytes_done()).unwrap_or(0.0),
+            events: self.q.scheduled(),
             transfer_log,
             peer_bytes: self.peer_net.bytes_done(),
             score_trace: self.score_trace,
@@ -543,9 +579,14 @@ impl Driver {
         match ev {
             Event::Release(task) => self.on_release(now, task),
             Event::GramArrive { site, bundle } => {
-                let service = self.bundle_service(&bundle, site);
+                // Unpack the arena handle into a pooled Vec: the list
+                // lives on in the LRM queue and returns to the pool
+                // when the job finishes.
+                let mut tasks = self.vec_pool.pop().unwrap_or_default();
+                self.q.take_bundle(bundle, &mut tasks);
+                let service = self.bundle_service(&tasks, site);
                 self.lrms[site].enqueue(LrmJob {
-                    bundle,
+                    bundle: tasks,
                     service,
                     queued_at: now,
                 });
@@ -554,9 +595,12 @@ impl Driver {
             Event::LrmCycle { site } => self.on_lrm_cycle(now, site),
             Event::LrmJobDone { site, node, bundle } => {
                 self.lrms[site].finish(node);
-                for t in bundle {
+                let mut tasks = std::mem::take(&mut self.scratch);
+                self.q.take_bundle(bundle, &mut tasks);
+                for &t in &tasks {
                     self.on_lrm_task_outcome(now, site, t);
                 }
+                self.scratch = tasks;
                 if self.board.is_some() {
                     // Completions freed window headroom (and retries may
                     // be pending): pull more central work.
@@ -566,12 +610,15 @@ impl Driver {
             }
             Event::FalkonSubmit { tasks, .. } => {
                 // One frame arrives whole: count it once, queue its tasks.
+                let mut frame = std::mem::take(&mut self.scratch);
+                self.q.take_bundle(tasks, &mut frame);
                 let f = self.falkon.as_mut().unwrap();
                 f.frames_received += 1;
-                for t in tasks {
+                for &t in &frame {
                     f.queue.push_back(t);
                 }
                 f.peak_queue = f.peak_queue.max(f.queue.len());
+                self.scratch = frame;
                 self.queue_falkon_dispatch(now);
             }
             Event::FalkonDispatch { .. } => {
@@ -645,13 +692,14 @@ impl Driver {
         match &self.mode {
             Mode::GramLrm { gram, .. } => {
                 let gram = gram.clone();
-                self.gram_submit(now, 0, vec![task], &gram);
+                self.gram_submit(now, 0, &[task], &gram);
             }
             Mode::GramCluster { gram, .. } => {
                 let gram = gram.clone();
                 let buf = self.cluster_buf.as_mut().expect("cluster coalescer");
                 if let Some(bundle) = buf.push(task, now) {
-                    self.gram_submit(now, 0, bundle, &gram);
+                    self.gram_submit(now, 0, &bundle, &gram);
+                    self.recycle(bundle);
                 } else if !self.cluster_deadline_set {
                     self.cluster_deadline_set = true;
                     let at = self
@@ -710,7 +758,16 @@ impl Driver {
         let start = now.max(self.wire_free_at);
         let arrive = start + cost;
         self.wire_free_at = arrive;
-        self.q.at(arrive, Event::FalkonSubmit { falkon: 0, tasks: frame });
+        let tasks = self.q.bundle_from(&frame);
+        self.q.at(arrive, Event::FalkonSubmit { falkon: 0, tasks });
+        self.recycle(frame);
+    }
+
+    /// Return a spent payload Vec to the pool so steady-state bundle
+    /// unpacking allocates nothing.
+    fn recycle(&mut self, mut v: Vec<usize>) {
+        v.clear();
+        self.vec_pool.push(v);
     }
 
     /// The frame coalescer's age cut-off fired: cut and ship whatever
@@ -807,7 +864,7 @@ impl Driver {
                     continue; // GRAM submission fires on staging done
                 }
             }
-            self.gram_submit(now, site, vec![p.task], &gram);
+            self.gram_submit(now, site, &[p.task], &gram);
         }
     }
 
@@ -912,13 +969,14 @@ impl Driver {
         &mut self,
         now: Micros,
         site: usize,
-        bundle: Vec<usize>,
+        bundle: &[usize],
         gram: &GramConfig,
     ) {
         // Serialize through the gateway with the throttle.
         let slot = now.max(self.gram_free_at[site]);
         self.gram_free_at[site] = slot + gram.throttle_interval;
         let arrive = slot + gram.submit_cost;
+        let bundle = self.q.bundle_from(bundle);
         self.q.at(arrive, Event::GramArrive { site, bundle });
     }
 
@@ -928,7 +986,8 @@ impl Driver {
             if let Some(bundle) =
                 self.cluster_buf.as_mut().and_then(|b| b.take_frame())
             {
-                self.gram_submit(now, 0, bundle, &gram);
+                self.gram_submit(now, 0, &bundle, &gram);
+                self.recycle(bundle);
             }
         }
     }
@@ -947,10 +1006,9 @@ impl Driver {
                 self.start_time[task] = t;
                 t += svc;
             }
-            self.q.at(
-                t,
-                Event::LrmJobDone { site, node, bundle: job.bundle.clone() },
-            );
+            let bundle = self.q.bundle_from(&job.bundle);
+            self.q.at(t, Event::LrmJobDone { site, node, bundle });
+            self.recycle(job.bundle);
         }
         if let Some(next) = self.lrms[site].next_cycle_after(now) {
             if next > now {
@@ -971,13 +1029,8 @@ impl Driver {
                 (Some(diff), Some(task)) => {
                     let inputs = &self.dag.tasks[task].input_datasets;
                     let best = f
-                        .executors
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, e)| {
-                            e.state == super::falkon_model::ExecState::Idle
-                        })
-                        .map(|(i, _)| (i, diff.catalog.cached_bytes(i, inputs)))
+                        .idle_execs()
+                        .map(|i| (i, diff.catalog.cached_bytes(i, inputs)))
                         .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
                         .map(|(i, _)| i);
                     best.and_then(|e| f.dispatch_to(e, now))
@@ -1214,7 +1267,7 @@ impl Driver {
         } else if let Mode::MultiSite { gram, .. } = &self.mode {
             let gram = gram.clone();
             let site = self.task_site[task];
-            self.gram_submit(now, site, vec![task], &gram);
+            self.gram_submit(now, site, &[task], &gram);
         }
     }
 
@@ -1262,7 +1315,7 @@ impl Driver {
         let exec = *self.falkon_task_exec.get(&task).unwrap_or(&0) as u64;
         self.timeline.push(TaskRecord {
             task_id: task as u64,
-            stage: self.dag.tasks[task].stage.clone(),
+            stage: self.dag.tasks[task].stage.to_string(),
             site,
             executor: exec,
             submitted: self.submit_time[task],
@@ -1275,9 +1328,10 @@ impl Driver {
         if let Some(b) = &self.board {
             self.score_trace.push(b.scores());
         }
-        // Release dependents.
-        for i in 0..self.dependents[task].len() {
-            let dep = self.dependents[task][i];
+        // Release dependents (CSR walk — same ascending order the old
+        // per-task Vecs were filled in).
+        for j in self.dep_off[task] as usize..self.dep_off[task + 1] as usize {
+            let dep = self.dep_tgt[j] as usize;
             self.indeg[dep] -= 1;
             if self.indeg[dep] == 0 {
                 self.q.at(now, Event::Release(dep));
@@ -1295,7 +1349,7 @@ impl Driver {
         };
         // Group tasks by stage in first-seen order (the DAG generators
         // emit stages in topological order).
-        let mut stages: Vec<(String, Vec<usize>)> = Vec::new();
+        let mut stages: Vec<(super::StageName, Vec<usize>)> = Vec::new();
         for (i, t) in self.dag.tasks.iter().enumerate() {
             match stages.iter_mut().find(|(s, _)| *s == t.stage) {
                 Some((_, v)) => v.push(i),
@@ -1320,7 +1374,7 @@ impl Driver {
                 proc_free[pi] = end;
                 self.timeline.push(TaskRecord {
                     task_id: t as u64,
-                    stage: self.dag.tasks[t].stage.clone(),
+                    stage: self.dag.tasks[t].stage.to_string(),
                     site: "mpi".into(),
                     executor: pi as u64,
                     submitted: now,

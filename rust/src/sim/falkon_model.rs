@@ -183,6 +183,13 @@ pub struct FalkonSim {
     /// FIFO service queue of DAG task ids.
     pub queue: std::collections::VecDeque<usize>,
     pub executors: Vec<Executor>,
+    /// Ids of currently-idle executors, ordered. Mirrors
+    /// `executors[i].state == Idle` so the dispatcher finds the
+    /// lowest-id idle executor in O(log n) instead of scanning the pool
+    /// (the scan is the per-dispatch hot path at 10^3+ executors).
+    /// All state transitions go through this model's methods, which
+    /// keep the mirror exact.
+    idle: std::collections::BTreeSet<usize>,
     /// Dispatcher is busy until this time (serialized dispatch cost).
     pub dispatcher_free_at: Micros,
     /// Executors requested but not yet registered.
@@ -204,6 +211,7 @@ impl FalkonSim {
             cfg,
             queue: std::collections::VecDeque::new(),
             executors: Vec::new(),
+            idle: std::collections::BTreeSet::new(),
             dispatcher_free_at: 0,
             pending_allocs: 0,
             dispatched: 0,
@@ -243,8 +251,17 @@ impl FalkonSim {
             .count()
     }
 
+    /// The lowest-id idle executor (the same executor the historical
+    /// linear scan returned, so dispatch order is unchanged).
     pub fn idle_executor(&self) -> Option<usize> {
-        self.executors.iter().position(|e| e.state == ExecState::Idle)
+        self.idle.first().copied()
+    }
+
+    /// All idle executor ids in ascending order (the data-diffusion
+    /// driver ranks these by cached bytes instead of scanning the whole
+    /// pool).
+    pub fn idle_execs(&self) -> impl Iterator<Item = usize> + '_ {
+        self.idle.iter().copied()
     }
 
     /// Register `count` new executors at `now`. Returns their ids.
@@ -259,7 +276,9 @@ impl FalkonSim {
                 busy_time: 0,
                 running: None,
             });
-            ids.push(self.executors.len() - 1);
+            let id = self.executors.len() - 1;
+            self.idle.insert(id);
+            ids.push(id);
         }
         self.pending_allocs = self.pending_allocs.saturating_sub(count);
         self.peak_executors = self.peak_executors.max(self.live_executors());
@@ -287,6 +306,7 @@ impl FalkonSim {
         let task = self.queue.pop_front()?;
         let start = now.max(self.dispatcher_free_at) + self.cfg.dispatch_cost;
         self.dispatcher_free_at = start;
+        self.idle.remove(&exec);
         self.executors[exec].state = ExecState::Busy;
         self.executors[exec].running = Some(task);
         self.dispatched += 1;
@@ -302,6 +322,7 @@ impl FalkonSim {
         e.tasks_run += 1;
         e.busy_time += busy;
         e.running = None;
+        self.idle.insert(exec);
     }
 
     /// Kill `exec` at `now` (injected executor failure, paper §3.12):
@@ -316,6 +337,7 @@ impl FalkonSim {
         let task = e.running.take();
         e.state = ExecState::Deregistered;
         e.idle_since = now;
+        self.idle.remove(&exec);
         task
     }
 
@@ -344,13 +366,18 @@ impl FalkonSim {
         let ctrl = self.cfg.drp.controller();
         let mut live = self.live_executors();
         let mut reaped = 0;
-        for e in &mut self.executors {
+        // Ascending-id walk over the idle mirror: the same visit order
+        // as the historical full-pool scan, without touching busy
+        // executors.
+        let candidates: Vec<usize> = self.idle.iter().copied().collect();
+        for id in candidates {
             if !ctrl.may_deregister(live) {
                 break;
             }
-            if e.state == ExecState::Idle && now.saturating_sub(e.idle_since) >= timeout
-            {
+            let e = &mut self.executors[id];
+            if now.saturating_sub(e.idle_since) >= timeout {
                 e.state = ExecState::Deregistered;
+                self.idle.remove(&id);
                 live -= 1;
                 reaped += 1;
             }
@@ -499,6 +526,35 @@ mod tests {
         assert_eq!(ready, 123, "zero-cost default framing enqueues instantly");
         assert_eq!(f.queue.len(), 3);
         assert_eq!(f.frames_received, 1);
+    }
+
+    #[test]
+    fn idle_mirror_tracks_state_transitions() {
+        let mut f = svc();
+        f.register(3, 0);
+        assert_eq!(f.idle_executor(), Some(0), "lowest id first");
+        f.submit(0);
+        f.submit(1);
+        let (e0, _, _) = f.try_dispatch(0).unwrap();
+        assert_eq!(e0, 0);
+        assert_eq!(f.idle_executor(), Some(1), "next lowest idle id");
+        f.fail(2, 0);
+        assert_eq!(f.idle_execs().collect::<Vec<_>>(), vec![1]);
+        f.finish(0, 100, 100);
+        assert_eq!(f.idle_execs().collect::<Vec<_>>(), vec![0, 1]);
+        // The mirror matches the per-executor states exactly.
+        for (i, e) in f.executors.iter().enumerate() {
+            assert_eq!(
+                e.state == ExecState::Idle,
+                f.idle_execs().any(|x| x == i),
+                "executor {i}"
+            );
+        }
+        // Reap removes from the mirror too.
+        f.cfg.drp.idle_timeout = 1;
+        f.cfg.drp.min_executors = 0;
+        assert_eq!(f.reap_idle(secs(1.0)), 2);
+        assert_eq!(f.idle_executor(), None);
     }
 
     #[test]

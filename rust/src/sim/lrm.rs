@@ -101,6 +101,10 @@ impl GramConfig {
 /// of size 1 are plain jobs; larger bundles model Swift clustering).
 #[derive(Debug, Clone)]
 pub struct LrmJob {
+    /// Task indices in this job. The sim driver recycles these `Vec`s
+    /// through its bundle pool (arena handle → pooled `Vec` → back to
+    /// the pool on job completion), so steady-state LRM traffic does
+    /// not allocate per job.
     pub bundle: Vec<usize>,
     /// Total service time of the bundle.
     pub service: Micros,

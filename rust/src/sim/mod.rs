@@ -25,6 +25,13 @@
 //!   GRAM+clustering, Falkon, MPI gang), applying Karajan scheduling
 //!   policies (site scores, clustering window), and records a
 //!   [`crate::metrics::Timeline`].
+//!
+//! Sim-core layout (DESIGN.md §8): the event queue is a bucketed
+//! *calendar queue* (per-timestamp FIFO buckets over a ring of time
+//! slots, with a binary-heap overflow for far-future events), event
+//! payloads live in a recycled slab, and variable-length task bundles
+//! live in a recycled flat arena addressed by [`Bundle`] handles — the
+//! steady-state event loop allocates nothing per event.
 
 pub mod dag;
 pub mod driver;
@@ -32,7 +39,7 @@ pub mod falkon_model;
 pub mod lrm;
 pub mod sharedfs;
 
-pub use dag::{Dag, SimTask};
+pub use dag::{Dag, SimTask, StageName};
 pub use driver::{Driver, Mode, SimFaults, SimOutcome};
 pub use falkon_model::{DrpPolicy, FalkonConfig, FalkonSim};
 pub use lrm::{GramConfig, LrmConfig, LrmSim};
@@ -43,21 +50,48 @@ use std::collections::BinaryHeap;
 
 use crate::util::Micros;
 
+/// A handle into the [`EventQueue`]'s bundle arena: a variable-length
+/// task list stored out-of-line so [`Event`]s stay small and `Copy`.
+///
+/// Lifetime contract: a `Bundle` is created by
+/// [`EventQueue::bundle_from`], carried by exactly one scheduled event,
+/// and consumed exactly once by [`EventQueue::take_bundle`] when that
+/// event is handled (which recycles the storage). Handles are plain
+/// `(offset, len)` pairs — copying one does not duplicate the storage,
+/// and using a handle after `take_bundle` yields stale data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bundle {
+    off: u32,
+    len: u32,
+}
+
+impl Bundle {
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
 /// A schedulable simulation event: `(time, seq)` orders the queue; `seq`
-/// makes simultaneous events FIFO and the run deterministic.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// makes simultaneous events FIFO and the run deterministic. Task lists
+/// are carried as [`Bundle`] handles into the queue's arena, so every
+/// variant is small and `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Event {
     /// A DAG task's dependencies are satisfied: route it to a provider.
     Release(usize),
     /// GRAM gateway finished forwarding a job bundle to the site LRM.
-    GramArrive { site: usize, bundle: Vec<usize> },
+    GramArrive { site: usize, bundle: Bundle },
     /// LRM scheduler wakes and tries to start queued jobs.
     LrmCycle { site: usize },
     /// A job (bundle of tasks) finished on an LRM node.
-    LrmJobDone { site: usize, node: usize, bundle: Vec<usize> },
+    LrmJobDone { site: usize, node: usize, bundle: Bundle },
     /// A submit frame's tasks arrive at the Falkon service queue (after
     /// the serialized framing cost; see `falkon_model::FrameConfig`).
-    FalkonSubmit { falkon: usize, tasks: Vec<usize> },
+    FalkonSubmit { falkon: usize, tasks: Bundle },
     /// Falkon dispatcher attempts to match queue and idle executors.
     FalkonDispatch { falkon: usize },
     /// An executor finished its task.
@@ -87,34 +121,113 @@ pub enum Event {
     MpiStage { stage: usize },
 }
 
+/// Ring size of the calendar queue, in 1 µs time slots. Events within
+/// `RING` µs of the clock go to their `t % RING` bucket; events further
+/// out fall back to the overflow heap (and are never migrated — the pop
+/// path merges both structures by `(time, seq)`).
+const RING: usize = 4096;
+/// 64-bit words in the occupancy bitmap's bottom level.
+const RING_WORDS: usize = RING / 64;
+
+/// One calendar slot: a FIFO bucket of `(seq, payload slot)` entries,
+/// all sharing one absolute timestamp.
+///
+/// The single-timestamp invariant holds because the ring only admits
+/// events with `t - now < RING`: two distinct live times mapping to the
+/// same slot would differ by a multiple of `RING`, putting one of them
+/// outside the `[now, now + RING)` window.
+#[derive(Debug, Default, Clone)]
+struct Slot {
+    time: Micros,
+    items: Vec<(u64, u32)>,
+    /// Index of the first undrained item; `items` is cleared (and its
+    /// capacity kept) once fully drained.
+    head: usize,
+}
+
 /// The event queue + virtual clock every model shares.
 ///
-/// Hot-path layout: heap entries are small `Copy` triples
-/// `(time, seq, slot)` — sift operations never move event payloads — and
-/// the [`Event`]s themselves live in a slab whose slots are recycled
-/// through a free list, so the steady-state event loop allocates nothing
-/// per event. [`EventQueue::pop_batch`] additionally drains every event
-/// sharing the earliest timestamp in one call, which lets the driver
-/// handle simultaneous events without re-entering the heap per event.
-#[derive(Debug, Default)]
+/// Hot-path layout (DESIGN.md §8):
+/// - a bucketed **calendar queue**: near-future events go to per-
+///   timestamp FIFO buckets on a ring of [`RING`] 1 µs slots, located
+///   through a two-level occupancy bitmap, so a same-timestamp storm
+///   (dispatch coalescing, `pop_batch` drains) costs O(1) per event
+///   with no heap sifts; far-future events (`t - now >= RING`) fall
+///   back to a binary heap, and `pop` merges the two by `(time, seq)`;
+/// - event payloads live in a **slab** whose slots are recycled through
+///   a free list, so sift/scan operations only ever move small `Copy`
+///   triples;
+/// - variable-length task bundles live in a recycled flat **arena**
+///   addressed by [`Bundle`] handles (size-class free lists), so the
+///   steady-state loop allocates nothing per event.
+///
+/// [`EventQueue::pop_batch`] additionally drains every event sharing
+/// the earliest timestamp in one call, which lets the driver handle
+/// simultaneous events without re-entering the queue per event.
+#[derive(Debug)]
 pub struct EventQueue {
     now: Micros,
     seq: u64,
-    heap: BinaryHeap<Reverse<(Micros, u64, u32)>>,
-    /// Event payload slab, indexed by the heap entries' third field.
+    /// Calendar ring: slot `t % RING` holds the bucket for time `t`
+    /// whenever `t - now < RING`.
+    ring: Vec<Slot>,
+    /// Two-level occupancy bitmap over the ring: `bot[w]` bit `b` set
+    /// iff slot `w*64 + b` is non-empty; `top` bit `w` set iff `bot[w]`
+    /// is non-zero.
+    top: u64,
+    bot: [u64; RING_WORDS],
+    /// Events currently resident in the ring.
+    ring_len: usize,
+    /// Far-future fallback: events scheduled `>= RING` µs out.
+    overflow: BinaryHeap<Reverse<(Micros, u64, u32)>>,
+    /// Event payload slab, indexed by ring/heap entries' slot field.
     slots: Vec<Option<Event>>,
     /// Recycled slab indices.
     free: Vec<u32>,
+    /// Flat bundle arena (task indices), addressed by [`Bundle`].
+    bundle_data: Vec<usize>,
+    /// Recycled arena extents per power-of-two size class:
+    /// `bundle_free[c]` holds offsets of free extents of `1 << c`.
+    bundle_free: Vec<Vec<u32>>,
+    /// Live (allocated, not yet taken) bundles — a slab/handle
+    /// invariant checked under `debug_assert!`.
+    live_bundles: usize,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl EventQueue {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            now: 0,
+            seq: 0,
+            ring: vec![Slot::default(); RING],
+            top: 0,
+            bot: [0; RING_WORDS],
+            ring_len: 0,
+            overflow: BinaryHeap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            bundle_data: Vec::new(),
+            bundle_free: vec![Vec::new(); 32],
+            live_bundles: 0,
+        }
     }
 
     pub fn now(&self) -> Micros {
         self.now
     }
+
+    /// Total events scheduled over the queue's lifetime.
+    pub fn scheduled(&self) -> u64 {
+        self.seq
+    }
+
+    // -- payload slab --------------------------------------------------
 
     fn alloc_slot(&mut self, ev: Event) -> u32 {
         match self.free.pop() {
@@ -135,13 +248,140 @@ impl EventQueue {
         ev
     }
 
+    // -- bundle arena --------------------------------------------------
+
+    /// Size class for a bundle of `len` tasks: extents are allocated in
+    /// powers of two so freed storage is reusable by any same-class
+    /// bundle.
+    fn bundle_class(len: usize) -> usize {
+        len.max(1).next_power_of_two().trailing_zeros() as usize
+    }
+
+    /// Copy `items` into the bundle arena, reusing a freed same-class
+    /// extent when one exists. The returned handle must be consumed by
+    /// exactly one [`EventQueue::take_bundle`].
+    pub fn bundle_from(&mut self, items: &[usize]) -> Bundle {
+        let class = Self::bundle_class(items.len());
+        let off = match self.bundle_free[class].pop() {
+            Some(off) => off,
+            None => {
+                let off = self.bundle_data.len();
+                debug_assert!(off + (1 << class) <= u32::MAX as usize);
+                self.bundle_data.resize(off + (1 << class), 0);
+                off as u32
+            }
+        };
+        self.bundle_data[off as usize..off as usize + items.len()]
+            .copy_from_slice(items);
+        self.live_bundles += 1;
+        Bundle { off, len: items.len() as u32 }
+    }
+
+    /// Consume a bundle: clear `out`, copy the bundle's tasks into it,
+    /// and recycle the arena extent.
+    pub fn take_bundle(&mut self, b: Bundle, out: &mut Vec<usize>) {
+        out.clear();
+        let (off, len) = (b.off as usize, b.len as usize);
+        debug_assert!(off + len <= self.bundle_data.len(), "stale bundle");
+        debug_assert!(self.live_bundles > 0, "double take of a bundle");
+        out.extend_from_slice(&self.bundle_data[off..off + len]);
+        self.live_bundles -= 1;
+        self.bundle_free[Self::bundle_class(len)].push(b.off);
+    }
+
+    // -- calendar ring -------------------------------------------------
+
+    fn set_bit(&mut self, s: usize) {
+        self.bot[s >> 6] |= 1u64 << (s & 63);
+        self.top |= 1u64 << (s >> 6);
+    }
+
+    fn clear_bit(&mut self, s: usize) {
+        let w = s >> 6;
+        self.bot[w] &= !(1u64 << (s & 63));
+        if self.bot[w] == 0 {
+            self.top &= !(1u64 << w);
+        }
+    }
+
+    /// First occupied ring slot at or after `start`, scanning
+    /// circularly (slots "behind" `start` hold wrapped — still future —
+    /// timestamps). `None` when the ring is empty.
+    fn next_occupied(&self, start: usize) -> Option<usize> {
+        if self.ring_len == 0 {
+            return None;
+        }
+        let w0 = start >> 6;
+        // Bits >= start within start's own word.
+        let m = self.bot[w0] & (!0u64 << (start & 63));
+        if m != 0 {
+            return Some((w0 << 6) + m.trailing_zeros() as usize);
+        }
+        // Words strictly after w0, then wrap to 0..=w0. When the wrap
+        // lands back on w0, its surviving bits are < start (the bits
+        // >= start were just checked) — exactly the wrapped slots.
+        let after = if w0 + 1 < RING_WORDS { self.top >> (w0 + 1) << (w0 + 1) } else { 0 };
+        let w = if after != 0 {
+            after.trailing_zeros() as usize
+        } else {
+            debug_assert_ne!(self.top, 0);
+            self.top.trailing_zeros() as usize
+        };
+        Some((w << 6) + self.bot[w].trailing_zeros() as usize)
+    }
+
+    /// The ring's earliest entry as `(time, seq, slot)`.
+    fn ring_front(&self) -> Option<(Micros, u64, usize)> {
+        let s = self.next_occupied((self.now % RING as Micros) as usize)?;
+        let b = &self.ring[s];
+        debug_assert!(b.head < b.items.len(), "occupied slot must hold items");
+        Some((b.time, b.items[b.head].0, s))
+    }
+
+    /// Pop the ring bucket at `slot`'s front item, maintaining the
+    /// occupancy bitmap. Returns the payload slab index.
+    fn ring_pop_front(&mut self, slot: usize) -> u32 {
+        let b = &mut self.ring[slot];
+        let (_, idx) = b.items[b.head];
+        b.head += 1;
+        if b.head == b.items.len() {
+            b.items.clear();
+            b.head = 0;
+            self.clear_bit(slot);
+        }
+        self.ring_len -= 1;
+        idx
+    }
+
     /// Schedule `ev` at absolute time `t` (>= now).
     pub fn at(&mut self, t: Micros, ev: Event) {
         debug_assert!(t >= self.now, "scheduling into the past");
+        let t = t.max(self.now);
         self.seq += 1;
         let seq = self.seq;
         let idx = self.alloc_slot(ev);
-        self.heap.push(Reverse((t.max(self.now), seq, idx)));
+        if t - self.now < RING as Micros {
+            let s = (t % RING as Micros) as usize;
+            let fresh = {
+                let b = &mut self.ring[s];
+                let fresh = b.items.is_empty();
+                if fresh {
+                    b.time = t;
+                } else {
+                    // Single-timestamp invariant: within [now, now+RING)
+                    // each slot maps to exactly one absolute time.
+                    debug_assert_eq!(b.time, t, "calendar slot time collision");
+                }
+                b.items.push((seq, idx));
+                fresh
+            };
+            if fresh {
+                self.set_bit(s);
+            }
+            self.ring_len += 1;
+        } else {
+            self.overflow.push(Reverse((t, seq, idx)));
+        }
     }
 
     /// Schedule `ev` after a delay.
@@ -149,42 +389,92 @@ impl EventQueue {
         self.at(self.now + d, ev);
     }
 
-    /// Pop the next event, advancing the clock.
+    /// Pop the next event, advancing the clock. Merges the ring and the
+    /// overflow heap by `(time, seq)` — events at one timestamp may be
+    /// split across both (scheduled far ahead vs rescheduled nearby),
+    /// and all heap seqs at a time precede all ring seqs at that time
+    /// (the clock is monotone), so the tuple compare preserves FIFO.
     pub fn pop(&mut self) -> Option<(Micros, Event)> {
-        self.heap.pop().map(|Reverse((t, _, idx))| {
-            self.now = t;
-            (t, self.take_slot(idx))
-        })
+        let ring = self.ring_front();
+        let heap = self.overflow.peek().map(|&Reverse((t, s, _))| (t, s));
+        match (ring, heap) {
+            (None, None) => None,
+            (Some((rt, rs, slot)), h) if h.map_or(true, |(ht, hs)| (rt, rs) < (ht, hs)) => {
+                let idx = self.ring_pop_front(slot);
+                self.now = rt;
+                Some((rt, self.take_slot(idx)))
+            }
+            _ => {
+                let Reverse((t, _, idx)) = self.overflow.pop().expect("peeked");
+                self.now = t;
+                Some((t, self.take_slot(idx)))
+            }
+        }
     }
 
     /// Pop *all* events scheduled for the earliest timestamp into `out`
-    /// (in FIFO seq order), advancing the clock once. Returns that
-    /// timestamp, or `None` when the queue is empty.
+    /// (in FIFO seq order), advancing the clock once. `out` is cleared
+    /// first, so a caller can never double-process a stale batch.
+    /// Returns that timestamp, or `None` when the queue is empty.
     pub fn pop_batch(&mut self, out: &mut Vec<Event>) -> Option<Micros> {
-        let Reverse((t, _, _)) = *self.heap.peek()?;
+        out.clear();
+        let ring = self.ring_front();
+        let heap = self.overflow.peek().map(|&Reverse((t, s, _))| (t, s));
+        let t = match (ring, heap) {
+            (None, None) => return None,
+            (Some((rt, _, _)), None) => rt,
+            (None, Some((ht, _))) => ht,
+            (Some((rt, _, _)), Some((ht, _))) => rt.min(ht),
+        };
         self.now = t;
-        while let Some(&Reverse((t2, _, _))) = self.heap.peek() {
+        // Heap entries first: every heap seq at `t` predates every ring
+        // seq at `t` (heap entries were scheduled while `t` was still
+        // outside the ring window, i.e. strictly earlier).
+        while let Some(&Reverse((t2, _, _))) = self.overflow.peek() {
             if t2 != t {
                 break;
             }
-            let Reverse((_, _, idx)) = self.heap.pop().expect("peeked");
-            out.push(self.take_slot(idx));
+            let Reverse((_, _, idx)) = self.overflow.pop().expect("peeked");
+            let ev = self.take_slot(idx);
+            out.push(ev);
+        }
+        // Then the whole ring bucket (single-timestamp invariant: the
+        // bucket is entirely `t`).
+        if let Some((rt, _, slot)) = ring {
+            if rt == t {
+                let b = &mut self.ring[slot];
+                let head = b.head;
+                let items = std::mem::take(&mut b.items);
+                b.head = 0;
+                for &(_, idx) in &items[head..] {
+                    let ev = self.take_slot(idx);
+                    out.push(ev);
+                }
+                self.ring_len -= items.len() - head;
+                // Hand the (cleared) allocation back to the slot so its
+                // capacity is reused by the next bucket at this slot.
+                let mut items = items;
+                items.clear();
+                self.ring[slot].items = items;
+                self.clear_bit(slot);
+            }
         }
         Some(t)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.ring_len == 0 && self.overflow.is_empty()
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.ring_len + self.overflow.len()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::DetRng;
 
     #[test]
     fn queue_orders_by_time_then_fifo() {
@@ -219,18 +509,19 @@ mod tests {
         q.at(50, Event::Release(2));
         q.at(100, Event::Release(3));
         q.at(100, Event::Release(4));
-        let mut out = Vec::new();
+        // Pre-seeded garbage: pop_batch clears `out` itself, so stale
+        // content can never be double-processed.
+        let mut out = vec![Event::Release(99)];
         assert_eq!(q.pop_batch(&mut out), Some(50));
         assert_eq!(out, vec![Event::Release(2)]);
-        out.clear();
         assert_eq!(q.pop_batch(&mut out), Some(100));
         assert_eq!(
             out,
             vec![Event::Release(1), Event::Release(3), Event::Release(4)],
             "same-timestamp events drain in FIFO order"
         );
-        out.clear();
         assert_eq!(q.pop_batch(&mut out), None);
+        assert!(out.is_empty(), "empty queue clears the batch too");
         assert_eq!(q.now(), 100);
     }
 
@@ -260,8 +551,137 @@ mod tests {
         assert_eq!(q.now(), 10);
         // Handler-style rescheduling at the same timestamp.
         q.at(10, Event::Release(1));
-        out.clear();
         assert_eq!(q.pop_batch(&mut out), Some(10));
         assert_eq!(out, vec![Event::Release(1)]);
+    }
+
+    #[test]
+    fn calendar_queue_matches_reference_heap_order() {
+        // Randomized differential: under mixed at/after/pop/pop_batch
+        // workloads spanning in-ring, same-instant, and overflow
+        // distances, the calendar queue must pop the exact (time, seq)
+        // order of a reference binary heap. Each event's payload is its
+        // seq number, so the comparison pins FIFO ordering, not just
+        // timestamps.
+        let mut rng = DetRng::new(0xCA1E);
+        let mut q = EventQueue::new();
+        let mut reference: BinaryHeap<Reverse<(Micros, u64)>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut batch = Vec::new();
+        for _round in 0..3000 {
+            for _ in 0..1 + rng.below(4) {
+                let d = match rng.below(10) {
+                    0 => 0,                                // same-instant storm
+                    1..=6 => rng.below(RING as u64),       // in-window
+                    7 | 8 => RING as u64 + rng.below(50_000), // near overflow
+                    _ => 200_000 + rng.below(2_000_000),   // deep future
+                };
+                let t = q.now() + d;
+                seq += 1;
+                reference.push(Reverse((t, seq)));
+                q.at(t, Event::Release(seq as usize));
+            }
+            if rng.below(2) == 0 {
+                for _ in 0..rng.below(4) {
+                    let Some((t, ev)) = q.pop() else { break };
+                    let Reverse((rt, rs)) = reference.pop().expect("reference has it");
+                    assert_eq!((t, ev), (rt, Event::Release(rs as usize)));
+                }
+            } else {
+                if q.pop_batch(&mut batch).is_some() {
+                    for ev in &batch {
+                        let Reverse((rt, rs)) =
+                            reference.pop().expect("reference has it");
+                        assert_eq!(rt, q.now());
+                        assert_eq!(*ev, Event::Release(rs as usize));
+                    }
+                    assert!(
+                        reference.peek().map_or(true, |&Reverse((rt, _))| rt > q.now()),
+                        "pop_batch must drain the whole timestamp"
+                    );
+                }
+            }
+        }
+        while let Some((t, ev)) = q.pop() {
+            let Reverse((rt, rs)) = reference.pop().expect("reference has it");
+            assert_eq!((t, ev), (rt, Event::Release(rs as usize)));
+        }
+        assert!(reference.is_empty());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn far_future_overflow_crosses_ring_boundary() {
+        let mut q = EventQueue::new();
+        // 5000 µs out is beyond the RING window: overflow heap.
+        assert!(5_000 >= RING as Micros);
+        q.at(5_000, Event::Release(0));
+        q.at(2_000, Event::Release(1));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap(), (2_000, Event::Release(1)));
+        // The clock advanced: 5000 is now inside the window, so this
+        // same-timestamp event lands in the ring while the first one
+        // stays in the heap. Scheduling order (seq) must still win.
+        q.at(5_000, Event::Release(2));
+        q.at(4_000, Event::Release(3));
+        assert_eq!(q.pop().unwrap(), (4_000, Event::Release(3)));
+        assert_eq!(q.pop().unwrap(), (5_000, Event::Release(0)), "heap seq first");
+        assert_eq!(q.pop().unwrap(), (5_000, Event::Release(2)));
+        // Ring wraparound: slots past the ring origin (t % RING below
+        // now % RING) are still found by the circular bitmap scan.
+        q.at(9_000, Event::Release(4)); // slot 9000 - 2*4096 = 808
+        q.at(8_000, Event::Release(5)); // slot 8000 - 4096 = 3904
+        assert_eq!(q.pop().unwrap(), (8_000, Event::Release(5)));
+        assert_eq!(q.pop().unwrap(), (9_000, Event::Release(4)));
+        assert!(q.pop().is_none());
+        assert_eq!(q.now(), 9_000);
+    }
+
+    #[test]
+    fn bundle_round_trip_and_recycling() {
+        let mut q = EventQueue::new();
+        let h = q.bundle_from(&[1, 2, 3]);
+        assert_eq!(h.len(), 3);
+        let mut out = vec![42];
+        q.take_bundle(h, &mut out);
+        assert_eq!(out, vec![1, 2, 3], "take clears stale content and copies");
+        // A freed extent is reused by any bundle of the same size class
+        // (3 and 4 both round up to a capacity-4 extent).
+        let grew_to = q.bundle_data.len();
+        assert_eq!(grew_to, 4);
+        let h2 = q.bundle_from(&[7, 8, 9, 10]);
+        assert_eq!(q.bundle_data.len(), grew_to, "same-class extent recycled");
+        q.take_bundle(h2, &mut out);
+        assert_eq!(out, vec![7, 8, 9, 10]);
+        // Different class: fresh extent.
+        let h3 = q.bundle_from(&[5]);
+        assert!(q.bundle_data.len() > grew_to);
+        q.take_bundle(h3, &mut out);
+        assert_eq!(out, vec![5]);
+        assert_eq!(q.live_bundles, 0);
+    }
+
+    #[test]
+    fn empty_bundle_round_trips() {
+        let mut q = EventQueue::new();
+        let h = q.bundle_from(&[]);
+        assert!(h.is_empty());
+        let mut out = vec![1, 2];
+        q.take_bundle(h, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn bundle_events_flow_through_the_queue() {
+        let mut q = EventQueue::new();
+        let h = q.bundle_from(&[10, 20]);
+        q.at(5, Event::GramArrive { site: 1, bundle: h });
+        let (t, ev) = q.pop().unwrap();
+        assert_eq!(t, 5);
+        let Event::GramArrive { site, bundle } = ev else { panic!("{ev:?}") };
+        assert_eq!(site, 1);
+        let mut out = Vec::new();
+        q.take_bundle(bundle, &mut out);
+        assert_eq!(out, vec![10, 20]);
     }
 }

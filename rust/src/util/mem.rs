@@ -14,6 +14,20 @@ pub fn rss_bytes() -> Option<u64> {
     None
 }
 
+/// Peak resident set size (high-water mark) in bytes, or None if
+/// unavailable. Unlike [`rss_bytes`] this never shrinks, which makes it
+/// the right figure for a bench's "peak RSS" row.
+pub fn vm_hwm_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
 /// Best-effort measurement of heap growth caused by `f`, in bytes.
 ///
 /// RSS is noisy (allocator slack, page granularity); callers should build
@@ -34,6 +48,17 @@ mod tests {
     fn rss_is_readable_and_nonzero() {
         let rss = rss_bytes().expect("proc must be readable on linux");
         assert!(rss > 1024 * 1024, "rss {rss} suspiciously small");
+    }
+
+    #[test]
+    fn vm_hwm_is_readable_and_at_least_current_rss() {
+        let hwm = vm_hwm_bytes().expect("proc must be readable on linux");
+        assert!(hwm > 1024 * 1024, "hwm {hwm} suspiciously small");
+        // The high-water mark can never be below a current reading taken
+        // after it (modulo the race of allocating between the two reads,
+        // which only pushes hwm higher on the second read).
+        let rss = rss_bytes().unwrap();
+        assert!(hwm >= rss / 2, "hwm {hwm} far below rss {rss}");
     }
 
     #[test]

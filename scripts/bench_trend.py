@@ -52,6 +52,16 @@ TRACKED_BY_BENCH = {
         ("peer shared-FS-cold consumers/s",
          ("sim_peer_sharedfs_cold_tasks_per_s",), True),
     ],
+    # Sim-core engine speed: wall-clock rates of a fixed deterministic
+    # workload (same events, same schedule, every run), so a >20% drop
+    # is an engine change, not workload noise. Peak RSS is report-only:
+    # allocator/page behavior swings with the runner image.
+    "simcore": [
+        ("queue-churn events/s", ("sim_queue_events_per_s",), True),
+        ("1M-task DAG tasks/s", ("sim_dag_tasks_per_s",), True),
+        ("1M-task DAG events/s", ("sim_dag_events_per_s",), True),
+        ("1M-task DAG peak RSS MB", ("peak_rss_mb",), False),
+    ],
 }
 
 
