@@ -1,0 +1,84 @@
+//! Scheduler experiment matrix (DESIGN.md §9.4): every pluggable DAG
+//! scheduler swept over (workflow × site system), reporting virtual
+//! makespan against the critical-path/area lower bound.
+//!
+//! Rows: one per (dag × system × scheduler) cell from
+//! `gridswift::sim::experiment::run_matrix` — bag-of-tasks, fMRI, and
+//! Montage shapes on a homogeneous pair and a heterogeneous pair of
+//! sites, under adaptive (the production policy), HEFT, PEFT,
+//! dynamic-list, min-queue, and round-robin.
+//!
+//! The JSON artifact carries `sim_sched_{dag}_{sched}_efficiency` keys
+//! (lower_bound / makespan, higher is better, worst case across the
+//! site systems) — deterministic virtual-time numbers, so CI gates the
+//! adaptive/HEFT/PEFT cells via `scripts/bench_trend.py` (>20%
+//! regression fails).
+//!
+//! Flags: `--quick` shrinks the DAGs for CI; `--smoke` runs a single
+//! cell and skips the JSON artifact (debug-assertions CI smoke).
+
+use gridswift::sim::experiment::{run_cell, run_matrix, summary_table, systems};
+use gridswift::sim::Dag;
+use gridswift::util::json::Json;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    println!("== DAG scheduler matrix ==\n");
+
+    if smoke {
+        // One cell with every debug_assert! live: a small bag under
+        // HEFT (static plan + repair path) on the heterogeneous pair.
+        let (system_name, sites) = systems().remove(1);
+        let cell = run_cell(
+            "bag",
+            Dag::bag(48, "t", 1.0),
+            system_name,
+            sites,
+            "heft",
+            7,
+        );
+        println!("{}", summary_table(std::slice::from_ref(&cell)));
+        assert!(cell.makespan_secs + 1e-9 >= cell.lower_bound_secs);
+        return;
+    }
+
+    let cells = run_matrix(quick);
+    println!("{}", summary_table(&cells));
+
+    let mut report = Json::obj();
+    report.set("bench", "schedulers");
+    report.set("quick", quick);
+    report.set("cells", cells.len() as u64);
+    for c in &cells {
+        assert!(
+            c.makespan_secs + 1e-9 >= c.lower_bound_secs,
+            "{}/{}/{}: makespan {} under bound {}",
+            c.dag,
+            c.system,
+            c.scheduler,
+            c.makespan_secs,
+            c.lower_bound_secs
+        );
+        assert!(c.efficiency > 0.0 && c.efficiency <= 1.0 + 1e-9);
+    }
+    // Gated keys: worst-case efficiency across site systems per
+    // (dag, scheduler) — one deterministic, higher-is-better number
+    // each, independent of how many systems the matrix grows.
+    let mut pairs: Vec<(&str, &str)> =
+        cells.iter().map(|c| (c.dag, c.scheduler)).collect();
+    pairs.sort_unstable();
+    pairs.dedup();
+    for (dag, sched) in pairs {
+        let worst = cells
+            .iter()
+            .filter(|c| c.dag == dag && c.scheduler == sched)
+            .map(|c| c.efficiency)
+            .fold(f64::INFINITY, f64::min);
+        report.set(&format!("sim_sched_{dag}_{sched}_efficiency"), worst);
+    }
+    std::fs::write("BENCH_schedulers.json", report.render())
+        .expect("write BENCH_schedulers.json");
+    println!("wrote BENCH_schedulers.json");
+}

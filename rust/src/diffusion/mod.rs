@@ -33,7 +33,7 @@ pub mod router;
 pub use cache::CacheModel;
 pub use catalog::{CacheEvent, CacheStats, DataCatalog};
 pub use links::{LinkSpec, LinkTopology, TransferPlan, TransferPlanner, TransferSource};
-pub use router::{LocalityRouter, RouterConfig};
+pub use router::{adaptive_route, LocalityRouter, RouterConfig};
 
 use std::path::Path;
 

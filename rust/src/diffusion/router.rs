@@ -166,6 +166,30 @@ impl LocalityRouter {
     }
 }
 
+/// The paper's adaptive routing rule as one shared entry point: the
+/// locality-weighted score-proportional pick when diffusion state is
+/// present, the plain filtered score pick otherwise. Both the threaded
+/// Karajan scheduler and the sim's `Adaptive` scheduler call this, so
+/// the two worlds cannot drift — same delegation rules, same single RNG
+/// draw per successful pick.
+#[allow(clippy::too_many_arguments)]
+pub fn adaptive_route<C: Clock>(
+    board: &SiteScoreBoard<C>,
+    diffusion: Option<(&DataCatalog, &LocalityRouter, Option<&TransferPlanner>)>,
+    inputs: &[DatasetRef],
+    avoid: Option<usize>,
+    now: C::Time,
+    rng: &mut DetRng,
+    filter: impl Fn(usize) -> bool,
+) -> Option<usize> {
+    match diffusion {
+        Some((catalog, router, planner)) => {
+            router.pick(board, catalog, planner, inputs, avoid, now, rng, filter)
+        }
+        None => board.pick_filtered(avoid, now, rng, filter),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

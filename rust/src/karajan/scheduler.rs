@@ -159,34 +159,35 @@ fn pick_site_locked(
     now: Instant,
 ) -> usize {
     let SchedInner { board, rng, diffusion, .. } = st;
-    match diffusion.as_mut() {
-        Some(d) => {
-            let inputs = d.refs(&task.inputs);
-            let DiffusionState { catalog, router, planner, .. } = d;
-            let site = router
-                .pick(
-                    board,
-                    catalog,
-                    planner.as_ref(),
-                    &inputs,
-                    last_site,
-                    now,
-                    rng,
-                    |_| true,
-                )
-                .expect("board has at least one site");
-            // Plan the misses against the pre-staging holder state —
-            // the same order the sim driver runs, so the differential
-            // test pins the plan logs against each other.
-            if let Some(p) = planner.as_mut() {
-                let misses = catalog.misses_at(site, &inputs);
-                p.plan_misses(catalog, site, &misses);
-            }
-            catalog.note_task_start(site, &inputs);
-            site
+    // The pick itself is `adaptive_route` — the exact entry point the
+    // sim driver's default `Adaptive` scheduler calls, so the real-vs-
+    // sim differential pins one shared decision procedure, not two
+    // hand-kept copies.
+    let inputs = diffusion.as_ref().map(|d| d.refs(&task.inputs));
+    let site = crate::diffusion::adaptive_route(
+        board,
+        diffusion.as_ref().map(|d| {
+            (&d.catalog, &d.router, d.planner.as_ref())
+        }),
+        inputs.as_deref().unwrap_or(&[]),
+        last_site,
+        now,
+        rng,
+        |_| true,
+    )
+    .expect("board has at least one site");
+    if let (Some(d), Some(inputs)) = (diffusion.as_mut(), inputs.as_ref()) {
+        // Plan the misses against the pre-staging holder state —
+        // the same order the sim driver runs, so the differential
+        // test pins the plan logs against each other.
+        let DiffusionState { catalog, planner, .. } = d;
+        if let Some(p) = planner.as_mut() {
+            let misses = catalog.misses_at(site, inputs);
+            p.plan_misses(catalog, site, &misses);
         }
-        None => board.pick(last_site, now, rng),
+        catalog.note_task_start(site, inputs);
     }
+    site
 }
 
 /// The scheduler shared state + flusher thread.

@@ -134,6 +134,27 @@ impl Dag {
             .all(|(i, t)| t.deps.iter().all(|&d| d < i))
     }
 
+    /// Bytes flowing across the `src → dst` dependency edge, for
+    /// transfer-aware list scheduling: the dataset-id intersection of
+    /// `src`'s outputs and `dst`'s inputs. Tasks that declare no
+    /// datasets at all fall back to the raw byte counters
+    /// (`min(src.output_bytes, dst.input_bytes)` — the shared-FS-era
+    /// approximation); mixed declarations with an empty intersection
+    /// move nothing.
+    pub fn edge_bytes(&self, src: usize, dst: usize) -> u64 {
+        let (s, d) = (&self.tasks[src], &self.tasks[dst]);
+        let shared: u64 = s
+            .output_datasets
+            .iter()
+            .filter(|o| d.input_datasets.iter().any(|i| i.id == o.id))
+            .map(|o| o.bytes)
+            .sum();
+        if shared == 0 && s.output_datasets.is_empty() && d.input_datasets.is_empty() {
+            return s.output_bytes.min(d.input_bytes);
+        }
+        shared
+    }
+
     /// A bag of `n` independent tasks of fixed length.
     pub fn bag(n: usize, stage: &str, service_secs: f64) -> Dag {
         let stage = StageName::from(stage);

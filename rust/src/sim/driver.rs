@@ -28,6 +28,7 @@ use crate::util::DetRng;
 use super::dag::Dag;
 use super::falkon_model::{FalkonConfig, FalkonSim};
 use super::lrm::{GramConfig, LrmConfig, LrmJob, LrmSim};
+use super::scheduler::{Adaptive, DiffView, ExecChoice, Pending, Scheduler, SiteChoice, SystemView};
 use super::sharedfs::{PeerNet, SharedFs};
 use super::{Event, EventQueue};
 
@@ -199,8 +200,13 @@ pub struct Driver {
     cluster_deadline_set: bool,
     /// Multi-site mode: centrally pending tasks + per-site outstanding
     /// counts (Karajan's score-driven per-site submission windows).
-    pending_multisite: std::collections::VecDeque<SimPending>,
+    pending_multisite: std::collections::VecDeque<Pending>,
     site_outstanding: Vec<usize>,
+    /// The placement policy (DESIGN.md §9): which pending task goes to
+    /// which site/executor. Defaults to [`Adaptive`] — the paper's
+    /// score-proportional + locality pick, bit-identical to the
+    /// pre-trait driver.
+    scheduler: Box<dyn Scheduler>,
     /// Injected failures + per-task attempt counters (multi-site mode).
     faults: SimFaults,
     task_attempts: Vec<usize>,
@@ -259,15 +265,6 @@ impl SimDiffusion {
             .map(|p| p.topology().has_peer_links())
             .unwrap_or(false)
     }
-}
-
-/// A centrally-pending multi-site task (first attempt or retry).
-#[derive(Debug, Clone, Copy)]
-struct SimPending {
-    task: usize,
-    /// Site of the previous failed attempt — the retry prefers a
-    /// different site, exactly like the threaded scheduler.
-    avoid: Option<usize>,
 }
 
 impl Driver {
@@ -399,6 +396,7 @@ impl Driver {
             cluster_deadline_set: false,
             pending_multisite: std::collections::VecDeque::new(),
             site_outstanding: vec![0; nsites],
+            scheduler: Box::new(Adaptive),
             faults: SimFaults::default(),
             task_attempts: vec![0; n],
             score_trace: Vec::new(),
@@ -450,6 +448,39 @@ impl Driver {
         self
     }
 
+    /// Swap the placement policy (default: [`Adaptive`], the paper's
+    /// score-proportional + locality pick). List schedulers receive the
+    /// DAG and resource shape through [`Scheduler::prepare`] before the
+    /// first event; see [`crate::sim::scheduler::by_name`].
+    pub fn with_scheduler(mut self, scheduler: Box<dyn Scheduler>) -> Self {
+        self.scheduler = scheduler;
+        self
+    }
+
+    /// The resource shape handed to [`Scheduler::prepare`]: multi-site
+    /// modes expose per-site speeds × processor slots; Falkon exposes
+    /// one unit-speed slot per potential executor (the DRP ceiling —
+    /// dynamic pools may register fewer, which the schedulers repair at
+    /// dispatch time).
+    fn system_view(&self) -> SystemView {
+        let links = self
+            .diffusion
+            .as_ref()
+            .and_then(|d| d.planner.as_ref())
+            .map(|p| p.topology().clone());
+        match &self.falkon {
+            Some(f) => {
+                let n = f.cfg.drp.max_executors.max(1);
+                SystemView { speeds: vec![1.0; n], slots: vec![1; n], links }
+            }
+            None => SystemView {
+                speeds: self.site_speed.clone(),
+                slots: self.lrms.iter().map(|l| l.cfg.total_procs()).collect(),
+                links,
+            },
+        }
+    }
+
     /// Override the multi-site score/suspension policy (default: the
     /// historical window ramp with per-site processor-count ceilings,
     /// 30 s cool-down). Rebuilding the board also resets the per-site
@@ -469,6 +500,8 @@ impl Driver {
         if let Mode::Mpi { .. } = self.mode {
             return self.run_mpi();
         }
+        let system = self.system_view();
+        self.scheduler.prepare(&self.dag, &system);
         // Seed: release all ready tasks at t=0.
         for i in 0..self.dag.len() {
             if self.indeg[i] == 0 {
@@ -742,7 +775,7 @@ impl Driver {
                 // Tasks wait centrally; score-sized per-site windows pull
                 // them (paper §3.13: dispatch proportional to site score).
                 self.pending_multisite
-                    .push_back(SimPending { task, avoid: None });
+                    .push_back(Pending { task, avoid: None });
                 self.pump_multisite(now);
             }
             Mode::Mpi { .. } => unreachable!(),
@@ -783,18 +816,19 @@ impl Driver {
     /// Multi-site pull loop: each site's submission window is its score
     /// (TCP-like: grows on success, halves on failure), capped by its
     /// processor count — sites with higher scores hold more outstanding
-    /// jobs. *Which* site a task routes to is the shared policy core's
-    /// score-proportional pick ([`SiteScoreBoard::pick_filtered`] over
-    /// the seeded RNG), restricted to sites with window headroom and
-    /// avoiding a retry's previous site — the exact selection the
-    /// threaded scheduler runs on the real clock.
+    /// jobs. *Which* pending task runs *where* is the pluggable
+    /// [`Scheduler`]'s choice; the default [`Adaptive`] runs the shared
+    /// policy core's score-proportional pick (locality-weighted under
+    /// diffusion) over the seeded RNG, restricted to sites with window
+    /// headroom and avoiding a retry's previous site — the exact
+    /// selection the threaded scheduler runs on the real clock.
     fn pump_multisite(&mut self, now: Micros) {
         let Mode::MultiSite { gram, .. } = &self.mode else { return };
         let gram = gram.clone();
         loop {
-            let Some(head) = self.pending_multisite.front() else { return };
-            let avoid = head.avoid;
-            let task = head.task;
+            if self.pending_multisite.is_empty() {
+                return;
+            }
             let board = self.board.as_ref().expect("multi-site board");
             let headroom: Vec<bool> = (0..self.lrms.len())
                 .map(|i| {
@@ -804,47 +838,49 @@ impl Driver {
                     (self.site_outstanding[i] as f64) < cap
                 })
                 .collect();
-            // With data diffusion, the locality router weighs cached
-            // input bytes into the score-proportional pick (and the
-            // catalog records the hit/miss outcome at the chosen
-            // site); otherwise the plain filtered pick — both are the
-            // exact selection the threaded scheduler runs. A transfer
-            // planner additionally prices each miss (cheapest peer
-            // holder vs shared FS) in the same order the threaded
-            // scheduler plans, pinning the plan logs bit for bit.
-            let mut plans: Vec<TransferPlan> = Vec::new();
-            let picked = match self.diffusion.as_mut() {
-                Some(diff) => {
-                    let inputs = &self.dag.tasks[task].input_datasets;
-                    let SimDiffusion { catalog, router, planner } = diff;
-                    let site = router.pick(
-                        board,
-                        catalog,
-                        planner.as_ref(),
-                        inputs,
-                        avoid,
-                        now,
-                        &mut self.rng,
-                        |i| headroom[i],
-                    );
-                    if let Some(s) = site {
-                        if let Some(p) = planner.as_mut() {
-                            let misses = catalog.misses_at(s, inputs);
-                            plans = p.plan_misses(catalog, s, &misses);
-                        }
-                        catalog.note_task_start(s, inputs);
-                    }
-                    site
-                }
-                None => {
-                    board.pick_filtered(avoid, now, &mut self.rng, |i| headroom[i])
-                }
+            let site_procs: Vec<usize> =
+                self.lrms.iter().map(|l| l.cfg.total_procs()).collect();
+            let picked = {
+                let choice = SiteChoice {
+                    dag: &self.dag,
+                    pending: self.pending_multisite.as_slices(),
+                    board,
+                    headroom: &headroom,
+                    outstanding: &self.site_outstanding,
+                    site_speed: &self.site_speed,
+                    site_procs: &site_procs,
+                    now,
+                    diffusion: self.diffusion.as_ref().map(|d| DiffView {
+                        catalog: &d.catalog,
+                        router: &d.router,
+                        planner: d.planner.as_ref(),
+                    }),
+                };
+                self.scheduler.place(&choice, &mut self.rng)
             };
-            let Some(site) = picked else {
-                // No site has window headroom: wait for completions.
+            let Some((nth, site)) = picked else {
+                // Nothing placeable (no headroom, or the plan's sites
+                // are all full): wait for completions.
                 return;
             };
-            let p = self.pending_multisite.pop_front().unwrap();
+            let p = self
+                .pending_multisite
+                .remove(nth)
+                .expect("scheduler returned a valid pending index");
+            // Catalog bookkeeping for the chosen site, in the same
+            // order the threaded scheduler runs it (plan the misses,
+            // then record hit/miss + pin): with a transfer planner the
+            // plans also stage physically below.
+            let mut plans: Vec<TransferPlan> = Vec::new();
+            if let Some(diff) = self.diffusion.as_mut() {
+                let inputs = &self.dag.tasks[p.task].input_datasets;
+                let SimDiffusion { catalog, planner, .. } = diff;
+                if let Some(pl) = planner.as_mut() {
+                    let misses = catalog.misses_at(site, inputs);
+                    plans = pl.plan_misses(catalog, site, &misses);
+                }
+                catalog.note_task_start(site, inputs);
+            }
             self.task_site[p.task] = site;
             self.site_outstanding[site] += 1;
             // With peer links, the planned transfers stage physically
@@ -956,7 +992,7 @@ impl Driver {
                 // Retry, preferring a different site (same policy as
                 // the threaded scheduler's `last_site` avoidance).
                 self.pending_multisite
-                    .push_back(SimPending { task, avoid: Some(site) });
+                    .push_back(Pending { task, avoid: Some(site) });
                 return;
             }
             self.complete_task_with(now, task, false);
@@ -1019,25 +1055,29 @@ impl Driver {
 
     fn on_falkon_dispatch(&mut self, now: Micros) {
         loop {
-            let Some(f) = self.falkon.as_mut() else { return };
-            // Data diffusion: among idle executors, dispatch the queue
-            // head to the one caching the most of its input bytes
-            // (lowest index on ties — which degenerates to the plain
-            // first-idle pick when nothing is cached).
-            let head = f.queue.front().copied();
-            let dispatched = match (&self.diffusion, head) {
-                (Some(diff), Some(task)) => {
-                    let inputs = &self.dag.tasks[task].input_datasets;
-                    let best = f
-                        .idle_execs()
-                        .map(|i| (i, diff.catalog.cached_bytes(i, inputs)))
-                        .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
-                        .map(|(i, _)| i);
-                    best.and_then(|e| f.dispatch_to(e, now))
-                }
-                _ => f.try_dispatch(now),
+            if self.falkon.is_none() {
+                return;
+            }
+            // The scheduler picks (queued task, idle executor); the
+            // default Adaptive dispatches the queue head to the idle
+            // executor caching the most of its input bytes (lowest
+            // index on ties — which degenerates to the plain first-idle
+            // pick when nothing is cached).
+            let picked = {
+                let choice = ExecChoice {
+                    dag: &self.dag,
+                    falkon: self.falkon.as_ref().unwrap(),
+                    catalog: self.diffusion.as_ref().map(|d| &d.catalog),
+                    now,
+                };
+                self.scheduler.dispatch(&choice, &mut self.rng)
             };
-            let Some((exec, task, start)) = dispatched else {
+            let Some((nth, chosen)) = picked else {
+                break;
+            };
+            let f = self.falkon.as_mut().unwrap();
+            let Some((exec, task, start)) = f.dispatch_nth_to(nth, chosen, now)
+            else {
                 break;
             };
             let overhead = f.cfg.executor_overhead;
@@ -1156,6 +1196,9 @@ impl Driver {
             return;
         }
         let task = f.fail(exec, now);
+        // Static plans must stop waiting for the dead executor: their
+        // queued tasks re-plan onto survivors at the next dispatch.
+        self.scheduler.on_executor_lost(exec);
         if let Some(diff) = self.diffusion.as_mut() {
             diff.catalog.drop_site(exec);
         }
@@ -2034,6 +2077,63 @@ mod tests {
                 .any(|e| matches!(e, CacheEvent::Drop { site: 1, .. })),
             "killed executor dropped its cache entries"
         );
+    }
+
+    #[test]
+    fn static_scheduler_survives_executor_kill() {
+        // Satellite of the scheduler-trait PR, mirroring
+        // `executor_kill_cancels_in_flight_peer_transfer`: HEFT
+        // statically assigns every consumer to an executor; killing one
+        // mid-transfer must re-plan its tasks onto survivors (the
+        // runtime repair documented in DESIGN.md §9) instead of
+        // deadlocking on the dead resource.
+        const MB: u64 = 1024 * 1024;
+        let ds = crate::diffusion::DatasetRef { id: 3, bytes: 512 * MB };
+        let mut dag = Dag::new();
+        dag.push(SimTask::new("produce", 1.0).with_datasets(vec![], vec![ds]));
+        for _ in 0..4 {
+            dag.push(
+                SimTask::new("consume", 1.0)
+                    .with_deps(vec![0])
+                    .with_datasets(vec![ds], vec![]),
+            );
+        }
+        let mut topo = LinkTopology::shared_only(
+            4,
+            LinkSpec { bandwidth_bps: 50.0e6, latency: 30_000 },
+        );
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                topo.set_link(a, b, LinkSpec::gbit(1_000));
+            }
+        }
+        let o = Driver::new(dag, falkon_static(4), 13)
+            .with_scheduler(crate::sim::scheduler::by_name("heft").unwrap())
+            .with_shared_fs(SharedFs::gpfs_8())
+            .with_diffusion(DiffusionConfig {
+                capacity_bytes: 1 << 31,
+                links: Some(topo),
+                ..Default::default()
+            })
+            .with_faults(SimFaults {
+                kill_executors: vec![(secs(3.0), 1)],
+                ..Default::default()
+            })
+            .run();
+        assert_eq!(o.timeline.len(), 5, "every task completes despite the kill");
+        assert!(o.timeline.records.iter().all(|r| r.ok));
+        assert!(
+            o.cache_log
+                .iter()
+                .any(|e| matches!(e, CacheEvent::Drop { site: 1, .. })),
+            "killed executor dropped its cache entries"
+        );
+        // No record may land on the dead executor after the kill.
+        for r in &o.timeline.records {
+            if r.executor == 1 {
+                assert!(r.ended <= secs(3.0), "task finished on a dead executor");
+            }
+        }
     }
 
     #[test]

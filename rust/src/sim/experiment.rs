@@ -1,0 +1,218 @@
+//! The scheduler experiment matrix (DESIGN.md §9.4): every pluggable
+//! [`Scheduler`](super::scheduler::Scheduler) run over a grid of
+//! (workflow DAG × site system), each seeded cell reporting its virtual
+//! makespan against the [`lower_bound`] — the ratio is a
+//! scheduler-quality metric that is comparable across cells because the
+//! bound normalizes away DAG size and aggregate capacity.
+//!
+//! `benches/schedulers.rs` renders [`run_matrix`] as the summary table
+//! and emits the deterministic per-cell efficiencies
+//! (`sim_sched_{dag}_{sched}_efficiency`, higher is better) that
+//! `scripts/bench_trend.py` gates in CI.
+//!
+//! Site systems deliberately use a *fast* LRM variant (10 ms dispatch
+//! cycle, 50 ms job overhead) rather than the calibrated PBS/Condor
+//! models: the paper-calibrated pacing costs dominate makespan for
+//! every policy and would flatten the very differences the matrix
+//! exists to measure.
+
+use super::dag::Dag;
+use super::driver::{Driver, Mode};
+use super::lrm::{GramConfig, LrmConfig};
+use super::scheduler::{by_name, lower_bound, SystemView, SCHEDULERS};
+use crate::util::time::secs;
+use crate::util::DetRng;
+
+/// One experiment cell: a (dag × system × scheduler) run.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub dag: &'static str,
+    pub system: &'static str,
+    pub scheduler: &'static str,
+    pub tasks: usize,
+    pub makespan_secs: f64,
+    pub lower_bound_secs: f64,
+    /// `makespan / lower_bound` (>= 1 up to model pacing costs).
+    pub ratio: f64,
+    /// `lower_bound / makespan` — the gated, higher-is-better form.
+    pub efficiency: f64,
+}
+
+/// An LRM tuned so site pacing does not drown scheduler differences:
+/// 10 ms dispatch cycle, 50 ms per-job overhead, 2 processors per node,
+/// no whole-node allocation.
+pub fn fast_lrm(nodes: usize) -> LrmConfig {
+    LrmConfig {
+        name: "fast",
+        dispatch_interval: secs(0.01),
+        job_overhead: secs(0.05),
+        nodes,
+        procs_per_node: 2,
+        whole_node_alloc: false,
+    }
+}
+
+/// The standard site systems: a homogeneous pair and a heterogeneous
+/// pair (a small slow site next to a big fast one — the shape that
+/// separates rank-based schedulers from queue-length baselines).
+pub fn systems() -> Vec<(&'static str, Vec<(String, LrmConfig, f64)>)> {
+    vec![
+        (
+            "2-uniform",
+            vec![
+                ("site-a".to_string(), fast_lrm(8), 1.0),
+                ("site-b".to_string(), fast_lrm(8), 1.0),
+            ],
+        ),
+        (
+            "2-hetero",
+            vec![
+                ("small".to_string(), fast_lrm(4), 1.0),
+                ("big".to_string(), fast_lrm(16), 2.0),
+            ],
+        ),
+    ]
+}
+
+/// The standard workflow set, regenerated deterministically per call:
+/// a Table-1-shaped bag of independent tasks, the fMRI four-stage
+/// pipeline, and the Montage fan-in/fan-out structure.
+pub fn dags(quick: bool) -> Vec<(&'static str, Dag)> {
+    let mut rng = DetRng::new(0x0E57_A7E5);
+    vec![
+        ("bag", Dag::bag(if quick { 200 } else { 800 }, "t", 4.0)),
+        (
+            "fmri",
+            Dag::fmri(if quick { 16 } else { 64 }, [3.0, 3.0, 4.0, 4.0], &mut rng),
+        ),
+        (
+            "montage",
+            Dag::montage(
+                if quick { 40 } else { 160 },
+                if quick { 200 } else { 800 },
+                8,
+                &mut rng,
+            ),
+        ),
+    ]
+}
+
+/// Run one cell: the DAG on the given sites under the named scheduler.
+/// Same `seed` across schedulers ⇒ identical arrival jitter, so cells
+/// within a (dag × system) row are directly comparable.
+pub fn run_cell(
+    dag_name: &'static str,
+    dag: Dag,
+    system_name: &'static str,
+    sites: Vec<(String, LrmConfig, f64)>,
+    scheduler: &'static str,
+    seed: u64,
+) -> Cell {
+    let system = SystemView {
+        speeds: sites.iter().map(|s| s.2).collect(),
+        slots: sites.iter().map(|s| s.1.total_procs()).collect(),
+        links: None,
+    };
+    let lb = lower_bound(&dag, &system);
+    let tasks = dag.len();
+    let mode = Mode::MultiSite {
+        sites,
+        gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+    };
+    let o = Driver::new(dag, mode, seed)
+        .with_scheduler(by_name(scheduler).expect("scheduler name from SCHEDULERS"))
+        .run();
+    let mk = o.makespan_secs;
+    Cell {
+        dag: dag_name,
+        system: system_name,
+        scheduler,
+        tasks,
+        makespan_secs: mk,
+        lower_bound_secs: lb,
+        ratio: if lb > 1e-12 { mk / lb } else { 0.0 },
+        efficiency: if mk > 1e-12 { lb / mk } else { 0.0 },
+    }
+}
+
+/// The full (dag × system × scheduler) sweep. Deterministic: fixed DAG
+/// generation seed, fixed per-cell driver seed.
+pub fn run_matrix(quick: bool) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for (dag_name, dag) in dags(quick) {
+        for (system_name, sites) in systems() {
+            for &sched in SCHEDULERS {
+                cells.push(run_cell(
+                    dag_name,
+                    dag.clone(),
+                    system_name,
+                    sites.clone(),
+                    sched,
+                    0x5EED_0C31,
+                ));
+            }
+        }
+    }
+    cells
+}
+
+/// Render cells as an aligned text table (one row per cell).
+pub fn summary_table(cells: &[Cell]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<9} {:<10} {:<13} {:>6} {:>12} {:>10} {:>7} {:>6}\n",
+        "dag", "system", "scheduler", "tasks", "makespan_s", "bound_s", "ratio", "eff"
+    ));
+    for c in cells {
+        out.push_str(&format!(
+            "{:<9} {:<10} {:<13} {:>6} {:>12.2} {:>10.2} {:>7.3} {:>6.3}\n",
+            c.dag,
+            c.system,
+            c.scheduler,
+            c.tasks,
+            c.makespan_secs,
+            c.lower_bound_secs,
+            c.ratio,
+            c.efficiency
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_scheduler_completes_a_small_cell() {
+        let (_, sites) = systems().remove(0);
+        for &sched in SCHEDULERS {
+            let cell = run_cell(
+                "bag",
+                Dag::bag(24, "t", 1.0),
+                "2-uniform",
+                sites.clone(),
+                sched,
+                7,
+            );
+            assert_eq!(cell.tasks, 24);
+            assert!(
+                cell.makespan_secs + 1e-9 >= cell.lower_bound_secs,
+                "{sched}: makespan {} under bound {}",
+                cell.makespan_secs,
+                cell.lower_bound_secs
+            );
+            assert!(cell.efficiency > 0.0 && cell.efficiency <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn matrix_rows_are_deterministic() {
+        let a = run_matrix(true);
+        let b = run_matrix(true);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.makespan_secs.to_bits(), y.makespan_secs.to_bits());
+        }
+    }
+}

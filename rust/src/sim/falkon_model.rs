@@ -302,8 +302,22 @@ impl FalkonSim {
     /// task's inputs). Same serialized dispatcher accounting as
     /// [`FalkonSim::try_dispatch`].
     pub fn dispatch_to(&mut self, exec: usize, now: Micros) -> Option<(usize, usize, Micros)> {
+        self.dispatch_nth_to(0, exec, now)
+    }
+
+    /// Dispatch the `nth` queued task onto a specific idle executor —
+    /// list schedulers pull by plan priority, not queue order. `nth = 0`
+    /// is exactly the historical head dispatch (`VecDeque::remove(0)`
+    /// is `pop_front`). Same serialized dispatcher accounting as
+    /// [`FalkonSim::try_dispatch`].
+    pub fn dispatch_nth_to(
+        &mut self,
+        nth: usize,
+        exec: usize,
+        now: Micros,
+    ) -> Option<(usize, usize, Micros)> {
         debug_assert_eq!(self.executors[exec].state, ExecState::Idle);
-        let task = self.queue.pop_front()?;
+        let task = self.queue.remove(nth)?;
         let start = now.max(self.dispatcher_free_at) + self.cfg.dispatch_cost;
         self.dispatcher_free_at = start;
         self.idle.remove(&exec);

@@ -25,6 +25,15 @@
 //!   GRAM+clustering, Falkon, MPI gang), applying Karajan scheduling
 //!   policies (site scores, clustering window), and records a
 //!   [`crate::metrics::Timeline`].
+//! - [`scheduler`] — the pluggable DAG-scheduler boundary (DESIGN.md
+//!   §9): the [`Scheduler`] trait the driver consults for every site
+//!   placement and executor dispatch, the default [`scheduler::Adaptive`]
+//!   policy (score-proportional + locality routing, bit-identical to
+//!   the pre-trait driver), HEFT/PEFT/dynamic-list/baseline
+//!   alternatives, and the [`lower_bound`] makespan bound.
+//! - [`experiment`] — the (dag × system × scheduler) experiment matrix
+//!   behind `benches/schedulers.rs`: seeded cells reporting makespan
+//!   against [`lower_bound`].
 //!
 //! Sim-core layout (DESIGN.md §8): the event queue is a bucketed
 //! *calendar queue* (per-timestamp FIFO buckets over a ring of time
@@ -35,14 +44,17 @@
 
 pub mod dag;
 pub mod driver;
+pub mod experiment;
 pub mod falkon_model;
 pub mod lrm;
+pub mod scheduler;
 pub mod sharedfs;
 
 pub use dag::{Dag, SimTask, StageName};
 pub use driver::{Driver, Mode, SimFaults, SimOutcome};
 pub use falkon_model::{DrpPolicy, FalkonConfig, FalkonSim};
 pub use lrm::{GramConfig, LrmConfig, LrmSim};
+pub use scheduler::{by_name, lower_bound, Scheduler, SystemView, SCHEDULERS};
 pub use sharedfs::{PeerNet, SharedFs};
 
 use std::cmp::Reverse;

@@ -1,0 +1,996 @@
+//! Pluggable DAG schedulers (DESIGN.md §9).
+//!
+//! The [`Scheduler`] trait is the sim driver's placement boundary: it
+//! owns *which* pending task goes *where* — the multi-site site pick
+//! ([`Scheduler::place`]) and the Falkon executor pick
+//! ([`Scheduler::dispatch`]) — while the driver keeps everything
+//! stateful around it (queues, catalog bookkeeping, transfers, faults).
+//! [`Adaptive`] is the paper's policy (score-proportional pick +
+//! locality weighting) refactored behind the trait with bit-identical
+//! behavior; the rest are the classic list schedulers from the
+//! literature (HEFT, PEFT, dynamic list) plus trivial baselines, all
+//! driven through the same policy core so the experiment runner
+//! ([`crate::sim::experiment`]) can race them on equal footing.
+
+use crate::diffusion::{adaptive_route, DataCatalog, LinkTopology, LocalityRouter, TransferPlanner};
+use crate::policy::{SimClock, SiteScoreBoard};
+use crate::util::time::Micros;
+use crate::util::DetRng;
+
+use super::dag::Dag;
+use super::falkon_model::{ExecState, FalkonSim};
+
+/// A centrally-pending task (first attempt or retry).
+#[derive(Debug, Clone, Copy)]
+pub struct Pending {
+    pub task: usize,
+    /// Site of the previous failed attempt — a retry prefers a
+    /// different site, exactly like the threaded scheduler.
+    pub avoid: Option<usize>,
+}
+
+/// Static description of the resources a run will execute on, handed to
+/// [`Scheduler::prepare`] before the first event: per-resource relative
+/// speed and slot count (multi-site: sites × processors; Falkon: one
+/// slot per potential executor), plus the link topology when a transfer
+/// planner is configured.
+#[derive(Debug, Clone)]
+pub struct SystemView {
+    pub speeds: Vec<f64>,
+    pub slots: Vec<usize>,
+    pub links: Option<LinkTopology>,
+}
+
+/// Read-only diffusion state exposed to site picks.
+pub struct DiffView<'a> {
+    pub catalog: &'a DataCatalog,
+    pub router: &'a LocalityRouter,
+    pub planner: Option<&'a TransferPlanner>,
+}
+
+/// Everything a scheduler may observe when choosing a site for a
+/// pending multi-site task. `pending` is the central queue as the two
+/// `VecDeque` slices (front first); `headroom[i]` is the driver's
+/// score-windowed submission gate for site `i`.
+pub struct SiteChoice<'a> {
+    pub dag: &'a Dag,
+    pub pending: (&'a [Pending], &'a [Pending]),
+    pub board: &'a SiteScoreBoard<SimClock>,
+    pub headroom: &'a [bool],
+    pub outstanding: &'a [usize],
+    pub site_speed: &'a [f64],
+    pub site_procs: &'a [usize],
+    pub now: Micros,
+    pub diffusion: Option<DiffView<'a>>,
+}
+
+impl SiteChoice<'_> {
+    pub fn pending_len(&self) -> usize {
+        self.pending.0.len() + self.pending.1.len()
+    }
+
+    pub fn pending_at(&self, i: usize) -> &Pending {
+        if i < self.pending.0.len() {
+            &self.pending.0[i]
+        } else {
+            &self.pending.1[i - self.pending.0.len()]
+        }
+    }
+
+    pub fn pending_iter(&self) -> impl Iterator<Item = &Pending> {
+        self.pending.0.iter().chain(self.pending.1.iter())
+    }
+}
+
+/// Everything a scheduler may observe when choosing an executor for a
+/// queued Falkon task (the service queue and executor states live in
+/// `falkon`; `catalog` is present under data diffusion).
+pub struct ExecChoice<'a> {
+    pub dag: &'a Dag,
+    pub falkon: &'a FalkonSim,
+    pub catalog: Option<&'a DataCatalog>,
+    pub now: Micros,
+}
+
+/// A task-placement policy. Both hooks return `(queue index, resource)`
+/// — which entry of the pending/service queue to take and where to run
+/// it — or `None` to wait for state to change (a completion, an
+/// executor join). The driver performs the removal, catalog
+/// bookkeeping, staging, and submission; schedulers never mutate run
+/// state directly.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Called once before the first event with the DAG and the resource
+    /// shape — static schedulers compute their full assignment here.
+    fn prepare(&mut self, _dag: &Dag, _system: &SystemView) {}
+
+    /// Multi-site mode: pick `(pending index, site)`.
+    fn place(&mut self, c: &SiteChoice<'_>, rng: &mut DetRng) -> Option<(usize, usize)>;
+
+    /// Falkon mode: pick `(queue index, executor)`. The executor must
+    /// be idle.
+    fn dispatch(&mut self, c: &ExecChoice<'_>, rng: &mut DetRng) -> Option<(usize, usize)>;
+
+    /// An executor was killed: static plans must stop waiting for it.
+    fn on_executor_lost(&mut self, _exec: usize) {}
+}
+
+/// Critical-path / area lower bound on the makespan of `dag` over
+/// `system`, in seconds: no schedule beats the longest dependency chain
+/// on the fastest resource, nor the total work spread over every slot
+/// (DESIGN.md §9). Transfer costs are ignored, so the bound stays valid
+/// for every scheduler and data placement.
+pub fn lower_bound(dag: &Dag, system: &SystemView) -> f64 {
+    if dag.is_empty() {
+        return 0.0;
+    }
+    let max_speed = system
+        .speeds
+        .iter()
+        .cloned()
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    let agg: f64 = system
+        .speeds
+        .iter()
+        .zip(&system.slots)
+        .map(|(s, &k)| s * k as f64)
+        .sum();
+    let cp = dag.critical_path_secs() / max_speed;
+    let area = dag.total_service_secs() / agg.max(1e-12);
+    cp.max(area)
+}
+
+// ----------------------------------------------------------------------
+// List-scheduling machinery (HEFT / PEFT)
+// ----------------------------------------------------------------------
+
+/// One dependency edge as the list schedulers see it.
+#[derive(Debug, Clone, Copy)]
+pub struct Edge {
+    pub other: usize,
+    /// Resource-independent mean transfer cost (seconds) — used when no
+    /// link topology is attached (the literature's uniform-comm model).
+    pub mean_cost: f64,
+    /// Bytes crossing the edge — priced per resource pair through the
+    /// link topology when one is attached.
+    pub bytes: u64,
+}
+
+/// The static cost model HEFT/PEFT rank and schedule against: per-task
+/// per-processor computation times plus the dependency edges. A
+/// "processor" here is one slot lane; `group` maps lanes back to sites
+/// (same site → zero transfer cost; the link topology is indexed by
+/// site).
+pub struct ListModel {
+    comp: Vec<Vec<f64>>,
+    succ: Vec<Vec<Edge>>,
+    pred: Vec<Vec<Edge>>,
+    links: Option<LinkTopology>,
+    group: Vec<usize>,
+}
+
+/// A complete static schedule: task order, per-task lane assignment and
+/// start/finish times (seconds), and the resulting makespan.
+#[derive(Debug, Clone)]
+pub struct ListSchedule {
+    pub order: Vec<usize>,
+    pub assign: Vec<usize>,
+    pub start: Vec<f64>,
+    pub finish: Vec<f64>,
+    pub makespan: f64,
+}
+
+impl ListModel {
+    /// Literature-style model: explicit computation matrix
+    /// `comp[task][proc]` and uniform (resource-independent) edge costs
+    /// `(src, dst, cost)`.
+    pub fn with_uniform_comm(comp: Vec<Vec<f64>>, edges: &[(usize, usize, f64)]) -> Self {
+        let n = comp.len();
+        let r = comp.first().map(|c| c.len()).unwrap_or(0);
+        let mut succ = vec![Vec::new(); n];
+        let mut pred = vec![Vec::new(); n];
+        for &(s, d, cost) in edges {
+            succ[s].push(Edge { other: d, mean_cost: cost, bytes: 0 });
+            pred[d].push(Edge { other: s, mean_cost: cost, bytes: 0 });
+        }
+        Self { comp, succ, pred, links: None, group: (0..r).collect() }
+    }
+
+    /// Model a [`Dag`] over a [`SystemView`]: one lane per slot,
+    /// `comp = service / speed`, edge bytes from the tasks' declared
+    /// datasets ([`Dag::edge_bytes`]). Without links, transfers are
+    /// free (the homogeneous shared-FS-in-service-time model).
+    pub fn from_dag(dag: &Dag, system: &SystemView) -> Self {
+        let mut group = Vec::new();
+        let mut speed = Vec::new();
+        for (site, (&sp, &sl)) in system.speeds.iter().zip(&system.slots).enumerate() {
+            for _ in 0..sl.max(1) {
+                group.push(site);
+                speed.push(sp.max(1e-9));
+            }
+        }
+        if group.is_empty() {
+            group.push(0);
+            speed.push(1.0);
+        }
+        let n = dag.len();
+        let mut comp = Vec::with_capacity(n);
+        let mut succ = vec![Vec::new(); n];
+        let mut pred = vec![Vec::new(); n];
+        for (t, task) in dag.tasks.iter().enumerate() {
+            let svc = task.service as f64 / 1e6;
+            comp.push(speed.iter().map(|s| svc / s).collect());
+            for &d in &task.deps {
+                let bytes = dag.edge_bytes(d, t);
+                succ[d].push(Edge { other: t, mean_cost: 0.0, bytes });
+                pred[t].push(Edge { other: d, mean_cost: 0.0, bytes });
+            }
+        }
+        Self { comp, succ, pred, links: system.links.clone(), group }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.group.len()
+    }
+
+    /// The site a lane belongs to.
+    pub fn site_of(&self, lane: usize) -> usize {
+        self.group[lane]
+    }
+
+    /// Transfer cost (seconds) of `e` between two lanes: zero within a
+    /// site; otherwise the link topology's estimate (falling back to
+    /// its shared-FS spec for unlinked pairs), or the uniform mean
+    /// cost without a topology.
+    fn pair_cost(&self, e: &Edge, from: usize, to: usize) -> f64 {
+        let (gf, gt) = (self.group[from], self.group[to]);
+        if gf == gt {
+            return 0.0;
+        }
+        match &self.links {
+            Some(t) => {
+                let spec = t.link(gf, gt).unwrap_or_else(|| t.shared_fs());
+                spec.transfer_us(e.bytes) as f64 / 1e6
+            }
+            None => e.mean_cost,
+        }
+    }
+
+    /// Mean transfer cost of `e` across distinct lane pairs (the
+    /// ranking term; equals `mean_cost` in the uniform model).
+    fn mean_comm(&self, e: &Edge) -> f64 {
+        match &self.links {
+            None => e.mean_cost,
+            Some(_) => {
+                let r = self.group.len();
+                if r < 2 {
+                    return 0.0;
+                }
+                let mut sum = 0.0;
+                for p in 0..r {
+                    for q in 0..r {
+                        if p != q {
+                            sum += self.pair_cost(e, p, q);
+                        }
+                    }
+                }
+                sum / (r * (r - 1)) as f64
+            }
+        }
+    }
+
+    /// Topcuoglu's upward rank: mean computation plus the heaviest
+    /// (mean-comm + rank) successor path.
+    pub fn upward_ranks(&self) -> Vec<f64> {
+        let n = self.comp.len();
+        let lanes = self.group.len() as f64;
+        let mut rank = vec![0.0f64; n];
+        for t in (0..n).rev() {
+            let w = self.comp[t].iter().sum::<f64>() / lanes;
+            let mut tail = 0.0f64;
+            for e in &self.succ[t] {
+                let v = self.mean_comm(e) + rank[e.other];
+                if v > tail {
+                    tail = v;
+                }
+            }
+            rank[t] = w + tail;
+        }
+        rank
+    }
+
+    /// PEFT's optimistic-cost table: `oct[t][p]` is the best-case cost
+    /// to finish everything after `t` if `t` runs on lane `p`.
+    pub fn oct(&self) -> Vec<Vec<f64>> {
+        let n = self.comp.len();
+        let r = self.group.len();
+        let mut oct = vec![vec![0.0f64; r]; n];
+        for t in (0..n).rev() {
+            for p in 0..r {
+                let mut worst = 0.0f64;
+                for e in &self.succ[t] {
+                    let mut best = f64::INFINITY;
+                    for q in 0..r {
+                        let v = oct[e.other][q]
+                            + self.comp[e.other][q]
+                            + self.pair_cost(e, p, q);
+                        if v < best {
+                            best = v;
+                        }
+                    }
+                    if best > worst {
+                        worst = best;
+                    }
+                }
+                oct[t][p] = worst;
+            }
+        }
+        oct
+    }
+
+    /// PEFT's priority: the per-task mean of the OCT row.
+    pub fn oct_ranks(&self) -> Vec<f64> {
+        Self::oct_rank_of(&self.oct())
+    }
+
+    fn oct_rank_of(oct: &[Vec<f64>]) -> Vec<f64> {
+        oct.iter()
+            .map(|row| row.iter().sum::<f64>() / row.len().max(1) as f64)
+            .collect()
+    }
+
+    /// Insertion-based HEFT.
+    pub fn heft(&self) -> ListSchedule {
+        self.schedule(&self.upward_ranks(), None)
+    }
+
+    /// PEFT: OCT ranks for ordering, `EFT + OCT` for lane choice.
+    pub fn peft(&self) -> ListSchedule {
+        let oct = self.oct();
+        let ranks = Self::oct_rank_of(&oct);
+        self.schedule(&ranks, Some(&oct))
+    }
+
+    /// List-schedule by descending `priority` (among ready tasks, so
+    /// any priority vector stays dependency-safe) with insertion-based
+    /// earliest-finish lane choice; `oct` switches the objective to
+    /// PEFT's `EFT + OCT`.
+    fn schedule(&self, priority: &[f64], oct: Option<&[Vec<f64>]>) -> ListSchedule {
+        let n = self.comp.len();
+        let r = self.group.len();
+        let mut indeg: Vec<usize> = (0..n).map(|t| self.pred[t].len()).collect();
+        let mut scheduled = vec![false; n];
+        let mut assign = vec![0usize; n];
+        let mut start = vec![0.0f64; n];
+        let mut finish = vec![0.0f64; n];
+        let mut busy: Vec<Vec<(f64, f64)>> = vec![Vec::new(); r];
+        let mut order = Vec::with_capacity(n);
+        while order.len() < n {
+            // Highest-priority ready task (lowest index on ties).
+            let mut pick: Option<(usize, f64)> = None;
+            for t in 0..n {
+                if scheduled[t] || indeg[t] > 0 {
+                    continue;
+                }
+                let pr = priority[t];
+                let better = match pick {
+                    None => true,
+                    Some((_, pp)) => pr > pp,
+                };
+                if better {
+                    pick = Some((t, pr));
+                }
+            }
+            let (t, _) = pick.expect("a valid DAG always has a ready task");
+            let mut best: Option<(usize, f64, f64, f64)> = None; // lane, obj, st, ft
+            for p in 0..r {
+                let mut ready = 0.0f64;
+                for e in &self.pred[t] {
+                    let v = finish[e.other] + self.pair_cost(e, assign[e.other], p);
+                    if v > ready {
+                        ready = v;
+                    }
+                }
+                let len = self.comp[t][p];
+                let st = earliest_slot(&busy[p], ready, len);
+                let ft = st + len;
+                let obj = match oct {
+                    Some(o) => ft + o[t][p],
+                    None => ft,
+                };
+                let better = match best {
+                    None => true,
+                    Some((_, bo, _, _)) => obj < bo,
+                };
+                if better {
+                    best = Some((p, obj, st, ft));
+                }
+            }
+            let (p, _, st, ft) = best.expect("at least one lane");
+            assign[t] = p;
+            start[t] = st;
+            finish[t] = ft;
+            let pos = busy[p].partition_point(|&(s, _)| s < st);
+            busy[p].insert(pos, (st, ft));
+            scheduled[t] = true;
+            order.push(t);
+            for e in &self.succ[t] {
+                indeg[e.other] -= 1;
+            }
+        }
+        let makespan = finish.iter().cloned().fold(0.0, f64::max);
+        ListSchedule { order, assign, start, finish, makespan }
+    }
+}
+
+/// Earliest start ≥ `ready` where a `len`-long interval fits into the
+/// sorted busy list (insertion policy: gaps count).
+fn earliest_slot(busy: &[(f64, f64)], ready: f64, len: f64) -> f64 {
+    let mut t = ready;
+    for &(s, e) in busy {
+        if t + len <= s + 1e-12 {
+            return t;
+        }
+        if e > t {
+            t = e;
+        }
+    }
+    t
+}
+
+// ----------------------------------------------------------------------
+// Scheduler implementations
+// ----------------------------------------------------------------------
+
+/// The paper's adaptive policy behind the trait: score-proportional
+/// site pick with locality weighting under diffusion (multi-site), and
+/// most-cached-bytes idle executor for the queue head (Falkon). Head-of
+/// -line, one RNG draw per successful pick — bit-identical to the
+/// pre-trait driver (pinned by `scheduler_trait_is_bit_identical`).
+pub struct Adaptive;
+
+impl Scheduler for Adaptive {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn place(&mut self, c: &SiteChoice<'_>, rng: &mut DetRng) -> Option<(usize, usize)> {
+        if c.pending_len() == 0 {
+            return None;
+        }
+        let head = c.pending_at(0);
+        let inputs = &c.dag.tasks[head.task].input_datasets;
+        let site = adaptive_route(
+            c.board,
+            c.diffusion.as_ref().map(|d| (d.catalog, d.router, d.planner)),
+            inputs,
+            head.avoid,
+            c.now,
+            rng,
+            |i| c.headroom[i],
+        )?;
+        Some((0, site))
+    }
+
+    fn dispatch(&mut self, c: &ExecChoice<'_>, _rng: &mut DetRng) -> Option<(usize, usize)> {
+        let head = *c.falkon.queue.front()?;
+        let exec = match c.catalog {
+            // Most cached input bytes, lowest index on ties — which
+            // degenerates to the plain first-idle pick when nothing is
+            // cached.
+            Some(cat) => {
+                let inputs = &c.dag.tasks[head].input_datasets;
+                c.falkon
+                    .idle_execs()
+                    .map(|i| (i, cat.cached_bytes(i, inputs)))
+                    .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+                    .map(|(i, _)| i)?
+            }
+            None => c.falkon.idle_executor()?,
+        };
+        Some((0, exec))
+    }
+}
+
+/// Shared state of the static list schedulers: the offline plan plus
+/// the runtime repair set (executors observed dead).
+#[derive(Default)]
+struct StaticAssign {
+    rank: Vec<f64>,
+    assign: Vec<usize>,
+    dead: Vec<bool>,
+}
+
+impl StaticAssign {
+    fn prepare(&mut self, dag: &Dag, system: &SystemView, peft: bool) {
+        let model = ListModel::from_dag(dag, system);
+        let (rank, sched) = if peft {
+            (model.oct_ranks(), model.peft())
+        } else {
+            (model.upward_ranks(), model.heft())
+        };
+        self.rank = rank;
+        self.assign = sched.assign.iter().map(|&p| model.site_of(p)).collect();
+        self.dead = vec![false; system.speeds.len()];
+    }
+
+    /// Static placement ignores `avoid` and suspension: the plan is the
+    /// plan — bounded only by window headroom and the retry budget
+    /// (DESIGN.md §9).
+    fn place(&mut self, c: &SiteChoice<'_>) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize, f64)> = None;
+        for (i, p) in c.pending_iter().enumerate() {
+            let assigned = self.assign.get(p.task).copied().unwrap_or(0);
+            let site = if assigned < c.headroom.len() { assigned } else { 0 };
+            if !c.headroom.get(site).copied().unwrap_or(false) {
+                continue;
+            }
+            let r = self.rank.get(p.task).copied().unwrap_or(0.0);
+            let better = match best {
+                None => true,
+                Some((_, _, br)) => r > br,
+            };
+            if better {
+                best = Some((i, site, r));
+            }
+        }
+        best.map(|(i, s, _)| (i, s))
+    }
+
+    fn dispatch(&mut self, c: &ExecChoice<'_>) -> Option<(usize, usize)> {
+        let f = c.falkon;
+        let mut best: Option<(usize, usize, f64)> = None;
+        for (i, &task) in f.queue.iter().enumerate() {
+            let a = self.assign.get(task).copied().unwrap_or(usize::MAX);
+            let alive = a < f.executors.len()
+                && !self.dead.get(a).copied().unwrap_or(false)
+                && f.executors[a].state != ExecState::Deregistered;
+            let exec = if alive {
+                match f.executors[a].state {
+                    ExecState::Idle => a,
+                    // Mid-task on its planned executor: hold the slot.
+                    _ => continue,
+                }
+            } else {
+                // The planned executor never registered or died:
+                // re-plan onto the lowest idle survivor rather than
+                // deadlocking on a resource that may never appear.
+                match f.idle_executor() {
+                    Some(e) => e,
+                    None => continue,
+                }
+            };
+            let r = self.rank.get(task).copied().unwrap_or(0.0);
+            let better = match best {
+                None => true,
+                Some((_, _, br)) => r > br,
+            };
+            if better {
+                best = Some((i, exec, r));
+            }
+        }
+        let (i, exec, _) = best?;
+        // Remember a repair so retries of the same task stay put.
+        if let Some(&task) = f.queue.get(i) {
+            if task < self.assign.len() {
+                self.assign[task] = exec;
+            }
+        }
+        Some((i, exec))
+    }
+
+    fn lost(&mut self, exec: usize) {
+        if exec >= self.dead.len() {
+            self.dead.resize(exec + 1, false);
+        }
+        self.dead[exec] = true;
+    }
+}
+
+/// Insertion-based HEFT (Topcuoglu 2002) as a static plan, re-planned
+/// per-executor on failures.
+#[derive(Default)]
+pub struct Heft {
+    plan: StaticAssign,
+}
+
+impl Scheduler for Heft {
+    fn name(&self) -> &'static str {
+        "heft"
+    }
+
+    fn prepare(&mut self, dag: &Dag, system: &SystemView) {
+        self.plan.prepare(dag, system, false);
+    }
+
+    fn place(&mut self, c: &SiteChoice<'_>, _rng: &mut DetRng) -> Option<(usize, usize)> {
+        self.plan.place(c)
+    }
+
+    fn dispatch(&mut self, c: &ExecChoice<'_>, _rng: &mut DetRng) -> Option<(usize, usize)> {
+        self.plan.dispatch(c)
+    }
+
+    fn on_executor_lost(&mut self, exec: usize) {
+        self.plan.lost(exec);
+    }
+}
+
+/// PEFT (Arabnejad & Barbosa 2014): OCT-ranked static plan, same
+/// runtime repair as [`Heft`].
+#[derive(Default)]
+pub struct Peft {
+    plan: StaticAssign,
+}
+
+impl Scheduler for Peft {
+    fn name(&self) -> &'static str {
+        "peft"
+    }
+
+    fn prepare(&mut self, dag: &Dag, system: &SystemView) {
+        self.plan.prepare(dag, system, true);
+    }
+
+    fn place(&mut self, c: &SiteChoice<'_>, _rng: &mut DetRng) -> Option<(usize, usize)> {
+        self.plan.place(c)
+    }
+
+    fn dispatch(&mut self, c: &ExecChoice<'_>, _rng: &mut DetRng) -> Option<(usize, usize)> {
+        self.plan.dispatch(c)
+    }
+
+    fn on_executor_lost(&mut self, exec: usize) {
+        self.plan.lost(exec);
+    }
+}
+
+/// Dynamic list scheduling: upward-rank task order decided offline, the
+/// resource decided at runtime — least estimated load per unit of
+/// capacity (multi-site) or lowest idle executor (Falkon).
+#[derive(Default)]
+pub struct DynamicList {
+    rank: Vec<f64>,
+}
+
+impl Scheduler for DynamicList {
+    fn name(&self) -> &'static str {
+        "dynamic-list"
+    }
+
+    fn prepare(&mut self, dag: &Dag, system: &SystemView) {
+        self.rank = ListModel::from_dag(dag, system).upward_ranks();
+    }
+
+    fn place(&mut self, c: &SiteChoice<'_>, _rng: &mut DetRng) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, p) in c.pending_iter().enumerate() {
+            let r = self.rank.get(p.task).copied().unwrap_or(0.0);
+            let better = match best {
+                None => true,
+                Some((_, br)) => r > br,
+            };
+            if better {
+                best = Some((i, r));
+            }
+        }
+        let (nth, _) = best?;
+        let avoid = c.pending_at(nth).avoid;
+        let site = least_loaded_site(c, avoid)?;
+        Some((nth, site))
+    }
+
+    fn dispatch(&mut self, c: &ExecChoice<'_>, _rng: &mut DetRng) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, &task) in c.falkon.queue.iter().enumerate() {
+            let r = self.rank.get(task).copied().unwrap_or(0.0);
+            let better = match best {
+                None => true,
+                Some((_, br)) => r > br,
+            };
+            if better {
+                best = Some((i, r));
+            }
+        }
+        let (nth, _) = best?;
+        Some((nth, c.falkon.idle_executor()?))
+    }
+}
+
+/// Least estimated finish-load site with headroom: `(outstanding + 1) /
+/// (speed × procs)`, avoiding `avoid` unless it is the only option.
+fn least_loaded_site(c: &SiteChoice<'_>, avoid: Option<usize>) -> Option<usize> {
+    fn pick(c: &SiteChoice<'_>, avoid: Option<usize>) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, &open) in c.headroom.iter().enumerate() {
+            if !open || Some(i) == avoid {
+                continue;
+            }
+            let cap = (c.site_speed[i] * c.site_procs[i] as f64).max(1e-9);
+            let v = (c.outstanding[i] as f64 + 1.0) / cap;
+            let better = match best {
+                None => true,
+                Some((_, bv)) => v < bv,
+            };
+            if better {
+                best = Some((i, v));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+    pick(c, avoid).or_else(|| pick(c, None))
+}
+
+/// Baseline: head-of-line task to the site with the fewest outstanding
+/// jobs (or the lowest idle executor).
+pub struct MinQueue;
+
+impl Scheduler for MinQueue {
+    fn name(&self) -> &'static str {
+        "min-queue"
+    }
+
+    fn place(&mut self, c: &SiteChoice<'_>, _rng: &mut DetRng) -> Option<(usize, usize)> {
+        if c.pending_len() == 0 {
+            return None;
+        }
+        let avoid = c.pending_at(0).avoid;
+        fn pick(c: &SiteChoice<'_>, avoid: Option<usize>) -> Option<usize> {
+            let mut best: Option<(usize, usize)> = None;
+            for (i, &open) in c.headroom.iter().enumerate() {
+                if !open || Some(i) == avoid {
+                    continue;
+                }
+                let v = c.outstanding[i];
+                let better = match best {
+                    None => true,
+                    Some((_, bv)) => v < bv,
+                };
+                if better {
+                    best = Some((i, v));
+                }
+            }
+            best.map(|(i, _)| i)
+        }
+        let site = pick(c, avoid).or_else(|| pick(c, None))?;
+        Some((0, site))
+    }
+
+    fn dispatch(&mut self, c: &ExecChoice<'_>, _rng: &mut DetRng) -> Option<(usize, usize)> {
+        if c.falkon.queue.is_empty() {
+            return None;
+        }
+        Some((0, c.falkon.idle_executor()?))
+    }
+}
+
+/// Baseline: rotate head-of-line tasks across sites/executors.
+#[derive(Default)]
+pub struct RoundRobin {
+    site: usize,
+    exec: usize,
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn place(&mut self, c: &SiteChoice<'_>, _rng: &mut DetRng) -> Option<(usize, usize)> {
+        if c.pending_len() == 0 {
+            return None;
+        }
+        let avoid = c.pending_at(0).avoid;
+        let n = c.headroom.len();
+        if n == 0 {
+            return None;
+        }
+        let mut fallback = None;
+        let mut chosen = None;
+        for k in 1..=n {
+            let i = (self.site + k) % n;
+            if !c.headroom[i] {
+                continue;
+            }
+            if Some(i) == avoid {
+                fallback.get_or_insert(i);
+                continue;
+            }
+            chosen = Some(i);
+            break;
+        }
+        let site = chosen.or(fallback)?;
+        self.site = site;
+        Some((0, site))
+    }
+
+    fn dispatch(&mut self, c: &ExecChoice<'_>, _rng: &mut DetRng) -> Option<(usize, usize)> {
+        if c.falkon.queue.is_empty() {
+            return None;
+        }
+        let m = c.falkon.executors.len();
+        if m == 0 {
+            return None;
+        }
+        for k in 1..=m {
+            let i = (self.exec + k) % m;
+            if c.falkon.executors[i].state == ExecState::Idle {
+                self.exec = i;
+                return Some((0, i));
+            }
+        }
+        None
+    }
+}
+
+/// Every built-in scheduler name, in experiment-matrix order.
+pub const SCHEDULERS: &[&str] =
+    &["adaptive", "heft", "peft", "dynamic-list", "min-queue", "round-robin"];
+
+/// Look a scheduler up by its [`Scheduler::name`].
+pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+    Some(match name {
+        "adaptive" => Box::new(Adaptive),
+        "heft" => Box::new(Heft::default()),
+        "peft" => Box::new(Peft::default()),
+        "dynamic-list" => Box::new(DynamicList::default()),
+        "min-queue" => Box::new(MinQueue),
+        "round-robin" => Box::new(RoundRobin::default()),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diffusion::{DatasetRef, LinkSpec};
+    use crate::sim::SimTask;
+
+    /// The classic 10-task, 3-processor example from Topcuoglu et al.
+    /// 2002 (Fig. 2 / Table 2).
+    fn topcuoglu() -> ListModel {
+        let comp = vec![
+            vec![14.0, 16.0, 9.0],
+            vec![13.0, 19.0, 18.0],
+            vec![11.0, 13.0, 19.0],
+            vec![13.0, 8.0, 17.0],
+            vec![12.0, 13.0, 10.0],
+            vec![13.0, 16.0, 9.0],
+            vec![7.0, 15.0, 11.0],
+            vec![5.0, 11.0, 14.0],
+            vec![18.0, 12.0, 20.0],
+            vec![21.0, 7.0, 16.0],
+        ];
+        let edges = [
+            (0, 1, 18.0),
+            (0, 2, 12.0),
+            (0, 3, 9.0),
+            (0, 4, 11.0),
+            (0, 5, 14.0),
+            (1, 7, 19.0),
+            (1, 8, 16.0),
+            (2, 6, 23.0),
+            (3, 7, 27.0),
+            (3, 8, 23.0),
+            (4, 8, 13.0),
+            (5, 7, 15.0),
+            (6, 9, 17.0),
+            (7, 9, 11.0),
+            (8, 9, 13.0),
+        ];
+        ListModel::with_uniform_comm(comp, &edges)
+    }
+
+    #[test]
+    fn heft_ranks_match_topcuoglu_table() {
+        let published = [
+            108.000, 77.000, 80.000, 80.000, 69.000, 63.333, 42.667, 35.667, 44.333, 14.667,
+        ];
+        let ranks = topcuoglu().upward_ranks();
+        for (i, (&got, &want)) in ranks.iter().zip(&published).enumerate() {
+            assert!((got - want).abs() < 1e-2, "rank[{i}] = {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn heft_schedule_matches_topcuoglu_example() {
+        let s = topcuoglu().heft();
+        // Rank order starts at the entry task; tasks 2 and 3 tie at
+        // rank 80 (float rounding decides), and either order converges
+        // to the published schedule.
+        assert_eq!(s.order[0], 0);
+        let mut tie = [s.order[1], s.order[2]];
+        tie.sort_unstable();
+        assert_eq!(tie, [2, 3]);
+        assert_eq!(s.assign, vec![2, 0, 2, 1, 2, 1, 2, 0, 1, 1]);
+        assert!((s.makespan - 80.0).abs() < 1e-9, "makespan {}", s.makespan);
+    }
+
+    #[test]
+    fn peft_oct_table_hand_example() {
+        // Two lanes; t0 feeds t1 (cost 1) and t2 (cost 2).
+        let comp = vec![vec![2.0, 3.0], vec![4.0, 2.0], vec![3.0, 5.0]];
+        let edges = [(0, 1, 1.0), (0, 2, 2.0)];
+        let m = ListModel::with_uniform_comm(comp, &edges);
+        let oct = m.oct();
+        assert_eq!(oct[1], vec![0.0, 0.0]);
+        assert_eq!(oct[2], vec![0.0, 0.0]);
+        assert!((oct[0][0] - 3.0).abs() < 1e-12, "{:?}", oct[0]);
+        assert!((oct[0][1] - 5.0).abs() < 1e-12, "{:?}", oct[0]);
+        let ranks = m.oct_ranks();
+        assert!((ranks[0] - 4.0).abs() < 1e-12);
+        // PEFT schedules the whole example without panicking and
+        // respects dependencies.
+        let s = m.peft();
+        assert_eq!(s.order[0], 0);
+        assert!(s.finish[1] >= s.start[1]);
+        assert!(s.start[1] >= s.finish[0] - 1e-12 || s.assign[1] == s.assign[0]);
+    }
+
+    #[test]
+    fn nonuniform_links_shift_heft_assignment() {
+        const MB: u64 = 1024 * 1024;
+        let ds = DatasetRef { id: 1, bytes: 100 * MB };
+        let mk = || {
+            let mut dag = Dag::new();
+            dag.push(SimTask::new("produce", 1.0).with_datasets(vec![], vec![ds]));
+            for _ in 0..2 {
+                dag.push(
+                    SimTask::new("consume", 1.0)
+                        .with_deps(vec![0])
+                        .with_datasets(vec![ds], vec![]),
+                );
+            }
+            dag
+        };
+        let system = |links: LinkTopology| SystemView {
+            speeds: vec![1.0, 2.0, 2.0],
+            slots: vec![1, 1, 1],
+            links: Some(links),
+        };
+        // Slow everywhere: both consumers pile onto the producer's lane.
+        let slow = ListModel::from_dag(&mk(), &system(LinkTopology::shared_only(
+            3,
+            LinkSpec::gbit(30_000),
+        )))
+        .heft();
+        assert_eq!(slow.assign[1], slow.assign[0]);
+        assert_eq!(slow.assign[2], slow.assign[0]);
+        // A fast 1↔2 link makes shipping one consumer cheaper than
+        // serializing both locally: the consumers split lanes and the
+        // makespan drops.
+        let mut topo = LinkTopology::shared_only(3, LinkSpec::gbit(30_000));
+        topo.set_link(1, 2, LinkSpec::tengbit(1_000));
+        let fast = ListModel::from_dag(&mk(), &system(topo)).heft();
+        assert_ne!(fast.assign[1], fast.assign[2], "{:?}", fast.assign);
+        assert!(
+            fast.makespan < slow.makespan,
+            "fast {} vs slow {}",
+            fast.makespan,
+            slow.makespan
+        );
+    }
+
+    #[test]
+    fn lower_bound_is_critical_path_or_area() {
+        let sys = SystemView { speeds: vec![1.0, 1.0], slots: vec![2, 2], links: None };
+        // Serial chain: the critical path dominates.
+        let chain = Dag::chain(4, "t", 1.0);
+        assert!((lower_bound(&chain, &sys) - 4.0).abs() < 1e-9);
+        // Wide bag: the area bound dominates.
+        let bag = Dag::bag(8, "t", 1.0);
+        assert!((lower_bound(&bag, &sys) - 2.0).abs() < 1e-9);
+        assert_eq!(lower_bound(&Dag::new(), &sys), 0.0);
+    }
+
+    #[test]
+    fn by_name_covers_every_listed_scheduler() {
+        for name in SCHEDULERS {
+            let s = by_name(name).expect("listed scheduler resolves");
+            assert_eq!(&s.name(), name);
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

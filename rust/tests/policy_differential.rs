@@ -32,8 +32,9 @@ use gridswift::diffusion::{
 use gridswift::karajan::{FaultPolicy, GridScheduler};
 use gridswift::policy::ScoreConfig;
 use gridswift::providers::{AppTask, BundleDone, Provider, TaskDone, TaskResult};
-use gridswift::sim::driver::{Driver, Mode, SimFaults};
+use gridswift::sim::driver::{Driver, Mode, SimFaults, SimOutcome};
 use gridswift::sim::lrm::{GramConfig, LrmConfig};
+use gridswift::sim::scheduler::by_name;
 use gridswift::sim::{Dag, SimTask};
 use gridswift::util::time::secs;
 use gridswift::util::DetRng;
@@ -581,6 +582,121 @@ fn cache_trajectories_are_seed_determined() {
     assert_eq!(s1, s2);
     let (_, l3, _) = sim_catalog_run(n, 12, &plan);
     assert_ne!(l1, l3, "different seeds must route (and cache) differently");
+}
+
+// ---------------------------------------------------------------------
+// Scheduler-trait differential (the pluggable-scheduler boundary)
+// ---------------------------------------------------------------------
+
+/// The dataset chain used by the catalog differentials, as a sim DAG.
+fn ds_chain_dag(n: usize) -> Dag {
+    let mut dag = Dag::new();
+    for i in 0..n {
+        let deps = if i == 0 { vec![] } else { vec![i - 1] };
+        let input = DatasetRef {
+            id: dataset_id_for_path(Path::new(&format!("ds/{i}"))),
+            bytes: DS_BYTES,
+        };
+        let output = DatasetRef {
+            id: dataset_id_for_path(Path::new(&format!("ds/{}", i + 1))),
+            bytes: DS_BYTES,
+        };
+        dag.push(
+            SimTask::new("t", 1.0)
+                .with_deps(deps)
+                .with_datasets(vec![input], vec![output]),
+        );
+    }
+    dag
+}
+
+/// One seeded sim run over the dataset chain, with or without an
+/// explicit `Adaptive` scheduler plugged through the trait boundary.
+fn adaptive_variant_run(
+    explicit: bool,
+    faults: bool,
+    diffusion: Option<DiffusionConfig>,
+    seed: u64,
+) -> SimOutcome {
+    let n = 32;
+    let sites = vec![
+        ("a".to_string(), LrmConfig::pbs(4), 1.0),
+        ("b".to_string(), LrmConfig::pbs(4), 1.0),
+    ];
+    let mode = Mode::MultiSite {
+        sites,
+        gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+    };
+    let mut d = Driver::new(ds_chain_dag(n), mode, seed).with_score_policy(
+        ScoreConfig { suspend_after_failures: 3, ..ScoreConfig::default() },
+        secs(1e9),
+    );
+    if faults {
+        d = d.with_faults(SimFaults {
+            fail_first_attempts: fault_plan(n, 0xFA17),
+            retries: 1,
+            ..Default::default()
+        });
+    }
+    if let Some(cfg) = diffusion {
+        d = d.with_diffusion(cfg);
+    }
+    if explicit {
+        d = d.with_scheduler(by_name("adaptive").expect("adaptive exists"));
+    }
+    let o = d.run();
+    assert_eq!(o.timeline.len(), n);
+    o
+}
+
+fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome, label: &str) {
+    assert_eq!(
+        a.makespan_secs.to_bits(),
+        b.makespan_secs.to_bits(),
+        "{label}: makespans diverge ({} vs {})",
+        a.makespan_secs,
+        b.makespan_secs
+    );
+    assert_eq!(a.score_trace, b.score_trace, "{label}: score trajectories");
+    assert_eq!(a.site_suspended, b.site_suspended, "{label}: suspensions");
+    assert_eq!(a.cache_log, b.cache_log, "{label}: catalog event logs");
+    assert_eq!(a.cache_stats, b.cache_stats, "{label}: catalog counters");
+    assert_eq!(a.transfer_log, b.transfer_log, "{label}: transfer plans");
+    assert_eq!(a.timeline.len(), b.timeline.len(), "{label}: record counts");
+    for (i, (x, y)) in
+        a.timeline.records.iter().zip(&b.timeline.records).enumerate()
+    {
+        assert_eq!(
+            (x.task_id, &x.site, x.executor, x.submitted, x.started, x.ended, x.ok),
+            (y.task_id, &y.site, y.executor, y.submitted, y.started, y.ended, y.ok),
+            "{label}: timeline record {i} diverges"
+        );
+    }
+}
+
+#[test]
+fn scheduler_trait_is_bit_identical() {
+    // The tentpole safety net: routing the driver's site picks and
+    // executor dispatches through the `Scheduler` trait (explicit
+    // `Adaptive` box) must be indistinguishable — makespan bits, score
+    // trajectories, catalog event order, transfer plans, and every
+    // timeline record — from the built-in default, across the
+    // faults × diffusion grid.
+    let seed = 0x5EED_D1FF;
+    for faults in [false, true] {
+        for (diff_label, cfg) in [
+            ("no-diffusion", None),
+            ("diffusion", Some(diffusion_cfg())),
+            ("diffusion+links", Some(linked_cfg())),
+        ] {
+            let label = format!(
+                "faults={faults} {diff_label}",
+            );
+            let a = adaptive_variant_run(false, faults, cfg.clone(), seed);
+            let b = adaptive_variant_run(true, faults, cfg, seed);
+            assert_outcomes_identical(&a, &b, &label);
+        }
+    }
 }
 
 #[test]

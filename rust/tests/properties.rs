@@ -11,6 +11,7 @@ use gridswift::providers::{AppRunner, AppTask, LocalProvider, Provider};
 use gridswift::sim::driver::{Driver, Mode};
 use gridswift::sim::falkon_model::{DrpPolicy, FalkonConfig};
 use gridswift::sim::lrm::{GramConfig, LrmConfig};
+use gridswift::sim::scheduler::{by_name, lower_bound, SystemView, SCHEDULERS};
 use gridswift::sim::{Dag, SimTask};
 use gridswift::util::DetRng;
 use gridswift::xdtm::Value;
@@ -154,6 +155,87 @@ fn prop_sim_deterministic_for_seed() {
         let b = mk(seed);
         assert_eq!(a.makespan_secs, b.makespan_secs);
         assert_eq!(a.timeline.len(), b.timeline.len());
+    });
+}
+
+#[test]
+fn prop_every_scheduler_completes_each_task_once_above_lower_bound() {
+    // The scheduler-trait battery (DESIGN.md §9): every pluggable
+    // policy — static rank-based plans included — must schedule each
+    // task exactly once, never start a task before its dependencies
+    // complete, and never beat the critical-path/area lower bound, in
+    // both the multi-site and the Falkon execution worlds.
+    forall(8, |rng| {
+        let dag = random_dag(rng);
+        let deps: Vec<Vec<usize>> =
+            dag.tasks.iter().map(|t| t.deps.clone()).collect();
+        let n = dag.len();
+        for &name in SCHEDULERS {
+            for falkon in [false, true] {
+                let (mode, system) = if falkon {
+                    let execs = 1 + rng.below(16) as usize;
+                    let mut cfg = FalkonConfig::default();
+                    cfg.drp = DrpPolicy::static_pool(execs);
+                    cfg.drp.allocation_latency = 0;
+                    (
+                        Mode::Falkon { cfg },
+                        SystemView {
+                            speeds: vec![1.0; execs],
+                            slots: vec![1; execs],
+                            links: None,
+                        },
+                    )
+                } else {
+                    let sites = vec![
+                        ("a".to_string(), LrmConfig::pbs(2), 1.0),
+                        ("b".to_string(), LrmConfig::pbs(4), 2.0),
+                    ];
+                    let system = SystemView {
+                        speeds: sites.iter().map(|s| s.2).collect(),
+                        slots: sites.iter().map(|s| s.1.total_procs()).collect(),
+                        links: None,
+                    };
+                    (
+                        Mode::MultiSite {
+                            sites,
+                            gram: GramConfig {
+                                submit_cost: 0,
+                                throttle_interval: 0,
+                            },
+                        },
+                        system,
+                    )
+                };
+                let lb = lower_bound(&dag, &system);
+                let o = Driver::new(dag.clone(), mode, rng.next_u64())
+                    .with_scheduler(by_name(name).unwrap())
+                    .run();
+                assert_eq!(o.timeline.len(), n, "{name}: every task exactly once");
+                let mut ids: Vec<u64> =
+                    o.timeline.records.iter().map(|r| r.task_id).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                assert_eq!(ids.len(), n, "{name}: no duplicate completions");
+                let mut end_of = vec![0u64; n];
+                for r in &o.timeline.records {
+                    end_of[r.task_id as usize] = r.ended;
+                }
+                for r in &o.timeline.records {
+                    for &d in &deps[r.task_id as usize] {
+                        assert!(
+                            end_of[d] <= r.started,
+                            "{name}: task {} started before dep {d} ended",
+                            r.task_id
+                        );
+                    }
+                }
+                assert!(
+                    o.makespan_secs + 1e-6 >= lb,
+                    "{name}: makespan {} below lower bound {lb}",
+                    o.makespan_secs
+                );
+            }
+        }
     });
 }
 

@@ -52,6 +52,32 @@ TRACKED_BY_BENCH = {
         ("peer shared-FS-cold consumers/s",
          ("sim_peer_sharedfs_cold_tasks_per_s",), True),
     ],
+    # Scheduler matrix efficiencies (lower_bound / makespan, higher is
+    # better): pure virtual-time numbers, bit-deterministic per cell, so
+    # any drop is a policy change. Gate the production policy (adaptive)
+    # and the rank-based schedulers on the bag + fMRI workloads; the
+    # Montage cells and the naive baselines are report-only context.
+    "schedulers": [
+        ("bag adaptive efficiency", ("sim_sched_bag_adaptive_efficiency",), True),
+        ("bag HEFT efficiency", ("sim_sched_bag_heft_efficiency",), True),
+        ("bag PEFT efficiency", ("sim_sched_bag_peft_efficiency",), True),
+        ("fMRI adaptive efficiency",
+         ("sim_sched_fmri_adaptive_efficiency",), True),
+        ("fMRI HEFT efficiency", ("sim_sched_fmri_heft_efficiency",), True),
+        ("fMRI PEFT efficiency", ("sim_sched_fmri_peft_efficiency",), True),
+        ("Montage adaptive efficiency",
+         ("sim_sched_montage_adaptive_efficiency",), False),
+        ("Montage HEFT efficiency",
+         ("sim_sched_montage_heft_efficiency",), False),
+        ("Montage PEFT efficiency",
+         ("sim_sched_montage_peft_efficiency",), False),
+        ("bag dynamic-list efficiency",
+         ("sim_sched_bag_dynamic-list_efficiency",), False),
+        ("bag min-queue efficiency",
+         ("sim_sched_bag_min-queue_efficiency",), False),
+        ("bag round-robin efficiency",
+         ("sim_sched_bag_round-robin_efficiency",), False),
+    ],
     # Sim-core engine speed: wall-clock rates of a fixed deterministic
     # workload (same events, same schedule, every run), so a >20% drop
     # is an engine change, not workload noise. Peak RSS is report-only:
@@ -131,7 +157,9 @@ def main():
                 failed = True
             else:
                 mark = "regressed (report-only)"
-        print(f"  {label}: {p:.0f} -> {c:.0f} ({delta:+.1%}) {mark}")
+        # .4g: tasks/s rates print as integers-ish, efficiency ratios
+        # (0 < x <= 1) keep their significant digits.
+        print(f"  {label}: {p:.4g} -> {c:.4g} ({delta:+.1%}) {mark}")
 
     if failed:
         print(f"FAIL: a tracked metric is missing or dropped more than "
