@@ -16,16 +16,24 @@
 //! `--quick` shrinks task counts and skips the 512-executor and
 //! paper-scale sections (CI smoke mode).
 
+use std::io::Cursor;
 use std::sync::Arc;
 use std::time::Instant;
 
+use gridswift::falkon::protocol::{
+    decode_submitb_body, encode_submitb, encode_submitb_bin, SubmitbBinIter,
+};
 use gridswift::falkon::service::TaskDone;
-use gridswift::falkon::{FalkonService, FalkonServiceConfig, RealDrpPolicy};
+use gridswift::falkon::{
+    FalkonClient, FalkonService, FalkonServiceConfig, FalkonTcpServer,
+    MutexShardedQueue, RealDrpPolicy, ShardedQueue, TaskSpec,
+};
 use gridswift::metrics::Table;
 use gridswift::providers::AppTask;
 use gridswift::sim::falkon_model::{DrpPolicy, FalkonConfig, FalkonSim};
 use gridswift::util::json::Json;
 use gridswift::util::mem::rss_bytes;
+use gridswift::util::DetRng;
 
 // Same task shape as the seed benchmark (including the per-task key
 // allocation on the submit side) so tasks/s stays comparable across
@@ -100,6 +108,126 @@ fn run_batched(svc: &FalkonService, n: u64, chunk: u64) -> RunStats {
     let rate = n as f64 / t0.elapsed().as_secs_f64();
     waits_us.sort_unstable();
     RunStats { rate, waits_us }
+}
+
+/// Seeded wire workload: realistic Montage-style stage names with a
+/// few short args per task (the shape fig12 pushes over the wire).
+fn codec_workload(n: usize) -> Vec<TaskSpec> {
+    let stages = ["mProjectPP", "mDiffFit", "mBackground", "sleep0"];
+    let mut rng = DetRng::new(0xC0DEC);
+    (0..n)
+        .map(|i| TaskSpec {
+            id: i as u64,
+            executable: stages[rng.below(4) as usize].to_string(),
+            args: (0..rng.below(4))
+                .map(|k| format!("arg{}-{}", k, rng.below(1000)))
+                .collect(),
+        })
+        .collect()
+}
+
+/// Text-framing codec throughput: encode a `SUBMITB` frame, decode it
+/// the way the server does (tokenize + parse into owned specs).
+fn codec_text_rate(tasks: &[TaskSpec], rounds: usize) -> f64 {
+    let mut sink = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        let wire = encode_submitb(tasks).unwrap();
+        let body = wire.splitn(2, '\n').nth(1).unwrap();
+        let decoded = decode_submitb_body(tasks.len(), &mut Cursor::new(body)).unwrap();
+        sink = sink.wrapping_add(decoded.len() as u64).wrapping_add(decoded[0].id);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    std::hint::black_box(sink);
+    (tasks.len() * rounds) as f64 / secs
+}
+
+/// Binary-framing codec throughput: encode into a reused buffer, decode
+/// the way the binary server loop does (borrowing iterator + one reused
+/// arg spine — the zero-alloc path).
+fn codec_bin_rate(tasks: &[TaskSpec], rounds: usize) -> f64 {
+    let mut buf = Vec::new();
+    let mut args: Vec<String> = Vec::new();
+    let mut sink = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        encode_submitb_bin(tasks, &mut buf).unwrap();
+        // Skip the [u32 len][u8 opcode] header the socket reader strips.
+        let mut iter = SubmitbBinIter::parse(&buf[5..]).unwrap();
+        while let Some((id, exe)) = iter.next_task(&mut args).unwrap() {
+            sink = sink
+                .wrapping_add(id)
+                .wrapping_add(exe.len() as u64)
+                .wrapping_add(args.len() as u64);
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    std::hint::black_box(sink);
+    (tasks.len() * rounds) as f64 / secs
+}
+
+/// End-to-end TCP throughput through the real endpoint in the given
+/// framing: batched submits, all acks drained.
+fn tcp_rate(binary: bool, n: u64) -> f64 {
+    let svc = service(4);
+    let server = FalkonTcpServer::start(Arc::clone(&svc), "127.0.0.1:0").unwrap();
+    let mut client = if binary {
+        FalkonClient::connect_binary(server.addr()).unwrap()
+    } else {
+        FalkonClient::connect(server.addr()).unwrap()
+    };
+    let specs: Vec<TaskSpec> = (0..n)
+        .map(|i| TaskSpec { id: i, executable: "sleep0".into(), args: vec![] })
+        .collect();
+    let t0 = Instant::now();
+    for chunk in specs.chunks(1024) {
+        client.submit_batch(chunk).unwrap();
+    }
+    for _ in 0..n {
+        client.next_result().unwrap();
+    }
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// One queue-contention run for either queue flavor: `workers` threads
+/// hammer a single shard with interleaved 32-task batch pushes and
+/// batch pops until each has moved `per_worker` items. Returns items
+/// moved per second across all workers. Implemented as a macro because
+/// the two queues are distinct types with identical inherent APIs.
+macro_rules! contention_rate {
+    ($Q:ty, $workers:expr, $per_worker:expr) => {{
+        let q: Arc<$Q> = Arc::new(<$Q>::new(1));
+        let barrier = Arc::new(std::sync::Barrier::new($workers + 1));
+        let mut handles = Vec::new();
+        for w in 0..$workers {
+            let q = Arc::clone(&q);
+            let barrier = Arc::clone(&barrier);
+            handles.push(std::thread::spawn(move || {
+                let mut out: Vec<u64> = Vec::with_capacity(32);
+                barrier.wait();
+                let mut moved = 0usize;
+                let mut i = 0u64;
+                while moved < $per_worker {
+                    let batch: Vec<u64> = (i..i + 32).collect();
+                    i += 32;
+                    q.push_batch(batch);
+                    moved += q.try_pop_batch(w, 32, &mut out);
+                    out.clear();
+                }
+            }));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        for h in handles {
+            h.join().unwrap();
+        }
+        ($workers * $per_worker) as f64 / t0.elapsed().as_secs_f64()
+    }};
+}
+
+/// Best-of-3 wrapper (thermal/scheduler noise hurts, never helps).
+fn best_of_3(mut f: impl FnMut() -> f64) -> f64 {
+    (0..3).map(|_| f()).fold(0.0f64, f64::max)
 }
 
 fn service(executors: usize) -> Arc<FalkonService> {
@@ -185,6 +313,77 @@ fn main() {
     b.set("p99_dispatch_us", batched.percentile(0.99));
     report.set("batched_submit", b);
     drop(svc);
+
+    // 2b. Wire codec: text vs binary framing (pure CPU, no sockets).
+    println!("\n-- wire codec: text vs binary SUBMITB framing --");
+    let workload = codec_workload(1024);
+    let rounds = if quick { 200 } else { 1000 };
+    let text_codec = best_of_3(|| codec_text_rate(&workload, rounds));
+    let bin_codec = best_of_3(|| codec_bin_rate(&workload, rounds));
+    println!(
+        "  text  {:.0} tasks/s\n  binary {:.0} tasks/s ({:.1}x)",
+        text_codec,
+        bin_codec,
+        bin_codec / text_codec,
+    );
+    report.set("real_text_codec_tasks_per_s", text_codec);
+    report.set("real_binary_codec_tasks_per_s", bin_codec);
+    // Acceptance: fixed-width reads + borrowed decode must beat integer
+    // formatting + tokenization + per-task owned specs.
+    assert!(
+        bin_codec > text_codec,
+        "binary codec ({bin_codec:.0}/s) must beat text ({text_codec:.0}/s)"
+    );
+
+    // 2c. End-to-end TCP dispatch in both framings.
+    println!("\n-- end-to-end TCP dispatch: text vs binary framing --");
+    let text_tcp = tcp_rate(false, n);
+    let bin_tcp = tcp_rate(true, n);
+    println!(
+        "  text  {:.0} tasks/s\n  binary {:.0} tasks/s ({:.2}x)",
+        text_tcp,
+        bin_tcp,
+        bin_tcp / text_tcp,
+    );
+    report.set("real_text_tcp_tasks_per_s", text_tcp);
+    report.set("real_binary_tcp_tasks_per_s", bin_tcp);
+
+    // 2d. Shard queue contention: lock-free ring vs the Mutex baseline
+    // on one shard, at 1 worker (uncontended floor) and 8 workers.
+    println!("\n-- shard queue contention: lock-free ring vs Mutex deque --");
+    let per_worker = if quick { 50_000 } else { 200_000 };
+    let mut contention = Table::new(&["Workers", "mutex ops/s", "lock-free ops/s", "ratio"]);
+    let mut rates = Vec::new();
+    for workers in [1usize, 8] {
+        let mutex = best_of_3(|| contention_rate!(MutexShardedQueue<u64>, workers, per_worker));
+        let lockfree = best_of_3(|| contention_rate!(ShardedQueue<u64>, workers, per_worker));
+        contention.row(&[
+            workers.to_string(),
+            format!("{mutex:.0}"),
+            format!("{lockfree:.0}"),
+            format!("{:.2}x", lockfree / mutex),
+        ]);
+        report.set(&format!("queue_contention_mutex_{workers}w_ops_per_s"), mutex);
+        report.set(&format!("queue_contention_lockfree_{workers}w_ops_per_s"), lockfree);
+        rates.push((workers, mutex, lockfree));
+    }
+    contention.print();
+    // Acceptance: no slower uncontended (10% tolerance for run noise),
+    // faster under contention.
+    for (workers, mutex, lockfree) in rates {
+        match workers {
+            1 => assert!(
+                lockfree * 1.1 >= mutex,
+                "lock-free queue ({lockfree:.0}/s) must not trail the Mutex \
+                 baseline ({mutex:.0}/s) at 1 worker"
+            ),
+            _ => assert!(
+                lockfree > mutex,
+                "lock-free queue ({lockfree:.0}/s) must beat the Mutex \
+                 baseline ({mutex:.0}/s) at {workers} workers"
+            ),
+        }
+    }
 
     if !quick {
         // 3. Real executor scaling on this box.

@@ -25,7 +25,7 @@ use gridswift::metrics::Table;
 use gridswift::util::json::Json;
 use gridswift::providers::AppTask;
 use gridswift::sim::driver::{Driver, Mode};
-use gridswift::sim::falkon_model::{DrpPolicy, FalkonConfig, FrameConfig};
+use gridswift::sim::falkon_model::{DrpPolicy, FalkonConfig, FrameConfig, WireFormat};
 use gridswift::sim::lrm::{GramConfig, LrmConfig};
 use gridswift::sim::Dag;
 use gridswift::stack::{build, ProviderKind, StackOptions};
@@ -83,10 +83,16 @@ fn direct_tcp(n: u64) -> f64 {
 
 /// The batched wire path: SUBMITB frames of `chunk` tasks (one write +
 /// one server-side queue push per frame) with coalesced DONEB acks.
-fn framed_tcp(n: u64, chunk: u64) -> f64 {
+/// `binary` negotiates wire grammar v2 (length-prefixed frames) instead
+/// of the legacy text lines.
+fn framed_tcp(n: u64, chunk: u64, binary: bool) -> f64 {
     let svc = service(8);
     let server = FalkonTcpServer::start(Arc::clone(&svc), "127.0.0.1:0").unwrap();
-    let mut client = FalkonClient::connect(server.addr()).unwrap();
+    let mut client = if binary {
+        FalkonClient::connect_binary(server.addr()).unwrap()
+    } else {
+        FalkonClient::connect(server.addr()).unwrap()
+    };
     let t0 = Instant::now();
     let mut i = 0u64;
     while i < n {
@@ -149,7 +155,7 @@ const WAN_PER_TASK_US: u64 = 100;
 /// serialized on the submit channel); larger caps model the batched
 /// `SUBMITB` client, whose cut-off is the same `FrameCoalescer` policy
 /// the real client ships.
-fn sim_wan(n: usize, frame_cap: usize) -> f64 {
+fn sim_wan(n: usize, frame_cap: usize, wire: WireFormat) -> f64 {
     let mut cfg = FalkonConfig::default();
     cfg.drp = DrpPolicy::static_pool(8);
     cfg.drp.allocation_latency = 0;
@@ -158,6 +164,7 @@ fn sim_wan(n: usize, frame_cap: usize) -> f64 {
         frame_cap,
         frame_overhead: WAN_RTT_US,
         per_task_cost: WAN_PER_TASK_US,
+        wire,
     };
     let dag = Dag::bag(n, "sleep0", 0.001);
     let o = Driver::new(dag, Mode::Falkon { cfg }, 17).run();
@@ -187,13 +194,15 @@ fn main() {
         if quick { (5_000, 1_000, 200) } else { (20_000, 4_000, 500) };
     let inproc = direct_inproc(n_direct);
     let tcp = direct_tcp(n_direct);
-    let tcp_framed = framed_tcp(n_direct, 256);
+    let tcp_framed = framed_tcp(n_direct, 256, false);
+    let tcp_binary = framed_tcp(n_direct, 256, true);
     let swift = via_swift(n_swift);
     let gram = gram_pbs_sim(n_gram);
     // Virtual-time WAN variant (deterministic; same n in both modes).
     let n_wan = if quick { 1_500 } else { 5_000 };
-    let wan_framed = sim_wan(n_wan, 256);
-    let wan_line = sim_wan(n_wan, 1);
+    let wan_framed = sim_wan(n_wan, 256, WireFormat::Text);
+    let wan_line = sim_wan(n_wan, 1, WireFormat::Text);
+    let wan_binary = sim_wan(n_wan, 256, WireFormat::Binary);
 
     let mut t = Table::new(&["Path", "tasks/s (ours)", "paper"]);
     t.row(&[
@@ -210,6 +219,11 @@ fn main() {
         "Falkon client, TCP SUBMITB x256".into(),
         format!("{tcp_framed:.0}"),
         "- (batched frames)".into(),
+    ]);
+    t.row(&[
+        "Falkon client, TCP binary x256".into(),
+        format!("{tcp_binary:.0}"),
+        "- (wire grammar v2)".into(),
     ]);
     t.row(&[
         "Swift -> Falkon provider".into(),
@@ -230,6 +244,11 @@ fn main() {
         "WAN sim, SUBMITB x256 (20ms RTT)".into(),
         format!("{wan_framed:.0}"),
         "- (batched frames)".into(),
+    ]);
+    t.row(&[
+        "WAN sim, binary x256 (20ms RTT)".into(),
+        format!("{wan_binary:.0}"),
+        "- (wire grammar v2)".into(),
     ]);
     t.print();
 
@@ -266,6 +285,7 @@ fn main() {
     report.set("falkon_inproc_tasks_per_s", inproc);
     report.set("falkon_tcp_tasks_per_s", tcp);
     report.set("falkon_tcp_framed_tasks_per_s", tcp_framed);
+    report.set("falkon_tcp_binary_tasks_per_s", tcp_binary);
     report.set("falkon_tcp_frame_chunk", 256u64);
     report.set("swift_falkon_tasks_per_s", swift);
     report.set("gram_pbs_sim_tasks_per_s", gram);
@@ -274,6 +294,7 @@ fn main() {
     report.set("sim_wan_per_task_us", WAN_PER_TASK_US);
     report.set("sim_wan_framed_tasks_per_s", wan_framed);
     report.set("sim_wan_line_per_task_tasks_per_s", wan_line);
+    report.set("sim_wan_binary_tasks_per_s", wan_binary);
     report.set("paper_falkon_direct_tasks_per_s", 120u64);
     report.set("paper_swift_falkon_lan_tasks_per_s", 56u64);
     std::fs::write("BENCH_fig12.json", report.render())

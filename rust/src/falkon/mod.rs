@@ -25,5 +25,5 @@ pub mod service;
 
 pub use protocol::{FalkonClient, FalkonTcpServer, RemoteResult, TaskSpec};
 pub use provider::FalkonProvider;
-pub use queue::ShardedQueue;
+pub use queue::{MutexShardedQueue, ShardedQueue};
 pub use service::{FalkonService, FalkonServiceConfig, RealDrpPolicy, ServiceStats};

@@ -32,12 +32,44 @@
 //! optional [`FalkonClient::with_autobatch`] buffer runs it with a real
 //! batch/age window (the Nagle-style submit side).
 //!
+//! ## Binary framing (wire grammar v2)
+//!
+//! The text grammar above pays a `format!`/`parse` round trip per task.
+//! A connection can upgrade to length-prefixed little-endian binary
+//! frames by sending the magic line [`BIN_MAGIC`] as its *first*
+//! request; a v2 server answers with the [`BIN_ACK`] line and both
+//! sides switch, while a legacy server just closes the connection (its
+//! "bad request" path), which a client treats as "reconnect in text
+//! mode" — see [`FalkonClient::connect_preferring_binary`]. After the
+//! upgrade every frame is:
+//!
+//! ```text
+//! [u32 len] [u8 opcode] [payload of len-1 bytes]     all integers LE
+//! SUBMITB (op 1), C->S:  u32 n, then per task:
+//!     u64 id, u16 exe_len + exe bytes, u16 argc,
+//!     per arg: u16 len + bytes
+//! DONEB (op 2), S->C:    u32 n, then per result:
+//!     u64 id, u8 ok, u64 exec_us, u64 wait_us, u32 err_len + err bytes
+//! STATS (op 3), C->S:    empty payload
+//! STATSR (op 4), S->C:   5 x u64 (submitted completed failed queue execs)
+//! QUIT (op 5), C->S:     empty payload
+//! ```
+//!
+//! Encode targets a reusable per-connection buffer (zero per-task
+//! allocations); server-side decode borrows executable/arg bytes
+//! straight from the frame payload and moves them into pooled arg
+//! spines ([`FalkonService::arg_vec`]). v2 keeps v1's token validation
+//! (non-empty, whitespace-free wire words) so a spec is valid or
+//! invalid independently of the negotiated framing, and flattens
+//! newlines in error text the same way. See DESIGN.md §10.1–10.2 for
+//! the negotiation state machine.
+//!
 //! Executors remain in-process (this testbed is one host); the endpoint
 //! exists so remote clients — and the fig12 "submit from a different
 //! host" benchmark — exercise a real network hop on the submit path.
 
 use std::collections::VecDeque;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -202,6 +234,323 @@ pub fn decode_doneb_body(n: usize, reader: &mut impl BufRead) -> Result<Vec<Remo
 }
 
 // ---------------------------------------------------------------------
+// Binary wire protocol v2 (pure codec; unit/fuzz-testable without
+// sockets)
+// ---------------------------------------------------------------------
+
+/// Magic preamble line a client sends as its first request to negotiate
+/// binary framing. Chosen to parse as an unknown text request on legacy
+/// servers (which then close the connection, signalling "text only").
+pub const BIN_MAGIC: &str = "BINV2";
+
+/// The server's acknowledgement line; everything after it is binary.
+pub const BIN_ACK: &str = "BINV2 OK";
+
+/// Upper bound on one binary frame (length prefix value). Defense
+/// against hostile length prefixes: a max-size `SUBMITB` frame
+/// ([`MAX_FRAME_TASKS`] tasks of ordinary specs) fits comfortably.
+pub const MAX_BIN_FRAME_BYTES: usize = 64 << 20;
+
+/// Binary opcodes (the byte after the length prefix).
+pub const OP_SUBMITB: u8 = 1;
+pub const OP_DONEB: u8 = 2;
+pub const OP_STATS: u8 = 3;
+pub const OP_STATS_REPLY: u8 = 4;
+pub const OP_QUIT: u8 = 5;
+
+/// Begin a frame in `buf`: length placeholder + opcode. Must be paired
+/// with [`finish_bin_frame`].
+fn begin_bin_frame(buf: &mut Vec<u8>, op: u8) {
+    buf.clear();
+    buf.extend_from_slice(&[0u8; 4]);
+    buf.push(op);
+}
+
+/// Patch the length prefix ([opcode + payload] bytes) into the frame
+/// started by [`begin_bin_frame`].
+fn finish_bin_frame(buf: &mut Vec<u8>) -> Result<()> {
+    let body = buf.len() - 4;
+    if body > MAX_BIN_FRAME_BYTES {
+        bail!("binary frame of {body} bytes exceeds the {MAX_BIN_FRAME_BYTES} cap");
+    }
+    let len = (body as u32).to_le_bytes();
+    buf[..4].copy_from_slice(&len);
+    Ok(())
+}
+
+/// Append a u16-length-prefixed wire word (validated like the text
+/// protocol's tokens, so framing never changes which specs are legal).
+fn put_word16(buf: &mut Vec<u8>, s: &str, what: &str) -> Result<()> {
+    ensure_wire_word(s, what)?;
+    if s.len() > u16::MAX as usize {
+        bail!("task {what} of {} bytes exceeds the u16 wire limit", s.len());
+    }
+    buf.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+/// Encode a binary `SUBMITB` frame into `buf` (cleared first). The
+/// buffer is the caller's reusable per-connection scratch: in the
+/// steady state this performs zero allocations per task.
+pub fn encode_submitb_bin(tasks: &[TaskSpec], buf: &mut Vec<u8>) -> Result<()> {
+    if tasks.len() > MAX_FRAME_TASKS {
+        bail!(
+            "SUBMITB frame of {} tasks exceeds the {MAX_FRAME_TASKS} cap",
+            tasks.len()
+        );
+    }
+    begin_bin_frame(buf, OP_SUBMITB);
+    buf.extend_from_slice(&(tasks.len() as u32).to_le_bytes());
+    for t in tasks {
+        buf.extend_from_slice(&t.id.to_le_bytes());
+        put_word16(buf, &t.executable, "executable")?;
+        if t.args.len() > u16::MAX as usize {
+            bail!("task arg count {} exceeds the u16 wire limit", t.args.len());
+        }
+        buf.extend_from_slice(&(t.args.len() as u16).to_le_bytes());
+        for a in &t.args {
+            put_word16(buf, a, "arg")?;
+        }
+    }
+    finish_bin_frame(buf)
+}
+
+/// Encode a binary `DONEB` frame into `buf` (cleared first). Newlines
+/// in error text are flattened to spaces for parity with the text
+/// grammar; ok results (empty error) encode allocation-free.
+pub fn encode_doneb_bin(results: &[RemoteResult], buf: &mut Vec<u8>) -> Result<()> {
+    if results.len() > MAX_FRAME_TASKS {
+        bail!(
+            "DONEB frame of {} results exceeds the {MAX_FRAME_TASKS} cap",
+            results.len()
+        );
+    }
+    begin_bin_frame(buf, OP_DONEB);
+    buf.extend_from_slice(&(results.len() as u32).to_le_bytes());
+    for r in results {
+        buf.extend_from_slice(&r.id.to_le_bytes());
+        buf.push(u8::from(r.ok));
+        buf.extend_from_slice(&r.exec_us.to_le_bytes());
+        buf.extend_from_slice(&r.wait_us.to_le_bytes());
+        buf.extend_from_slice(&(r.error.len() as u32).to_le_bytes());
+        if r.error.contains('\n') {
+            buf.extend_from_slice(r.error.replace('\n', " ").as_bytes());
+        } else {
+            buf.extend_from_slice(r.error.as_bytes());
+        }
+    }
+    finish_bin_frame(buf)
+}
+
+/// Encode a binary `STATS` request into `buf` (cleared first).
+pub fn encode_stats_req_bin(buf: &mut Vec<u8>) {
+    begin_bin_frame(buf, OP_STATS);
+    finish_bin_frame(buf).expect("empty frame fits");
+}
+
+/// Encode a binary `STATS` reply into `buf` (cleared first).
+pub fn encode_stats_reply_bin(stats: &[u64; 5], buf: &mut Vec<u8>) {
+    begin_bin_frame(buf, OP_STATS_REPLY);
+    for v in stats {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    finish_bin_frame(buf).expect("40-byte frame fits");
+}
+
+/// A borrowing cursor over one frame payload. Every read is
+/// bounds-checked: truncated or garbage payloads produce errors, never
+/// panics or over-reads.
+struct BinCursor<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> BinCursor<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() < n {
+            bail!(
+                "truncated binary payload: wanted {n} bytes, {} left",
+                self.b.len()
+            );
+        }
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// A u16-length-prefixed string, borrowed from the payload.
+    fn str16(&mut self) -> Result<&'a str> {
+        let n = self.u16()? as usize;
+        std::str::from_utf8(self.take(n)?).context("non-UTF-8 wire string")
+    }
+
+    /// A u32-length-prefixed string (error text), borrowed.
+    fn str32(&mut self) -> Result<&'a str> {
+        let n = self.u32()? as usize;
+        std::str::from_utf8(self.take(n)?).context("non-UTF-8 wire string")
+    }
+
+    fn is_empty(&self) -> bool {
+        self.b.is_empty()
+    }
+}
+
+/// Streaming decoder for a binary `SUBMITB` payload: yields one task at
+/// a time with the executable and args **borrowed from the read
+/// buffer** — the server materializes them straight into pooled arg
+/// spines without an intermediate `TaskSpec`.
+pub struct SubmitbBinIter<'a> {
+    cur: BinCursor<'a>,
+    remaining: usize,
+}
+
+impl<'a> SubmitbBinIter<'a> {
+    /// Parse the frame header (task count) of `payload` (the bytes
+    /// after the opcode).
+    pub fn parse(payload: &'a [u8]) -> Result<Self> {
+        let mut cur = BinCursor::new(payload);
+        let n = cur.u32()? as usize;
+        if n > MAX_FRAME_TASKS {
+            bail!("SUBMITB frame of {n} tasks exceeds the {MAX_FRAME_TASKS} cap");
+        }
+        Ok(Self { cur, remaining: n })
+    }
+
+    /// Tasks not yet decoded.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    /// Decode the next task: clears `args`, fills it with the task's
+    /// arguments, and returns `(id, executable)`. `Ok(None)` when the
+    /// frame is exhausted (trailing bytes after the last task are an
+    /// error — a desynchronized peer, not padding).
+    pub fn next_task(&mut self, args: &mut Vec<String>) -> Result<Option<(u64, &'a str)>> {
+        args.clear();
+        if self.remaining == 0 {
+            if !self.cur.is_empty() {
+                bail!("trailing bytes after SUBMITB frame body");
+            }
+            return Ok(None);
+        }
+        self.remaining -= 1;
+        let id = self.cur.u64()?;
+        let exe = self.cur.str16()?;
+        ensure_wire_word(exe, "executable")?;
+        let argc = self.cur.u16()? as usize;
+        args.reserve(argc);
+        for _ in 0..argc {
+            let a = self.cur.str16()?;
+            ensure_wire_word(a, "arg")?;
+            args.push(a.to_string());
+        }
+        Ok(Some((id, exe)))
+    }
+}
+
+/// Decode a whole binary `SUBMITB` payload into owned [`TaskSpec`]s
+/// (test/differential convenience; the server uses the borrowing
+/// [`SubmitbBinIter`]).
+pub fn decode_submitb_bin(payload: &[u8]) -> Result<Vec<TaskSpec>> {
+    let mut iter = SubmitbBinIter::parse(payload)?;
+    let mut out = Vec::with_capacity(iter.remaining());
+    let mut args = Vec::new();
+    while let Some((id, exe)) = iter.next_task(&mut args)? {
+        out.push(TaskSpec {
+            id,
+            executable: exe.to_string(),
+            args: std::mem::take(&mut args),
+        });
+    }
+    Ok(out)
+}
+
+/// Decode a binary `DONEB` payload into results.
+pub fn decode_doneb_bin(payload: &[u8]) -> Result<Vec<RemoteResult>> {
+    let mut cur = BinCursor::new(payload);
+    let n = cur.u32()? as usize;
+    if n > MAX_FRAME_TASKS {
+        bail!("DONEB frame of {n} results exceeds the {MAX_FRAME_TASKS} cap");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = cur.u64()?;
+        let ok = cur.u8()? != 0;
+        let exec_us = cur.u64()?;
+        let wait_us = cur.u64()?;
+        let error = cur.str32()?.to_string();
+        out.push(RemoteResult { id, ok, exec_us, wait_us, error });
+    }
+    if !cur.is_empty() {
+        bail!("trailing bytes after DONEB frame body");
+    }
+    Ok(out)
+}
+
+/// Decode a binary `STATS` reply payload.
+pub fn decode_stats_reply_bin(payload: &[u8]) -> Result<[u64; 5]> {
+    let mut cur = BinCursor::new(payload);
+    let mut out = [0u64; 5];
+    for v in &mut out {
+        *v = cur.u64()?;
+    }
+    if !cur.is_empty() {
+        bail!("trailing bytes after STATS reply");
+    }
+    Ok(out)
+}
+
+/// Read one binary frame: returns its opcode with the payload in `buf`
+/// (cleared and reused across frames), or `Ok(None)` on a clean close
+/// (EOF before any byte of the next frame). Truncation mid-frame and
+/// hostile length prefixes are errors.
+pub fn read_bin_frame(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<Option<u8>> {
+    let mut len4 = [0u8; 4];
+    let mut first = [0u8; 1];
+    match r.read(&mut first) {
+        Ok(0) => return Ok(None), // clean close at a frame boundary
+        Ok(_) => len4[0] = first[0],
+        Err(e) => return Err(e).context("read binary frame length"),
+    }
+    r.read_exact(&mut len4[1..])
+        .context("truncated binary frame (length prefix)")?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 {
+        bail!("binary frame with no opcode");
+    }
+    if len > MAX_BIN_FRAME_BYTES {
+        bail!("binary frame of {len} bytes exceeds the {MAX_BIN_FRAME_BYTES} cap");
+    }
+    let mut op = [0u8; 1];
+    r.read_exact(&mut op)
+        .context("truncated binary frame (opcode)")?;
+    buf.clear();
+    buf.resize(len - 1, 0);
+    r.read_exact(buf).context("truncated binary frame (body)")?;
+    Ok(Some(op[0]))
+}
+
+// ---------------------------------------------------------------------
 // Server
 // ---------------------------------------------------------------------
 
@@ -270,8 +619,17 @@ impl Drop for FalkonTcpServer {
 /// frame ever exceeds [`MAX_FRAME_TASKS`], which an unbounded ack
 /// buffer could previously overflow under extreme backlog.
 struct ConnState {
-    writer: Mutex<TcpStream>,
+    writer: Mutex<ConnWriter>,
     acks: Mutex<FrameCoalescer<RealClock, RemoteResult>>,
+}
+
+/// The write half of a connection plus its framing mode and the reusable
+/// encode buffer (binary `DONEB` frames encode with zero per-task
+/// allocations into this scratch).
+struct ConnWriter {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    binary: bool,
 }
 
 impl ConnState {
@@ -295,9 +653,15 @@ impl ConnState {
     }
 
     fn write_doneb(&self, batch: &[RemoteResult]) {
-        let frame = encode_doneb(batch);
-        if let Ok(mut w) = self.writer.lock() {
-            let _ = w.write_all(frame.as_bytes());
+        let Ok(mut w) = self.writer.lock() else { return };
+        let ConnWriter { stream, buf, binary } = &mut *w;
+        if *binary {
+            if encode_doneb_bin(batch, buf).is_ok() {
+                let _ = stream.write_all(buf);
+            }
+        } else {
+            let frame = encode_doneb(batch);
+            let _ = stream.write_all(frame.as_bytes());
         }
     }
 }
@@ -306,7 +670,7 @@ fn serve_conn(stream: TcpStream, svc: Arc<FalkonService>) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let conn = Arc::new(ConnState {
-        writer: Mutex::new(stream),
+        writer: Mutex::new(ConnWriter { stream, buf: Vec::new(), binary: false }),
         acks: Mutex::new(FrameCoalescer::new(FramePolicy {
             max_tasks: MAX_FRAME_TASKS,
             max_age: Duration::ZERO,
@@ -333,7 +697,7 @@ fn serve_conn(stream: TcpStream, svc: Arc<FalkonService>) -> Result<()> {
                         // Legacy single-task ack: one RESULT line.
                         let msg = format!("RESULT {}", status_line(&remote(r)));
                         if let Ok(mut s) = c.writer.lock() {
-                            let _ = s.write_all(msg.as_bytes());
+                            let _ = s.stream.write_all(msg.as_bytes());
                         }
                     }),
                 );
@@ -365,10 +729,77 @@ fn serve_conn(stream: TcpStream, svc: Arc<FalkonService>) -> Result<()> {
                     svc.queue_len(),
                     svc.live_executors(),
                 );
-                conn.writer.lock().unwrap().write_all(msg.as_bytes())?;
+                conn.writer.lock().unwrap().stream.write_all(msg.as_bytes())?;
             }
             Some("QUIT") => return Ok(()),
+            Some(BIN_MAGIC) if parts.len() == 1 => {
+                return serve_conn_bin(reader, conn, svc, peer);
+            }
             other => bail!("bad request {other:?}"),
+        }
+    }
+}
+
+/// Binary-mode connection loop, entered after the [`BIN_MAGIC`]
+/// preamble. Acks the upgrade, flips the writer to binary framing, then
+/// reads length-prefixed frames. `SUBMITB` payloads are decoded
+/// borrowing from the read buffer, with arg spines drawn from the
+/// service's pool — zero steady-state allocations per task on this
+/// path.
+fn serve_conn_bin(
+    mut reader: BufReader<TcpStream>,
+    conn: Arc<ConnState>,
+    svc: Arc<FalkonService>,
+    peer: Option<std::net::SocketAddr>,
+) -> Result<()> {
+    {
+        let mut w = conn.writer.lock().unwrap();
+        w.binary = true;
+        w.stream.write_all(format!("{BIN_ACK}\n").as_bytes())?;
+    }
+    let mut payload = Vec::new();
+    loop {
+        let Some(op) = read_bin_frame(&mut reader, &mut payload)? else {
+            return Ok(()); // peer closed at a frame boundary
+        };
+        match op {
+            OP_SUBMITB => {
+                let mut iter = SubmitbBinIter::parse(&payload)?;
+                let mut batch: Vec<(AppTask, TaskDone)> =
+                    Vec::with_capacity(iter.remaining());
+                let mut args = svc.arg_vec();
+                while let Some((id, exe)) = iter.next_task(&mut args)? {
+                    let task = AppTask {
+                        id,
+                        key: format!("tcp/{peer:?}/{id}"),
+                        executable: exe.to_string(),
+                        args: std::mem::replace(&mut args, svc.arg_vec()),
+                        inputs: vec![],
+                        outputs: vec![],
+                    };
+                    let c = Arc::clone(&conn);
+                    let done: TaskDone = Box::new(move |r| c.push_ack(remote(r)));
+                    batch.push((task, done));
+                }
+                svc.recycle_args(args);
+                svc.submit_batch(batch);
+            }
+            OP_STATS => {
+                let st = svc.stats();
+                let stats = [
+                    st.submitted.load(Ordering::SeqCst),
+                    st.completed.load(Ordering::SeqCst),
+                    st.failed.load(Ordering::SeqCst),
+                    svc.queue_len() as u64,
+                    svc.live_executors() as u64,
+                ];
+                let mut w = conn.writer.lock().unwrap();
+                let ConnWriter { stream, buf, .. } = &mut *w;
+                encode_stats_reply_bin(&stats, buf);
+                stream.write_all(buf)?;
+            }
+            OP_QUIT => return Ok(()),
+            other => bail!("bad binary opcode {other}"),
         }
     }
 }
@@ -427,8 +858,13 @@ pub struct FalkonClient {
     reader: BufReader<TcpStream>,
     /// Write half, lockable so the autobatch timer thread can ship
     /// frames concurrently with caller writes (frames never
-    /// interleave mid-write).
-    writer: Arc<Mutex<TcpStream>>,
+    /// interleave mid-write). The framing mode and reusable encode
+    /// buffer live inside the lock so both writers share them.
+    writer: Arc<Mutex<ClientWriter>>,
+    /// Read-path mirror of the negotiated framing mode.
+    binary: bool,
+    /// Reusable read-side payload buffer for binary frames.
+    frame_buf: Vec<u8>,
     /// Results decoded from a `DONEB` frame (or stashed while waiting
     /// for a STATS reply) but not yet handed to the caller.
     pending: VecDeque<RemoteResult>,
@@ -438,18 +874,88 @@ pub struct FalkonClient {
     timer: Option<std::thread::JoinHandle<()>>,
 }
 
+/// The client's write half: stream + negotiated framing mode + the
+/// reusable per-connection encode buffer (binary `SUBMITB` frames
+/// encode here with zero per-task allocations).
+struct ClientWriter {
+    stream: TcpStream,
+    enc: Vec<u8>,
+    binary: bool,
+}
+
+/// Encode and ship one `SUBMITB` frame in the writer's negotiated
+/// framing. Free function so the caller and the autobatch timer thread
+/// share one code path under the writer lock.
+fn ship_submitb(w: &mut ClientWriter, frame: &[TaskSpec]) -> Result<()> {
+    let ClientWriter { stream, enc, binary } = w;
+    if *binary {
+        encode_submitb_bin(frame, enc)?;
+        stream.write_all(enc)?;
+    } else {
+        let wire = encode_submitb(frame)?;
+        stream.write_all(wire.as_bytes())?;
+    }
+    Ok(())
+}
+
 impl FalkonClient {
-    /// Connect to a running [`FalkonTcpServer`].
+    /// Connect to a running [`FalkonTcpServer`] (legacy text framing).
     pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Self> {
         let stream = TcpStream::connect(addr).context("connect falkon")?;
         stream.set_nodelay(true).ok();
         Ok(Self {
             reader: BufReader::new(stream.try_clone()?),
-            writer: Arc::new(Mutex::new(stream)),
+            writer: Arc::new(Mutex::new(ClientWriter {
+                stream,
+                enc: Vec::new(),
+                binary: false,
+            })),
+            binary: false,
+            frame_buf: Vec::new(),
             pending: VecDeque::new(),
             submit_buf: None,
             timer: None,
         })
+    }
+
+    /// Connect and negotiate binary framing: send the [`BIN_MAGIC`]
+    /// preamble, require the [`BIN_ACK`] reply. Fails (closed socket or
+    /// unexpected reply) against a text-only peer.
+    pub fn connect_binary(addr: impl std::net::ToSocketAddrs) -> Result<Self> {
+        let mut c = Self::connect(addr)?;
+        c.writer
+            .lock()
+            .unwrap()
+            .stream
+            .write_all(format!("{BIN_MAGIC}\n").as_bytes())?;
+        let mut line = String::new();
+        if c.reader.read_line(&mut line)? == 0 {
+            bail!("server closed during binary negotiation (text-only peer?)");
+        }
+        if line.trim() != BIN_ACK {
+            bail!("unexpected binary negotiation reply {:?}", line.trim());
+        }
+        c.binary = true;
+        c.writer.lock().unwrap().binary = true;
+        Ok(c)
+    }
+
+    /// Connect with binary framing if the server supports it, falling
+    /// back to a fresh legacy text connection otherwise. This is the
+    /// version-agnostic entry point: new clients against old servers
+    /// degrade transparently.
+    pub fn connect_preferring_binary(
+        addr: impl std::net::ToSocketAddrs + Clone,
+    ) -> Result<Self> {
+        match Self::connect_binary(addr.clone()) {
+            Ok(c) => Ok(c),
+            Err(_) => Self::connect(addr),
+        }
+    }
+
+    /// Whether this connection negotiated binary framing.
+    pub fn is_binary(&self) -> bool {
+        self.binary
     }
 
     /// Enable Nagle-style submit coalescing: buffered submissions cut
@@ -533,20 +1039,28 @@ impl FalkonClient {
     }
 
     fn write_submitb(&self, frame: &[TaskSpec]) -> Result<()> {
-        let wire = encode_submitb(frame)?;
-        self.writer.lock().unwrap().write_all(wire.as_bytes())?;
-        Ok(())
+        ship_submitb(&mut self.writer.lock().unwrap(), frame)
     }
 
-    /// Fire a single submission (legacy line) without waiting.
+    /// Fire a single submission without waiting (a legacy `SUBMIT` line
+    /// in text mode; a one-task `SUBMITB` frame in binary mode, which
+    /// has no single-task opcode by design).
     pub fn submit(&mut self, id: u64, executable: &str, args: &[&str]) -> Result<()> {
+        if self.binary {
+            let spec = TaskSpec {
+                id,
+                executable: executable.to_string(),
+                args: args.iter().map(|s| s.to_string()).collect(),
+            };
+            return self.write_submitb(std::slice::from_ref(&spec));
+        }
         let mut line = format!("SUBMIT {id} {executable}");
         for a in args {
             line.push(' ');
             line.push_str(a);
         }
         line.push('\n');
-        self.writer.lock().unwrap().write_all(line.as_bytes())?;
+        self.writer.lock().unwrap().stream.write_all(line.as_bytes())?;
         Ok(())
     }
 
@@ -569,6 +1083,20 @@ impl FalkonClient {
             return Ok(r);
         }
         self.flush()?;
+        if self.binary {
+            loop {
+                let Some(op) = read_bin_frame(&mut self.reader, &mut self.frame_buf)?
+                else {
+                    bail!("connection closed");
+                };
+                if op == OP_DONEB {
+                    self.pending.extend(decode_doneb_bin(&self.frame_buf)?);
+                }
+                if let Some(r) = self.pending.pop_front() {
+                    return Ok(r);
+                }
+            }
+        }
         // One reused line buffer: this is the ack hot path (fig12 reads
         // tens of thousands of lines per run).
         let mut line = String::new();
@@ -614,7 +1142,31 @@ impl FalkonClient {
     /// dropped.
     pub fn stats(&mut self) -> Result<(u64, u64, u64, usize, usize)> {
         self.flush()?;
-        self.writer.lock().unwrap().write_all(b"STATS\n")?;
+        if self.binary {
+            {
+                let mut w = self.writer.lock().unwrap();
+                let ClientWriter { stream, enc, .. } = &mut *w;
+                encode_stats_req_bin(enc);
+                stream.write_all(enc)?;
+            }
+            loop {
+                let Some(op) = read_bin_frame(&mut self.reader, &mut self.frame_buf)?
+                else {
+                    bail!("connection closed");
+                };
+                match op {
+                    OP_STATS_REPLY => {
+                        let s = decode_stats_reply_bin(&self.frame_buf)?;
+                        return Ok((s[0], s[1], s[2], s[3] as usize, s[4] as usize));
+                    }
+                    OP_DONEB => {
+                        self.pending.extend(decode_doneb_bin(&self.frame_buf)?);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        self.writer.lock().unwrap().stream.write_all(b"STATS\n")?;
         let mut line = String::new();
         loop {
             line.clear();
@@ -669,7 +1221,7 @@ impl Drop for FalkonClient {
 /// mid-frame can stall the timer (and a concurrent `drop` of the
 /// client, which joins this thread) until the kernel buffer drains or
 /// the connection dies.
-fn autobatch_timer_loop(shared: Arc<SubmitBuf>, writer: Arc<Mutex<TcpStream>>) {
+fn autobatch_timer_loop(shared: Arc<SubmitBuf>, writer: Arc<Mutex<ClientWriter>>) {
     let mut buf = shared.buf.lock().unwrap_or_else(|e| e.into_inner());
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -685,10 +1237,8 @@ fn autobatch_timer_loop(shared: Arc<SubmitBuf>, writer: Arc<Mutex<TcpStream>>) {
                     let frame = buf.take_frame();
                     drop(buf);
                     if let Some(frame) = frame {
-                        if let Ok(wire) = encode_submitb(&frame) {
-                            if let Ok(mut w) = writer.lock() {
-                                let _ = w.write_all(wire.as_bytes());
-                            }
+                        if let Ok(mut w) = writer.lock() {
+                            let _ = ship_submitb(&mut w, &frame);
                         }
                     }
                     buf = shared.buf.lock().unwrap_or_else(|e| e.into_inner());
@@ -1023,5 +1573,259 @@ mod tests {
         assert_eq!(completed, 1);
         assert_eq!(failed, 0);
         assert_eq!(execs, 2);
+    }
+
+    // -- binary framing (pure) -----------------------------------------
+
+    /// Strip the `[u32 len][u8 opcode]` header of one encoded frame,
+    /// checking the length prefix and opcode on the way.
+    fn bin_payload(buf: &[u8], want_op: u8) -> &[u8] {
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, buf.len() - 4, "length prefix covers opcode + payload");
+        assert_eq!(buf[4], want_op);
+        &buf[5..]
+    }
+
+    #[test]
+    fn submitb_bin_roundtrip() {
+        let tasks = vec![
+            spec(1, "convert", &["-i", "a.img", "-o", "b.img"]),
+            spec(2, "sleep0", &[]),
+            spec(u64::MAX, "align", &["m12"]),
+        ];
+        let mut buf = Vec::new();
+        encode_submitb_bin(&tasks, &mut buf).unwrap();
+        let decoded = decode_submitb_bin(bin_payload(&buf, OP_SUBMITB)).unwrap();
+        assert_eq!(decoded, tasks);
+    }
+
+    #[test]
+    fn submitb_bin_iter_reuses_one_arg_spine() {
+        let tasks = vec![spec(3, "a", &["x", "y"]), spec(4, "b", &["z"])];
+        let mut buf = Vec::new();
+        encode_submitb_bin(&tasks, &mut buf).unwrap();
+        let payload = bin_payload(&buf, OP_SUBMITB);
+        let mut iter = SubmitbBinIter::parse(payload).unwrap();
+        assert_eq!(iter.remaining(), 2);
+        let mut args = Vec::new();
+        let (id, exe) = iter.next_task(&mut args).unwrap().unwrap();
+        assert_eq!((id, exe), (3, "a"));
+        assert_eq!(args, ["x", "y"]);
+        let (id, exe) = iter.next_task(&mut args).unwrap().unwrap();
+        assert_eq!((id, exe), (4, "b"));
+        assert_eq!(args, ["z"], "spine cleared and refilled per task");
+        assert!(iter.next_task(&mut args).unwrap().is_none());
+    }
+
+    #[test]
+    fn doneb_bin_roundtrip_flattens_newlines_like_text() {
+        let results = vec![
+            RemoteResult { id: 7, ok: true, exec_us: 120, wait_us: 3, error: String::new() },
+            RemoteResult {
+                id: 8,
+                ok: false,
+                exec_us: 0,
+                wait_us: 11,
+                error: "boom\nwith newline".into(),
+            },
+        ];
+        let mut buf = Vec::new();
+        encode_doneb_bin(&results, &mut buf).unwrap();
+        let decoded = decode_doneb_bin(bin_payload(&buf, OP_DONEB)).unwrap();
+        assert_eq!(decoded[0], results[0]);
+        assert_eq!(decoded[1].error, "boom with newline", "newline flattened");
+        // Parity with the text grammar's flattening.
+        let text = encode_doneb(&results);
+        let body = text.splitn(2, '\n').nth(1).unwrap();
+        let text_decoded = decode_doneb_body(2, &mut Cursor::new(body)).unwrap();
+        assert_eq!(decoded, text_decoded);
+    }
+
+    #[test]
+    fn stats_bin_roundtrip() {
+        let stats = [1u64, 2, 3, 4, 5];
+        let mut buf = Vec::new();
+        encode_stats_reply_bin(&stats, &mut buf);
+        let got = decode_stats_reply_bin(bin_payload(&buf, OP_STATS_REPLY)).unwrap();
+        assert_eq!(got, stats);
+        encode_stats_req_bin(&mut buf);
+        assert!(bin_payload(&buf, OP_STATS).is_empty());
+    }
+
+    #[test]
+    fn truncated_bin_payload_is_an_error_at_every_cut() {
+        let tasks = vec![spec(1, "convert", &["-i", "a.img"])];
+        let mut buf = Vec::new();
+        encode_submitb_bin(&tasks, &mut buf).unwrap();
+        let payload = bin_payload(&buf, OP_SUBMITB);
+        for cut in 0..payload.len() {
+            assert!(
+                decode_submitb_bin(&payload[..cut]).is_err(),
+                "cut at {cut} must error, not panic or succeed"
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_after_bin_frame_are_an_error() {
+        let mut buf = Vec::new();
+        encode_submitb_bin(&[spec(1, "x", &[])], &mut buf).unwrap();
+        let mut payload = bin_payload(&buf, OP_SUBMITB).to_vec();
+        payload.push(0xAB);
+        let err = decode_submitb_bin(&payload).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn bin_encode_rejects_whitespace_like_text() {
+        let mut buf = Vec::new();
+        assert!(encode_submitb_bin(&[spec(1, "x", &["a b"])], &mut buf).is_err());
+        assert!(encode_submitb_bin(&[spec(1, "x\ny", &[])], &mut buf).is_err());
+        assert!(encode_submitb_bin(&[spec(1, "", &[])], &mut buf).is_err());
+        assert!(encode_submitb_bin(&[spec(1, "ok", &["fine"])], &mut buf).is_ok());
+    }
+
+    #[test]
+    fn read_bin_frame_distinguishes_clean_close_from_truncation() {
+        let mut frame = Vec::new();
+        encode_submitb_bin(&[spec(1, "x", &[])], &mut frame).unwrap();
+        // Clean close: EOF exactly at a frame boundary.
+        let mut payload = Vec::new();
+        let mut r = Cursor::new(frame.clone());
+        assert_eq!(read_bin_frame(&mut r, &mut payload).unwrap(), Some(OP_SUBMITB));
+        assert!(read_bin_frame(&mut r, &mut payload).unwrap().is_none());
+        // Truncation: EOF mid-frame is an error at every cut point.
+        for cut in 1..frame.len() {
+            let mut r = Cursor::new(frame[..cut].to_vec());
+            assert!(
+                read_bin_frame(&mut r, &mut payload).is_err(),
+                "cut at {cut} must error"
+            );
+        }
+        // Hostile length prefix.
+        let mut hostile = ((MAX_BIN_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec();
+        hostile.push(OP_SUBMITB);
+        let err = read_bin_frame(&mut Cursor::new(hostile), &mut payload).unwrap_err();
+        assert!(format!("{err:#}").contains("cap"), "{err:#}");
+    }
+
+    // -- binary framing (live TCP) -------------------------------------
+
+    #[test]
+    fn tcp_binary_roundtrip() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect_binary(server.addr()).unwrap();
+        assert!(client.is_binary());
+        let r = client.run(1, "sleep0", &[]).unwrap();
+        assert!(r.ok);
+        assert_eq!(r.id, 1);
+        let r = client.run(2, "fail", &[]).unwrap();
+        assert!(!r.ok);
+        assert!(r.error.contains("requested failure"));
+    }
+
+    #[test]
+    fn tcp_binary_batch_and_stats() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect_preferring_binary(server.addr()).unwrap();
+        assert!(client.is_binary(), "our own server negotiates binary");
+        let tasks: Vec<TaskSpec> = (0..120u64)
+            .map(|i| spec(i, if i % 10 == 0 { "fail" } else { "sleep0" }, &["arg1"]))
+            .collect();
+        client.submit_batch(&tasks).unwrap();
+        let mut seen = std::collections::HashMap::new();
+        for _ in 0..tasks.len() {
+            let r = client.next_result().unwrap();
+            seen.insert(r.id, r.ok);
+        }
+        assert_eq!(seen.len(), tasks.len());
+        for i in 0..120u64 {
+            assert_eq!(seen[&i], i % 10 != 0, "task {i}");
+        }
+        let (submitted, completed, failed, _q, execs) = client.stats().unwrap();
+        assert_eq!(submitted, 120);
+        assert_eq!(completed, 120);
+        assert_eq!(failed, 12);
+        assert_eq!(execs, 2);
+    }
+
+    #[test]
+    fn tcp_mixed_text_and_binary_clients_share_one_server() {
+        let (_svc, server) = start_svc();
+        let mut text = FalkonClient::connect(server.addr()).unwrap();
+        let mut bin = FalkonClient::connect_binary(server.addr()).unwrap();
+        text.submit_batch(&(0..30u64).map(|i| spec(i, "sleep0", &[])).collect::<Vec<_>>())
+            .unwrap();
+        bin.submit_batch(
+            &(100..130u64).map(|i| spec(i, "sleep0", &[])).collect::<Vec<_>>(),
+        )
+        .unwrap();
+        let mut text_ids = std::collections::HashSet::new();
+        let mut bin_ids = std::collections::HashSet::new();
+        for _ in 0..30 {
+            text_ids.insert(text.next_result().unwrap().id);
+            bin_ids.insert(bin.next_result().unwrap().id);
+        }
+        assert!(text_ids.iter().all(|&i| i < 30), "acks routed per connection");
+        assert!(bin_ids.iter().all(|&i| (100..130).contains(&i)));
+        assert_eq!((text_ids.len(), bin_ids.len()), (30, 30));
+    }
+
+    #[test]
+    fn tcp_binary_autobatch_roundtrip() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect_binary(server.addr())
+            .unwrap()
+            .with_autobatch_timer(8, Duration::from_millis(10));
+        for i in 0..20u64 {
+            client.submit_buffered(spec(i, "sleep0", &[])).unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..20 {
+            let r = client.next_result().unwrap();
+            assert!(r.ok);
+            seen.insert(r.id);
+        }
+        assert_eq!(seen.len(), 20);
+    }
+
+    #[test]
+    fn garbage_preamble_closes_the_connection() {
+        let (_svc, server) = start_svc();
+        let mut raw = TcpStream::connect(server.addr()).unwrap();
+        raw.write_all(b"XYZZY plugh\n").unwrap();
+        let mut buf = [0u8; 16];
+        let n = std::io::Read::read(&mut raw, &mut buf).unwrap();
+        assert_eq!(n, 0, "server closes on a garbage request, no reply bytes");
+    }
+
+    #[test]
+    fn preferring_binary_falls_back_against_text_only_server() {
+        // A hand-rolled legacy server: treats the magic preamble as a
+        // bad request (closes), then speaks minimal text protocol on
+        // the retry connection.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (s1, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s1);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert_eq!(line.trim(), BIN_MAGIC);
+            drop(r); // legacy server: bad request, close
+            let (s2, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s2.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let id: u64 = line.trim().split(' ').nth(1).unwrap().parse().unwrap();
+            let mut w = s2;
+            w.write_all(format!("RESULT {id} ok 1 1 \n").as_bytes()).unwrap();
+        });
+        let mut client = FalkonClient::connect_preferring_binary(addr).unwrap();
+        assert!(!client.is_binary(), "fell back to text");
+        let r = client.run(77, "sleep0", &[]).unwrap();
+        assert!(r.ok);
+        assert_eq!(r.id, 77);
+        h.join().unwrap();
     }
 }

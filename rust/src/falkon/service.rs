@@ -134,6 +134,40 @@ pub struct ServiceStats {
 /// task-granular).
 pub use crate::providers::TaskDone;
 
+/// Cap on pooled arg-vector spines retained between tasks. Beyond this
+/// the spines are simply dropped — the pool bounds memory, it does not
+/// guarantee reuse.
+const ARG_POOL_CAP: usize = 1024;
+
+/// Recycles task-arg `Vec<String>` spines between the protocol decode
+/// path and the executor handoff: a decoded task takes a spine from the
+/// pool, the executor returns it (cleared) just before delivering the
+/// result so the pool is warm for any submit the callback triggers.
+/// The `String` elements themselves are dropped with the task — the
+/// pool elides the per-task *vector* allocation, which is the part the
+/// submit hot path pays even for arg-less tasks.
+#[derive(Default)]
+struct ArgPool {
+    free: Mutex<Vec<Vec<String>>>,
+}
+
+impl ArgPool {
+    fn take(&self) -> Vec<String> {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put(&self, mut v: Vec<String>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        v.clear();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < ARG_POOL_CAP {
+            free.push(v);
+        }
+    }
+}
+
 /// Bundle-completion aggregation state: one allocation per bundle
 /// instead of one boxed closure + shared mutex hop per task.
 struct BundleAgg {
@@ -189,6 +223,7 @@ struct Inner {
     live: AtomicUsize,
     next_exec_id: AtomicU64,
     stats: ServiceStats,
+    arg_pool: ArgPool,
 }
 
 /// The Falkon service handle.
@@ -208,6 +243,7 @@ impl FalkonService {
             live: AtomicUsize::new(0),
             next_exec_id: AtomicU64::new(0),
             stats: ServiceStats::default(),
+            arg_pool: ArgPool::default(),
         });
         // Bootstrap the minimum pool.
         for _ in 0..cfg.drp.min_executors {
@@ -315,6 +351,20 @@ impl FalkonService {
             let _ = tx.send(r);
         }));
         rx.recv().expect("service dropped")
+    }
+
+    /// Take a pooled task-arg spine (for callers that build [`AppTask`]s
+    /// on a hot path, e.g. the binary protocol decoder). The executor
+    /// returns spines to the pool after delivering results; pairing is
+    /// optional — unpooled vectors work, pooled ones skip an allocation.
+    pub fn arg_vec(&self) -> Vec<String> {
+        self.inner.arg_pool.take()
+    }
+
+    /// Return an arg spine to the pool (cleared; `String` elements are
+    /// dropped).
+    pub fn recycle_args(&self, v: Vec<String>) {
+        self.inner.arg_pool.put(v);
     }
 
     /// Live aggregate counters (lock-free reads).
@@ -492,7 +542,7 @@ fn executor_loop(id: u64, home: usize, inner: Arc<Inner>) {
             continue;
         }
         idle_since = None;
-        for item in batch.drain(..) {
+        for mut item in batch.drain(..) {
             let wait_us = item.enqueued.elapsed().as_micros() as u64;
             if !overhead.is_zero() {
                 std::thread::sleep(overhead);
@@ -507,6 +557,9 @@ fn executor_loop(id: u64, home: usize, inner: Arc<Inner>) {
             } else {
                 inner.stats.failed.fetch_add(1, Ordering::SeqCst);
             }
+            // Recycle the arg spine before the completion callback so
+            // the pool is warm for any submit the callback triggers.
+            inner.arg_pool.put(std::mem::take(&mut item.task.args));
             // The notification message.
             item.completion.deliver(TaskResult {
                 id: item.task.id,

@@ -46,7 +46,7 @@ use crate::diffusion::{
     dataset_id_for_path, CacheEvent, CacheStats, DataCatalog, DatasetRef,
     DiffusionConfig, LocalityRouter, TransferPlan, TransferPlanner,
 };
-use crate::metrics::{TaskRecord, Timeline, TimelineSink};
+use crate::metrics::{Sym, TaskRecord, Timeline, TimelineSink};
 use crate::policy::{FrameCoalescer, FramePolicy, RealClock, ScoreConfig, SiteScoreBoard};
 use crate::providers::{AppTask, BundleDone, Provider, TaskResult};
 use crate::util::DetRng;
@@ -103,19 +103,44 @@ struct DiffusionState {
     /// decision-only — transfers take however long they take — but the
     /// log is the differential surface the sim is pinned against.
     planner: Option<TransferPlanner>,
-    /// Bytes assumed per path-derived dataset (staging lists carry
-    /// paths, not sizes).
+    /// Fallback bytes per path-derived dataset, used when the staged
+    /// path does not (yet) exist on the local filesystem.
     dataset_bytes: u64,
+    /// Real file sizes by dataset id, stat'ed once per distinct path.
+    /// The sim and the differential tests use paths that never exist on
+    /// disk, so they always take the `dataset_bytes` fallback and stay
+    /// bit-identical; real runs (whose mappers produce actual files)
+    /// route transfers on true sizes instead of a one-size guess.
+    sizes: std::collections::HashMap<crate::diffusion::DatasetId, u64>,
 }
 
 impl DiffusionState {
     /// Map a task's xdtm-mapped staging paths onto logical dataset
     /// refs (paper §3.13: mapper outputs are the natural dataset ids).
-    fn refs(&self, paths: &[PathBuf]) -> Vec<DatasetRef> {
-        paths
-            .iter()
-            .map(|p| DatasetRef { id: dataset_id_for_path(p), bytes: self.dataset_bytes })
-            .collect()
+    fn refs(&mut self, paths: &[PathBuf]) -> Vec<DatasetRef> {
+        paths.iter().map(|p| self.dataset_ref(p)).collect()
+    }
+
+    /// One path's dataset ref, with its size resolved from the real
+    /// file (cached) or the configured fallback. Only successful stats
+    /// are cached: a path referenced before its producer writes it
+    /// falls back now but picks up the real size once the file exists.
+    /// Zero-byte files count as one byte so an empty marker file never
+    /// makes a dataset free to replicate everywhere.
+    fn dataset_ref(&mut self, path: &PathBuf) -> DatasetRef {
+        let id = dataset_id_for_path(path);
+        let bytes = match self.sizes.get(&id) {
+            Some(&b) => b,
+            None => match std::fs::metadata(path) {
+                Ok(m) => {
+                    let b = m.len().max(1);
+                    self.sizes.insert(id, b);
+                    b
+                }
+                Err(_) => self.dataset_bytes,
+            },
+        };
+        DatasetRef { id, bytes }
     }
 
     /// Completion-path bookkeeping shared by the streamed and bundled
@@ -163,7 +188,7 @@ fn pick_site_locked(
     // sim driver's default `Adaptive` scheduler calls, so the real-vs-
     // sim differential pins one shared decision procedure, not two
     // hand-kept copies.
-    let inputs = diffusion.as_ref().map(|d| d.refs(&task.inputs));
+    let inputs = diffusion.as_mut().map(|d| d.refs(&task.inputs));
     let site = crate::diffusion::adaptive_route(
         board,
         diffusion.as_ref().map(|d| {
@@ -198,6 +223,10 @@ pub struct GridScheduler {
     /// lock.
     providers: Vec<Arc<dyn Provider>>,
     site_names: Vec<String>,
+    /// Interned site names, indexed like `site_names`: the completion
+    /// hot path stamps timeline records with a `Copy` symbol instead of
+    /// cloning a `String` per task.
+    site_syms: Vec<Sym>,
     timeline: TimelineSink,
     cluster: Option<ClusterPolicy>,
     retries: usize,
@@ -259,9 +288,12 @@ impl GridScheduler {
                 router: LocalityRouter::new(d.router.clone()),
                 planner: d.links.clone().map(TransferPlanner::new),
                 dataset_bytes: d.dataset_bytes,
+                sizes: std::collections::HashMap::new(),
             });
         let site_names: Vec<String> =
             providers.iter().map(|p| p.name().to_string()).collect();
+        let site_syms: Vec<Sym> =
+            site_names.iter().map(|n| Sym::intern(n)).collect();
         let board = SiteScoreBoard::new(
             providers.len(),
             ScoreConfig {
@@ -292,6 +324,7 @@ impl GridScheduler {
             inner,
             providers,
             site_names,
+            site_syms,
             timeline: TimelineSink::new(nsinks),
             cluster,
             retries,
@@ -539,8 +572,8 @@ impl GridScheduler {
         }
         self.timeline.record(TaskRecord {
             task_id: r.id,
-            stage: p.task.executable.clone(),
-            site: self.site_names[site].clone(),
+            stage: Sym::intern(&p.task.executable),
+            site: self.site_syms[site],
             executor: r.executor,
             submitted: submit_us,
             started: now.saturating_sub(r.exec_us),
@@ -637,13 +670,13 @@ impl GridScheduler {
             }
         }
         if !finals.is_empty() {
-            let site_name = &self.site_names[site];
+            let site_sym = self.site_syms[site];
             let records: Vec<TaskRecord> = finals
                 .iter()
                 .map(|(p, r)| TaskRecord {
                     task_id: r.id,
-                    stage: p.task.executable.clone(),
-                    site: site_name.clone(),
+                    stage: Sym::intern(&p.task.executable),
+                    site: site_sym,
                     executor: r.executor,
                     submitted: submit_us,
                     started: now.saturating_sub(r.exec_us),
@@ -651,7 +684,7 @@ impl GridScheduler {
                     ok: r.ok,
                 })
                 .collect();
-            self.timeline.record_batch(records);
+            self.timeline.record_batch(&records);
             self.in_flight
                 .fetch_sub(finals.len() as u64, Ordering::SeqCst);
             for (p, r) in finals {

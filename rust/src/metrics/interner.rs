@@ -1,0 +1,171 @@
+//! Global string interner for task metadata (stage and site names).
+//!
+//! The dispatch hot path used to carry two heap `String`s per
+//! [`crate::metrics::TaskRecord`] (stage + site), cloned once when the
+//! record was built and again on every snapshot merge. Real experiments
+//! use a handful of distinct names for millions of records, so the names
+//! are interned once into a process-global table and records carry a
+//! `Copy` [`Sym`] (a `u32` index) instead — mirroring the sim side,
+//! where `sim::StageName` shares one `Arc<str>` per stage.
+//!
+//! Ownership: interned strings are leaked into `&'static str` and live
+//! for the process lifetime. The table is append-only and bounded in
+//! practice by the number of distinct stage/site names an experiment
+//! uses (dozens), so the leak is a deliberate arena, not a bug. Lookups
+//! take a read lock on a `HashMap`; misses upgrade to a write lock,
+//! re-check, and append.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{OnceLock, RwLock};
+
+/// The two sides of the global table: name → id for interning, id →
+/// name for resolution. Both only ever grow.
+struct Table {
+    ids: RwLock<HashMap<&'static str, u32>>,
+    names: RwLock<Vec<&'static str>>,
+}
+
+fn table() -> &'static Table {
+    static TABLE: OnceLock<Table> = OnceLock::new();
+    TABLE.get_or_init(|| Table {
+        ids: RwLock::new(HashMap::new()),
+        names: RwLock::new(Vec::new()),
+    })
+}
+
+/// An interned string: a `Copy` handle into the process-global name
+/// table. Equality and hashing are O(1) on the `u32` id; two `Sym`s are
+/// equal iff they intern the same text.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Sym(u32);
+
+impl Sym {
+    /// Intern `s`, returning the existing handle when the name is
+    /// already in the table (read lock only on the hit path).
+    pub fn intern(s: &str) -> Sym {
+        let t = table();
+        if let Some(&id) = t.ids.read().unwrap_or_else(|e| e.into_inner()).get(s) {
+            return Sym(id);
+        }
+        let mut ids = t.ids.write().unwrap_or_else(|e| e.into_inner());
+        if let Some(&id) = ids.get(s) {
+            return Sym(id);
+        }
+        let mut names = t.names.write().unwrap_or_else(|e| e.into_inner());
+        let leaked: &'static str = Box::leak(s.to_owned().into_boxed_str());
+        let id = u32::try_from(names.len()).expect("interner overflow");
+        names.push(leaked);
+        ids.insert(leaked, id);
+        Sym(id)
+    }
+
+    /// Resolve back to the interned text. The returned reference is
+    /// `'static` because the table leaks its entries.
+    pub fn as_str(self) -> &'static str {
+        table().names.read().unwrap_or_else(|e| e.into_inner())[self.0 as usize]
+    }
+
+    /// The raw table index (stable for the process lifetime).
+    pub fn id(self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Sym {
+    fn default() -> Self {
+        Sym::intern("")
+    }
+}
+
+impl fmt::Display for Sym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl fmt::Debug for Sym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Sym({:?})", self.as_str())
+    }
+}
+
+impl From<&str> for Sym {
+    fn from(s: &str) -> Self {
+        Sym::intern(s)
+    }
+}
+
+// String comparisons keep call sites like `r.site == "good"` compiling
+// unchanged after the TaskRecord field switch from String to Sym.
+impl PartialEq<str> for Sym {
+    fn eq(&self, other: &str) -> bool {
+        self.as_str() == other
+    }
+}
+
+impl PartialEq<&str> for Sym {
+    fn eq(&self, other: &&str) -> bool {
+        self.as_str() == *other
+    }
+}
+
+impl PartialEq<Sym> for &str {
+    fn eq(&self, other: &Sym) -> bool {
+        *self == other.as_str()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_dedupes_and_resolves() {
+        let a = Sym::intern("stage-a");
+        let b = Sym::intern("stage-b");
+        let a2 = Sym::intern("stage-a");
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(a.as_str(), "stage-a");
+        assert_eq!(b.as_str(), "stage-b");
+    }
+
+    #[test]
+    fn compares_against_plain_strs() {
+        let s = Sym::intern("mDiffFit");
+        assert!(s == "mDiffFit");
+        assert!("mDiffFit" == s);
+        assert!(s != "mProject");
+        assert_eq!(format!("{s}"), "mDiffFit");
+        assert_eq!(format!("{s:?}"), "Sym(\"mDiffFit\")");
+    }
+
+    #[test]
+    fn sym_is_copy_sized() {
+        assert_eq!(std::mem::size_of::<Sym>(), 4);
+        let s = Sym::intern("copy");
+        let t = s; // Copy, not move
+        assert_eq!(s, t);
+    }
+
+    #[test]
+    fn concurrent_interning_is_consistent() {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    (0..64)
+                        .map(|i| Sym::intern(&format!("conc-{i}")))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let all: Vec<Vec<Sym>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for w in &all[1..] {
+            assert_eq!(*w, all[0], "same names must intern to same ids");
+        }
+        for (i, s) in all[0].iter().enumerate() {
+            assert_eq!(s.as_str(), format!("conc-{i}"));
+        }
+    }
+}

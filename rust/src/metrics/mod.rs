@@ -1,11 +1,13 @@
 //! Metrics: per-task timelines, efficiency/speedup statistics, ASCII plots
 //! and aligned tables — everything the paper's figures report.
 
+pub mod interner;
 pub mod plot;
 pub mod stats;
 pub mod table;
 pub mod timeline;
 
+pub use interner::Sym;
 pub use stats::{efficiency, mean, speedup, stddev};
 pub use table::Table;
 pub use timeline::{TaskRecord, Timeline, TimelineSink};

@@ -66,15 +66,24 @@ pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
-/// Percentile by nearest-rank (p in [0, 100]).
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+/// Percentile by nearest-rank (p in [0, 100]) over an **already
+/// sorted** slice: no clone, no sort. Bench report paths that query
+/// several percentiles of the same sample sort once and call this.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
         return 0.0;
     }
-    let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
     sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Percentile by nearest-rank (p in [0, 100]). Convenience wrapper that
+/// clones + sorts; prefer sorting once and using
+/// [`percentile_sorted`] when querying multiple percentiles.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, p)
 }
 
 #[cfg(test)]
@@ -131,5 +140,16 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(min(&xs), 1.0);
         assert_eq!(max(&xs), 5.0);
+    }
+
+    #[test]
+    fn percentile_sorted_matches_percentile() {
+        let unsorted = [5.0, 1.0, 4.0, 2.0, 3.0];
+        let mut sorted = unsorted;
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&unsorted, p), percentile_sorted(&sorted, p));
+        }
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
     }
 }

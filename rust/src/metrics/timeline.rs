@@ -5,20 +5,28 @@
 //! [`TimelineSink`] is the concurrent recording front-end the dispatch
 //! core writes through: sharded buffers (one lock per recording batch,
 //! no cross-worker contention) merged into a [`Timeline`] on snapshot.
+//!
+//! Hot-path discipline: [`TaskRecord`] is `Copy` (stage/site names are
+//! interned [`Sym`]s, see [`crate::metrics::interner`]), and each sink
+//! shard is a list of fixed-capacity chunks appended in place — a
+//! recording batch never triggers a `Vec` growth reallocation while the
+//! shard lock is held, so completion-side tail latency stays flat as
+//! timelines reach millions of records.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::metrics::interner::Sym;
 use crate::util::time::{to_secs, Micros};
 
 /// One task's lifecycle timestamps (all in experiment Micros).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct TaskRecord {
     pub task_id: u64,
-    /// Workflow stage name (e.g. "reorient", "mDiffFit").
-    pub stage: String,
-    /// Site / cluster name the task ran on.
-    pub site: String,
+    /// Workflow stage name (e.g. "reorient", "mDiffFit"), interned.
+    pub stage: Sym,
+    /// Site / cluster name the task ran on, interned.
+    pub site: Sym,
     /// Executor (node) id within the site.
     pub executor: u64,
     /// When the engine handed the task to a provider.
@@ -63,10 +71,17 @@ impl Timeline {
         self.records.is_empty()
     }
 
-    /// Experiment makespan: max(end) - min(submit).
+    /// Experiment makespan: max(end) - min(submit). Single pass.
     pub fn makespan(&self) -> Micros {
-        let start = self.records.iter().map(|r| r.submitted).min().unwrap_or(0);
-        let end = self.records.iter().map(|r| r.ended).max().unwrap_or(0);
+        let mut start = Micros::MAX;
+        let mut end = 0;
+        for r in &self.records {
+            start = start.min(r.submitted);
+            end = end.max(r.ended);
+        }
+        if start == Micros::MAX {
+            return 0;
+        }
         end.saturating_sub(start)
     }
 
@@ -82,17 +97,17 @@ impl Timeline {
 
     /// Records grouped by stage, in first-seen order.
     pub fn by_stage(&self) -> Vec<(String, Vec<&TaskRecord>)> {
-        let mut order: Vec<String> = Vec::new();
+        let mut order: Vec<Sym> = Vec::new();
         for r in &self.records {
             if !order.contains(&r.stage) {
-                order.push(r.stage.clone());
+                order.push(r.stage);
             }
         }
         order
             .into_iter()
             .map(|s| {
                 let group = self.records.iter().filter(|r| r.stage == s).collect();
-                (s, group)
+                (s.as_str().to_owned(), group)
             })
             .collect()
     }
@@ -117,14 +132,16 @@ impl Timeline {
 
     /// Count of tasks per site — Figure 11's job split.
     pub fn site_counts(&self) -> Vec<(String, usize)> {
-        let mut out: Vec<(String, usize)> = Vec::new();
+        let mut out: Vec<(Sym, usize)> = Vec::new();
         for r in &self.records {
             match out.iter_mut().find(|(s, _)| *s == r.site) {
                 Some((_, n)) => *n += 1,
-                None => out.push((r.site.clone(), 1)),
+                None => out.push((r.site, 1)),
             }
         }
-        out
+        out.into_iter()
+            .map(|(s, n)| (s.as_str().to_owned(), n))
+            .collect()
     }
 
     /// Resource efficiency given a processor count: cpu_time / (procs *
@@ -147,13 +164,39 @@ impl Timeline {
     }
 }
 
+/// Records per preallocated sink chunk. A chunk is allocated at full
+/// capacity once and appended into until full; the shard never calls a
+/// growth reallocation (with its O(len) copy) while holding the record
+/// lock.
+const SINK_CHUNK: usize = 4096;
+
+/// One sink shard: an append-only chunk list.
+#[derive(Debug, Default)]
+struct ShardBuf {
+    chunks: Vec<Vec<TaskRecord>>,
+}
+
+impl ShardBuf {
+    fn append(&mut self, mut rs: &[TaskRecord]) {
+        while !rs.is_empty() {
+            if self.chunks.last().is_none_or(|c| c.len() == SINK_CHUNK) {
+                self.chunks.push(Vec::with_capacity(SINK_CHUNK));
+            }
+            let tail = self.chunks.last_mut().expect("chunk just ensured");
+            let take = (SINK_CHUNK - tail.len()).min(rs.len());
+            tail.extend_from_slice(&rs[..take]);
+            rs = &rs[take..];
+        }
+    }
+}
+
 /// Concurrent, sharded timeline recorder. Completion paths record whole
 /// batches under one shard lock; [`TimelineSink::snapshot`] merges the
 /// shards into a deterministic-ordered [`Timeline`] (sorted by submit
 /// time, then start, then task id).
 #[derive(Debug)]
 pub struct TimelineSink {
-    shards: Vec<Mutex<Vec<TaskRecord>>>,
+    shards: Vec<Mutex<ShardBuf>>,
     cursor: AtomicUsize,
     len: AtomicUsize,
 }
@@ -161,28 +204,28 @@ pub struct TimelineSink {
 impl TimelineSink {
     pub fn new(nshards: usize) -> Self {
         Self {
-            shards: (0..nshards.max(1)).map(|_| Mutex::new(Vec::new())).collect(),
+            shards: (0..nshards.max(1))
+                .map(|_| Mutex::new(ShardBuf::default()))
+                .collect(),
             cursor: AtomicUsize::new(0),
             len: AtomicUsize::new(0),
         }
     }
 
-    /// Record one task (one shard lock).
+    /// Record one task (one shard lock, no allocation unless a fresh
+    /// chunk is needed).
     pub fn record(&self, r: TaskRecord) {
-        let s = self.cursor.fetch_add(1, Ordering::Relaxed) % self.shards.len();
-        self.shards[s].lock().unwrap().push(r);
-        self.len.fetch_add(1, Ordering::SeqCst);
+        self.record_batch(std::slice::from_ref(&r));
     }
 
     /// Record a batch of tasks under a single shard lock.
-    pub fn record_batch(&self, rs: Vec<TaskRecord>) {
+    pub fn record_batch(&self, rs: &[TaskRecord]) {
         if rs.is_empty() {
             return;
         }
-        let n = rs.len();
         let s = self.cursor.fetch_add(1, Ordering::Relaxed) % self.shards.len();
-        self.shards[s].lock().unwrap().extend(rs);
-        self.len.fetch_add(n, Ordering::SeqCst);
+        self.shards[s].lock().unwrap().append(rs);
+        self.len.fetch_add(rs.len(), Ordering::SeqCst);
     }
 
     /// Records written so far (lock-free).
@@ -195,10 +238,14 @@ impl TimelineSink {
     }
 
     /// Merge all shards into an ordered [`Timeline`] (non-destructive).
+    /// Records are `Copy`, so the merge is chunk-sized memcpys into a
+    /// single exactly-reserved vector — no per-record clone.
     pub fn snapshot(&self) -> Timeline {
         let mut records: Vec<TaskRecord> = Vec::with_capacity(self.len());
         for shard in &self.shards {
-            records.extend(shard.lock().unwrap().iter().cloned());
+            for chunk in &shard.lock().unwrap().chunks {
+                records.extend_from_slice(chunk);
+            }
         }
         records.sort_by(|a, b| {
             (a.submitted, a.started, a.task_id).cmp(&(
@@ -219,8 +266,8 @@ mod tests {
     fn rec(id: u64, sub: Micros, st: Micros, en: Micros, site: &str) -> TaskRecord {
         TaskRecord {
             task_id: id,
-            stage: "s".into(),
-            site: site.into(),
+            stage: Sym::intern("s"),
+            site: Sym::intern(site),
             executor: 0,
             submitted: sub,
             started: st,
@@ -265,9 +312,9 @@ mod tests {
     fn stage_windows_ordered_by_first_seen() {
         let mut t = Timeline::new();
         let mut r1 = rec(1, 0, 0, SEC, "a");
-        r1.stage = "first".into();
+        r1.stage = Sym::intern("first");
         let mut r2 = rec(2, 0, SEC, 2 * SEC, "a");
-        r2.stage = "second".into();
+        r2.stage = Sym::intern("second");
         t.push(r1);
         t.push(r2);
         let w = t.stage_windows();
@@ -289,7 +336,7 @@ mod tests {
         let sink = TimelineSink::new(4);
         // Record out of order across shards; snapshot must sort.
         sink.record(rec(3, 3 * SEC, 3 * SEC, 4 * SEC, "a"));
-        sink.record_batch(vec![
+        sink.record_batch(&[
             rec(1, SEC, SEC, 2 * SEC, "a"),
             rec(2, 2 * SEC, 2 * SEC, 3 * SEC, "b"),
         ]);
@@ -319,5 +366,20 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(sink.snapshot().len(), 1000);
+    }
+
+    #[test]
+    fn sink_batches_span_chunk_boundaries() {
+        let sink = TimelineSink::new(1);
+        // One batch larger than a chunk must split cleanly.
+        let big: Vec<TaskRecord> = (0..(SINK_CHUNK as u64 + 100))
+            .map(|i| rec(i, i, i, i + 1, "s"))
+            .collect();
+        sink.record_batch(&big);
+        assert_eq!(sink.len(), SINK_CHUNK + 100);
+        let t = sink.snapshot();
+        assert_eq!(t.len(), SINK_CHUNK + 100);
+        assert_eq!(t.records[0].task_id, 0);
+        assert_eq!(t.records[SINK_CHUNK + 99].task_id, SINK_CHUNK as u64 + 99);
     }
 }

@@ -20,7 +20,7 @@ use crate::diffusion::{
     CacheEvent, CacheStats, DataCatalog, DiffusionConfig, LocalityRouter, TransferPlan,
     TransferPlanner, TransferSource,
 };
-use crate::metrics::{TaskRecord, Timeline};
+use crate::metrics::{Sym, TaskRecord, Timeline};
 use crate::policy::{FrameCoalescer, FramePolicy, ScoreConfig, SimClock, SiteScoreBoard};
 use crate::util::time::{secs, Micros};
 use crate::util::DetRng;
@@ -1348,17 +1348,14 @@ impl Driver {
         debug_assert!(!self.completed[task], "task {task} completed twice");
         self.completed[task] = true;
         self.n_done += 1;
-        let site = self
-            .site_names
-            .get(self.task_site[task])
-            .cloned()
-            .unwrap_or_else(|| {
-                if self.falkon.is_some() { "falkon".into() } else { "site".into() }
-            });
+        let site = match self.site_names.get(self.task_site[task]) {
+            Some(name) => Sym::intern(name),
+            None => Sym::intern(if self.falkon.is_some() { "falkon" } else { "site" }),
+        };
         let exec = *self.falkon_task_exec.get(&task).unwrap_or(&0) as u64;
         self.timeline.push(TaskRecord {
             task_id: task as u64,
-            stage: self.dag.tasks[task].stage.to_string(),
+            stage: Sym::intern(&self.dag.tasks[task].stage),
             site,
             executor: exec,
             submitted: self.submit_time[task],
@@ -1417,8 +1414,8 @@ impl Driver {
                 proc_free[pi] = end;
                 self.timeline.push(TaskRecord {
                     task_id: t as u64,
-                    stage: self.dag.tasks[t].stage.to_string(),
-                    site: "mpi".into(),
+                    stage: Sym::intern(&self.dag.tasks[t].stage),
+                    site: Sym::intern("mpi"),
                     executor: pi as u64,
                     submitted: now,
                     started: earliest,
@@ -1621,7 +1618,7 @@ mod tests {
         cfg.framing = FrameConfig {
             frame_cap: 256,
             frame_overhead: 500_000,
-            per_task_cost: 0,
+            ..FrameConfig::default()
         };
         let dag = Dag::bag(8, "t", 1.0);
         let o = Driver::new(dag, Mode::Falkon { cfg }, 21).run();
@@ -1649,7 +1646,7 @@ mod tests {
         cfg.framing = FrameConfig {
             frame_cap: 1,
             frame_overhead: 500_000,
-            per_task_cost: 0,
+            ..FrameConfig::default()
         };
         let dag = Dag::bag(4, "t", 0.1);
         let o = Driver::new(dag, Mode::Falkon { cfg }, 22).run();
@@ -1671,7 +1668,7 @@ mod tests {
         cfg.framing = FrameConfig {
             frame_cap: 256,
             frame_overhead: 500_000,
-            per_task_cost: 0,
+            ..FrameConfig::default()
         };
         let dag = Dag::bag(8, "t", 1.0);
         let o = Driver::new(dag, Mode::Falkon { cfg }, 13).run();

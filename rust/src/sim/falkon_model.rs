@@ -52,13 +52,43 @@ pub struct FrameConfig {
     pub frame_cap: usize,
     /// Per-frame cost: header handling plus one submit round trip.
     pub frame_overhead: Micros,
-    /// Per-task decode cost inside a frame.
+    /// Per-task decode cost inside a frame (text framing; see
+    /// [`FrameConfig::task_wire_cost`] for how the wire format scales
+    /// it).
     pub per_task_cost: Micros,
+    /// Wire format the peer negotiated (mirrors the real endpoint's
+    /// `BINV2` preamble handshake).
+    pub wire: WireFormat,
 }
+
+/// Which framing the modeled connection negotiated. The real binary
+/// codec cuts per-task encode/decode cost (fixed-width fields instead
+/// of integer formatting + tokenization); the sim mirrors that as a
+/// constant factor on `per_task_cost`. Per-frame overhead (a wire round
+/// trip) is latency-bound and unchanged by the byte format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireFormat {
+    /// Legacy line-oriented text frames (`SUBMITB n` + task lines).
+    #[default]
+    Text,
+    /// Length-prefixed binary frames (wire grammar v2).
+    Binary,
+}
+
+/// Text-to-binary per-task decode cost ratio, calibrated from the
+/// `real_text_codec` / `real_binary_codec` rows of `benches/falkon_micro`
+/// (fixed-width reads beat `parse::<u64>()` + `split(' ')` by roughly
+/// this factor on ordinary task specs).
+pub const BIN_TEXT_COST_RATIO: Micros = 4;
 
 impl Default for FrameConfig {
     fn default() -> Self {
-        Self { frame_cap: 256, frame_overhead: 0, per_task_cost: 0 }
+        Self {
+            frame_cap: 256,
+            frame_overhead: 0,
+            per_task_cost: 0,
+            wire: WireFormat::Text,
+        }
     }
 }
 
@@ -69,18 +99,29 @@ impl FrameConfig {
         self.frame_overhead > 0 || self.per_task_cost > 0
     }
 
+    /// Per-task wire cost under the negotiated format: binary framing
+    /// divides the text decode cost by [`BIN_TEXT_COST_RATIO`]
+    /// (rounding up so a nonzero text cost never models as free).
+    pub fn task_wire_cost(&self) -> Micros {
+        match self.wire {
+            WireFormat::Text => self.per_task_cost,
+            WireFormat::Binary => self.per_task_cost.div_ceil(BIN_TEXT_COST_RATIO),
+        }
+    }
+
     /// Serialized submission cost for `n` tasks under this framing:
-    /// one `frame_overhead` per frame plus `per_task_cost` per task.
-    /// The chunking rule is the policy core's
+    /// one `frame_overhead` per frame plus the per-format task cost per
+    /// task. The chunking rule is the policy core's
     /// ([`crate::policy::frames_for`]) — the same cut-off the real
     /// client's autobatch buffer ships with.
     pub fn submit_cost(&self, n: usize) -> Micros {
         let frames = frames_for(n, self.frame_cap) as Micros;
-        frames * self.frame_overhead + n as Micros * self.per_task_cost
+        frames * self.frame_overhead + n as Micros * self.task_wire_cost()
     }
 
     /// The same `n` tasks submitted one line-per-task (the legacy
-    /// `SUBMIT` path): every task pays the full round trip.
+    /// `SUBMIT` path): every task pays the full round trip. Always
+    /// text-priced — the legacy path predates binary framing.
     pub fn line_per_task_cost(&self, n: usize) -> Micros {
         n as Micros * (self.frame_overhead + self.per_task_cost)
     }
@@ -516,8 +557,12 @@ mod tests {
     #[test]
     fn framed_submission_models_reduced_round_trips() {
         let mut f = svc();
-        f.cfg.framing =
-            FrameConfig { frame_cap: 100, frame_overhead: 1000, per_task_cost: 10 };
+        f.cfg.framing = FrameConfig {
+            frame_cap: 100,
+            frame_overhead: 1000,
+            per_task_cost: 10,
+            wire: WireFormat::Text,
+        };
         let tasks: Vec<usize> = (0..250).collect();
         let ready = f.submit_framed(&tasks, 0);
         // 3 frames x 1000 us + 250 task lines x 10 us.
@@ -531,6 +576,27 @@ mod tests {
             f.cfg.framing.submit_cost(250)
                 < f.cfg.framing.line_per_task_cost(250) / 10
         );
+    }
+
+    #[test]
+    fn binary_wire_divides_per_task_cost_only() {
+        let text = FrameConfig {
+            frame_cap: 100,
+            frame_overhead: 1000,
+            per_task_cost: 10,
+            wire: WireFormat::Text,
+        };
+        let bin = FrameConfig { wire: WireFormat::Binary, ..text.clone() };
+        assert_eq!(text.task_wire_cost(), 10);
+        assert_eq!(bin.task_wire_cost(), 10 / BIN_TEXT_COST_RATIO + 1);
+        // Frame overhead (the round trip) is format-independent; only
+        // the per-task decode term shrinks.
+        assert_eq!(text.submit_cost(250) - bin.submit_cost(250), 250 * (10 - 3));
+        // A nonzero text cost never models as free in binary.
+        let tiny = FrameConfig { per_task_cost: 1, ..bin.clone() };
+        assert_eq!(tiny.task_wire_cost(), 1);
+        // The legacy line-per-task path is text-priced regardless.
+        assert_eq!(bin.line_per_task_cost(10), text.line_per_task_cost(10));
     }
 
     #[test]

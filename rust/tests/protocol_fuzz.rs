@@ -1,0 +1,325 @@
+//! Property/fuzz battery for the Falkon wire protocol (text + binary
+//! framings and their negotiation).
+//!
+//! The invariants this file pins:
+//!
+//! 1. **Round-trip**: any batch of valid task specs survives
+//!    encode->decode bit-exactly, in both framings, for seeded random
+//!    workloads (ids across the full u64 range, arg counts 0..8, word
+//!    lengths 1..64).
+//! 2. **Truncation**: cutting an encoded frame at *any* byte boundary
+//!    produces a decode error or (at a frame boundary) a clean close —
+//!    never a panic, never a silently short result.
+//! 3. **Garbage**: feeding random bytes to the decoders may error or
+//!    (rarely) parse, but never panics and never over-reads.
+//! 4. **Mixed versions**: on one live server, legacy-text and binary
+//!    clients interoperate; a binary-preferring client degrades to text
+//!    against a legacy peer; a garbage preamble gets the connection
+//!    closed without taking the server down.
+//!
+//! Everything is seeded through `DetRng`, so a failure reproduces
+//! bit-identically.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gridswift::falkon::protocol::{
+    decode_doneb_bin, decode_doneb_body, decode_submitb_bin, decode_submitb_body,
+    encode_doneb, encode_doneb_bin, encode_submitb, encode_submitb_bin,
+    read_bin_frame, SubmitbBinIter, BIN_MAGIC, OP_SUBMITB,
+};
+use gridswift::falkon::{
+    FalkonClient, FalkonService, FalkonServiceConfig, FalkonTcpServer, RealDrpPolicy,
+    RemoteResult, TaskSpec,
+};
+use gridswift::providers::AppTask;
+use gridswift::util::DetRng;
+
+/// One random wire word: 1..64 chars from a whitespace-free alphabet.
+fn word(rng: &mut DetRng) -> String {
+    const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_-./@";
+    let len = 1 + rng.below(63) as usize;
+    (0..len)
+        .map(|_| ALPHA[rng.below(ALPHA.len() as u64) as usize] as char)
+        .collect()
+}
+
+fn random_specs(rng: &mut DetRng, n: usize) -> Vec<TaskSpec> {
+    (0..n)
+        .map(|_| {
+            let id = rng.next_u64();
+            let executable = word(rng);
+            let nargs = rng.below(8);
+            TaskSpec {
+                id,
+                executable,
+                args: (0..nargs).map(|_| word(rng)).collect(),
+            }
+        })
+        .collect()
+}
+
+fn random_results(rng: &mut DetRng, n: usize) -> Vec<RemoteResult> {
+    (0..n)
+        .map(|_| {
+            let ok = rng.below(2) == 0;
+            let error = if ok {
+                String::new()
+            } else {
+                // Error text may contain spaces (it is the status line's
+                // tail field); newlines are flattened on encode, so
+                // generate flat text here to keep round-trips exact.
+                let (a, b) = (word(rng), word(rng));
+                format!("{a} failed with {b}")
+            };
+            RemoteResult {
+                id: rng.next_u64(),
+                ok,
+                exec_us: rng.next_u64() >> 16,
+                wait_us: rng.next_u64() >> 16,
+                error,
+            }
+        })
+        .collect()
+}
+
+/// Strip the `[u32 len][u8 opcode]` header of a binary frame.
+fn payload(frame: &[u8]) -> &[u8] {
+    &frame[5..]
+}
+
+#[test]
+fn fuzz_submitb_roundtrip_both_framings() {
+    let mut rng = DetRng::new(0xF022);
+    for round in 0..50 {
+        let n = 1 + rng.below(40) as usize;
+        let specs = random_specs(&mut rng, n);
+        // Text framing.
+        let wire = encode_submitb(&specs).unwrap();
+        let body = wire.splitn(2, '\n').nth(1).unwrap();
+        let text =
+            decode_submitb_body(specs.len(), &mut std::io::Cursor::new(body)).unwrap();
+        assert_eq!(text, specs, "text round-trip, round {round}");
+        // Binary framing.
+        let mut buf = Vec::new();
+        encode_submitb_bin(&specs, &mut buf).unwrap();
+        let bin = decode_submitb_bin(payload(&buf)).unwrap();
+        assert_eq!(bin, specs, "binary round-trip, round {round}");
+    }
+}
+
+#[test]
+fn fuzz_doneb_roundtrip_both_framings() {
+    let mut rng = DetRng::new(0xD0EB);
+    for round in 0..50 {
+        let n = 1 + rng.below(40) as usize;
+        let results = random_results(&mut rng, n);
+        let wire = encode_doneb(&results);
+        let body = wire.splitn(2, '\n').nth(1).unwrap();
+        let text =
+            decode_doneb_body(results.len(), &mut std::io::Cursor::new(body)).unwrap();
+        assert_eq!(text, results, "text round-trip, round {round}");
+        let mut buf = Vec::new();
+        encode_doneb_bin(&results, &mut buf).unwrap();
+        let bin = decode_doneb_bin(payload(&buf)).unwrap();
+        assert_eq!(bin, results, "binary round-trip, round {round}");
+    }
+}
+
+#[test]
+fn fuzz_binary_truncation_never_panics_or_shortens() {
+    let mut rng = DetRng::new(0x7A17);
+    for _ in 0..20 {
+        let n = 1 + rng.below(6) as usize;
+        let specs = random_specs(&mut rng, n);
+        let mut frame = Vec::new();
+        encode_submitb_bin(&specs, &mut frame).unwrap();
+        // Every proper payload prefix must error (partial task data).
+        let p = payload(&frame);
+        for cut in 0..p.len() {
+            assert!(decode_submitb_bin(&p[..cut]).is_err(), "payload cut {cut}");
+        }
+        // Every socket-level prefix must error or cleanly close.
+        let mut scratch = Vec::new();
+        for cut in 0..frame.len() {
+            let mut r = std::io::Cursor::new(&frame[..cut]);
+            match read_bin_frame(&mut r, &mut scratch) {
+                Ok(None) => assert_eq!(cut, 0, "clean close only at a boundary"),
+                Ok(Some(op)) => {
+                    panic!("cut {cut} of {} decoded a whole frame op {op}", frame.len())
+                }
+                Err(_) => {} // truncation error: expected
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_garbage_bytes_never_panic_decoders() {
+    let mut rng = DetRng::new(0x6A2B);
+    let mut scratch = Vec::new();
+    for _ in 0..200 {
+        let len = rng.below(512) as usize;
+        let garbage: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        // Decoders must bound-check everything; outcomes may be Ok for
+        // coincidentally valid bytes, but never a panic or over-read.
+        let _ = decode_submitb_bin(&garbage);
+        let _ = decode_doneb_bin(&garbage);
+        if let Ok(mut iter) = SubmitbBinIter::parse(&garbage) {
+            let mut args = Vec::new();
+            while let Ok(Some(_)) = iter.next_task(&mut args) {}
+        }
+        let _ = read_bin_frame(&mut std::io::Cursor::new(&garbage), &mut scratch);
+        let text = String::from_utf8_lossy(&garbage);
+        let _ = decode_submitb_body(4, &mut std::io::Cursor::new(text.as_bytes()));
+        let _ = decode_doneb_body(4, &mut std::io::Cursor::new(text.as_bytes()));
+    }
+}
+
+// -- live mixed-version interop ----------------------------------------
+
+fn start_svc() -> (Arc<FalkonService>, FalkonTcpServer) {
+    let svc = FalkonService::start(
+        FalkonServiceConfig {
+            drp: RealDrpPolicy::static_pool(2),
+            executor_overhead: Duration::ZERO,
+        },
+        Arc::new(|_t: &AppTask| Ok(())),
+    );
+    let server = FalkonTcpServer::start(Arc::clone(&svc), "127.0.0.1:0").unwrap();
+    (svc, server)
+}
+
+#[test]
+fn fuzz_mixed_version_clients_against_one_server() {
+    let (_svc, server) = start_svc();
+    let mut rng = DetRng::new(0x1217);
+    let mut text = FalkonClient::connect(server.addr()).unwrap();
+    let mut bin = FalkonClient::connect_binary(server.addr()).unwrap();
+    assert!(bin.is_binary());
+    for round in 0..10usize {
+        let n = 1 + rng.below(30) as usize;
+        let mut specs = random_specs(&mut rng, n);
+        for (i, s) in specs.iter_mut().enumerate() {
+            s.id = (round * 1000 + i) as u64;
+        }
+        // Alternate which wire version carries each round.
+        let client = if round % 2 == 0 { &mut text } else { &mut bin };
+        client.submit_batch(&specs).unwrap();
+        let mut ids: Vec<u64> =
+            (0..n).map(|_| client.next_result().unwrap().id).collect();
+        ids.sort_unstable();
+        let mut want: Vec<u64> = specs.iter().map(|s| s.id).collect();
+        want.sort_unstable();
+        assert_eq!(ids, want, "round {round}");
+    }
+}
+
+#[test]
+fn fuzz_garbage_preambles_close_without_killing_the_server() {
+    let (_svc, server) = start_svc();
+    let mut rng = DetRng::new(0xBAD);
+    for _ in 0..10 {
+        use std::io::{Read, Write};
+        let mut raw = std::net::TcpStream::connect(server.addr()).unwrap();
+        // Random junk line — including a near-miss of the real magic.
+        let junk = match rng.below(3) {
+            0 => format!("{BIN_MAGIC} extra-token\n"),
+            1 => format!("{}\n", word(&mut rng).to_uppercase()),
+            _ => {
+                let len = rng.below(32);
+                let bytes: Vec<u8> =
+                    (0..len).map(|_| 33 + (rng.next_u64() % 90) as u8).collect();
+                String::from_utf8_lossy(&bytes).into_owned() + "\n"
+            }
+        };
+        raw.write_all(junk.as_bytes()).unwrap();
+        let mut buf = [0u8; 8];
+        assert_eq!(raw.read(&mut buf).unwrap(), 0, "server closed on {junk:?}");
+    }
+    // The accept loop is still alive: a well-formed client works.
+    let mut client = FalkonClient::connect_preferring_binary(server.addr()).unwrap();
+    let r = client.run(1, "sleep0", &[]).unwrap();
+    assert!(r.ok);
+}
+
+#[test]
+fn fuzz_binary_client_against_legacy_server_falls_back() {
+    // Legacy server: rejects the magic by closing, then speaks text.
+    use std::io::{BufRead, BufReader, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = std::thread::spawn(move || {
+        let (s1, _) = listener.accept().unwrap();
+        let mut r = BufReader::new(s1);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), BIN_MAGIC);
+        drop(r);
+        let (s2, _) = listener.accept().unwrap();
+        let mut r = BufReader::new(s2.try_clone().unwrap());
+        let mut w = s2;
+        // Serve a few SUBMITs, acking each with a RESULT line.
+        for _ in 0..5 {
+            let mut line = String::new();
+            if r.read_line(&mut line).unwrap() == 0 {
+                return;
+            }
+            let id: u64 = line.trim().split(' ').nth(1).unwrap().parse().unwrap();
+            w.write_all(format!("RESULT {id} ok 1 1 \n").as_bytes()).unwrap();
+        }
+    });
+    let mut client = FalkonClient::connect_preferring_binary(addr).unwrap();
+    assert!(!client.is_binary(), "degraded to text against a legacy peer");
+    for id in [3u64, 9, 27, 81, 243] {
+        let r = client.run(id, "sleep0", &[]).unwrap();
+        assert!(r.ok);
+        assert_eq!(r.id, id);
+    }
+    h.join().unwrap();
+}
+
+#[test]
+fn fuzz_truncated_binary_frame_mid_stream_errors_cleanly() {
+    // A raw "server" that acks the magic, then sends a DONEB frame cut
+    // mid-payload and closes: the client must surface an error, not
+    // hang or panic.
+    use std::io::{BufRead, BufReader, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = std::thread::spawn(move || {
+        let (s, _) = listener.accept().unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut w = s;
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap(); // BINV2
+        w.write_all(b"BINV2 OK\n").unwrap();
+        let mut frame = Vec::new();
+        encode_doneb_bin(
+            &[RemoteResult {
+                id: 1,
+                ok: true,
+                exec_us: 1,
+                wait_us: 1,
+                error: String::new(),
+            }],
+            &mut frame,
+        )
+        .unwrap();
+        w.write_all(&frame[..frame.len() - 3]).unwrap(); // cut mid-frame
+    });
+    let mut client = FalkonClient::connect_binary(addr).unwrap();
+    let err = client.next_result().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("truncated"),
+        "mid-frame close surfaces truncation: {err:#}"
+    );
+    h.join().unwrap();
+}
+
+// The opcode numbers are wire ABI for deployed peers: a renumbering must
+// fail loudly here, not silently desync mixed-version fleets.
+#[test]
+fn opcode_numbering_is_wire_abi() {
+    assert_eq!(OP_SUBMITB, 1);
+}

@@ -28,13 +28,35 @@ TRACKED_BY_BENCH = {
     "falkon_micro": [
         ("single-submit tasks/s", ("single_submit", "tasks_per_s"), True),
         ("batched-submit tasks/s", ("batched_submit", "tasks_per_s"), True),
+        # Wire codec rows are pure CPU (no sockets, best-of-3): stable
+        # enough to gate. The binary row is the one the sim's
+        # BIN_TEXT_COST_RATIO is calibrated against.
+        ("binary codec tasks/s", ("real_binary_codec_tasks_per_s",), True),
+        ("text codec tasks/s", ("real_text_codec_tasks_per_s",), False),
+        # End-to-end TCP rates ride shared-runner network stacks:
+        # present-or-fail, but report-only deltas.
+        ("binary TCP tasks/s", ("real_binary_tcp_tasks_per_s",), True),
+        ("text TCP tasks/s", ("real_text_tcp_tasks_per_s",), False),
+        # Queue contention sweep (best-of-3 on a single shard). The
+        # lock-free rows are the tentpole claim; the Mutex baseline is
+        # context.
+        ("lock-free queue 1w ops/s",
+         ("queue_contention_lockfree_1w_ops_per_s",), True),
+        ("lock-free queue 8w ops/s",
+         ("queue_contention_lockfree_8w_ops_per_s",), True),
+        ("mutex queue 1w ops/s",
+         ("queue_contention_mutex_1w_ops_per_s",), False),
+        ("mutex queue 8w ops/s",
+         ("queue_contention_mutex_8w_ops_per_s",), False),
     ],
     "fig12_throughput": [
         ("falkon in-process tasks/s", ("falkon_inproc_tasks_per_s",), False),
         ("falkon TCP framed tasks/s", ("falkon_tcp_framed_tasks_per_s",), False),
+        ("falkon TCP binary tasks/s", ("falkon_tcp_binary_tasks_per_s",), False),
         ("WAN sim framed tasks/s", ("sim_wan_framed_tasks_per_s",), True),
         ("WAN sim line-per-task tasks/s",
          ("sim_wan_line_per_task_tasks_per_s",), True),
+        ("WAN sim binary tasks/s", ("sim_wan_binary_tasks_per_s",), True),
     ],
     # All diffusion rows are deterministic virtual-time sims: gate them
     # all (a >20% drop means a code change, not runner noise).
