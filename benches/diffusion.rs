@@ -42,6 +42,8 @@ use gridswift::sim::{Dag, SharedFs, SimTask};
 use gridswift::util::json::Json;
 use gridswift::util::time::secs;
 use gridswift::util::DetRng;
+use gridswift::telemetry::counters;
+use gridswift::util::mem::vm_hwm_bytes;
 
 const MB: u64 = 1024 * 1024;
 /// Per-volume intermediate size (the paper's fMRI volumes are a few
@@ -335,6 +337,14 @@ fn main() {
     report.set("peer_fetch_fs_gb", peer.fs_gb);
     report.set("peer_fetch_peer_gb", peer.peer_gb);
     report.set("sharedfs_cold_fs_gb", cold.fs_gb);
+    if let Some(hwm) = vm_hwm_bytes() {
+        report.set("peak_rss_mb", hwm as f64 / 1e6);
+    }
+    let events = counters::global().snapshot();
+    report.set("cache_hit_bytes", events.get("cache_hit_bytes"));
+    report.set("cache_miss_bytes", events.get("cache_miss_bytes"));
+    report.set("peer_transfer_bytes", events.get("peer_transfer_bytes"));
+    report.set("sharedfs_transfer_bytes", events.get("sharedfs_transfer_bytes"));
     std::fs::write("BENCH_diffusion.json", report.render())
         .expect("write BENCH_diffusion.json");
     println!("\nwrote BENCH_diffusion.json");

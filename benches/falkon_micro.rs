@@ -28,11 +28,13 @@ use gridswift::falkon::{
     FalkonClient, FalkonService, FalkonServiceConfig, FalkonTcpServer,
     MutexShardedQueue, RealDrpPolicy, ShardedQueue, TaskSpec,
 };
+use gridswift::metrics::stats::percentile_sorted;
 use gridswift::metrics::Table;
 use gridswift::providers::AppTask;
 use gridswift::sim::falkon_model::{DrpPolicy, FalkonConfig, FalkonSim};
+use gridswift::telemetry::counters;
 use gridswift::util::json::Json;
-use gridswift::util::mem::rss_bytes;
+use gridswift::util::mem::{rss_bytes, vm_hwm_bytes};
 use gridswift::util::DetRng;
 
 // Same task shape as the seed benchmark (including the per-task key
@@ -52,17 +54,23 @@ fn task(id: u64) -> AppTask {
 /// One throughput run: returns (tasks/s, sorted dispatch waits in us).
 struct RunStats {
     rate: f64,
-    waits_us: Vec<u64>,
+    waits_us: Vec<f64>,
 }
 
 impl RunStats {
+    /// Nearest-rank percentile, p in [0, 100] — the same
+    /// `metrics::stats` helper `Timeline::p50/p95/p99` sit on, so
+    /// bench and sim percentiles can never drift apart.
     fn percentile(&self, p: f64) -> u64 {
-        if self.waits_us.is_empty() {
-            return 0;
-        }
-        let idx = ((self.waits_us.len() - 1) as f64 * p).round() as usize;
-        self.waits_us[idx]
+        percentile_sorted(&self.waits_us, p) as u64
     }
+}
+
+/// Sort a drained wait-time sample into the f64 shape
+/// [`percentile_sorted`] consumes (outside any timed region).
+fn sorted_sample(mut waits: Vec<u64>) -> Vec<f64> {
+    waits.sort_unstable();
+    waits.into_iter().map(|w| w as f64).collect()
 }
 
 fn run_single(svc: &FalkonService, n: u64) -> RunStats {
@@ -74,13 +82,12 @@ fn run_single(svc: &FalkonService, n: u64) -> RunStats {
             let _ = tx.send(r.wait_us);
         }));
     }
-    let mut waits_us: Vec<u64> = Vec::with_capacity(n as usize);
+    let mut waits: Vec<u64> = Vec::with_capacity(n as usize);
     for _ in 0..n {
-        waits_us.push(rx.recv().unwrap());
+        waits.push(rx.recv().unwrap());
     }
     let rate = n as f64 / t0.elapsed().as_secs_f64();
-    waits_us.sort_unstable();
-    RunStats { rate, waits_us }
+    RunStats { rate, waits_us: sorted_sample(waits) }
 }
 
 fn run_batched(svc: &FalkonService, n: u64, chunk: u64) -> RunStats {
@@ -101,13 +108,12 @@ fn run_batched(svc: &FalkonService, n: u64, chunk: u64) -> RunStats {
         svc.submit_batch(batch);
         i = hi;
     }
-    let mut waits_us: Vec<u64> = Vec::with_capacity(n as usize);
+    let mut waits: Vec<u64> = Vec::with_capacity(n as usize);
     for _ in 0..n {
-        waits_us.push(rx.recv().unwrap());
+        waits.push(rx.recv().unwrap());
     }
     let rate = n as f64 / t0.elapsed().as_secs_f64();
-    waits_us.sort_unstable();
-    RunStats { rate, waits_us }
+    RunStats { rate, waits_us: sorted_sample(waits) }
 }
 
 /// Seeded wire workload: realistic Montage-style stage names with a
@@ -270,15 +276,15 @@ fn main() {
         t.row(&[
             execs.to_string(),
             format!("{:.0}", stats.rate),
-            stats.percentile(0.50).to_string(),
-            stats.percentile(0.99).to_string(),
+            stats.percentile(50.0).to_string(),
+            stats.percentile(99.0).to_string(),
             if execs == 4 { "487 (sustained)" } else { "-" }.to_string(),
         ]);
         let mut point = Json::obj();
         point.set("executors", execs);
         point.set("tasks_per_s", stats.rate);
-        point.set("p50_dispatch_us", stats.percentile(0.50));
-        point.set("p99_dispatch_us", stats.percentile(0.99));
+        point.set("p50_dispatch_us", stats.percentile(50.0));
+        point.set("p99_dispatch_us", stats.percentile(99.0));
         per_exec.push(point);
         if execs == 4 {
             headline = Some(stats);
@@ -289,8 +295,8 @@ fn main() {
     let mut single = Json::obj();
     single.set("executors", 4u64);
     single.set("tasks_per_s", headline.rate);
-    single.set("p50_dispatch_us", headline.percentile(0.50));
-    single.set("p99_dispatch_us", headline.percentile(0.99));
+    single.set("p50_dispatch_us", headline.percentile(50.0));
+    single.set("p99_dispatch_us", headline.percentile(99.0));
     report.set("single_submit", single);
     report.set("per_executor", Json::Arr(per_exec));
 
@@ -301,16 +307,16 @@ fn main() {
     println!(
         "  {:.0} tasks/s, p50 {} us, p99 {} us ({:.1}x the single-submit path)",
         batched.rate,
-        batched.percentile(0.50),
-        batched.percentile(0.99),
+        batched.percentile(50.0),
+        batched.percentile(99.0),
         batched.rate / headline.rate,
     );
     let mut b = Json::obj();
     b.set("executors", 4u64);
     b.set("chunk", 1024u64);
     b.set("tasks_per_s", batched.rate);
-    b.set("p50_dispatch_us", batched.percentile(0.50));
-    b.set("p99_dispatch_us", batched.percentile(0.99));
+    b.set("p50_dispatch_us", batched.percentile(50.0));
+    b.set("p99_dispatch_us", batched.percentile(99.0));
     report.set("batched_submit", b);
     drop(svc);
 
@@ -443,6 +449,16 @@ fn main() {
             dispatched as f64 / (now as f64 / 1e6)
         );
     }
+
+    // Peak RSS + global telemetry totals ride along in every bench
+    // report so trend tracking sees memory and wire-event regressions.
+    if let Some(hwm) = vm_hwm_bytes() {
+        report.set("peak_rss_mb", hwm as f64 / 1e6);
+    }
+    let events = counters::global().snapshot();
+    report.set("frames_encoded", events.get("frames_encoded"));
+    report.set("frames_decoded", events.get("frames_decoded"));
+    report.set("tasks_dispatched", events.get("tasks_dispatched"));
 
     let out = report.render();
     std::fs::write("BENCH_dispatch.json", &out).expect("write BENCH_dispatch.json");

@@ -30,6 +30,8 @@ use gridswift::sim::lrm::{GramConfig, LrmConfig};
 use gridswift::sim::Dag;
 use gridswift::stack::{build, ProviderKind, StackOptions};
 use gridswift::swiftscript::compile;
+use gridswift::telemetry::counters;
+use gridswift::util::mem::vm_hwm_bytes;
 
 fn service(workers: usize) -> Arc<FalkonService> {
     FalkonService::start(
@@ -297,6 +299,12 @@ fn main() {
     report.set("sim_wan_binary_tasks_per_s", wan_binary);
     report.set("paper_falkon_direct_tasks_per_s", 120u64);
     report.set("paper_swift_falkon_lan_tasks_per_s", 56u64);
+    if let Some(hwm) = vm_hwm_bytes() {
+        report.set("peak_rss_mb", hwm as f64 / 1e6);
+    }
+    let events = counters::global().snapshot();
+    report.set("frames_encoded", events.get("frames_encoded"));
+    report.set("frames_decoded", events.get("frames_decoded"));
     std::fs::write("BENCH_fig12.json", report.render())
         .expect("write BENCH_fig12.json");
     println!("\nwrote BENCH_fig12.json");

@@ -20,6 +20,7 @@
 use gridswift::sim::experiment::{run_cell, run_matrix, summary_table, systems};
 use gridswift::sim::Dag;
 use gridswift::util::json::Json;
+use gridswift::util::mem::vm_hwm_bytes;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -77,6 +78,9 @@ fn main() {
             .map(|c| c.efficiency)
             .fold(f64::INFINITY, f64::min);
         report.set(&format!("sim_sched_{dag}_{sched}_efficiency"), worst);
+    }
+    if let Some(hwm) = vm_hwm_bytes() {
+        report.set("peak_rss_mb", hwm as f64 / 1e6);
     }
     std::fs::write("BENCH_schedulers.json", report.render())
         .expect("write BENCH_schedulers.json");

@@ -31,6 +31,7 @@
 
 use super::cache::CacheModel;
 use super::{DatasetId, DatasetRef};
+use crate::telemetry::counters::{self, Counter};
 
 /// Iterate `refs` keeping only the first occurrence of each dataset id.
 ///
@@ -223,6 +224,10 @@ impl DataCatalog {
                 self.log.push(CacheEvent::Evict { site, dataset: e });
             }
         }
+        // Passive observability only: the global registry never feeds
+        // back into catalog state, so both worlds stay bit-identical.
+        counters::add(Counter::CacheHitBytes, hit_bytes);
+        counters::add(Counter::CacheMissBytes, miss_bytes);
         (hit_bytes, miss_bytes)
     }
 

@@ -27,6 +27,7 @@
 //! path, keeping seeded runs bit-identical.
 
 use super::{DatasetId, DatasetRef};
+use crate::telemetry::counters::{self, Counter};
 use crate::util::time::Micros;
 
 /// One directed-capacity-free link: bandwidth plus a fixed per-transfer
@@ -245,6 +246,14 @@ impl TransferPlanner {
         holders: &[usize],
     ) -> TransferPlan {
         let (source, est_us) = self.cheapest(dest, d_bytes, holders);
+        match source {
+            TransferSource::SharedFs => {
+                counters::add(Counter::SharedFsTransferBytes, d_bytes)
+            }
+            TransferSource::Peer(_) => {
+                counters::add(Counter::PeerTransferBytes, d_bytes)
+            }
+        }
         let p = TransferPlan { dataset, dest, source, bytes: d_bytes, est_us };
         self.log.push(p);
         p

@@ -36,6 +36,7 @@
 
 use crate::policy::clock::Clock;
 use crate::policy::SiteScoreBoard;
+use crate::telemetry::counters::{self, Counter};
 use crate::util::DetRng;
 
 use super::catalog::dedup_by_id;
@@ -93,6 +94,26 @@ impl LocalityRouter {
     /// draw unless no site passes `filter`.
     #[allow(clippy::too_many_arguments)]
     pub fn pick<C: Clock>(
+        &self,
+        board: &SiteScoreBoard<C>,
+        catalog: &DataCatalog,
+        planner: Option<&TransferPlanner>,
+        inputs: &[DatasetRef],
+        avoid: Option<usize>,
+        now: C::Time,
+        rng: &mut DetRng,
+        filter: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        let picked = self
+            .pick_inner(board, catalog, planner, inputs, avoid, now, rng, filter);
+        if picked.is_some() {
+            counters::incr(Counter::RouterPicks);
+        }
+        picked
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn pick_inner<C: Clock>(
         &self,
         board: &SiteScoreBoard<C>,
         catalog: &DataCatalog,

@@ -53,7 +53,17 @@
 //! STATS (op 3), C->S:    empty payload
 //! STATSR (op 4), S->C:   5 x u64 (submitted completed failed queue execs)
 //! QUIT (op 5), C->S:     empty payload
+//! SCRAPE (op 6), C->S:   empty payload
+//! SCRAPER (op 7), S->C:  u16 version, u8 n_sections, then per section:
+//!     u8 id, u32 len, len payload bytes (unknown ids skipped)
 //! ```
+//!
+//! `SCRAPE` is the full-telemetry sibling of `STATS`: the reply carries
+//! a versioned [`crate::telemetry::MetricsSnapshot`] — service gauges
+//! (section 1), counter totals (section 2), and log2 histogram buckets
+//! (section 3) — with metric *names* on the wire so decoders never
+//! misattribute a renumbered counter slot. Decoders skip sections they
+//! do not recognize, so new sections ship without a version bump.
 //!
 //! Encode targets a reusable per-connection buffer (zero per-task
 //! allocations); server-side decode borrows executable/arg bytes
@@ -79,6 +89,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::policy::{FrameCoalescer, FramePolicy, RealClock};
 use crate::providers::{AppTask, TaskDone};
+use crate::telemetry::counters::{self, Counter, Hist};
+use crate::telemetry::{MetricsSnapshot, ServiceSection};
 
 use super::service::FalkonService;
 
@@ -257,6 +269,14 @@ pub const OP_DONEB: u8 = 2;
 pub const OP_STATS: u8 = 3;
 pub const OP_STATS_REPLY: u8 = 4;
 pub const OP_QUIT: u8 = 5;
+pub const OP_SCRAPE: u8 = 6;
+pub const OP_SCRAPE_REPLY: u8 = 7;
+
+/// `SCRAPE` reply section ids. Unknown ids are skipped by length, so
+/// new sections are backward compatible without a version bump.
+pub const SEC_SERVICE: u8 = 1;
+pub const SEC_COUNTERS: u8 = 2;
+pub const SEC_HISTS: u8 = 3;
 
 /// Begin a frame in `buf`: length placeholder + opcode. Must be paired
 /// with [`finish_bin_frame`].
@@ -275,6 +295,7 @@ fn finish_bin_frame(buf: &mut Vec<u8>) -> Result<()> {
     }
     let len = (body as u32).to_le_bytes();
     buf[..4].copy_from_slice(&len);
+    counters::incr(Counter::FramesEncoded);
     Ok(())
 }
 
@@ -301,6 +322,7 @@ pub fn encode_submitb_bin(tasks: &[TaskSpec], buf: &mut Vec<u8>) -> Result<()> {
         );
     }
     begin_bin_frame(buf, OP_SUBMITB);
+    counters::observe(Hist::FrameTasks, tasks.len() as u64);
     buf.extend_from_slice(&(tasks.len() as u32).to_le_bytes());
     for t in tasks {
         buf.extend_from_slice(&t.id.to_le_bytes());
@@ -327,6 +349,7 @@ pub fn encode_doneb_bin(results: &[RemoteResult], buf: &mut Vec<u8>) -> Result<(
         );
     }
     begin_bin_frame(buf, OP_DONEB);
+    counters::observe(Hist::FrameTasks, results.len() as u64);
     buf.extend_from_slice(&(results.len() as u32).to_le_bytes());
     for r in results {
         buf.extend_from_slice(&r.id.to_le_bytes());
@@ -356,6 +379,152 @@ pub fn encode_stats_reply_bin(stats: &[u64; 5], buf: &mut Vec<u8>) {
         buf.extend_from_slice(&v.to_le_bytes());
     }
     finish_bin_frame(buf).expect("40-byte frame fits");
+}
+
+/// Encode a binary `SCRAPE` request into `buf` (cleared first).
+pub fn encode_scrape_req_bin(buf: &mut Vec<u8>) {
+    begin_bin_frame(buf, OP_SCRAPE);
+    finish_bin_frame(buf).expect("empty frame fits");
+}
+
+/// Begin a length-prefixed `SCRAPE` section: id + u32 length
+/// placeholder. Returns the payload start for [`finish_section`].
+fn begin_section(buf: &mut Vec<u8>, id: u8) -> usize {
+    buf.push(id);
+    buf.extend_from_slice(&[0u8; 4]);
+    buf.len()
+}
+
+/// Patch the section length written by [`begin_section`].
+fn finish_section(buf: &mut Vec<u8>, start: usize) {
+    let len = (buf.len() - start) as u32;
+    buf[start - 4..start].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Encode a binary `SCRAPE` reply into `buf` (cleared first): version,
+/// section count, then the service / counters / histograms sections.
+pub fn encode_scrape_reply_bin(snap: &MetricsSnapshot, buf: &mut Vec<u8>) -> Result<()> {
+    begin_bin_frame(buf, OP_SCRAPE_REPLY);
+    buf.extend_from_slice(&snap.version.to_le_bytes());
+    buf.push(3); // n_sections
+    let sv = &snap.service;
+    let start = begin_section(buf, SEC_SERVICE);
+    for v in [
+        sv.uptime_us,
+        sv.submitted,
+        sv.completed,
+        sv.failed,
+        sv.queue_len,
+        sv.peak_queue,
+        sv.live_executors,
+        sv.peak_executors,
+        sv.busy_us,
+    ] {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    finish_section(buf, start);
+    let start = begin_section(buf, SEC_COUNTERS);
+    buf.extend_from_slice(&(snap.counters.counters.len() as u32).to_le_bytes());
+    for (name, total) in &snap.counters.counters {
+        put_word16(buf, name, "counter name")?;
+        buf.extend_from_slice(&total.to_le_bytes());
+    }
+    finish_section(buf, start);
+    let start = begin_section(buf, SEC_HISTS);
+    buf.extend_from_slice(&(snap.counters.hists.len() as u32).to_le_bytes());
+    for (name, buckets) in &snap.counters.hists {
+        put_word16(buf, name, "histogram name")?;
+        if buckets.len() > u16::MAX as usize {
+            bail!("histogram {name} has {} buckets", buckets.len());
+        }
+        buf.extend_from_slice(&(buckets.len() as u16).to_le_bytes());
+        for b in buckets {
+            buf.extend_from_slice(&b.to_le_bytes());
+        }
+    }
+    finish_section(buf, start);
+    finish_bin_frame(buf)
+}
+
+/// Cap on metric entries per `SCRAPE` section: defense against hostile
+/// counts (the registry ships a few dozen).
+const MAX_SCRAPE_METRICS: usize = 4096;
+
+/// Decode a binary `SCRAPE` reply payload. Unknown sections are
+/// skipped by their length prefix — a newer server's extra sections
+/// never break an older client.
+pub fn decode_scrape_reply_bin(payload: &[u8]) -> Result<MetricsSnapshot> {
+    let mut cur = BinCursor::new(payload);
+    let version = cur.u16()?;
+    let n_sections = cur.u8()?;
+    let mut snap = MetricsSnapshot { version, ..MetricsSnapshot::default() };
+    for _ in 0..n_sections {
+        let id = cur.u8()?;
+        let len = cur.u32()? as usize;
+        let mut sec = BinCursor::new(cur.take(len)?);
+        match id {
+            SEC_SERVICE => {
+                let mut v = [0u64; 9];
+                for slot in &mut v {
+                    *slot = sec.u64()?;
+                }
+                if !sec.is_empty() {
+                    bail!("trailing bytes in SCRAPE service section");
+                }
+                snap.service = ServiceSection {
+                    uptime_us: v[0],
+                    submitted: v[1],
+                    completed: v[2],
+                    failed: v[3],
+                    queue_len: v[4],
+                    peak_queue: v[5],
+                    live_executors: v[6],
+                    peak_executors: v[7],
+                    busy_us: v[8],
+                };
+            }
+            SEC_COUNTERS => {
+                let n = sec.u32()? as usize;
+                if n > MAX_SCRAPE_METRICS {
+                    bail!("SCRAPE counter section of {n} entries");
+                }
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name = sec.str16()?.to_string();
+                    out.push((name, sec.u64()?));
+                }
+                if !sec.is_empty() {
+                    bail!("trailing bytes in SCRAPE counter section");
+                }
+                snap.counters.counters = out;
+            }
+            SEC_HISTS => {
+                let n = sec.u32()? as usize;
+                if n > MAX_SCRAPE_METRICS {
+                    bail!("SCRAPE histogram section of {n} entries");
+                }
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name = sec.str16()?.to_string();
+                    let nb = sec.u16()? as usize;
+                    let mut buckets = Vec::with_capacity(nb);
+                    for _ in 0..nb {
+                        buckets.push(sec.u64()?);
+                    }
+                    out.push((name, buckets));
+                }
+                if !sec.is_empty() {
+                    bail!("trailing bytes in SCRAPE histogram section");
+                }
+                snap.counters.hists = out;
+            }
+            _ => {} // forward compatibility: unknown section, skipped
+        }
+    }
+    if !cur.is_empty() {
+        bail!("trailing bytes after SCRAPE reply sections");
+    }
+    Ok(snap)
 }
 
 /// A borrowing cursor over one frame payload. Every read is
@@ -547,6 +716,7 @@ pub fn read_bin_frame(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<Option<u8>
     buf.clear();
     buf.resize(len - 1, 0);
     r.read_exact(buf).context("truncated binary frame (body)")?;
+    counters::incr(Counter::FramesDecoded);
     Ok(Some(op[0]))
 }
 
@@ -796,6 +966,13 @@ fn serve_conn_bin(
                 let mut w = conn.writer.lock().unwrap();
                 let ConnWriter { stream, buf, .. } = &mut *w;
                 encode_stats_reply_bin(&stats, buf);
+                stream.write_all(buf)?;
+            }
+            OP_SCRAPE => {
+                let snap = svc.scrape_snapshot();
+                let mut w = conn.writer.lock().unwrap();
+                let ConnWriter { stream, buf, .. } = &mut *w;
+                encode_scrape_reply_bin(&snap, buf)?;
                 stream.write_all(buf)?;
             }
             OP_QUIT => return Ok(()),
@@ -1184,6 +1361,38 @@ impl FalkonClient {
                 ));
             }
             self.decode_ack_line(&line)?;
+        }
+    }
+
+    /// Pull a full live [`MetricsSnapshot`] from the service: the
+    /// telemetry sibling of [`FalkonClient::stats`]. Binary framing
+    /// only — a text connection has no scrape opcode. Results arriving
+    /// before the reply are stashed, not dropped.
+    pub fn scrape(&mut self) -> Result<MetricsSnapshot> {
+        self.flush()?;
+        if !self.binary {
+            bail!("scrape requires binary framing (connect_preferring_binary)");
+        }
+        {
+            let mut w = self.writer.lock().unwrap();
+            let ClientWriter { stream, enc, .. } = &mut *w;
+            encode_scrape_req_bin(enc);
+            stream.write_all(enc)?;
+        }
+        loop {
+            let Some(op) = read_bin_frame(&mut self.reader, &mut self.frame_buf)?
+            else {
+                bail!("connection closed");
+            };
+            match op {
+                OP_SCRAPE_REPLY => {
+                    return decode_scrape_reply_bin(&self.frame_buf);
+                }
+                OP_DONEB => {
+                    self.pending.extend(decode_doneb_bin(&self.frame_buf)?);
+                }
+                _ => {}
+            }
         }
     }
 }
@@ -1652,6 +1861,72 @@ mod tests {
         assert!(bin_payload(&buf, OP_STATS).is_empty());
     }
 
+    fn sample_snapshot() -> MetricsSnapshot {
+        use crate::telemetry::counters::LocalCounters;
+        let mut local = LocalCounters::new();
+        local.add(Counter::TasksSubmitted, 120);
+        local.add(Counter::FramesEncoded, 9);
+        for v in [5u64, 80, 1300] {
+            local.observe(Hist::DispatchWaitUs, v);
+        }
+        MetricsSnapshot::new(
+            ServiceSection {
+                uptime_us: 1_234_567,
+                submitted: 120,
+                completed: 118,
+                failed: 2,
+                queue_len: 0,
+                peak_queue: 64,
+                live_executors: 2,
+                peak_executors: 4,
+                busy_us: 99_000,
+            },
+            local.snapshot(),
+        )
+    }
+
+    #[test]
+    fn scrape_bin_roundtrip() {
+        let snap = sample_snapshot();
+        let mut buf = Vec::new();
+        encode_scrape_reply_bin(&snap, &mut buf).unwrap();
+        let got = decode_scrape_reply_bin(bin_payload(&buf, OP_SCRAPE_REPLY)).unwrap();
+        assert_eq!(got, snap);
+        encode_scrape_req_bin(&mut buf);
+        assert!(bin_payload(&buf, OP_SCRAPE).is_empty());
+    }
+
+    #[test]
+    fn truncated_scrape_reply_is_an_error_at_every_cut() {
+        let mut buf = Vec::new();
+        encode_scrape_reply_bin(&sample_snapshot(), &mut buf).unwrap();
+        let payload = bin_payload(&buf, OP_SCRAPE_REPLY);
+        for cut in 0..payload.len() {
+            assert!(
+                decode_scrape_reply_bin(&payload[..cut]).is_err(),
+                "cut at {cut} must error, not panic or succeed"
+            );
+        }
+    }
+
+    #[test]
+    fn scrape_decoder_skips_unknown_sections() {
+        // A future server prepends a section id 200: an old decoder
+        // must skip it by length and still read the known sections.
+        let snap = sample_snapshot();
+        let mut buf = Vec::new();
+        encode_scrape_reply_bin(&snap, &mut buf).unwrap();
+        let payload = bin_payload(&buf, OP_SCRAPE_REPLY);
+        let mut patched = payload[..3].to_vec();
+        patched[2] = payload[2] + 1; // n_sections
+        patched.extend_from_slice(&[200u8]);
+        patched.extend_from_slice(&3u32.to_le_bytes());
+        patched.extend_from_slice(&[1, 2, 3]);
+        patched.extend_from_slice(&payload[3..]);
+        let got = decode_scrape_reply_bin(&patched).unwrap();
+        assert_eq!(got, snap);
+    }
+
     #[test]
     fn truncated_bin_payload_is_an_error_at_every_cut() {
         let tasks = vec![spec(1, "convert", &["-i", "a.img"])];
@@ -1747,6 +2022,32 @@ mod tests {
         assert_eq!(completed, 120);
         assert_eq!(failed, 12);
         assert_eq!(execs, 2);
+    }
+
+    #[test]
+    fn tcp_scrape_returns_live_snapshot() {
+        let (_svc, server) = start_svc();
+        let mut client = FalkonClient::connect_binary(server.addr()).unwrap();
+        let tasks: Vec<TaskSpec> =
+            (0..40u64).map(|i| spec(i, "sleep0", &[])).collect();
+        client.submit_batch(&tasks).unwrap();
+        for _ in 0..tasks.len() {
+            assert!(client.next_result().unwrap().ok);
+        }
+        let snap = client.scrape().unwrap();
+        assert_eq!(snap.version, crate::telemetry::SNAPSHOT_VERSION);
+        assert_eq!(snap.service.submitted, 40);
+        assert_eq!(snap.service.completed, 40);
+        assert_eq!(snap.service.failed, 0);
+        assert_eq!(snap.service.live_executors, 2);
+        // The counter registry is process-global (floors, not exacts:
+        // sibling tests record concurrently).
+        assert!(snap.counters.get("tasks_submitted") >= 40);
+        assert!(snap.counters.get("frames_decoded") >= 1);
+        assert!(snap.counters.hist_count("dispatch_wait_us") >= 40);
+        // A text connection has no scrape opcode.
+        let mut text = FalkonClient::connect(server.addr()).unwrap();
+        assert!(text.scrape().is_err());
     }
 
     #[test]

@@ -43,6 +43,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+use crate::telemetry::counters::{self, Counter, Hist};
+
 /// Cap on queue shards. Tuned from `benches/falkon_micro.rs` (see
 /// DESIGN.md §2.5): past 8 shards the per-shard locks are essentially
 /// uncontended on the 4–16-executor pools the benches exercise, while
@@ -306,6 +308,7 @@ impl<T> ShardedQueue<T> {
     }
 
     fn spill(shard: &Shard<T>, item: T) {
+        counters::incr(Counter::QueueOverflowed);
         let mut q = shard.overflow.lock().unwrap();
         q.push_back(item);
         shard.overflow_len.store(q.len(), Ordering::Release);
@@ -316,6 +319,8 @@ impl<T> ShardedQueue<T> {
         let s = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
         self.insert(&self.shards[s], item);
         let new_len = self.len.fetch_add(1, Ordering::SeqCst) + 1;
+        counters::incr(Counter::QueuePushed);
+        counters::observe(Hist::QueueDepth, new_len as u64);
         self.bump_peak(new_len);
         self.wake(s, 1);
     }
@@ -346,6 +351,8 @@ impl<T> ShardedQueue<T> {
             self.wake(s, take);
             pushed += take;
         }
+        counters::add(Counter::QueuePushed, k as u64);
+        counters::observe(Hist::QueueDepth, max_len as u64);
         self.bump_peak(max_len);
     }
 
@@ -401,6 +408,9 @@ impl<T> ShardedQueue<T> {
             };
             let took = Self::drain_shard(shard, target, out);
             if took > 0 {
+                if off > 0 {
+                    counters::add(Counter::QueueStolen, took as u64);
+                }
                 self.len.fetch_sub(took, Ordering::SeqCst);
                 return took;
             }

@@ -29,8 +29,12 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::metrics::interner::Sym;
 use crate::policy::{DrpConfig, DrpController};
 use crate::providers::{AppRunner, AppTask, BundleDone, TaskResult};
+use crate::telemetry::counters::{self, Counter, Hist};
+use crate::telemetry::spans::{self, SpanHandle, Stage};
+use crate::telemetry::{MetricsSnapshot, ServiceSection};
 
 use super::queue::ShardedQueue;
 
@@ -214,6 +218,21 @@ struct Queued {
     task: AppTask,
     completion: Completion,
     enqueued: Instant,
+    /// Lifecycle span handle, built (label interned) once at submit.
+    /// `None` whenever global span recording is off — the executor's
+    /// per-stage record sites then cost a single `Option` check.
+    span: Option<SpanHandle>,
+}
+
+/// Build the task's lifecycle span and record its `Queued` stage.
+/// Returns `None` (skipping the intern entirely) when spans are off.
+fn queued_span(task: &AppTask) -> Option<SpanHandle> {
+    if !spans::enabled() {
+        return None;
+    }
+    let h = SpanHandle::new(task.id, Sym::intern(&task.executable));
+    spans::record(h.event(Stage::Queued, spans::real_now_us()));
+    Some(h)
 }
 
 struct Inner {
@@ -224,6 +243,7 @@ struct Inner {
     next_exec_id: AtomicU64,
     stats: ServiceStats,
     arg_pool: ArgPool,
+    started: Instant,
 }
 
 /// The Falkon service handle.
@@ -244,6 +264,7 @@ impl FalkonService {
             next_exec_id: AtomicU64::new(0),
             stats: ServiceStats::default(),
             arg_pool: ArgPool::default(),
+            started: Instant::now(),
         });
         // Bootstrap the minimum pool.
         for _ in 0..cfg.drp.min_executors {
@@ -283,10 +304,13 @@ impl FalkonService {
     pub fn submit(&self, task: AppTask, done: TaskDone) {
         let inner = &self.inner;
         inner.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        counters::incr(Counter::TasksSubmitted);
+        let span = queued_span(&task);
         inner.queue.push(Queued {
             task,
             completion: Completion::Single(done),
             enqueued: Instant::now(),
+            span,
         });
         self.note_queue_peak();
     }
@@ -302,13 +326,18 @@ impl FalkonService {
             .stats
             .submitted
             .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        counters::add(Counter::TasksSubmitted, batch.len() as u64);
         let now = Instant::now();
         let items: Vec<Queued> = batch
             .into_iter()
-            .map(|(task, done)| Queued {
-                task,
-                completion: Completion::Single(done),
-                enqueued: now,
+            .map(|(task, done)| {
+                let span = queued_span(&task);
+                Queued {
+                    task,
+                    completion: Completion::Single(done),
+                    enqueued: now,
+                    span,
+                }
             })
             .collect();
         inner.queue.push_batch(items);
@@ -325,6 +354,7 @@ impl FalkonService {
         }
         let inner = &self.inner;
         inner.stats.submitted.fetch_add(n as u64, Ordering::Relaxed);
+        counters::add(Counter::TasksSubmitted, n as u64);
         let agg = Arc::new(BundleAgg {
             results: Mutex::new((0..n).map(|_| None).collect()),
             remaining: AtomicUsize::new(n),
@@ -334,10 +364,14 @@ impl FalkonService {
         let items: Vec<Queued> = tasks
             .into_iter()
             .enumerate()
-            .map(|(idx, task)| Queued {
-                task,
-                completion: Completion::Bundle { agg: Arc::clone(&agg), idx },
-                enqueued: now,
+            .map(|(idx, task)| {
+                let span = queued_span(&task);
+                Queued {
+                    task,
+                    completion: Completion::Bundle { agg: Arc::clone(&agg), idx },
+                    enqueued: now,
+                    span,
+                }
             })
             .collect();
         inner.queue.push_batch(items);
@@ -380,6 +414,26 @@ impl FalkonService {
     /// Registered executors currently alive.
     pub fn live_executors(&self) -> usize {
         self.inner.live.load(Ordering::SeqCst)
+    }
+
+    /// A full live metric snapshot: the service gauges plus the merged
+    /// process-global counter/histogram registry. This is what the
+    /// binary `OP_SCRAPE` protocol ships to `FalkonClient::scrape()`.
+    pub fn scrape_snapshot(&self) -> MetricsSnapshot {
+        self.note_queue_peak();
+        let st = &self.inner.stats;
+        let service = ServiceSection {
+            uptime_us: self.inner.started.elapsed().as_micros() as u64,
+            submitted: st.submitted.load(Ordering::SeqCst),
+            completed: st.completed.load(Ordering::SeqCst),
+            failed: st.failed.load(Ordering::SeqCst),
+            queue_len: self.queue_len() as u64,
+            peak_queue: st.peak_queue.load(Ordering::SeqCst) as u64,
+            live_executors: self.live_executors() as u64,
+            peak_executors: st.peak_executors.load(Ordering::SeqCst) as u64,
+            busy_us: st.busy_us.load(Ordering::SeqCst),
+        };
+        MetricsSnapshot::new(service, counters::global().snapshot())
     }
 
     /// Block until the queue drains and all executors are idle.
@@ -542,20 +596,39 @@ fn executor_loop(id: u64, home: usize, inner: Arc<Inner>) {
             continue;
         }
         idle_since = None;
+        counters::add(Counter::TasksDispatched, batch.len() as u64);
         for mut item in batch.drain(..) {
             let wait_us = item.enqueued.elapsed().as_micros() as u64;
+            counters::observe(Hist::DispatchWaitUs, wait_us);
+            let span = item.span;
+            if let Some(h) = span {
+                spans::record(h.event(Stage::Dispatched, spans::real_now_us()));
+            }
             if !overhead.is_zero() {
                 std::thread::sleep(overhead);
             }
             let t0 = Instant::now();
+            if let Some(h) = span {
+                // No separate stage-in step at the service level: data
+                // is in place once the sandbox overhead is paid.
+                let now = spans::real_now_us();
+                spans::record(h.event(Stage::StagedIn, now));
+                spans::record(h.event(Stage::ExecStart, now));
+            }
             let outcome = (inner.runner)(&item.task);
             let exec_us = t0.elapsed().as_micros() as u64;
+            if let Some(h) = span {
+                spans::record(h.event(Stage::ExecEnd, spans::real_now_us()));
+            }
+            counters::observe(Hist::ExecUs, exec_us);
             inner.stats.busy_us.fetch_add(exec_us, Ordering::Relaxed);
             let ok = outcome.is_ok();
             if ok {
                 inner.stats.completed.fetch_add(1, Ordering::SeqCst);
+                counters::incr(Counter::TasksCompleted);
             } else {
                 inner.stats.failed.fetch_add(1, Ordering::SeqCst);
+                counters::incr(Counter::TasksFailed);
             }
             // Recycle the arg spine before the completion callback so
             // the pool is warm for any submit the callback triggers.
@@ -569,6 +642,9 @@ fn executor_loop(id: u64, home: usize, inner: Arc<Inner>) {
                 exec_us,
                 wait_us,
             });
+            if let Some(h) = span {
+                spans::record(h.event(Stage::Notified, spans::real_now_us()));
+            }
         }
     }
 }
@@ -768,6 +844,32 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         svc.submit_bundle(vec![], Box::new(move |rs| tx.send(rs).unwrap()));
         assert!(rx.recv_timeout(Duration::from_secs(1)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn scrape_snapshot_reflects_service_gauges() {
+        let svc = FalkonService::start(
+            FalkonServiceConfig {
+                drp: RealDrpPolicy::static_pool(3),
+                executor_overhead: Duration::ZERO,
+            },
+            noop_runner(),
+        );
+        for i in 0..20 {
+            svc.submit_wait(task(i));
+        }
+        let snap = svc.scrape_snapshot();
+        assert_eq!(snap.version, crate::telemetry::SNAPSHOT_VERSION);
+        assert_eq!(snap.service.submitted, 20);
+        assert_eq!(snap.service.completed, 20);
+        assert_eq!(snap.service.failed, 0);
+        assert_eq!(snap.service.queue_len, 0);
+        assert_eq!(snap.service.live_executors, 3);
+        assert_eq!(snap.service.peak_executors, 3);
+        // The counter registry is process-global: assert shape plus a
+        // floor (other tests may have recorded into it concurrently).
+        assert!(snap.counters.get("tasks_submitted") >= 20);
+        assert!(snap.counters.hist_count("exec_us") >= 20);
     }
 
     #[test]

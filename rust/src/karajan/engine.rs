@@ -29,6 +29,7 @@ use super::restart::RestartLog;
 use super::scheduler::{GridScheduler, TaskDone};
 use crate::providers::AppTask;
 use crate::swiftscript::ast::*;
+use crate::telemetry::counters::{self, Counter};
 use crate::swiftscript::TypedProgram;
 use crate::xdtm::mappers::MapperParams;
 use crate::xdtm::types::Type;
@@ -225,6 +226,10 @@ impl Engine {
                 }
             }
             if !run_batch.is_empty() {
+                counters::add(
+                    Counter::EngineContinuations,
+                    run_batch.len() as u64,
+                );
                 for c in run_batch.drain(..) {
                     c();
                 }
@@ -291,6 +296,7 @@ impl Interp {
     fn flush_submits(&self) {
         let batch = std::mem::take(&mut *self.submit_buf.lock().unwrap());
         if !batch.is_empty() {
+            counters::incr(Counter::EngineFlushes);
             self.sched.submit_batch(batch);
         }
     }

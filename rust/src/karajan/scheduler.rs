@@ -49,7 +49,24 @@ use crate::diffusion::{
 use crate::metrics::{Sym, TaskRecord, Timeline, TimelineSink};
 use crate::policy::{FrameCoalescer, FramePolicy, RealClock, ScoreConfig, SiteScoreBoard};
 use crate::providers::{AppTask, BundleDone, Provider, TaskResult};
+use crate::telemetry::counters::{self, Counter};
+use crate::telemetry::spans::{self, SpanHandle, Stage};
 use crate::util::DetRng;
+
+/// Record one lifecycle stage for `task` into the global span sink.
+/// Guarded on the global enable flag, so the disabled cost is one
+/// relaxed load; when tracing, the label interns through the shared
+/// [`Sym`] table the timeline already uses.
+fn record_span(task: &AppTask, site: Option<Sym>, stage: Stage) {
+    if !spans::enabled() {
+        return;
+    }
+    let mut h = SpanHandle::new(task.id, Sym::intern(&task.executable));
+    if let Some(s) = site {
+        h = h.with_site(s);
+    }
+    spans::record(h.event(stage, spans::real_now_us()));
+}
 
 /// Clustering policy (paper §3.13).
 #[derive(Debug, Clone)]
@@ -351,6 +368,7 @@ impl GridScheduler {
     /// (including retries).
     pub fn submit(self: &Arc<Self>, task: AppTask, done: TaskDone) {
         self.in_flight.fetch_add(1, Ordering::SeqCst);
+        record_span(&task, None, Stage::Queued);
         let pending = Pending { task, done, attempts: 0, last_site: None };
         match &self.cluster {
             None => self.dispatch_singles(vec![pending]),
@@ -389,7 +407,10 @@ impl GridScheduler {
         self.in_flight.fetch_add(batch.len() as u64, Ordering::SeqCst);
         let pendings: Vec<Pending> = batch
             .into_iter()
-            .map(|(task, done)| Pending { task, done, attempts: 0, last_site: None })
+            .map(|(task, done)| {
+                record_span(&task, None, Stage::Queued);
+                Pending { task, done, attempts: 0, last_site: None }
+            })
             .collect();
         match &self.cluster {
             None => self.dispatch_singles(pendings),
@@ -528,6 +549,7 @@ impl GridScheduler {
         let batch: Vec<(AppTask, TaskDone)> = pendings
             .into_iter()
             .map(|p| {
+                record_span(&p.task, Some(self.site_syms[site]), Stage::Dispatched);
                 let sched = Arc::clone(self);
                 let task = p.task.clone();
                 let done: TaskDone =
@@ -562,6 +584,7 @@ impl GridScheduler {
             !r.ok && p.attempts < self.retries
         };
         if retry {
+            counters::incr(Counter::TasksRetried);
             self.dispatch_singles(vec![Pending {
                 task: p.task,
                 done: p.done,
@@ -625,6 +648,9 @@ impl GridScheduler {
     fn submit_bundle(self: &Arc<Self>, site: usize, pendings: Vec<Pending>) {
         // Provider handles are immutable: no scheduler lock on this path.
         let provider = Arc::clone(&self.providers[site]);
+        for p in &pendings {
+            record_span(&p.task, Some(self.site_syms[site]), Stage::Dispatched);
+        }
         let tasks: Vec<AppTask> = pendings.iter().map(|p| p.task.clone()).collect();
         let sched = Arc::clone(self);
         let submit_us = self.now_us();
@@ -692,6 +718,7 @@ impl GridScheduler {
             }
         }
         if !retry.is_empty() {
+            counters::add(Counter::TasksRetried, retry.len() as u64);
             self.dispatch(retry);
         }
     }

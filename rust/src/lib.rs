@@ -21,6 +21,8 @@
 //! - [`runtime`] — PJRT artifact loading/execution (the compute path).
 //! - [`apps`] — fMRI, Montage, MolDyn workloads.
 //! - [`provenance`] — Kickstart records + virtual data catalog.
+//! - [`telemetry`] — lifecycle spans, counters/histograms, live
+//!   scrape snapshots, shared by runtime and sim.
 //! - [`metrics`], [`util`] — timelines, stats, plots, rng, json.
 
 pub mod apps;
@@ -36,4 +38,5 @@ pub mod runtime;
 pub mod sim;
 pub mod stack;
 pub mod swiftscript;
+pub mod telemetry;
 pub mod util;

@@ -91,6 +91,58 @@ pub fn fmt_pct(x: f64) -> String {
     format!("{:.1}%", x * 100.0)
 }
 
+/// `falkon-top`: render a live [`MetricsSnapshot`] the way `top`
+/// renders a host — a gauge header, then the nonzero counters, then
+/// per-histogram tail quantiles. This is what a `scrape()` consumer
+/// prints in a watch loop.
+pub fn render_snapshot(s: &crate::telemetry::MetricsSnapshot) -> String {
+    use crate::telemetry::counters::hist_quantile;
+
+    let sv = &s.service;
+    let mut out = format!(
+        "falkon-top  uptime {}  executors {} (peak {})  queue {} (peak {})\n\
+         tasks: submitted {}  completed {}  failed {}  busy {}\n",
+        fmt_secs(sv.uptime_us as f64 / 1e6),
+        sv.live_executors,
+        sv.peak_executors,
+        sv.queue_len,
+        sv.peak_queue,
+        sv.submitted,
+        sv.completed,
+        sv.failed,
+        fmt_secs(sv.busy_us as f64 / 1e6),
+    );
+    let mut counters = Table::new(&["counter", "total"]);
+    for (name, v) in &s.counters.counters {
+        if *v > 0 {
+            counters.row(&[name.clone(), v.to_string()]);
+        }
+    }
+    if !counters.rows.is_empty() {
+        out.push('\n');
+        out.push_str(&counters.render());
+    }
+    let mut hists = Table::new(&["histogram", "count", "p50<=", "p95<=", "p99<="]);
+    for (name, buckets) in &s.counters.hists {
+        let count: u64 = buckets.iter().sum();
+        if count == 0 {
+            continue;
+        }
+        hists.row(&[
+            name.clone(),
+            count.to_string(),
+            hist_quantile(buckets, 0.50).to_string(),
+            hist_quantile(buckets, 0.95).to_string(),
+            hist_quantile(buckets, 0.99).to_string(),
+        ]);
+    }
+    if !hists.rows.is_empty() {
+        out.push('\n');
+        out.push_str(&hists.render());
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +176,39 @@ mod tests {
         assert_eq!(fmt_secs(0.25), "250.0ms");
         assert_eq!(fmt_secs(0.0005), "500us");
         assert_eq!(fmt_pct(0.995), "99.5%");
+    }
+
+    #[test]
+    fn falkon_top_renders_gauges_counters_and_tails() {
+        use crate::telemetry::counters::{Counter, Hist, LocalCounters};
+        use crate::telemetry::{MetricsSnapshot, ServiceSection};
+
+        let mut local = LocalCounters::new();
+        local.add(Counter::FramesEncoded, 12);
+        for v in [100u64, 120, 90_000] {
+            local.observe(Hist::DispatchWaitUs, v);
+        }
+        let snap = MetricsSnapshot::new(
+            ServiceSection {
+                uptime_us: 2_500_000,
+                submitted: 120,
+                completed: 118,
+                failed: 2,
+                queue_len: 0,
+                peak_queue: 40,
+                live_executors: 8,
+                peak_executors: 8,
+                busy_us: 1_000_000,
+            },
+            local.snapshot(),
+        );
+        let text = render_snapshot(&snap);
+        assert!(text.contains("falkon-top"));
+        assert!(text.contains("executors 8 (peak 8)"));
+        assert!(text.contains("frames_encoded"));
+        assert!(text.contains("dispatch_wait_us"));
+        // Zero counters are elided, nonzero tails show up.
+        assert!(!text.contains("tasks_retried"));
+        assert!(text.contains("p99<="));
     }
 }

@@ -162,6 +162,29 @@ impl Timeline {
         }
         self.records.len() as f64 / span
     }
+
+    /// Nearest-rank percentile of `metric` across records, through
+    /// [`crate::metrics::stats::percentile_sorted`]. Returns 0 on an
+    /// empty timeline.
+    pub fn percentile(&self, p: f64, metric: impl Fn(&TaskRecord) -> f64) -> f64 {
+        let mut xs: Vec<f64> = self.records.iter().map(&metric).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::metrics::stats::percentile_sorted(&xs, p)
+    }
+
+    /// Median of `metric` (e.g. `|r| r.wait() as f64` for dispatch
+    /// latency) — the convenience benches report alongside p95/p99.
+    pub fn p50(&self, metric: impl Fn(&TaskRecord) -> f64) -> f64 {
+        self.percentile(50.0, metric)
+    }
+
+    pub fn p95(&self, metric: impl Fn(&TaskRecord) -> f64) -> f64 {
+        self.percentile(95.0, metric)
+    }
+
+    pub fn p99(&self, metric: impl Fn(&TaskRecord) -> f64) -> f64 {
+        self.percentile(99.0, metric)
+    }
 }
 
 /// Records per preallocated sink chunk. A chunk is allocated at full
@@ -329,6 +352,21 @@ mod tests {
         assert_eq!(t.makespan(), 0);
         assert_eq!(t.efficiency(8), 0.0);
         assert_eq!(t.throughput(), 0.0);
+        assert_eq!(t.p50(|r| r.wait() as f64), 0.0);
+    }
+
+    #[test]
+    fn percentile_accessors_match_stats() {
+        let mut t = Timeline::new();
+        // Waits 0..100 µs: p50 = 50, p99 = 99 by nearest rank.
+        for i in 0..=100u64 {
+            t.push(rec(i, 0, i, i + 10, "a"));
+        }
+        let wait = |r: &TaskRecord| r.wait() as f64;
+        assert_eq!(t.p50(wait), 50.0);
+        assert_eq!(t.p95(wait), 95.0);
+        assert_eq!(t.p99(wait), 99.0);
+        assert_eq!(t.percentile(100.0, wait), 100.0);
     }
 
     #[test]

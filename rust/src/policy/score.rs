@@ -11,6 +11,7 @@
 //! implementation of the score trajectory, which the differential test
 //! pins step for step.
 
+use crate::telemetry::counters::{self, Counter};
 use crate::util::DetRng;
 
 use super::clock::Clock;
@@ -117,6 +118,7 @@ impl<C: Clock> SiteScoreBoard<C> {
             s.score = (s.score * cfg.failure_mult).max(cfg.min_score);
             if s.failures % cfg.suspend_after_failures.max(1) == 0 {
                 s.suspended_until = Some(C::add(now, self.suspend_for));
+                counters::incr(Counter::SitesSuspended);
                 true
             } else {
                 false

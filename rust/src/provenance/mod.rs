@@ -14,7 +14,10 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::metrics::Sym;
 use crate::providers::{AppRunner, AppTask};
+use crate::telemetry::counters::{self, Counter};
+use crate::telemetry::spans::{self, SpanHandle, Stage};
 use crate::util::json::Json;
 
 /// A Kickstart-style invocation document.
@@ -157,16 +160,51 @@ fn hostname() -> String {
         .unwrap_or_else(|_| "unknown".into())
 }
 
+/// The time source a recording runner stamps records with: returns
+/// `(unix_ms, monotonic_us)` — wall clock for the record's start stamp,
+/// a monotonic reading for durations. Injectable so deterministic
+/// harnesses can stamp invocation documents off a scripted clock
+/// instead of the host's.
+pub type RecordClock = Arc<dyn Fn() -> (u64, u64) + Send + Sync>;
+
 /// Wrap an [`AppRunner`] so every invocation is recorded in the VDC —
-/// the Kickstart launcher role.
+/// the Kickstart launcher role — stamped by the host clocks.
 pub fn recording_runner(inner: AppRunner, vdc: Arc<Vdc>) -> AppRunner {
-    Arc::new(move |task: &AppTask| {
-        let start_unix_ms = std::time::SystemTime::now()
+    let epoch = Instant::now();
+    let clock: RecordClock = Arc::new(move || {
+        let unix_ms = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_millis() as u64)
             .unwrap_or(0);
-        let t0 = Instant::now();
+        (unix_ms, epoch.elapsed().as_micros() as u64)
+    });
+    recording_runner_with_clock(inner, vdc, clock)
+}
+
+/// [`recording_runner`] with an injected [`RecordClock`]. Each
+/// invocation calls the clock twice (entry and exit); the record's
+/// duration is the monotonic difference. Every record also bumps the
+/// global `provenance_records` counter, and — when global span
+/// recording is on — stamps exec-start/exec-end lifecycle spans, so
+/// provider paths without a service in front still get execution
+/// timing in the trace.
+pub fn recording_runner_with_clock(
+    inner: AppRunner,
+    vdc: Arc<Vdc>,
+    clock: RecordClock,
+) -> AppRunner {
+    Arc::new(move |task: &AppTask| {
+        let (start_unix_ms, t0) = clock();
+        let span = spans::enabled()
+            .then(|| SpanHandle::new(task.id, Sym::intern(&task.executable)));
+        if let Some(h) = span {
+            spans::record(h.event(Stage::ExecStart, spans::real_now_us()));
+        }
         let outcome = inner(task);
+        if let Some(h) = span {
+            spans::record(h.event(Stage::ExecEnd, spans::real_now_us()));
+        }
+        let (_, t1) = clock();
         let rec = InvocationRecord {
             key: task.key.clone(),
             executable: task.executable.clone(),
@@ -176,12 +214,13 @@ pub fn recording_runner(inner: AppRunner, vdc: Arc<Vdc>) -> AppRunner {
                 .map(|p| p.to_string_lossy().into_owned())
                 .unwrap_or_default(),
             start_unix_ms,
-            duration_us: t0.elapsed().as_micros() as u64,
+            duration_us: t1.saturating_sub(t0),
             exit_ok: outcome.is_ok(),
             error: outcome.as_ref().err().map(|e| format!("{e:#}")),
             inputs: task.inputs.clone(),
             outputs: task.outputs.clone(),
         };
+        counters::incr(Counter::ProvenanceRecords);
         vdc.insert(rec);
         outcome
     })
@@ -268,6 +307,25 @@ mod tests {
         ] {
             assert!(j.contains(field), "{field} in {j}");
         }
+    }
+
+    #[test]
+    fn injected_clock_stamps_records_deterministically() {
+        let vdc = Vdc::new();
+        let ticks = Arc::new(Mutex::new(vec![(1_000u64, 10u64), (1_000, 250)]));
+        let clock: RecordClock = {
+            let t = Arc::clone(&ticks);
+            Arc::new(move || t.lock().unwrap().remove(0))
+        };
+        let runner = recording_runner_with_clock(
+            Arc::new(|_t| Ok(())),
+            Arc::clone(&vdc),
+            clock,
+        );
+        runner(&task("k", "e", vec![], vec!["o"])).unwrap();
+        let rec = vdc.producer_of(Path::new("o")).unwrap();
+        assert_eq!(rec.start_unix_ms, 1_000, "entry tick stamps the start");
+        assert_eq!(rec.duration_us, 240, "duration is the monotonic delta");
     }
 
     #[test]

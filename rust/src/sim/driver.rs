@@ -22,6 +22,10 @@ use crate::diffusion::{
 };
 use crate::metrics::{Sym, TaskRecord, Timeline};
 use crate::policy::{FrameCoalescer, FramePolicy, ScoreConfig, SimClock, SiteScoreBoard};
+use crate::telemetry::{
+    Counter, CounterSnapshot, Hist, LocalCounters, SpanEvent, SpanHandle, SpanSink,
+    Stage,
+};
 use crate::util::time::{secs, Micros};
 use crate::util::DetRng;
 
@@ -122,6 +126,13 @@ pub struct SimOutcome {
     /// Aggregate bytes moved over peer links (the shared-FS fluid's
     /// counterpart lives in `fs_bytes`).
     pub peer_bytes: f64,
+    /// The driver's deterministic telemetry twin: plain event-order
+    /// counters/histograms on the virtual clock (no atomics, no wall
+    /// time), so identical seeds snapshot identically.
+    pub counters: CounterSnapshot,
+    /// Virtual-time lifecycle span events in `(at, task, stage)` order
+    /// (empty unless [`Driver::with_spans`] opted in).
+    pub span_events: Vec<SpanEvent>,
 }
 
 impl SimOutcome {
@@ -231,6 +242,14 @@ pub struct Driver {
     /// stream + peer fetches): outstanding transfer count; the task
     /// proceeds when it reaches zero.
     staging_left: HashMap<usize, usize>,
+
+    /// Deterministic counters/histograms, bumped in event order on the
+    /// virtual clock — the sim twin of the runtime's sharded atomic
+    /// registry.
+    counters: LocalCounters,
+    /// Opt-in lifecycle span sink ([`Driver::with_spans`]): one shard,
+    /// since the driver is single-threaded. `None` records nothing.
+    spans: Option<SpanSink>,
 
     rng: DetRng,
     /// Falkon executor lifetime accounting for wasted-CPU stats.
@@ -407,6 +426,8 @@ impl Driver {
             peer_net: PeerNet::new(),
             peer_conts: HashMap::new(),
             staging_left: HashMap::new(),
+            counters: LocalCounters::new(),
+            spans: None,
             rng: DetRng::new(seed),
             run_end: 0,
             scratch: Vec::new(),
@@ -445,6 +466,18 @@ impl Driver {
                 planner: cfg.links.map(TransferPlanner::new),
             });
         }
+        self
+    }
+
+    /// Record virtual-time lifecycle spans into a driver-owned sink
+    /// with room for `cap` events. Spans are strictly passive (the
+    /// sink never touches the RNG or scheduling state), so a spanned
+    /// run and an unspanned run of the same seed produce bit-identical
+    /// timelines; the events come back in
+    /// [`SimOutcome::span_events`]. MPI mode (no event loop) records
+    /// no spans.
+    pub fn with_spans(mut self, cap: usize) -> Self {
+        self.spans = Some(SpanSink::with_shards(1, cap.max(1)));
         self
     }
 
@@ -586,6 +619,12 @@ impl Driver {
             .and_then(|d| d.planner.as_ref())
             .map(|p| p.log().to_vec())
             .unwrap_or_default();
+        let counters = self.counters.snapshot();
+        let span_events = self
+            .spans
+            .as_ref()
+            .map(|s| s.snapshot())
+            .unwrap_or_default();
         SimOutcome {
             makespan_secs,
             peak_resources,
@@ -600,7 +639,22 @@ impl Driver {
             site_suspended,
             cache_log,
             cache_stats,
+            counters,
+            span_events,
             timeline: self.timeline,
+        }
+    }
+
+    /// Record one lifecycle stage for `task` at virtual time `at`,
+    /// labelled by the task's stage name (no-op without
+    /// [`Driver::with_spans`]).
+    fn span(&self, task: usize, stage: Stage, at: Micros) {
+        if let Some(sink) = &self.spans {
+            let h = SpanHandle::new(
+                task as u64,
+                Sym::intern(&self.dag.tasks[task].stage),
+            );
+            sink.record(h.event(stage, at));
         }
     }
 
@@ -651,6 +705,7 @@ impl Driver {
                     f.queue.push_back(t);
                 }
                 f.peak_queue = f.peak_queue.max(f.queue.len());
+                self.counters.observe(Hist::QueueDepth, f.queue.len() as u64);
                 self.scratch = frame;
                 self.queue_falkon_dispatch(now);
             }
@@ -670,6 +725,11 @@ impl Driver {
                 if !live {
                     return;
                 }
+                self.counters.observe(
+                    Hist::ExecUs,
+                    now.saturating_sub(self.start_time[task]),
+                );
+                self.span(task, Stage::ExecEnd, now);
                 // Output staging through the FS if configured. Under
                 // data diffusion, declared outputs live in the
                 // producing executor's cache (consumers restage misses
@@ -722,16 +782,20 @@ impl Driver {
 
     fn on_release(&mut self, now: Micros, task: usize) {
         self.submit_time[task] = now;
+        self.counters.incr(Counter::TasksSubmitted);
+        self.span(task, Stage::Queued, now);
         match &self.mode {
             Mode::GramLrm { gram, .. } => {
                 let gram = gram.clone();
                 self.gram_submit(now, 0, &[task], &gram);
+                self.note_dispatch(now, &[task]);
             }
             Mode::GramCluster { gram, .. } => {
                 let gram = gram.clone();
                 let buf = self.cluster_buf.as_mut().expect("cluster coalescer");
                 if let Some(bundle) = buf.push(task, now) {
                     self.gram_submit(now, 0, &bundle, &gram);
+                    self.note_dispatch(now, &bundle);
                     self.recycle(bundle);
                 } else if !self.cluster_deadline_set {
                     self.cluster_deadline_set = true;
@@ -755,6 +819,8 @@ impl Driver {
                     None => {
                         let f = self.falkon.as_mut().unwrap();
                         f.submit(task);
+                        self.counters
+                            .observe(Hist::QueueDepth, f.queue.len() as u64);
                         self.queue_falkon_dispatch(now);
                     }
                     Some(buf) => {
@@ -779,6 +845,21 @@ impl Driver {
                 self.pump_multisite(now);
             }
             Mode::Mpi { .. } => unreachable!(),
+        }
+    }
+
+    /// A placement decision landed for `bundle`: count the dispatches,
+    /// observe each task's queue wait, and stamp the Dispatched stage.
+    /// Callers record this at decision time (site pick, executor pick,
+    /// GRAM submission), not at arrival.
+    fn note_dispatch(&mut self, now: Micros, bundle: &[usize]) {
+        self.counters.add(Counter::TasksDispatched, bundle.len() as u64);
+        for &t in bundle {
+            self.counters.observe(
+                Hist::DispatchWaitUs,
+                now.saturating_sub(self.submit_time[t]),
+            );
+            self.span(t, Stage::Dispatched, now);
         }
     }
 
@@ -883,6 +964,9 @@ impl Driver {
             }
             self.task_site[p.task] = site;
             self.site_outstanding[site] += 1;
+            // Dispatched at the site pick — pre-staging transfers (below)
+            // then land between Dispatched and the node's exec start.
+            self.note_dispatch(now, &[p.task]);
             // With peer links, the planned transfers stage physically
             // (peer fluid channels / the shared FS) before the GRAM
             // submission; without them (including the zero-link
@@ -963,6 +1047,9 @@ impl Driver {
     /// injected fault plan and drives the shared score/suspension/retry
     /// policy; other LRM modes complete unconditionally.
     fn on_lrm_task_outcome(&mut self, now: Micros, site: usize, task: usize) {
+        self.counters
+            .observe(Hist::ExecUs, now.saturating_sub(self.start_time[task]));
+        self.span(task, Stage::ExecEnd, now);
         let Some(board) = self.board.as_mut() else {
             self.complete_task(now, task);
             return;
@@ -991,6 +1078,7 @@ impl Driver {
             if self.task_attempts[task] <= self.faults.retries {
                 // Retry, preferring a different site (same policy as
                 // the threaded scheduler's `last_site` avoidance).
+                self.counters.incr(Counter::TasksRetried);
                 self.pending_multisite
                     .push_back(Pending { task, avoid: Some(site) });
                 return;
@@ -1023,6 +1111,7 @@ impl Driver {
                 self.cluster_buf.as_mut().and_then(|b| b.take_frame())
             {
                 self.gram_submit(now, 0, &bundle, &gram);
+                self.note_dispatch(now, &bundle);
                 self.recycle(bundle);
             }
         }
@@ -1040,6 +1129,12 @@ impl Driver {
             for &task in &job.bundle {
                 let svc = (self.dag.tasks[task].service as f64 / speed) as Micros;
                 self.start_time[task] = t;
+                // No separately modeled stage-in at the node: data is
+                // in place once the job overhead is paid, so both
+                // stages share the start instant (pre-staged multi-site
+                // transfers are visible in the transfer log instead).
+                self.span(task, Stage::StagedIn, t);
+                self.span(task, Stage::ExecStart, t);
                 t += svc;
             }
             let bundle = self.q.bundle_from(&job.bundle);
@@ -1082,6 +1177,7 @@ impl Driver {
             };
             let overhead = f.cfg.executor_overhead;
             self.falkon_task_exec.insert(task, exec);
+            self.note_dispatch(now, &[task]);
             // Input staging first, if modeled. Declared datasets go
             // through the catalog: hits skip the shared FS entirely,
             // and only the miss bytes pay a fluid-flow transfer (the
@@ -1116,6 +1212,10 @@ impl Driver {
                     self.fs_exec_of_task.insert(task, exec);
                     self.staging_left.insert(task, n);
                 } else {
+                    // Everything cached: staged-in the moment the
+                    // executor frees, compute after its overhead.
+                    self.span(task, Stage::StagedIn, start);
+                    self.span(task, Stage::ExecStart, start + overhead);
                     let svc = self.dag.tasks[task].service;
                     self.q.at(
                         start + overhead + svc,
@@ -1132,6 +1232,8 @@ impl Driver {
             } else {
                 let svc = self.dag.tasks[task].service;
                 self.start_time[task] = start;
+                self.span(task, Stage::StagedIn, start);
+                self.span(task, Stage::ExecStart, start + overhead);
                 self.q.at(
                     start + overhead + svc,
                     Event::FalkonTaskDone { falkon: 0, exec, task },
@@ -1302,6 +1404,8 @@ impl Driver {
             // task was requeued), so don't start the compute.
             if f.executors[exec].running == Some(task) {
                 let svc = self.dag.tasks[task].service;
+                self.span(task, Stage::StagedIn, now);
+                self.span(task, Stage::ExecStart, now + f.cfg.executor_overhead);
                 self.q.at(
                     now + f.cfg.executor_overhead + svc,
                     Event::FalkonTaskDone { falkon: 0, exec, task },
@@ -1348,6 +1452,12 @@ impl Driver {
         debug_assert!(!self.completed[task], "task {task} completed twice");
         self.completed[task] = true;
         self.n_done += 1;
+        if ok {
+            self.counters.incr(Counter::TasksCompleted);
+        } else {
+            self.counters.incr(Counter::TasksFailed);
+        }
+        self.span(task, Stage::Notified, now);
         let site = match self.site_names.get(self.task_site[task]) {
             Some(name) => Sym::intern(name),
             None => Sym::intern(if self.falkon.is_some() { "falkon" } else { "site" }),
@@ -1422,6 +1532,10 @@ impl Driver {
                     ended: end,
                     ok: true,
                 });
+                self.counters.incr(Counter::TasksSubmitted);
+                self.counters.incr(Counter::TasksCompleted);
+                self.counters
+                    .observe(Hist::ExecUs, end.saturating_sub(earliest));
             }
             let stage_end = proc_free.into_iter().max().unwrap_or(stage_start);
             // Barrier + aggregation before the next stage.
@@ -1604,6 +1718,70 @@ mod tests {
             .map(|r| r.task_id)
             .collect();
         assert_eq!(failed, vec![1], "exactly the unretryable task fails");
+    }
+
+    #[test]
+    fn sim_spans_cover_all_six_stages_in_order() {
+        let dag = Dag::bag(12, "t", 1.0);
+        let o = Driver::new(dag, falkon_static(4), 9).with_spans(4096).run();
+        let lives = crate::telemetry::spans::assemble(&o.span_events);
+        assert_eq!(lives.len(), 12, "one lifecycle per task");
+        for l in &lives {
+            assert!(l.complete(), "task {} missing a stage", l.task_id);
+            assert!(l.ordered(), "task {} stages out of order", l.task_id);
+        }
+        assert_eq!(o.counters.get("tasks_submitted"), 12);
+        assert_eq!(o.counters.get("tasks_dispatched"), 12);
+        assert_eq!(o.counters.get("tasks_completed"), 12);
+        assert_eq!(o.counters.get("tasks_failed"), 0);
+        assert_eq!(o.counters.hist_count("exec_us"), 12);
+        assert_eq!(o.counters.hist_count("dispatch_wait_us"), 12);
+    }
+
+    #[test]
+    fn spans_are_passive_and_counters_deterministic() {
+        let run = |spans: bool| {
+            let dag = Dag::bag(20, "t", 0.5);
+            let d = Driver::new(dag, falkon_static(4), 0xC0FE);
+            let d = if spans { d.with_spans(1024) } else { d };
+            d.run()
+        };
+        let (a, b, c) = (run(true), run(false), run(true));
+        assert_eq!(
+            a.timeline.records, b.timeline.records,
+            "span recording must not perturb the run"
+        );
+        assert_eq!(a.counters, b.counters, "counters are seed-deterministic");
+        assert_eq!(a.counters, c.counters);
+        assert_eq!(a.span_events, c.span_events, "spans are seed-deterministic");
+        assert!(b.span_events.is_empty(), "no sink, no events");
+    }
+
+    #[test]
+    fn multisite_counters_track_retries_and_failures() {
+        let sites = vec![
+            ("a".to_string(), LrmConfig::pbs(4), 1.0),
+            ("b".to_string(), LrmConfig::pbs(4), 1.0),
+        ];
+        let mode = Mode::MultiSite {
+            sites,
+            gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+        };
+        let dag = Dag::chain(4, "t", 1.0);
+        // Task 1 fails three attempts with one retry allowed: one
+        // retry consumed, then a terminal failure.
+        let faults = SimFaults {
+            fail_first_attempts: [(1usize, 3usize)].into_iter().collect(),
+            retries: 1,
+            ..Default::default()
+        };
+        let o = Driver::new(dag, mode, 7).with_faults(faults).run();
+        assert_eq!(o.counters.get("tasks_submitted"), 4);
+        assert_eq!(o.counters.get("tasks_retried"), 1);
+        assert_eq!(o.counters.get("tasks_failed"), 1);
+        assert_eq!(o.counters.get("tasks_completed"), 3);
+        // The retried attempt dispatched twice.
+        assert_eq!(o.counters.get("tasks_dispatched"), 5);
     }
 
     #[test]

@@ -1,0 +1,542 @@
+//! Sharded atomic counters and log2-bucketed histograms.
+//!
+//! The runtime's hot paths (queue ops, dispatch, frame encode) record
+//! into a process-global [`Registry`]: per-thread-affine shards of
+//! relaxed `AtomicU64`s, merged on [`Registry::snapshot`]. Counter
+//! addition is commutative over `u64`, so the merged totals are
+//! independent of the shard count and of which thread recorded where —
+//! the property the shard-merge determinism test pins.
+//!
+//! Cost discipline: the disabled path is one relaxed bool load; the
+//! enabled path adds one thread-local slot read and one relaxed
+//! `fetch_add` on a shard no other thread contends (threads are
+//! striped across shards on first use). Nothing here allocates after
+//! registry construction, takes a lock, or feeds back into control
+//! flow — telemetry is strictly passive, which is why seeded
+//! differential runs stay bit-identical with it enabled.
+//!
+//! [`LocalCounters`] is the deterministic single-threaded twin the sim
+//! driver owns: plain `u64` cells bumped in event order, producing the
+//! same [`CounterSnapshot`] shape.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Every counter the runtime and sim expose. The enum index is the
+/// storage slot; `name()` is the stable wire/report identifier (the
+/// scrape codec ships names, not indices, so mixed-version fleets
+/// never misattribute a renumbered slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    TasksSubmitted,
+    TasksDispatched,
+    TasksCompleted,
+    TasksFailed,
+    TasksRetried,
+    SitesSuspended,
+    QueuePushed,
+    QueueStolen,
+    QueueOverflowed,
+    FramesEncoded,
+    FramesDecoded,
+    RouterPicks,
+    CacheHitBytes,
+    CacheMissBytes,
+    PeerTransferBytes,
+    SharedFsTransferBytes,
+    EngineFlushes,
+    EngineContinuations,
+    ProvenanceRecords,
+}
+
+pub const NUM_COUNTERS: usize = 19;
+
+impl Counter {
+    pub const ALL: [Counter; NUM_COUNTERS] = [
+        Counter::TasksSubmitted,
+        Counter::TasksDispatched,
+        Counter::TasksCompleted,
+        Counter::TasksFailed,
+        Counter::TasksRetried,
+        Counter::SitesSuspended,
+        Counter::QueuePushed,
+        Counter::QueueStolen,
+        Counter::QueueOverflowed,
+        Counter::FramesEncoded,
+        Counter::FramesDecoded,
+        Counter::RouterPicks,
+        Counter::CacheHitBytes,
+        Counter::CacheMissBytes,
+        Counter::PeerTransferBytes,
+        Counter::SharedFsTransferBytes,
+        Counter::EngineFlushes,
+        Counter::EngineContinuations,
+        Counter::ProvenanceRecords,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::TasksSubmitted => "tasks_submitted",
+            Counter::TasksDispatched => "tasks_dispatched",
+            Counter::TasksCompleted => "tasks_completed",
+            Counter::TasksFailed => "tasks_failed",
+            Counter::TasksRetried => "tasks_retried",
+            Counter::SitesSuspended => "sites_suspended",
+            Counter::QueuePushed => "queue_pushed",
+            Counter::QueueStolen => "queue_stolen",
+            Counter::QueueOverflowed => "queue_overflowed",
+            Counter::FramesEncoded => "frames_encoded",
+            Counter::FramesDecoded => "frames_decoded",
+            Counter::RouterPicks => "router_picks",
+            Counter::CacheHitBytes => "cache_hit_bytes",
+            Counter::CacheMissBytes => "cache_miss_bytes",
+            Counter::PeerTransferBytes => "peer_transfer_bytes",
+            Counter::SharedFsTransferBytes => "sharedfs_transfer_bytes",
+            Counter::EngineFlushes => "engine_flushes",
+            Counter::EngineContinuations => "engine_continuations",
+            Counter::ProvenanceRecords => "provenance_records",
+        }
+    }
+}
+
+/// Histogram families: value distributions that a single total would
+/// flatten (a p99 dispatch wait is the paper's tail story, not a mean).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Hist {
+    DispatchWaitUs,
+    ExecUs,
+    FrameTasks,
+    QueueDepth,
+}
+
+pub const NUM_HISTS: usize = 4;
+pub const HIST_BUCKETS: usize = 64;
+
+impl Hist {
+    pub const ALL: [Hist; NUM_HISTS] = [
+        Hist::DispatchWaitUs,
+        Hist::ExecUs,
+        Hist::FrameTasks,
+        Hist::QueueDepth,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::DispatchWaitUs => "dispatch_wait_us",
+            Hist::ExecUs => "exec_us",
+            Hist::FrameTasks => "frame_tasks",
+            Hist::QueueDepth => "queue_depth",
+        }
+    }
+}
+
+/// log2 bucket index: bucket 0 holds exactly 0; bucket `i` (i >= 1)
+/// holds `[2^(i-1), 2^i - 1]`. One `leading_zeros` per observation.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` — what quantile estimates
+/// report (a conservative ceiling, never an undercount).
+pub fn bucket_ceil(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        _ if i >= HIST_BUCKETS - 1 => u64::MAX,
+        _ => (1u64 << i) - 1,
+    }
+}
+
+/// Nearest-rank quantile over bucket counts (`q` in [0, 1]): the
+/// upper bound of the bucket where the cumulative count crosses the
+/// rank.
+pub fn hist_quantile(buckets: &[u64], q: f64) -> u64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return bucket_ceil(i);
+        }
+    }
+    bucket_ceil(buckets.len().saturating_sub(1))
+}
+
+/// A merged, ordered view of every counter and histogram. Both the
+/// atomic [`Registry`] and the single-threaded [`LocalCounters`] twin
+/// produce this shape, and the scrape wire codec in `falkon::protocol`
+/// carries it verbatim.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CounterSnapshot {
+    /// `(name, total)` in [`Counter::ALL`] order.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, buckets)` in [`Hist::ALL`] order; `HIST_BUCKETS` each.
+    pub hists: Vec<(String, Vec<u64>)>,
+}
+
+impl CounterSnapshot {
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map_or(0, |(_, v)| *v)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&[u64]> {
+        self.hists
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, b)| b.as_slice())
+    }
+
+    /// Total observations recorded into `name`'s histogram.
+    pub fn hist_count(&self, name: &str) -> u64 {
+        self.hist(name).map_or(0, |b| b.iter().sum())
+    }
+}
+
+struct Shard {
+    counters: [AtomicU64; NUM_COUNTERS],
+    hists: [AtomicU64; NUM_HISTS * HIST_BUCKETS],
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Process-assigned thread stripe, cached per thread on first use.
+fn thread_slot() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    SLOT.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = NEXT.fetch_add(1, Ordering::Relaxed);
+        s.set(v);
+        v
+    })
+}
+
+/// Lock-free sharded counter/histogram registry. See the module docs
+/// for the memory-ordering and determinism argument.
+pub struct Registry {
+    enabled: AtomicBool,
+    shards: Vec<Shard>,
+}
+
+impl Registry {
+    pub fn with_shards(nshards: usize) -> Registry {
+        Registry {
+            enabled: AtomicBool::new(true),
+            shards: (0..nshards.max(1)).map(|_| Shard::new()).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn shard(&self) -> &Shard {
+        &self.shards[thread_slot() % self.shards.len()]
+    }
+
+    #[inline]
+    pub fn add(&self, c: Counter, v: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.shard().counters[c as usize].fetch_add(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn incr(&self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    #[inline]
+    pub fn observe(&self, h: Hist, v: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let idx = h as usize * HIST_BUCKETS + bucket_of(v);
+        self.shard().hists[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Merge every shard into one snapshot. Sum order is fixed (shard
+    /// 0..n per slot) and `u64` addition is commutative, so the result
+    /// is a pure function of what was recorded, not of sharding.
+    pub fn snapshot(&self) -> CounterSnapshot {
+        let mut counters = Vec::with_capacity(NUM_COUNTERS);
+        for c in Counter::ALL {
+            let total: u64 = self
+                .shards
+                .iter()
+                .map(|s| s.counters[c as usize].load(Ordering::Relaxed))
+                .sum();
+            counters.push((c.name().to_string(), total));
+        }
+        let mut hists = Vec::with_capacity(NUM_HISTS);
+        for h in Hist::ALL {
+            let mut buckets = vec![0u64; HIST_BUCKETS];
+            for s in &self.shards {
+                for (b, out) in buckets.iter_mut().enumerate() {
+                    *out += s.hists[h as usize * HIST_BUCKETS + b].load(Ordering::Relaxed);
+                }
+            }
+            hists.push((h.name().to_string(), buckets));
+        }
+        CounterSnapshot { counters, hists }
+    }
+
+    /// Zero every shard (bench baselines and tests).
+    pub fn reset(&self) {
+        for s in &self.shards {
+            for c in &s.counters {
+                c.store(0, Ordering::Relaxed);
+            }
+            for b in &s.hists {
+                b.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// The process-global registry every runtime layer records into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(|| Registry::with_shards(8))
+}
+
+#[inline]
+pub fn add(c: Counter, v: u64) {
+    global().add(c, v);
+}
+
+#[inline]
+pub fn incr(c: Counter) {
+    global().incr(c);
+}
+
+#[inline]
+pub fn observe(h: Hist, v: u64) {
+    global().observe(h, v);
+}
+
+pub fn set_enabled(on: bool) {
+    global().set_enabled(on);
+}
+
+pub fn enabled() -> bool {
+    global().enabled()
+}
+
+/// The deterministic single-threaded twin: plain `u64` cells, no
+/// atomics, no sharding. The sim driver owns one and bumps it in event
+/// order, so a seeded run's snapshot is bit-identical across reruns
+/// and across host thread counts.
+#[derive(Debug, Clone)]
+pub struct LocalCounters {
+    counters: [u64; NUM_COUNTERS],
+    hists: [[u64; HIST_BUCKETS]; NUM_HISTS],
+}
+
+impl Default for LocalCounters {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LocalCounters {
+    pub fn new() -> LocalCounters {
+        LocalCounters {
+            counters: [0; NUM_COUNTERS],
+            hists: [[0; HIST_BUCKETS]; NUM_HISTS],
+        }
+    }
+
+    #[inline]
+    pub fn add(&mut self, c: Counter, v: u64) {
+        self.counters[c as usize] += v;
+    }
+
+    #[inline]
+    pub fn incr(&mut self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    #[inline]
+    pub fn observe(&mut self, h: Hist, v: u64) {
+        self.hists[h as usize][bucket_of(v)] += 1;
+    }
+
+    pub fn get(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            counters: Counter::ALL
+                .iter()
+                .map(|&c| (c.name().to_string(), self.counters[c as usize]))
+                .collect(),
+            hists: Hist::ALL
+                .iter()
+                .map(|&h| (h.name().to_string(), self.hists[h as usize].to_vec()))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_math() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_ceil(0), 0);
+        assert_eq!(bucket_ceil(1), 1);
+        assert_eq!(bucket_ceil(2), 3);
+        assert_eq!(bucket_ceil(HIST_BUCKETS - 1), u64::MAX);
+        // Every value lands in a bucket whose ceiling covers it.
+        for v in [0u64, 1, 2, 7, 8, 1023, 1024, 1 << 40] {
+            assert!(bucket_ceil(bucket_of(v)) >= v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn quantiles_over_buckets() {
+        let mut buckets = vec![0u64; HIST_BUCKETS];
+        // 90 observations of ~1000 (bucket 10), 10 of ~1M (bucket 20).
+        buckets[bucket_of(1000)] = 90;
+        buckets[bucket_of(1_000_000)] = 10;
+        assert_eq!(hist_quantile(&buckets, 0.50), bucket_ceil(bucket_of(1000)));
+        assert_eq!(
+            hist_quantile(&buckets, 0.99),
+            bucket_ceil(bucket_of(1_000_000))
+        );
+        assert_eq!(hist_quantile(&[0; HIST_BUCKETS], 0.5), 0);
+    }
+
+    /// The shard-merge determinism bar: the same recorded multiset
+    /// must snapshot identically regardless of how many shards the
+    /// registry has or how records were striped across them.
+    #[test]
+    fn histogram_merge_is_shard_count_independent() {
+        let values: Vec<u64> = (0..1000u64).map(|i| i * i % 7919).collect();
+        let mut reference: Option<CounterSnapshot> = None;
+        for nshards in [1usize, 2, 3, 8, 17] {
+            let reg = Registry::with_shards(nshards);
+            for (i, &v) in values.iter().enumerate() {
+                // Stripe across shards by hand: thread_slot() is
+                // per-thread, so force rotation through all shards.
+                let s = &reg.shards[i % reg.shards.len()];
+                s.counters[Counter::TasksCompleted as usize]
+                    .fetch_add(v, Ordering::Relaxed);
+                s.hists[Hist::ExecUs as usize * HIST_BUCKETS + bucket_of(v)]
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+            let snap = reg.snapshot();
+            match &reference {
+                None => reference = Some(snap),
+                Some(r) => assert_eq!(
+                    *r, snap,
+                    "snapshot diverges at {nshards} shards"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn local_twin_matches_registry() {
+        let reg = Registry::with_shards(4);
+        let mut local = LocalCounters::new();
+        for v in [0u64, 1, 5, 1023, 1 << 33] {
+            reg.add(Counter::CacheHitBytes, v);
+            reg.observe(Hist::FrameTasks, v);
+            local.add(Counter::CacheHitBytes, v);
+            local.observe(Hist::FrameTasks, v);
+        }
+        assert_eq!(reg.snapshot(), local.snapshot());
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let reg = Registry::with_shards(2);
+        reg.set_enabled(false);
+        reg.incr(Counter::TasksSubmitted);
+        reg.observe(Hist::QueueDepth, 42);
+        reg.set_enabled(true);
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("tasks_submitted"), 0);
+        assert_eq!(snap.hist_count("queue_depth"), 0);
+    }
+
+    #[test]
+    fn snapshot_lookup_helpers() {
+        let mut local = LocalCounters::new();
+        local.add(Counter::FramesEncoded, 7);
+        local.observe(Hist::QueueDepth, 3);
+        let snap = local.snapshot();
+        assert_eq!(snap.get("frames_encoded"), 7);
+        assert_eq!(snap.get("nope"), 0);
+        assert_eq!(snap.hist_count("queue_depth"), 1);
+        assert!(snap.hist("queue_depth").is_some());
+        assert!(snap.hist("nope").is_none());
+        assert_eq!(snap.counters.len(), NUM_COUNTERS);
+        assert_eq!(snap.hists.len(), NUM_HISTS);
+    }
+
+    #[test]
+    fn concurrent_adds_all_land() {
+        let reg = std::sync::Arc::new(Registry::with_shards(4));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let reg = std::sync::Arc::clone(&reg);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        reg.incr(Counter::QueuePushed);
+                        reg.observe(Hist::QueueDepth, 5);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("queue_pushed"), 8000);
+        assert_eq!(snap.hist_count("queue_depth"), 8000);
+    }
+}

@@ -1,0 +1,32 @@
+//! Unified telemetry: task-lifecycle spans, sharded counters and
+//! log2-bucketed histograms, and the live scrape snapshot — one
+//! low-overhead, clock-agnostic layer used identically by the threaded
+//! runtime and the discrete-event sim (DESIGN.md §11).
+//!
+//! Three pieces:
+//!
+//! - [`spans`] — per-task stage timestamps (queued, dispatched,
+//!   staged-in, exec-start, exec-end, notified) recorded through
+//!   `Copy` [`SpanHandle`]s into sharded preallocated rings, exported
+//!   as Chrome-trace JSON (`about:tracing`) or JSONL. Off by default.
+//! - [`counters`] — lock-free atomic [`Registry`] of counters and
+//!   histograms with a one-relaxed-load disabled path, plus the
+//!   deterministic single-threaded [`LocalCounters`] twin the sim
+//!   driver owns. On by default.
+//! - [`snapshot`] — the versioned [`MetricsSnapshot`] the binary
+//!   `OP_SCRAPE` protocol ships to `FalkonClient::scrape()`.
+//!
+//! Determinism contract: telemetry never draws from an RNG, never
+//! takes a decision-affecting lock, and never feeds a value back into
+//! control flow — recording is strictly passive, so every seeded
+//! differential stays bit-identical with the layer on or off (pinned
+//! by `telemetry_on_or_off_is_bit_identical` in the differential
+//! suite).
+
+pub mod counters;
+pub mod snapshot;
+pub mod spans;
+
+pub use counters::{Counter, CounterSnapshot, Hist, LocalCounters, Registry};
+pub use snapshot::{MetricsSnapshot, ServiceSection, SNAPSHOT_VERSION};
+pub use spans::{SpanEvent, SpanHandle, SpanSink, Stage, TaskSpans};

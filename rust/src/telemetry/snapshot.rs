@@ -1,0 +1,44 @@
+//! The live scrape snapshot: what `FalkonClient::scrape()` decodes.
+//!
+//! The wire codec lives in `falkon::protocol` (`OP_SCRAPE` /
+//! `OP_SCRAPE_REPLY`, versioned length-prefixed sections); this module
+//! owns the in-memory shape both ends share. Metric names travel as
+//! strings, not `Sym` ids — interner indices are per-process and would
+//! desync across the wire.
+
+use crate::telemetry::counters::CounterSnapshot;
+
+/// Wire version stamped into every encoded snapshot. Decoders accept
+/// newer versions by skipping unknown sections, so bumping this is
+/// only required when an *existing* section's layout changes.
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+/// Service-level gauges: the queue/executor/outcome view the legacy
+/// five-field `STATS_REPLY` carried, plus uptime and busy time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServiceSection {
+    pub uptime_us: u64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub queue_len: u64,
+    pub peak_queue: u64,
+    pub live_executors: u64,
+    pub peak_executors: u64,
+    pub busy_us: u64,
+}
+
+/// A full metric snapshot: service gauges plus the merged counter /
+/// histogram registry.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct MetricsSnapshot {
+    pub version: u16,
+    pub service: ServiceSection,
+    pub counters: CounterSnapshot,
+}
+
+impl MetricsSnapshot {
+    pub fn new(service: ServiceSection, counters: CounterSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot { version: SNAPSHOT_VERSION, service, counters }
+    }
+}

@@ -711,3 +711,82 @@ fn fault_free_trajectories_also_agree() {
     assert_eq!(real_susp, sim_susp);
     assert!(real_susp.iter().all(|s| !s), "nothing suspends without faults");
 }
+
+// ---------------------------------------------------------------------
+// Telemetry passivity (the observability layer's acceptance bar)
+// ---------------------------------------------------------------------
+
+/// One seeded multi-site run over the dataset chain with the full
+/// faults + diffusion + peer-links stack, optionally recording
+/// lifecycle spans.
+fn telemetry_probe_run(spans: bool, seed: u64) -> SimOutcome {
+    let n = 32;
+    let sites = vec![
+        ("a".to_string(), LrmConfig::pbs(4), 1.0),
+        ("b".to_string(), LrmConfig::pbs(4), 1.0),
+    ];
+    let mode = Mode::MultiSite {
+        sites,
+        gram: GramConfig { submit_cost: 0, throttle_interval: 0 },
+    };
+    let mut d = Driver::new(ds_chain_dag(n), mode, seed)
+        .with_score_policy(
+            ScoreConfig { suspend_after_failures: 3, ..ScoreConfig::default() },
+            secs(1e9),
+        )
+        .with_faults(SimFaults {
+            fail_first_attempts: fault_plan(n, 0xFA17),
+            retries: 1,
+            ..Default::default()
+        })
+        .with_diffusion(linked_cfg());
+    if spans {
+        d = d.with_spans(8192);
+    }
+    let o = d.run();
+    assert_eq!(o.timeline.len(), n);
+    o
+}
+
+#[test]
+fn telemetry_on_or_off_is_bit_identical() {
+    // Spans, the deterministic counter twin, and the global registry
+    // are strictly passive: a fully instrumented run and a
+    // telemetry-dark run of the same seed must be indistinguishable on
+    // every differential surface. (Toggling the global registry is safe
+    // here — nothing in this binary asserts its contents.)
+    let seed = 0x7E1E_0D0A;
+    gridswift::telemetry::counters::set_enabled(false);
+    let dark = telemetry_probe_run(false, seed);
+    gridswift::telemetry::counters::set_enabled(true);
+    let lit = telemetry_probe_run(true, seed);
+    assert_outcomes_identical(&dark, &lit, "telemetry on vs off");
+    assert_eq!(
+        dark.counters, lit.counters,
+        "the LocalCounters twin is seed-determined, not flag-dependent"
+    );
+    assert!(dark.span_events.is_empty(), "no sink, no events");
+    assert!(!lit.span_events.is_empty(), "the spanned run recorded");
+}
+
+#[test]
+fn sim_span_lifecycles_stay_ordered_under_fault_plans() {
+    // Retried tasks re-record their dispatch/exec stages; assembly
+    // keeps the final attempt, which must still read as a monotone
+    // queued → notified lifecycle.
+    let o = telemetry_probe_run(true, 0x5EED_0BCE);
+    let lives = gridswift::telemetry::spans::assemble(&o.span_events);
+    assert_eq!(lives.len(), 32, "one lifecycle per task");
+    for l in &lives {
+        assert!(l.complete(), "task {} missing a stage", l.task_id);
+        assert!(l.ordered(), "task {} lifecycle out of order", l.task_id);
+    }
+    assert!(
+        o.counters.get("tasks_retried") > 0,
+        "the fault plan must force retries"
+    );
+    assert_eq!(
+        o.counters.get("tasks_completed") + o.counters.get("tasks_failed"),
+        32
+    );
+}

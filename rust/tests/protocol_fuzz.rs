@@ -24,15 +24,19 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use gridswift::falkon::protocol::{
-    decode_doneb_bin, decode_doneb_body, decode_submitb_bin, decode_submitb_body,
-    encode_doneb, encode_doneb_bin, encode_submitb, encode_submitb_bin,
-    read_bin_frame, SubmitbBinIter, BIN_MAGIC, OP_SUBMITB,
+    decode_doneb_bin, decode_doneb_body, decode_scrape_reply_bin,
+    decode_submitb_bin, decode_submitb_body, encode_doneb, encode_doneb_bin,
+    encode_scrape_reply_bin, encode_submitb, encode_submitb_bin, read_bin_frame,
+    SubmitbBinIter, BIN_MAGIC, OP_SCRAPE, OP_SCRAPE_REPLY, OP_SUBMITB,
 };
 use gridswift::falkon::{
     FalkonClient, FalkonService, FalkonServiceConfig, FalkonTcpServer, RealDrpPolicy,
     RemoteResult, TaskSpec,
 };
 use gridswift::providers::AppTask;
+use gridswift::telemetry::{
+    CounterSnapshot, MetricsSnapshot, ServiceSection, SNAPSHOT_VERSION,
+};
 use gridswift::util::DetRng;
 
 /// One random wire word: 1..64 chars from a whitespace-free alphabet.
@@ -86,6 +90,35 @@ fn random_results(rng: &mut DetRng, n: usize) -> Vec<RemoteResult> {
 /// Strip the `[u32 len][u8 opcode]` header of a binary frame.
 fn payload(frame: &[u8]) -> &[u8] {
     &frame[5..]
+}
+
+/// A random metrics snapshot: service gauges across the u64 range plus
+/// randomized counter / histogram registries (names are valid wire
+/// words, bucket counts 0..70).
+fn random_snapshot(rng: &mut DetRng) -> MetricsSnapshot {
+    let service = ServiceSection {
+        uptime_us: rng.next_u64(),
+        submitted: rng.next_u64(),
+        completed: rng.next_u64(),
+        failed: rng.next_u64(),
+        queue_len: rng.next_u64(),
+        peak_queue: rng.next_u64(),
+        live_executors: rng.next_u64(),
+        peak_executors: rng.next_u64(),
+        busy_us: rng.next_u64(),
+    };
+    let counters = CounterSnapshot {
+        counters: (0..rng.below(24))
+            .map(|_| (word(rng), rng.next_u64()))
+            .collect(),
+        hists: (0..rng.below(6))
+            .map(|_| {
+                let buckets = (0..rng.below(70)).map(|_| rng.next_u64()).collect();
+                (word(rng), buckets)
+            })
+            .collect(),
+    };
+    MetricsSnapshot { version: SNAPSHOT_VERSION, service, counters }
 }
 
 #[test]
@@ -165,6 +198,7 @@ fn fuzz_garbage_bytes_never_panic_decoders() {
         // coincidentally valid bytes, but never a panic or over-read.
         let _ = decode_submitb_bin(&garbage);
         let _ = decode_doneb_bin(&garbage);
+        let _ = decode_scrape_reply_bin(&garbage);
         if let Ok(mut iter) = SubmitbBinIter::parse(&garbage) {
             let mut args = Vec::new();
             while let Ok(Some(_)) = iter.next_task(&mut args) {}
@@ -173,6 +207,40 @@ fn fuzz_garbage_bytes_never_panic_decoders() {
         let text = String::from_utf8_lossy(&garbage);
         let _ = decode_submitb_body(4, &mut std::io::Cursor::new(text.as_bytes()));
         let _ = decode_doneb_body(4, &mut std::io::Cursor::new(text.as_bytes()));
+    }
+}
+
+#[test]
+fn fuzz_scrape_reply_roundtrip() {
+    let mut rng = DetRng::new(0x5C4A);
+    let mut buf = Vec::new();
+    for round in 0..50 {
+        let snap = random_snapshot(&mut rng);
+        encode_scrape_reply_bin(&snap, &mut buf).unwrap();
+        assert_eq!(buf[4], OP_SCRAPE_REPLY, "opcode byte, round {round}");
+        let back = decode_scrape_reply_bin(payload(&buf)).unwrap();
+        assert_eq!(back, snap, "scrape round-trip, round {round}");
+    }
+}
+
+#[test]
+fn fuzz_scrape_reply_truncation_never_panics() {
+    let mut rng = DetRng::new(0x5C4B);
+    for _ in 0..10 {
+        let snap = random_snapshot(&mut rng);
+        let mut frame = Vec::new();
+        encode_scrape_reply_bin(&snap, &mut frame).unwrap();
+        // Every proper payload prefix must error: the decoder reads
+        // exactly the declared sections and rejects trailing bytes, so
+        // nothing short of the whole payload parses.
+        let p = payload(&frame);
+        for cut in 0..p.len() {
+            assert!(
+                decode_scrape_reply_bin(&p[..cut]).is_err(),
+                "scrape payload cut {cut} of {}",
+                p.len()
+            );
+        }
     }
 }
 
@@ -213,6 +281,40 @@ fn fuzz_mixed_version_clients_against_one_server() {
         want.sort_unstable();
         assert_eq!(ids, want, "round {round}");
     }
+}
+
+#[test]
+fn fuzz_live_scrape_interleaved_with_batches() {
+    let (_svc, server) = start_svc();
+    let mut rng = DetRng::new(0x5C4C);
+    let mut client = FalkonClient::connect_binary(server.addr()).unwrap();
+    let mut submitted = 0u64;
+    for round in 0..6u64 {
+        let n = 1 + rng.below(20) as usize;
+        let mut specs = random_specs(&mut rng, n);
+        for (i, s) in specs.iter_mut().enumerate() {
+            s.id = round * 1000 + i as u64;
+        }
+        client.submit_batch(&specs).unwrap();
+        submitted += n as u64;
+        // Scrape while results may still be in flight: DONEB frames
+        // that race the reply are buffered, never lost.
+        let snap = client.scrape().unwrap();
+        assert_eq!(snap.version, SNAPSHOT_VERSION, "round {round}");
+        assert_eq!(snap.service.submitted, submitted, "round {round}");
+        assert!(snap.service.completed <= submitted, "round {round}");
+        assert!(
+            snap.counters.get("tasks_submitted") >= submitted,
+            "global registry floor, round {round}"
+        );
+        for _ in 0..n {
+            assert!(client.next_result().unwrap().ok, "round {round}");
+        }
+    }
+    // Quiescent scrape: everything submitted has drained.
+    let snap = client.scrape().unwrap();
+    assert_eq!(snap.service.completed, submitted);
+    assert_eq!(snap.service.queue_len, 0);
 }
 
 #[test]
@@ -322,4 +424,6 @@ fn fuzz_truncated_binary_frame_mid_stream_errors_cleanly() {
 #[test]
 fn opcode_numbering_is_wire_abi() {
     assert_eq!(OP_SUBMITB, 1);
+    assert_eq!(OP_SCRAPE, 6);
+    assert_eq!(OP_SCRAPE_REPLY, 7);
 }

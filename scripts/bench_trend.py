@@ -48,6 +48,14 @@ TRACKED_BY_BENCH = {
          ("queue_contention_mutex_1w_ops_per_s",), False),
         ("mutex queue 8w ops/s",
          ("queue_contention_mutex_8w_ops_per_s",), False),
+        # Observability ride-alongs: memory high-water mark and global
+        # wire/dispatch event totals. Report-only (RSS swings with the
+        # runner image; counts scale with --quick), but present-or-fail
+        # so a key rename can't silently drop them.
+        ("peak RSS MB", ("peak_rss_mb",), False),
+        ("frames encoded", ("frames_encoded",), False),
+        ("frames decoded", ("frames_decoded",), False),
+        ("tasks dispatched", ("tasks_dispatched",), False),
     ],
     "fig12_throughput": [
         ("falkon in-process tasks/s", ("falkon_inproc_tasks_per_s",), False),
@@ -57,6 +65,9 @@ TRACKED_BY_BENCH = {
         ("WAN sim line-per-task tasks/s",
          ("sim_wan_line_per_task_tasks_per_s",), True),
         ("WAN sim binary tasks/s", ("sim_wan_binary_tasks_per_s",), True),
+        ("peak RSS MB", ("peak_rss_mb",), False),
+        ("frames encoded", ("frames_encoded",), False),
+        ("frames decoded", ("frames_decoded",), False),
     ],
     # All diffusion rows are deterministic virtual-time sims: gate them
     # all (a >20% drop means a code change, not runner noise).
@@ -73,6 +84,11 @@ TRACKED_BY_BENCH = {
         ("peer-fetch consumers/s", ("sim_peer_fetch_tasks_per_s",), True),
         ("peer shared-FS-cold consumers/s",
          ("sim_peer_sharedfs_cold_tasks_per_s",), True),
+        ("peak RSS MB", ("peak_rss_mb",), False),
+        ("cache hit bytes", ("cache_hit_bytes",), False),
+        ("cache miss bytes", ("cache_miss_bytes",), False),
+        ("peer transfer bytes", ("peer_transfer_bytes",), False),
+        ("shared-FS transfer bytes", ("sharedfs_transfer_bytes",), False),
     ],
     # Scheduler matrix efficiencies (lower_bound / makespan, higher is
     # better): pure virtual-time numbers, bit-deterministic per cell, so
@@ -99,6 +115,7 @@ TRACKED_BY_BENCH = {
          ("sim_sched_bag_min-queue_efficiency",), False),
         ("bag round-robin efficiency",
          ("sim_sched_bag_round-robin_efficiency",), False),
+        ("peak RSS MB", ("peak_rss_mb",), False),
     ],
     # Sim-core engine speed: wall-clock rates of a fixed deterministic
     # workload (same events, same schedule, every run), so a >20% drop
@@ -109,6 +126,13 @@ TRACKED_BY_BENCH = {
         ("1M-task DAG tasks/s", ("sim_dag_tasks_per_s",), True),
         ("1M-task DAG events/s", ("sim_dag_events_per_s",), True),
         ("1M-task DAG peak RSS MB", ("peak_rss_mb",), False),
+        # Fully-lit (counters + spans) engine rate: gated like the other
+        # deterministic-workload rows, so telemetry cost creep fails CI.
+        ("telemetry-lit events/s", ("telemetry_churn_events_per_s",), True),
+        # Overhead percentage is lower-is-better — the drop-gate's
+        # polarity is wrong for it, so it is present-or-fail only (the
+        # bench itself asserts the <5% budget).
+        ("telemetry overhead %", ("telemetry_overhead_pct",), False),
     ],
 }
 
