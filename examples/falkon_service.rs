@@ -17,6 +17,7 @@ use gridswift::falkon::{
     FalkonClient, FalkonService, FalkonServiceConfig, FalkonTcpServer, RealDrpPolicy,
     TaskSpec,
 };
+use gridswift::telemetry::spans;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -41,7 +42,10 @@ fn main() -> Result<()> {
         }
     }
 
-    // Benchmark mode: in-process endpoint, pipelined submissions.
+    // Benchmark mode: in-process endpoint, pipelined submissions. Span
+    // recording is on for this leg so the run doubles as a live trace
+    // capture (exported as Chrome-trace JSON below).
+    spans::set_enabled(true);
     let server = FalkonTcpServer::start(Arc::clone(&svc), "127.0.0.1:0")?;
     println!("== Falkon service microbenchmark (TCP endpoint) ==");
     let mut client = FalkonClient::connect(server.addr())?;
@@ -60,6 +64,18 @@ fn main() -> Result<()> {
     println!(
         "{ok}/{n} tasks through TCP submit->dispatch->notify in {dt:.2}s = {:.0} tasks/s",
         n as f64 / dt
+    );
+    // Export the traced leg before the framed run reuses the rings.
+    spans::set_enabled(false);
+    let tasks = spans::assemble(&spans::global().snapshot());
+    let trace_path = std::path::Path::new("target").join("TRACE_falkon_service.json");
+    std::fs::create_dir_all("target")?;
+    std::fs::write(&trace_path, spans::chrome_trace(&tasks).render())?;
+    println!(
+        "wrote {} lifecycle traces ({} events dropped) to {} — load in chrome://tracing or Perfetto",
+        tasks.len(),
+        spans::global().dropped(),
+        trace_path.display()
     );
 
     // Framed mode: the same load as SUBMITB frames of 256 (one write and

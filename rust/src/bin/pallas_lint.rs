@@ -1,0 +1,113 @@
+//! `pallas-lint` — the repo's vendored lint gate (DESIGN.md §12).
+//!
+//! ```text
+//! cargo run --bin pallas-lint                     # gate: fail on new violations
+//! cargo run --bin pallas-lint -- --update-baseline  # grandfather current state
+//! cargo run --bin pallas-lint -- --root rust/src --baseline rust/lint-baseline.txt
+//! ```
+//!
+//! Exit codes: 0 clean (or baseline updated), 1 new violations, 2 usage
+//! or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use gridswift::check::lint::{baseline, lint_tree};
+
+struct Args {
+    root: PathBuf,
+    baseline: PathBuf,
+    update_baseline: bool,
+    verbose: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        root: PathBuf::from("rust/src"),
+        baseline: PathBuf::from("rust/lint-baseline.txt"),
+        update_baseline: false,
+        verbose: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => args.root = it.next().ok_or("--root needs a path")?.into(),
+            "--baseline" => args.baseline = it.next().ok_or("--baseline needs a path")?.into(),
+            "--update-baseline" => args.update_baseline = true,
+            "--verbose" | "-v" => args.verbose = true,
+            "--help" | "-h" => {
+                return Err("usage: pallas-lint [--root DIR] [--baseline FILE] \
+                            [--update-baseline] [--verbose]"
+                    .into())
+            }
+            other => return Err(format!("unknown argument: {other}")),
+        }
+    }
+    Ok(args)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let violations = match lint_tree(&args.root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("pallas-lint: cannot walk {}: {e}", args.root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if args.update_baseline {
+        let rendered = baseline::render(&violations);
+        if let Err(e) = std::fs::write(&args.baseline, rendered) {
+            eprintln!("pallas-lint: cannot write {}: {e}", args.baseline.display());
+            return ExitCode::from(2);
+        }
+        println!(
+            "pallas-lint: baseline updated ({} entries) -> {}",
+            violations.len(),
+            args.baseline.display()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let budget = match std::fs::read_to_string(&args.baseline) {
+        Ok(s) => baseline::parse(&s),
+        Err(_) => Default::default(), // no baseline file: everything is new
+    };
+    let (fresh, grandfathered) = baseline::filter(violations, &budget);
+
+    if args.verbose && !grandfathered.is_empty() {
+        println!("{} grandfathered violation(s) in baseline:", grandfathered.len());
+        for v in &grandfathered {
+            println!("  {}:{} [{}] {}", v.path, v.line, v.rule, v.message);
+        }
+    }
+
+    if fresh.is_empty() {
+        println!(
+            "pallas-lint: clean ({} grandfathered in baseline)",
+            grandfathered.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    eprintln!("pallas-lint: {} new violation(s):", fresh.len());
+    for v in &fresh {
+        eprintln!("\n  {}:{} [{}]", v.path, v.line, v.rule);
+        eprintln!("    {}", v.text);
+        eprintln!("    problem: {}", v.message);
+        eprintln!("    fix:     {}", v.suggestion);
+    }
+    eprintln!(
+        "\nFix the sites above, suppress with `// lint: allow(<rule>) — <why>`,\n\
+         or (last resort) regenerate the baseline with --update-baseline."
+    );
+    ExitCode::FAILURE
+}

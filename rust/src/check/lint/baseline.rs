@@ -1,0 +1,113 @@
+//! Checked-in lint baseline: grandfathered violations the gate ignores.
+//!
+//! Format is one entry per line, tab-separated: `rule\tpath\ttrimmed
+//! source line`. Keying on the trimmed line text (not the line number)
+//! keeps entries stable while code above them moves. Duplicate entries
+//! act as counts: two identical baseline lines absorb at most two
+//! identical current violations — fixing one of N grandfathered sites
+//! shrinks the budget on the next `--update-baseline`.
+
+use std::collections::HashMap;
+
+use super::rules::Violation;
+
+fn key(rule: &str, path: &str, text: &str) -> String {
+    format!("{rule}\t{path}\t{text}")
+}
+
+/// Parse baseline file contents into a key → budget multiset.
+pub fn parse(contents: &str) -> HashMap<String, usize> {
+    let mut budget: HashMap<String, usize> = HashMap::new();
+    for line in contents.lines() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        *budget.entry(line.to_string()).or_insert(0) += 1;
+    }
+    budget
+}
+
+/// Serialize the given violations as baseline file contents.
+pub fn render(violations: &[Violation]) -> String {
+    let mut out = String::from(
+        "# pallas-lint baseline — grandfathered violations, one per line:\n\
+         #   rule<TAB>path<TAB>trimmed source line\n\
+         # Regenerate with: cargo run --bin pallas-lint -- --update-baseline\n",
+    );
+    let mut lines: Vec<String> =
+        violations.iter().map(|v| key(v.rule, &v.path, &v.text)).collect();
+    lines.sort();
+    for l in lines {
+        out.push_str(&l);
+        out.push('\n');
+    }
+    out
+}
+
+/// Split violations into (new, grandfathered) against the baseline.
+pub fn filter(
+    violations: Vec<Violation>,
+    baseline: &HashMap<String, usize>,
+) -> (Vec<Violation>, Vec<Violation>) {
+    let mut budget = baseline.clone();
+    let mut fresh = Vec::new();
+    let mut old = Vec::new();
+    for v in violations {
+        let k = key(v.rule, &v.path, &v.text);
+        match budget.get_mut(&k) {
+            Some(n) if *n > 0 => {
+                *n -= 1;
+                old.push(v);
+            }
+            _ => fresh.push(v),
+        }
+    }
+    (fresh, old)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(rule: &'static str, path: &str, text: &str) -> Violation {
+        Violation {
+            rule,
+            path: path.into(),
+            line: 1,
+            text: text.into(),
+            message: String::new(),
+            suggestion: "",
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_counting() {
+        let vs = vec![
+            v("det-iter", "sim/core.rs", "for k in m.keys() {"),
+            v("det-iter", "sim/core.rs", "for k in m.keys() {"),
+            v("ord-justify", "falkon/queue.rs", "head.load(Ordering::Acquire);"),
+        ];
+        let rendered = render(&vs);
+        let budget = parse(&rendered);
+        assert_eq!(budget.len(), 2);
+
+        // All three absorbed.
+        let (fresh, old) = filter(vs.clone(), &budget);
+        assert!(fresh.is_empty());
+        assert_eq!(old.len(), 3);
+
+        // A third identical det-iter hit exceeds the budget of two.
+        let mut more = vs;
+        more.push(v("det-iter", "sim/core.rs", "for k in m.keys() {"));
+        let (fresh, old) = filter(more, &budget);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(old.len(), 3);
+    }
+
+    #[test]
+    fn comments_and_blanks_are_ignored() {
+        let budget = parse("# header\n\n# more\n");
+        assert!(budget.is_empty());
+    }
+}

@@ -1,0 +1,316 @@
+//! A small hand-rolled Rust lexer: just enough fidelity for rule
+//! matching. Produces a flat token stream with line numbers; comments are
+//! kept (rules read `// ord:` and `// lint: allow(...)` annotations),
+//! string/char/lifetime literals are consumed opaquely so their contents
+//! can never fake a match, and nested block comments plus raw/byte
+//! strings are handled.
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Single punctuation character (`::` arrives as two `:`).
+    Punct(char),
+    /// `//...` or `/* ... */` comment; text excludes the delimiters.
+    Comment { text: String, line_comment: bool },
+    /// Any string-ish literal: "", r"", r#""#, b"", br#""#.
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// Lifetime like `'a`.
+    Lifetime,
+    /// Numeric literal (incl. suffix chars).
+    Num,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    /// 1-based source line the token starts on.
+    pub line: usize,
+    pub kind: TokKind,
+}
+
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    let count_newlines = |s: &[char]| s.iter().filter(|&&c| c == '\n').count();
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => {
+                i += 1;
+            }
+            '/' if i + 1 < b.len() && b[i + 1] == '/' => {
+                let start = i + 2;
+                let mut j = start;
+                while j < b.len() && b[j] != '\n' {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    line,
+                    kind: TokKind::Comment {
+                        text: b[start..j].iter().collect(),
+                        line_comment: true,
+                    },
+                });
+                i = j;
+            }
+            '/' if i + 1 < b.len() && b[i + 1] == '*' => {
+                let tok_line = line;
+                let start = i + 2;
+                let mut depth = 1usize;
+                let mut j = start;
+                while j < b.len() && depth > 0 {
+                    if j + 1 < b.len() && b[j] == '/' && b[j + 1] == '*' {
+                        depth += 1;
+                        j += 2;
+                    } else if j + 1 < b.len() && b[j] == '*' && b[j + 1] == '/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                let end = j.saturating_sub(2).max(start);
+                line += count_newlines(&b[i..j]);
+                toks.push(Tok {
+                    line: tok_line,
+                    kind: TokKind::Comment {
+                        text: b[start..end].iter().collect(),
+                        line_comment: false,
+                    },
+                });
+                i = j;
+            }
+            '"' => {
+                let tok_line = line;
+                let j = skip_plain_string(&b, i + 1);
+                line += count_newlines(&b[i..j]);
+                toks.push(Tok { line: tok_line, kind: TokKind::Str });
+                i = j;
+            }
+            '\'' => {
+                // Lifetime vs char literal: `'ident` not closed by a
+                // quote right after is a lifetime.
+                let is_lifetime = i + 1 < b.len()
+                    && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                    && !(i + 2 < b.len() && b[i + 2] == '\'');
+                if is_lifetime {
+                    let mut j = i + 1;
+                    while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+                        j += 1;
+                    }
+                    toks.push(Tok { line, kind: TokKind::Lifetime });
+                    i = j;
+                } else {
+                    let mut j = i + 1;
+                    if j < b.len() && b[j] == '\\' {
+                        j += 2; // escape: skip the escaped char
+                    } else if j < b.len() {
+                        j += 1;
+                    }
+                    // Scan to the closing quote (covers \u{...} bodies).
+                    while j < b.len() && b[j] != '\'' {
+                        j += 1;
+                    }
+                    toks.push(Tok { line, kind: TokKind::Char });
+                    i = (j + 1).min(b.len());
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                // Raw / byte string prefixes: r" r#" b" br" b' etc.
+                if let Some(j) = try_string_prefix(&b, i) {
+                    let tok_line = line;
+                    line += count_newlines(&b[i..j]);
+                    toks.push(Tok { line: tok_line, kind: TokKind::Str });
+                    i = j;
+                    continue;
+                }
+                if (c == 'b') && i + 1 < b.len() && b[i + 1] == '\'' {
+                    // byte char b'x'
+                    let mut j = i + 2;
+                    if j < b.len() && b[j] == '\\' {
+                        j += 2;
+                    } else if j < b.len() {
+                        j += 1;
+                    }
+                    while j < b.len() && b[j] != '\'' {
+                        j += 1;
+                    }
+                    toks.push(Tok { line, kind: TokKind::Char });
+                    i = (j + 1).min(b.len());
+                    continue;
+                }
+                let mut j = i;
+                while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                toks.push(Tok { line, kind: TokKind::Ident(b[i..j].iter().collect()) });
+                i = j;
+            }
+            c if c.is_ascii_digit() => {
+                let mut j = i;
+                while j < b.len()
+                    && (b[j].is_alphanumeric() || b[j] == '_' || b[j] == '.')
+                    && !(b[j] == '.' && j + 1 < b.len() && b[j + 1] == '.')
+                {
+                    j += 1;
+                }
+                toks.push(Tok { line, kind: TokKind::Num });
+                i = j;
+            }
+            _ => {
+                toks.push(Tok { line, kind: TokKind::Punct(c) });
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+/// Consume a plain `"..."` string starting after the opening quote;
+/// returns the index just past the closing quote.
+fn skip_plain_string(b: &[char], mut j: usize) -> usize {
+    while j < b.len() {
+        match b[j] {
+            '\\' => j += 2,
+            '"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// If position `i` starts a raw or byte string literal (r", r#", b",
+/// br#"...), consume it and return the index just past its end.
+fn try_string_prefix(b: &[char], i: usize) -> Option<usize> {
+    let mut j = i;
+    let mut raw = false;
+    // Optional b, then optional r (or rb — both orders show up).
+    if b.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if b.get(j) == Some(&'r') {
+        raw = true;
+        j += 1;
+    } else if b.get(j) == Some(&'b') && b.get(i) == Some(&'r') {
+        // "rb" prefix
+        raw = true;
+        j += 1;
+    }
+    if raw {
+        let mut hashes = 0usize;
+        while b.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if b.get(j) != Some(&'"') {
+            return None;
+        }
+        j += 1;
+        // Scan for `"` followed by `hashes` hashes.
+        loop {
+            if j >= b.len() {
+                return Some(j);
+            }
+            if b[j] == '"' {
+                let mut k = j + 1;
+                let mut seen = 0usize;
+                while seen < hashes && b.get(k) == Some(&'#') {
+                    seen += 1;
+                    k += 1;
+                }
+                if seen == hashes {
+                    return Some(k);
+                }
+            }
+            j += 1;
+        }
+    } else {
+        // Byte string b"..."
+        if j == i {
+            return None; // no prefix consumed
+        }
+        if b.get(j) != Some(&'"') {
+            return None;
+        }
+        Some(skip_plain_string(b, j + 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn idents_and_puncts_with_lines() {
+        let toks = lex("fn foo() {\n  bar::baz;\n}\n");
+        assert_eq!(toks[0], Tok { line: 1, kind: TokKind::Ident("fn".into()) });
+        let bar = toks.iter().find(|t| t.kind == TokKind::Ident("bar".into())).unwrap();
+        assert_eq!(bar.line, 2);
+    }
+
+    #[test]
+    fn string_contents_never_tokenize() {
+        assert_eq!(idents("let x = \"Instant::now() unwrap\";"), vec!["let", "x"]);
+        assert_eq!(idents("let y = b\"Ordering::Relaxed\";"), vec!["let", "y"]);
+        assert_eq!(idents("let z = r#\"panic!(\"hi\")\"#;"), vec!["let", "z"]);
+    }
+
+    #[test]
+    fn comments_are_captured_with_text() {
+        let toks = lex("x; // ord: Relaxed is fine\n/* block\ncomment */ y;");
+        let comments: Vec<_> = toks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                TokKind::Comment { text, line_comment } => Some((t.line, text.clone(), *line_comment)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(comments[0], (1, " ord: Relaxed is fine".to_string(), true));
+        assert_eq!(comments[1].0, 2);
+        assert!(!comments[1].2);
+        // The token after a multi-line block comment has the right line.
+        let y = toks.iter().find(|t| t.kind == TokKind::Ident("y".into())).unwrap();
+        assert_eq!(y.line, 3);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        assert_eq!(idents("/* outer /* inner */ still */ x;"), vec!["x"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let toks = lex("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes = toks.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        let chars = toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn numbers_with_suffixes() {
+        let toks = lex("let a = 0x1F_u64 + 1.5e3; let r = 0..10;");
+        let nums = toks.iter().filter(|t| t.kind == TokKind::Num).count();
+        assert_eq!(nums, 4, "{toks:?}");
+    }
+}

@@ -1,0 +1,687 @@
+//! The rule engine: each rule is a pure function over the lexed token
+//! stream of one file. Rules skip `#[cfg(test)]` regions and honor inline
+//! `// lint: allow(rule-name) — reason` suppressions (same line, next
+//! line, or the whole following item when the comment sits directly above
+//! an `fn`/`impl`/`mod`/... header).
+//!
+//! Rule table (DESIGN.md §12):
+//!
+//! | rule            | scope                          | invariant                                   |
+//! |-----------------|--------------------------------|---------------------------------------------|
+//! | clock-purity    | sim/, policy/, diffusion/      | no Instant::now / SystemTime::now /         |
+//! |                 |                                | thread::sleep — Clock/DetRng injection only |
+//! | det-iter        | sim/, policy/, diffusion/      | no order-leaking iteration over HashMap/Set |
+//! | ord-justify     | all of rust/src                | Relaxed/Acquire/Release/AcqRel need `// ord:`|
+//! | hot-path-alloc  | files with a `hot-path` marker | no Box/Vec/String/format!/collect allocation|
+//! | decode-no-panic | falkon/protocol.rs             | no unwrap/expect/panic! in decode paths     |
+//! | checked-sync    | falkon/queue.rs,               | sync primitives come from crate::check::sync|
+//! |                 | telemetry/counters.rs          | so the model checker can interpose          |
+
+use super::lexer::{lex, Tok, TokKind};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    /// Trimmed source line (the baseline key, stable under line drift).
+    pub text: String,
+    pub message: String,
+    pub suggestion: &'static str,
+}
+
+/// Everything the rules need about one file, computed once.
+struct FileCtx<'a> {
+    path: &'a str,
+    lines: Vec<&'a str>,
+    /// Token stream with comments stripped (for pattern matching).
+    code: Vec<Tok>,
+    /// 1-based lines covered by `#[cfg(test)]` items.
+    test_lines: Vec<bool>,
+    /// (rule, first_line, last_line) inline suppressions.
+    allows: Vec<(String, usize, usize)>,
+    /// Lines carrying an `// ord:` justification comment.
+    ord_lines: Vec<bool>,
+}
+
+impl<'a> FileCtx<'a> {
+    fn build(path: &'a str, src: &'a str) -> Self {
+        let toks = lex(src);
+        let lines: Vec<&str> = src.lines().collect();
+        let nlines = lines.len() + 1;
+        let mut test_lines = vec![false; nlines + 1];
+        let mut ord_lines = vec![false; nlines + 1];
+        let mut allows = Vec::new();
+
+        // Comment-derived facts.
+        for (idx, t) in toks.iter().enumerate() {
+            let TokKind::Comment { text, .. } = &t.kind else { continue };
+            let trimmed = text.trim();
+            if trimmed.starts_with("ord:") && t.line <= nlines {
+                ord_lines[t.line] = true;
+            }
+            if let Some(rest) = trimmed.split("lint: allow(").nth(1) {
+                if let Some(list) = rest.split(')').next() {
+                    let end = allow_span_end(&toks, idx, t.line);
+                    for rule in list.split(',') {
+                        allows.push((rule.trim().to_string(), t.line, end));
+                    }
+                }
+            }
+        }
+
+        // #[cfg(test)] regions.
+        let code: Vec<Tok> =
+            toks.iter().filter(|t| !matches!(t.kind, TokKind::Comment { .. })).cloned().collect();
+        let mut k = 0usize;
+        while k < code.len() {
+            if is_cfg_test_attr(&code, k) {
+                let attr_line = code[k].line;
+                // Find the item body: first '{' before a top-level ';'.
+                let mut j = k + 7; // past `# [ cfg ( test ) ]`
+                let mut end_line = attr_line;
+                while j < code.len() {
+                    match code[j].kind {
+                        TokKind::Punct('{') => {
+                            let close = match_brace(&code, j);
+                            end_line = code.get(close).map(|t| t.line).unwrap_or(end_line);
+                            break;
+                        }
+                        TokKind::Punct(';') => {
+                            end_line = code[j].line;
+                            break;
+                        }
+                        _ => j += 1,
+                    }
+                }
+                for l in attr_line..=end_line.min(nlines) {
+                    test_lines[l] = true;
+                }
+                k = j.max(k + 1);
+            } else {
+                k += 1;
+            }
+        }
+
+        FileCtx { path, lines, code, test_lines, allows, ord_lines }
+    }
+
+    fn in_test(&self, line: usize) -> bool {
+        self.test_lines.get(line).copied().unwrap_or(false)
+    }
+
+    fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.allows.iter().any(|(r, lo, hi)| r == rule && (*lo..=*hi).contains(&line))
+    }
+
+    fn line_text(&self, line: usize) -> String {
+        self.lines.get(line - 1).map(|s| s.trim().to_string()).unwrap_or_default()
+    }
+
+    fn push(
+        &self,
+        out: &mut Vec<Violation>,
+        rule: &'static str,
+        line: usize,
+        message: String,
+        suggestion: &'static str,
+    ) {
+        if self.in_test(line) || self.allowed(rule, line) {
+            return;
+        }
+        out.push(Violation {
+            rule,
+            path: self.path.to_string(),
+            line,
+            text: self.line_text(line),
+            message,
+            suggestion,
+        });
+    }
+
+    fn ident(&self, k: usize) -> Option<&str> {
+        match self.code.get(k).map(|t| &t.kind) {
+            Some(TokKind::Ident(s)) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    fn punct(&self, k: usize, c: char) -> bool {
+        matches!(self.code.get(k).map(|t| &t.kind), Some(TokKind::Punct(p)) if *p == c)
+    }
+
+    /// Matches `a :: b` starting at `k` for the given identifier pair.
+    fn path2(&self, k: usize, a: &str, b: &str) -> bool {
+        self.ident(k) == Some(a)
+            && self.punct(k + 1, ':')
+            && self.punct(k + 2, ':')
+            && self.ident(k + 3) == Some(b)
+    }
+}
+
+/// How far an allow comment reaches: its own line and the next by
+/// default; the whole following item when it annotates a header.
+fn allow_span_end(toks: &[Tok], comment_idx: usize, comment_line: usize) -> usize {
+    let mut j = comment_idx + 1;
+    while j < toks.len() && matches!(toks[j].kind, TokKind::Comment { .. }) {
+        j += 1;
+    }
+    let item_head = matches!(
+        toks.get(j).map(|t| &t.kind),
+        Some(TokKind::Ident(s)) if matches!(
+            s.as_str(),
+            "fn" | "pub" | "impl" | "mod" | "unsafe" | "struct" | "enum" | "trait" | "static" | "const"
+        )
+    );
+    if item_head {
+        // Reach the item's body brace (within a few lines) and span it.
+        let mut b = j;
+        while b < toks.len() && toks[b].line <= comment_line + 6 {
+            if matches!(toks[b].kind, TokKind::Punct('{')) {
+                let mut depth = 0usize;
+                let mut k = b;
+                while k < toks.len() {
+                    match toks[k].kind {
+                        TokKind::Punct('{') => depth += 1,
+                        TokKind::Punct('}') => {
+                            depth -= 1;
+                            if depth == 0 {
+                                return toks[k].line;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                break;
+            }
+            if matches!(toks[b].kind, TokKind::Punct(';')) {
+                return toks[b].line;
+            }
+            b += 1;
+        }
+    }
+    comment_line + 1
+}
+
+fn is_cfg_test_attr(code: &[Tok], k: usize) -> bool {
+    matches!(code.get(k).map(|t| &t.kind), Some(TokKind::Punct('#')))
+        && matches!(code.get(k + 1).map(|t| &t.kind), Some(TokKind::Punct('[')))
+        && matches!(code.get(k + 2).map(|t| &t.kind), Some(TokKind::Ident(s)) if s == "cfg")
+        && matches!(code.get(k + 3).map(|t| &t.kind), Some(TokKind::Punct('(')))
+        && matches!(code.get(k + 4).map(|t| &t.kind), Some(TokKind::Ident(s)) if s == "test")
+        && matches!(code.get(k + 5).map(|t| &t.kind), Some(TokKind::Punct(')')))
+        && matches!(code.get(k + 6).map(|t| &t.kind), Some(TokKind::Punct(']')))
+}
+
+/// Index of the `}` matching the `{` at `open` (or `len` if unbalanced).
+fn match_brace(code: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut k = open;
+    while k < code.len() {
+        match code[k].kind {
+            TokKind::Punct('{') => depth += 1,
+            TokKind::Punct('}') => {
+                depth -= 1;
+                if depth == 0 {
+                    return k;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    code.len()
+}
+
+fn in_scoped_dir(path: &str) -> bool {
+    path.starts_with("sim/") || path.starts_with("policy/") || path.starts_with("diffusion/")
+}
+
+// ---------------------------------------------------------------------------
+// The rules
+// ---------------------------------------------------------------------------
+
+fn clock_purity(ctx: &FileCtx, out: &mut Vec<Violation>) {
+    if !in_scoped_dir(ctx.path) {
+        return;
+    }
+    for k in 0..ctx.code.len() {
+        let line = ctx.code[k].line;
+        if ctx.path2(k, "Instant", "now") {
+            ctx.push(
+                out,
+                "clock-purity",
+                line,
+                "wall-clock read (Instant::now) in deterministic code".into(),
+                "inject policy::clock::Clock and read virtual time instead",
+            );
+        } else if ctx.path2(k, "SystemTime", "now") {
+            ctx.push(
+                out,
+                "clock-purity",
+                line,
+                "wall-clock read (SystemTime::now) in deterministic code".into(),
+                "inject policy::clock::Clock and read virtual time instead",
+            );
+        } else if ctx.path2(k, "thread", "sleep") {
+            ctx.push(
+                out,
+                "clock-purity",
+                line,
+                "real sleep in deterministic code".into(),
+                "advance the simulation clock instead of sleeping",
+            );
+        }
+    }
+}
+
+const ITER_METHODS: &[&str] =
+    &["iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "drain", "retain"];
+
+fn det_iter(ctx: &FileCtx, out: &mut Vec<Violation>) {
+    if !in_scoped_dir(ctx.path) {
+        return;
+    }
+    // Pass 1: identifiers declared or initialized as HashMap/HashSet
+    // (struct fields `name: HashMap<..>`, bindings `x = HashMap::new()`).
+    let mut maps: Vec<String> = Vec::new();
+    for k in 0..ctx.code.len() {
+        let is_map_ty =
+            |s: Option<&str>| matches!(s, Some("HashMap") | Some("HashSet"));
+        if let Some(name) = ctx.ident(k) {
+            if (ctx.punct(k + 1, ':') && !ctx.punct(k + 2, ':') && is_map_ty(ctx.ident(k + 2)))
+                || (ctx.punct(k + 1, '=') && is_map_ty(ctx.ident(k + 2)))
+            {
+                maps.push(name.to_string());
+            }
+        }
+    }
+    // Pass 2: order-sensitive methods on those identifiers.
+    for k in 0..ctx.code.len() {
+        let Some(name) = ctx.ident(k) else { continue };
+        if !maps.iter().any(|m| m == name) {
+            continue;
+        }
+        if ctx.punct(k + 1, '.') {
+            if let Some(m) = ctx.ident(k + 2) {
+                if ITER_METHODS.contains(&m) {
+                    ctx.push(
+                        out,
+                        "det-iter",
+                        ctx.code[k].line,
+                        format!("iteration-order leak: `{name}.{m}()` on a hash container"),
+                        "sort keys first or fold order-insensitively; if provably order-free, add // lint: allow(det-iter) — <why>",
+                    );
+                }
+            }
+        }
+    }
+}
+
+const ORD_NAMES: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel"];
+
+fn ord_justify(ctx: &FileCtx, out: &mut Vec<Violation>) {
+    // Bare `Relaxed` etc. only counts when the file glob-imports them.
+    let bare_import = ctx
+        .lines
+        .iter()
+        .any(|l| l.contains("use std::sync::atomic::Ordering::") || l.contains("use Ordering::"));
+    for k in 0..ctx.code.len() {
+        let hit = if ctx.ident(k) == Some("Ordering")
+            && ctx.punct(k + 1, ':')
+            && ctx.punct(k + 2, ':')
+        {
+            ctx.ident(k + 3).filter(|o| ORD_NAMES.contains(o)).map(|o| (o.to_string(), k + 3))
+        } else if bare_import {
+            ctx.ident(k)
+                .filter(|o| ORD_NAMES.contains(o))
+                // Not part of an `Ordering::X` path (counted above) and
+                // not itself a path prefix or import.
+                .filter(|_| !(ctx.punct(k + 1, ':') || (k >= 1 && ctx.punct(k - 1, ':'))))
+                .map(|o| (o.to_string(), k))
+        } else {
+            None
+        };
+        let Some((ord, at)) = hit else { continue };
+        // Skip `use` statements importing the names.
+        let line = ctx.code[at].line;
+        if ctx.line_text(line).starts_with("use ") {
+            continue;
+        }
+        let justified = (line.saturating_sub(3)..=line)
+            .any(|l| ctx.ord_lines.get(l).copied().unwrap_or(false));
+        if !justified {
+            ctx.push(
+                out,
+                "ord-justify",
+                line,
+                format!("Ordering::{ord} without an `// ord:` justification"),
+                "add `// ord: <why this ordering suffices>` on the line or up to 3 lines above",
+            );
+        }
+    }
+}
+
+fn hot_path_alloc(ctx: &FileCtx, out: &mut Vec<Violation>) {
+    // The marker is a comment *starting* with `hot-path` in the header
+    // (e.g. `//! hot-path: dispatch inner loop`) — prose that merely
+    // mentions hot paths does not opt a file in.
+    let marked = ctx.lines.iter().take(30).any(|l| {
+        let t = l.trim_start();
+        t.strip_prefix("//!")
+            .or_else(|| t.strip_prefix("//"))
+            .is_some_and(|r| r.trim_start().starts_with("hot-path"))
+    });
+    if !marked {
+        return;
+    }
+    let sugg = "preallocate at construction or reuse a scratch buffer; ctor-time sites take // lint: allow(hot-path-alloc) — <why>";
+    for k in 0..ctx.code.len() {
+        let line = ctx.code[k].line;
+        if ctx.path2(k, "Box", "new")
+            || ctx.path2(k, "Vec", "new")
+            || ctx.path2(k, "Vec", "with_capacity")
+            || ctx.path2(k, "VecDeque", "new")
+            || ctx.path2(k, "VecDeque", "with_capacity")
+            || ctx.path2(k, "String", "new")
+            || ctx.path2(k, "String", "from")
+            || ctx.path2(k, "String", "with_capacity")
+        {
+            let what = ctx.ident(k).unwrap_or("?");
+            ctx.push(
+                out,
+                "hot-path-alloc",
+                line,
+                format!("{what} construction in a hot-path module"),
+                sugg,
+            );
+        } else if (ctx.ident(k) == Some("vec") || ctx.ident(k) == Some("format"))
+            && ctx.punct(k + 1, '!')
+        {
+            let what = ctx.ident(k).unwrap_or("?");
+            ctx.push(
+                out,
+                "hot-path-alloc",
+                line,
+                format!("{what}! allocation in a hot-path module"),
+                sugg,
+            );
+        } else if ctx.punct(k, '.')
+            && matches!(ctx.ident(k + 1), Some("to_string") | Some("to_owned") | Some("to_vec") | Some("collect"))
+        {
+            let what = ctx.ident(k + 1).unwrap_or("?");
+            ctx.push(
+                out,
+                "hot-path-alloc",
+                line,
+                format!(".{what}() allocation in a hot-path module"),
+                sugg,
+            );
+        }
+    }
+}
+
+const DECODE_IMPLS: &[&str] = &["BinCursor", "SubmitbBinIter"];
+
+fn decode_no_panic(ctx: &FileCtx, out: &mut Vec<Violation>) {
+    if ctx.path != "falkon/protocol.rs" {
+        return;
+    }
+    // Collect decode-path spans: fns named decode_*/parse*/read_* plus
+    // every method of the binary cursor/iterator impls.
+    let mut spans: Vec<(usize, usize)> = Vec::new(); // token index ranges
+    let mut k = 0usize;
+    while k < ctx.code.len() {
+        match ctx.ident(k) {
+            Some("fn") => {
+                if let Some(name) = ctx.ident(k + 1) {
+                    if name.starts_with("decode_")
+                        || name.starts_with("parse")
+                        || name.starts_with("read_")
+                    {
+                        let mut b = k + 2;
+                        while b < ctx.code.len() && !ctx.punct(b, '{') && !ctx.punct(b, ';') {
+                            b += 1;
+                        }
+                        if ctx.punct(b, '{') {
+                            spans.push((b, match_brace(&ctx.code, b)));
+                        }
+                    }
+                }
+                k += 1;
+            }
+            Some("impl") => {
+                // Name of the implemented type: ident after `for` if
+                // present, else the first ident before the body brace.
+                let mut b = k + 1;
+                let mut first: Option<&str> = None;
+                let mut after_for: Option<&str> = None;
+                let mut saw_for = false;
+                while b < ctx.code.len() && !ctx.punct(b, '{') {
+                    if let Some(id) = ctx.ident(b) {
+                        if id == "for" {
+                            saw_for = true;
+                        } else if saw_for && after_for.is_none() {
+                            after_for = Some(id);
+                        } else if first.is_none() {
+                            first = Some(id);
+                        }
+                    }
+                    b += 1;
+                }
+                let name = after_for.or(first).unwrap_or("");
+                if DECODE_IMPLS.contains(&name) && ctx.punct(b, '{') {
+                    spans.push((b, match_brace(&ctx.code, b)));
+                    k = b + 1; // scan inside normally for nested fns too
+                } else {
+                    k += 1;
+                }
+            }
+            _ => k += 1,
+        }
+    }
+    let in_span = |idx: usize| spans.iter().any(|&(lo, hi)| idx > lo && idx < hi);
+    for k in 0..ctx.code.len() {
+        if !in_span(k) {
+            continue;
+        }
+        let line = ctx.code[k].line;
+        if ctx.punct(k, '.')
+            && matches!(ctx.ident(k + 1), Some("unwrap") | Some("expect"))
+            && ctx.punct(k + 2, '(')
+        {
+            let what = ctx.ident(k + 1).unwrap_or("?");
+            ctx.push(
+                out,
+                "decode-no-panic",
+                line,
+                format!(".{what}() in a protocol decode path"),
+                "propagate a decode error (?, ok_or, map_err) — malformed frames must never panic the server",
+            );
+        } else if matches!(
+            ctx.ident(k),
+            Some("panic") | Some("unreachable") | Some("todo") | Some("unimplemented")
+        ) && ctx.punct(k + 1, '!')
+        {
+            let what = ctx.ident(k).unwrap_or("?");
+            ctx.push(
+                out,
+                "decode-no-panic",
+                line,
+                format!("{what}! in a protocol decode path"),
+                "propagate a decode error (?, ok_or, map_err) — malformed frames must never panic the server",
+            );
+        }
+    }
+}
+
+const CHECKED_FILES: &[&str] = &["falkon/queue.rs", "telemetry/counters.rs"];
+const STD_SYNC_NAMES: &[&str] = &[
+    "AtomicBool", "AtomicU32", "AtomicU64", "AtomicUsize", "AtomicI64", "Mutex", "MutexGuard",
+    "Condvar", "RwLock",
+];
+
+fn checked_sync(ctx: &FileCtx, out: &mut Vec<Violation>) {
+    if !CHECKED_FILES.contains(&ctx.path) {
+        return;
+    }
+    let mut k = 0usize;
+    while k < ctx.code.len() {
+        if ctx.ident(k) != Some("use") {
+            k += 1;
+            continue;
+        }
+        let start = k;
+        let mut has_std_sync = false;
+        let mut offender: Option<String> = None;
+        while k < ctx.code.len() && !ctx.punct(k, ';') {
+            if ctx.ident(k) == Some("std")
+                && ctx.punct(k + 1, ':')
+                && ctx.punct(k + 2, ':')
+                && ctx.ident(k + 3) == Some("sync")
+            {
+                has_std_sync = true;
+            }
+            if let Some(id) = ctx.ident(k) {
+                if STD_SYNC_NAMES.contains(&id) && offender.is_none() {
+                    offender = Some(id.to_string());
+                }
+            }
+            k += 1;
+        }
+        if has_std_sync {
+            if let Some(name) = offender {
+                ctx.push(
+                    out,
+                    "checked-sync",
+                    ctx.code[start].line,
+                    format!("`{name}` imported from std::sync in a model-checked module"),
+                    "import it from crate::check::sync so --features model_check can interpose",
+                );
+            }
+        }
+    }
+}
+
+/// Run every rule over one file. `path` is relative to `rust/src`, using
+/// `/` separators (e.g. `falkon/queue.rs`).
+pub fn lint_source(path: &str, src: &str) -> Vec<Violation> {
+    let ctx = FileCtx::build(path, src);
+    let mut out = Vec::new();
+    clock_purity(&ctx, &mut out);
+    det_iter(&ctx, &mut out);
+    ord_justify(&ctx, &mut out);
+    hot_path_alloc(&ctx, &mut out);
+    decode_no_panic(&ctx, &mut out);
+    checked_sync(&ctx, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(path: &str, src: &str) -> Vec<(&'static str, usize)> {
+        lint_source(path, src).into_iter().map(|v| (v.rule, v.line)).collect()
+    }
+
+    #[test]
+    fn clock_purity_flags_wall_clock_in_sim_only() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(rules_hit("sim/core.rs", src), vec![("clock-purity", 1)]);
+        assert_eq!(rules_hit("falkon/service.rs", src), vec![]);
+    }
+
+    #[test]
+    fn clock_purity_skips_test_modules() {
+        let src = "#[cfg(test)]\nmod tests {\n  fn f() { let t = Instant::now(); }\n}\n";
+        assert_eq!(rules_hit("policy/clock.rs", src), vec![]);
+    }
+
+    #[test]
+    fn clock_purity_flags_thread_sleep() {
+        let src = "fn f() { std::thread::sleep(d); }\n";
+        assert_eq!(rules_hit("sim/core.rs", src), vec![("clock-purity", 1)]);
+    }
+
+    #[test]
+    fn det_iter_flags_hash_iteration_and_allows_suppression() {
+        let src = "struct C { entries: HashMap<u64, E> }\nimpl C {\n  fn sweep(&self) { for (k, v) in self.entries.iter() {} }\n}\n";
+        assert_eq!(rules_hit("diffusion/cache.rs", src), vec![("det-iter", 3)]);
+        let ok = "struct C { entries: HashMap<u64, E> }\nimpl C {\n  // lint: allow(det-iter) — min_by_key with a total tie-break\n  fn sweep(&self) { for (k, v) in self.entries.iter() {} }\n}\n";
+        assert_eq!(rules_hit("diffusion/cache.rs", ok), vec![]);
+    }
+
+    #[test]
+    fn det_iter_ignores_vec_iteration() {
+        let src = "fn f(xs: Vec<u32>) { for x in xs.iter() {} }\n";
+        assert_eq!(rules_hit("sim/core.rs", src), vec![]);
+    }
+
+    #[test]
+    fn ord_justify_requires_comment_within_three_lines() {
+        let bad = "fn f(a: &AtomicUsize) { a.load(Ordering::Relaxed); }\n";
+        assert_eq!(rules_hit("falkon/queue.rs", bad), vec![("ord-justify", 1)]);
+        let same_line = "fn f(a: &AtomicUsize) { a.load(Ordering::Relaxed); } // ord: monotone gauge\n";
+        assert_eq!(rules_hit("falkon/queue.rs", same_line), vec![]);
+        let above = "// ord: pairs with the Release store in push\nfn f(a: &AtomicUsize) {\n  a.load(Ordering::Acquire);\n}\n";
+        assert_eq!(rules_hit("falkon/queue.rs", above), vec![]);
+        let too_far = "// ord: too far away\n\n\n\n\nfn f(a: &AtomicUsize) { a.load(Ordering::Acquire); }\n";
+        assert_eq!(rules_hit("falkon/queue.rs", too_far), vec![("ord-justify", 6)]);
+    }
+
+    #[test]
+    fn ord_justify_exempts_seqcst_and_strings() {
+        let src = "fn f(a: &AtomicUsize) { a.load(Ordering::SeqCst); let s = \"Ordering::Relaxed\"; }\n";
+        assert_eq!(rules_hit("falkon/queue.rs", src), vec![]);
+    }
+
+    #[test]
+    fn ord_justify_handles_bare_imports() {
+        let src = "use std::sync::atomic::Ordering::Relaxed;\nfn f(a: &AtomicUsize) { a.load(Relaxed); }\n";
+        assert_eq!(rules_hit("karajan/future.rs", src), vec![("ord-justify", 2)]);
+    }
+
+    #[test]
+    fn hot_path_alloc_needs_marker() {
+        let marked = "//! hot-path: dispatch inner loop\nfn f() { let v = Vec::new(); }\n";
+        assert_eq!(rules_hit("falkon/queue.rs", marked), vec![("hot-path-alloc", 2)]);
+        let unmarked = "fn f() { let v = Vec::new(); }\n";
+        assert_eq!(rules_hit("falkon/queue.rs", unmarked), vec![]);
+    }
+
+    #[test]
+    fn hot_path_alloc_fn_level_allow_covers_whole_body() {
+        let src = "//! hot-path\n// lint: allow(hot-path-alloc) — construction only\nfn new() {\n  let v = Vec::with_capacity(8);\n  let q = VecDeque::new();\n}\n";
+        assert_eq!(rules_hit("falkon/queue.rs", src), vec![]);
+    }
+
+    #[test]
+    fn decode_no_panic_scopes_to_decode_fns_and_cursor_impls() {
+        let src = "fn decode_x(b: &[u8]) -> R {\n  let v = b.first().unwrap();\n}\nfn encode_x() { q.pop().unwrap(); }\nimpl<'a> BinCursor<'a> {\n  fn u16(&mut self) -> u16 { self.take(2).expect(\"2 bytes\") }\n}\n";
+        assert_eq!(
+            rules_hit("falkon/protocol.rs", src),
+            vec![("decode-no-panic", 2), ("decode-no-panic", 6)]
+        );
+        // Same source in another file: out of scope.
+        assert_eq!(rules_hit("falkon/service.rs", src), vec![]);
+    }
+
+    #[test]
+    fn decode_no_panic_allows_unwrap_or_variants() {
+        let src = "fn decode_x(b: &[u8]) -> u8 { b.first().copied().unwrap_or(0) }\n";
+        assert_eq!(rules_hit("falkon/protocol.rs", src), vec![]);
+    }
+
+    #[test]
+    fn checked_sync_flags_std_imports_in_checked_modules() {
+        let src = "use std::sync::{Condvar, Mutex};\nuse std::sync::atomic::{AtomicUsize, Ordering};\n";
+        let hits = rules_hit("falkon/queue.rs", src);
+        assert_eq!(hits, vec![("checked-sync", 1), ("checked-sync", 2)]);
+        // Ordering-only imports are fine, as is any other file.
+        assert_eq!(rules_hit("falkon/queue.rs", "use std::sync::atomic::Ordering;\n"), vec![]);
+        assert_eq!(rules_hit("falkon/engine.rs", src), vec![]);
+    }
+}

@@ -1,0 +1,34 @@
+//! Correctness tooling (DESIGN.md §12): the machine-checked substrate
+//! under the dispatcher's reliability claims.
+//!
+//! Two independent pieces live here:
+//!
+//! 1. **Schedule-exploring concurrency checker** — [`sched`] drives model
+//!    closures through every interleaving a context-switch-bounded DFS
+//!    (with sleep-set pruning) or a seeded random walk can reach, using
+//!    the shadow sync primitives in [`shadow`]. A vector-clock
+//!    happens-before detector ([`vclock`]) validates `CheckCell` plain
+//!    memory against the synchronization actually modeled, and every
+//!    failure carries a printable, replayable [`Schedule`]. The real hot
+//!    paths (`falkon::queue`, `telemetry::counters`) import their
+//!    primitives from the [`sync`] facade so `--features model_check`
+//!    swaps the shadow layer in; the default build re-exports std types
+//!    and is bit-identical to not having this module at all.
+//!
+//! 2. **`pallas-lint`** — [`lint`] is a hand-rolled Rust lexer + rule
+//!    engine enforcing the repo's written invariants (clock purity,
+//!    deterministic iteration, `// ord:` justifications, hot-path
+//!    allocation bans, panic-free protocol decode) with a checked-in
+//!    baseline for grandfathered sites. Run it with
+//!    `cargo run --bin pallas-lint`.
+
+pub mod lint;
+pub mod sched;
+pub mod shadow;
+pub mod sync;
+pub mod vclock;
+
+pub use sched::{
+    explore, explore_with, replay, Choice, Config, FailKind, Failure, Mode, Outcome, Schedule,
+};
+pub use shadow::thread;

@@ -1,0 +1,1163 @@
+//! The controlled scheduler behind the shadow sync primitives.
+//!
+//! Model runs serialize every controlled thread on a single "baton": at
+//! each *yield point* (atomic op, mutex lock, condvar wait entry, join,
+//! spawn, thread begin) the running thread announces the operation it is
+//! about to execute and a scheduling decision picks which announced
+//! thread executes next. Re-running the model with a recorded decision
+//! prefix (`plan`) replays a schedule exactly; the explorer enumerates
+//! schedules with a context-switch-bounded DFS pruned by sleep sets, or
+//! samples them with a seeded random walk. A vector-clock happens-before
+//! detector (see [`super::vclock`]) checks `CheckCell` plain-memory
+//! accesses against the synchronization actually modeled.
+//!
+//! Exploration bounds (all configurable via [`Config`]):
+//! - `preemption_bound`: max involuntary context switches per schedule
+//!   (classic CHESS-style bound; 2 catches most real bugs).
+//! - `max_schedules`: total schedules per exploration.
+//! - `max_steps`: yield points per schedule before declaring livelock.
+//!
+//! Timeouts are modeled as a deadlock escape only: when no thread can
+//! run and a timed condvar waiter exists, the lowest-index timed waiter
+//! is woken as timed-out (a deterministic choice recorded in the
+//! schedule). A run with no runnable thread and no timed waiter is a
+//! deadlock failure.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+
+use super::vclock::{Epoch, VClock};
+use crate::util::rng::DetRng;
+
+// ---------------------------------------------------------------------------
+// Public configuration / outcome types
+// ---------------------------------------------------------------------------
+
+/// How schedules are chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Bounded-exhaustive DFS over scheduling decisions with sleep-set
+    /// pruning and a preemption bound.
+    Dfs,
+    /// Seeded random walk: `max_schedules` independent runs, run `k`
+    /// driven by `DetRng::new(seed + k)`. Same seed → same schedules.
+    Random { seed: u64 },
+}
+
+/// Exploration budget and strategy.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub max_schedules: usize,
+    pub max_steps: usize,
+    pub preemption_bound: usize,
+    pub mode: Mode,
+    /// When false, sleep-set pruning is disabled (every enabled thread is
+    /// a backtrack candidate). Exists so tests can assert pruning does not
+    /// lose failures.
+    pub sleep_sets: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            max_schedules: 4_000,
+            max_steps: 20_000,
+            preemption_bound: 2,
+            mode: Mode::Dfs,
+            sleep_sets: true,
+        }
+    }
+}
+
+impl Config {
+    /// CI "--quick" budget: a few hundred schedules, overridable with the
+    /// `PALLAS_CHECK_SCHEDULES` environment variable.
+    pub fn quick() -> Self {
+        let max_schedules = std::env::var("PALLAS_CHECK_SCHEDULES")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(800);
+        Self { max_schedules, ..Self::default() }
+    }
+
+    pub fn random(seed: u64, schedules: usize) -> Self {
+        Self { max_schedules: schedules, mode: Mode::Random { seed }, ..Self::default() }
+    }
+}
+
+/// One scheduling decision. `Thread(t)` = thread `t` executes its
+/// announced operation; `Timeout(t)` = timed condvar waiter `t` is woken
+/// as timed-out (deadlock escape).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Choice {
+    Thread(usize),
+    Timeout(usize),
+}
+
+/// A complete recorded schedule: the decision list that reproduces a run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Schedule(pub Vec<Choice>);
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, c) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ".")?;
+            }
+            match c {
+                Choice::Thread(t) => write!(f, "{t}")?,
+                Choice::Timeout(t) => write!(f, "t{t}")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for Schedule {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let mut out = Vec::new();
+        if s.is_empty() {
+            return Ok(Schedule(out));
+        }
+        for part in s.split('.') {
+            if let Some(rest) = part.strip_prefix('t') {
+                out.push(Choice::Timeout(
+                    rest.parse().map_err(|e| format!("bad timeout choice {part:?}: {e}"))?,
+                ));
+            } else {
+                out.push(Choice::Thread(
+                    part.parse().map_err(|e| format!("bad thread choice {part:?}: {e}"))?,
+                ));
+            }
+        }
+        Ok(Schedule(out))
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailKind {
+    /// Vector-clock detector found two unordered conflicting `CheckCell`
+    /// accesses.
+    Race,
+    /// No runnable thread, no timed waiter.
+    Deadlock,
+    /// A single schedule exceeded `max_steps` yield points.
+    Livelock,
+    /// Model code panicked (assertion failure etc.).
+    Panic,
+}
+
+/// A failing schedule with everything needed to reproduce it.
+#[derive(Debug, Clone)]
+pub struct Failure {
+    pub kind: FailKind,
+    pub message: String,
+    pub schedule: Schedule,
+    /// How many schedules had been explored when this one failed (1-based).
+    pub schedules_explored: usize,
+}
+
+impl std::fmt::Display for Failure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "model check failed: {:?} after {} schedule(s)", self.kind, self.schedules_explored)?;
+        writeln!(f, "  {}", self.message)?;
+        writeln!(f, "  schedule: {}", self.schedule)?;
+        write!(f, "  replay with check::replay(model, &\"{}\".parse().unwrap())", self.schedule)
+    }
+}
+
+/// Result of an exploration.
+#[derive(Debug)]
+pub enum Outcome {
+    Pass {
+        /// Schedules actually run.
+        schedules: usize,
+        /// True when the bounded DFS exhausted its frontier (every
+        /// schedule within the preemption bound was covered).
+        exhausted: bool,
+    },
+    Fail(Failure),
+}
+
+impl Outcome {
+    pub fn is_pass(&self) -> bool {
+        matches!(self, Outcome::Pass { .. })
+    }
+
+    pub fn failure(&self) -> Option<&Failure> {
+        match self {
+            Outcome::Fail(f) => Some(f),
+            Outcome::Pass { .. } => None,
+        }
+    }
+
+    /// Panic (with the failing schedule) unless the exploration passed.
+    pub fn expect_pass(&self) {
+        if let Outcome::Fail(f) = self {
+            panic!("{f}");
+        }
+    }
+
+    /// Panic unless the exploration failed; returns the failure.
+    pub fn expect_fail(&self) -> &Failure {
+        match self {
+            Outcome::Fail(f) => f,
+            Outcome::Pass { schedules, exhausted } => panic!(
+                "expected a model-check failure, but {schedules} schedule(s) passed (exhausted={exhausted})"
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Internal run state
+// ---------------------------------------------------------------------------
+
+/// Payload for the controlled-abort panic used to unwind threads of a
+/// poisoned (failed) run. Caught by the thread wrapper, never user-visible.
+pub(crate) struct ControlledAbort;
+
+/// The operation a thread announces at a yield point. Drives enabled-set
+/// computation and sleep-set independence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum OpKey {
+    Begin,
+    Spawn,
+    Join(usize),
+    AtomicLoad(usize),
+    AtomicStore(usize),
+    AtomicRmw(usize),
+    MutexLock(usize),
+    /// Condvar wait entry: touches both the condvar and its mutex.
+    CvWait { cv: usize, mutex: usize },
+}
+
+impl OpKey {
+    /// Address footprint (up to two locations).
+    fn footprint(&self) -> (Option<usize>, Option<usize>) {
+        match *self {
+            OpKey::AtomicLoad(a) | OpKey::AtomicStore(a) | OpKey::AtomicRmw(a) => (Some(a), None),
+            OpKey::MutexLock(a) => (Some(a), None),
+            OpKey::CvWait { cv, mutex } => (Some(cv), Some(mutex)),
+            OpKey::Begin | OpKey::Spawn | OpKey::Join(_) => (None, None),
+        }
+    }
+
+    fn is_read_only(&self) -> bool {
+        matches!(self, OpKey::AtomicLoad(_))
+    }
+
+    /// Conservative independence: control ops (Begin/Spawn/Join) commute
+    /// with nothing; otherwise ops are independent when their footprints
+    /// are disjoint, or both are plain loads of the same location.
+    pub(crate) fn independent(&self, other: &OpKey) -> bool {
+        let (a1, a2) = self.footprint();
+        let (b1, b2) = other.footprint();
+        if a1.is_none() || b1.is_none() {
+            return false; // control op: conservatively dependent
+        }
+        let overlap = [a1, a2]
+            .iter()
+            .flatten()
+            .any(|a| [b1, b2].iter().flatten().any(|b| a == b));
+        if !overlap {
+            return true;
+        }
+        self.is_read_only() && other.is_read_only()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TStatus {
+    /// Real thread spawned, has not announced its `Begin` yet. Decisions
+    /// wait for all `Starting` threads to announce so enabled sets never
+    /// depend on OS timing.
+    Starting,
+    /// Parked at a yield point with a pending op, waiting for the baton.
+    Announced,
+    /// Holds the baton; running user code between yield points.
+    Executing,
+    /// Blocked inside a condvar wait (mutex released).
+    CvWaiting { cv: usize, mutex: usize, timed: bool },
+    Finished,
+}
+
+#[derive(Debug)]
+struct ThreadRec {
+    status: TStatus,
+    pending: Option<OpKey>,
+    /// Set when a `Choice::Timeout` woke this thread from a timed wait.
+    timed_out: bool,
+}
+
+/// One recorded decision with the context needed for DFS backtracking.
+#[derive(Debug, Clone)]
+pub(crate) struct StepRecord {
+    pub(crate) choice: Choice,
+    /// Enabled (tid, pending op) pairs at decision time, tid-sorted.
+    pub(crate) enabled: Vec<(usize, OpKey)>,
+    /// Thread that executed the previous decision (0 at the start).
+    pub(crate) prev_exec: usize,
+}
+
+enum RunMode {
+    Planned,
+    Random(DetRng),
+}
+
+struct RunInner {
+    threads: Vec<ThreadRec>,
+    clocks: Vec<VClock>,
+    active: usize,
+    last_exec: usize,
+    steps: usize,
+    max_steps: usize,
+    plan: Vec<Choice>,
+    mode: RunMode,
+    trace: Vec<StepRecord>,
+    poisoned: bool,
+    failure: Option<Failure>,
+    // Happens-before state, keyed by shadow-object address.
+    atomics: HashMap<usize, VClock>, // release clock per atomic location
+    cells: HashMap<usize, CellState>,
+    mutex_clocks: HashMap<usize, VClock>,
+    held: HashMap<usize, usize>, // mutex addr -> holder tid
+}
+
+#[derive(Default)]
+struct CellState {
+    write: Option<Epoch>,
+    reads: Vec<Epoch>,
+}
+
+pub(crate) struct RunState {
+    m: StdMutex<RunInner>,
+    cv: StdCondvar,
+}
+
+thread_local! {
+    static CTX: std::cell::RefCell<Option<(Arc<RunState>, usize)>> = const { std::cell::RefCell::new(None) };
+}
+
+/// The (run, tid) pair for the current thread, if it is controlled.
+pub(crate) fn ctx() -> Option<(Arc<RunState>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn lock_inner(run: &RunState) -> StdMutexGuard<'_, RunInner> {
+    // The internal mutex is only poisoned if the scheduler itself has a
+    // bug; shrug it off so teardown can still proceed.
+    run.m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl RunState {
+    fn new(cfg: &Config, plan: Vec<Choice>, mode: RunMode) -> Self {
+        RunState {
+            m: StdMutex::new(RunInner {
+                threads: Vec::new(),
+                clocks: Vec::new(),
+                active: 0,
+                last_exec: 0,
+                steps: 0,
+                max_steps: cfg.max_steps,
+                plan,
+                mode,
+                trace: Vec::new(),
+                poisoned: false,
+                failure: None,
+                atomics: HashMap::new(),
+                cells: HashMap::new(),
+                mutex_clocks: HashMap::new(),
+                held: HashMap::new(),
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    fn fail_locked(&self, g: &mut RunInner, kind: FailKind, message: String) {
+        if g.failure.is_none() {
+            g.failure = Some(Failure {
+                kind,
+                message,
+                schedule: Schedule(g.trace.iter().map(|s| s.choice).collect()),
+                schedules_explored: 0, // filled by the explorer
+            });
+        }
+        g.poisoned = true;
+        self.cv.notify_all();
+    }
+
+    /// Panic out of a poisoned run. Never called while unwinding.
+    fn abort_now(&self) -> ! {
+        std::panic::panic_any(ControlledAbort);
+    }
+
+    /// Compute the tid-sorted enabled set: announced threads whose pending
+    /// op can execute now.
+    fn enabled_locked(g: &RunInner) -> Vec<(usize, OpKey)> {
+        let mut out = Vec::new();
+        for (tid, t) in g.threads.iter().enumerate() {
+            if t.status != TStatus::Announced {
+                continue;
+            }
+            let Some(op) = t.pending else { continue };
+            let ok = match op {
+                OpKey::MutexLock(a) => !g.held.contains_key(&a),
+                OpKey::Join(c) => g.threads[c].status == TStatus::Finished,
+                _ => true,
+            };
+            if ok {
+                out.push((tid, op));
+            }
+        }
+        out
+    }
+
+    /// Make one scheduling decision. Called with the run lock held by the
+    /// thread currently holding the baton (or by a finishing thread).
+    /// Returns (guard, granted-to-caller).
+    fn schedule_next<'a>(
+        &'a self,
+        mut g: StdMutexGuard<'a, RunInner>,
+        caller: Option<usize>,
+    ) -> (StdMutexGuard<'a, RunInner>, bool) {
+        loop {
+            if g.poisoned {
+                return (g, false);
+            }
+            // Never decide while a spawned thread has not announced: the
+            // enabled set must not depend on OS scheduling.
+            if g.threads.iter().any(|t| t.status == TStatus::Starting) {
+                g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+                continue;
+            }
+            let enabled = Self::enabled_locked(&g);
+            let step_idx = g.trace.len();
+            if enabled.is_empty() {
+                if g.threads.iter().all(|t| t.status == TStatus::Finished) {
+                    self.cv.notify_all();
+                    return (g, false);
+                }
+                // Deadlock escape: wake a timed condvar waiter as timed-out.
+                let planned = match g.plan.get(step_idx) {
+                    Some(Choice::Timeout(t)) => Some(*t),
+                    _ => None,
+                };
+                let timed = planned.or_else(|| {
+                    g.threads.iter().enumerate().find_map(|(tid, t)| match t.status {
+                        TStatus::CvWaiting { timed: true, .. } => Some(tid),
+                        _ => None,
+                    })
+                });
+                match timed {
+                    Some(t)
+                        if matches!(g.threads[t].status, TStatus::CvWaiting { timed: true, .. }) =>
+                    {
+                        let TStatus::CvWaiting { mutex, .. } = g.threads[t].status else {
+                            unreachable!()
+                        };
+                        let prev_exec = g.last_exec;
+                        g.trace.push(StepRecord {
+                            choice: Choice::Timeout(t),
+                            enabled: Vec::new(),
+                            prev_exec,
+                        });
+                        g.threads[t].status = TStatus::Announced;
+                        g.threads[t].pending = Some(OpKey::MutexLock(mutex));
+                        g.threads[t].timed_out = true;
+                        continue;
+                    }
+                    _ => {
+                        let blocked: Vec<String> = g
+                            .threads
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, t)| t.status != TStatus::Finished)
+                            .map(|(tid, t)| format!("t{tid}:{:?}/{:?}", t.status, t.pending))
+                            .collect();
+                        self.fail_locked(
+                            &mut g,
+                            FailKind::Deadlock,
+                            format!("no runnable thread, no timed waiter; stuck: [{}]", blocked.join(", ")),
+                        );
+                        return (g, false);
+                    }
+                }
+            }
+            // Pick the executor: replayed plan first, then policy.
+            let chosen = if let Some(c) = g.plan.get(step_idx).copied() {
+                match c {
+                    Choice::Thread(u) if enabled.iter().any(|&(t, _)| t == u) => u,
+                    other => {
+                        self.fail_locked(
+                            &mut g,
+                            FailKind::Panic,
+                            format!(
+                                "schedule replay diverged at step {step_idx}: planned {other:?}, enabled {:?}",
+                                enabled.iter().map(|&(t, _)| t).collect::<Vec<_>>()
+                            ),
+                        );
+                        return (g, false);
+                    }
+                }
+            } else {
+                let last = g.last_exec;
+                match &mut g.mode {
+                    // Non-preemptive default: keep running the previous
+                    // executor when possible so preemptions only come from
+                    // explicit DFS branch choices.
+                    RunMode::Planned => {
+                        if enabled.iter().any(|&(t, _)| t == last) {
+                            last
+                        } else {
+                            enabled[0].0
+                        }
+                    }
+                    RunMode::Random(rng) => enabled[rng.below(enabled.len() as u64) as usize].0,
+                }
+            };
+            let prev_exec = g.last_exec;
+            g.trace.push(StepRecord { choice: Choice::Thread(chosen), enabled, prev_exec });
+            g.last_exec = chosen;
+            g.active = chosen;
+            self.cv.notify_all();
+            return (g, caller == Some(chosen));
+        }
+    }
+
+    /// Park until this thread is granted the baton (active == me while
+    /// announced). Aborts if the run gets poisoned.
+    pub(crate) fn park_until_granted(&self, me: usize) {
+        let mut g = lock_inner(self);
+        loop {
+            if g.poisoned {
+                drop(g);
+                self.abort_now();
+            }
+            if g.active == me && g.threads[me].status == TStatus::Announced {
+                g.threads[me].status = TStatus::Executing;
+                return;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// The yield point: announce `op`, let a decision pick the next
+    /// executor, and return once this thread holds the baton again (with
+    /// `op` licensed to execute). Returns false when the op must be
+    /// skipped because the run is being torn down while unwinding.
+    pub(crate) fn yield_op(&self, me: usize, op: OpKey) -> bool {
+        let mut g = lock_inner(self);
+        if g.poisoned {
+            drop(g);
+            if std::thread::panicking() {
+                return false; // raw passthrough during unwind
+            }
+            self.abort_now();
+        }
+        g.steps += 1;
+        if g.steps > g.max_steps {
+            let msg = format!("exceeded max_steps={} yield points (livelock?)", g.max_steps);
+            self.fail_locked(&mut g, FailKind::Livelock, msg);
+            drop(g);
+            self.abort_now();
+        }
+        g.threads[me].pending = Some(op);
+        g.threads[me].status = TStatus::Announced;
+        self.cv.notify_all();
+        let (g, granted) = self.schedule_next(g, Some(me));
+        if granted {
+            let mut g = g;
+            g.threads[me].status = TStatus::Executing;
+            return true;
+        }
+        let poisoned = g.poisoned;
+        drop(g);
+        if poisoned {
+            if std::thread::panicking() {
+                return false;
+            }
+            self.abort_now();
+        }
+        self.park_until_granted(me);
+        true
+    }
+
+    // -- happens-before bookkeeping (called with the baton held) ----------
+
+    fn with_inner<R>(&self, f: impl FnOnce(&mut RunInner) -> R) -> R {
+        let mut g = lock_inner(self);
+        f(&mut g)
+    }
+
+    pub(crate) fn hb_atomic_load(&self, me: usize, addr: usize, acquire: bool) {
+        self.with_inner(|g| {
+            g.clocks[me].tick(me);
+            if acquire {
+                if let Some(rel) = g.atomics.get(&addr) {
+                    let rel = rel.clone();
+                    g.clocks[me].join(&rel);
+                }
+            }
+        });
+    }
+
+    pub(crate) fn hb_atomic_store(&self, me: usize, addr: usize, release: bool) {
+        self.with_inner(|g| {
+            g.clocks[me].tick(me);
+            let clock = g.clocks[me].clone();
+            let rel = g.atomics.entry(addr).or_default();
+            if release {
+                *rel = clock;
+            } else {
+                // A Relaxed store breaks the release sequence: later
+                // acquire loads that read it synchronize with nothing.
+                rel.clear();
+            }
+        });
+    }
+
+    pub(crate) fn hb_atomic_rmw(&self, me: usize, addr: usize, acquire: bool, release: bool) {
+        self.with_inner(|g| {
+            g.clocks[me].tick(me);
+            if acquire {
+                if let Some(rel) = g.atomics.get(&addr) {
+                    let rel = rel.clone();
+                    g.clocks[me].join(&rel);
+                }
+            }
+            let clock = g.clocks[me].clone();
+            let rel = g.atomics.entry(addr).or_default();
+            if release {
+                rel.join(&clock);
+            }
+            // A relaxed RMW leaves the release clock as-is: it continues
+            // the release sequence headed by the last release store.
+        });
+    }
+
+    pub(crate) fn hb_mutex_acquire(&self, me: usize, addr: usize) {
+        self.with_inner(|g| {
+            g.clocks[me].tick(me);
+            if let Some(mc) = g.mutex_clocks.get(&addr) {
+                let mc = mc.clone();
+                g.clocks[me].join(&mc);
+            }
+            g.held.insert(addr, me);
+        });
+    }
+
+    pub(crate) fn hb_mutex_release(&self, me: usize, addr: usize) {
+        self.with_inner(|g| {
+            if g.poisoned {
+                // Teardown: just free the logical lock so nothing wedges.
+                g.held.remove(&addr);
+                return;
+            }
+            g.clocks[me].tick(me);
+            let clock = g.clocks[me].clone();
+            g.mutex_clocks.insert(addr, clock);
+            g.held.remove(&addr);
+            self.cv.notify_all();
+        });
+    }
+
+    /// Enter a condvar wait: release the mutex, block, hand the baton on.
+    /// Caller must then `park_until_granted` and re-acquire.
+    pub(crate) fn cv_wait_enter(&self, me: usize, cv_addr: usize, mutex_addr: usize, timed: bool) {
+        let mut g = lock_inner(self);
+        if g.poisoned {
+            drop(g);
+            if std::thread::panicking() {
+                return;
+            }
+            self.abort_now();
+        }
+        g.clocks[me].tick(me);
+        let clock = g.clocks[me].clone();
+        g.mutex_clocks.insert(mutex_addr, clock);
+        g.held.remove(&mutex_addr);
+        g.threads[me].status = TStatus::CvWaiting { cv: cv_addr, mutex: mutex_addr, timed };
+        g.threads[me].pending = None;
+        g.threads[me].timed_out = false;
+        self.cv.notify_all();
+        let (g, _) = self.schedule_next(g, None);
+        drop(g);
+    }
+
+    /// Finish a condvar wait after being granted the reacquire: take the
+    /// mutex back and report whether the wake was a timeout.
+    pub(crate) fn cv_wait_exit(&self, me: usize, mutex_addr: usize) -> bool {
+        self.with_inner(|g| {
+            g.clocks[me].tick(me);
+            if let Some(mc) = g.mutex_clocks.get(&mutex_addr) {
+                let mc = mc.clone();
+                g.clocks[me].join(&mc);
+            }
+            g.held.insert(mutex_addr, me);
+            std::mem::take(&mut g.threads[me].timed_out)
+        })
+    }
+
+    /// Wake waiters on `cv_addr` (lowest tid first for determinism).
+    pub(crate) fn cv_notify(&self, me: usize, cv_addr: usize, all: bool) {
+        self.with_inner(|g| {
+            if g.poisoned {
+                return;
+            }
+            g.clocks[me].tick(me);
+            let mut woken = 0usize;
+            for tid in 0..g.threads.len() {
+                if let TStatus::CvWaiting { cv, mutex, .. } = g.threads[tid].status {
+                    if cv == cv_addr {
+                        g.threads[tid].status = TStatus::Announced;
+                        g.threads[tid].pending = Some(OpKey::MutexLock(mutex));
+                        woken += 1;
+                        if !all {
+                            break;
+                        }
+                    }
+                }
+            }
+            if woken > 0 {
+                self.cv.notify_all();
+            }
+        });
+    }
+
+    /// Register a child thread (status Starting) and clone the parent's
+    /// clock into it. Returns the child's tid.
+    pub(crate) fn register_child(&self, parent: usize) -> usize {
+        self.with_inner(|g| {
+            g.clocks[parent].tick(parent);
+            let child = g.threads.len();
+            let mut child_clock = g.clocks[parent].clone();
+            child_clock.tick(child);
+            g.threads.push(ThreadRec { status: TStatus::Starting, pending: None, timed_out: false });
+            g.clocks.push(child_clock);
+            child
+        })
+    }
+
+    /// First action of every controlled thread: announce `Begin` and wait
+    /// for the baton.
+    fn begin(&self, me: usize) {
+        {
+            let mut g = lock_inner(self);
+            if g.poisoned {
+                drop(g);
+                self.abort_now();
+            }
+            g.threads[me].status = TStatus::Announced;
+            g.threads[me].pending = Some(OpKey::Begin);
+            self.cv.notify_all();
+        }
+        self.park_until_granted(me);
+        self.with_inner(|g| g.clocks[me].tick(me));
+    }
+
+    pub(crate) fn hb_join(&self, me: usize, child: usize) {
+        self.with_inner(|g| {
+            g.clocks[me].tick(me);
+            let child_clock = g.clocks[child].clone();
+            g.clocks[me].join(&child_clock);
+        });
+    }
+
+    /// Thread teardown: mark Finished, record a panic failure if the body
+    /// panicked, and hand the baton onward.
+    fn finish(&self, me: usize, panic_msg: Option<String>) {
+        let mut g = lock_inner(self);
+        g.threads[me].status = TStatus::Finished;
+        g.threads[me].pending = None;
+        if let Some(msg) = panic_msg {
+            if !g.poisoned {
+                self.fail_locked(&mut g, FailKind::Panic, format!("thread {me} panicked: {msg}"));
+            }
+        }
+        self.cv.notify_all();
+        if !g.poisoned {
+            let (g, _) = self.schedule_next(g, None);
+            drop(g);
+        }
+    }
+
+    // -- CheckCell race detection -----------------------------------------
+
+    pub(crate) fn cell_write(&self, me: usize, addr: usize) {
+        let mut g = lock_inner(self);
+        if g.poisoned {
+            return;
+        }
+        g.clocks[me].tick(me);
+        let now = g.clocks[me].clone();
+        let st = g.cells.entry(addr).or_default();
+        let mut conflict: Option<(String, usize)> = None;
+        if let Some(w) = &st.write {
+            if !w.happens_before(&now) {
+                conflict = Some(("write/write".into(), w.tid));
+            }
+        }
+        for r in &st.reads {
+            if !r.happens_before(&now) {
+                conflict = Some(("read/write".into(), r.tid));
+            }
+        }
+        st.write = Some(Epoch { tid: me, clock: now });
+        st.reads.clear();
+        if let Some((kind, other)) = conflict {
+            let msg = format!(
+                "data race ({kind}) on cell {addr:#x}: thread {me} writes concurrently with thread {other}"
+            );
+            self.fail_locked(&mut g, FailKind::Race, msg);
+            drop(g);
+            if !std::thread::panicking() {
+                self.abort_now();
+            }
+        }
+    }
+
+    pub(crate) fn cell_read(&self, me: usize, addr: usize) {
+        let mut g = lock_inner(self);
+        if g.poisoned {
+            return;
+        }
+        g.clocks[me].tick(me);
+        let now = g.clocks[me].clone();
+        let st = g.cells.entry(addr).or_default();
+        let mut conflict: Option<usize> = None;
+        if let Some(w) = &st.write {
+            if !w.happens_before(&now) {
+                conflict = Some(w.tid);
+            }
+        }
+        st.reads.retain(|r| r.tid != me);
+        st.reads.push(Epoch { tid: me, clock: now });
+        if let Some(other) = conflict {
+            let msg = format!(
+                "data race (write/read) on cell {addr:#x}: thread {me} reads concurrently with thread {other}'s write"
+            );
+            self.fail_locked(&mut g, FailKind::Race, msg);
+            drop(g);
+            if !std::thread::panicking() {
+                self.abort_now();
+            }
+        }
+    }
+
+}
+
+// ---------------------------------------------------------------------------
+// Running one schedule
+// ---------------------------------------------------------------------------
+
+struct RunResult {
+    steps: Vec<StepRecord>,
+    failure: Option<Failure>,
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Entry point for every controlled OS thread.
+pub(crate) fn controlled_enter<T>(
+    run: Arc<RunState>,
+    tid: usize,
+    body: impl FnOnce() -> T,
+) -> Option<std::thread::Result<T>> {
+    CTX.with(|c| *c.borrow_mut() = Some((run.clone(), tid)));
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        run.begin(tid);
+        body()
+    }));
+    let out = match result {
+        Ok(v) => {
+            run.finish(tid, None);
+            Some(Ok(v))
+        }
+        Err(p) if p.is::<ControlledAbort>() => {
+            // Torn-down thread of a poisoned run: just mark finished.
+            run.finish(tid, None);
+            None
+        }
+        Err(p) => {
+            let msg = panic_message(p.as_ref());
+            run.finish(tid, Some(msg));
+            Some(Err(p))
+        }
+    };
+    CTX.with(|c| *c.borrow_mut() = None);
+    out
+}
+
+fn run_once(cfg: &Config, model: &Arc<dyn Fn() + Send + Sync>, plan: Vec<Choice>, mode: RunMode) -> RunResult {
+    let run = Arc::new(RunState::new(cfg, plan, mode));
+    {
+        let mut g = lock_inner(&run);
+        g.threads.push(ThreadRec { status: TStatus::Starting, pending: None, timed_out: false });
+        let mut c0 = VClock::new();
+        c0.tick(0);
+        g.clocks.push(c0);
+        g.active = 0;
+        g.last_exec = 0;
+    }
+    let root_run = run.clone();
+    let model = model.clone();
+    let handle = std::thread::Builder::new()
+        .name("pallas-check-0".into())
+        .spawn(move || {
+            controlled_enter(root_run, 0, move || model());
+        })
+        .expect("spawn model root thread");
+    {
+        let mut g = lock_inner(&run);
+        while !g.threads.iter().all(|t| t.status == TStatus::Finished) {
+            g = run.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+    let _ = handle.join();
+    let mut g = lock_inner(&run);
+    RunResult { steps: std::mem::take(&mut g.trace), failure: g.failure.take() }
+}
+
+// ---------------------------------------------------------------------------
+// The explorer: DFS with sleep sets + preemption bound, or random walk
+// ---------------------------------------------------------------------------
+
+struct Node {
+    choice: Choice,
+    enabled: Vec<(usize, OpKey)>,
+    prev_exec: usize,
+    tried: Vec<usize>,
+    sleep: Vec<usize>,
+    preemptions_before: usize,
+}
+
+impl Node {
+    fn chosen_tid(&self) -> Option<usize> {
+        match self.choice {
+            Choice::Thread(t) => Some(t),
+            Choice::Timeout(_) => None,
+        }
+    }
+
+    fn chosen_op(&self) -> Option<OpKey> {
+        let t = self.chosen_tid()?;
+        self.enabled.iter().find(|&&(tid, _)| tid == t).map(|&(_, op)| op)
+    }
+
+    fn is_preemptive(&self) -> bool {
+        match self.choice {
+            Choice::Thread(t) => {
+                t != self.prev_exec && self.enabled.iter().any(|&(tid, _)| tid == self.prev_exec)
+            }
+            Choice::Timeout(_) => false,
+        }
+    }
+
+    /// Sleep set inherited by the child state after executing our choice.
+    fn sleep_for_child(&self) -> Vec<usize> {
+        let Some(op) = self.chosen_op() else { return Vec::new() };
+        self.sleep
+            .iter()
+            .copied()
+            .filter(|&t| {
+                self.enabled
+                    .iter()
+                    .find(|&&(tid, _)| tid == t)
+                    .map(|&(_, top)| top.independent(&op))
+                    .unwrap_or(false)
+            })
+            .collect()
+    }
+}
+
+/// Explore the model exhaustively (bounded) or randomly per `cfg`.
+pub fn explore_with(cfg: &Config, model: impl Fn() + Send + Sync + 'static) -> Outcome {
+    let model: Arc<dyn Fn() + Send + Sync> = Arc::new(model);
+    match cfg.mode {
+        Mode::Random { seed } => {
+            for k in 0..cfg.max_schedules {
+                let rng = DetRng::new(seed.wrapping_add(k as u64));
+                let res = run_once(cfg, &model, Vec::new(), RunMode::Random(rng));
+                if let Some(mut f) = res.failure {
+                    f.schedules_explored = k + 1;
+                    return Outcome::Fail(f);
+                }
+            }
+            Outcome::Pass { schedules: cfg.max_schedules, exhausted: false }
+        }
+        Mode::Dfs => explore_dfs(cfg, &model),
+    }
+}
+
+fn explore_dfs(cfg: &Config, model: &Arc<dyn Fn() + Send + Sync>) -> Outcome {
+    let mut stack: Vec<Node> = Vec::new();
+    let mut plan: Vec<Choice> = Vec::new();
+    let mut schedules = 0usize;
+    loop {
+        let res = run_once(cfg, model, plan.clone(), RunMode::Planned);
+        schedules += 1;
+        if let Some(mut f) = res.failure {
+            f.schedules_explored = schedules;
+            return Outcome::Fail(f);
+        }
+        if schedules >= cfg.max_schedules {
+            return Outcome::Pass { schedules, exhausted: false };
+        }
+        // Extend the stack with the decisions made past the planned prefix.
+        for i in stack.len()..res.steps.len() {
+            let step = &res.steps[i];
+            let sleep = if !cfg.sleep_sets || i == 0 {
+                Vec::new()
+            } else {
+                stack[i - 1].sleep_for_child()
+            };
+            let preemptions_before = if i == 0 {
+                0
+            } else {
+                stack[i - 1].preemptions_before + usize::from(stack[i - 1].is_preemptive())
+            };
+            let tried = match step.choice {
+                Choice::Thread(t) => vec![t],
+                Choice::Timeout(_) => Vec::new(),
+            };
+            stack.push(Node {
+                choice: step.choice,
+                enabled: step.enabled.clone(),
+                prev_exec: step.prev_exec,
+                tried,
+                sleep,
+                preemptions_before,
+            });
+        }
+        // Backtrack: deepest node with an untried, unslept, in-budget sibling.
+        let mut advanced = false;
+        while let Some(top) = stack.last() {
+            let i = stack.len() - 1;
+            if matches!(top.choice, Choice::Timeout(_)) {
+                stack.pop(); // forced decision, nothing to branch
+                continue;
+            }
+            let candidate = top
+                .enabled
+                .iter()
+                .map(|&(t, _)| t)
+                .find(|&t| {
+                    if top.tried.contains(&t) || top.sleep.contains(&t) {
+                        return false;
+                    }
+                    let preemptive =
+                        t != top.prev_exec && top.enabled.iter().any(|&(e, _)| e == top.prev_exec);
+                    top.preemptions_before + usize::from(preemptive) <= cfg.preemption_bound
+                });
+            match candidate {
+                Some(c) => {
+                    let top = stack.last_mut().expect("nonempty stack");
+                    if let Some(prev) = top.chosen_tid() {
+                        if cfg.sleep_sets && !top.sleep.contains(&prev) {
+                            top.sleep.push(prev);
+                        }
+                    }
+                    top.tried.push(c);
+                    top.choice = Choice::Thread(c);
+                    plan = stack[..i].iter().map(|n| n.choice).collect();
+                    plan.push(Choice::Thread(c));
+                    advanced = true;
+                    break;
+                }
+                None => {
+                    stack.pop();
+                }
+            }
+        }
+        if !advanced {
+            return Outcome::Pass { schedules, exhausted: true };
+        }
+    }
+}
+
+/// Explore with the default bounded-DFS configuration.
+pub fn explore(model: impl Fn() + Send + Sync + 'static) -> Outcome {
+    explore_with(&Config::default(), model)
+}
+
+/// Re-run one recorded schedule (deterministic failure replay).
+pub fn replay(model: impl Fn() + Send + Sync + 'static, schedule: &Schedule) -> Outcome {
+    let model: Arc<dyn Fn() + Send + Sync> = Arc::new(model);
+    let cfg = Config::default();
+    let res = run_once(&cfg, &model, schedule.0.clone(), RunMode::Planned);
+    match res.failure {
+        Some(mut f) => {
+            f.schedules_explored = 1;
+            Outcome::Fail(f)
+        }
+        None => Outcome::Pass { schedules: 1, exhausted: false },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_roundtrips_through_display() {
+        let s = Schedule(vec![Choice::Thread(0), Choice::Thread(2), Choice::Timeout(1), Choice::Thread(0)]);
+        let txt = s.to_string();
+        assert_eq!(txt, "0.2.t1.0");
+        let back: Schedule = txt.parse().unwrap();
+        assert_eq!(back, s);
+        let empty: Schedule = "".parse().unwrap();
+        assert_eq!(empty, Schedule(Vec::new()));
+    }
+
+    #[test]
+    fn opkey_independence_is_footprint_based() {
+        let a = OpKey::AtomicLoad(1);
+        let b = OpKey::AtomicLoad(1);
+        let c = OpKey::AtomicStore(1);
+        let d = OpKey::AtomicStore(2);
+        assert!(a.independent(&b), "two loads of the same cell commute");
+        assert!(!a.independent(&c), "load vs store on same cell conflict");
+        assert!(c.independent(&d), "stores to different cells commute");
+        assert!(!OpKey::Spawn.independent(&d), "control ops conservative");
+        let w = OpKey::CvWait { cv: 7, mutex: 2 };
+        assert!(!w.independent(&d), "cv wait touches its mutex");
+        assert!(w.independent(&OpKey::AtomicStore(9)));
+    }
+
+    #[test]
+    fn single_thread_model_passes_and_exhausts() {
+        let out = explore(|| {
+            let x = std::cell::Cell::new(0);
+            x.set(x.get() + 1);
+            assert_eq!(x.get(), 1);
+        });
+        match out {
+            Outcome::Pass { schedules, exhausted } => {
+                assert_eq!(schedules, 1, "one thread, one schedule");
+                assert!(exhausted);
+            }
+            Outcome::Fail(f) => panic!("unexpected failure: {f}"),
+        }
+    }
+
+    #[test]
+    fn panic_in_model_is_reported_with_schedule() {
+        let out = explore(|| {
+            panic!("deliberate model panic");
+        });
+        let f = out.expect_fail();
+        assert_eq!(f.kind, FailKind::Panic);
+        assert!(f.message.contains("deliberate model panic"), "{}", f.message);
+    }
+}

@@ -1,0 +1,765 @@
+//! Shadow sync primitives: drop-in stand-ins for `std::sync::atomic::*`,
+//! `Mutex`, `Condvar` and `thread::spawn` that route every operation
+//! through the controlled scheduler in [`super::sched`] when the calling
+//! thread belongs to a model run, and pass straight through to std
+//! otherwise.
+//!
+//! The shadow-primitive contract (DESIGN.md §12):
+//! - Outside a model run every operation behaves exactly like its std
+//!   counterpart (same types, same results), so shadow-routed code keeps
+//!   working in ordinary tests.
+//! - Inside a model run every atomic op, mutex lock, condvar wait entry,
+//!   spawn and join is a *yield point*: the scheduler serializes all
+//!   controlled threads and branches over who runs next.
+//! - Atomic values are backed by real std atomics accessed SeqCst while
+//!   controlled (execution is serialized anyway); the *declared* ordering
+//!   feeds the vector-clock model instead: Release stores publish the
+//!   writer's clock, Relaxed stores break the release sequence, RMWs
+//!   extend it, Acquire loads join the published clock.
+//! - `CheckCell` is the plain-memory probe: reads/writes are checked
+//!   against the modeled happens-before relation and a violation fails
+//!   the run with a replayable schedule.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, LockResult, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+use std::time::Duration;
+
+use super::sched::{ctx, OpKey, RunState};
+
+enum Entry {
+    /// Not a controlled thread (or tearing down while unwinding): execute
+    /// the real operation with no scheduling or bookkeeping.
+    Raw,
+    /// Controlled and granted: execute, then record happens-before.
+    Tracked(Arc<RunState>, usize),
+}
+
+fn guard(op: OpKey) -> Entry {
+    match ctx() {
+        None => Entry::Raw,
+        Some((run, tid)) => {
+            if run.yield_op(tid, op) {
+                Entry::Tracked(run, tid)
+            } else {
+                Entry::Raw
+            }
+        }
+    }
+}
+
+// lint: allow(ord-justify) — classifies orderings, performs no atomic op
+fn is_acquire(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+// lint: allow(ord-justify) — classifies orderings, performs no atomic op
+fn is_release(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+macro_rules! shadow_atomic {
+    ($name:ident, $std:ident, $ty:ty) => {
+        /// Shadow counterpart of `std::sync::atomic` with scheduler hooks.
+        #[derive(Debug, Default)]
+        pub struct $name {
+            inner: std::sync::atomic::$std,
+        }
+
+        impl $name {
+            pub const fn new(v: $ty) -> Self {
+                Self { inner: std::sync::atomic::$std::new(v) }
+            }
+
+            fn addr(&self) -> usize {
+                self as *const _ as usize
+            }
+
+            pub fn load(&self, ord: Ordering) -> $ty {
+                match guard(OpKey::AtomicLoad(self.addr())) {
+                    Entry::Raw => self.inner.load(ord),
+                    Entry::Tracked(run, tid) => {
+                        let v = self.inner.load(Ordering::SeqCst);
+                        run.hb_atomic_load(tid, self.addr(), is_acquire(ord));
+                        v
+                    }
+                }
+            }
+
+            pub fn store(&self, v: $ty, ord: Ordering) {
+                match guard(OpKey::AtomicStore(self.addr())) {
+                    Entry::Raw => self.inner.store(v, ord),
+                    Entry::Tracked(run, tid) => {
+                        self.inner.store(v, Ordering::SeqCst);
+                        run.hb_atomic_store(tid, self.addr(), is_release(ord));
+                    }
+                }
+            }
+
+            pub fn swap(&self, v: $ty, ord: Ordering) -> $ty {
+                match guard(OpKey::AtomicRmw(self.addr())) {
+                    Entry::Raw => self.inner.swap(v, ord),
+                    Entry::Tracked(run, tid) => {
+                        let old = self.inner.swap(v, Ordering::SeqCst);
+                        run.hb_atomic_rmw(tid, self.addr(), is_acquire(ord), is_release(ord));
+                        old
+                    }
+                }
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: $ty,
+                new: $ty,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                match guard(OpKey::AtomicRmw(self.addr())) {
+                    Entry::Raw => self.inner.compare_exchange(current, new, success, failure),
+                    Entry::Tracked(run, tid) => {
+                        let r = self
+                            .inner
+                            .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst);
+                        match r {
+                            Ok(_) => run.hb_atomic_rmw(
+                                tid,
+                                self.addr(),
+                                is_acquire(success),
+                                is_release(success),
+                            ),
+                            Err(_) => run.hb_atomic_load(tid, self.addr(), is_acquire(failure)),
+                        }
+                        r
+                    }
+                }
+            }
+
+            /// A controlled run is fully serialized, so a weak CAS never
+            /// fails spuriously; modeled identically to the strong form.
+            pub fn compare_exchange_weak(
+                &self,
+                current: $ty,
+                new: $ty,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                match guard(OpKey::AtomicRmw(self.addr())) {
+                    Entry::Raw => self.inner.compare_exchange_weak(current, new, success, failure),
+                    Entry::Tracked(run, tid) => {
+                        let r = self
+                            .inner
+                            .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst);
+                        match r {
+                            Ok(_) => run.hb_atomic_rmw(
+                                tid,
+                                self.addr(),
+                                is_acquire(success),
+                                is_release(success),
+                            ),
+                            Err(_) => run.hb_atomic_load(tid, self.addr(), is_acquire(failure)),
+                        }
+                        r
+                    }
+                }
+            }
+
+            pub fn fetch_add(&self, v: $ty, ord: Ordering) -> $ty {
+                match guard(OpKey::AtomicRmw(self.addr())) {
+                    Entry::Raw => self.inner.fetch_add(v, ord),
+                    Entry::Tracked(run, tid) => {
+                        let old = self.inner.fetch_add(v, Ordering::SeqCst);
+                        run.hb_atomic_rmw(tid, self.addr(), is_acquire(ord), is_release(ord));
+                        old
+                    }
+                }
+            }
+
+            pub fn fetch_sub(&self, v: $ty, ord: Ordering) -> $ty {
+                match guard(OpKey::AtomicRmw(self.addr())) {
+                    Entry::Raw => self.inner.fetch_sub(v, ord),
+                    Entry::Tracked(run, tid) => {
+                        let old = self.inner.fetch_sub(v, Ordering::SeqCst);
+                        run.hb_atomic_rmw(tid, self.addr(), is_acquire(ord), is_release(ord));
+                        old
+                    }
+                }
+            }
+
+            pub fn fetch_max(&self, v: $ty, ord: Ordering) -> $ty {
+                match guard(OpKey::AtomicRmw(self.addr())) {
+                    Entry::Raw => self.inner.fetch_max(v, ord),
+                    Entry::Tracked(run, tid) => {
+                        let old = self.inner.fetch_max(v, Ordering::SeqCst);
+                        run.hb_atomic_rmw(tid, self.addr(), is_acquire(ord), is_release(ord));
+                        old
+                    }
+                }
+            }
+        }
+    };
+}
+
+shadow_atomic!(AtomicUsize, AtomicUsize, usize);
+shadow_atomic!(AtomicU64, AtomicU64, u64);
+
+/// Shadow `AtomicBool` (no arithmetic RMWs; swap covers the queue's use).
+#[derive(Debug, Default)]
+pub struct AtomicBool {
+    inner: std::sync::atomic::AtomicBool,
+}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> Self {
+        Self { inner: std::sync::atomic::AtomicBool::new(v) }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const _ as usize
+    }
+
+    pub fn load(&self, ord: Ordering) -> bool {
+        match guard(OpKey::AtomicLoad(self.addr())) {
+            Entry::Raw => self.inner.load(ord),
+            Entry::Tracked(run, tid) => {
+                let v = self.inner.load(Ordering::SeqCst);
+                run.hb_atomic_load(tid, self.addr(), is_acquire(ord));
+                v
+            }
+        }
+    }
+
+    pub fn store(&self, v: bool, ord: Ordering) {
+        match guard(OpKey::AtomicStore(self.addr())) {
+            Entry::Raw => self.inner.store(v, ord),
+            Entry::Tracked(run, tid) => {
+                self.inner.store(v, Ordering::SeqCst);
+                run.hb_atomic_store(tid, self.addr(), is_release(ord));
+            }
+        }
+    }
+
+    pub fn swap(&self, v: bool, ord: Ordering) -> bool {
+        match guard(OpKey::AtomicRmw(self.addr())) {
+            Entry::Raw => self.inner.swap(v, ord),
+            Entry::Tracked(run, tid) => {
+                let old = self.inner.swap(v, Ordering::SeqCst);
+                run.hb_atomic_rmw(tid, self.addr(), is_acquire(ord), is_release(ord));
+                old
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mutex / Condvar
+// ---------------------------------------------------------------------------
+
+/// Shadow mutex. In controlled mode the *logical* lock lives in the
+/// scheduler (`held` map keyed by this object's address); the inner std
+/// mutex is still taken for real so `MutexGuard` can hand out `&mut T`,
+/// but logical exclusion guarantees it is always free at that point.
+#[derive(Debug, Default)]
+pub struct Mutex<T> {
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Self {
+        Self { inner: StdMutex::new(t) }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const _ as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match guard(OpKey::MutexLock(self.addr())) {
+            Entry::Raw => match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), ctrl: None }),
+                Err(p) => {
+                    let g =
+                        MutexGuard { lock: self, inner: Some(p.into_inner()), ctrl: None };
+                    Err(std::sync::PoisonError::new(g))
+                }
+            },
+            Entry::Tracked(run, tid) => {
+                run.hb_mutex_acquire(tid, self.addr());
+                // Logical exclusion means this cannot block; a poisoned
+                // inner mutex (from a torn-down earlier run) is recovered.
+                let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+                Ok(MutexGuard { lock: self, inner: Some(g), ctrl: Some((run, tid)) })
+            }
+        }
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    inner: Option<StdMutexGuard<'a, T>>,
+    ctrl: Option<(Arc<RunState>, usize)>,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard intact")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard intact")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Free the real lock before the logical release so a granted
+        // waiter can never find the inner mutex still taken.
+        self.inner.take();
+        if let Some((run, tid)) = self.ctrl.take() {
+            run.hb_mutex_release(tid, self.lock.addr());
+        }
+    }
+}
+
+/// Result of a shadow `wait_timeout`, mirroring std's.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Shadow condvar. Controlled waits park on the scheduler (never on the
+/// inner std condvar); `notify_one` deterministically wakes the
+/// lowest-index waiter. Timeouts fire only as a deadlock escape.
+#[derive(Debug, Default)]
+pub struct Condvar {
+    inner: std::sync::Condvar,
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Self { inner: std::sync::Condvar::new() }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const _ as usize
+    }
+
+    fn wait_controlled<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        timed: bool,
+    ) -> (MutexGuard<'a, T>, bool) {
+        let (run, tid) = guard.ctrl.take().expect("controlled wait on controlled guard");
+        let lock = guard.lock;
+        if !run.yield_op(tid, OpKey::CvWait { cv: self.addr(), mutex: lock.addr() }) {
+            // Torn-down run unwinding: behave as an immediate spurious wake.
+            guard.ctrl = Some((run, tid));
+            return (guard, false);
+        }
+        // Granted: execute the wait entry — release the real guard, then
+        // the logical mutex, block, and hand the baton onward.
+        guard.inner.take();
+        std::mem::forget(guard); // fully defused (both fields None-or-taken)
+        run.cv_wait_enter(tid, self.addr(), lock.addr(), timed);
+        run.park_until_granted(tid);
+        let timed_out = run.cv_wait_exit(tid, lock.addr());
+        let inner = lock.inner.lock().unwrap_or_else(|e| e.into_inner());
+        (MutexGuard { lock, inner: Some(inner), ctrl: Some((run, tid)) }, timed_out)
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        if guard.ctrl.is_some() {
+            let (g, _) = self.wait_controlled(guard, false);
+            return Ok(g);
+        }
+        let mut guard = guard;
+        let lock = guard.lock;
+        let std_guard = guard.inner.take().expect("guard intact");
+        std::mem::forget(guard);
+        match self.inner.wait(std_guard) {
+            Ok(g) => Ok(MutexGuard { lock, inner: Some(g), ctrl: None }),
+            Err(p) => {
+                let g = MutexGuard { lock, inner: Some(p.into_inner()), ctrl: None };
+                Err(std::sync::PoisonError::new(g))
+            }
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        if guard.ctrl.is_some() {
+            let (g, timed_out) = self.wait_controlled(guard, true);
+            return Ok((g, WaitTimeoutResult(timed_out)));
+        }
+        let mut guard = guard;
+        let lock = guard.lock;
+        let std_guard = guard.inner.take().expect("guard intact");
+        std::mem::forget(guard);
+        match self.inner.wait_timeout(std_guard, dur) {
+            Ok((g, t)) => {
+                Ok((MutexGuard { lock, inner: Some(g), ctrl: None }, WaitTimeoutResult(t.timed_out())))
+            }
+            Err(p) => {
+                let (g, t) = p.into_inner();
+                let g = MutexGuard { lock, inner: Some(g), ctrl: None };
+                Err(std::sync::PoisonError::new((g, WaitTimeoutResult(t.timed_out()))))
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        match ctx() {
+            Some((run, tid)) => run.cv_notify(tid, self.addr(), false),
+            None => self.inner.notify_one(),
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match ctx() {
+            Some((run, tid)) => run.cv_notify(tid, self.addr(), true),
+            None => self.inner.notify_all(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CheckCell: race-checked plain memory
+// ---------------------------------------------------------------------------
+
+/// Plain (non-atomic) slot whose accesses are validated against the
+/// modeled happens-before relation inside a controlled run. Outside a run
+/// it is a bare `UnsafeCell<MaybeUninit<T>>`.
+///
+/// Safety contract (same as the raw cell it replaces): callers must
+/// ensure `read` only follows a matching `write` — the surrounding
+/// protocol (e.g. Vyukov sequence numbers) provides that, and the race
+/// detector verifies the protocol actually orders the accesses.
+pub struct CheckCell<T> {
+    inner: UnsafeCell<MaybeUninit<T>>,
+}
+
+impl<T> std::fmt::Debug for CheckCell<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("CheckCell(..)")
+    }
+}
+
+unsafe impl<T: Send> Send for CheckCell<T> {}
+unsafe impl<T: Send> Sync for CheckCell<T> {}
+
+impl<T> CheckCell<T> {
+    pub const fn uninit() -> Self {
+        Self { inner: UnsafeCell::new(MaybeUninit::uninit()) }
+    }
+
+    /// # Safety
+    /// Any value previously written and not yet read is leaked, so the
+    /// caller must ensure the slot is logically empty.
+    pub unsafe fn write(&self, v: T) {
+        if let Some((run, tid)) = ctx() {
+            run.cell_write(tid, self as *const _ as usize);
+        }
+        (*self.inner.get()).write(v);
+    }
+
+    /// # Safety
+    /// The slot must hold an initialized value (a prior `write` that the
+    /// surrounding protocol hands off to this reader).
+    pub unsafe fn read(&self) -> T {
+        if let Some((run, tid)) = ctx() {
+            run.cell_read(tid, self as *const _ as usize);
+        }
+        (*self.inner.get()).assume_init_read()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Controlled threads
+// ---------------------------------------------------------------------------
+
+pub mod thread {
+    //! Shadow `thread::spawn`/`JoinHandle`: controlled inside a model run,
+    //! plain std threads otherwise. Model code should spawn through this
+    //! module so child threads join the exploration.
+
+    use std::sync::{Arc, Mutex as StdMutex};
+
+    use super::super::sched::{controlled_enter, ctx, OpKey};
+
+    enum Imp<T> {
+        Std(std::thread::JoinHandle<T>),
+        Model {
+            tid: usize,
+            slot: Arc<StdMutex<Option<std::thread::Result<T>>>>,
+            real: Option<std::thread::JoinHandle<()>>,
+        },
+    }
+
+    pub struct JoinHandle<T>(Imp<T>);
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let Some((run, parent)) = ctx() else {
+            return JoinHandle(Imp::Std(std::thread::spawn(f)));
+        };
+        if !run.yield_op(parent, OpKey::Spawn) {
+            // Torn-down run: fall back to a plain thread.
+            return JoinHandle(Imp::Std(std::thread::spawn(f)));
+        }
+        let child = run.register_child(parent);
+        let slot = Arc::new(StdMutex::new(None));
+        let slot2 = slot.clone();
+        let run2 = run.clone();
+        let real = std::thread::Builder::new()
+            .name(format!("pallas-check-{child}"))
+            .spawn(move || {
+                if let Some(res) = controlled_enter(run2, child, f) {
+                    *slot2.lock().unwrap_or_else(|e| e.into_inner()) = Some(res);
+                }
+            })
+            .expect("spawn controlled model thread");
+        JoinHandle(Imp::Model { tid: child, slot, real: Some(real) })
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.0 {
+                Imp::Std(h) => h.join(),
+                Imp::Model { tid, slot, real } => {
+                    let (run, me) =
+                        ctx().expect("model JoinHandle joined outside the controlled run");
+                    if run.yield_op(me, OpKey::Join(tid)) {
+                        run.hb_join(me, tid);
+                    }
+                    if let Some(h) = real {
+                        let _ = h.join();
+                    }
+                    let res = slot.lock().unwrap_or_else(|e| e.into_inner()).take();
+                    match res {
+                        Some(r) => r,
+                        // Only reachable while a poisoned run unwinds.
+                        None => Err(Box::new("model run aborted before child finished")),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sched::{explore, explore_with, replay, Config, FailKind, Mode, Outcome};
+    use super::thread;
+    use super::*;
+    use std::sync::atomic::Ordering::{Acquire, Relaxed, Release};
+
+    /// Two-thread message-passing fixture: flag publication with the given
+    /// store/load orderings guarding a CheckCell payload.
+    fn flag_model(store_ord: Ordering, load_ord: Ordering) -> impl Fn() + Send + Sync + 'static {
+        move || {
+            let data = Arc::new(CheckCell::<u64>::uninit());
+            let flag = Arc::new(AtomicBool::new(false));
+            let (d2, f2) = (data.clone(), flag.clone());
+            let producer = thread::spawn(move || {
+                unsafe { d2.write(41) };
+                f2.store(true, store_ord);
+            });
+            // Consumer: bounded poll so every schedule terminates.
+            for _ in 0..4 {
+                if flag.load(load_ord) {
+                    let v = unsafe { data.read() };
+                    assert_eq!(v, 41);
+                    break;
+                }
+            }
+            producer.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn release_acquire_flag_passes() {
+        explore(flag_model(Release, Acquire)).expect_pass();
+    }
+
+    #[test]
+    fn missing_release_is_caught_within_budget() {
+        // The seeded-bug fixture: a Relaxed store breaks the release
+        // sequence, so the consumer's read races with the write.
+        let out = explore(flag_model(Relaxed, Acquire));
+        let f = out.expect_fail();
+        assert_eq!(f.kind, FailKind::Race, "{f}");
+        assert!(
+            f.schedules_explored <= 64,
+            "expected the race within a small budget, took {}",
+            f.schedules_explored
+        );
+    }
+
+    #[test]
+    fn missing_acquire_is_caught() {
+        let out = explore(flag_model(Release, Relaxed));
+        let f = out.expect_fail();
+        assert_eq!(f.kind, FailKind::Race, "{f}");
+    }
+
+    #[test]
+    fn failure_replay_is_deterministic() {
+        let sched = {
+            let f1 = explore(flag_model(Relaxed, Acquire));
+            f1.expect_fail().schedule.clone()
+        };
+        // Replaying the recorded schedule reproduces the same failure.
+        let again = replay(flag_model(Relaxed, Acquire), &sched);
+        let f = again.expect_fail();
+        assert_eq!(f.kind, FailKind::Race);
+        assert_eq!(f.schedule, sched, "replay must follow the recorded schedule");
+    }
+
+    #[test]
+    fn random_walk_same_seed_same_failing_schedule() {
+        let cfg = Config::random(0xC0FFEE, 500);
+        let a = explore_with(&cfg, flag_model(Relaxed, Acquire));
+        let b = explore_with(&cfg, flag_model(Relaxed, Acquire));
+        let (fa, fb) = (a.expect_fail(), b.expect_fail());
+        assert_eq!(fa.schedule, fb.schedule, "same seed must find the same schedule");
+        assert_eq!(fa.schedules_explored, fb.schedules_explored);
+    }
+
+    /// Check-then-park without re-checking under the lock: classic missed
+    /// wakeup. With `buggy`, the consumer checks the flag *before* taking
+    /// the park lock, so a notify landing in between is lost forever.
+    fn park_model(buggy: bool) -> impl Fn() + Send + Sync + 'static {
+        move || {
+            let ready = Arc::new(Mutex::new(false));
+            let cv = Arc::new(Condvar::new());
+            let hint = Arc::new(AtomicBool::new(false));
+            let (r2, c2, h2) = (ready.clone(), cv.clone(), hint.clone());
+            let producer = thread::spawn(move || {
+                *r2.lock().unwrap() = true;
+                h2.store(true, Release);
+                c2.notify_one();
+            });
+            if buggy {
+                // Unsynchronized fast-path check, then an unconditional
+                // wait with no re-check under the lock: a notify landing
+                // between the check and the wait is lost forever.
+                if !hint.load(Acquire) {
+                    let g = ready.lock().unwrap();
+                    let _g = cv.wait(g).unwrap(); // untimed: deadlock if missed
+                }
+            } else {
+                let mut g = ready.lock().unwrap();
+                while !*g {
+                    g = cv.wait(g).unwrap();
+                }
+            }
+            producer.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn missed_wakeup_deadlock_is_detected() {
+        let out = explore(park_model(true));
+        let f = out.expect_fail();
+        assert_eq!(f.kind, FailKind::Deadlock, "{f}");
+    }
+
+    #[test]
+    fn guarded_wait_never_deadlocks() {
+        explore(park_model(false)).expect_pass();
+    }
+
+    #[test]
+    fn timed_wait_escapes_deadlock() {
+        // Same missed-wakeup shape, but the wait is timed: the scheduler
+        // fires the timeout instead of failing, and the model completes.
+        explore(|| {
+            let ready = Arc::new(Mutex::new(false));
+            let cv = Arc::new(Condvar::new());
+            let (r2, c2) = (ready.clone(), cv.clone());
+            let producer = thread::spawn(move || {
+                *r2.lock().unwrap() = true;
+                c2.notify_one();
+            });
+            let mut g = ready.lock().unwrap();
+            while !*g {
+                let (ng, t) = cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+                g = ng;
+                if t.timed_out() {
+                    break;
+                }
+            }
+            drop(g);
+            producer.join().unwrap();
+        })
+        .expect_pass();
+    }
+
+    #[test]
+    fn sleep_set_pruning_preserves_verdicts() {
+        // Pruned and unpruned bounded DFS must agree: same verdict on the
+        // buggy fixture, same (pass) verdict on the fixed one, and pruning
+        // must not explore more schedules.
+        let pruned = Config { sleep_sets: true, ..Config::default() };
+        let unpruned = Config { sleep_sets: false, ..Config::default() };
+        assert!(explore_with(&pruned, flag_model(Relaxed, Acquire)).failure().is_some());
+        assert!(explore_with(&unpruned, flag_model(Relaxed, Acquire)).failure().is_some());
+        let p = explore_with(&pruned, flag_model(Release, Acquire));
+        let u = explore_with(&unpruned, flag_model(Release, Acquire));
+        match (&p, &u) {
+            (
+                Outcome::Pass { schedules: sp, exhausted: ep },
+                Outcome::Pass { schedules: su, exhausted: eu },
+            ) => {
+                assert!(*ep && *eu, "both bounded searches should exhaust this tiny model");
+                assert!(sp <= su, "pruning explored more ({sp}) than brute force ({su})");
+            }
+            _ => panic!("fixed model failed: {p:?} / {u:?}"),
+        }
+    }
+
+    #[test]
+    fn random_mode_also_catches_the_seeded_bug() {
+        let cfg = Config { max_schedules: 500, mode: Mode::Random { seed: 7 }, ..Config::default() };
+        let out = explore_with(&cfg, flag_model(Relaxed, Acquire));
+        assert_eq!(out.expect_fail().kind, FailKind::Race);
+    }
+
+    #[test]
+    fn atomics_pass_through_outside_model_runs() {
+        let a = AtomicUsize::new(3);
+        assert_eq!(a.fetch_add(4, Relaxed), 3);
+        assert_eq!(a.load(Acquire), 7);
+        assert_eq!(a.compare_exchange(7, 9, Release, Relaxed), Ok(7));
+        assert_eq!(a.swap(1, Relaxed), 9);
+        assert_eq!(a.fetch_max(5, Relaxed), 1);
+        assert_eq!(a.load(Relaxed), 5);
+        let b = AtomicBool::new(false);
+        assert!(!b.swap(true, Relaxed));
+        let m = Mutex::new(2);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 3);
+        let cell = CheckCell::<u32>::uninit();
+        unsafe {
+            cell.write(11);
+            assert_eq!(cell.read(), 11);
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! The sync facade the checked hot paths import from.
+//!
+//! `falkon::queue` and `telemetry::counters` take their sync primitives
+//! from this module instead of `std::sync`. In the default build every
+//! name is a re-export of the std type (zero cost — the compiled code is
+//! bit-identical to importing std directly, so seeded differentials are
+//! unaffected). Under `--features model_check` the same names resolve to
+//! the shadow primitives in [`super::shadow`], routing every operation
+//! through the schedule-exploring controlled scheduler.
+//!
+//! `CheckCell<T>` is the facade for protocol-guarded plain memory (the
+//! Vyukov ring slots): a bare `UnsafeCell<MaybeUninit<T>>` by default, a
+//! race-checked shadow cell under `model_check`.
+
+#[cfg(not(feature = "model_check"))]
+mod imp {
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize};
+    pub use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+    use std::cell::UnsafeCell;
+    use std::mem::MaybeUninit;
+
+    /// Zero-cost passthrough cell: identical codegen to the raw
+    /// `UnsafeCell<MaybeUninit<T>>` it replaces.
+    pub struct CheckCell<T> {
+        inner: UnsafeCell<MaybeUninit<T>>,
+    }
+
+    unsafe impl<T: Send> Send for CheckCell<T> {}
+    unsafe impl<T: Send> Sync for CheckCell<T> {}
+
+    impl<T> std::fmt::Debug for CheckCell<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str("CheckCell(..)")
+        }
+    }
+
+    impl<T> CheckCell<T> {
+        pub const fn uninit() -> Self {
+            Self { inner: UnsafeCell::new(MaybeUninit::uninit()) }
+        }
+
+        /// # Safety
+        /// The slot must be logically empty (a previously written value
+        /// that was never read is leaked).
+        #[inline(always)]
+        pub unsafe fn write(&self, v: T) {
+            (*self.inner.get()).write(v);
+        }
+
+        /// # Safety
+        /// The slot must hold an initialized value handed off to this
+        /// reader by the surrounding protocol.
+        #[inline(always)]
+        pub unsafe fn read(&self) -> T {
+            (*self.inner.get()).assume_init_read()
+        }
+    }
+}
+
+#[cfg(feature = "model_check")]
+mod imp {
+    pub use crate::check::shadow::{
+        AtomicBool, AtomicU64, AtomicUsize, CheckCell, Condvar, Mutex, MutexGuard,
+        WaitTimeoutResult,
+    };
+}
+
+pub use imp::*;

@@ -1,0 +1,157 @@
+//! Vector clocks for the happens-before race detector.
+//!
+//! Each controlled thread carries a [`VClock`]; every executed operation
+//! ticks the owner's component. Synchronizing operations (mutex unlock →
+//! lock, Release store → Acquire load, spawn → first step, last step →
+//! join) transfer clocks so that `a happens-before b` iff
+//! `clock(a) ≤ clock(b)` component-wise. Plain-memory accesses through
+//! `CheckCell` record the owning thread's epoch `(tid, clock[tid])` and a
+//! race is reported when two accesses, at least one a write, are not
+//! ordered by the clocks (FastTrack-style epoch comparison, kept simple:
+//! we store full last-write / last-read clocks because model runs involve
+//! a handful of threads).
+
+/// A vector clock indexed by controlled-thread id. Grows on demand; a
+/// missing component is zero.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct VClock {
+    c: Vec<u64>,
+}
+
+impl VClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Component for thread `tid` (zero if never touched).
+    pub fn get(&self, tid: usize) -> u64 {
+        self.c.get(tid).copied().unwrap_or(0)
+    }
+
+    /// Set component `tid` to `v`, growing as needed.
+    pub fn set(&mut self, tid: usize, v: u64) {
+        if self.c.len() <= tid {
+            self.c.resize(tid + 1, 0);
+        }
+        self.c[tid] = v;
+    }
+
+    /// Advance this thread's own component by one.
+    pub fn tick(&mut self, tid: usize) {
+        let v = self.get(tid);
+        self.set(tid, v + 1);
+    }
+
+    /// Component-wise maximum (join): `self := self ⊔ other`.
+    pub fn join(&mut self, other: &VClock) {
+        if self.c.len() < other.c.len() {
+            self.c.resize(other.c.len(), 0);
+        }
+        for (i, &v) in other.c.iter().enumerate() {
+            if v > self.c[i] {
+                self.c[i] = v;
+            }
+        }
+    }
+
+    /// `self ≤ other` component-wise: everything seen by `self` is seen by
+    /// `other`, i.e. the event stamped `self` happens-before one stamped
+    /// `other` (or they are equal).
+    pub fn le(&self, other: &VClock) -> bool {
+        self.c
+            .iter()
+            .enumerate()
+            .all(|(i, &v)| v <= other.get(i))
+    }
+
+    /// True when neither clock dominates: the two stamped events are
+    /// concurrent.
+    pub fn concurrent_with(&self, other: &VClock) -> bool {
+        !self.le(other) && !other.le(self)
+    }
+
+    /// Reset to the all-zeros clock (used when a Relaxed store breaks a
+    /// release sequence).
+    pub fn clear(&mut self) {
+        self.c.clear();
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.c.iter().all(|&v| v == 0)
+    }
+}
+
+/// The epoch of a single access: which thread, at what local time, with
+/// what full clock. Full clocks keep the `concurrent_with` check exact for
+/// the small thread counts model runs use.
+#[derive(Debug, Clone)]
+pub struct Epoch {
+    pub tid: usize,
+    pub clock: VClock,
+}
+
+impl Epoch {
+    pub fn happens_before(&self, now: &VClock) -> bool {
+        // The access at `self.clock` is ordered before an event whose
+        // thread clock is `now` iff the accessor's component has been
+        // propagated to `now`.
+        self.clock.get(self.tid) <= now.get(self.tid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_is_componentwise_max() {
+        let mut a = VClock::new();
+        a.set(0, 3);
+        a.set(2, 1);
+        let mut b = VClock::new();
+        b.set(0, 1);
+        b.set(1, 5);
+        a.join(&b);
+        assert_eq!(a.get(0), 3);
+        assert_eq!(a.get(1), 5);
+        assert_eq!(a.get(2), 1);
+    }
+
+    #[test]
+    fn le_and_concurrency() {
+        let mut a = VClock::new();
+        a.set(0, 1);
+        let mut b = VClock::new();
+        b.set(0, 2);
+        assert!(a.le(&b));
+        assert!(!b.le(&a));
+        assert!(!a.concurrent_with(&b));
+
+        let mut c = VClock::new();
+        c.set(1, 1);
+        assert!(a.concurrent_with(&c));
+    }
+
+    #[test]
+    fn tick_advances_own_component_only() {
+        let mut a = VClock::new();
+        a.tick(3);
+        a.tick(3);
+        assert_eq!(a.get(3), 2);
+        assert_eq!(a.get(0), 0);
+    }
+
+    #[test]
+    fn epoch_happens_before_tracks_propagation() {
+        // Writer thread 0 at time 2; reader thread 1 that has joined the
+        // writer's clock sees the write as ordered.
+        let mut w = VClock::new();
+        w.set(0, 2);
+        let e = Epoch { tid: 0, clock: w.clone() };
+        let mut r = VClock::new();
+        r.set(1, 7);
+        assert!(!e.happens_before(&r));
+        r.join(&w);
+        assert!(e.happens_before(&r));
+    }
+}

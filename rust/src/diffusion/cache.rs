@@ -137,6 +137,8 @@ impl CacheModel {
     /// capacity. Stops early (deferring) when only pinned entries
     /// remain. Returns evicted ids in eviction order (deterministic:
     /// min `(last_access, id)` first).
+    // lint: allow(det-iter) — min_by_key over (last_access, id) is a total
+    // order, so the victim is the same for any hash iteration order
     pub fn sweep(&mut self) -> Vec<DatasetId> {
         let mut out = Vec::new();
         while self.used > self.capacity {
@@ -156,6 +158,7 @@ impl CacheModel {
 
     /// Drop every entry (the site/executor vanished). Returns the
     /// dropped ids sorted (deterministic reporting order).
+    // lint: allow(det-iter) — keys are sorted before they leave this fn
     pub fn drop_all(&mut self) -> Vec<DatasetId> {
         let mut ids: Vec<DatasetId> = self.entries.keys().copied().collect();
         ids.sort_unstable();

@@ -556,15 +556,18 @@ impl<'a> BinCursor<'a> {
     }
 
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+        let b: [u8; 2] = self.take(2)?.try_into().context("2-byte field")?;
+        Ok(u16::from_le_bytes(b))
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+        let b: [u8; 4] = self.take(4)?.try_into().context("4-byte field")?;
+        Ok(u32::from_le_bytes(b))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+        let b: [u8; 8] = self.take(8)?.try_into().context("8-byte field")?;
+        Ok(u64::from_le_bytes(b))
     }
 
     /// A u16-length-prefixed string, borrowed from the payload.

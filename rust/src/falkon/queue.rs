@@ -35,14 +35,18 @@
 //! [`MutexShardedQueue`] keeps the previous lock-per-shard
 //! implementation verbatim as the contention baseline
 //! `benches/falkon_micro.rs` measures the ring against.
+//!
+//! hot-path: `push`/`try_pop_batch` run once per task on the dispatch
+//! floor — pallas-lint bans steady-state allocation here. All sync
+//! primitives come from `crate::check::sync` so the model checker
+//! (`--features model_check`) can interpose; the default build re-exports
+//! std types and compiles identically.
 
-use std::cell::UnsafeCell;
 use std::collections::VecDeque;
-use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::Ordering;
 use std::time::Duration;
 
+use crate::check::sync::{AtomicBool, AtomicUsize, CheckCell, Condvar, Mutex};
 use crate::telemetry::counters::{self, Counter, Hist};
 
 /// Cap on queue shards. Tuned from `benches/falkon_micro.rs` (see
@@ -62,7 +66,13 @@ pub const DISPATCH_BATCH: usize = 32;
 /// Per-shard lock-free ring capacity (power of two). 1024 slots absorb
 /// any burst the dispatch loop produces between drains; deeper backlogs
 /// (the paper queues 1.5 M tasks) spill to the shard's overflow deque.
+#[cfg(not(feature = "model_check"))]
 const RING_CAP: usize = 1024;
+
+/// Tiny ring under model check so wraparound, full-ring and spillover
+/// paths are all reachable within a bounded schedule exploration.
+#[cfg(feature = "model_check")]
+const RING_CAP: usize = 4;
 
 /// Pads the ring cursors to separate cache lines so producers bouncing
 /// `tail` don't false-share with consumers bouncing `head`.
@@ -74,7 +84,10 @@ struct Slot<T> {
     /// producer of ticket `pos`, `pos + 1` once its value is readable,
     /// `pos + cap` once consumed (free for the next lap's producer).
     seq: AtomicUsize,
-    val: UnsafeCell<MaybeUninit<T>>,
+    /// Plain payload memory handed off by the `seq` protocol; the
+    /// `CheckCell` facade lets the model checker's race detector verify
+    /// that handoff (zero-cost `UnsafeCell` in the default build).
+    val: CheckCell<T>,
 }
 
 /// Vendored bounded MPMC ring (Vyukov array queue). Producers and
@@ -96,13 +109,14 @@ unsafe impl<T: Send> Send for Ring<T> {}
 unsafe impl<T: Send> Sync for Ring<T> {}
 
 impl<T> Ring<T> {
+    // lint: allow(hot-path-alloc) — one-time construction, not dispatch
     fn new(cap: usize) -> Self {
         assert!(cap.is_power_of_two());
         Self {
             slots: (0..cap)
                 .map(|i| Slot {
                     seq: AtomicUsize::new(i),
-                    val: UnsafeCell::new(MaybeUninit::uninit()),
+                    val: CheckCell::uninit(),
                 })
                 .collect::<Vec<_>>()
                 .into_boxed_slice(),
@@ -114,9 +128,12 @@ impl<T> Ring<T> {
 
     /// Lock-free push; returns the item back when the ring is full.
     fn push(&self, item: T) -> Result<(), T> {
+        // ord: cursor scan only; the seq Acquire below is what orders
         let mut pos = self.tail.0.load(Ordering::Relaxed);
         loop {
             let slot = &self.slots[pos & self.mask];
+            // ord: pairs with the Release seq stores in push/pop — seeing
+            // `pos` here means the previous lap's value was fully read
             let seq = slot.seq.load(Ordering::Acquire);
             let dif = seq as isize - pos as isize;
             if dif == 0 {
@@ -124,6 +141,8 @@ impl<T> Ring<T> {
                 match self.tail.0.compare_exchange_weak(
                     pos,
                     pos + 1,
+                    // ord: ticket claim only; the value is published by
+                    // the seq Release store, not by this cursor CAS
                     Ordering::Relaxed,
                     Ordering::Relaxed,
                 ) {
@@ -131,7 +150,9 @@ impl<T> Ring<T> {
                         // SAFETY: the CAS gave this thread exclusive
                         // ownership of the slot until the seq store
                         // publishes it to consumers.
-                        unsafe { (*slot.val.get()).write(item) };
+                        unsafe { slot.val.write(item) };
+                        // ord: publishes the written value to the
+                        // consumer's seq Acquire load
                         slot.seq.store(pos + 1, Ordering::Release);
                         return Ok(());
                     }
@@ -141,6 +162,7 @@ impl<T> Ring<T> {
                 // A full lap behind: the ring is full.
                 return Err(item);
             } else {
+                // ord: stale ticket; re-read the cursor and retry
                 pos = self.tail.0.load(Ordering::Relaxed);
             }
         }
@@ -149,15 +171,20 @@ impl<T> Ring<T> {
     /// Lock-free pop (this is also the steal path: stealers CAS the
     /// same `head` cursor). Returns `None` when empty.
     fn pop(&self) -> Option<T> {
+        // ord: cursor scan only; the seq Acquire below is what orders
         let mut pos = self.head.0.load(Ordering::Relaxed);
         loop {
             let slot = &self.slots[pos & self.mask];
+            // ord: pairs with the Release seq store in push — seeing
+            // `pos + 1` means the producer's value write is visible
             let seq = slot.seq.load(Ordering::Acquire);
             let dif = seq as isize - (pos + 1) as isize;
             if dif == 0 {
                 match self.head.0.compare_exchange_weak(
                     pos,
                     pos + 1,
+                    // ord: ticket claim only; value visibility came from
+                    // the seq Acquire, recycling goes via seq Release
                     Ordering::Relaxed,
                     Ordering::Relaxed,
                 ) {
@@ -165,7 +192,9 @@ impl<T> Ring<T> {
                         // SAFETY: the CAS gave this thread exclusive
                         // ownership of the published value; the seq
                         // store below recycles the slot for producers.
-                        let item = unsafe { (*slot.val.get()).assume_init_read() };
+                        let item = unsafe { slot.val.read() };
+                        // ord: publishes the completed read — the next
+                        // lap's producer may overwrite the slot
                         slot.seq.store(pos + self.mask + 1, Ordering::Release);
                         return Some(item);
                     }
@@ -176,6 +205,7 @@ impl<T> Ring<T> {
                 // published yet — the caller re-checks `len`).
                 return None;
             } else {
+                // ord: stale ticket; re-read the cursor and retry
                 pos = self.head.0.load(Ordering::Relaxed);
             }
         }
@@ -184,6 +214,7 @@ impl<T> Ring<T> {
     /// Approximate occupancy (cursors race; exact counts live in the
     /// queue-level `len` atomic).
     fn len_estimate(&self) -> usize {
+        // ord: advisory estimate — staleness only biases the steal scan
         let tail = self.tail.0.load(Ordering::Relaxed);
         let head = self.head.0.load(Ordering::Relaxed);
         tail.saturating_sub(head)
@@ -215,6 +246,7 @@ struct Shard<T> {
 
 impl<T> Shard<T> {
     fn backlog_estimate(&self) -> usize {
+        // ord: advisory estimate — staleness only biases the steal scan
         self.ring.len_estimate() + self.overflow_len.load(Ordering::Relaxed)
     }
 }
@@ -237,6 +269,7 @@ pub struct ShardedQueue<T> {
 }
 
 impl<T> ShardedQueue<T> {
+    // lint: allow(hot-path-alloc) — one-time construction, not dispatch
     pub fn new(nshards: usize) -> Self {
         let n = nshards.max(1);
         Self {
@@ -260,11 +293,13 @@ impl<T> ShardedQueue<T> {
 
     /// Monotonic CAS-max on the peak-length gauge.
     fn bump_peak(&self, candidate: usize) {
+        // ord: monotone max over a gauge; no payload rides on this cell
         let mut cur = self.peak.load(Ordering::Relaxed);
         while candidate > cur {
             match self.peak.compare_exchange_weak(
                 cur,
                 candidate,
+                // ord: monotone max over a gauge; publishes no payload
                 Ordering::Relaxed,
                 Ordering::Relaxed,
             ) {
@@ -276,7 +311,9 @@ impl<T> ShardedQueue<T> {
 
     /// High-water mark of the queue length, exact as of each push.
     pub fn peak(&self) -> usize {
-        self.peak.load(Ordering::SeqCst)
+        // ord: gauge read; was SeqCst, which bought nothing — the writer
+        // side is Relaxed, so this never synchronized anything
+        self.peak.load(Ordering::Relaxed)
     }
 
     /// Number of shards (fixed at construction).
@@ -297,6 +334,8 @@ impl<T> ShardedQueue<T> {
     /// Insert into one shard: lock-free ring unless the overflow is
     /// engaged (see the `Shard::overflow` FIFO invariant).
     fn insert(&self, shard: &Shard<T>, item: T) {
+        // ord: pairs with the Release stores in spill/drain — a zero read
+        // here means the overflow's emptiness is an established fact
         if shard.overflow_len.load(Ordering::Acquire) == 0 {
             match shard.ring.push(item) {
                 Ok(()) => return,
@@ -311,11 +350,13 @@ impl<T> ShardedQueue<T> {
         counters::incr(Counter::QueueOverflowed);
         let mut q = shard.overflow.lock().unwrap();
         q.push_back(item);
+        // ord: pairs with the Acquire load in insert/drain_shard
         shard.overflow_len.store(q.len(), Ordering::Release);
     }
 
     /// Push one item (lock-free fast path, one targeted wakeup).
     pub fn push(&self, item: T) {
+        // ord: round-robin cursor; any distribution is correct
         let s = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
         self.insert(&self.shards[s], item);
         let new_len = self.len.fetch_add(1, Ordering::SeqCst) + 1;
@@ -333,6 +374,7 @@ impl<T> ShardedQueue<T> {
             return;
         }
         let n = self.shards.len();
+        // ord: round-robin cursor; any distribution is correct
         let start = self.rr.fetch_add(k, Ordering::Relaxed);
         let chunk = k.div_ceil(n);
         let mut items = items.into_iter();
@@ -369,6 +411,8 @@ impl<T> ShardedQueue<T> {
                 None => break,
             }
         }
+        // ord: pairs with the Release stores in spill/drain — skipping
+        // the lock on zero is safe because only drains shrink the count
         if took < target && shard.overflow_len.load(Ordering::Acquire) > 0 {
             let mut q = shard.overflow.lock().unwrap();
             while took < target {
@@ -380,6 +424,7 @@ impl<T> ShardedQueue<T> {
                     None => break,
                 }
             }
+            // ord: pairs with the Acquire load in insert/drain_shard
             shard.overflow_len.store(q.len(), Ordering::Release);
         }
         took
@@ -537,6 +582,7 @@ struct MutexShard<T> {
 }
 
 impl<T> MutexShardedQueue<T> {
+    // lint: allow(hot-path-alloc) — one-time construction, not dispatch
     pub fn new(nshards: usize) -> Self {
         let n = nshards.max(1);
         Self {
@@ -556,11 +602,13 @@ impl<T> MutexShardedQueue<T> {
     }
 
     fn bump_peak(&self, candidate: usize) {
+        // ord: monotone max over a gauge; no payload rides on this cell
         let mut cur = self.peak.load(Ordering::Relaxed);
         while candidate > cur {
             match self.peak.compare_exchange_weak(
                 cur,
                 candidate,
+                // ord: monotone max over a gauge; publishes no payload
                 Ordering::Relaxed,
                 Ordering::Relaxed,
             ) {
@@ -571,7 +619,9 @@ impl<T> MutexShardedQueue<T> {
     }
 
     pub fn peak(&self) -> usize {
-        self.peak.load(Ordering::SeqCst)
+        // ord: gauge read; the writer side is Relaxed, so SeqCst here
+        // never synchronized anything
+        self.peak.load(Ordering::Relaxed)
     }
 
     pub fn num_shards(&self) -> usize {
@@ -587,6 +637,7 @@ impl<T> MutexShardedQueue<T> {
     }
 
     pub fn push(&self, item: T) {
+        // ord: round-robin cursor; any distribution is correct
         let s = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
         let new_len;
         {
@@ -604,6 +655,7 @@ impl<T> MutexShardedQueue<T> {
             return;
         }
         let n = self.shards.len();
+        // ord: round-robin cursor; any distribution is correct
         let start = self.rr.fetch_add(k, Ordering::Relaxed);
         let chunk = k.div_ceil(n);
         let mut items = items.into_iter();

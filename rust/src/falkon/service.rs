@@ -286,11 +286,13 @@ impl FalkonService {
     fn note_queue_peak(&self) {
         let peak = self.inner.queue.peak();
         let gauge = &self.inner.stats.peak_queue;
+        // ord: monotone max over a gauge; no payload rides on this cell
         let mut cur = gauge.load(Ordering::Relaxed);
         while peak > cur {
             match gauge.compare_exchange_weak(
                 cur,
                 peak,
+                // ord: monotone max over a gauge; publishes no payload
                 Ordering::Relaxed,
                 Ordering::Relaxed,
             ) {
@@ -303,6 +305,7 @@ impl FalkonService {
     /// Submit one task.
     pub fn submit(&self, task: AppTask, done: TaskDone) {
         let inner = &self.inner;
+        // ord: commutative tally; readers take a racy snapshot
         inner.stats.submitted.fetch_add(1, Ordering::Relaxed);
         counters::incr(Counter::TasksSubmitted);
         let span = queued_span(&task);
@@ -325,6 +328,7 @@ impl FalkonService {
         inner
             .stats
             .submitted
+            // ord: commutative tally; readers take a racy snapshot
             .fetch_add(batch.len() as u64, Ordering::Relaxed);
         counters::add(Counter::TasksSubmitted, batch.len() as u64);
         let now = Instant::now();
@@ -353,6 +357,7 @@ impl FalkonService {
             return;
         }
         let inner = &self.inner;
+        // ord: commutative tally; readers take a racy snapshot
         inner.stats.submitted.fetch_add(n as u64, Ordering::Relaxed);
         counters::add(Counter::TasksSubmitted, n as u64);
         let agg = Arc::new(BundleAgg {
@@ -513,10 +518,13 @@ fn drp_loop(inner: Arc<Inner>) {
 fn spawn_executor(inner: &Arc<Inner>) {
     let id = inner.next_exec_id.fetch_add(1, Ordering::SeqCst);
     let live = inner.live.fetch_add(1, Ordering::SeqCst) + 1;
-    let peak = inner.stats.peak_executors.load(Ordering::Relaxed);
-    if live > peak {
-        inner.stats.peak_executors.store(live, Ordering::Relaxed);
-    }
+    // A load/compare/store here loses updates when two spawns interleave
+    // (both read the old peak, the smaller store lands last and the gauge
+    // goes *down*) — found by the model checker; pinned as
+    // `peak_gauge_monotonic_under_concurrent_bumps` in
+    // rust/tests/model_check.rs. fetch_max is the atomic monotone bump.
+    // ord: monotone max over a gauge; no payload rides on this cell
+    inner.stats.peak_executors.fetch_max(live, Ordering::Relaxed);
     let home = (id as usize) % inner.queue.num_shards();
     let inner = Arc::clone(inner);
     std::thread::Builder::new()
@@ -564,6 +572,7 @@ fn executor_loop(id: u64, home: usize, inner: Arc<Inner>) {
         // Fair-share pop size: batching amortizes the shard lock under
         // backlog, but never takes more than this executor's share of
         // the queue, so idle siblings are not starved of work.
+        // ord: fairness heuristic; a stale pool size only skews batching
         let live = inner.live.load(Ordering::Relaxed).max(1);
         let fair = (inner.queue.len() / live).clamp(1, DISPATCH_BATCH);
         // Pull the next dispatch batch (home shard first, then steal).
@@ -621,6 +630,7 @@ fn executor_loop(id: u64, home: usize, inner: Arc<Inner>) {
                 spans::record(h.event(Stage::ExecEnd, spans::real_now_us()));
             }
             counters::observe(Hist::ExecUs, exec_us);
+            // ord: commutative tally; readers take a racy snapshot
             inner.stats.busy_us.fetch_add(exec_us, Ordering::Relaxed);
             let ok = outcome.is_ok();
             if ok {

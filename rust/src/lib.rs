@@ -23,9 +23,13 @@
 //! - [`provenance`] — Kickstart records + virtual data catalog.
 //! - [`telemetry`] — lifecycle spans, counters/histograms, live
 //!   scrape snapshots, shared by runtime and sim.
+//! - [`check`] — correctness tooling: schedule-exploring concurrency
+//!   checker (shadow sync primitives + vector-clock race detector) and
+//!   the `pallas-lint` invariant gate.
 //! - [`metrics`], [`util`] — timelines, stats, plots, rng, json.
 
 pub mod apps;
+pub mod check;
 pub mod diffusion;
 pub mod falkon;
 pub mod karajan;

@@ -246,6 +246,7 @@ impl TimelineSink {
         if rs.is_empty() {
             return;
         }
+        // ord: round-robin cursor; any distribution is correct
         let s = self.cursor.fetch_add(1, Ordering::Relaxed) % self.shards.len();
         self.shards[s].lock().unwrap().append(rs);
         self.len.fetch_add(rs.len(), Ordering::SeqCst);

@@ -18,10 +18,17 @@
 //! [`LocalCounters`] is the deterministic single-threaded twin the sim
 //! driver owns: plain `u64` cells bumped in event order, producing the
 //! same [`CounterSnapshot`] shape.
+//!
+//! hot-path: `add`/`incr`/`observe` sit on the dispatch floor —
+//! pallas-lint bans steady-state allocation here. Atomics come from
+//! `crate::check::sync` so the model checker (`--features model_check`)
+//! can interpose; the default build re-exports std types unchanged.
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::OnceLock;
+
+use crate::check::sync::{AtomicBool, AtomicU64, AtomicUsize};
 
 /// Every counter the runtime and sim expose. The enum index is the
 /// storage slot; `name()` is the stable wire/report identifier (the
@@ -231,6 +238,7 @@ fn thread_slot() -> usize {
         if v != usize::MAX {
             return v;
         }
+        // ord: unique-id counter; only uniqueness matters, not order
         let v = NEXT.fetch_add(1, Ordering::Relaxed);
         s.set(v);
         v
@@ -245,6 +253,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    // lint: allow(hot-path-alloc) — one-time construction, not recording
     pub fn with_shards(nshards: usize) -> Registry {
         Registry {
             enabled: AtomicBool::new(true),
@@ -254,10 +263,12 @@ impl Registry {
 
     #[inline]
     pub fn enabled(&self) -> bool {
+        // ord: on/off gate; a stale read only drops or keeps telemetry
         self.enabled.load(Ordering::Relaxed)
     }
 
     pub fn set_enabled(&self, on: bool) {
+        // ord: on/off gate; takes effect eventually, nothing is guarded
         self.enabled.store(on, Ordering::Relaxed);
     }
 
@@ -271,6 +282,7 @@ impl Registry {
         if !self.enabled() {
             return;
         }
+        // ord: commutative tally; the snapshot sums whatever has landed
         self.shard().counters[c as usize].fetch_add(v, Ordering::Relaxed);
     }
 
@@ -285,18 +297,22 @@ impl Registry {
             return;
         }
         let idx = h as usize * HIST_BUCKETS + bucket_of(v);
+        // ord: commutative tally; the snapshot sums whatever has landed
         self.shard().hists[idx].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Merge every shard into one snapshot. Sum order is fixed (shard
     /// 0..n per slot) and `u64` addition is commutative, so the result
     /// is a pure function of what was recorded, not of sharding.
+    // lint: allow(hot-path-alloc) — scrape path, not the recording path
     pub fn snapshot(&self) -> CounterSnapshot {
         let mut counters = Vec::with_capacity(NUM_COUNTERS);
         for c in Counter::ALL {
             let total: u64 = self
                 .shards
                 .iter()
+                // ord: a snapshot is a racy-by-design cut; each slot is
+                // monotone, so the sum is a valid lower bound at read time
                 .map(|s| s.counters[c as usize].load(Ordering::Relaxed))
                 .sum();
             counters.push((c.name().to_string(), total));
@@ -306,6 +322,7 @@ impl Registry {
             let mut buckets = vec![0u64; HIST_BUCKETS];
             for s in &self.shards {
                 for (b, out) in buckets.iter_mut().enumerate() {
+                    // ord: same racy-cut argument as the counter sum
                     *out += s.hists[h as usize * HIST_BUCKETS + b].load(Ordering::Relaxed);
                 }
             }
@@ -318,9 +335,11 @@ impl Registry {
     pub fn reset(&self) {
         for s in &self.shards {
             for c in &s.counters {
+                // ord: test/bench-only zeroing; no concurrent protocol
                 c.store(0, Ordering::Relaxed);
             }
             for b in &s.hists {
+                // ord: test/bench-only zeroing; no concurrent protocol
                 b.store(0, Ordering::Relaxed);
             }
         }
@@ -399,6 +418,7 @@ impl LocalCounters {
         self.counters[c as usize]
     }
 
+    // lint: allow(hot-path-alloc) — scrape path, not the recording path
     pub fn snapshot(&self) -> CounterSnapshot {
         CounterSnapshot {
             counters: Counter::ALL

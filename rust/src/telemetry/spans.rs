@@ -173,6 +173,7 @@ impl SpanSink {
         if evs.is_empty() {
             return;
         }
+        // ord: round-robin cursor; any distribution is correct
         let s = self.cursor.fetch_add(1, Ordering::Relaxed) % self.shards.len();
         let mut overwritten = 0u64;
         {
@@ -184,12 +185,14 @@ impl SpanSink {
             }
         }
         if overwritten > 0 {
+            // ord: commutative tally; readers take a racy snapshot
             self.dropped.fetch_add(overwritten, Ordering::Relaxed);
         }
     }
 
     /// Events overwritten so far (ring capacity exceeded).
     pub fn dropped(&self) -> u64 {
+        // ord: advisory gauge read; staleness is acceptable
         self.dropped.load(Ordering::Relaxed)
     }
 
@@ -218,11 +221,13 @@ static SPANS_ENABLED: AtomicBool = AtomicBool::new(false);
 /// Global span recording is off by default; flip it on around the run
 /// you want traced.
 pub fn set_enabled(on: bool) {
+    // ord: on/off gate; takes effect eventually, nothing is guarded
     SPANS_ENABLED.store(on, Ordering::Relaxed);
 }
 
 #[inline]
 pub fn enabled() -> bool {
+    // ord: on/off gate; a stale read only drops or keeps a span
     SPANS_ENABLED.load(Ordering::Relaxed)
 }
 

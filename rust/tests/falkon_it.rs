@@ -10,6 +10,7 @@ use gridswift::falkon::{
     RealDrpPolicy,
 };
 use gridswift::providers::{AppRunner, AppTask, Provider};
+use gridswift::telemetry::spans;
 
 fn task(id: u64) -> AppTask {
     AppTask {
@@ -271,4 +272,60 @@ fn tcp_framed_submissions_from_multiple_clients() {
     let total: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
     assert_eq!(total, 600);
     assert_eq!(svc.stats().completed.load(Ordering::SeqCst), 600);
+}
+
+#[test]
+fn live_run_exports_chrome_trace_spans() {
+    // The examples/falkon_service.rs trace-capture path, end to end: a
+    // live service run with span recording on must yield a complete,
+    // monotone six-stage lifecycle per task and render as Chrome-trace
+    // JSON. The global sink is process-shared, so assert only on this
+    // test's task-id range.
+    const BASE: u64 = 0x5BA2_0000;
+    const N: u64 = 32;
+    let svc = FalkonService::start(
+        FalkonServiceConfig {
+            drp: RealDrpPolicy::static_pool(4),
+            executor_overhead: Duration::ZERO,
+        },
+        sleepy(1),
+    );
+    spans::set_enabled(true);
+    let (tx, rx) = std::sync::mpsc::channel();
+    for i in 0..N {
+        let tx = tx.clone();
+        svc.submit(task(BASE + i), Box::new(move |r| tx.send(r.ok).unwrap()));
+    }
+    for _ in 0..N {
+        assert!(rx.recv_timeout(Duration::from_secs(10)).unwrap());
+    }
+    spans::set_enabled(false);
+
+    let events: Vec<_> = spans::global()
+        .snapshot()
+        .into_iter()
+        .filter(|e| (BASE..BASE + N).contains(&e.task_id))
+        .collect();
+    let tasks = spans::assemble(&events);
+    assert_eq!(tasks.len(), N as usize, "one lifecycle per submitted task");
+    for t in &tasks {
+        assert!(t.complete(), "task {} missing a stage: {:?}", t.task_id, t.at);
+        assert!(t.ordered(), "task {} stages out of order: {:?}", t.task_id, t.at);
+        assert_eq!(t.label.as_str(), "sleep0");
+    }
+
+    let trace = spans::chrome_trace(&tasks).render();
+    assert!(trace.contains("\"traceEvents\""));
+    for s in spans::Stage::ALL {
+        assert!(trace.contains(s.name()), "trace missing stage {}", s.name());
+    }
+    // One complete ("ph":"X") event per recorded stage per task.
+    assert_eq!(trace.matches("\"X\"").count(), (N as usize) * spans::NUM_STAGES);
+
+    // The example writes the same render to disk; exercise that too.
+    let path = std::env::temp_dir().join("TRACE_falkon_it_spans.json");
+    std::fs::write(&path, &trace).unwrap();
+    let back = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(back, trace);
+    let _ = std::fs::remove_file(&path);
 }

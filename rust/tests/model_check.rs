@@ -1,0 +1,359 @@
+//! Schedule-exploring model checks over the real dispatch hot paths
+//! (`cargo test --features model_check --test model_check`).
+//!
+//! These tests drive the *production* `ShardedQueue` and telemetry
+//! `Registry` — not re-implementations — through the controlled
+//! scheduler in `check::sched`: the `model_check` feature swaps the
+//! `check::sync` facade from std re-exports to the shadow primitives, so
+//! every atomic op, lock and condvar wait inside the queue becomes a
+//! scheduling decision the explorer can reorder. A passing exploration
+//! means no reachable interleaving (within the preemption bound and
+//! schedule budget — `PALLAS_CHECK_SCHEDULES` dials it) loses an item,
+//! misses a wakeup, or races on ring slot memory. Note `RING_CAP` is 4
+//! under this feature so full-ring, wraparound and overflow-spill paths
+//! are all reachable in a bounded exploration.
+//!
+//! The `*_is_caught` / `*_deadlocks` tests are the named regression pins
+//! from the PR-10 findings: each models the **pre-fix** version of a
+//! bug the checker found in the real code (the `peak_executors`
+//! load/compare/store lost update in `falkon::service`, the
+//! check-then-register park ordering the queue's DESIGN.md §10.3
+//! argument forbids, and a Relaxed publish of a ring slot) and asserts
+//! the checker still catches it — and that replaying the failing
+//! schedule reproduces it deterministically.
+
+#![cfg(feature = "model_check")]
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use gridswift::check::sync::{AtomicUsize, CheckCell, Condvar, Mutex};
+use gridswift::check::{explore_with, replay, thread, Config, FailKind};
+use gridswift::falkon::queue::ShardedQueue;
+use gridswift::telemetry::counters::{self, Counter, Registry};
+
+/// Pop until `want` items arrive, parking (timed) between attempts.
+/// Progress is guaranteed: `len` is only incremented after an insert is
+/// fully published, so a parked consumer that sees `len > 0` always
+/// finds work on its next pass.
+fn collect(q: &ShardedQueue<u64>, home: usize, want: usize) -> Vec<u64> {
+    let mut out = Vec::new();
+    while out.len() < want {
+        if q.try_pop_batch(home, want, &mut out) == 0 {
+            q.park(home, Some(Duration::from_secs(1)));
+        }
+    }
+    out
+}
+
+#[test]
+fn ring_push_pop_conserves_items_under_exploration() {
+    counters::set_enabled(false);
+    explore_with(&Config::quick(), || {
+        let q = Arc::new(ShardedQueue::<u64>::new(1));
+        let q2 = Arc::clone(&q);
+        let producer = thread::spawn(move || {
+            q2.push(1);
+            q2.push(2);
+        });
+        // Single shard + single consumer: per-shard FIFO must survive
+        // every interleaving with the concurrent producer.
+        let out = collect(&q, 0, 2);
+        producer.join().unwrap();
+        assert_eq!(out, vec![1, 2], "items lost, duplicated or reordered");
+        assert!(q.is_empty(), "len counter drifted from ring contents");
+    })
+    .expect_pass();
+}
+
+#[test]
+fn park_wake_is_miss_free_with_untimed_wait() {
+    counters::set_enabled(false);
+    // The strongest form of the §10.3 claim: the consumer parks with NO
+    // timeout, so a single missed wakeup is a deadlock the checker
+    // reports. Passing means in every explored schedule either the
+    // parker saw the published length or the pusher saw the registered
+    // sleeper.
+    explore_with(&Config::quick(), || {
+        let q = Arc::new(ShardedQueue::<u64>::new(1));
+        let q2 = Arc::clone(&q);
+        let producer = thread::spawn(move || q2.push(7));
+        let mut out = Vec::new();
+        while q.try_pop_batch(0, 1, &mut out) == 0 {
+            q.park(0, None);
+        }
+        producer.join().unwrap();
+        assert_eq!(out, vec![7]);
+    })
+    .expect_pass();
+}
+
+#[test]
+fn shutdown_wakes_untimed_parker() {
+    counters::set_enabled(false);
+    explore_with(&Config::quick(), || {
+        let q = Arc::new(ShardedQueue::<u64>::new(1));
+        let q2 = Arc::clone(&q);
+        let worker = thread::spawn(move || {
+            while !q2.is_shutdown() {
+                q2.park(0, None);
+            }
+        });
+        q.shutdown();
+        worker.join().unwrap();
+    })
+    .expect_pass();
+}
+
+#[test]
+fn overflow_spill_handshake_preserves_fifo() {
+    counters::set_enabled(false);
+    // RING_CAP is 4 here: six pushes overrun the ring in schedules where
+    // the consumer lags, engaging the Mutex overflow spillover and its
+    // Release/Acquire `overflow_len` handshake. FIFO order must hold
+    // whether or not (and whenever) the spill engages.
+    explore_with(&Config::quick(), || {
+        let q = Arc::new(ShardedQueue::<u64>::new(1));
+        let q2 = Arc::clone(&q);
+        let producer = thread::spawn(move || {
+            for i in 0..6 {
+                q2.push(i);
+            }
+        });
+        let out = collect(&q, 0, 6);
+        producer.join().unwrap();
+        assert_eq!(out, (0..6).collect::<Vec<_>>(), "spill broke FIFO");
+        assert!(q.is_empty());
+    })
+    .expect_pass();
+}
+
+#[test]
+fn random_walk_also_covers_the_queue() {
+    counters::set_enabled(false);
+    // Same conservation model under the seeded random-walk strategy:
+    // different schedule distribution, same invariant.
+    explore_with(&Config::random(0xC0FFEE, 200), || {
+        let q = Arc::new(ShardedQueue::<u64>::new(1));
+        let q2 = Arc::clone(&q);
+        let producer = thread::spawn(move || {
+            q2.push(1);
+            q2.push(2);
+        });
+        let out = collect(&q, 0, 2);
+        producer.join().unwrap();
+        assert_eq!(out, vec![1, 2]);
+    })
+    .expect_pass();
+}
+
+#[test]
+fn registry_snapshot_vs_concurrent_adds() {
+    explore_with(&Config::quick(), || {
+        let r = Arc::new(Registry::with_shards(2));
+        let (r1, r2) = (Arc::clone(&r), Arc::clone(&r));
+        let a = thread::spawn(move || {
+            r1.add(Counter::QueuePushed, 1);
+            r1.add(Counter::QueuePushed, 1);
+        });
+        let b = thread::spawn(move || r2.add(Counter::QueuePushed, 1));
+        // A racy-by-design cut: each slot is monotone, so any mid-flight
+        // snapshot is a valid lower bound of what has landed.
+        let mid = r.snapshot().get("queue_pushed");
+        assert!(mid <= 3, "snapshot overcounted: {mid}");
+        a.join().unwrap();
+        b.join().unwrap();
+        // After both adders are joined the cut is exact.
+        assert_eq!(r.snapshot().get("queue_pushed"), 3);
+    })
+    .expect_pass();
+}
+
+// ---------------------------------------------------------------------------
+// Named regression pins (PR-10 findings): model the pre-fix code and
+// assert the checker catches it, deterministically.
+// ---------------------------------------------------------------------------
+
+/// The `falkon::service` executor-peak gauge as FIXED: `fetch_max` after
+/// the `live` increment. No interleaving can leave the gauge below the
+/// true high-water mark.
+#[test]
+fn peak_gauge_monotonic_under_concurrent_bumps() {
+    explore_with(&Config::quick(), || {
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let spawn_bump = |live: &Arc<AtomicUsize>, peak: &Arc<AtomicUsize>| {
+            let (live, peak) = (Arc::clone(live), Arc::clone(peak));
+            thread::spawn(move || {
+                let l = live.fetch_add(1, Ordering::SeqCst) + 1;
+                // ord: monotone max over a gauge; no payload rides on it
+                peak.fetch_max(l, Ordering::Relaxed);
+            })
+        };
+        let (a, b) = (spawn_bump(&live, &peak), spawn_bump(&live, &peak));
+        a.join().unwrap();
+        b.join().unwrap();
+        assert_eq!(
+            peak.load(Ordering::SeqCst),
+            2,
+            "peak gauge lost the high-water mark"
+        );
+    })
+    .expect_pass();
+}
+
+/// The pre-fix pattern (`if l > peak.load() {{ peak.store(l) }}`): two
+/// interleaved bumps can land the *smaller* store last, moving the gauge
+/// down. The model checker found this in `FalkonService::spawn_executor`;
+/// it must keep catching it, and the failing schedule must replay.
+fn buggy_peak_model() -> impl Fn() + Send + Sync + 'static {
+    || {
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let spawn_bump = |live: &Arc<AtomicUsize>, peak: &Arc<AtomicUsize>| {
+            let (live, peak) = (Arc::clone(live), Arc::clone(peak));
+            thread::spawn(move || {
+                let l = live.fetch_add(1, Ordering::SeqCst) + 1;
+                // Lost update: another bump can interleave between this
+                // load and the store below.
+                if l > peak.load(Ordering::SeqCst) {
+                    peak.store(l, Ordering::SeqCst);
+                }
+            })
+        };
+        let (a, b) = (spawn_bump(&live, &peak), spawn_bump(&live, &peak));
+        a.join().unwrap();
+        b.join().unwrap();
+        assert_eq!(peak.load(Ordering::SeqCst), 2, "peak gauge went backwards");
+    }
+}
+
+#[test]
+fn peak_gauge_load_then_store_lost_update_is_caught() {
+    let f = explore_with(&Config::quick(), buggy_peak_model());
+    let fail = f.expect_fail();
+    assert_eq!(fail.kind, FailKind::Panic, "expected the assert to fire: {fail}");
+    // Deterministic replay: the recorded schedule alone reproduces it.
+    let again = replay(buggy_peak_model(), &fail.schedule);
+    let fail2 = again.expect_fail();
+    assert_eq!(fail2.kind, FailKind::Panic);
+    assert_eq!(fail2.schedule, fail.schedule, "replay diverged");
+}
+
+/// The park protocol with its two steps REVERSED (check for work, then
+/// register as a sleeper): a submit can slip between the check and the
+/// registration, see zero sleepers, skip the notify — and the consumer
+/// sleeps forever. This ordering is exactly what `ShardedQueue::park`'s
+/// register-then-check (DESIGN.md §10.3) forbids; the checker must keep
+/// reporting it as a deadlock.
+fn check_then_register_park_model() -> impl Fn() + Send + Sync + 'static {
+    || {
+        let len = Arc::new(AtomicUsize::new(0));
+        let sleepers = Arc::new(AtomicUsize::new(0));
+        let park = Arc::new(Mutex::new(()));
+        let cv = Arc::new(Condvar::new());
+        let (len2, sleepers2, park2, cv2) =
+            (Arc::clone(&len), Arc::clone(&sleepers), Arc::clone(&park), Arc::clone(&cv));
+        let consumer = thread::spawn(move || {
+            let g = park2.lock().unwrap();
+            // BUG: work check happens before sleeper registration.
+            if len2.load(Ordering::SeqCst) == 0 {
+                sleepers2.store(1, Ordering::SeqCst);
+                let _g = cv2.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+        });
+        // Submit side (mirrors `push` + `wake`): publish the length,
+        // then notify only if a sleeper is visible.
+        len.store(1, Ordering::SeqCst);
+        if sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = park.lock().unwrap();
+            cv.notify_one();
+        }
+        consumer.join().unwrap();
+    }
+}
+
+#[test]
+fn check_then_register_park_misses_wakeups() {
+    let out = explore_with(&Config::quick(), check_then_register_park_model());
+    let fail = out.expect_fail();
+    assert_eq!(fail.kind, FailKind::Deadlock, "expected a missed wakeup: {fail}");
+    let again = replay(check_then_register_park_model(), &fail.schedule);
+    assert_eq!(again.expect_fail().kind, FailKind::Deadlock);
+}
+
+/// The same mini-protocol with the steps in the correct order
+/// (register, then check) passes: by the SeqCst total order either the
+/// parker sees the published length or the submitter sees the sleeper.
+#[test]
+fn register_then_check_park_is_miss_free() {
+    explore_with(&Config::quick(), || {
+        let len = Arc::new(AtomicUsize::new(0));
+        let sleepers = Arc::new(AtomicUsize::new(0));
+        let park = Arc::new(Mutex::new(()));
+        let cv = Arc::new(Condvar::new());
+        let (len2, sleepers2, park2, cv2) =
+            (Arc::clone(&len), Arc::clone(&sleepers), Arc::clone(&park), Arc::clone(&cv));
+        let consumer = thread::spawn(move || {
+            let g = park2.lock().unwrap();
+            sleepers2.store(1, Ordering::SeqCst);
+            if len2.load(Ordering::SeqCst) == 0 {
+                let _g = cv2.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+        });
+        len.store(1, Ordering::SeqCst);
+        if sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = park.lock().unwrap();
+            cv.notify_one();
+        }
+        consumer.join().unwrap();
+    })
+    .expect_pass();
+}
+
+/// Why the ring's slot-sequence store must be `Release`: publishing the
+/// sequence number with `Relaxed` breaks the handoff — the consumer's
+/// Acquire load of `seq` no longer orders the producer's plain write of
+/// the slot payload before the consumer's read, and the vector-clock
+/// detector flags the `CheckCell` access pair as a race. Pins the
+/// `// ord:` justification on `Ring::push`'s `seq.store(.., Release)`.
+fn slot_publish_model(publish: Ordering) -> impl Fn() + Send + Sync + 'static {
+    move || {
+        let cell = Arc::new(CheckCell::<u64>::uninit());
+        let seq = Arc::new(AtomicUsize::new(0));
+        let (cell2, seq2) = (Arc::clone(&cell), Arc::clone(&seq));
+        let producer = thread::spawn(move || {
+            // SAFETY: slot starts empty; the consumer only reads after
+            // observing seq == 1 (when the protocol is correct).
+            unsafe { cell2.write(42) };
+            seq2.store(1, publish);
+        });
+        // Bounded probe, not a spin loop: schedules where the consumer
+        // gives up without reading simply pass (u64 has no drop glue, so
+        // an unread slot just leaks the value harmlessly).
+        for _ in 0..4 {
+            if seq.load(Ordering::Acquire) == 1 {
+                // SAFETY: seq == 1 means the producer wrote the slot.
+                let v = unsafe { cell.read() };
+                assert_eq!(v, 42);
+                break;
+            }
+        }
+        producer.join().unwrap();
+    }
+}
+
+#[test]
+fn relaxed_slot_publish_is_a_race() {
+    let out = explore_with(&Config::quick(), slot_publish_model(Ordering::Relaxed));
+    let fail = out.expect_fail();
+    assert_eq!(fail.kind, FailKind::Race, "expected a CheckCell race: {fail}");
+    let again = replay(slot_publish_model(Ordering::Relaxed), &fail.schedule);
+    assert_eq!(again.expect_fail().kind, FailKind::Race);
+}
+
+#[test]
+fn release_slot_publish_is_race_free() {
+    explore_with(&Config::quick(), slot_publish_model(Ordering::Release)).expect_pass();
+}
